@@ -1,0 +1,107 @@
+//! Case study III driver (paper §VI, Figs 13–14): Williams sub-quadratic
+//! Boolean matrix-vector multiplication over the NoC — preprocessing,
+//! folding, topology sweep, multi-FPGA partitioning, and the XLA dense
+//! oracle cross-check. This is the communication-intensive workload that
+//! "shows the impact of the choice of topology".
+//!
+//! Run: `cargo run --release --example bmvm_scaling`
+
+use fabricflow::apps::bmvm::{
+    dense_power_matvec, software, BmvmSystem, HostLink, WilliamsLuts,
+};
+use fabricflow::gf2::Gf2Matrix;
+use fabricflow::partition::Partition;
+use fabricflow::runtime::{artifacts_dir, XlaBmvm, XlaEngine, BMVM_N};
+use fabricflow::serdes::SerdesConfig;
+use fabricflow::util::bits::BitVec;
+use fabricflow::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xB14);
+
+    println!("== preprocessing (Fig 13): LUT storage vs k ==");
+    let a256 = Gf2Matrix::random(256, 256, &mut rng);
+    for k in [2usize, 4, 8] {
+        let luts = WilliamsLuts::preprocess(&a256, k);
+        println!(
+            "  n=256 k={k}: {} block-columns, {:.2} Mb BRAM, word-reads/multiply {}",
+            luts.blocks,
+            luts.storage_bits() as f64 / (1024.0 * 1024.0),
+            luts.blocks * luts.blocks
+        );
+    }
+
+    println!("== topology sweep (scaled Table V shape: n=256, k=4, 16 PEs) ==");
+    let luts = WilliamsLuts::preprocess(&a256, 4);
+    let v = BitVec::random(256, &mut rng);
+    let expect = dense_power_matvec(&a256, &v, 20);
+    for name in ["ring", "mesh", "torus", "fat_tree"] {
+        let sys = BmvmSystem::new(luts.clone(), 16, BmvmSystem::topology_for(name, 16));
+        let run = sys.run(&v, 20, None);
+        assert_eq!(run.result, expect, "{name}");
+        println!(
+            "  {name:9}: {:>7} cycles, {:.3} ms incl. {:.3} ms host link",
+            run.cycles,
+            run.time_ms,
+            HostLink::default().roundtrip_ms(256, 256)
+        );
+    }
+
+    println!("== folding sweep (f = blocks / PEs) ==");
+    for pes in [4usize, 16, 64] {
+        let sys = BmvmSystem::new(luts.clone(), pes, BmvmSystem::topology_for("mesh", pes));
+        let run = sys.run(&v, 20, None);
+        assert_eq!(run.result, expect);
+        println!("  {pes:2} PEs (f={}): {} cycles", sys.fold(), run.cycles);
+    }
+
+    println!("== hardware vs software vs dense oracle (n=256, r=50) ==");
+    let sys = BmvmSystem::new(luts.clone(), 16, BmvmSystem::topology_for("torus", 16));
+    let hw = sys.run(&v, 50, None);
+    let sw = software::run_software(&luts, &v, 50, 16);
+    assert_eq!(hw.result, sw.result);
+    assert_eq!(hw.result, dense_power_matvec(&a256, &v, 50));
+    println!(
+        "  hw {:.3} ms | sw {:.3} ms | speedup {:.1}x",
+        hw.time_ms,
+        sw.elapsed.as_secs_f64() * 1e3,
+        sw.elapsed.as_secs_f64() * 1e3 / hw.time_ms
+    );
+
+    println!("== 4-FPGA partition of the 16-PE torus ==");
+    let topo = BmvmSystem::topology_for("torus", 16);
+    let part = Partition::balanced(&topo.build(), 4, 11);
+    let split = sys.run(&v, 50, Some((&part, SerdesConfig::default())));
+    assert_eq!(split.result, hw.result);
+    println!(
+        "  sizes {:?}, {} cut links, {} cycles (vs {} single-FPGA)",
+        part.sizes(),
+        part.cut_links(&topo.build()).len(),
+        split.cycles,
+        hw.cycles
+    );
+
+    if artifacts_dir().exists() {
+        println!("== XLA dense-oracle artifact (n={BMVM_N}) ==");
+        let engine = XlaEngine::cpu().expect("pjrt");
+        let bm = XlaBmvm::load(&engine).expect("artifact");
+        let a = Gf2Matrix::random(BMVM_N, BMVM_N, &mut rng);
+        let v64 = BitVec::random(BMVM_N, &mut rng);
+        let pack = |b: &BitVec| -> Vec<u32> {
+            let mut out = Vec::new();
+            for w in b.words() {
+                out.push((*w & 0xFFFF_FFFF) as u32);
+                out.push((*w >> 32) as u32);
+            }
+            out.truncate(b.len().div_ceil(32));
+            out
+        };
+        let a_rows: Vec<u32> = (0..BMVM_N).flat_map(|r| pack(a.row(r))).collect();
+        let got = bm.power_matvec(&a_rows, &pack(&v64), 12).expect("run");
+        assert_eq!(got, pack(&dense_power_matvec(&a, &v64, 12)));
+        println!("  A^12·v via Pallas popcount kernel == rust dense oracle");
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
+    }
+    println!("bmvm_scaling OK");
+}

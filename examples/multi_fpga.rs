@@ -1,0 +1,92 @@
+//! Phase-2 driver (paper §III, Figs 5–6): partitioning a NoC across
+//! FPGAs over quasi-SERDES links — the Fig 5 example, pin budgets,
+//! per-FPGA resource fit, serialization sweeps, and the automatic
+//! min-cut partitioner extension.
+//!
+//! Run: `cargo run --release --example multi_fpga`
+
+use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::resources::Device;
+use fabricflow::serdes::{wire_bits, SerdesConfig};
+use fabricflow::util::Rng;
+
+fn traffic(net: &mut Network, flits: u32, seed: u64) -> u64 {
+    let n = net.n_endpoints();
+    let mut rng = Rng::new(seed);
+    for i in 0..flits {
+        let s = rng.index(n);
+        let d = (s + 1 + rng.index(n - 1)) % n;
+        net.inject(s, Flit::single(s, d, i, i as u64));
+    }
+    net.run_until_idle(100_000_000)
+}
+
+fn main() {
+    println!("== Fig 5: 4-router NoC, R0 (+N0) on its own FPGA ==");
+    let topo = Topology::Custom {
+        n_routers: 4,
+        links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+        endpoint_router: vec![0, 1, 2, 3],
+    };
+    let part = Partition::island(4, &[0]);
+    let g = topo.build();
+    let serdes = SerdesConfig::default();
+    println!("  cut links: {:?}", part.cut_links(&g));
+    println!(
+        "  pins per FPGA (8-wire links, both directions): {:?}",
+        part.pins_per_fpga(&g, &serdes)
+    );
+    let res = part.noc_resources_per_fpga(&g, &NocConfig::paper(), &serdes);
+    for (f, r) in res.iter().enumerate() {
+        println!(
+            "  FPGA {f}: NoC infrastructure {r} — fits DE0-Nano: {}",
+            Device::DE0_NANO.fits(*r)
+        );
+    }
+    let mut mono = Network::new(&topo, NocConfig::paper());
+    let base = traffic(&mut mono, 3000, 1);
+    let mut split = Network::new(&topo, NocConfig::paper());
+    part.apply(&mut split, serdes);
+    let cut = traffic(&mut split, 3000, 1);
+    println!("  3000 flits: 1 FPGA {base} cycles, 2 FPGAs {cut} cycles");
+
+    println!("== serialization sweep (paper: 'depending on ... pins available') ==");
+    let bits = wire_bits(16, 4);
+    for pins in [1u32, 2, 4, 8, 16] {
+        let cfg = SerdesConfig { pins, clock_div: 1, tx_buffer: 8 };
+        let mut net = Network::new(&topo, NocConfig::paper());
+        part.apply(&mut net, cfg);
+        let cycles = traffic(&mut net, 3000, 1);
+        println!(
+            "  {pins:2} pins ({:2} cycles/flit on the link): {cycles} cycles",
+            cfg.cycles_per_flit(bits)
+        );
+    }
+
+    println!("== off-chip clock divider sweep ==");
+    for div in [1u32, 2, 4] {
+        let cfg = SerdesConfig { pins: 8, clock_div: div, tx_buffer: 8 };
+        let mut net = Network::new(&topo, NocConfig::paper());
+        part.apply(&mut net, cfg);
+        println!("  I/O clock 1/{div}: {} cycles", traffic(&mut net, 3000, 1));
+    }
+
+    println!("== automatic min-cut bisection of an 8x8 torus (extension) ==");
+    let torus = Topology::Torus { w: 8, h: 8 };
+    let tg = torus.build();
+    for n_fpgas in [2usize, 4] {
+        let auto = Partition::balanced(&tg, n_fpgas, 42);
+        let cut = auto.cut_links(&tg).len();
+        println!(
+            "  {n_fpgas} FPGAs: sizes {:?}, {cut} links cut, pins/FPGA {:?}",
+            auto.sizes(),
+            auto.pins_per_fpga(&tg, &serdes)
+        );
+        let mut net = Network::new(&torus, NocConfig::paper());
+        auto.apply(&mut net, serdes);
+        let cycles = traffic(&mut net, 10_000, 7);
+        println!("    10k flits drained in {cycles} cycles");
+    }
+    println!("multi_fpga OK");
+}

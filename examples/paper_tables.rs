@@ -1,0 +1,30 @@
+//! End-to-end driver: regenerate every table of the paper's evaluation
+//! on the full workloads and print measured-vs-paper rows.
+//!
+//! * Tables I–III — resource models (instant).
+//! * Table IV — BMVM n=64, k=8, f=2: 4 PEs on a 2×2 mesh vs the 4-thread
+//!   software baseline, r ∈ {1, 10, 100, 1000}.
+//! * Table V — BMVM n=1024, k=4, f=4: 64 PEs on ring/mesh/torus/fat-tree
+//!   vs 64 threads, r ∈ {1, 10, 100, 1000}.
+//!
+//! `--quick` drops the r=1000 rows (CI runs); `--reps N` sets the
+//! software-baseline averaging (paper used 100).
+//!
+//! Run: `cargo run --release --example paper_tables [-- --quick]`
+
+use fabricflow::tables::{all_tables, TableOpts};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let reps = argv
+        .iter()
+        .position(|a| a == "--reps")
+        .and_then(|i| argv.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let opts = TableOpts { reps, quick, seed: 0x7AB1E };
+    let t0 = std::time::Instant::now();
+    print!("{}", all_tables(&opts));
+    eprintln!("\n[paper_tables completed in {:?}]", t0.elapsed());
+}

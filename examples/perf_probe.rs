@@ -1,0 +1,25 @@
+use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::util::Rng;
+use std::time::Instant;
+fn main() {
+    let topo = Topology::Mesh { w: 8, h: 8 };
+    let t = Instant::now();
+    let mut nets: Vec<Network> = (0..50).map(|_| Network::new(&topo, NocConfig::paper())).collect();
+    println!("build x50: {:?}", t.elapsed());
+    let mut rng = Rng::new(1);
+    let t = Instant::now();
+    let mut total_cycles = 0u64;
+    for net in nets.iter_mut() {
+        for i in 0..10_000u32 {
+            let s = rng.index(64);
+            let d = (s + 1 + rng.index(63)) % 64;
+            net.inject(s, Flit::single(s, d, i, i as u64));
+        }
+        total_cycles += net.run_until_idle(10_000_000);
+    }
+    let el = t.elapsed();
+    println!("run x50 (10k flits each): {:?}, {} cycles total", el, total_cycles);
+    println!("router-cycles/s: {:.2}M", (total_cycles * 64) as f64 / el.as_secs_f64() / 1e6);
+    // per-cycle cost
+    println!("ns/cycle: {:.0}", el.as_nanos() as f64 / total_cycles as f64);
+}

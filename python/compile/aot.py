@@ -1,0 +1,97 @@
+"""AOT bridge: lower the Layer-2 models to HLO *text* artifacts.
+
+HLO text — NOT a serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One hard-won gotcha (cross-checked by rust/tests/runtime_xla.rs):
+``as_hlo_text(print_large_constants=True)`` is MANDATORY. The default
+elides big constants (e.g. gather index tables) as ``{...}``, and the
+0.5.1 text parser silently misparses the elision as an iota-like
+literal — artifacts then compute garbage only on the Rust side while
+eager JAX stays correct.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` runs). Emits one ``<name>.hlo.txt`` per model plus a
+``manifest.txt`` recording the exported shapes.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Export shapes (fixed at AOT time; mirrored in rust/src/runtime).
+LDPC_BATCH = 16
+BMVM_N = 64
+PF_PARTICLES = 64
+PF_BINS = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def exports():
+    """(name, fn, example args) for every artifact."""
+    s = jax.ShapeDtypeStruct
+    return [
+        (
+            "ldpc_fano_b%d_i%d" % (LDPC_BATCH, model.LDPC_NITER),
+            model.ldpc_decode_fano,
+            (s((LDPC_BATCH, 7), jnp.int32),),
+        ),
+        (
+            "bmvm_pow_n%d" % BMVM_N,
+            model.bmvm_power,
+            (
+                s((BMVM_N, BMVM_N // 32), jnp.uint32),
+                s((BMVM_N // 32,), jnp.uint32),
+                s((), jnp.int32),
+            ),
+        ),
+        (
+            "pfilter_weights_n%d" % PF_PARTICLES,
+            model.pfilter_weights,
+            (
+                s((PF_BINS,), jnp.int32),
+                s((PF_PARTICLES, PF_BINS), jnp.int32),
+                s((PF_PARTICLES, 2), jnp.int32),
+            ),
+        ),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, example in exports():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ", ".join(str(a.shape) + ":" + str(a.dtype) for a in example)
+        manifest.append(f"{name}: ({shapes})")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels for the three case-study compute hot-spots.
+
+Every kernel is lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode (plain HLO ops) is
+the correctness path; real-TPU efficiency is estimated in DESIGN.md from
+the BlockSpec structure instead (see the Hardware-Adaptation section).
+"""

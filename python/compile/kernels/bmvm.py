@@ -1,0 +1,51 @@
+"""Layer-1 Pallas kernel: dense GF(2) matrix-vector multiply on packed
+words — the verification path for the BMVM case study (the Williams LUT
+method is the *hardware* path; this dense kernel is the XLA-resident
+oracle the Rust runtime cross-checks results against, and the baseline
+for the k-crossover ablation).
+
+GF(2) arithmetic maps to bitwise ops on packed uint32 lanes: a row-vector
+product is AND + popcount-parity, which is VPU-friendly (no MXU needed) —
+the TPU adaptation of the paper's BRAM-lookup datapath discussed in
+DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(a_ref, v_ref, parity_ref):
+    a = a_ref[...]  # [n, w] uint32
+    v = v_ref[...]  # [w] uint32
+    pops = lax.population_count(jnp.bitwise_and(a, v[None, :]))
+    parity_ref[...] = (jnp.sum(pops.astype(jnp.uint32), axis=1) & jnp.uint32(1))
+
+
+def gf2_matvec(a_packed, v_packed):
+    """y = A v over GF(2), packed uint32 rows; matches ref.gf2_matvec_ref."""
+    n, _w = a_packed.shape
+    parity = pl.pallas_call(
+        _matvec_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=True,
+    )(a_packed, v_packed)
+    # Pack the n parity bits LSB-first into ceil(n/32) words (fused XLA).
+    w = (n + 31) // 32
+    pad = w * 32 - n
+    bits = jnp.concatenate([parity, jnp.zeros(pad, jnp.uint32)]).reshape(w, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[None, :], axis=1).astype(jnp.uint32)
+
+
+def gf2_power_matvec(a_packed, v_packed, r):
+    """Layer-2 model: v <- A^r v with a dynamic trip count.
+
+    `r` is a traced int32 scalar, lowered to an HLO while-loop so one AOT
+    artifact serves every iteration count in Tables IV-V.
+    """
+    def body(_i, x):
+        return gf2_matvec(a_packed, x)
+
+    return lax.fori_loop(0, r, body, v_packed)

@@ -1,0 +1,118 @@
+"""Layer-1 Pallas kernel: LDPC min-sum check-node update.
+
+The FPGA gets throughput from 7 parallel degree-3 comparator datapaths
+(paper Fig 7); the TPU analogue is the same arithmetic vectorized over
+(batch × checks) in a VMEM-resident tile. The kernel consumes the
+bit→check messages u [B, m, deg] and produces the check→bit messages
+v [B, m, deg]:
+
+    v_j = (prod of signs over k != j) * (min |u_k| over k != j)
+
+For the paper's PG codes deg is a small static constant (3 for the Fano
+code), so the k != j reductions unroll into straight-line VPU code — the
+exact structure of the Fig 7 comparator tree, replicated across the tile.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): lowered with
+``interpret=True`` for the CPU PJRT runtime; on a real TPU the natural
+BlockSpec tiles B into VMEM-sized chunks with deg kept minor-most.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _check_kernel(u_ref, v_ref, *, deg):
+    u = u_ref[...]
+    sign = jnp.where(u < 0, -1, 1).astype(jnp.int32)
+    mag = jnp.abs(u)
+    outs = []
+    for j in range(deg):
+        others = [k for k in range(deg) if k != j]
+        s = sign[..., others[0]]
+        m = mag[..., others[0]]
+        for k in others[1:]:
+            s = s * sign[..., k]
+            m = jnp.minimum(m, mag[..., k])
+        outs.append(ref.sat(s * m))
+    v_ref[...] = jnp.stack(outs, axis=-1)
+
+
+def check_update(u):
+    """Pallas check-node update; u int32 [B, m, deg] -> v [B, m, deg]."""
+    deg = u.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_check_kernel, deg=deg),
+        out_shape=jax.ShapeDtypeStruct(u.shape, jnp.int32),
+        interpret=True,
+    )(u)
+
+
+def ldpc_decode(llrs, check_nb, bit_nb, niter):
+    """Layer-2 model: batched flooding min-sum decode calling the Pallas
+    check kernel; the bit update (Listing 3) is plain fused jnp.
+
+    Same contract as ref.ldpc_decode_ref (returns the final sums whose
+    signs are the decisions).
+    """
+    import numpy as np
+
+    llrs = ref.sat(llrs.astype(jnp.int32))
+    cnb = np.asarray(check_nb)
+    bnb = np.asarray(bit_nb)
+    m, deg = cnb.shape
+    n = bnb.shape[0]
+    c2b_pos = np.zeros_like(cnb)
+    for c in range(m):
+        for j in range(deg):
+            c2b_pos[c, j] = list(bnb[cnb[c, j]]).index(c)
+    b2c_pos = np.zeros_like(bnb)
+    for b in range(n):
+        for j in range(deg):
+            b2c_pos[b, j] = list(cnb[bnb[b, j]]).index(b)
+
+    u = llrs[:, cnb.reshape(-1)].reshape(llrs.shape[0], m, deg)
+    sums = jnp.zeros_like(llrs)
+    for _ in range(int(niter)):
+        vc = check_update(u)  # Pallas kernel
+        # Gather (not scatter — the xla_extension 0.5.1 runtime the Rust
+        # side uses mis-executes jax's scatter lowering; gathers round-trip
+        # cleanly): v[b, bit, pos] = vc[b, bit_nb[bit,pos], b2c_pos[bit,pos]].
+        v = vc[:, bnb.reshape(-1), b2c_pos.reshape(-1)].reshape(
+            vc.shape[0], n, deg
+        )
+        sums, outs = ref.bit_update_ref(llrs, v)
+        # u[b, c, j] = outs[b, cnb[c,j], c2b_pos[c,j]].
+        u = outs[:, cnb.reshape(-1), c2b_pos.reshape(-1)].reshape(
+            outs.shape[0], m, deg
+        )
+    return sums
+
+
+def fano_neighbors():
+    """The PG(2,2) (Fano plane) code's edge structure, identical to
+    rust's PgLdpcCode::fano() construction (points/lines over GF(2)
+    homogeneous coordinates, first-nonzero-normalized, in enumeration
+    order)."""
+    import numpy as np
+
+    # Points: (1,a,b) for a,b in GF(2); (0,1,b); (0,0,1) — same order as
+    # gf2::pg::points.
+    pts = [(1, a, b) for a in range(2) for b in range(2)]
+    pts += [(0, 1, b) for b in range(2)]
+    pts += [(0, 0, 1)]
+    lines = pts
+    incident = lambda p, l: (p[0] & l[0]) ^ (p[1] & l[1]) ^ (p[2] & l[2]) == 0
+    check_nb = np.array(
+        [[i for i, p in enumerate(pts) if incident(p, l)] for l in lines],
+        dtype=np.int32,
+    )
+    bit_nb = np.array(
+        [[c for c, l in enumerate(lines) if incident(pts[b], l)] for b in range(7)],
+        dtype=np.int32,
+    )
+    return check_nb, bit_nb

@@ -1,0 +1,49 @@
+"""Layer-1 Pallas kernel: Bhattacharyya particle matching.
+
+The Fig 11 FPGA datapath computes, per particle, sum_b sqrt(p_b * q_b)
+with one 18x18 multiplier and an iterative isqrt; the TPU analogue
+evaluates all N particles x 16 bins as one VMEM tile (the f64 sqrt is
+exact for counts < 2^18, so the integer floor matches the FPGA's isqrt
+bit-for-bit — the same argument as rust's histo::isqrt contract).
+
+The Layer-2 model adds the root node's weighted-mean center update
+(w = rho^4) so the whole per-frame particle step is one artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rho_kernel(ref_ref, cand_ref, rho_ref):
+    p = ref_ref[...].astype(jnp.int64)  # [BINS]
+    q = cand_ref[...].astype(jnp.int64)  # [N, BINS]
+    prod = p[None, :] * q
+    root = jnp.floor(jnp.sqrt(prod.astype(jnp.float64))).astype(jnp.int64)
+    rho_ref[...] = jnp.sum(root, axis=1)
+
+
+def bhattacharyya_rho(ref_hist, cand_hists):
+    """rho [N] int64 from ref [BINS] and candidates [N, BINS] (int32)."""
+    n = cand_hists.shape[0]
+    return pl.pallas_call(
+        _rho_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int64),
+        interpret=True,
+    )(ref_hist, cand_hists)
+
+
+def pf_weights(ref_hist, cand_hists, particles):
+    """Layer-2 model: (center [2] int64, rho [N] int64).
+
+    Same contract as ref.pf_weights_ref: w = rho^4, integer weighted mean
+    of particle coordinates.
+    """
+    rho = bhattacharyya_rho(ref_hist, cand_hists)
+    w = rho * rho
+    w = w * w
+    tot = jnp.sum(w)
+    px = jnp.sum(w * particles[:, 0].astype(jnp.int64))
+    py = jnp.sum(w * particles[:, 1].astype(jnp.int64))
+    center = jnp.stack([px // jnp.maximum(tot, 1), py // jnp.maximum(tot, 1)])
+    return center, rho

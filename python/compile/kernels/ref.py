@@ -1,0 +1,182 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness contracts: ``pytest python/tests`` asserts the
+Pallas kernels reproduce these exactly (integer arithmetic throughout, so
+equality is bitwise). The Rust side holds the mirror-image contracts: its
+native datapaths are asserted equal to the AOT artifacts produced from
+the L2 models that call these kernels.
+
+All fixed-point conventions mirror ``rust/src/apps``:
+
+* LDPC LLRs saturate to the symmetric i16 range [-32767, 32767]
+  (``apps::ldpc::sat``).
+* BMVM packs GF(2) vectors LSB-first into uint32 words
+  (``util::bits::BitVec``).
+* Particle weights use rho = sum_b floor(sqrt(p_b * q_b)) and w = rho^4
+  (``apps::pfilter::histo``).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+LLR_MAX = 32767
+LLR_MIN = -32767
+
+
+def sat(x):
+    """Saturating clamp to the LLR range (mirrors apps::ldpc::sat).
+
+    Bounds are explicit int32 scalars: with x64 enabled python ints become
+    s64 constants, and the mixed s64/s32 clip call miscompiles on the
+    xla_extension 0.5.1 runtime the Rust side executes artifacts with.
+    """
+    return jnp.clip(x, jnp.int32(LLR_MIN), jnp.int32(LLR_MAX))
+
+
+# --------------------------------------------------------------------------
+# LDPC min-sum (sign-magnitude variant), flooding schedule.
+# --------------------------------------------------------------------------
+
+def check_update_ref(u):
+    """Check-node update on messages u [..., deg] -> v [..., deg].
+
+    v_j = (prod of signs over k != j) * (min of |u_k| over k != j),
+    saturated. Matches minsum::check_update(SignMagnitude).
+    """
+    deg = u.shape[-1]
+    sign = jnp.where(u < 0, -1, 1).astype(jnp.int32)
+    mag = jnp.abs(u)
+    outs = []
+    for j in range(deg):
+        others = [k for k in range(deg) if k != j]
+        s = sign[..., others[0]]
+        m = mag[..., others[0]]
+        for k in others[1:]:
+            s = s * sign[..., k]
+            m = jnp.minimum(m, mag[..., k])
+        outs.append(sat(s * m))
+    return jnp.stack(outs, axis=-1)
+
+
+def bit_update_ref(u0, v):
+    """Bit-node update (Listing 3) with per-add saturation.
+
+    u0 [...,], v [..., deg] -> (sums [...], outs [..., deg]).
+    Matches minsum::bit_update: sum = sat(...sat(u0 + v0) + v1...),
+    out_j = sat(sum - v_j).
+    """
+    s = u0
+    for k in range(v.shape[-1]):
+        s = sat(s + v[..., k])
+    outs = sat(s[..., None] - v)
+    return s, outs
+
+
+def ldpc_decode_ref(llrs, check_nb, bit_nb, niter):
+    """Batched flooding min-sum decode.
+
+    llrs: int32 [B, N]; check_nb [m, deg] bit index per check edge;
+    bit_nb [N, deg] check index per bit edge. Returns final sums [B, N]
+    (sign = decision). Bit-exact mirror of ReferenceDecoder::decode with
+    MinsumVariant::SignMagnitude.
+    """
+    llrs = sat(llrs.astype(jnp.int32))
+    m, deg = check_nb.shape
+    n = bit_nb.shape[0]
+    # u[b, c, j]: message bit->check along check c's edge j.
+    u = llrs[:, check_nb.reshape(-1)].reshape(llrs.shape[0], m, deg)
+    # Index maps between edge coordinate systems:
+    # for check c edge j (bit b), the position of c in bit b's list.
+    import numpy as np
+
+    cnb = np.asarray(check_nb)
+    bnb = np.asarray(bit_nb)
+    c2b_pos = np.zeros_like(cnb)
+    for c in range(m):
+        for j in range(deg):
+            b = cnb[c, j]
+            c2b_pos[c, j] = list(bnb[b]).index(c)
+    b2c_pos = np.zeros_like(bnb)
+    for b in range(n):
+        for j in range(deg):
+            c = bnb[b, j]
+            b2c_pos[b, j] = list(cnb[c]).index(b)
+
+    sums = jnp.zeros_like(llrs)
+    for _ in range(niter):
+        vc = check_update_ref(u)  # [B, m, deg] messages check->bit
+        # Re-index to bit coordinates by gathering:
+        # v[b, bit, pos] = vc[b, bit_nb[bit,pos], b2c_pos[bit,pos]].
+        v = vc[:, bnb.reshape(-1), b2c_pos.reshape(-1)].reshape(
+            vc.shape[0], n, deg
+        )
+        sums, outs = bit_update_ref(llrs, v)
+        # u[b, c, j] = outs[b, cnb[c,j], c2b_pos[c,j]].
+        u = outs[:, cnb.reshape(-1), c2b_pos.reshape(-1)].reshape(
+            outs.shape[0], m, deg
+        )
+    return sums
+
+
+# --------------------------------------------------------------------------
+# GF(2) dense matvec on packed words.
+# --------------------------------------------------------------------------
+
+def gf2_matvec_ref(a_packed, v_packed):
+    """y = A @ v over GF(2).
+
+    a_packed: uint32 [n, w] (row-major, bit i of word j = column 32j+i),
+    v_packed: uint32 [w]. Returns uint32 [w] packed result (LSB-first),
+    mirroring Gf2Matrix::matvec / BitVec packing.
+    """
+    n = a_packed.shape[0]
+    anded = jnp.bitwise_and(a_packed, v_packed[None, :])
+    pops = lax.population_count(anded).astype(jnp.uint32)
+    parity = jnp.sum(pops, axis=1) & jnp.uint32(1)  # [n] 0/1
+    # Pack LSB-first into n/32 words.
+    w = (n + 31) // 32
+    pad = w * 32 - n
+    bits = jnp.concatenate([parity, jnp.zeros(pad, jnp.uint32)])
+    bits = bits.reshape(w, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts[None, :], axis=1).astype(jnp.uint32)
+
+
+def gf2_power_matvec_ref(a_packed, v_packed, r):
+    """v <- A^r v by repeated multiplication (r static)."""
+    x = v_packed
+    for _ in range(int(r)):
+        x = gf2_matvec_ref(a_packed, x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Particle-filter weights.
+# --------------------------------------------------------------------------
+
+def bhattacharyya_rho_ref(ref_hist, cand_hists):
+    """rho[i] = sum_b floor(sqrt(ref[b] * cand[i, b])), int64.
+
+    Mirrors histo::bhattacharyya_rho (counts < 2^18, so the f64 sqrt is
+    exact enough for an exact floor).
+    """
+    prod = ref_hist.astype(jnp.int64)[None, :] * cand_hists.astype(jnp.int64)
+    root = jnp.floor(jnp.sqrt(prod.astype(jnp.float64))).astype(jnp.int64)
+    return jnp.sum(root, axis=1)
+
+
+def pf_weights_ref(ref_hist, cand_hists, particles):
+    """(center [2] int64, rho [N] int64): weighted-mean center update.
+
+    w = rho^4 (histo::particle_weight), center = sum(w*p)/sum(w) with the
+    previous center NOT modeled here (callers guard the all-zero case).
+    Mirrors histo::weighted_mean for nonzero total weight.
+    """
+    rho = bhattacharyya_rho_ref(ref_hist, cand_hists)
+    w = rho * rho
+    w = w * w  # rho^4
+    tot = jnp.sum(w)
+    px = jnp.sum(w * particles[:, 0].astype(jnp.int64))
+    py = jnp.sum(w * particles[:, 1].astype(jnp.int64))
+    center = jnp.stack([px // jnp.maximum(tot, 1), py // jnp.maximum(tot, 1)])
+    return center, rho

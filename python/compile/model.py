@@ -1,0 +1,36 @@
+"""Layer-2 JAX models — the exported entry points the Rust runtime loads.
+
+Each function here is jitted, lowered once by ``aot.py`` to HLO text and
+executed from ``rust/src/runtime`` via PJRT; Python never runs on the
+request path. Shapes are fixed at export time (see aot.py's manifest):
+
+* ``ldpc_decode_fano``   — batched min-sum decode of the Fano code.
+* ``bmvm_power``         — dense GF(2) A^r v with runtime-dynamic r.
+* ``pfilter_weights``    — per-frame particle weighting + center update.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bmvm, ldpc, pfilter
+
+# Fixed LDPC iteration count baked into the artifact (mirrored by the
+# Rust cross-check tests; change both together).
+LDPC_NITER = 5
+
+
+def ldpc_decode_fano(llrs):
+    """llrs int32 [B, 7] -> final sums int32 [B, 7] (sign = decision)."""
+    check_nb, bit_nb = ldpc.fano_neighbors()
+    return (ldpc.ldpc_decode(llrs, check_nb, bit_nb, LDPC_NITER),)
+
+
+def bmvm_power(a_packed, v_packed, r):
+    """a uint32 [n, w], v uint32 [w], r int32 scalar -> uint32 [w]."""
+    return (bmvm.gf2_power_matvec(a_packed, v_packed, r),)
+
+
+def pfilter_weights(ref_hist, cand_hists, particles):
+    """(ref int32 [16], cands int32 [N, 16], particles int32 [N, 2]) ->
+    (center int64 [2], rho int64 [N])."""
+    center, rho = pfilter.pf_weights(ref_hist, cand_hists, particles)
+    return (center, rho)

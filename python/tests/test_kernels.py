@@ -1,0 +1,179 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel must equal its pure-jnp oracle bitwise (all integer
+arithmetic); hypothesis sweeps data values, batch sizes and degrees.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bmvm, ldpc, pfilter, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# --------------------------------------------------------------------------
+# LDPC
+# --------------------------------------------------------------------------
+
+@given(
+    st.integers(1, 4),  # batch
+    st.integers(2, 5),  # checks
+    st.sampled_from([2, 3, 4]),  # degree
+    st.integers(0, 2**32 - 1),
+)
+def test_check_update_matches_ref(b, m, deg, seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.integers(-32767, 32768, size=(b, m, deg)), jnp.int32)
+    got = ldpc.check_update(u)
+    want = ref.check_update_ref(u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_check_update_listing2_example():
+    # minsum.rs sign-magnitude unit vector: [5, -3, 7] -> [-3, 5, -3].
+    u = jnp.asarray([[[5, -3, 7]]], jnp.int32)
+    v = np.asarray(ldpc.check_update(u))[0, 0]
+    np.testing.assert_array_equal(v, [-3, 5, -3])
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 6))
+def test_ldpc_decode_kernel_matches_ref(seed, niter):
+    rng = np.random.default_rng(seed)
+    check_nb, bit_nb = ldpc.fano_neighbors()
+    llrs = jnp.asarray(rng.integers(-200, 201, size=(4, 7)), jnp.int32)
+    got = ldpc.ldpc_decode(llrs, check_nb, bit_nb, niter)
+    want = ref.ldpc_decode_ref(llrs, check_nb, bit_nb, niter)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fano_structure_matches_rust_construction():
+    check_nb, bit_nb = ldpc.fano_neighbors()
+    assert check_nb.shape == (7, 3)
+    assert bit_nb.shape == (7, 3)
+    # Any two lines meet in exactly one point.
+    for i in range(7):
+        for j in range(i + 1, 7):
+            assert len(set(check_nb[i]) & set(check_nb[j])) == 1
+
+
+def test_clean_codeword_decodes_positive():
+    check_nb, bit_nb = ldpc.fano_neighbors()
+    llrs = jnp.full((2, 7), 100, jnp.int32)
+    sums = ldpc.ldpc_decode(llrs, check_nb, bit_nb, 5)
+    assert bool(jnp.all(sums > 0))
+
+
+def test_single_flip_corrected():
+    check_nb, bit_nb = ldpc.fano_neighbors()
+    llrs = np.full((7, 7), 100, np.int32)
+    for flip in range(7):
+        llrs[flip, flip] = -100
+    sums = ldpc.ldpc_decode(jnp.asarray(llrs), check_nb, bit_nb, 5)
+    assert bool(jnp.all(sums > 0)), "all single flips decode to all-zeros"
+
+
+# --------------------------------------------------------------------------
+# BMVM
+# --------------------------------------------------------------------------
+
+def _pack_rows(bits):
+    """bits [n, n] 0/1 -> packed uint32 [n, n/32] LSB-first."""
+    n = bits.shape[1]
+    w = (n + 31) // 32
+    out = np.zeros((bits.shape[0], w), np.uint32)
+    for j in range(n):
+        out[:, j // 32] |= (bits[:, j].astype(np.uint32)) << (j % 32)
+    return out
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([32, 64, 96]))
+def test_gf2_matvec_matches_ref_and_numpy(seed, n):
+    rng = np.random.default_rng(seed)
+    a_bits = rng.integers(0, 2, size=(n, n)).astype(np.uint32)
+    v_bits = rng.integers(0, 2, size=n).astype(np.uint32)
+    a = jnp.asarray(_pack_rows(a_bits))
+    v = jnp.asarray(_pack_rows(v_bits[None, :])[0])
+    got = bmvm.gf2_matvec(a, v)
+    want = ref.gf2_matvec_ref(a, v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Independent numpy oracle.
+    y_bits = (a_bits @ v_bits) % 2
+    np.testing.assert_array_equal(
+        np.asarray(got), _pack_rows(y_bits[None, :].astype(np.uint32))[0]
+    )
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 6))
+def test_gf2_power_dynamic_r(seed, r):
+    rng = np.random.default_rng(seed)
+    n = 64
+    a_bits = rng.integers(0, 2, size=(n, n)).astype(np.uint32)
+    v_bits = rng.integers(0, 2, size=n).astype(np.uint32)
+    a = jnp.asarray(_pack_rows(a_bits))
+    v = jnp.asarray(_pack_rows(v_bits[None, :])[0])
+    got = bmvm.gf2_power_matvec(a, v, jnp.int32(r))
+    want = ref.gf2_power_matvec_ref(a, v, r)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gf2_identity_is_noop():
+    n = 64
+    a = jnp.asarray(_pack_rows(np.eye(n, dtype=np.uint32)))
+    v = jnp.asarray(np.array([0xDEADBEEF, 0x12345678], np.uint32))
+    got = bmvm.gf2_power_matvec(a, v, jnp.int32(5))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+# --------------------------------------------------------------------------
+# Particle filter
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([8, 64, 100]))
+def test_rho_kernel_matches_ref(seed, n):
+    rng = np.random.default_rng(seed)
+    ref_h = jnp.asarray(rng.integers(0, 400, size=16), jnp.int32)
+    cands = jnp.asarray(rng.integers(0, 400, size=(n, 16)), jnp.int32)
+    got = pfilter.bhattacharyya_rho(ref_h, cands)
+    want = ref.bhattacharyya_rho_ref(ref_h, cands)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rho_isqrt_is_exact_floor():
+    # Perfect squares and off-by-one cases.
+    ref_h = jnp.asarray([9, 9, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0], jnp.int32)
+    cands = jnp.asarray([[4, 5] + [0] * 14], jnp.int32)
+    rho = np.asarray(pfilter.bhattacharyya_rho(ref_h, cands))
+    # isqrt(36)=6, isqrt(45)=6.
+    assert rho[0] == 12
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_pf_weights_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n = 64
+    ref_h = jnp.asarray(rng.integers(0, 300, size=16), jnp.int32)
+    cands = jnp.asarray(rng.integers(0, 300, size=(n, 16)), jnp.int32)
+    parts = jnp.asarray(rng.integers(0, 64, size=(n, 2)), jnp.int32)
+    gc, gr = pfilter.pf_weights(ref_h, cands, parts)
+    wc, wr = ref.pf_weights_ref(ref_h, cands, parts)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(wc))
+    np.testing.assert_array_equal(np.asarray(gr), np.asarray(wr))
+
+
+def test_pf_center_prefers_matching_particle():
+    # One particle matches the reference exactly, others are empty bins.
+    ref_h = jnp.asarray([100] * 16, jnp.int32)
+    cands = np.zeros((4, 16), np.int32)
+    cands[2] = 100
+    parts = jnp.asarray([[0, 0], [10, 10], [30, 40], [63, 63]], jnp.int32)
+    center, rho = pfilter.pf_weights(ref_h, jnp.asarray(cands), parts)
+    assert int(rho[2]) > 0 and int(rho[0]) == 0
+    np.testing.assert_array_equal(np.asarray(center), [30, 40])

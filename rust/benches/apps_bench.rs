@@ -1,0 +1,140 @@
+//! Application-level benchmarks: one per paper figure/table experiment
+//! plus the DESIGN.md §5 application ablations (folding factor, Williams
+//! k vs dense crossover, manual vs automatic cut placement).
+//!
+//! `cargo bench --bench apps_bench`
+
+use fabricflow::apps::bmvm::{software, BmvmSystem, WilliamsLuts};
+use fabricflow::apps::ldpc::mapper::LdpcNocDecoder;
+use fabricflow::apps::ldpc::minsum::{codeword_llrs, MinsumVariant};
+use fabricflow::apps::pfilter::{synthetic_video, PfilterNocTracker, TrackerParams};
+use fabricflow::gf2::Gf2Matrix;
+use fabricflow::partition::Partition;
+use fabricflow::serdes::SerdesConfig;
+use fabricflow::util::bench::{black_box, Bench};
+use fabricflow::util::bits::BitVec;
+use fabricflow::util::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- Fig 9 / Tables I-II experiment: LDPC decode over the NoC ------
+    let llr = codeword_llrs(&[0; 7], 100, &[3]);
+    let dec = LdpcNocDecoder::fano_on_mesh(MinsumVariant::SignMagnitude, 10);
+    let mono_cycles = dec.decode(&llr, None).cycles;
+    b.bench("ldpc/fano_niter10_mesh4x4", || {
+        black_box(dec.decode(&llr, None).cycles)
+    });
+    let p = dec.fig9_partition();
+    let split_cycles = dec.decode(&llr, Some((&p, SerdesConfig::default()))).cycles;
+    b.bench("ldpc/fano_niter10_2fpga_fig9cut", || {
+        black_box(dec.decode(&llr, Some((&p, SerdesConfig::default()))).cycles)
+    });
+    println!(
+        "      fig9: decode {} cycles on 1 FPGA, {} on 2 FPGAs ({:.2}x)",
+        mono_cycles,
+        split_cycles,
+        split_cycles as f64 / mono_cycles as f64
+    );
+
+    // Ablation: Fig 9 manual arc vs automatic min-cut.
+    let auto = Partition::balanced(&dec.topo.build(), 2, 13);
+    let auto_cycles = dec.decode(&llr, Some((&auto, SerdesConfig::default()))).cycles;
+    println!(
+        "      ablation cut placement: fig9 arc {} cuts -> {} cycles | auto {} cuts -> {} cycles",
+        p.cut_links(&dec.topo.build()).len(),
+        split_cycles,
+        auto.cut_links(&dec.topo.build()).len(),
+        auto_cycles
+    );
+
+    // Decoding quality: BER/FER over a BSC (the property the Table I/II
+    // silicon exists to deliver).
+    use fabricflow::apps::ldpc::ber::ber_sweep;
+    use fabricflow::gf2::pg::PgLdpcCode;
+    println!("\nLDPC BER over BSC (400 frames, 8 iterations):");
+    for pt in ber_sweep(
+        &PgLdpcCode::fano(),
+        MinsumVariant::SignMagnitude,
+        &[0.01, 0.03, 0.06, 0.1],
+        400,
+        8,
+        100,
+        42,
+    ) {
+        println!(
+            "  p={:.2}: raw BER {:.4} -> decoded BER {:.4} (FER {:.4})",
+            pt.p, pt.raw_ber, pt.ber, pt.fer
+        );
+    }
+
+    // --- Figs 10-12 / Table III experiment: tracking ------------------
+    let video = synthetic_video(48, 32, 4, 5, 21);
+    let params = TrackerParams { n_particles: 24, sigma: 2.5, roi_r: 4, seed: 5 };
+    let tracker = PfilterNocTracker::on_mesh(4, params);
+    b.bench("pfilter/3frames_24particles_4workers", || {
+        black_box(tracker.track(&video, video.truth[0], None).cycles)
+    });
+
+    // --- Fig 13/14 + Tables IV-V: BMVM --------------------------------
+    let mut rng = Rng::new(0xBEE);
+    let a = Gf2Matrix::random(256, 256, &mut rng);
+    let v = BitVec::random(256, &mut rng);
+
+    b.bench("bmvm/preprocess_n256_k4", || {
+        black_box(WilliamsLuts::preprocess(&a, 4).blocks)
+    });
+
+    let luts = WilliamsLuts::preprocess(&a, 4);
+    for name in ["ring", "mesh", "torus", "fat_tree"] {
+        let sys = BmvmSystem::new(luts.clone(), 16, BmvmSystem::topology_for(name, 16));
+        let label = format!("bmvm/n256_r10_16pe_{name}");
+        let mut cycles = 0;
+        b.bench(&label, || {
+            cycles = sys.run(&v, 10, None).cycles;
+            black_box(cycles)
+        });
+        println!("      {label}: {cycles} fabric cycles");
+    }
+
+    // Software baseline timing (the Table IV/V comparison axis).
+    b.bench("bmvm/software_n256_r10_16threads", || {
+        black_box(software::run_software(&luts, &v, 10, 16).result.popcount())
+    });
+
+    // Ablation: folding factor f (PE count) at fixed n.
+    println!("\nablation: folding factor (n=256, k=4, ring, r=10)");
+    for pes in [4usize, 8, 16, 32, 64] {
+        let sys = BmvmSystem::new(luts.clone(), pes, BmvmSystem::topology_for("ring", pes));
+        let run = sys.run(&v, 10, None);
+        println!("  {pes:2} PEs (f={:2}): {} cycles", sys.fold(), run.cycles);
+    }
+
+    // Ablation: Williams k vs dense crossover (sequential oracles).
+    println!("\nablation: Williams k sweep vs dense matvec (n=256, CPU oracle)");
+    let dense_s = b.bench("bmvm/dense_matvec_n256", || black_box(a.matvec(&v)));
+    let dense_ns = dense_s.mean_ns;
+    for k in [2usize, 4, 8, 12] {
+        let l = WilliamsLuts::preprocess(&a, k);
+        let label = format!("bmvm/williams_matvec_n256_k{k}");
+        let s = b.bench(&label, || black_box(l.matvec(&v)));
+        println!(
+            "      k={k:2}: {:.2}x dense, {:.2} Mb LUT",
+            dense_ns / s.mean_ns,
+            l.storage_bits() as f64 / (1024.0 * 1024.0)
+        );
+    }
+
+    // Ablation: serdes pins on the partitioned BMVM (pins sweep at the
+    // app level; the paper's quasi-SERDES motivates >1 pins).
+    println!("\nablation: serdes pins, BMVM 16 PEs torus bisected, r=10");
+    let topo = BmvmSystem::topology_for("torus", 16);
+    let part = Partition::balanced(&topo.build(), 2, 3);
+    let sys = BmvmSystem::new(luts.clone(), 16, topo);
+    for pins in [1u32, 4, 8, 16] {
+        let cfg = SerdesConfig { pins, clock_div: 1, tx_buffer: 8 };
+        let run = sys.run(&v, 10, Some((&part, cfg)));
+        let marker = if pins == 8 { "  <- paper" } else { "" };
+        println!("  {pins:2} pins: {} cycles{marker}", run.cycles);
+    }
+}

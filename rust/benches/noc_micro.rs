@@ -1,0 +1,141 @@
+//! NoC microarchitecture benchmarks + the DESIGN.md §5 ablations that
+//! live at the network level: allocator policy, flit-buffer depth,
+//! quasi-SERDES pin count.
+//!
+//! `criterion` is unavailable offline; this uses the crate's
+//! [`fabricflow::util::bench`] harness (`cargo bench --bench noc_micro`).
+
+use fabricflow::noc::{Allocator, Flit, Network, NocConfig, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::{serialize_flit, SerdesConfig};
+use fabricflow::util::bench::{black_box, Bench};
+use fabricflow::util::Rng;
+
+fn uniform_drain(topo: &Topology, cfg: NocConfig, flits: u32, seed: u64) -> (u64, u64) {
+    let mut net = Network::new(topo, cfg);
+    let n = net.n_endpoints();
+    let mut rng = Rng::new(seed);
+    for i in 0..flits {
+        let s = rng.index(n);
+        let d = (s + 1 + rng.index(n - 1)) % n;
+        net.inject(s, Flit::single(s, d, i, i as u64));
+    }
+    let cycles = net.run_until_idle(100_000_000);
+    (cycles, net.stats().delivered)
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // Raw simulator speed: router-cycles per second (the perf-pass
+    // headline for L3; see EXPERIMENTS.md §Perf).
+    for topo in [
+        Topology::Mesh { w: 8, h: 8 },
+        Topology::Torus { w: 8, h: 8 },
+        Topology::Ring(64),
+        Topology::fat_tree(64),
+    ] {
+        let name = format!("sim/{}-64ep-10kflits", topo.name());
+        let routers = topo.build().n_routers as u64;
+        let mut cycles_total = 0u64;
+        let s = b.bench(&name, || {
+            let (c, d) = uniform_drain(&topo, NocConfig::paper(), 10_000, 1);
+            cycles_total = c;
+            black_box(d)
+        });
+        let rc_per_sec = (cycles_total * routers) as f64 / (s.mean_ns / 1e9);
+        println!(
+            "      {:<48} {:>12.2} M router-cycles/s ({} cycles to drain)",
+            name,
+            rc_per_sec / 1e6,
+            cycles_total
+        );
+    }
+
+    // Ablation: allocator policy (paper's CONNECT option vs variants).
+    println!("\nablation: allocator policy on 8x8 mesh, 10k uniform flits");
+    for (name, alloc) in [
+        ("input-first RR (paper)", Allocator::SeparableInputFirstRR),
+        ("output-first RR", Allocator::SeparableOutputFirstRR),
+        ("fixed priority", Allocator::FixedPriority),
+    ] {
+        let cfg = NocConfig { allocator: alloc, ..NocConfig::paper() };
+        let (cycles, _) = uniform_drain(&Topology::Mesh { w: 8, h: 8 }, cfg, 10_000, 2);
+        println!("  {name:28} {cycles} cycles");
+    }
+
+    // Ablation: flit buffer depth (paper uses 8).
+    println!("\nablation: flit buffer depth on 8x8 mesh, 10k uniform flits");
+    for depth in [2usize, 4, 8, 16] {
+        let cfg = NocConfig { buffer_depth: depth, ..NocConfig::paper() };
+        let (cycles, _) = uniform_drain(&Topology::Mesh { w: 8, h: 8 }, cfg, 10_000, 2);
+        let marker = if depth == 8 { "  <- paper" } else { "" };
+        println!("  depth {depth:2}: {cycles} cycles{marker}");
+    }
+
+    // Ablation: quasi-SERDES pins on a bisected mesh (Fig 6 sweep).
+    println!("\nablation: serdes pins, 4x4 mesh bisected, 5k uniform flits");
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+    for pins in [1u32, 4, 8, 16] {
+        let mut net = Network::new(&topo, NocConfig::paper());
+        part.apply(&mut net, SerdesConfig { pins, clock_div: 1, tx_buffer: 8 });
+        let mut rng = Rng::new(3);
+        for i in 0..5000u32 {
+            let s = rng.index(16);
+            let d = (s + 1 + rng.index(15)) % 16;
+            net.inject(s, Flit::single(s, d, i, i as u64));
+        }
+        let cycles = net.run_until_idle(100_000_000);
+        let marker = if pins == 8 { "  <- paper" } else { "" };
+        println!("  {pins:2} pins: {cycles} cycles{marker}");
+    }
+
+    // Latency-vs-load curves (the classic NoC evaluation behind Table V's
+    // topology ordering).
+    use fabricflow::noc::traffic::{latency_load_sweep, Pattern};
+    println!("\nlatency vs offered load (uniform, 300 warm cycles):");
+    for topo in [
+        Topology::Ring(16),
+        Topology::Mesh { w: 4, h: 4 },
+        Topology::Torus { w: 4, h: 4 },
+        Topology::fat_tree(16),
+    ] {
+        let pts = latency_load_sweep(
+            &topo,
+            NocConfig::paper(),
+            Pattern::Uniform,
+            &[0.05, 0.15, 0.3, 0.5],
+            300,
+            17,
+        );
+        let row: Vec<String> = pts
+            .iter()
+            .map(|p| format!("{:.2}->{:.1}{}", p.offered, p.avg_latency,
+                if p.stable { "" } else { "*" }))
+            .collect();
+        println!("  {:9} {}", topo.name(), row.join("  "));
+    }
+    println!("  (* = saturated: offered load not sustained)");
+
+    // Wire-format serialization throughput.
+    let f = Flit::single(3, 9, 42, 0xBEEF);
+    b.bench_throughput("serdes/serialize_flit_8pin", 1, || {
+        black_box(serialize_flit(&f, 16, 16, 8))
+    });
+
+    // PE wrapper: collector reassembly of shuffled flits.
+    use fabricflow::noc::flit::packetize;
+    use fabricflow::pe::collector::{make_tag, Collector};
+    let payload: Vec<u64> = (0..4).collect();
+    let mut rng = Rng::new(9);
+    let mut flits = packetize(0, 1, make_tag(1, 0), &payload, 256, 16);
+    rng.shuffle(&mut flits);
+    b.bench_throughput("pe/collector_reassemble_16flit_msg", 16, || {
+        let mut c = Collector::new(vec![256], 16);
+        for f in &flits {
+            c.accept(*f);
+        }
+        black_box(c.ready())
+    });
+}

@@ -1,0 +1,32 @@
+//! Table-regeneration benchmark: times the full Tables I–V harness (the
+//! end-to-end evaluation pipeline) and prints the tables it produced.
+//!
+//! `FABRICFLOW_BENCH_FULL=1 cargo bench --bench tables_bench` runs the
+//! complete r=1000 rows (several minutes); the default uses the quick
+//! profile so `make bench` stays CI-sized.
+
+use fabricflow::tables::{all_tables, table4, table5, TableOpts};
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("FABRICFLOW_BENCH_FULL").is_ok();
+    let opts = TableOpts { reps: if full { 5 } else { 1 }, quick: !full, seed: 0x7AB1E };
+
+    let t = Instant::now();
+    let t4 = table4(&opts);
+    println!("{t4}");
+    println!("[table IV regenerated in {:?}]", t.elapsed());
+
+    let t = Instant::now();
+    let t5 = table5(&opts);
+    println!("{t5}");
+    println!("[table V regenerated in {:?}]", t.elapsed());
+
+    let t = Instant::now();
+    let all = all_tables(&opts);
+    println!(
+        "[all tables ({} chars) regenerated in {:?}]",
+        all.len(),
+        t.elapsed()
+    );
+}

@@ -1,0 +1,227 @@
+//! Case study III: Boolean matrix-vector multiplication over GF(2)
+//! (paper §VI) — the communication-intensive workload behind Tables IV–V.
+//!
+//! Block Wiedemann-style iterations `(Av, A²v, …, A^r v)` with a fixed
+//! matrix A, computed three ways:
+//!
+//! * [`williams::WilliamsLuts::matvec_iter`] — sequential sub-quadratic
+//!   oracle;
+//! * [`software::run_software`] — the paper's multithreaded
+//!   message-passing baseline (threads = PEs);
+//! * [`BmvmSystem`] — the NoC mapping: PE-per-folded-block-column over
+//!   ring / mesh / torus / fat tree, timed in fabric cycles at 100 MHz
+//!   plus the RIFFA host-link model ([`hostlink::HostLink`]).
+
+pub mod williams;
+pub mod software;
+pub mod pe;
+pub mod hostlink;
+
+use crate::noc::flit::NodeId;
+use crate::noc::{Network, NocConfig, Topology};
+use crate::partition::Partition;
+use crate::pe::PeSystem;
+use crate::serdes::SerdesConfig;
+use crate::util::bits::BitVec;
+
+pub use hostlink::HostLink;
+pub use williams::{dense_power_matvec, WilliamsLuts};
+
+/// Result + metrics of a hardware (NoC) run.
+#[derive(Clone, Debug)]
+pub struct BmvmRunReport {
+    pub result: BitVec,
+    /// Fabric cycles from boot to quiescence.
+    pub cycles: u64,
+    /// End-to-end time including the host-link roundtrip, milliseconds
+    /// (the quantity Tables IV–V report for the hardware).
+    pub time_ms: f64,
+    pub flits_delivered: u64,
+}
+
+/// A BMVM accelerator instance: preprocessed LUTs + PE array + topology.
+pub struct BmvmSystem {
+    pub luts: WilliamsLuts,
+    pub n_pes: usize,
+    pub topo: Topology,
+    pub host: HostLink,
+}
+
+impl BmvmSystem {
+    /// Build with an explicit topology (must expose ≥ n_pes endpoints).
+    pub fn new(luts: WilliamsLuts, n_pes: usize, topo: Topology) -> Self {
+        assert!(topo.n_endpoints() >= n_pes, "topology too small for PE array");
+        assert_eq!(luts.blocks % n_pes, 0, "fold factor must be integral");
+        BmvmSystem { luts, n_pes, topo, host: HostLink::default() }
+    }
+
+    /// The paper's Table V topology menu for a given PE count.
+    pub fn topology_for(name: &str, n_pes: usize) -> Topology {
+        let side = (n_pes as f64).sqrt().round() as usize;
+        match name {
+            "ring" => Topology::Ring(n_pes),
+            "mesh" => {
+                assert_eq!(side * side, n_pes, "mesh wants a square PE count");
+                Topology::Mesh { w: side, h: side }
+            }
+            "torus" => {
+                assert_eq!(side * side, n_pes);
+                Topology::Torus { w: side, h: side }
+            }
+            // Wide 2-level fat tree (full bisection): at the paper's 64-PE
+            // scale this is the configuration that reproduces Table V's
+            // fat_tree < torus < mesh < ring time ordering.
+            "fat_tree" => Topology::FatTree { endpoints: n_pes, arity: 8, up_cap: 16 },
+            other => panic!("unknown topology {other}"),
+        }
+    }
+
+    /// Fold factor f (sub-vectors per PE).
+    pub fn fold(&self) -> usize {
+        self.luts.blocks / self.n_pes
+    }
+
+    /// Run `A^r · v` over the NoC; optionally partition the NoC across
+    /// FPGAs first.
+    pub fn run(
+        &self,
+        v: &BitVec,
+        r: u32,
+        partition: Option<(&Partition, SerdesConfig)>,
+    ) -> BmvmRunReport {
+        assert!(r >= 1);
+        let mut sys = PeSystem::new(Network::new(&self.topo, NocConfig::paper()));
+        if let Some((p, serdes)) = partition {
+            p.apply(&mut sys.net, serdes);
+        }
+        let parts = self.luts.split_vector(v);
+        let peers: Vec<NodeId> = (0..self.n_pes).collect();
+        for p in 0..self.n_pes {
+            sys.attach(
+                p,
+                Box::new(pe::BmvmPe::new(
+                    &self.luts,
+                    &parts,
+                    p,
+                    self.n_pes,
+                    r,
+                    peers.clone(),
+                )),
+            );
+        }
+        let cycles = sys.run(2_000_000_000);
+        // Host DMA readback (Fig 14's RIFFA path).
+        let mut all = Vec::with_capacity(self.luts.blocks);
+        for p in 0..self.n_pes {
+            all.extend(sys.readback(p).expect("BMVM PE has result memory"));
+        }
+        let result = self.luts.join_vector(&all);
+        let st = sys.net.stats();
+        let n_bits = self.luts.n as u64;
+        BmvmRunReport {
+            result,
+            cycles,
+            time_ms: self.host.total_ms(cycles, 100e6, n_bits, n_bits),
+            flits_delivered: st.delivered,
+        }
+    }
+
+    /// Total BRAM bits the folded LUTs occupy across the PE array.
+    pub fn bram_bits(&self) -> u64 {
+        self.luts.storage_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf2::Gf2Matrix;
+    use crate::util::Rng;
+
+    /// Table IV shape: n = 64, k = 8, f = 2 → 4 PEs on a mesh.
+    fn table4_system(rng: &mut Rng) -> (Gf2Matrix, BmvmSystem) {
+        let a = Gf2Matrix::random(64, 64, rng);
+        let luts = WilliamsLuts::preprocess(&a, 8);
+        let sys = BmvmSystem::new(luts, 4, Topology::Mesh { w: 2, h: 2 });
+        (a, sys)
+    }
+
+    #[test]
+    fn table4_hardware_matches_dense_oracle() {
+        let mut rng = Rng::new(31);
+        let (a, sys) = table4_system(&mut rng);
+        assert_eq!(sys.fold(), 2);
+        let v = BitVec::random(64, &mut rng);
+        for r in [1u32, 3, 10] {
+            let run = sys.run(&v, r, None);
+            assert_eq!(run.result, dense_power_matvec(&a, &v, r), "r={r}");
+            assert!(run.cycles > 0);
+            assert!(run.time_ms > 0.05, "host overhead included");
+        }
+    }
+
+    #[test]
+    fn all_table5_topologies_agree() {
+        let mut rng = Rng::new(37);
+        // Scaled-down Table V shape: n = 256, k = 4, f = 4 → 16 PEs.
+        let a = Gf2Matrix::random(256, 256, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let v = BitVec::random(256, &mut rng);
+        let expect = dense_power_matvec(&a, &v, 4);
+        let mut cycles = std::collections::HashMap::new();
+        for name in ["ring", "mesh", "torus", "fat_tree"] {
+            let sys = BmvmSystem::new(
+                luts.clone(),
+                16,
+                BmvmSystem::topology_for(name, 16),
+            );
+            let run = sys.run(&v, 4, None);
+            assert_eq!(run.result, expect, "{name}");
+            cycles.insert(name, run.cycles);
+        }
+        // The paper's cost/performance ordering (Table V): ring slowest.
+        // At this scaled-down 16-PE size torus and fat tree are within a
+        // cycle of each other; the full 64-PE ordering is asserted by the
+        // Table V harness ([`crate::tables`]).
+        assert!(cycles["ring"] > cycles["mesh"], "{cycles:?}");
+        assert!(cycles["mesh"] >= cycles["torus"], "{cycles:?}");
+        assert!(cycles["mesh"] >= cycles["fat_tree"], "{cycles:?}");
+    }
+
+    #[test]
+    fn cycles_scale_linearly_in_r_for_large_r() {
+        let mut rng = Rng::new(41);
+        let (_, sys) = table4_system(&mut rng);
+        let v = BitVec::random(64, &mut rng);
+        let c10 = sys.run(&v, 10, None).cycles;
+        let c40 = sys.run(&v, 40, None).cycles;
+        let ratio = c40 as f64 / c10 as f64;
+        assert!(
+            (3.0..5.0).contains(&ratio),
+            "expected ~4x cycles for 4x iterations, got {ratio} ({c10} vs {c40})"
+        );
+    }
+
+    #[test]
+    fn partitioned_bmvm_same_result() {
+        let mut rng = Rng::new(43);
+        let (a, sys) = table4_system(&mut rng);
+        let v = BitVec::random(64, &mut rng);
+        let mono = sys.run(&v, 5, None);
+        let part = Partition::new(2, vec![0, 0, 1, 1]);
+        let split = sys.run(&v, 5, Some((&part, SerdesConfig::default())));
+        assert_eq!(split.result, dense_power_matvec(&a, &v, 5));
+        assert_eq!(split.result, mono.result);
+        assert!(split.cycles > mono.cycles);
+    }
+
+    #[test]
+    fn software_and_hardware_agree() {
+        let mut rng = Rng::new(47);
+        let (_, sys) = table4_system(&mut rng);
+        let v = BitVec::random(64, &mut rng);
+        let hw = sys.run(&v, 8, None);
+        let sw = software::run_software(&sys.luts, &v, 8, 4);
+        assert_eq!(hw.result, sw.result);
+    }
+}

@@ -1,0 +1,287 @@
+//! BMVM processing elements over the NoC (paper §VI-B, Fig 14).
+//!
+//! PE `p` owns `f` consecutive block-columns AND the matching `f` block
+//! rows of the result (the paper's "folding": "a single processing
+//! element handles multiple sub-vectors and is provided with a single
+//! coalesced look-up table"). Per iteration (epoch):
+//!
+//! 1. look up partition `v_c` of each owned column LUT, XOR the words
+//!    per destination block row (the coalesced-LUT pre-combination);
+//! 2. send one batch (f words × k bits) to every other PE; apply the
+//!    own-rows contribution locally;
+//! 3. XOR-accumulate the `n_pes − 1` incoming batches; when all have
+//!    arrived the owned result sub-vectors are complete and become the
+//!    next iteration's `v` parts.
+//!
+//! Correct serialization of concurrent updates is inherited from the NoC
+//! exactly as the paper argues: "Since only one flit can be injected and
+//! ejected in a single cycle in the NoC, this constraint is automatically
+//! ensured" — the collector hands the PE one batch at a time. Batches
+//! from fast peers for future epochs buffer in the epoch-keyed
+//! accumulator, so no global barrier exists anywhere.
+
+use std::collections::HashMap;
+
+use crate::noc::flit::NodeId;
+use crate::pe::collector::ArgMessage;
+use crate::pe::{OutMessage, Processor, WrapperSpec};
+use crate::resources::{self, Resources};
+
+use super::williams::WilliamsLuts;
+
+/// One BMVM processing element.
+pub struct BmvmPe {
+    pub pe: usize,
+    n_pes: usize,
+    k: usize,
+    f: usize,
+    blocks: usize,
+    r: u32,
+    /// Owned columns' LUTs: `lut[c][mask * blocks + j]`.
+    lut: Vec<Vec<u64>>,
+    /// Owned sub-vector masks (input of the current epoch).
+    v: Vec<u64>,
+    /// Endpoint of every PE (self included).
+    peers: Vec<NodeId>,
+    /// epoch → (remote batches received, accumulated owned rows).
+    acc: HashMap<u32, (usize, Vec<u64>)>,
+    epoch: u32,
+    /// Stats: total LUT words read.
+    pub lut_reads: u64,
+}
+
+impl BmvmPe {
+    /// Carve PE `pe` out of the preprocessed LUTs. `peers[i]` is the
+    /// endpoint of PE `i`; `v_parts` the full initial vector split into
+    /// block masks.
+    pub fn new(
+        luts: &WilliamsLuts,
+        v_parts: &[u64],
+        pe: usize,
+        n_pes: usize,
+        r: u32,
+        peers: Vec<NodeId>,
+    ) -> Self {
+        assert_eq!(peers.len(), n_pes);
+        assert_eq!(luts.blocks % n_pes, 0, "blocks must fold evenly over PEs");
+        let f = luts.blocks / n_pes;
+        assert!(f * luts.k <= 64, "batch must fit one payload word");
+        let lut: Vec<Vec<u64>> = (0..f)
+            .map(|c| {
+                let col = pe * f + c;
+                (0..(1usize << luts.k) * luts.blocks)
+                    .map(|idx| {
+                        let mask = idx / luts.blocks;
+                        let j = idx % luts.blocks;
+                        luts.partition(col, mask as u64)[j]
+                    })
+                    .collect()
+            })
+            .collect();
+        BmvmPe {
+            pe,
+            n_pes,
+            k: luts.k,
+            f,
+            blocks: luts.blocks,
+            r,
+            lut,
+            v: v_parts[pe * f..(pe + 1) * f].to_vec(),
+            peers,
+            acc: HashMap::new(),
+            epoch: 0,
+            lut_reads: 0,
+        }
+    }
+
+    /// Contributions of this PE's columns for the current `self.v`,
+    /// pre-XOR'd per destination block row.
+    fn contributions(&mut self) -> Vec<u64> {
+        let mut contrib = vec![0u64; self.blocks];
+        for c in 0..self.f {
+            let mask = self.v[c] as usize;
+            let words = &self.lut[c][mask * self.blocks..(mask + 1) * self.blocks];
+            self.lut_reads += self.blocks as u64;
+            for (j, &w) in words.iter().enumerate() {
+                contrib[j] ^= w;
+            }
+        }
+        contrib
+    }
+
+    /// Pack `f` k-bit words into one payload word.
+    fn pack(&self, words: &[u64]) -> u64 {
+        let mut p = 0u64;
+        for (i, &w) in words.iter().enumerate() {
+            p |= (w & ((1u64 << self.k) - 1)) << (i * self.k);
+        }
+        p
+    }
+
+    fn unpack(&self, p: u64) -> Vec<u64> {
+        (0..self.f)
+            .map(|i| (p >> (i * self.k)) & ((1u64 << self.k) - 1))
+            .collect()
+    }
+
+    /// Emit the scatter for epoch `e` and fold in the self-contribution.
+    fn send_epoch(&mut self, e: u32) -> Vec<OutMessage> {
+        let contrib = self.contributions();
+        let mut msgs = Vec::with_capacity(self.n_pes - 1);
+        for dst in 0..self.n_pes {
+            let batch = &contrib[dst * self.f..(dst + 1) * self.f];
+            if dst == self.pe {
+                let slot = self
+                    .acc
+                    .entry(e)
+                    .or_insert_with(|| (0, vec![0u64; self.f]));
+                for (a, &w) in slot.1.iter_mut().zip(batch) {
+                    *a ^= w;
+                }
+            } else {
+                msgs.push(OutMessage::word(
+                    self.peers[dst],
+                    0,
+                    e,
+                    self.pack(batch),
+                    self.f * self.k,
+                ));
+            }
+        }
+        msgs
+    }
+
+    /// Complete every epoch whose gather is full (possibly several in a
+    /// row when this PE was the last straggler).
+    fn maybe_finalize(&mut self) -> Vec<OutMessage> {
+        let mut msgs = Vec::new();
+        loop {
+            let complete = self
+                .acc
+                .get(&self.epoch)
+                .map_or(false, |(got, _)| *got == self.n_pes - 1);
+            if !complete {
+                break;
+            }
+            let (_, rows) = self.acc.remove(&self.epoch).unwrap();
+            self.v = rows;
+            self.epoch += 1;
+            if self.epoch < self.r {
+                let e = self.epoch;
+                msgs.extend(self.send_epoch(e));
+            }
+        }
+        msgs
+    }
+}
+
+impl Processor for BmvmPe {
+    fn spec(&self) -> WrapperSpec {
+        WrapperSpec::new(vec![self.f * self.k], vec![self.f * self.k])
+    }
+
+    fn latency_hint(&self, args: &[ArgMessage]) -> u64 {
+        // XOR of f words; if this batch completes the current epoch the
+        // invocation also performs the next epoch's LUT walk (dual-port
+        // BRAM, 2 words/cycle).
+        let completes = args
+            .first()
+            .map(|a| {
+                a.epoch == self.epoch
+                    && self
+                        .acc
+                        .get(&self.epoch)
+                        .map_or(self.n_pes == 2, |(got, _)| got + 2 == self.n_pes)
+            })
+            .unwrap_or(false);
+        if completes && self.epoch + 1 < self.r {
+            2 + (self.f * self.blocks) as u64 / 2
+        } else {
+            2
+        }
+    }
+
+    fn boot(&mut self) -> Vec<OutMessage> {
+        let mut msgs = self.send_epoch(0);
+        // Single-PE systems (or trailing epochs with no remote input)
+        // finalize immediately.
+        msgs.extend(self.maybe_finalize());
+        msgs
+    }
+
+    fn process(&mut self, args: &[ArgMessage], _epoch: u32) -> Vec<OutMessage> {
+        let m = &args[0];
+        let batch = self.unpack(m.payload[0]);
+        let slot = self
+            .acc
+            .entry(m.epoch)
+            .or_insert_with(|| (0, vec![0u64; self.f]));
+        slot.0 += 1;
+        for (a, &w) in slot.1.iter_mut().zip(&batch) {
+            *a ^= w;
+        }
+        self.maybe_finalize()
+    }
+
+    fn readback(&self) -> Option<Vec<u64>> {
+        Some(self.v.clone())
+    }
+}
+
+/// Per-PE FPGA cost: the coalesced LUT in BRAM, lookup address logic, the
+/// XOR accumulators and epoch bookkeeping (Fig 14's PE block).
+pub fn bmvm_pe_resources(k: usize, f: usize, blocks: usize) -> Resources {
+    let bram_bits = (f as u64) * (1u64 << k) * (blocks as u64) * k as u64;
+    resources::bram(bram_bits)
+        + resources::register((f * k) as u64 as u32 * 2) // v + accumulator
+        + resources::adder(16)                            // address gen
+        + resources::counter(8)                           // epoch/gather count
+        + resources::Resources::new(16, 40 + (f * k) as u64) // XOR + control
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf2::Gf2Matrix;
+    use crate::util::bits::BitVec;
+    use crate::util::Rng;
+
+    #[test]
+    fn single_pe_runs_whole_iteration_in_boot() {
+        let mut rng = Rng::new(23);
+        let a = Gf2Matrix::random(16, 16, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let v = BitVec::random(16, &mut rng);
+        let parts = luts.split_vector(&v);
+        let mut pe = BmvmPe::new(&luts, &parts, 0, 1, 6, vec![0]);
+        let msgs = pe.boot();
+        assert!(msgs.is_empty(), "single PE sends nothing");
+        let got = luts.join_vector(&pe.readback().unwrap());
+        assert_eq!(got, super::super::williams::dense_power_matvec(&a, &v, 6));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(29);
+        let a = Gf2Matrix::random(32, 32, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let parts = luts.split_vector(&BitVec::zeros(32));
+        let pe = BmvmPe::new(&luts, &parts, 0, 4, 1, vec![0, 1, 2, 3]);
+        for _ in 0..50 {
+            let words: Vec<u64> = (0..pe.f).map(|_| rng.below(16)).collect();
+            assert_eq!(pe.unpack(pe.pack(&words)), words);
+        }
+    }
+
+    #[test]
+    fn resources_scale_with_lut_size() {
+        let small = bmvm_pe_resources(4, 2, 16);
+        let big = bmvm_pe_resources(8, 2, 16);
+        assert!(big.bram_bits > small.bram_bits);
+        assert_eq!(
+            small.bram_bits,
+            2 * 16 * 16 * 4,
+            "f · 2^k · blocks · k bits"
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! The multithreaded message-passing software baseline (paper §VI-C):
+//! "the multithreaded message passing software version (processing
+//! elements corresponding to threads)" that Tables IV–V compare the
+//! hardware against.
+//!
+//! One OS thread per processing element, mpsc channels as the message
+//! fabric, the *same* dataflow as the NoC mapping: per iteration each
+//! thread looks up the partitions of its (folded) LUT columns, pre-XORs
+//! its per-destination contributions, sends one batch to every other
+//! thread, and XOR-accumulates the batches it receives. No global
+//! barrier — epoch-tagged batches buffer ahead-of-time senders, exactly
+//! like the hardware's epoch accounting.
+//!
+//! Timing: [`run_software`] measures wall-clock including thread
+//! create/join, which the paper calls out as the dominant cost at small
+//! r ("thread creation/join time ... dominant component").
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::util::bits::BitVec;
+
+use super::williams::WilliamsLuts;
+
+/// Result of a software run.
+pub struct SoftwareRun {
+    pub result: BitVec,
+    /// Wall clock including thread create/join.
+    pub elapsed: Duration,
+}
+
+/// Compute `A^r · v` with `n_pes` threads (folding f = blocks / n_pes).
+/// `luts` must tile evenly: `blocks % n_pes == 0`.
+pub fn run_software(luts: &WilliamsLuts, v: &BitVec, r: u32, n_pes: usize) -> SoftwareRun {
+    assert!(n_pes >= 1 && luts.blocks % n_pes == 0, "blocks must fold evenly");
+    let f = luts.blocks / n_pes;
+    let parts = luts.split_vector(v);
+    let start = Instant::now();
+    let mut final_parts: Vec<(usize, Vec<u64>)> = Vec::with_capacity(n_pes);
+
+    std::thread::scope(|scope| {
+        // One channel per destination thread.
+        let mut senders: Vec<mpsc::Sender<(u32, usize, Vec<u64>)>> = Vec::new();
+        let mut receivers: Vec<mpsc::Receiver<(u32, usize, Vec<u64>)>> = Vec::new();
+        for _ in 0..n_pes {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<u64>)>();
+
+        for (pe, rx) in receivers.into_iter().enumerate() {
+            let senders = senders.clone();
+            let done = done_tx.clone();
+            let my_v: Vec<u64> = parts[pe * f..(pe + 1) * f].to_vec();
+            let luts = &luts;
+            scope.spawn(move || {
+                let mut v_local = my_v;
+                // Early batches from fast peers, keyed by epoch.
+                let mut pending: HashMap<u32, (usize, Vec<u64>)> = HashMap::new();
+                for epoch in 0..r {
+                    // Contributions of my columns, pre-XOR'd per block row.
+                    let mut contrib = vec![0u64; luts.blocks];
+                    for c in 0..f {
+                        let col = pe * f + c;
+                        for (j, &w) in
+                            luts.partition(col, v_local[c]).iter().enumerate()
+                        {
+                            contrib[j] ^= w;
+                        }
+                    }
+                    // Scatter one batch per destination PE.
+                    for (dst, tx) in senders.iter().enumerate() {
+                        if dst == pe {
+                            continue;
+                        }
+                        let batch = contrib[dst * f..(dst + 1) * f].to_vec();
+                        tx.send((epoch, pe, batch)).expect("peer alive");
+                    }
+                    // Gather: my own contribution + n_pes-1 batches.
+                    let entry = pending.entry(epoch).or_insert_with(|| (0, vec![0u64; f]));
+                    for (row, acc) in entry.1.iter_mut().enumerate() {
+                        *acc ^= contrib[pe * f + row];
+                    }
+                    while pending.get(&epoch).unwrap().0 < n_pes - 1 {
+                        let (e, _src, batch) = rx.recv().expect("channel open");
+                        let slot = pending.entry(e).or_insert_with(|| (0, vec![0u64; f]));
+                        slot.0 += 1;
+                        for (acc, w) in slot.1.iter_mut().zip(&batch) {
+                            *acc ^= *w;
+                        }
+                    }
+                    let (_, acc) = pending.remove(&epoch).unwrap();
+                    v_local = acc;
+                }
+                done.send((pe, v_local)).expect("main alive");
+            });
+        }
+        drop(done_tx);
+        drop(senders);
+        for _ in 0..n_pes {
+            final_parts.push(done_rx.recv().expect("all threads complete"));
+        }
+    });
+
+    final_parts.sort_by_key(|&(pe, _)| pe);
+    let mut all = Vec::with_capacity(luts.blocks);
+    for (_, p) in final_parts {
+        all.extend(p);
+    }
+    let result = luts.join_vector(&all);
+    SoftwareRun { result, elapsed: start.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::bmvm::williams::dense_power_matvec;
+    use crate::gf2::Gf2Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn software_matches_dense_oracle() {
+        let mut rng = Rng::new(13);
+        let a = Gf2Matrix::random(64, 64, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 8);
+        let v = BitVec::random(64, &mut rng);
+        for (r, pes) in [(1u32, 4usize), (10, 4), (7, 2), (3, 8), (5, 1)] {
+            let run = run_software(&luts, &v, r, pes);
+            assert_eq!(
+                run.result,
+                dense_power_matvec(&a, &v, r),
+                "r={r} pes={pes}"
+            );
+        }
+    }
+
+    #[test]
+    fn table5_shape_runs() {
+        let mut rng = Rng::new(17);
+        let a = Gf2Matrix::random(256, 256, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let v = BitVec::random(256, &mut rng);
+        // 64 threads over 64 blocks (f = 1): the Table V thread shape.
+        let run = run_software(&luts, &v, 10, 16);
+        assert_eq!(run.result, dense_power_matvec(&a, &v, 10));
+        assert!(run.elapsed.as_nanos() > 0);
+    }
+
+    #[test]
+    fn zero_vector_fixed_point() {
+        let mut rng = Rng::new(19);
+        let a = Gf2Matrix::random(32, 32, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let v = BitVec::zeros(32);
+        let run = run_software(&luts, &v, 4, 4);
+        assert!(run.result.is_zero());
+    }
+}

@@ -1,0 +1,217 @@
+//! Ryan Williams' sub-quadratic Boolean matrix-vector multiplication
+//! (paper §VI-A, Fig 13) — "incidentally its first hardware realization".
+//!
+//! **Preprocessing** (one-time, Fig 13): tile the n×n GF(2) matrix A into
+//! k×k tiles. For every block-column i build LUT_i with 2^k partitions;
+//! partition p stores the n/k words `{A_{1,i}·b_p, …, A_{n/k,i}·b_p}`
+//! where b_p is the k-bit vector with index p — i.e. every possible
+//! product of every tile in the column with any k-bit vector.
+//!
+//! **Compute**: with v split into n/k k-bit sub-vectors, node i looks up
+//! partition v_i of LUT_i and the result sub-vector j is the XOR of the
+//! j-th words across all columns: `v'_j = ⊕_i LUT_i[v_i][j]`.
+//!
+//! Per multiply this reads n/k · n/k words instead of touching all n²
+//! matrix bits — O(n²/k²) word operations, sub-quadratic bit operations
+//! for k ~ log n, at the cost of `(n/k)² · 2^k · k` bits of LUT storage
+//! (mapped to FPGA BRAM in the paper; [`WilliamsLuts::storage_bits`]).
+
+use crate::gf2::{tile_matvec, Gf2Matrix};
+use crate::util::bits::BitVec;
+
+/// The preprocessed LUTs for a fixed matrix A.
+#[derive(Clone)]
+pub struct WilliamsLuts {
+    pub n: usize,
+    pub k: usize,
+    /// Number of block rows/columns: ceil(n / k).
+    pub blocks: usize,
+    /// `lut[i][p * blocks + j]` = tile (j, i) of A times the k-bit vector
+    /// with bit pattern `p` (a k-bit word).
+    lut: Vec<Vec<u64>>,
+}
+
+impl WilliamsLuts {
+    /// One-time preprocessing of `a` with tile size `k` (1 ≤ k ≤ 16 keeps
+    /// 2^k LUT partitions practical, exactly like the paper's k = 4, 8).
+    pub fn preprocess(a: &Gf2Matrix, k: usize) -> Self {
+        assert!(a.rows() == a.cols(), "square matrices only");
+        assert!((1..=16).contains(&k), "tile size k out of range");
+        let n = a.rows();
+        let blocks = n.div_ceil(k);
+        let masks = 1usize << k;
+        let mut lut = Vec::with_capacity(blocks);
+        for i in 0..blocks {
+            // Extract the column of tiles once, then tabulate every mask.
+            let tiles: Vec<Vec<u64>> = (0..blocks).map(|j| a.tile(j, i, k)).collect();
+            let mut col = vec![0u64; masks * blocks];
+            for (p, slot) in col.chunks_mut(blocks).enumerate() {
+                for (j, tile) in tiles.iter().enumerate() {
+                    slot[j] = tile_matvec(tile, p as u64);
+                }
+            }
+            lut.push(col);
+        }
+        WilliamsLuts { n, k, blocks, lut }
+    }
+
+    /// LUT storage in bits: blocks columns × 2^k partitions × blocks
+    /// words × k bits (the BRAM budget of §VI-B).
+    pub fn storage_bits(&self) -> u64 {
+        (self.blocks as u64) * (1u64 << self.k) * (self.blocks as u64) * self.k as u64
+    }
+
+    /// The words of partition `mask` of column `i` (length `blocks`).
+    #[inline]
+    pub fn partition(&self, i: usize, mask: u64) -> &[u64] {
+        let b = self.blocks;
+        &self.lut[i][mask as usize * b..(mask as usize + 1) * b]
+    }
+
+    /// Split `v` into k-bit sub-vector masks.
+    pub fn split_vector(&self, v: &BitVec) -> Vec<u64> {
+        assert_eq!(v.len(), self.n);
+        (0..self.blocks)
+            .map(|i| {
+                let lo = i * self.k;
+                let bits = self.k.min(self.n - lo);
+                v.extract_u64(lo, bits)
+            })
+            .collect()
+    }
+
+    /// Reassemble sub-vector masks into a BitVec.
+    pub fn join_vector(&self, parts: &[u64]) -> BitVec {
+        assert_eq!(parts.len(), self.blocks);
+        let mut v = BitVec::zeros(self.n);
+        for (i, &p) in parts.iter().enumerate() {
+            let lo = i * self.k;
+            let bits = self.k.min(self.n - lo);
+            v.insert_u64(lo, bits, p & ((1u64 << bits) - 1)); // k <= 16
+        }
+        v
+    }
+
+    /// Sequential sub-quadratic multiply: `v' = A·v` via the LUTs — the
+    /// oracle for both the threaded software version and the NoC mapping.
+    pub fn matvec(&self, v: &BitVec) -> BitVec {
+        let parts = self.split_vector(v);
+        let mut out = vec![0u64; self.blocks];
+        for (i, &mask) in parts.iter().enumerate() {
+            for (j, &w) in self.partition(i, mask).iter().enumerate() {
+                out[j] ^= w;
+            }
+        }
+        self.join_vector(&out)
+    }
+
+    /// `A^r · v` by repeated multiplication (the Block Wiedemann-style
+    /// iteration of §VI: A is reused across all r iterations).
+    pub fn matvec_iter(&self, v: &BitVec, r: u32) -> BitVec {
+        let mut x = v.clone();
+        for _ in 0..r {
+            x = self.matvec(&x);
+        }
+        x
+    }
+}
+
+/// Dense oracle for `A^r · v` (schoolbook, used only for verification).
+pub fn dense_power_matvec(a: &Gf2Matrix, v: &BitVec, r: u32) -> BitVec {
+    let mut x = v.clone();
+    for _ in 0..r {
+        x = a.matvec(&x);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn lut_matvec_matches_dense_small() {
+        let mut rng = Rng::new(1);
+        let a = Gf2Matrix::random(16, 16, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        for _ in 0..20 {
+            let v = BitVec::random(16, &mut rng);
+            assert_eq!(luts.matvec(&v), a.matvec(&v));
+        }
+    }
+
+    #[test]
+    fn randomized_sizes_and_k() {
+        prop::check("williams == dense", 30, |rng| {
+            let k = 1 + rng.index(8);
+            let blocks = 1 + rng.index(6);
+            let n = k * blocks; // exact tiling (the paper's cases divide)
+            let a = Gf2Matrix::random(n, n, rng);
+            let luts = WilliamsLuts::preprocess(&a, k);
+            let v = BitVec::random(n, rng);
+            prop::assert_prop(
+                luts.matvec(&v) == a.matvec(&v),
+                format!("n={n} k={k}"),
+            )
+        });
+    }
+
+    #[test]
+    fn non_dividing_n_is_zero_padded() {
+        let mut rng = Rng::new(5);
+        let a = Gf2Matrix::random(13, 13, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        assert_eq!(luts.blocks, 4);
+        for _ in 0..10 {
+            let v = BitVec::random(13, &mut rng);
+            assert_eq!(luts.matvec(&v), a.matvec(&v));
+        }
+    }
+
+    #[test]
+    fn paper_configurations() {
+        let mut rng = Rng::new(7);
+        // Table IV: n = 64, k = 8.
+        let a = Gf2Matrix::random(64, 64, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 8);
+        assert_eq!(luts.blocks, 8);
+        assert_eq!(luts.storage_bits(), 8 * 256 * 8 * 8); // 131 Kb
+        let v = BitVec::random(64, &mut rng);
+        assert_eq!(luts.matvec_iter(&v, 5), dense_power_matvec(&a, &v, 5));
+        // Table V: n = 1024, k = 4 → 4.3 Mb of BRAM, fits the paper's
+        // "Virtex 6 has about 38Mb".
+        let a = Gf2Matrix::random(1024, 1024, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        assert_eq!(luts.blocks, 256);
+        let mb = luts.storage_bits() as f64 / (1024.0 * 1024.0);
+        assert!((4.0..5.0).contains(&mb), "{mb} Mb");
+        assert!(luts.storage_bits() <= crate::resources::Device::VIRTEX6_ML605.bram_bits);
+        let v = BitVec::random(1024, &mut rng);
+        assert_eq!(luts.matvec(&v), a.matvec(&v));
+    }
+
+    #[test]
+    fn iteration_composes() {
+        let mut rng = Rng::new(9);
+        let a = Gf2Matrix::random(24, 24, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let v = BitVec::random(24, &mut rng);
+        let mut x = v.clone();
+        for _ in 0..7 {
+            x = luts.matvec(&x);
+        }
+        assert_eq!(x, luts.matvec_iter(&v, 7));
+        assert_eq!(x, dense_power_matvec(&a, &v, 7));
+    }
+
+    #[test]
+    fn split_join_roundtrip() {
+        let mut rng = Rng::new(11);
+        let a = Gf2Matrix::random(20, 20, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let v = BitVec::random(20, &mut rng);
+        let parts = luts.split_vector(&v);
+        assert_eq!(luts.join_vector(&parts), v);
+    }
+}

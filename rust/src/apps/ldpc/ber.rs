@@ -1,0 +1,146 @@
+//! Bit-error-rate evaluation of the min-sum decoder — the decoding-
+//! quality dimension the paper's Table I/II hardware numbers presuppose
+//! (a decoder that corrects errors). Used by the `apps_bench` harness and
+//! the `fabricflow ldpc` workflows to show the PG-LDPC code actually
+//! earns its silicon.
+
+use crate::gf2::pg::PgLdpcCode;
+use crate::util::Rng;
+
+use super::minsum::{MinsumVariant, ReferenceDecoder};
+
+/// Result of a BSC sweep point.
+#[derive(Clone, Debug)]
+pub struct BerPoint {
+    /// Channel crossover probability.
+    pub p: f64,
+    /// Residual bit-error rate after decoding.
+    pub ber: f64,
+    /// Frame-error rate.
+    pub fer: f64,
+    /// Raw (uncoded) bit-error rate actually drawn.
+    pub raw_ber: f64,
+}
+
+/// Monte-Carlo BER over a binary symmetric channel with crossover `p`,
+/// all-zeros codeword (the code is linear), `frames` trials, `niter`
+/// min-sum iterations. Deterministic in `seed`.
+pub fn ber_sweep(
+    code: &PgLdpcCode,
+    variant: MinsumVariant,
+    ps: &[f64],
+    frames: usize,
+    niter: u32,
+    amp: i32,
+    seed: u64,
+) -> Vec<BerPoint> {
+    let dec = ReferenceDecoder::new(code.clone(), variant);
+    let n = code.n;
+    ps.iter()
+        .map(|&p| {
+            let mut rng = Rng::new(seed ^ (p * 1e9) as u64);
+            let mut bit_errs = 0u64;
+            let mut frame_errs = 0u64;
+            let mut raw_errs = 0u64;
+            for _ in 0..frames {
+                let llr: Vec<i32> = (0..n)
+                    .map(|_| {
+                        if rng.chance(p) {
+                            raw_errs += 1;
+                            -amp
+                        } else {
+                            amp
+                        }
+                    })
+                    .collect();
+                let r = dec.decode(&llr, niter);
+                let errs = r.bits.iter().filter(|&&b| b != 0).count() as u64;
+                bit_errs += errs;
+                if errs > 0 {
+                    frame_errs += 1;
+                }
+            }
+            BerPoint {
+                p,
+                ber: bit_errs as f64 / (frames * n) as f64,
+                fer: frame_errs as f64 / frames as f64,
+                raw_ber: raw_errs as f64 / (frames * n) as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decoder_improves_on_channel_at_low_p() {
+        let code = PgLdpcCode::fano();
+        let pts = ber_sweep(
+            &code,
+            MinsumVariant::SignMagnitude,
+            &[0.02, 0.05],
+            400,
+            8,
+            100,
+            42,
+        );
+        for pt in &pts {
+            assert!(
+                pt.ber < pt.raw_ber,
+                "decoder must beat the raw channel at p={}: {} vs {}",
+                pt.p,
+                pt.ber,
+                pt.raw_ber
+            );
+        }
+    }
+
+    #[test]
+    fn ber_is_monotone_in_p() {
+        let code = PgLdpcCode::fano();
+        let pts = ber_sweep(
+            &code,
+            MinsumVariant::SignMagnitude,
+            &[0.01, 0.08, 0.2],
+            300,
+            8,
+            100,
+            7,
+        );
+        assert!(pts[0].ber <= pts[1].ber && pts[1].ber <= pts[2].ber, "{pts:?}");
+        // Single-error patterns are always corrected: at p=0.01 on N=7 the
+        // dominant error event is weight-1, so BER should be tiny.
+        assert!(pts[0].ber < 0.01, "{}", pts[0].ber);
+    }
+
+    #[test]
+    fn larger_code_outperforms_fano_at_same_rate_point() {
+        // PG(2,4): N=21, stronger code; compare FER at moderate noise.
+        let fano = ber_sweep(
+            &PgLdpcCode::fano(),
+            MinsumVariant::SignMagnitude,
+            &[0.05],
+            300,
+            10,
+            100,
+            3,
+        );
+        let pg2 = ber_sweep(
+            &PgLdpcCode::new(2),
+            MinsumVariant::SignMagnitude,
+            &[0.05],
+            300,
+            10,
+            100,
+            3,
+        );
+        assert!(
+            pg2[0].ber <= fano[0].ber * 1.5,
+            "PG(2,4) {} vs Fano {}",
+            pg2[0].ber,
+            fano[0].ber
+        );
+    }
+}

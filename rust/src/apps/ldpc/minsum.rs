@@ -1,0 +1,282 @@
+//! Monolithic min-sum reference decoder (paper Listing 1) — the oracle
+//! the NoC-mapped decoder is checked against, and the model for the
+//! "W/O wrapper" row of Table II.
+//!
+//! Two check-node variants are provided:
+//!
+//! * [`MinsumVariant::PaperListing`] — exactly Listing 2: each outgoing
+//!   message is the *signed minimum* of the other incoming messages
+//!   (`v1 = min(u2, u3)`), as the paper's Fig 7 comparator datapath
+//!   computes. This is the bit-exact model of the paper's hardware.
+//! * [`MinsumVariant::SignMagnitude`] — textbook min-sum: product of
+//!   signs × minimum magnitude of the others. This is the variant with
+//!   real error-correcting performance and is what the decoding-quality
+//!   tests and the batched XLA artifact use.
+//!
+//! Both share the flooding schedule: per iteration all check nodes fire,
+//! then all bit nodes (Listing 3: `sum = u0 + Σv; u_j = sum − v_j`), and
+//! the decision after `niter` iterations is `sign(sum)` (paper maps
+//! LLR ≥ 0 to bit 0).
+
+use crate::gf2::pg::PgLdpcCode;
+
+use super::sat;
+
+/// Check-node arithmetic variant (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MinsumVariant {
+    /// Listing 2 / Fig 7: signed min of the other inputs.
+    PaperListing,
+    /// Textbook min-sum: sign product × min |·| of the other inputs.
+    SignMagnitude,
+}
+
+/// Check-node update: given the incoming messages `u` of one check,
+/// produce the outgoing message for each edge (the value for edge `j`
+/// excludes `u[j]`).
+pub fn check_update(variant: MinsumVariant, u: &[i32], out: &mut Vec<i32>) {
+    out.clear();
+    match variant {
+        MinsumVariant::PaperListing => {
+            for j in 0..u.len() {
+                let m = u
+                    .iter()
+                    .enumerate()
+                    .filter(|&(k, _)| k != j)
+                    .map(|(_, &x)| x)
+                    .min()
+                    .expect("degree >= 2");
+                out.push(m);
+            }
+        }
+        MinsumVariant::SignMagnitude => {
+            for j in 0..u.len() {
+                let mut sign = 1i32;
+                let mut mag = i32::MAX;
+                for (k, &x) in u.iter().enumerate() {
+                    if k == j {
+                        continue;
+                    }
+                    if x < 0 {
+                        sign = -sign;
+                    }
+                    mag = mag.min(x.abs());
+                }
+                out.push(sat(sign * mag));
+            }
+        }
+    }
+}
+
+/// Bit-node update (Listing 3): `sum = u0 + Σ v`; outgoing message for
+/// edge `j` is `sum − v[j]`. Returns (sum, per-edge outputs).
+pub fn bit_update(u0: i32, v: &[i32], out: &mut Vec<i32>) -> i32 {
+    let mut sum = u0;
+    for &x in v {
+        sum = sat(sum + x);
+    }
+    out.clear();
+    for &x in v {
+        out.push(sat(sum - x));
+    }
+    sum
+}
+
+/// Decode result: hard decisions plus diagnostics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DecodeResult {
+    /// Hard decision per bit (LLR convention: negative LLR ⇒ bit 1).
+    pub bits: Vec<u8>,
+    /// Final posterior sums (the Listing 1 `sum` at the last iteration).
+    pub sums: Vec<i32>,
+    /// Whether H·bits == 0 at the end.
+    pub valid_codeword: bool,
+}
+
+/// The monolithic reference decoder (Listing 1).
+pub struct ReferenceDecoder {
+    pub code: PgLdpcCode,
+    pub variant: MinsumVariant,
+    check_nb: Vec<Vec<usize>>,
+    bit_nb: Vec<Vec<usize>>,
+}
+
+impl ReferenceDecoder {
+    pub fn new(code: PgLdpcCode, variant: MinsumVariant) -> Self {
+        let check_nb = code.check_neighbors();
+        let bit_nb = code.bit_neighbors();
+        ReferenceDecoder { code, variant, check_nb, bit_nb }
+    }
+
+    /// Decode `llr` (one value per code bit, negative ⇒ likely 1) with
+    /// `niter` min-sum iterations under the flooding schedule.
+    pub fn decode(&self, llr: &[i32], niter: u32) -> DecodeResult {
+        let n = self.code.n;
+        let m = self.code.m;
+        assert_eq!(llr.len(), n);
+        assert!(niter >= 1);
+        // Messages indexed [check][position within check] (u: bit→check)
+        // and [bit][position within bit] (v: check→bit).
+        let mut u: Vec<Vec<i32>> = self
+            .check_nb
+            .iter()
+            .map(|nb| nb.iter().map(|&b| sat(llr[b])).collect())
+            .collect();
+        let mut v: Vec<Vec<i32>> = self.bit_nb.iter().map(|nb| vec![0; nb.len()]).collect();
+        let mut sums = vec![0i32; n];
+        let mut scratch = Vec::new();
+        for _ in 0..niter {
+            // Check phase.
+            for c in 0..m {
+                check_update(self.variant, &u[c], &mut scratch);
+                for (pos, &b) in self.check_nb[c].iter().enumerate() {
+                    // Position of check c within bit b's neighbor list.
+                    let bpos = self.bit_nb[b].iter().position(|&x| x == c).unwrap();
+                    v[b][bpos] = scratch[pos];
+                }
+            }
+            // Bit phase.
+            for b in 0..n {
+                sums[b] = bit_update(sat(llr[b]), &v[b], &mut scratch);
+                for (pos, &c) in self.bit_nb[b].iter().enumerate() {
+                    let cpos = self.check_nb[c].iter().position(|&x| x == b).unwrap();
+                    u[c][cpos] = scratch[pos];
+                }
+            }
+        }
+        let bits: Vec<u8> = sums.iter().map(|&s| u8::from(s < 0)).collect();
+        let valid_codeword = self.code.is_codeword(&bits);
+        DecodeResult { bits, sums, valid_codeword }
+    }
+}
+
+/// Map a hard codeword + channel into LLRs: bit 0 → `+amp`, bit 1 →
+/// `−amp`, with optional per-bit flips (binary symmetric channel).
+pub fn codeword_llrs(word: &[u8], amp: i32, flips: &[usize]) -> Vec<i32> {
+    let mut llr: Vec<i32> = word
+        .iter()
+        .map(|&b| if b == 0 { amp } else { -amp })
+        .collect();
+    for &f in flips {
+        llr[f] = -llr[f];
+    }
+    llr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn fano_sm() -> ReferenceDecoder {
+        ReferenceDecoder::new(PgLdpcCode::fano(), MinsumVariant::SignMagnitude)
+    }
+
+    #[test]
+    fn check_update_paper_listing_matches_listing2() {
+        // Listing 2: [v1,v2,v3] = [min(u2,u3), min(u1,u3), min(u1,u2)].
+        let mut out = Vec::new();
+        check_update(MinsumVariant::PaperListing, &[5, -3, 7], &mut out);
+        assert_eq!(out, vec![-3, 5, -3]);
+    }
+
+    #[test]
+    fn check_update_sign_magnitude() {
+        let mut out = Vec::new();
+        check_update(MinsumVariant::SignMagnitude, &[5, -3, 7], &mut out);
+        // v1: sign(-3*7)=-1, min(3,7)=3 -> -3 ; v2: sign(5*7)=+1, min(5,7)=5
+        // v3: sign(5*-3)=-1, min(5,3)=3 -> -3
+        assert_eq!(out, vec![-3, 5, -3]);
+        check_update(MinsumVariant::SignMagnitude, &[-5, -3, -7], &mut out);
+        assert_eq!(out, vec![3, 5, 3]);
+    }
+
+    #[test]
+    fn bit_update_matches_listing3() {
+        let mut out = Vec::new();
+        let sum = bit_update(10, &[1, -2, 3], &mut out);
+        assert_eq!(sum, 12);
+        assert_eq!(out, vec![11, 14, 9]);
+    }
+
+    #[test]
+    fn clean_codeword_stays_fixed() {
+        let dec = fano_sm();
+        let llr = codeword_llrs(&[0; 7], 100, &[]);
+        let r = dec.decode(&llr, 10);
+        assert_eq!(r.bits, vec![0; 7]);
+        assert!(r.valid_codeword);
+        assert!(r.sums.iter().all(|&s| s > 0));
+    }
+
+    #[test]
+    fn single_error_corrected() {
+        let dec = fano_sm();
+        for flip in 0..7 {
+            let llr = codeword_llrs(&[0; 7], 100, &[flip]);
+            let r = dec.decode(&llr, 10);
+            assert_eq!(r.bits, vec![0; 7], "flip at {flip} not corrected");
+            assert!(r.valid_codeword);
+        }
+    }
+
+    #[test]
+    fn nonzero_codewords_of_fano_also_decode() {
+        // Rows of H are themselves... not codewords generally; instead use
+        // the known codeword structure: complement of a line is a codeword
+        // of the PG(2,2) code (each line meets it in an even count).
+        let code = PgLdpcCode::fano();
+        let line0: Vec<usize> = (0..7).filter(|&c| code.h.get(0, c)).collect();
+        let mut word = vec![1u8; 7];
+        for &p in &line0 {
+            word[p] = 0;
+        }
+        if code.is_codeword(&word) {
+            let dec = fano_sm();
+            for flip in 0..7 {
+                let llr = codeword_llrs(&word, 100, &[flip]);
+                let r = dec.decode(&llr, 12);
+                assert_eq!(r.bits, word, "flip {flip}");
+            }
+        }
+    }
+
+    #[test]
+    fn larger_pg_code_corrects_errors() {
+        // PG(2,4): N=21, degree 5 — the scaling direction the paper cites.
+        let dec = ReferenceDecoder::new(PgLdpcCode::new(2), MinsumVariant::SignMagnitude);
+        for flips in [vec![0], vec![5, 13]] {
+            let llr = codeword_llrs(&vec![0; 21], 100, &flips);
+            let r = dec.decode(&llr, 15);
+            assert_eq!(r.bits, vec![0; 21], "flips {flips:?}");
+        }
+    }
+
+    #[test]
+    fn paper_listing_variant_is_deterministic_datapath() {
+        // The PaperListing variant reproduces Listings 2-3 arithmetic; on
+        // clean high-confidence input it must keep the codeword.
+        let dec = ReferenceDecoder::new(PgLdpcCode::fano(), MinsumVariant::PaperListing);
+        let llr = codeword_llrs(&[0; 7], 100, &[]);
+        let r = dec.decode(&llr, 3);
+        assert_eq!(r.bits, vec![0; 7]);
+    }
+
+    #[test]
+    fn saturation_is_respected_everywhere() {
+        prop::check("llr saturation", 40, |rng| {
+            let dec = fano_sm();
+            let llr: Vec<i32> =
+                (0..7).map(|_| rng.range_i64(-40000, 40000) as i32).collect();
+            let r = dec.decode(&llr, 8);
+            prop::assert_prop(
+                r.sums
+                    .iter()
+                    .all(|&s| (crate::apps::ldpc::LLR_MIN..=crate::apps::ldpc::LLR_MAX)
+                        .contains(&s)),
+                format!("sums {:?}", r.sums),
+            )
+        });
+        let _ = Rng::new(0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Case study I: LDPC decoding, min-sum algorithm (paper §IV).
+//!
+//! The paper decodes a finite-projective-geometry LDPC code over
+//! GF(2, 2^s) with s = 1 — the Fano-plane code: N = 7 bits, 7 checks,
+//! degree-3 nodes (see [`crate::gf2::pg`]). Bit and check processing
+//! elements implement Listings 2–3 / Figs 7–8 bit-exactly, are wrapped by
+//! the [`crate::pe`] collector/distributor adapters, and are plugged onto
+//! a 4×4 mesh CONNECT-style NoC (Fig 9). The dotted arc of Fig 9 — the
+//! 2-FPGA partition — is [`mapper::fig9_partition`].
+//!
+//! Modules:
+//! * [`minsum`] — the monolithic reference decoder (flooding schedule,
+//!   saturating 16-bit LLR fixed point), the oracle for the NoC version.
+//! * [`nodes`] — check/bit node datapaths + their PE wrappers + the
+//!   Table I resource models.
+//! * [`mapper`] — Fig 9: place 7 + 7 node PEs, a source and a sink on the
+//!   mesh, run a decode over the NoC, optionally partitioned across two
+//!   FPGAs via quasi-SERDES.
+
+pub mod minsum;
+pub mod nodes;
+pub mod mapper;
+pub mod ber;
+
+pub use minsum::{MinsumVariant, ReferenceDecoder};
+pub use mapper::{LdpcNocDecoder, LdpcRunReport};
+
+/// Saturating 16-bit LLR fixed point used by every datapath (the FPGA
+/// nodes carry 8-bit inputs; sums of degree-4 values need 2 guard bits,
+/// we keep everything in i16 like the paper's wrapped datapaths).
+pub const LLR_MAX: i32 = i16::MAX as i32;
+pub const LLR_MIN: i32 = i16::MIN as i32 + 1; // symmetric range
+
+/// Clamp to the LLR range.
+#[inline]
+pub fn sat(x: i32) -> i32 {
+    x.clamp(LLR_MIN, LLR_MAX)
+}
+
+/// Encode an LLR as a 16-bit two's-complement wire word.
+#[inline]
+pub fn enc_llr(x: i32) -> u64 {
+    (sat(x) as i16 as u16) as u64
+}
+
+/// Decode a 16-bit two's-complement wire word.
+#[inline]
+pub fn dec_llr(w: u64) -> i32 {
+    (w as u16) as i16 as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llr_wire_roundtrip() {
+        for x in [-32767, -1000, -1, 0, 1, 42, 32767, 99999, -99999] {
+            let back = dec_llr(enc_llr(x));
+            assert_eq!(back, sat(x), "x={x}");
+        }
+    }
+}

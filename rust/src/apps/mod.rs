@@ -1,0 +1,16 @@
+//! The paper's three case studies, each mapped over the NoC through the
+//! [`crate::pe`] wrapper framework:
+//!
+//! * [`ldpc`] — Case I (§IV): min-sum decoding of a projective-geometry
+//!   LDPC code (the Fano-plane N = 7 code), bit/check node PEs on a 4×4
+//!   mesh (Fig 9), Tables I–II.
+//! * [`pfilter`] — Case II (§V): particle-filter object tracking —
+//!   histogram + Bhattacharyya-distance PEs orchestrated by a root node,
+//!   Table III.
+//! * [`bmvm`] — Case III (§VI): Boolean matrix-vector multiplication over
+//!   GF(2) via Ryan Williams' sub-quadratic preprocessing, with folding
+//!   and a multithreaded software baseline, Tables IV–V.
+
+pub mod ldpc;
+pub mod pfilter;
+pub mod bmvm;

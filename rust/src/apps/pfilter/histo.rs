@@ -1,0 +1,179 @@
+//! The shared datapath arithmetic of the particle-filter compute element
+//! (paper Fig 11): distance-weighted histograms and Bhattacharyya
+//! matching, all in integer fixed point so the NoC PEs and the reference
+//! tracker are bit-identical.
+//!
+//! * Histogram: 16 bins over 8-bit grayscale (`pix >> 4`), kernel-weighted
+//!   — pixels in the inner half of the ROI count double (the paper's
+//!   "distance weighted candidate histograms", as a 2-level integer
+//!   kernel).
+//! * Bhattacharyya: `rho = Σ_b isqrt(p_b · q_b)` — the Bhattacharyya
+//!   coefficient over *counts*; with equal-size ROIs this is a monotone
+//!   transform of the normalized coefficient, so particle *ranking* is
+//!   preserved while the FPGA datapath stays integer (one 18×18 multiply
+//!   + an iterative isqrt per bin).
+//! * Particle weight: `w = rho²` (sharpens the likelihood, still
+//!   integer).
+
+use super::video::Frame;
+
+/// Histogram bins (8-bit pixels, 16 levels).
+pub const BINS: usize = 16;
+
+/// Integer square root (floor), Newton's method on u64.
+pub fn isqrt(v: u64) -> u64 {
+    if v < 2 {
+        return v;
+    }
+    let mut x = v;
+    let mut y = (x + 1) / 2;
+    while y < x {
+        x = y;
+        y = (x + v / x) / 2;
+    }
+    x
+}
+
+/// Distance-weighted histogram of the square ROI of half-size `r` around
+/// `(cx, cy)` (out-of-frame pixels read as 0, like the FPGA line buffer).
+pub fn weighted_histogram(frame: &Frame, cx: i32, cy: i32, r: i32) -> [u32; BINS] {
+    let mut h = [0u32; BINS];
+    let inner = (r / 2) * (r / 2);
+    for dy in -r..=r {
+        for dx in -r..=r {
+            let p = frame.get(cx + dx, cy + dy);
+            let w = if dx * dx + dy * dy <= inner { 2 } else { 1 };
+            h[(p >> 4) as usize] += w;
+        }
+    }
+    h
+}
+
+/// Bhattacharyya coefficient over counts: `Σ isqrt(p_b · q_b)`.
+pub fn bhattacharyya_rho(p: &[u32; BINS], q: &[u32; BINS]) -> u64 {
+    let mut rho = 0u64;
+    for b in 0..BINS {
+        rho += isqrt(p[b] as u64 * q[b] as u64);
+    }
+    rho
+}
+
+/// Particle weight from the coefficient: `rho⁴` — a sharpened likelihood
+/// (the integer analogue of the usual `exp(−λ·d²)` with a small
+/// bandwidth), still order-preserving in rho. rho ≤ ROI kernel mass
+/// (< 2¹⁶), so the fourth power fits u64 with room to spare.
+#[inline]
+pub fn particle_weight(rho: u64) -> u64 {
+    let r2 = rho * rho;
+    r2 * r2
+}
+
+/// Weighted-mean center update: `(Σ w·x / Σ w, Σ w·y / Σ w)`; falls back
+/// to `prev` when all weights vanish.
+pub fn weighted_mean(
+    particles: &[(i32, i32)],
+    weights: &[u64],
+    prev: (i32, i32),
+) -> (i32, i32) {
+    debug_assert_eq!(particles.len(), weights.len());
+    let wsum: u128 = weights.iter().map(|&w| w as u128).sum();
+    if wsum == 0 {
+        return prev;
+    }
+    let mut sx = 0i128;
+    let mut sy = 0i128;
+    for (&(x, y), &w) in particles.iter().zip(weights) {
+        sx += x as i128 * w as i128;
+        sy += y as i128 * w as i128;
+    }
+    ((sx / wsum as i128) as i32, (sy / wsum as i128) as i32)
+}
+
+/// Deterministic Gaussian particle proposal around `center` — shared by
+/// the reference tracker and the NoC root node so both see identical
+/// particle sets.
+pub fn sample_particles(
+    rng: &mut crate::util::Rng,
+    center: (i32, i32),
+    n: usize,
+    sigma: f64,
+    bounds: (usize, usize),
+) -> Vec<(i32, i32)> {
+    (0..n)
+        .map(|_| {
+            let x = (center.0 as f64 + sigma * rng.normal()).round() as i32;
+            let y = (center.1 as f64 + sigma * rng.normal()).round() as i32;
+            (
+                x.clamp(0, bounds.0 as i32 - 1),
+                y.clamp(0, bounds.1 as i32 - 1),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::pfilter::video::synthetic_video;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn isqrt_exact_on_squares_and_floors() {
+        for v in 0..2000u64 {
+            let r = isqrt(v * v);
+            assert_eq!(r, v);
+            if v >= 1 {
+                // v² + 1 < (v+1)² for v ≥ 1, so the floor stays at v.
+                assert_eq!(isqrt(v * v + 1), v, "floor at {v}");
+            }
+        }
+        prop::check("isqrt floor", 200, |rng| {
+            let v = rng.next_u64() >> 16;
+            let r = isqrt(v);
+            prop::assert_prop(r * r <= v && (r + 1) * (r + 1) > v, format!("v={v} r={r}"))
+        });
+    }
+
+    #[test]
+    fn histogram_total_weight_is_constant_in_frame_interior() {
+        let v = synthetic_video(64, 48, 2, 6, 5);
+        let r = 6;
+        let h1 = weighted_histogram(&v.frames[0], 20, 20, r);
+        let h2 = weighted_histogram(&v.frames[0], 40, 30, r);
+        let t1: u32 = h1.iter().sum();
+        let t2: u32 = h2.iter().sum();
+        assert_eq!(t1, t2, "same kernel mass everywhere in-frame");
+        assert!(t1 as i32 >= (2 * r + 1) * (2 * r + 1));
+    }
+
+    #[test]
+    fn rho_is_maximal_for_matching_histograms() {
+        let v = synthetic_video(64, 48, 2, 6, 7);
+        let (cx, cy) = v.truth[0];
+        let target = weighted_histogram(&v.frames[0], cx, cy, 6);
+        let on = bhattacharyya_rho(&target, &target);
+        let off = bhattacharyya_rho(
+            &target,
+            &weighted_histogram(&v.frames[0], 5, 5, 6),
+        );
+        assert!(on > off, "self-match {on} must beat background {off}");
+    }
+
+    #[test]
+    fn weighted_mean_basics() {
+        let ps = [(0, 0), (10, 20)];
+        assert_eq!(weighted_mean(&ps, &[1, 1], (9, 9)), (5, 10));
+        assert_eq!(weighted_mean(&ps, &[0, 5], (9, 9)), (10, 20));
+        assert_eq!(weighted_mean(&ps, &[0, 0], (9, 9)), (9, 9));
+    }
+
+    #[test]
+    fn particles_respect_bounds_and_seed() {
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        let pa = sample_particles(&mut a, (5, 5), 100, 50.0, (32, 24));
+        let pb = sample_particles(&mut b, (5, 5), 100, 50.0, (32, 24));
+        assert_eq!(pa, pb);
+        assert!(pa.iter().all(|&(x, y)| (0..32).contains(&x) && (0..24).contains(&y)));
+    }
+}

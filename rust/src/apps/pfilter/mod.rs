@@ -1,0 +1,174 @@
+//! Case study II: particle-filter based object tracking (paper §V).
+//!
+//! Sequential-importance-sampling tracking with color-histogram
+//! observation: per frame, N Gaussian-proposed particles are weighted by
+//! the Bhattacharyya match between the reference histogram and each
+//! particle's distance-weighted candidate histogram, and the new center is
+//! the weighted mean (the paper's §V algorithm box, from their VLSID'15
+//! implementation [9]).
+//!
+//! Mapping over the NoC (Fig 10): worker compute elements (Fig 11) hold
+//! the frame and reference histogram and evaluate particles; the root
+//! node on Node 0 (Fig 12) orchestrates — frame DMA, particle scatter,
+//! response gather, weighted-mean update. "The approach makes exploring
+//! variations easier": [`PfilterNocTracker`] takes the worker count and
+//! mesh size as parameters, and the partitioner can split the same design
+//! across FPGAs untouched.
+
+pub mod video;
+pub mod histo;
+pub mod filter;
+pub mod pe;
+
+use crate::noc::flit::NodeId;
+use crate::noc::{Network, NocConfig, Topology};
+use crate::partition::Partition;
+use crate::pe::PeSystem;
+use crate::serdes::SerdesConfig;
+
+pub use filter::{mean_error, track_reference, TrackTrace, TrackerParams};
+pub use video::{synthetic_video, Video};
+
+/// Tracking-over-NoC run report.
+#[derive(Clone, Debug)]
+pub struct PfilterRunReport {
+    /// Estimated center per frame (index 0 = initial center).
+    pub centers: Vec<(i32, i32)>,
+    pub cycles: u64,
+    pub flits_injected: u64,
+    pub flits_delivered: u64,
+}
+
+/// The Fig 10 system: root + workers + sink on a mesh NoC.
+pub struct PfilterNocTracker {
+    pub topo: Topology,
+    pub n_workers: usize,
+    pub params: TrackerParams,
+}
+
+impl PfilterNocTracker {
+    /// Workers on a mesh sized to fit root + workers + sink.
+    pub fn on_mesh(n_workers: usize, params: TrackerParams) -> Self {
+        let need = n_workers + 2;
+        let w = (need as f64).sqrt().ceil() as usize;
+        let h = need.div_ceil(w);
+        PfilterNocTracker { topo: Topology::Mesh { w: w.max(2), h: h.max(1) }, n_workers, params }
+    }
+
+    /// Endpoint of the root node (paper: Node 0).
+    pub fn root_ep(&self) -> NodeId {
+        0
+    }
+
+    /// Worker endpoints 1..=n, sink at the last endpoint.
+    pub fn worker_eps(&self) -> Vec<NodeId> {
+        (1..=self.n_workers).collect()
+    }
+
+    pub fn sink_ep(&self) -> NodeId {
+        self.topo.n_endpoints() - 1
+    }
+
+    /// Track `video` from `init` over the NoC, optionally partitioned.
+    pub fn track(
+        &self,
+        video: &Video,
+        init: (i32, i32),
+        partition: Option<(&Partition, SerdesConfig)>,
+    ) -> PfilterRunReport {
+        let mut sys = PeSystem::new(Network::new(&self.topo, NocConfig::paper()));
+        if let Some((p, serdes)) = partition {
+            p.apply(&mut sys.net, serdes);
+        }
+        let workers = self.worker_eps();
+        let sink = self.sink_ep();
+        assert!(sink > self.n_workers, "mesh too small");
+        for &w in &workers {
+            sys.attach(w, Box::new(pe::PfWorkerPe::new(self.root_ep())));
+        }
+        sys.attach(
+            self.root_ep(),
+            Box::new(pe::PfRootPe::new(
+                video.clone(),
+                init,
+                self.params,
+                workers,
+                sink,
+            )),
+        );
+        let cycles = sys.run(500_000_000);
+        // Read the per-frame centers from the sink.
+        let mut tagged: Vec<(u64, i32, i32)> = Vec::new();
+        let mut flits = Vec::new();
+        while let Some(f) = sys.net.eject(sink) {
+            flits.push(f);
+        }
+        // Center messages are 48-bit → 3 flits; group by epoch (frame).
+        let mut by_epoch: std::collections::HashMap<u32, Vec<crate::noc::Flit>> =
+            std::collections::HashMap::new();
+        for f in flits {
+            by_epoch.entry(f.tag >> 8).or_default().push(f);
+        }
+        for (_, group) in by_epoch {
+            let payload = crate::noc::flit::depacketize(&group, 48, 16);
+            let frame = payload[0] & 0xFFFF;
+            let x = ((payload[0] >> 16) & 0xFFFF) as u16 as i16 as i32;
+            let y = ((payload[0] >> 32) & 0xFFFF) as u16 as i16 as i32;
+            tagged.push((frame, x, y));
+        }
+        tagged.sort_unstable();
+        let mut centers = vec![init];
+        for (frame, x, y) in tagged {
+            assert_eq!(frame as usize, centers.len(), "missing frame center");
+            centers.push((x, y));
+        }
+        let st = sys.net.stats();
+        PfilterRunReport {
+            centers,
+            cycles,
+            flits_injected: st.injected,
+            flits_delivered: st.delivered,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_setup() -> (Video, TrackerParams) {
+        let v = synthetic_video(32, 24, 5, 4, 21);
+        let p = TrackerParams { n_particles: 16, sigma: 2.5, roi_r: 4, seed: 77 };
+        (v, p)
+    }
+
+    #[test]
+    fn noc_tracker_matches_reference_bit_exact() {
+        let (v, p) = small_setup();
+        let reference = track_reference(&v, v.truth[0], &p);
+        let noc = PfilterNocTracker::on_mesh(4, p);
+        let run = noc.track(&v, v.truth[0], None);
+        assert_eq!(run.centers, reference.centers, "NoC must reproduce the oracle");
+        assert!(run.cycles > 0);
+        assert!(run.flits_delivered > 100, "frame DMA must traverse the NoC");
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (v, p) = small_setup();
+        let a = PfilterNocTracker::on_mesh(2, p).track(&v, v.truth[0], None);
+        let b = PfilterNocTracker::on_mesh(7, p).track(&v, v.truth[0], None);
+        assert_eq!(a.centers, b.centers);
+    }
+
+    #[test]
+    fn partitioned_tracker_same_centers_more_cycles() {
+        let (v, p) = small_setup();
+        let noc = PfilterNocTracker::on_mesh(4, p);
+        let mono = noc.track(&v, v.truth[0], None);
+        let part = Partition::balanced(&noc.topo.build(), 2, 3);
+        let split = noc.track(&v, v.truth[0], Some((&part, SerdesConfig::default())));
+        assert_eq!(split.centers, mono.centers);
+        assert!(split.cycles > mono.cycles);
+    }
+}

@@ -1,0 +1,342 @@
+//! Phase-1 compiler-driven automation (paper §II-A-1, Fig 2): extract a
+//! dataflow graph from a straight-line high-level description, partition
+//! it, and (in [`crate::mips`]) compile the parts to a minimal MIPS
+//! instruction set with network push/pull instructions.
+//!
+//! The input language is deliberately the paper's "straight line code":
+//!
+//! ```text
+//! input a;
+//! input b;
+//! t1 = a + b;
+//! t2 = a * 3;
+//! y  = t1 ^ t2;
+//! output y;
+//! ```
+//!
+//! Operators: `+ - * & | ^ << >> min max` over u32 (wrapping). The DFG
+//! nodes are inputs, constants and binary ops; [`Dfg::eval`] is the
+//! sequential oracle, [`Dfg::partition`] assigns nodes to processors
+//! level by level (respecting precedence so every cross-partition edge
+//! becomes exactly one push/pull pair), and [`Dfg::levels`] is the ASAP
+//! schedule the codegen orders instructions with.
+
+use std::collections::HashMap;
+
+/// Binary operators of the straight-line language.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Min,
+    Max,
+}
+
+impl Op {
+    pub fn apply(self, a: u32, b: u32) -> u32 {
+        match self {
+            Op::Add => a.wrapping_add(b),
+            Op::Sub => a.wrapping_sub(b),
+            Op::Mul => a.wrapping_mul(b),
+            Op::And => a & b,
+            Op::Or => a | b,
+            Op::Xor => a ^ b,
+            Op::Shl => a.wrapping_shl(b & 31),
+            Op::Shr => a.wrapping_shr(b & 31),
+            Op::Min => a.min(b),
+            Op::Max => a.max(b),
+        }
+    }
+
+    fn parse(tok: &str) -> Option<Op> {
+        Some(match tok {
+            "+" => Op::Add,
+            "-" => Op::Sub,
+            "*" => Op::Mul,
+            "&" => Op::And,
+            "|" => Op::Or,
+            "^" => Op::Xor,
+            "<<" => Op::Shl,
+            ">>" => Op::Shr,
+            "min" => Op::Min,
+            "max" => Op::Max,
+            _ => return None,
+        })
+    }
+}
+
+/// A DFG node.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Node {
+    /// External input (argument index).
+    Input(usize),
+    /// Constant.
+    Const(u32),
+    /// Binary operation over two earlier nodes.
+    Bin(Op, usize, usize),
+}
+
+/// A dataflow graph extracted from straight-line code.
+#[derive(Clone, Debug)]
+pub struct Dfg {
+    pub nodes: Vec<Node>,
+    /// Node index of each declared output, with its name.
+    pub outputs: Vec<(String, usize)>,
+    /// Input names in argument order.
+    pub inputs: Vec<String>,
+}
+
+/// Parse straight-line code (see module docs). Errors are returned as
+/// human-readable strings (this is a build-time tool).
+pub fn parse(src: &str) -> Result<Dfg, String> {
+    let mut nodes = Vec::new();
+    let mut env: HashMap<String, usize> = HashMap::new();
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    for (lno, raw) in src.lines().enumerate() {
+        let line = raw.split("//").next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        let line = line
+            .strip_suffix(';')
+            .ok_or_else(|| format!("line {}: missing ';'", lno + 1))?
+            .trim();
+        if let Some(name) = line.strip_prefix("input ") {
+            let name = name.trim().to_string();
+            if env.contains_key(&name) {
+                return Err(format!("line {}: '{name}' redefined", lno + 1));
+            }
+            env.insert(name.clone(), nodes.len());
+            nodes.push(Node::Input(inputs.len()));
+            inputs.push(name);
+        } else if let Some(name) = line.strip_prefix("output ") {
+            let name = name.trim();
+            let id = *env
+                .get(name)
+                .ok_or_else(|| format!("line {}: unknown output '{name}'", lno + 1))?;
+            outputs.push((name.to_string(), id));
+        } else {
+            // name = a op b
+            let (lhs, rhs) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected assignment", lno + 1))?;
+            let lhs = lhs.trim().to_string();
+            if env.contains_key(&lhs) {
+                return Err(format!("line {}: '{lhs}' reassigned (SSA only)", lno + 1));
+            }
+            let toks: Vec<&str> = rhs.split_whitespace().collect();
+            let operand = |tok: &str, nodes: &mut Vec<Node>| -> Result<usize, String> {
+                if let Ok(c) = tok.parse::<u32>() {
+                    nodes.push(Node::Const(c));
+                    Ok(nodes.len() - 1)
+                } else {
+                    env.get(tok)
+                        .copied()
+                        .ok_or_else(|| format!("line {}: unknown name '{tok}'", lno + 1))
+                }
+            };
+            let id = match toks.as_slice() {
+                [a] => operand(a, &mut nodes)?,
+                [a, op, b] => {
+                    let op = Op::parse(op)
+                        .ok_or_else(|| format!("line {}: bad operator '{op}'", lno + 1))?;
+                    let ia = operand(a, &mut nodes)?;
+                    let ib = operand(b, &mut nodes)?;
+                    nodes.push(Node::Bin(op, ia, ib));
+                    nodes.len() - 1
+                }
+                _ => return Err(format!("line {}: expected 'x = a op b'", lno + 1)),
+            };
+            env.insert(lhs, id);
+        }
+    }
+    if outputs.is_empty() {
+        return Err("no outputs declared".into());
+    }
+    Ok(Dfg { nodes, outputs, inputs })
+}
+
+impl Dfg {
+    /// Sequential oracle: evaluate with the given input values.
+    pub fn eval(&self, args: &[u32]) -> Vec<u32> {
+        assert_eq!(args.len(), self.inputs.len());
+        let mut vals = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let v = match *n {
+                Node::Input(i) => args[i],
+                Node::Const(c) => c,
+                Node::Bin(op, a, b) => op.apply(vals[a], vals[b]),
+            };
+            vals.push(v);
+        }
+        self.outputs.iter().map(|&(_, id)| vals[id]).collect()
+    }
+
+    /// ASAP level of each node (inputs/consts at level 0).
+    pub fn levels(&self) -> Vec<usize> {
+        let mut lv = vec![0usize; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Node::Bin(_, a, b) = *n {
+                lv[i] = lv[a].max(lv[b]) + 1;
+            }
+        }
+        lv
+    }
+
+    /// Partition nodes over `p` processors: level-ordered round-robin of
+    /// the compute nodes (inputs/consts are co-located with their first
+    /// consumer). Every cross-processor value edge becomes one
+    /// push/pull pair in the generated code.
+    pub fn partition(&self, p: usize) -> Vec<usize> {
+        assert!(p >= 1);
+        let lv = self.levels();
+        let mut order: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| matches!(self.nodes[i], Node::Bin(..)))
+            .collect();
+        order.sort_by_key(|&i| (lv[i], i));
+        let mut assign = vec![usize::MAX; self.nodes.len()];
+        for (pos, &i) in order.iter().enumerate() {
+            assign[i] = pos % p;
+        }
+        // Leaves live with their first consumer (or proc 0 if unused).
+        for i in 0..self.nodes.len() {
+            if assign[i] != usize::MAX {
+                continue;
+            }
+            let consumer = self.nodes.iter().enumerate().find_map(|(j, n)| match *n {
+                Node::Bin(_, a, b) if a == i || b == i => Some(j),
+                _ => None,
+            });
+            assign[i] = consumer.map(|j| assign[j]).unwrap_or(0);
+        }
+        assign
+    }
+
+    /// Cross-partition value edges (producer node, consumer node).
+    pub fn cut_edges(&self, assign: &[usize]) -> Vec<(usize, usize)> {
+        let mut cuts = Vec::new();
+        for (j, n) in self.nodes.iter().enumerate() {
+            if let Node::Bin(_, a, b) = *n {
+                for src in [a, b] {
+                    if assign[src] != assign[j] {
+                        cuts.push((src, j));
+                    }
+                }
+            }
+        }
+        cuts
+    }
+}
+
+/// Generate a random straight-line program (shared by tests and the
+/// randomized compiler benches).
+pub fn random_program(rng: &mut crate::util::Rng, n_ops: usize) -> Dfg {
+    assert!(n_ops >= 1);
+    let n_in = 2 + rng.index(3);
+    let mut src = String::new();
+    for i in 0..n_in {
+        src.push_str(&format!("input x{i};\n"));
+    }
+    let ops = ["+", "-", "*", "&", "|", "^", "min", "max"];
+    let mut names: Vec<String> = (0..n_in).map(|i| format!("x{i}")).collect();
+    for t in 0..n_ops {
+        let a = rng.choose(&names).clone();
+        let b = if rng.chance(0.2) {
+            format!("{}", rng.below(100))
+        } else {
+            rng.choose(&names).clone()
+        };
+        let op = rng.choose(&ops);
+        src.push_str(&format!("t{t} = {a} {op} {b};\n"));
+        names.push(format!("t{t}"));
+    }
+    let n_out = 1 + rng.index(3.min(n_ops));
+    for o in 0..n_out {
+        src.push_str(&format!("output t{};\n", n_ops - 1 - o));
+    }
+    parse(&src).expect("generated program parses")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const SAMPLE: &str = "
+        input a;
+        input b;
+        t1 = a + b;     // sum
+        t2 = a * 3;
+        t3 = t1 min t2;
+        y  = t3 ^ b;
+        output y;
+    ";
+
+    #[test]
+    fn parse_and_eval() {
+        let g = parse(SAMPLE).unwrap();
+        assert_eq!(g.inputs, vec!["a", "b"]);
+        assert_eq!(g.outputs.len(), 1);
+        // a=5, b=9: t1=14, t2=15, t3=14, y=14^9=7
+        assert_eq!(g.eval(&[5, 9]), vec![7]);
+    }
+
+    #[test]
+    fn parse_errors_are_informative() {
+        assert!(parse("x = a + b;\noutput x;").unwrap_err().contains("unknown name"));
+        assert!(parse("input a;\na = a + a;\noutput a;")
+            .unwrap_err()
+            .contains("reassigned"));
+        assert!(parse("input a;").unwrap_err().contains("no outputs"));
+        assert!(parse("input a\noutput a;").unwrap_err().contains("';'"));
+    }
+
+    #[test]
+    fn levels_respect_precedence() {
+        let g = parse(SAMPLE).unwrap();
+        let lv = g.levels();
+        for (j, n) in g.nodes.iter().enumerate() {
+            if let Node::Bin(_, a, b) = *n {
+                assert!(lv[j] > lv[a] && lv[j] > lv[b]);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_and_cut_edges_are_real() {
+        let g = parse(SAMPLE).unwrap();
+        for p in 1..=4 {
+            let assign = g.partition(p);
+            assert!(assign.iter().all(|&x| x < p));
+            let cuts = g.cut_edges(&assign);
+            if p == 1 {
+                assert!(cuts.is_empty());
+            }
+            for (s, d) in cuts {
+                assert_ne!(assign[s], assign[d]);
+            }
+        }
+    }
+
+    #[test]
+    fn random_programs_eval_deterministically() {
+        prop::check("dfg eval deterministic", 20, |rng| {
+            let g = random_program(rng, 20);
+            let args: Vec<u32> = (0..g.inputs.len()).map(|_| rng.next_u32()).collect();
+            prop::assert_prop(g.eval(&args) == g.eval(&args), "determinism")
+        });
+    }
+
+    #[test]
+    fn constants_fold_into_graph() {
+        let g = parse("input a;\ny = a << 3;\noutput y;").unwrap();
+        assert_eq!(g.eval(&[5]), vec![40]);
+    }
+}

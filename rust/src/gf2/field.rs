@@ -1,0 +1,176 @@
+//! GF(2^s) finite-field arithmetic for small s (1..=8).
+//!
+//! The paper's LDPC case study uses *finite projective geometry* codes "in
+//! GF(2, 2^s) with s = 1" [Kou/Lin/Fossorier]. Constructing PG(2, q) for
+//! q = 2^s requires arithmetic in GF(q); this module provides it with
+//! plain shift-xor reduction (fields this small need no log tables on a
+//! host CPU, and the FPGA analogue is a handful of LUTs).
+
+/// The finite field GF(2^s), elements represented as the low `s` bits of a
+/// `u16` (polynomial basis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Gf2e {
+    s: u32,
+    /// Irreducible reduction polynomial, including the leading x^s term.
+    poly: u32,
+}
+
+/// Irreducible polynomials over GF(2) for degrees 1..=8 (leading term
+/// included). Degree 8 is the AES polynomial.
+const IRREDUCIBLE: [u32; 9] = [
+    0,           // degree 0: unused
+    0b10,        // x            (GF(2): reduction mod 2)
+    0b111,       // x^2+x+1
+    0b1011,      // x^3+x+1
+    0b10011,     // x^4+x+1
+    0b100101,    // x^5+x^2+1
+    0b1000011,   // x^6+x+1
+    0b10000011,  // x^7+x+1
+    0b100011011, // x^8+x^4+x^3+x+1
+];
+
+impl Gf2e {
+    /// The field GF(2^s), 1 <= s <= 8.
+    pub fn new(s: u32) -> Self {
+        assert!((1..=8).contains(&s), "GF(2^s) supported for s in 1..=8");
+        Gf2e { s, poly: IRREDUCIBLE[s as usize] }
+    }
+
+    /// Field order q = 2^s.
+    pub fn order(&self) -> u32 {
+        1 << self.s
+    }
+
+    /// Addition = XOR.
+    #[inline]
+    pub fn add(&self, a: u16, b: u16) -> u16 {
+        debug_assert!(self.in_field(a) && self.in_field(b));
+        a ^ b
+    }
+
+    /// Carry-less multiply then reduce by the field polynomial.
+    pub fn mul(&self, a: u16, b: u16) -> u16 {
+        debug_assert!(self.in_field(a) && self.in_field(b));
+        let mut acc: u32 = 0;
+        let (a, mut b) = (a as u32, b as u32);
+        let mut shift = 0;
+        while b != 0 {
+            if b & 1 == 1 {
+                acc ^= a << shift;
+            }
+            b >>= 1;
+            shift += 1;
+        }
+        // Reduce: degree of acc is at most 2s-2.
+        for d in (self.s..=(2 * self.s).saturating_sub(2)).rev() {
+            if (acc >> d) & 1 == 1 {
+                acc ^= self.poly << (d - self.s);
+            }
+        }
+        acc as u16
+    }
+
+    /// a^e by square-and-multiply.
+    pub fn pow(&self, a: u16, mut e: u32) -> u16 {
+        let mut base = a;
+        let mut acc: u16 = 1;
+        while e != 0 {
+            if e & 1 == 1 {
+                acc = self.mul(acc, base);
+            }
+            base = self.mul(base, base);
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse of a != 0 (a^(q-2)).
+    pub fn inv(&self, a: u16) -> u16 {
+        assert!(a != 0, "zero has no inverse");
+        self.pow(a, self.order() - 2)
+    }
+
+    /// Is `a` a valid field element?
+    #[inline]
+    pub fn in_field(&self, a: u16) -> bool {
+        (a as u32) < self.order()
+    }
+
+    /// All field elements, 0..q.
+    pub fn elements(&self) -> impl Iterator<Item = u16> {
+        0..self.order() as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    fn rand_elem(f: &Gf2e, rng: &mut Rng) -> u16 {
+        rng.below(f.order() as u64) as u16
+    }
+
+    #[test]
+    fn gf4_multiplication_table() {
+        // GF(4) with x^2+x+1: elements {0,1,w,w+1}, w*w = w+1, w*(w+1) = 1.
+        let f = Gf2e::new(2);
+        assert_eq!(f.mul(2, 2), 3);
+        assert_eq!(f.mul(2, 3), 1);
+        assert_eq!(f.mul(3, 3), 2);
+        assert_eq!(f.inv(2), 3);
+        assert_eq!(f.inv(3), 2);
+    }
+
+    #[test]
+    fn field_axioms_randomized() {
+        prop::check("GF(2^s) axioms", 200, |rng| {
+            let s = 1 + rng.index(8) as u32;
+            let f = Gf2e::new(s);
+            let (a, b, c) = (rand_elem(&f, rng), rand_elem(&f, rng), rand_elem(&f, rng));
+            // commutativity, associativity, distributivity, identities
+            let ok = f.mul(a, b) == f.mul(b, a)
+                && f.mul(a, f.mul(b, c)) == f.mul(f.mul(a, b), c)
+                && f.mul(a, f.add(b, c)) == f.add(f.mul(a, b), f.mul(a, c))
+                && f.mul(a, 1) == a
+                && f.add(a, 0) == a
+                && f.mul(a, 0) == 0;
+            prop::assert_prop(ok, format!("s={s} a={a} b={b} c={c}"))
+        });
+    }
+
+    #[test]
+    fn every_nonzero_element_invertible() {
+        for s in 1..=8 {
+            let f = Gf2e::new(s);
+            for a in 1..f.order() as u16 {
+                let ai = f.inv(a);
+                assert_eq!(f.mul(a, ai), 1, "s={s} a={a}");
+            }
+        }
+    }
+
+    #[test]
+    fn closure() {
+        for s in 1..=6 {
+            let f = Gf2e::new(s);
+            for a in f.elements() {
+                for b in f.elements() {
+                    assert!(f.in_field(f.mul(a, b)));
+                    assert!(f.in_field(f.add(a, b)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multiplicative_group_order() {
+        // a^(q-1) == 1 for all a != 0.
+        for s in 1..=8 {
+            let f = Gf2e::new(s);
+            for a in 1..f.order() as u16 {
+                assert_eq!(f.pow(a, f.order() - 1), 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! GF(2) / GF(2^s) algebra and projective-geometry LDPC code construction.
+//!
+//! Substrate for two of the paper's case studies:
+//!
+//! * Case I (LDPC decoding) uses *finite projective geometry* LDPC codes in
+//!   GF(2, 2^s) with s = 1 — the incidence structure of the projective
+//!   plane PG(2, 2) (the Fano plane) gives the paper's N = 7, degree-3
+//!   bit/check node graph. [`field`] implements GF(2^s) arithmetic and
+//!   [`pg`] builds PG(2, q) incidence matrices for any small s.
+//! * Case III (Boolean matrix-vector multiplication) needs dense GF(2)
+//!   linear algebra: [`Gf2Matrix`] packs rows as [`BitVec`]s with
+//!   AND+parity mat-vec, the correctness oracle for Williams'
+//!   sub-quadratic algorithm in [`crate::apps::bmvm`].
+
+pub mod field;
+pub mod pg;
+
+use crate::util::bits::BitVec;
+use crate::util::Rng;
+
+/// A dense matrix over GF(2), rows packed as [`BitVec`]s.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Gf2Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<BitVec>,
+}
+
+impl std::fmt::Debug for Gf2Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Gf2Matrix {}x{}", self.rows, self.cols)?;
+        for r in 0..self.rows.min(16) {
+            for c in 0..self.cols.min(64) {
+                f.write_str(if self.get(r, c) { "1" } else { "." })?;
+            }
+            f.write_str("\n")?;
+        }
+        Ok(())
+    }
+}
+
+impl Gf2Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Gf2Matrix { rows, cols, data: vec![BitVec::zeros(cols); rows] }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Gf2Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, true);
+        }
+        m
+    }
+
+    /// Uniformly random matrix.
+    pub fn random(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Gf2Matrix {
+            rows,
+            cols,
+            data: (0..rows).map(|_| BitVec::random(cols, rng)).collect(),
+        }
+    }
+
+    /// Build from a row-major `0/1` byte grid (test convenience).
+    pub fn from_rows(rows: &[&[u8]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut m = Gf2Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m.set(i, j, v != 0);
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.data[r].get(c)
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.data[r].set(c, v);
+    }
+
+    /// Row as a packed bit vector.
+    pub fn row(&self, r: usize) -> &BitVec {
+        &self.data[r]
+    }
+
+    /// `y = A·v` over GF(2): each output bit is `parity(row & v)`.
+    pub fn matvec(&self, v: &BitVec) -> BitVec {
+        assert_eq!(v.len(), self.cols, "dimension mismatch");
+        let mut y = BitVec::zeros(self.rows);
+        for r in 0..self.rows {
+            if self.data[r].and(v).parity() {
+                y.set(r, true);
+            }
+        }
+        y
+    }
+
+    /// `C = A·B` over GF(2) (schoolbook; used only in tests/oracles).
+    pub fn matmul(&self, b: &Gf2Matrix) -> Gf2Matrix {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Gf2Matrix::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                if self.get(i, k) {
+                    let row = c.data[i].clone();
+                    let mut acc = row;
+                    acc.xor_assign(&b.data[k]);
+                    c.data[i] = acc;
+                }
+            }
+        }
+        c
+    }
+
+    /// Extract the k×k tile at block position (bi, bj) as a row-major
+    /// `Vec<u64>` of k rows (k <= 64). Out-of-range entries are zero —
+    /// Williams preprocessing tiles matrices whose n need not divide k.
+    pub fn tile(&self, bi: usize, bj: usize, k: usize) -> Vec<u64> {
+        assert!(k <= 64);
+        let mut out = vec![0u64; k];
+        for r in 0..k {
+            let rr = bi * k + r;
+            if rr >= self.rows {
+                break;
+            }
+            for c in 0..k {
+                let cc = bj * k + c;
+                if cc < self.cols && self.get(rr, cc) {
+                    out[r] |= 1 << c;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Gf2Matrix {
+        let mut t = Gf2Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    t.set(c, r, true);
+                }
+            }
+        }
+        t
+    }
+
+    /// Row and column weights (used to validate PG-LDPC regularity).
+    pub fn row_weights(&self) -> Vec<u32> {
+        self.data.iter().map(|r| r.popcount()).collect()
+    }
+
+    pub fn col_weights(&self) -> Vec<u32> {
+        let mut w = vec![0u32; self.cols];
+        for r in 0..self.rows {
+            for (c, wc) in w.iter_mut().enumerate() {
+                if self.get(r, c) {
+                    *wc += 1;
+                }
+            }
+        }
+        w
+    }
+}
+
+/// Multiply a k×k tile (rows as u64 masks, as produced by
+/// [`Gf2Matrix::tile`]) by a k-bit vector: `y_r = parity(tile[r] & v)`.
+///
+/// This is the primitive Williams' preprocessing tabulates: the LUT stores
+/// `tile_matvec(tile, p)` for every k-bit `p`.
+#[inline]
+pub fn tile_matvec(tile: &[u64], v: u64) -> u64 {
+    let mut y = 0u64;
+    for (r, &row) in tile.iter().enumerate() {
+        y |= (((row & v).count_ones() as u64) & 1) << r;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn identity_matvec_is_identity() {
+        let mut rng = Rng::new(1);
+        let i = Gf2Matrix::identity(70);
+        for _ in 0..10 {
+            let v = BitVec::random(70, &mut rng);
+            assert_eq!(i.matvec(&v), v);
+        }
+    }
+
+    #[test]
+    fn matvec_linearity() {
+        // A(u ^ v) == Au ^ Av — the defining property over GF(2).
+        prop::check("matvec linear", 50, |rng| {
+            let n = 1 + rng.index(100);
+            let m = 1 + rng.index(100);
+            let a = Gf2Matrix::random(m, n, rng);
+            let u = BitVec::random(n, rng);
+            let v = BitVec::random(n, rng);
+            let mut uv = u.clone();
+            uv.xor_assign(&v);
+            let mut lhs = a.matvec(&u);
+            lhs.xor_assign(&a.matvec(&v));
+            prop::assert_prop(lhs == a.matvec(&uv), format!("n={n} m={m}"))
+        });
+    }
+
+    #[test]
+    fn matmul_associates_with_matvec() {
+        prop::check("(AB)v == A(Bv)", 20, |rng| {
+            let n = 1 + rng.index(24);
+            let m = 1 + rng.index(24);
+            let p = 1 + rng.index(24);
+            let a = Gf2Matrix::random(m, n, rng);
+            let b = Gf2Matrix::random(n, p, rng);
+            let v = BitVec::random(p, rng);
+            let lhs = a.matmul(&b).matvec(&v);
+            let rhs = a.matvec(&b.matvec(&v));
+            prop::assert_prop(lhs == rhs, format!("{m}x{n}x{p}"))
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Gf2Matrix::random(33, 65, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn tile_extraction_matches_entries() {
+        let mut rng = Rng::new(9);
+        let a = Gf2Matrix::random(16, 16, &mut rng);
+        let k = 4;
+        for bi in 0..4 {
+            for bj in 0..4 {
+                let t = a.tile(bi, bj, k);
+                for r in 0..k {
+                    for c in 0..k {
+                        let bit = (t[r] >> c) & 1 == 1;
+                        assert_eq!(bit, a.get(bi * k + r, bj * k + c));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_matvec_matches_dense() {
+        prop::check("tile matvec", 100, |rng| {
+            let k = 1 + rng.index(8);
+            let a = Gf2Matrix::random(k, k, rng);
+            let tile = a.tile(0, 0, k);
+            let vbits = rng.below(1 << k);
+            let mut v = BitVec::zeros(k);
+            v.insert_u64(0, k, vbits);
+            let dense = a.matvec(&v).extract_u64(0, k);
+            prop::assert_prop(tile_matvec(&tile, vbits) == dense, format!("k={k}"))
+        });
+    }
+
+    #[test]
+    fn tile_out_of_range_is_zero_padded() {
+        let a = Gf2Matrix::identity(6);
+        let t = a.tile(1, 1, 4); // covers rows/cols 4..8, matrix is 6x6
+        assert_eq!(t[0], 0b0001); // (4,4)
+        assert_eq!(t[1], 0b0010); // (5,5)
+        assert_eq!(t[2], 0); // row 6 out of range
+        assert_eq!(t[3], 0);
+    }
+
+    #[test]
+    fn from_rows_and_weights() {
+        let m = Gf2Matrix::from_rows(&[&[1, 1, 0], &[0, 1, 1]]);
+        assert_eq!(m.row_weights(), vec![2, 2]);
+        assert_eq!(m.col_weights(), vec![1, 2, 1]);
+    }
+}

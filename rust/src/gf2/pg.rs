@@ -1,0 +1,221 @@
+//! Projective-geometry LDPC codes: PG(2, 2^s) incidence matrices.
+//!
+//! The paper (Section IV) decodes a finite-projective-geometry LDPC code in
+//! GF(2, 2^s) with s = 1, i.e. the incidence structure of PG(2, 2) — the
+//! Fano plane: 7 points, 7 lines, every line through 3 points, every point
+//! on 3 lines. Points are code bits, lines are parity checks; that yields
+//! the paper's N = 7 decoder with degree-3 bit and check nodes (Listings
+//! 2-3 use exactly 3 inputs).
+//!
+//! The construction generalizes: PG(2, q) for q = 2^s has
+//! n = q^2 + q + 1 points/lines with (q+1)-regular incidence, so the same
+//! decoder scales (s = 2 → N = 21, s = 3 → N = 73, s = 4 → N = 273 ...),
+//! which is what the framework's scaling story needs.
+
+use super::field::Gf2e;
+use super::Gf2Matrix;
+
+/// A point (or line) of PG(2, q) in normalized homogeneous coordinates:
+/// the first nonzero coordinate is 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct HomCoord(pub u16, pub u16, pub u16);
+
+/// Enumerate the q^2 + q + 1 normalized points of PG(2, q).
+pub fn points(field: &Gf2e) -> Vec<HomCoord> {
+    let q = field.order() as u16;
+    let mut pts = Vec::with_capacity((q as usize) * (q as usize) + q as usize + 1);
+    // (1, a, b)
+    for a in 0..q {
+        for b in 0..q {
+            pts.push(HomCoord(1, a, b));
+        }
+    }
+    // (0, 1, b)
+    for b in 0..q {
+        pts.push(HomCoord(0, 1, b));
+    }
+    // (0, 0, 1)
+    pts.push(HomCoord(0, 0, 1));
+    pts
+}
+
+/// Inner product over GF(q); a point lies on a line iff it vanishes.
+fn incident(field: &Gf2e, p: HomCoord, l: HomCoord) -> bool {
+    let t = field.add(
+        field.add(field.mul(p.0, l.0), field.mul(p.1, l.1)),
+        field.mul(p.2, l.2),
+    );
+    t == 0
+}
+
+/// A PG(2, q) LDPC code: `h` is the (lines × points) incidence matrix used
+/// as the parity-check matrix; `n` code bits (= points), `m` checks
+/// (= lines), both (q+1)-regular.
+#[derive(Clone, Debug)]
+pub struct PgLdpcCode {
+    /// Field order exponent: q = 2^s.
+    pub s: u32,
+    /// Block length n = q^2 + q + 1.
+    pub n: usize,
+    /// Number of checks (equal to n for PG(2, q)).
+    pub m: usize,
+    /// Node degree q + 1 (row and column weight of `h`).
+    pub degree: usize,
+    /// Parity-check matrix: rows = checks (lines), cols = bits (points).
+    pub h: Gf2Matrix,
+}
+
+impl PgLdpcCode {
+    /// Construct the PG(2, 2^s) code. `s = 1` gives the paper's Fano-plane
+    /// N = 7 code with degree-3 nodes.
+    pub fn new(s: u32) -> Self {
+        let field = Gf2e::new(s);
+        let pts = points(&field);
+        // By duality, lines of PG(2, q) have the same normalized coordinate
+        // set as points.
+        let lines = pts.clone();
+        let n = pts.len();
+        let mut h = Gf2Matrix::zeros(n, n);
+        for (li, &l) in lines.iter().enumerate() {
+            for (pi, &p) in pts.iter().enumerate() {
+                if incident(&field, p, l) {
+                    h.set(li, pi, true);
+                }
+            }
+        }
+        let degree = field.order() as usize + 1;
+        PgLdpcCode { s, n, m: n, degree, h }
+    }
+
+    /// The paper's code: PG(2, 2), the Fano plane (N = 7, degree 3).
+    pub fn fano() -> Self {
+        Self::new(1)
+    }
+
+    /// For each check (line), the indices of the bits (points) on it.
+    pub fn check_neighbors(&self) -> Vec<Vec<usize>> {
+        (0..self.m)
+            .map(|r| (0..self.n).filter(|&c| self.h.get(r, c)).collect())
+            .collect()
+    }
+
+    /// For each bit (point), the indices of the checks (lines) through it.
+    pub fn bit_neighbors(&self) -> Vec<Vec<usize>> {
+        let mut nb = vec![Vec::with_capacity(self.degree); self.n];
+        for r in 0..self.m {
+            for c in 0..self.n {
+                if self.h.get(r, c) {
+                    nb[c].push(r);
+                }
+            }
+        }
+        nb
+    }
+
+    /// Edge list (check, bit) in row-major order — the message channels of
+    /// the paper's message-passing formulation. |E| = n·(q+1).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut e = Vec::with_capacity(self.n * self.degree);
+        for r in 0..self.m {
+            for c in 0..self.n {
+                if self.h.get(r, c) {
+                    e.push((r, c));
+                }
+            }
+        }
+        e
+    }
+
+    /// Syndrome check: is `word` a codeword (H·x == 0)?
+    pub fn is_codeword(&self, word: &[u8]) -> bool {
+        assert_eq!(word.len(), self.n);
+        let mut v = crate::util::bits::BitVec::zeros(self.n);
+        for (i, &b) in word.iter().enumerate() {
+            v.set(i, b != 0);
+        }
+        self.h.matvec(&v).is_zero()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_count_matches_q2_q_1() {
+        for s in 1..=4 {
+            let f = Gf2e::new(s);
+            let q = f.order() as usize;
+            assert_eq!(points(&f).len(), q * q + q + 1, "s={s}");
+        }
+    }
+
+    #[test]
+    fn fano_plane_shape() {
+        let code = PgLdpcCode::fano();
+        assert_eq!(code.n, 7);
+        assert_eq!(code.m, 7);
+        assert_eq!(code.degree, 3);
+        assert!(code.h.row_weights().iter().all(|&w| w == 3));
+        assert!(code.h.col_weights().iter().all(|&w| w == 3));
+    }
+
+    #[test]
+    fn regularity_for_larger_s() {
+        for s in 2..=3 {
+            let code = PgLdpcCode::new(s);
+            let q = 1usize << s;
+            assert_eq!(code.n, q * q + q + 1);
+            let deg = (q + 1) as u32;
+            assert!(code.h.row_weights().iter().all(|&w| w == deg), "s={s}");
+            assert!(code.h.col_weights().iter().all(|&w| w == deg), "s={s}");
+        }
+    }
+
+    #[test]
+    fn any_two_lines_meet_in_exactly_one_point() {
+        // The defining axiom of a projective plane; guards the incidence
+        // construction against duplicate/degenerate lines.
+        let code = PgLdpcCode::new(2);
+        let nb = code.check_neighbors();
+        for i in 0..code.m {
+            for j in (i + 1)..code.m {
+                let common = nb[i].iter().filter(|p| nb[j].contains(p)).count();
+                assert_eq!(common, 1, "lines {i},{j} share {common} points");
+            }
+        }
+    }
+
+    #[test]
+    fn edges_match_neighbor_lists() {
+        let code = PgLdpcCode::fano();
+        let edges = code.edges();
+        assert_eq!(edges.len(), 21); // 7 checks × degree 3
+        let cn = code.check_neighbors();
+        for (chk, bit) in edges {
+            assert!(cn[chk].contains(&bit));
+        }
+    }
+
+    #[test]
+    fn all_zero_and_all_one_are_codewords_of_fano() {
+        let code = PgLdpcCode::fano();
+        assert!(code.is_codeword(&[0; 7]));
+        // Each line has odd (3) points, so all-ones has syndrome 3 mod 2 = 1
+        // per check — NOT a codeword.
+        assert!(!code.is_codeword(&[1; 7]));
+    }
+
+    #[test]
+    fn bit_neighbors_are_transpose_of_check_neighbors() {
+        let code = PgLdpcCode::new(2);
+        let cn = code.check_neighbors();
+        let bn = code.bit_neighbors();
+        for (chk, bits) in cn.iter().enumerate() {
+            for &b in bits {
+                assert!(bn[b].contains(&chk));
+            }
+        }
+        assert!(bn.iter().all(|v| v.len() == code.degree));
+    }
+}

@@ -1,0 +1,46 @@
+//! # fabricflow
+//!
+//! A framework for mapping message-passing applications onto a
+//! packet-switched Network-on-Chip (NoC) and partitioning that NoC across
+//! multiple (simulated) FPGAs over quasi-SERDES links — a full
+//! reproduction of *"Framework for Application Mapping over
+//! Packet-switched Network of FPGAs: Case Studies"* (IIT Bombay, 2015).
+//!
+//! The library is organized as the paper's two-phase flow plus the
+//! substrates it depends on:
+//!
+//! * **Phase 1 — application mapping to NoC** ([`pe`], [`noc`]): express the
+//!   application as communicating processing elements, wrap each PE with a
+//!   *Data Collector* / *Data Processor* / *Data Distributor* adapter, and
+//!   plug the wrapped PEs onto a CONNECT-style packet-switched NoC.
+//! * **Phase 2 — partitioning across FPGAs** ([`partition`], [`serdes`]):
+//!   cut NoC links along a user-specified (or automatically derived)
+//!   partition and stitch in quasi-SERDES endpoints that serialize flits
+//!   over a few GPIO pins, so the design runs unchanged across chips.
+//! * **Case studies** ([`apps`]): LDPC min-sum decoding over a 4×4 mesh,
+//!   particle-filter object tracking, and Boolean matrix-vector
+//!   multiplication over GF(2) using Ryan Williams' sub-quadratic
+//!   algorithm.
+//! * **Substrates**: [`gf2`] (GF(2)/GF(2^s) algebra and projective-geometry
+//!   LDPC codes), [`resources`] (zc7020-style FPGA resource model),
+//!   [`dfg`]+[`mips`] (the paper's compiler-driven toy flow, Fig 2),
+//!   [`runtime`] (PJRT execution of AOT-compiled JAX/Pallas artifacts),
+//!   and [`util`] (PRNG, bench harness, property-test driver).
+//!
+//! Compute hot-spots (batched LDPC decode, BMVM, particle weights) are
+//! authored in JAX/Pallas under `python/compile/`, AOT-lowered to HLO text
+//! at build time (`make artifacts`) and executed from Rust through
+//! [`runtime`]; Python is never on the request path.
+
+pub mod util;
+pub mod gf2;
+pub mod resources;
+pub mod noc;
+pub mod serdes;
+pub mod partition;
+pub mod pe;
+pub mod runtime;
+pub mod dfg;
+pub mod mips;
+pub mod apps;
+pub mod tables;

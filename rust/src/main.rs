@@ -1,0 +1,314 @@
+//! fabricflow — command-line launcher for the framework.
+//!
+//! ```text
+//! fabricflow tables --id all            # regenerate paper Tables I–V
+//! fabricflow ldpc --niter 10 --flip 3   # Fig 9 decode over the NoC
+//! fabricflow track --frames 8           # Fig 10 tracking over the NoC
+//! fabricflow bmvm --topo torus --r 100  # §VI BMVM on a topology
+//! fabricflow dfg --cores 4              # Fig 2 DFG→MIPS flow
+//! fabricflow noc --topo mesh8x8         # raw NoC traffic experiment
+//! fabricflow partition                  # Fig 5 quasi-SERDES demo
+//! fabricflow resources                  # device + component inventory
+//! ```
+//!
+//! (clap is unavailable in the offline container; flags are parsed by the
+//! small [`Args`] helper.)
+
+use std::collections::HashMap;
+
+use fabricflow::apps::bmvm::{dense_power_matvec, BmvmSystem, WilliamsLuts};
+use fabricflow::apps::ldpc::mapper::LdpcNocDecoder;
+use fabricflow::apps::ldpc::minsum::{codeword_llrs, MinsumVariant};
+use fabricflow::apps::pfilter::{synthetic_video, PfilterNocTracker, TrackerParams};
+use fabricflow::gf2::Gf2Matrix;
+use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::resources::Device;
+use fabricflow::serdes::SerdesConfig;
+use fabricflow::tables::{self, TableOpts};
+use fabricflow::util::bits::BitVec;
+use fabricflow::util::Rng;
+use fabricflow::{dfg, mips, partition::Partition};
+
+/// Minimal `--flag value` / `--switch` parser.
+struct Args {
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                switches.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, switches }
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+fn topo_from_name(name: &str, endpoints: usize) -> Topology {
+    match name {
+        "ring" => Topology::Ring(endpoints),
+        "mesh" | "torus" => {
+            let side = (endpoints as f64).sqrt().ceil() as usize;
+            if name == "mesh" {
+                Topology::Mesh { w: side, h: endpoints.div_ceil(side) }
+            } else {
+                Topology::Torus { w: side, h: endpoints.div_ceil(side) }
+            }
+        }
+        "fat_tree" => Topology::fat_tree(endpoints),
+        other => {
+            // meshWxH / torusWxH
+            for (prefix, is_torus) in [("mesh", false), ("torus", true)] {
+                if let Some(dims) = other.strip_prefix(prefix) {
+                    if let Some((w, h)) = dims.split_once('x') {
+                        let (w, h) = (w.parse().unwrap(), h.parse().unwrap());
+                        return if is_torus {
+                            Topology::Torus { w, h }
+                        } else {
+                            Topology::Mesh { w, h }
+                        };
+                    }
+                }
+            }
+            panic!("unknown topology '{other}'");
+        }
+    }
+}
+
+fn cmd_tables(args: &Args) {
+    let opts = TableOpts {
+        reps: args.get("reps", 3usize),
+        quick: args.has("quick"),
+        seed: args.get("seed", 0x7AB1Eu64),
+    };
+    match args.str("id", "all").as_str() {
+        "t1" => print!("{}", tables::table1()),
+        "t2" => print!("{}", tables::table2()),
+        "t3" => print!("{}", tables::table3()),
+        "t4" => print!("{}", tables::table4(&opts)),
+        "t5" => print!("{}", tables::table5(&opts)),
+        "all" => print!("{}", tables::all_tables(&opts)),
+        other => eprintln!("unknown table id '{other}' (t1..t5, all)"),
+    }
+}
+
+fn cmd_ldpc(args: &Args) {
+    let niter = args.get("niter", 10u32);
+    let variant = match args.str("variant", "sm").as_str() {
+        "paper" => MinsumVariant::PaperListing,
+        _ => MinsumVariant::SignMagnitude,
+    };
+    let flips: Vec<usize> = args
+        .flags
+        .get("flip")
+        .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+        .unwrap_or_default();
+    let dec = LdpcNocDecoder::fano_on_mesh(variant, niter);
+    let llr = codeword_llrs(&[0; 7], 100, &flips);
+    println!("LDPC Fano decode over 4x4 mesh, niter={niter}, flips={flips:?}");
+    let run = dec.decode(&llr, None);
+    println!(
+        "  single FPGA : bits {:?} valid={} cycles={} flits={}",
+        run.result.bits, run.result.valid_codeword, run.cycles, run.flits_delivered
+    );
+    if args.has("partition") {
+        let p = dec.fig9_partition();
+        let split = dec.decode(&llr, Some((&p, SerdesConfig::default())));
+        println!(
+            "  2 FPGAs     : bits {:?} cycles={} (+{} serdes cycles)",
+            split.result.bits,
+            split.cycles,
+            split.cycles - run.cycles
+        );
+    }
+}
+
+fn cmd_track(args: &Args) {
+    let frames = args.get("frames", 8usize);
+    let workers = args.get("workers", 4usize);
+    let params = TrackerParams {
+        n_particles: args.get("particles", 32usize),
+        sigma: args.get("sigma", 3.0f64),
+        roi_r: args.get("roi", 5i32),
+        seed: args.get("seed", 7u64),
+    };
+    let video = synthetic_video(64, 48, frames, 6, args.get("vseed", 11u64));
+    let tracker = PfilterNocTracker::on_mesh(workers, params);
+    println!(
+        "particle filter over NoC: {frames} frames, {} particles, {workers} workers",
+        params.n_particles
+    );
+    let run = tracker.track(&video, video.truth[0], None);
+    for (k, (&est, &truth)) in run.centers.iter().zip(&video.truth).enumerate() {
+        println!("  frame {k:2}: est {est:?} truth {truth:?}");
+    }
+    println!("  cycles={} flits={}", run.cycles, run.flits_delivered);
+}
+
+fn cmd_bmvm(args: &Args) {
+    let n = args.get("n", 1024usize);
+    let k = args.get("k", 4usize);
+    let pes = args.get("pes", 64usize);
+    let r = args.get("r", 10u32);
+    let topo = args.str("topo", "mesh");
+    let mut rng = Rng::new(args.get("seed", 3u64));
+    let a = Gf2Matrix::random(n, n, &mut rng);
+    let luts = WilliamsLuts::preprocess(&a, k);
+    let v = BitVec::random(n, &mut rng);
+    let sys = BmvmSystem::new(luts, pes, BmvmSystem::topology_for(&topo, pes));
+    println!(
+        "BMVM n={n} k={k} f={} PEs={pes} topo={topo} r={r} (LUTs {:.2} Mb BRAM)",
+        sys.fold(),
+        sys.bram_bits() as f64 / (1024.0 * 1024.0)
+    );
+    let run = sys.run(&v, r, None);
+    assert_eq!(run.result, dense_power_matvec(&a, &v, r), "verify vs dense oracle");
+    println!(
+        "  cycles={} time={:.3} ms (incl. host link) flits={} — verified vs dense A^r v",
+        run.cycles, run.time_ms, run.flits_delivered
+    );
+}
+
+const DFG_SAMPLE: &str = "input a;\ninput b;\nt0 = a + b;\nt1 = a * 7;\nt2 = t0 ^ t1;\nt3 = t2 min b;\nt4 = t3 << 2;\ny = t4 - a;\noutput y;\n";
+
+fn cmd_dfg(args: &Args) {
+    let cores = args.get("cores", 2usize);
+    let src = args
+        .flags
+        .get("file")
+        .map(|f| std::fs::read_to_string(f).expect("read program"))
+        .unwrap_or_else(|| DFG_SAMPLE.to_string());
+    let g = dfg::parse(&src).expect("parse straight-line code");
+    let prog = mips::compile(&g, cores);
+    println!("; DFG: {} nodes, {} outputs, {} cores", g.nodes.len(), g.outputs.len(), cores);
+    print!("{}", prog.listing());
+    let a_args: Vec<u32> = (0..g.inputs.len()).map(|i| 10 + 3 * i as u32).collect();
+    let run = mips::run(&prog, &g, &a_args, 1_000_000);
+    println!("; inputs {a_args:?} -> outputs {:?} (oracle {:?})", run.outputs, g.eval(&a_args));
+    println!("; {} cycles, blocked/core {:?}", run.cycles, run.blocked);
+    assert_eq!(run.outputs, g.eval(&a_args));
+}
+
+fn cmd_noc(args: &Args) {
+    let eps = args.get("endpoints", 16usize);
+    let topo = topo_from_name(&args.str("topo", "mesh4x4"), eps);
+    let flits = args.get("flits", 5000u32);
+    let mut net = Network::new(&topo, NocConfig::paper());
+    let n = net.n_endpoints();
+    let mut rng = Rng::new(args.get("seed", 1u64));
+    for i in 0..flits {
+        let s = rng.index(n);
+        let d = (s + 1 + rng.index(n - 1)) % n;
+        net.inject(s, Flit::single(s, d, i, i as u64));
+    }
+    let cycles = net.run_until_idle(100_000_000);
+    println!("{topo:?}: {} endpoints, {flits} flits uniform-random", n);
+    println!("  drained in {cycles} cycles — {}", net.stats());
+    let g = net.topo();
+    println!("  avg hops {:.2}, diameter {}", g.avg_hops(), g.diameter());
+}
+
+fn cmd_resources() {
+    for d in [Device::ZC7020, Device::VIRTEX6_ML605, Device::DE0_NANO] {
+        println!(
+            "{:28} {:>7} FF {:>7} LUT {:>4} DSP {:>6} Kb BRAM",
+            d.name,
+            d.regs,
+            d.luts,
+            d.dsp,
+            d.bram_bits / 1024
+        );
+    }
+    println!();
+    print!("{}", tables::table1());
+}
+
+fn cmd_partition_demo(args: &Args) {
+    // Fig 5: 4-router custom NoC, R0 on its own FPGA.
+    let topo = Topology::Custom {
+        n_routers: 4,
+        links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+        endpoint_router: vec![0, 1, 2, 3],
+    };
+    let p = Partition::island(4, &[0]);
+    let serdes = SerdesConfig {
+        pins: args.get("pins", 8u32),
+        clock_div: args.get("clock-div", 1u32),
+        tx_buffer: 8,
+    };
+    let g = topo.build();
+    println!("Fig 5 demo: 4-router NoC, R0+N0 on FPGA 1, rest on FPGA 0");
+    println!("  cut links: {:?}", p.cut_links(&g));
+    println!("  pins/FPGA: {:?}", p.pins_per_fpga(&g, &serdes));
+    let mut net = Network::new(&topo, NocConfig::paper());
+    p.apply(&mut net, serdes);
+    let mut rng = Rng::new(9);
+    for i in 0..2000u32 {
+        let s = rng.index(4);
+        let d = (s + 1 + rng.index(3)) % 4;
+        net.inject(s, Flit::single(s, d, i, i as u64));
+    }
+    let cycles = net.run_until_idle(10_000_000);
+    println!("  2000 flits drained in {cycles} cycles — {}", net.stats());
+    for ((r, port), ch) in net.serdes_channels() {
+        println!(
+            "  serdes at R{r}.p{port}: {} flits carried, {} cycles/flit",
+            ch.carried, ch.ser_cycles
+        );
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!(
+            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|partition|resources> [flags]"
+        );
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "tables" => cmd_tables(&args),
+        "ldpc" => cmd_ldpc(&args),
+        "track" => cmd_track(&args),
+        "bmvm" => cmd_bmvm(&args),
+        "dfg" => cmd_dfg(&args),
+        "noc" => cmd_noc(&args),
+        "partition" => cmd_partition_demo(&args),
+        "resources" => cmd_resources(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            std::process::exit(2);
+        }
+    }
+}

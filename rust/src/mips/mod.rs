@@ -1,0 +1,537 @@
+//! Network of minimal MIPS processors (paper Fig 2): the DFG parts from
+//! [`crate::dfg`] are compiled to a MIPS-subset instruction stream with
+//! **network push/pull instructions (FIFO semantics)** added for the
+//! cross-partition edges, "taking into account the precedence
+//! constraints/schedule", and executed on simulated cores attached to the
+//! same NoC the rest of the framework uses.
+//!
+//! Scheduling discipline: all cores walk the *global* (ASAP level, node
+//! id) order. When core c reaches node v:
+//!
+//! * v mine → compute (operands are already in registers), then `PUSH`
+//!   the value once to every other core that consumes v;
+//! * v remote but consumed here (now or later) → `PULL` it *eagerly at
+//!   v's global position*. Both ends of every channel therefore observe
+//!   values in the same global order, so plain FIFO channels suffice —
+//!   no reordering hardware, exactly the paper's "network-push/pull
+//!   instructions (FIFO-semantics)".
+//!
+//! Inputs arrive over a host channel (the host pushes them in argument
+//! order at boot); outputs are pushed to the host endpoint tagged with
+//! their output index. Register allocation is refcount-based: a value's
+//! register is freed after its last local use.
+
+use std::collections::HashMap;
+
+use crate::dfg::{Dfg, Node, Op};
+use crate::noc::flit::{packetize, NodeId};
+use crate::noc::{Network, NocConfig, Topology};
+use crate::pe::collector::{make_tag, split_tag, Collector};
+
+/// Word width of every value.
+pub const WORD_BITS: usize = 32;
+/// General-purpose registers per core (r0 is hardwired zero).
+pub const NUM_REGS: usize = 32;
+
+/// The minimal ISA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Insn {
+    /// rd <- imm
+    Li { rd: u8, imm: u32 },
+    /// rd <- rs OP rt
+    Alu { op: Op, rd: u8, rs: u8, rt: u8 },
+    /// Send register rs to core `dst`, tagged with producer node `val`.
+    Push { dst: u16, rs: u8, val: u32 },
+    /// Blocking receive of producer node `val` from core `src` into rd.
+    Pull { rd: u8, src: u16, val: u32 },
+    /// Send register rs to the host, tagged with output index.
+    PushHost { rs: u8, out: u8 },
+    Halt,
+}
+
+impl std::fmt::Display for Insn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Insn::Li { rd, imm } => write!(f, "li   r{rd}, {imm}"),
+            Insn::Alu { op, rd, rs, rt } => write!(f, "{:<4} r{rd}, r{rs}, r{rt}",
+                format!("{op:?}").to_lowercase()),
+            Insn::Push { dst, rs, val } => write!(f, "push core{dst}, r{rs}   # v{val}"),
+            Insn::Pull { rd, src, val } => write!(f, "pull r{rd}, core{src}  # v{val}"),
+            Insn::PushHost { rs, out } => write!(f, "push host, r{rs}     # out{out}"),
+            Insn::Halt => write!(f, "halt"),
+        }
+    }
+}
+
+/// Per-core source channel index: cores 0..n use their core id; the host
+/// channel is index n.
+fn host_chan(n_cores: usize) -> usize {
+    n_cores
+}
+
+/// Compiled program for every core.
+#[derive(Clone, Debug)]
+pub struct MipsProgram {
+    pub n_cores: usize,
+    pub code: Vec<Vec<Insn>>,
+    /// assignment[node] = core.
+    pub assignment: Vec<usize>,
+}
+
+impl MipsProgram {
+    /// Human-readable assembly listing (for the example binary).
+    pub fn listing(&self) -> String {
+        let mut out = String::new();
+        for (c, code) in self.code.iter().enumerate() {
+            out.push_str(&format!("; core {c}\n"));
+            for i in code {
+                out.push_str(&format!("    {i}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Compile a DFG for `n_cores` processors (Fig 2's "basic application
+/// partitioning and mapping tool flow").
+pub fn compile(dfg: &Dfg, n_cores: usize) -> MipsProgram {
+    let assignment = dfg.partition(n_cores);
+    let lv = dfg.levels();
+    // Global schedule: (level, id).
+    let mut order: Vec<usize> = (0..dfg.nodes.len()).collect();
+    order.sort_by_key(|&i| (lv[i], i));
+
+    // consumers[v] = cores that use v as an operand (dedup, sorted).
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); dfg.nodes.len()];
+    for (j, n) in dfg.nodes.iter().enumerate() {
+        if let Node::Bin(_, a, b) = *n {
+            for src in [a, b] {
+                if !consumers[src].contains(&assignment[j]) {
+                    consumers[src].push(assignment[j]);
+                }
+            }
+        }
+    }
+    for c in consumers.iter_mut() {
+        c.sort_unstable();
+    }
+    // Output nodes are also "consumed" by the host push on their core.
+    // Local uses per core: how many times core c reads node v.
+    let mut uses: HashMap<(usize, usize), u32> = HashMap::new();
+    for (j, n) in dfg.nodes.iter().enumerate() {
+        if let Node::Bin(_, a, b) = *n {
+            *uses.entry((assignment[j], a)).or_default() += 1;
+            *uses.entry((assignment[j], b)).or_default() += 1;
+        }
+    }
+    for &(_, v) in &dfg.outputs {
+        *uses.entry((assignment[v], v)).or_default() += 1;
+    }
+
+    struct CoreGen {
+        code: Vec<Insn>,
+        reg_of: HashMap<usize, u8>,
+        refs: HashMap<usize, u32>,
+        free: Vec<u8>,
+    }
+    impl CoreGen {
+        fn alloc(&mut self, v: usize, refs: u32) -> u8 {
+            let r = self.free.pop().unwrap_or_else(|| {
+                panic!("register pressure exceeded {NUM_REGS} (toy allocator)")
+            });
+            self.reg_of.insert(v, r);
+            self.refs.insert(v, refs);
+            r
+        }
+        fn use_val(&mut self, v: usize) -> u8 {
+            let r = *self.reg_of.get(&v).expect("operand in register");
+            let c = self.refs.get_mut(&v).unwrap();
+            *c -= 1;
+            if *c == 0 {
+                self.reg_of.remove(&v);
+                self.refs.remove(&v);
+                self.free.push(r);
+            }
+            r
+        }
+    }
+    let mut gens: Vec<CoreGen> = (0..n_cores)
+        .map(|_| CoreGen {
+            code: Vec::new(),
+            reg_of: HashMap::new(),
+            refs: HashMap::new(),
+            free: (1..NUM_REGS as u8).rev().collect(),
+        })
+        .collect();
+
+    for &v in &order {
+        let owner = assignment[v];
+        let local_refs = |c: usize| uses.get(&(c, v)).copied().unwrap_or(0);
+        match dfg.nodes[v] {
+            Node::Const(imm) => {
+                let refs = local_refs(owner);
+                if refs > 0 {
+                    let rd = gens[owner].alloc(v, refs);
+                    gens[owner].code.push(Insn::Li { rd, imm });
+                }
+            }
+            Node::Input(_) => {
+                // Host pushes inputs at boot; every consuming core pulls
+                // at this global position.
+                for c in 0..n_cores {
+                    let refs = local_refs(c);
+                    if refs > 0 {
+                        let rd = gens[c].alloc(v, refs);
+                        gens[c].code.push(Insn::Pull {
+                            rd,
+                            src: host_chan(n_cores) as u16,
+                            val: v as u32,
+                        });
+                    }
+                }
+            }
+            Node::Bin(op, a, b) => {
+                // Owner computes...
+                let rs = gens[owner].use_val(a);
+                let rt = gens[owner].use_val(b);
+                let refs = local_refs(owner).max(1); // keep alive for pushes
+                let rd = gens[owner].alloc(v, refs + consumers[v].iter()
+                    .filter(|&&c| c != owner).count() as u32);
+                gens[owner].code.push(Insn::Alu { op, rd, rs, rt });
+                // ...pushes to remote consumers (ascending core id)...
+                for &c in &consumers[v] {
+                    if c != owner {
+                        let rs = gens[owner].use_val(v);
+                        gens[owner].code.push(Insn::Push {
+                            dst: c as u16,
+                            rs,
+                            val: v as u32,
+                        });
+                    }
+                }
+                if local_refs(owner) == 0 {
+                    // Value only needed remotely; drop the keep-alive ref.
+                    gens[owner].use_val(v);
+                }
+                // ...and remote consumers pull eagerly, in the same
+                // global position.
+                for &c in &consumers[v] {
+                    if c != owner {
+                        let refs = local_refs(c);
+                        let rd = gens[c].alloc(v, refs);
+                        gens[c].code.push(Insn::Pull {
+                            rd,
+                            src: owner as u16,
+                            val: v as u32,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    // Outputs: owner pushes to host (in output order); halt everywhere.
+    for (oi, &(_, v)) in dfg.outputs.iter().enumerate() {
+        let owner = assignment[v];
+        let rs = gens[owner].use_val(v);
+        gens[owner].code.push(Insn::PushHost { rs, out: oi as u8 });
+    }
+    for g in gens.iter_mut() {
+        g.code.push(Insn::Halt);
+    }
+    MipsProgram {
+        n_cores,
+        code: gens.into_iter().map(|g| g.code).collect(),
+        assignment,
+    }
+}
+
+/// One simulated MIPS core attached to NoC endpoint `ep`.
+struct MipsCore {
+    ep: NodeId,
+    code: Vec<Insn>,
+    pc: usize,
+    regs: [u32; NUM_REGS],
+    collector: Collector,
+    /// Stall cycles remaining (multi-cycle ops).
+    stall: u32,
+    pub cycles_blocked: u64,
+}
+
+impl MipsCore {
+    fn new(ep: NodeId, code: Vec<Insn>, n_cores: usize, flit_width: u32) -> Self {
+        MipsCore {
+            ep,
+            code,
+            pc: 0,
+            regs: [0; NUM_REGS],
+            collector: Collector::new(vec![WORD_BITS; n_cores + 1], flit_width),
+            stall: 0,
+            cycles_blocked: 0,
+        }
+    }
+
+    fn halted(&self) -> bool {
+        matches!(self.code.get(self.pc), Some(Insn::Halt) | None)
+    }
+
+    fn tick(&mut self, net: &mut Network) {
+        while let Some(f) = net.eject(self.ep) {
+            self.collector.accept(f);
+        }
+        if self.halted() {
+            return;
+        }
+        if self.stall > 0 {
+            self.stall -= 1;
+            return;
+        }
+        match self.code[self.pc] {
+            Insn::Li { rd, imm } => {
+                self.regs[rd as usize] = imm;
+                self.pc += 1;
+            }
+            Insn::Alu { op, rd, rs, rt } => {
+                self.regs[rd as usize] = op.apply(self.regs[rs as usize], self.regs[rt as usize]);
+                // MUL is a 3-cycle op on the toy core, everything else 1.
+                if op == Op::Mul {
+                    self.stall = 2;
+                }
+                self.pc += 1;
+            }
+            Insn::Push { dst, rs, val } => {
+                // tag: epoch = producer node id, arg = source channel (our
+                // core index == our endpoint index by construction).
+                for f in packetize(
+                    self.ep,
+                    dst as usize,
+                    make_tag(val, self.ep as u8),
+                    &[self.regs[rs as usize] as u64],
+                    WORD_BITS,
+                    net.cfg().flit_data_width,
+                ) {
+                    net.inject(self.ep, f);
+                }
+                self.pc += 1;
+            }
+            Insn::PushHost { rs, out } => {
+                let host = net.n_endpoints() - 1;
+                for f in packetize(
+                    self.ep,
+                    host,
+                    make_tag(out as u32, 0),
+                    &[self.regs[rs as usize] as u64],
+                    WORD_BITS,
+                    net.cfg().flit_data_width,
+                ) {
+                    net.inject(self.ep, f);
+                }
+                self.pc += 1;
+            }
+            Insn::Pull { rd, src, val } => {
+                if let Some(msg) = self.collector.pop_arg(src as usize) {
+                    assert_eq!(
+                        msg.epoch, val,
+                        "FIFO schedule violation: core {} expected v{val} from \
+                         channel {src}, got v{}",
+                        self.ep, msg.epoch
+                    );
+                    self.regs[rd as usize] = msg.payload[0] as u32;
+                    self.pc += 1;
+                } else {
+                    self.cycles_blocked += 1;
+                }
+            }
+            Insn::Halt => {}
+        }
+        self.regs[0] = 0;
+    }
+}
+
+/// Result of a multicore run.
+#[derive(Clone, Debug)]
+pub struct MipsRun {
+    pub outputs: Vec<u32>,
+    pub cycles: u64,
+    /// Per-core cycles spent blocked on pulls (load-imbalance signal).
+    pub blocked: Vec<u64>,
+}
+
+/// Execute a compiled program on `n_cores` cores + 1 host endpoint over a
+/// mesh NoC, with the given input values.
+pub fn run(prog: &MipsProgram, dfg: &Dfg, args: &[u32], max_cycles: u64) -> MipsRun {
+    let n = prog.n_cores;
+    let need = n + 1;
+    let w = (need as f64).sqrt().ceil() as usize;
+    let h = need.div_ceil(w);
+    let topo = Topology::Mesh { w: w.max(2), h: h.max(1) };
+    run_on(prog, dfg, args, &topo, max_cycles)
+}
+
+/// Like [`run`] but with an explicit topology whose LAST endpoint is the
+/// host.
+pub fn run_on(
+    prog: &MipsProgram,
+    dfg: &Dfg,
+    args: &[u32],
+    topo: &Topology,
+    max_cycles: u64,
+) -> MipsRun {
+    let n = prog.n_cores;
+    let mut net = Network::new(topo, NocConfig::paper());
+    assert!(net.n_endpoints() >= n + 1, "need {n} cores + host");
+    let host = net.n_endpoints() - 1;
+    let fw = net.cfg().flit_data_width;
+    let mut cores: Vec<MipsCore> = prog
+        .code
+        .iter()
+        .enumerate()
+        .map(|(c, code)| MipsCore::new(c, code.clone(), n, fw))
+        .collect();
+    // Host pushes the inputs (channel = host_chan, value id = input node).
+    assert_eq!(args.len(), dfg.inputs.len());
+    for (i, node) in dfg.nodes.iter().enumerate() {
+        if let crate::dfg::Node::Input(k) = node {
+            for c in 0..n {
+                // Only cores that actually pull it will consume; extra
+                // messages would desync FIFOs, so push exactly to pullers.
+                let pulls = prog.code[c]
+                    .iter()
+                    .any(|ins| matches!(ins, Insn::Pull { src, val, .. }
+                        if *src as usize == host_chan(n) && *val == i as u32));
+                if pulls {
+                    for f in packetize(
+                        host,
+                        c,
+                        make_tag(i as u32, host_chan(n) as u8),
+                        &[args[*k] as u64],
+                        WORD_BITS,
+                        fw,
+                    ) {
+                        net.inject(host, f);
+                    }
+                }
+            }
+        }
+    }
+    // Run.
+    let mut cycles = 0u64;
+    let mut host_col = Collector::new(vec![WORD_BITS; 1], fw);
+    loop {
+        let done = cores.iter().all(|c| c.halted()) && net.idle();
+        if done {
+            break;
+        }
+        net.step();
+        for c in cores.iter_mut() {
+            c.tick(&mut net);
+        }
+        cycles += 1;
+        assert!(cycles <= max_cycles, "MIPS system wedged after {max_cycles} cycles");
+    }
+    while let Some(f) = net.eject(host) {
+        host_col.accept(f);
+    }
+    // Outputs keyed by epoch (= output index).
+    let mut outs: Vec<(u32, u32)> = Vec::new();
+    while let Some(m) = host_col.pop_arg(0) {
+        outs.push((m.epoch, m.payload[0] as u32));
+    }
+    outs.sort_unstable();
+    assert_eq!(outs.len(), dfg.outputs.len(), "missing outputs");
+    let _ = split_tag(0);
+    MipsRun {
+        outputs: outs.into_iter().map(|(_, v)| v).collect(),
+        cycles,
+        blocked: cores.iter().map(|c| c.cycles_blocked).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfg::{parse, random_program};
+    use crate::util::{prop, Rng};
+
+    const SAMPLE: &str = "
+        input a;
+        input b;
+        t1 = a + b;
+        t2 = a * 3;
+        t3 = t1 min t2;
+        y  = t3 ^ b;
+        output y;
+    ";
+
+    #[test]
+    fn single_core_matches_eval() {
+        let g = parse(SAMPLE).unwrap();
+        let prog = compile(&g, 1);
+        let run = run(&prog, &g, &[5, 9], 100_000);
+        assert_eq!(run.outputs, g.eval(&[5, 9]));
+    }
+
+    #[test]
+    fn multicore_matches_eval_and_pushes_pulls_exist() {
+        let g = parse(SAMPLE).unwrap();
+        for cores in [2, 3, 4] {
+            let prog = compile(&g, cores);
+            let has_push = prog.code.iter().flatten().any(|i| matches!(i, Insn::Push { .. }));
+            assert!(has_push, "{cores} cores must communicate");
+            let r = run(&prog, &g, &[5, 9], 100_000);
+            assert_eq!(r.outputs, g.eval(&[5, 9]), "{cores} cores");
+            assert!(r.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn random_programs_multicore_equivalence() {
+        prop::check("mips == dfg eval", 15, |rng| {
+            let n_ops = 12 + rng.index(10);
+            let g = random_program(rng, n_ops);
+            let args: Vec<u32> = (0..g.inputs.len()).map(|_| rng.next_u32()).collect();
+            let want = g.eval(&args);
+            for cores in [1usize, 2, 4] {
+                let prog = compile(&g, cores);
+                let r = run(&prog, &g, &args, 1_000_000);
+                if r.outputs != want {
+                    return Err(format!("cores={cores}: {:?} != {want:?}", r.outputs));
+                }
+            }
+            Ok(())
+        });
+        let _ = Rng::new(0);
+    }
+
+    #[test]
+    fn listing_is_readable() {
+        let g = parse(SAMPLE).unwrap();
+        let prog = compile(&g, 2);
+        let asm = prog.listing();
+        assert!(asm.contains("; core 0"));
+        assert!(asm.contains("pull"));
+        assert!(asm.contains("halt"));
+    }
+
+    #[test]
+    fn more_cores_reduce_or_hold_compute_span_for_wide_graphs() {
+        // A wide embarrassingly-parallel program: many independent chains.
+        let mut src = String::from("input a;\ninput b;\n");
+        for i in 0..12 {
+            src.push_str(&format!("u{i} = a * {};\n", i + 2));
+            src.push_str(&format!("w{i} = u{i} + b;\n"));
+        }
+        // Reduce pairwise to keep register pressure flat.
+        src.push_str("s0 = w0 ^ w1;\n");
+        for i in 1..11 {
+            src.push_str(&format!("s{i} = s{} ^ w{};\n", i - 1, i + 1));
+        }
+        src.push_str("output s10;\n");
+        let g = parse(&src).unwrap();
+        let args = [7u32, 13];
+        let want = g.eval(&args);
+        let one = run(&compile(&g, 1), &g, &args, 1_000_000);
+        let four = run(&compile(&g, 4), &g, &args, 1_000_000);
+        assert_eq!(one.outputs, want);
+        assert_eq!(four.outputs, want);
+    }
+}

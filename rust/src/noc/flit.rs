@@ -1,0 +1,159 @@
+//! Flits — the basic unit of data on NoC links — and packetization.
+//!
+//! The paper's CONNECT configuration carries 16 payload bits per flit.
+//! Processing elements exchange multi-word *messages* (an argument value,
+//! a result); the Data Distributor splits a message into a sequence of
+//! flits tagged `(tag, seq)` and the Data Collector reassembles them, in
+//! any arrival order (§II-B: "even with the flits arriving in an
+//! out-of-order fashion").
+
+/// Endpoint (network-interface) identifier.
+pub type NodeId = usize;
+
+/// One flit. `data` carries up to `flit_data_width` meaningful payload
+/// bits; `tag`/`seq`/`last` are the side-band fields the PE wrapper uses
+/// to reassemble messages (on the FPGA these ride in the flit header).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Flit {
+    /// Source endpoint.
+    pub src: NodeId,
+    /// Destination endpoint.
+    pub dst: NodeId,
+    /// Virtual channel (managed by the routers; injected flits start on
+    /// the channel the routing function assigns).
+    pub vc: u8,
+    /// Message tag: which logical message / argument this flit belongs to.
+    pub tag: u32,
+    /// Flit index within the message.
+    pub seq: u32,
+    /// Tail flit of the message.
+    pub last: bool,
+    /// Payload bits (low `flit_data_width` bits are meaningful).
+    pub data: u64,
+    /// Cycle at which the flit was handed to the source NI (for latency
+    /// accounting).
+    pub injected_at: u64,
+}
+
+impl Flit {
+    /// A single-flit message.
+    pub fn single(src: NodeId, dst: NodeId, tag: u32, data: u64) -> Self {
+        Flit { src, dst, vc: 0, tag, seq: 0, last: true, data, injected_at: 0 }
+    }
+}
+
+/// Split a message payload (little-endian over `u64` words, `bits` total)
+/// into flits of `flit_width` payload bits each.
+pub fn packetize(
+    src: NodeId,
+    dst: NodeId,
+    tag: u32,
+    payload: &[u64],
+    bits: usize,
+    flit_width: u32,
+) -> Vec<Flit> {
+    assert!(flit_width >= 1 && flit_width <= 64);
+    assert!(bits <= payload.len() * 64, "payload shorter than declared bits");
+    let w = flit_width as usize;
+    let nflits = bits.div_ceil(w).max(1);
+    let mut flits = Vec::with_capacity(nflits);
+    for i in 0..nflits {
+        let lo = i * w;
+        let n = w.min(bits.saturating_sub(lo)).max(0);
+        let mut chunk = 0u64;
+        for b in 0..n {
+            let bit = lo + b;
+            if (payload[bit / 64] >> (bit % 64)) & 1 == 1 {
+                chunk |= 1 << b;
+            }
+        }
+        flits.push(Flit {
+            src,
+            dst,
+            vc: 0,
+            tag,
+            seq: i as u32,
+            last: i + 1 == nflits,
+            data: chunk,
+            injected_at: 0,
+        });
+    }
+    flits
+}
+
+/// Reassemble flits (any order) produced by [`packetize`] back into the
+/// message payload. `bits` must match the original length.
+pub fn depacketize(flits: &[Flit], bits: usize, flit_width: u32) -> Vec<u64> {
+    let w = flit_width as usize;
+    let mut payload = vec![0u64; bits.div_ceil(64).max(1)];
+    for f in flits {
+        let lo = f.seq as usize * w;
+        let n = w.min(bits.saturating_sub(lo));
+        for b in 0..n {
+            if (f.data >> b) & 1 == 1 {
+                let bit = lo + b;
+                payload[bit / 64] |= 1 << (bit % 64);
+            }
+        }
+    }
+    payload
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn single_message_is_one_tail_flit() {
+        let f = Flit::single(1, 2, 7, 0xAB);
+        assert!(f.last);
+        assert_eq!(f.seq, 0);
+        assert_eq!((f.src, f.dst, f.tag, f.data), (1, 2, 7, 0xAB));
+    }
+
+    #[test]
+    fn packetize_16bit_flits() {
+        // 40 bits over 16-bit flits -> 3 flits (16, 16, 8 bits).
+        let payload = [0xAABB_CCDD_EEu64];
+        let flits = packetize(0, 1, 3, &payload, 40, 16);
+        assert_eq!(flits.len(), 3);
+        assert_eq!(flits[0].data, 0xDDEE);
+        assert_eq!(flits[1].data, 0xBBCC);
+        assert_eq!(flits[2].data, 0xAA);
+        assert!(flits[2].last && !flits[0].last && !flits[1].last);
+        assert!(flits.iter().enumerate().all(|(i, f)| f.seq == i as u32));
+    }
+
+    #[test]
+    fn roundtrip_out_of_order() {
+        let mut rng = Rng::new(77);
+        prop::check("packetize roundtrip", 100, |rng_case| {
+            let bits = 1 + rng_case.index(250);
+            let words = bits.div_ceil(64);
+            let payload: Vec<u64> = (0..words).map(|_| rng_case.next_u64()).collect();
+            // Mask tail bits so comparison is exact.
+            let mut masked = payload.clone();
+            let tail = bits % 64;
+            if tail != 0 {
+                *masked.last_mut().unwrap() &= (1u64 << tail) - 1;
+            }
+            let width = 1 + rng_case.index(32) as u32;
+            let mut flits = packetize(0, 1, 0, &masked, bits, width);
+            rng_case.shuffle(&mut flits);
+            let back = depacketize(&flits, bits, width);
+            prop::assert_prop(back == masked, format!("bits={bits} width={width}"))
+        });
+        let _ = rng.next_u64();
+    }
+
+    #[test]
+    fn zero_bit_message_still_sends_one_flit() {
+        // Control-only messages (e.g. "start") carry no payload but must
+        // still traverse the network.
+        let flits = packetize(0, 1, 0, &[0], 0, 16);
+        assert_eq!(flits.len(), 1);
+        assert!(flits[0].last);
+        assert_eq!(flits[0].data, 0);
+    }
+}

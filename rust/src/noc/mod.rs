@@ -1,0 +1,81 @@
+//! Cycle-level packet-switched Network-on-Chip simulator.
+//!
+//! This is the crate's stand-in for the CONNECT NoC generator [Papamichael
+//! & Hoe, FPGA'12] the paper plugs its processing elements into. The
+//! router microarchitecture mirrors the paper's §VI-B "Network and Router
+//! Options" table:
+//!
+//! | option            | paper (CONNECT)                     | here |
+//! |-------------------|-------------------------------------|------|
+//! | flow control      | Peek Flow Control                   | credit-equivalent peek of downstream buffer space |
+//! | flit data width   | 16                                  | [`NocConfig::flit_data_width`] = 16 |
+//! | flit buffer depth | 8                                   | [`NocConfig::buffer_depth`] = 8 |
+//! | allocator         | Separable Input-First Round-Robin   | [`Allocator::SeparableInputFirstRR`] (plus output-first and fixed-priority for ablations) |
+//! | hop latency       | single cycle between adjacent routers | 1 cycle link traversal |
+//! | inject/eject      | one flit per cycle per endpoint     | enforced by the NI model |
+//!
+//! Topologies ([`topology::Topology`]) cover the paper's Table V set —
+//! ring, mesh, torus, fat tree — plus custom graphs for Fig 5-style
+//! examples. Deadlock freedom comes from per-topology routing: XY on
+//! mesh, dimension-order + dateline virtual channels on ring/torus,
+//! up*/down* on fat trees and custom graphs.
+//!
+//! The simulator is deterministic: same inputs → same cycle counts, so
+//! every experiment in EXPERIMENTS.md is reproducible bit-for-bit.
+
+pub mod flit;
+pub mod topology;
+pub mod router;
+pub mod network;
+pub mod stats;
+pub mod traffic;
+
+pub use flit::{Flit, NodeId};
+pub use network::Network;
+pub use stats::NetStats;
+pub use topology::Topology;
+
+/// Output allocation policy (stage 2 of the separable allocator).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Allocator {
+    /// The paper's configuration: each input picks a VC round-robin, each
+    /// output picks among requesting inputs round-robin.
+    SeparableInputFirstRR,
+    /// Output-first variant (ablation).
+    SeparableOutputFirstRR,
+    /// Fixed priority by input index (ablation; unfair under load).
+    FixedPriority,
+}
+
+/// Router/network configuration (defaults = the paper's CONNECT options).
+#[derive(Clone, Copy, Debug)]
+pub struct NocConfig {
+    /// Payload bits carried per flit (paper: 16).
+    pub flit_data_width: u32,
+    /// Flit buffer depth per input VC (paper: 8).
+    pub buffer_depth: usize,
+    /// Virtual channels. Ring/torus routing needs 2 (dateline); mesh and
+    /// trees work with 1. `Network::new` raises this to the topology's
+    /// minimum automatically.
+    pub num_vcs: usize,
+    /// Allocation policy.
+    pub allocator: Allocator,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        NocConfig {
+            flit_data_width: 16,
+            buffer_depth: 8,
+            num_vcs: 1,
+            allocator: Allocator::SeparableInputFirstRR,
+        }
+    }
+}
+
+impl NocConfig {
+    /// The exact configuration of the paper's §VI-B table.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+}

@@ -1,0 +1,85 @@
+//! Network statistics: latency, throughput, link utilization.
+
+/// Counters accumulated by [`super::Network`] during simulation.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    /// Flits handed to source NIs.
+    pub injected: u64,
+    /// Flits delivered to destination endpoints.
+    pub delivered: u64,
+    /// Sum over delivered flits of (delivery cycle − injection cycle).
+    pub total_latency: u64,
+    /// Worst single-flit latency.
+    pub max_latency: u64,
+    /// Total flit-hops over router→router links (for link utilization).
+    pub link_hops: u64,
+    /// Cycles simulated.
+    pub cycles: u64,
+}
+
+impl NetStats {
+    /// Mean flit latency in cycles (0 if nothing delivered).
+    pub fn avg_latency(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_latency as f64 / self.delivered as f64
+        }
+    }
+
+    /// Delivered flits per cycle across the whole network.
+    pub fn throughput(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.delivered as f64 / self.cycles as f64
+        }
+    }
+
+    /// Mean over delivered flits of hops taken.
+    pub fn avg_hops(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.link_hops as f64 / self.delivered as f64
+        }
+    }
+}
+
+impl std::fmt::Display for NetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cycles {} | injected {} delivered {} | avg lat {:.1} max {} | tput {:.3} flit/cyc",
+            self.cycles,
+            self.injected,
+            self.delivered,
+            self.avg_latency(),
+            self.max_latency,
+            self.throughput()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let s = NetStats {
+            injected: 10,
+            delivered: 8,
+            total_latency: 80,
+            max_latency: 20,
+            link_hops: 24,
+            cycles: 100,
+        };
+        assert_eq!(s.avg_latency(), 10.0);
+        assert_eq!(s.throughput(), 0.08);
+        assert_eq!(s.avg_hops(), 3.0);
+        let z = NetStats::default();
+        assert_eq!(z.avg_latency(), 0.0);
+        assert_eq!(z.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,827 @@
+//! NoC topologies and deterministic, deadlock-free routing.
+//!
+//! CONNECT generates "NoCs of arbitrary topology"; the paper's Table V
+//! evaluates **ring, mesh, torus and fat tree**, and Fig 5/Fig 9 use a
+//! custom 4-router graph and a 4×4 mesh. This module builds the router
+//! graph for each and provides the per-hop routing function:
+//!
+//! * **Mesh** — dimension-order XY, deadlock-free on one VC.
+//! * **Ring / Torus** — shortest-direction dimension-order routing with the
+//!   classic *dateline* discipline: flits start on VC 0 and switch to VC 1
+//!   when they cross the wrap-around link of the ring they are traversing,
+//!   breaking the channel-dependency cycle (needs 2 VCs).
+//! * **Fat tree** — an arity-`a` tree with "fattened" (parallel) up-links
+//!   whose multiplicity grows toward the root; up*/down* routing
+//!   (deadlock-free on one VC), parallel up-links load-balanced by a
+//!   src⊕dst hash.
+//! * **Custom** — arbitrary router graphs routed up*/down* over a BFS
+//!   spanning tree (deadlock-free on any graph), used for Fig 5-style
+//!   partitioning examples and DFG mappings.
+//!
+//! Every memoryless routing decision is a function of (current router,
+//! flit src, flit dst, current VC) only, so the hardware analogue is a
+//! small combinational table — exactly what CONNECT emits.
+
+use crate::util::clog2;
+
+/// Where a router output port leads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PortDest {
+    /// Local port: delivers to / accepts from an endpoint NI.
+    Endpoint(usize),
+    /// Link to `port` (input) of `router`, 1-cycle traversal.
+    Router { router: usize, port: usize },
+}
+
+/// A built topology: the router graph plus everything `route` needs.
+#[derive(Clone, Debug)]
+pub struct TopoGraph {
+    pub n_routers: usize,
+    pub n_endpoints: usize,
+    /// `ports[r][p]` — destination of port `p` of router `r`. Ports are
+    /// bidirectional: the same index is both the input and output side.
+    pub ports: Vec<Vec<PortDest>>,
+    /// Endpoint `e` attaches at `(router, port)`.
+    pub endpoint_attach: Vec<(usize, usize)>,
+    /// Minimum VCs this topology's routing needs for deadlock freedom.
+    pub min_vcs: usize,
+    kind: RouteKind,
+}
+
+#[derive(Clone, Debug)]
+enum RouteKind {
+    /// 1-D torus: shortest direction + dateline VCs.
+    Ring { n: usize, cw_port: Vec<usize>, ccw_port: Vec<usize> },
+    /// 2-D mesh: XY.
+    /// (`h` kept for symmetry/debug printing.)
+    Mesh { w: usize, #[allow(dead_code)] h: usize, dir_port: Vec<[usize; 4]> }, // N,E,S,W
+    /// 2-D torus: dimension-order + per-dimension dateline VCs.
+    Torus { w: usize, h: usize, dir_port: Vec<[usize; 4]> },
+    /// Table-driven up*/down* (fat tree, custom): for each (router, dst
+    /// endpoint), the set of equally-good output ports.
+    UpDown { next_ports: Vec<Vec<Vec<u16>>> },
+}
+
+/// Topology descriptor. All constructors attach one endpoint per
+/// leaf/router position as the paper's figures do.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// `n` routers in a cycle, one endpoint each.
+    Ring(usize),
+    /// `w × h` mesh, one endpoint per router.
+    Mesh { w: usize, h: usize },
+    /// `w × h` torus, one endpoint per router.
+    Torus { w: usize, h: usize },
+    /// Fat tree over `endpoints` endpoints: arity-`arity` switches,
+    /// parallel up-links of multiplicity `min(subtree_endpoints, up_cap)`.
+    FatTree { endpoints: usize, arity: usize, up_cap: usize },
+    /// Arbitrary router graph: `links` are bidirectional router pairs,
+    /// endpoint `e` attaches to router `endpoint_router[e]`.
+    Custom { n_routers: usize, links: Vec<(usize, usize)>, endpoint_router: Vec<usize> },
+}
+
+impl Topology {
+    /// Fat tree with the crate defaults (arity 4, up-link cap 8).
+    pub fn fat_tree(endpoints: usize) -> Topology {
+        Topology::FatTree { endpoints, arity: 4, up_cap: 8 }
+    }
+
+    /// Short name used in tables ("ring", "mesh", …).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Ring(_) => "ring",
+            Topology::Mesh { .. } => "mesh",
+            Topology::Torus { .. } => "torus",
+            Topology::FatTree { .. } => "fat_tree",
+            Topology::Custom { .. } => "custom",
+        }
+    }
+
+    /// Number of endpoints the built network exposes.
+    pub fn n_endpoints(&self) -> usize {
+        match self {
+            Topology::Ring(n) => *n,
+            Topology::Mesh { w, h } | Topology::Torus { w, h } => w * h,
+            Topology::FatTree { endpoints, .. } => *endpoints,
+            Topology::Custom { endpoint_router, .. } => endpoint_router.len(),
+        }
+    }
+
+    /// Build the router graph + routing structures.
+    pub fn build(&self) -> TopoGraph {
+        match self {
+            Topology::Ring(n) => build_ring(*n),
+            Topology::Mesh { w, h } => build_grid(*w, *h, false),
+            Topology::Torus { w, h } => build_grid(*w, *h, true),
+            Topology::FatTree { endpoints, arity, up_cap } => {
+                build_fat_tree(*endpoints, *arity, *up_cap)
+            }
+            Topology::Custom { n_routers, links, endpoint_router } => {
+                build_custom(*n_routers, links, endpoint_router)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Construction helpers
+// ---------------------------------------------------------------------------
+
+struct Builder {
+    ports: Vec<Vec<PortDest>>,
+    endpoint_attach: Vec<(usize, usize)>,
+}
+
+impl Builder {
+    fn new(n_routers: usize) -> Self {
+        Builder { ports: vec![Vec::new(); n_routers], endpoint_attach: Vec::new() }
+    }
+
+    /// Attach endpoint `e` (sequential ids) at router `r`; returns port.
+    fn endpoint(&mut self, r: usize) -> usize {
+        let e = self.endpoint_attach.len();
+        let p = self.ports[r].len();
+        self.ports[r].push(PortDest::Endpoint(e));
+        self.endpoint_attach.push((r, p));
+        p
+    }
+
+    /// Bidirectional link between routers `a` and `b`; returns the two
+    /// port indices (port at a, port at b).
+    fn link(&mut self, a: usize, b: usize) -> (usize, usize) {
+        let pa = self.ports[a].len();
+        let pb = self.ports[b].len();
+        self.ports[a].push(PortDest::Router { router: b, port: pb });
+        self.ports[b].push(PortDest::Router { router: a, port: pa });
+        (pa, pb)
+    }
+}
+
+fn build_ring(n: usize) -> TopoGraph {
+    assert!(n >= 2, "ring needs >= 2 routers");
+    let mut b = Builder::new(n);
+    for r in 0..n {
+        b.endpoint(r);
+    }
+    let mut cw_port = vec![0usize; n]; // port toward (r+1) % n
+    let mut ccw_port = vec![0usize; n]; // port toward (r+n-1) % n
+    for r in 0..n {
+        let next = (r + 1) % n;
+        let (pa, pb) = b.link(r, next);
+        cw_port[r] = pa;
+        ccw_port[next] = pb;
+    }
+    TopoGraph {
+        n_routers: n,
+        n_endpoints: n,
+        ports: b.ports,
+        endpoint_attach: b.endpoint_attach,
+        min_vcs: 2,
+        kind: RouteKind::Ring { n, cw_port, ccw_port },
+    }
+}
+
+const DIR_N: usize = 0;
+const DIR_E: usize = 1;
+const DIR_S: usize = 2;
+const DIR_W: usize = 3;
+
+fn build_grid(w: usize, h: usize, wrap: bool) -> TopoGraph {
+    assert!(w >= 2 && h >= 1, "grid needs w >= 2");
+    let n = w * h;
+    let mut b = Builder::new(n);
+    for r in 0..n {
+        b.endpoint(r);
+    }
+    let mut dir_port = vec![[usize::MAX; 4]; n];
+    let idx = |x: usize, y: usize| y * w + x;
+    // East links (and wrap).
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w {
+                let (pa, pb) = b.link(idx(x, y), idx(x + 1, y));
+                dir_port[idx(x, y)][DIR_E] = pa;
+                dir_port[idx(x + 1, y)][DIR_W] = pb;
+            } else if wrap && w > 1 {
+                let (pa, pb) = b.link(idx(x, y), idx(0, y));
+                dir_port[idx(x, y)][DIR_E] = pa;
+                dir_port[idx(0, y)][DIR_W] = pb;
+            }
+        }
+    }
+    // South links (and wrap).
+    for y in 0..h {
+        for x in 0..w {
+            if y + 1 < h {
+                let (pa, pb) = b.link(idx(x, y), idx(x, y + 1));
+                dir_port[idx(x, y)][DIR_S] = pa;
+                dir_port[idx(x, y + 1)][DIR_N] = pb;
+            } else if wrap && h > 1 {
+                let (pa, pb) = b.link(idx(x, y), idx(x, 0));
+                dir_port[idx(x, y)][DIR_S] = pa;
+                dir_port[idx(x, 0)][DIR_N] = pb;
+            }
+        }
+    }
+    let kind = if wrap {
+        RouteKind::Torus { w, h, dir_port }
+    } else {
+        RouteKind::Mesh { w, h, dir_port }
+    };
+    TopoGraph {
+        n_routers: n,
+        n_endpoints: n,
+        ports: b.ports,
+        endpoint_attach: b.endpoint_attach,
+        min_vcs: if wrap { 2 } else { 1 },
+        kind,
+    }
+}
+
+fn build_fat_tree(endpoints: usize, arity: usize, up_cap: usize) -> TopoGraph {
+    assert!(endpoints >= 1 && arity >= 2);
+    // Level 0: leaf switches, `arity` endpoints each.
+    let n_leaves = endpoints.div_ceil(arity);
+    // Router ids are assigned level by level, leaves first.
+    let mut level_sizes = vec![n_leaves];
+    while *level_sizes.last().unwrap() > 1 {
+        level_sizes.push(level_sizes.last().unwrap().div_ceil(arity));
+    }
+    let n_routers: usize = level_sizes.iter().sum();
+    let mut b = Builder::new(n_routers);
+    // Endpoints at the leaves.
+    for e in 0..endpoints {
+        b.endpoint(e / arity);
+    }
+    // Links: each router at level l connects to its parent at level l+1
+    // with multiplicity min(endpoints_below, up_cap).
+    let mut level_base = vec![0usize; level_sizes.len()];
+    for l in 1..level_sizes.len() {
+        level_base[l] = level_base[l - 1] + level_sizes[l - 1];
+    }
+    let mut endpoints_below = vec![0usize; n_routers];
+    for e in 0..endpoints {
+        endpoints_below[e / arity] += 1;
+    }
+    for l in 0..level_sizes.len() - 1 {
+        for i in 0..level_sizes[l] {
+            let child = level_base[l] + i;
+            let parent = level_base[l + 1] + i / arity;
+            endpoints_below[parent] += endpoints_below[child];
+            let mult = endpoints_below[child].clamp(1, up_cap);
+            for _ in 0..mult {
+                b.link(child, parent);
+            }
+        }
+    }
+    let next_ports = up_down_tables(&b.ports, &b.endpoint_attach, n_routers);
+    TopoGraph {
+        n_routers,
+        n_endpoints: endpoints,
+        ports: b.ports,
+        endpoint_attach: b.endpoint_attach,
+        min_vcs: 1,
+        kind: RouteKind::UpDown { next_ports },
+    }
+}
+
+fn build_custom(
+    n_routers: usize,
+    links: &[(usize, usize)],
+    endpoint_router: &[usize],
+) -> TopoGraph {
+    assert!(n_routers >= 1);
+    let mut b = Builder::new(n_routers);
+    for &r in endpoint_router {
+        assert!(r < n_routers, "endpoint attached to missing router {r}");
+        b.endpoint(r);
+    }
+    for &(x, y) in links {
+        assert!(x < n_routers && y < n_routers && x != y, "bad link ({x},{y})");
+        b.link(x, y);
+    }
+    let next_ports = up_down_tables(&b.ports, &b.endpoint_attach, n_routers);
+    TopoGraph {
+        n_routers,
+        n_endpoints: endpoint_router.len(),
+        ports: b.ports,
+        endpoint_attach: b.endpoint_attach,
+        min_vcs: 1,
+        kind: RouteKind::UpDown { next_ports },
+    }
+}
+
+/// Compute up/down routing tables over a BFS spanning tree rooted at
+/// router 0: for each (router, destination endpoint), the set of
+/// equally-good output ports.
+///
+/// Routing goes strictly *up* (toward the root) until the destination
+/// router is in the current subtree, then strictly *down* — the classic
+/// deadlock-free discipline, and memoryless-consistent: after a down move
+/// the destination stays inside the subtree, so no later up move can be
+/// selected. Parallel links between the same router pair (fat-tree
+/// "fatness") all enter the port set and are load-balanced by the caller's
+/// src⊕dst hash. Non-tree links of custom graphs are left unused by
+/// routing (they still exist physically and can be cut by the
+/// partitioner).
+fn up_down_tables(
+    ports: &[Vec<PortDest>],
+    endpoint_attach: &[(usize, usize)],
+    n_routers: usize,
+) -> Vec<Vec<Vec<u16>>> {
+    // BFS spanning tree from router 0.
+    let mut parent = vec![usize::MAX; n_routers];
+    let mut seen = vec![false; n_routers];
+    seen[0] = true;
+    let mut order = vec![0usize];
+    let mut q = std::collections::VecDeque::from([0usize]);
+    while let Some(r) = q.pop_front() {
+        for pd in &ports[r] {
+            if let PortDest::Router { router, .. } = pd {
+                if !seen[*router] {
+                    seen[*router] = true;
+                    parent[*router] = r;
+                    order.push(*router);
+                    q.push_back(*router);
+                }
+            }
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "topology is disconnected");
+
+    // All ports from r to a specific neighbor (parallel links collected).
+    let ports_to = |r: usize, nb: usize| -> Vec<u16> {
+        ports[r]
+            .iter()
+            .enumerate()
+            .filter_map(|(p, pd)| match pd {
+                PortDest::Router { router, .. } if *router == nb => Some(p as u16),
+                _ => None,
+            })
+            .collect()
+    };
+
+    // subtree_mask[r] = set of routers in r's subtree, as the path-to-root
+    // test: x is in subtree(r) iff walking parents from x reaches r.
+    let in_subtree = |r: usize, mut x: usize| -> bool {
+        loop {
+            if x == r {
+                return true;
+            }
+            if x == 0 {
+                return false;
+            }
+            x = parent[x];
+        }
+    };
+    // Child of r on the path to descendant x.
+    let child_towards = |r: usize, mut x: usize| -> usize {
+        while parent[x] != r {
+            x = parent[x];
+        }
+        x
+    };
+
+    let n_eps = endpoint_attach.len();
+    let mut tables: Vec<Vec<Vec<u16>>> = vec![vec![Vec::new(); n_eps]; n_routers];
+    for (e, &(dr, dport)) in endpoint_attach.iter().enumerate() {
+        for r in 0..n_routers {
+            tables[r][e] = if r == dr {
+                vec![dport as u16]
+            } else if in_subtree(r, dr) {
+                ports_to(r, child_towards(r, dr))
+            } else {
+                ports_to(r, parent[r])
+            };
+            assert!(!tables[r][e].is_empty(), "router {r} has no hop to endpoint {e}");
+        }
+    }
+    tables
+}
+
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+/// A routing decision: output port + VC the flit occupies on that hop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hop {
+    pub port: usize,
+    pub vc: u8,
+}
+
+impl TopoGraph {
+    /// Router an endpoint attaches to.
+    pub fn endpoint_router(&self, e: usize) -> usize {
+        self.endpoint_attach[e].0
+    }
+
+    /// Memoryless routing: at router `cur`, for a flit `src → dst`, return
+    /// the output port and the VC for the next hop. Deterministic; the
+    /// `src ⊕ dst` hash load-balances parallel fat-tree up-links.
+    pub fn route(&self, cur: usize, src: usize, dst: usize) -> Hop {
+        match &self.kind {
+            RouteKind::Ring { n, cw_port, ccw_port } => {
+                let (dr, _) = self.endpoint_attach[dst];
+                if cur == dr {
+                    return Hop { port: self.endpoint_attach[dst].1, vc: 0 };
+                }
+                let (sr, _) = self.endpoint_attach[src];
+                ring_hop(cur, sr, dr, *n, &|r| cw_port[r], &|r| ccw_port[r])
+            }
+            RouteKind::Mesh { w, h: _, dir_port } => {
+                let (dr, dp) = self.endpoint_attach[dst];
+                if cur == dr {
+                    return Hop { port: dp, vc: 0 };
+                }
+                let (cx, cy) = (cur % w, cur / w);
+                let (dx, dy) = (dr % w, dr / w);
+                let dir = if cx != dx {
+                    if dx > cx {
+                        DIR_E
+                    } else {
+                        DIR_W
+                    }
+                } else if dy > cy {
+                    DIR_S
+                } else {
+                    DIR_N
+                };
+                Hop { port: dir_port[cur][dir], vc: 0 }
+            }
+            RouteKind::Torus { w, h, dir_port } => {
+                let (dr, dp) = self.endpoint_attach[dst];
+                if cur == dr {
+                    return Hop { port: dp, vc: 0 };
+                }
+                let (sr, _) = self.endpoint_attach[src];
+                let (cx, cy) = (cur % w, cur / w);
+                let (dx, dy) = (dr % w, dr / w);
+                let (sx, sy) = (sr % w, sr / w);
+                if cx != dx {
+                    // X phase, a ring of size w at row cy.
+                    torus_dim_hop(cx, sx, dx, *w, dir_port[cur][DIR_E], dir_port[cur][DIR_W])
+                } else {
+                    // Y phase, ring of size h at column cx == dx.
+                    torus_dim_hop(cy, sy, dy, *h, dir_port[cur][DIR_S], dir_port[cur][DIR_N])
+                }
+            }
+            RouteKind::UpDown { next_ports } => {
+                let choices = &next_ports[cur][dst];
+                debug_assert!(!choices.is_empty());
+                let h = hash2(src as u64, dst as u64) as usize;
+                Hop { port: choices[h % choices.len()] as usize, vc: 0 }
+            }
+        }
+    }
+
+    /// VC a fresh flit should be injected on (always 0: datelines raise it
+    /// in-flight).
+    pub fn initial_vc(&self) -> u8 {
+        0
+    }
+
+    /// Hop distance between two endpoints following `route` (includes the
+    /// final local-port hop as 0; counts router→router links).
+    pub fn hop_distance(&self, src: usize, dst: usize) -> usize {
+        let mut cur = self.endpoint_router(src);
+        let target = self.endpoint_router(dst);
+        let mut hops = 0;
+        while cur != target {
+            let hop = self.route(cur, src, dst);
+            match self.ports[cur][hop.port] {
+                PortDest::Router { router, .. } => cur = router,
+                PortDest::Endpoint(_) => unreachable!("local port before dst router"),
+            }
+            hops += 1;
+            assert!(hops <= 4 * self.n_routers, "routing loop {src}->{dst}");
+        }
+        hops
+    }
+
+    /// Mean hop distance over all endpoint pairs (analysis helper).
+    pub fn avg_hops(&self) -> f64 {
+        let n = self.n_endpoints;
+        if n < 2 {
+            return 0.0;
+        }
+        let mut total = 0usize;
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    total += self.hop_distance(s, d);
+                }
+            }
+        }
+        total as f64 / (n * (n - 1)) as f64
+    }
+
+    /// Diameter in router hops over endpoint pairs.
+    pub fn diameter(&self) -> usize {
+        let n = self.n_endpoints;
+        let mut m = 0;
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    m = m.max(self.hop_distance(s, d));
+                }
+            }
+        }
+        m
+    }
+
+    /// Number of router→router links (directed).
+    pub fn n_links(&self) -> usize {
+        self.ports
+            .iter()
+            .flatten()
+            .filter(|p| matches!(p, PortDest::Router { .. }))
+            .count()
+    }
+
+    /// Estimated FPGA cost of all routers (see [`crate::resources`]):
+    /// CONNECT-style input-queued router, per-port input buffers and
+    /// crossbar muxes.
+    pub fn router_resources(&self, cfg: &super::NocConfig) -> crate::resources::Resources {
+        use crate::resources as rc;
+        let mut total = rc::Resources::ZERO;
+        // Header bits: dst + src + tag/seq side band.
+        let hdr = 2 * clog2(self.n_endpoints.max(2)) + 8;
+        let flit_bits = cfg.flit_data_width + hdr;
+        for ports in &self.ports {
+            let np = ports.len() as u32;
+            let mut r = rc::Resources::ZERO;
+            for _ in 0..ports.len() {
+                // input buffer per VC + routing logic + credit counter
+                r += rc::fifo(flit_bits, cfg.buffer_depth as u32) * cfg.num_vcs as u64;
+                r += rc::Resources::new(4, 12); // route computation
+                r += rc::counter(4) * cfg.num_vcs as u64; // credits
+            }
+            // crossbar: per output an np:1 mux of flit_bits
+            r += rc::mux_n(np, flit_bits) * np as u64;
+            // allocator: RR arbiter per output + per input VC select
+            r += rc::Resources::new(2 * np as u64, 6 * np as u64);
+            total += r;
+        }
+        total
+    }
+}
+
+/// Ring hop with dateline VCs: shortest direction (tie → clockwise),
+/// VC 1 once the wrap link (n-1 → 0 cw, 0 → n-1 ccw) is crossed.
+fn ring_hop(
+    cur: usize,
+    src_r: usize,
+    dst_r: usize,
+    n: usize,
+    cw_port: &dyn Fn(usize) -> usize,
+    ccw_port: &dyn Fn(usize) -> usize,
+) -> Hop {
+    let cw_dist = (dst_r + n - cur) % n;
+    let ccw_dist = (cur + n - dst_r) % n;
+    // Direction fixed from the SOURCE so it cannot flip mid-route.
+    let cw_dist_src = (dst_r + n - src_r) % n;
+    let ccw_dist_src = (src_r + n - dst_r) % n;
+    let go_cw = cw_dist_src <= ccw_dist_src;
+    debug_assert!(cw_dist > 0 && ccw_dist > 0);
+    if go_cw {
+        let crossing = cur == n - 1;
+        let crossed = cur < src_r; // cw walk passed the n-1 -> 0 wrap
+        Hop { port: cw_port(cur), vc: (crossing || crossed) as u8 }
+    } else {
+        let crossing = cur == 0;
+        let crossed = cur > src_r; // ccw walk passed the 0 -> n-1 wrap
+        Hop { port: ccw_port(cur), vc: (crossing || crossed) as u8 }
+    }
+}
+
+/// One dimension of torus routing (same dateline discipline as the ring).
+/// `inc_port`/`dec_port` move +1 / -1 in the dimension.
+fn torus_dim_hop(
+    c: usize,
+    s: usize,
+    d: usize,
+    n: usize,
+    inc_port: usize,
+    dec_port: usize,
+) -> Hop {
+    let inc_dist_src = (d + n - s) % n;
+    let dec_dist_src = (s + n - d) % n;
+    let go_inc = inc_dist_src <= dec_dist_src;
+    if go_inc {
+        let crossing = c == n - 1;
+        let crossed = c < s;
+        Hop { port: inc_port, vc: (crossing || crossed) as u8 }
+    } else {
+        let crossing = c == 0;
+        let crossed = c > s;
+        Hop { port: dec_port, vc: (crossing || crossed) as u8 }
+    }
+}
+
+#[inline]
+fn hash2(a: u64, b: u64) -> u64 {
+    let mut x = a.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ b.rotate_left(32);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_topos() -> Vec<Topology> {
+        vec![
+            Topology::Ring(2),
+            Topology::Ring(5),
+            Topology::Ring(64),
+            Topology::Mesh { w: 4, h: 4 },
+            Topology::Mesh { w: 8, h: 8 },
+            Topology::Mesh { w: 5, h: 3 },
+            Topology::Torus { w: 4, h: 4 },
+            Topology::Torus { w: 8, h: 8 },
+            Topology::Torus { w: 3, h: 5 },
+            Topology::fat_tree(16),
+            Topology::fat_tree(64),
+            Topology::fat_tree(7),
+            Topology::Custom {
+                n_routers: 4,
+                links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+                endpoint_router: vec![0, 1, 2, 3, 1],
+            },
+        ]
+    }
+
+    #[test]
+    fn ports_are_symmetric() {
+        for t in all_topos() {
+            let g = t.build();
+            for (r, ports) in g.ports.iter().enumerate() {
+                for (p, pd) in ports.iter().enumerate() {
+                    if let PortDest::Router { router, port } = pd {
+                        match g.ports[*router][*port] {
+                            PortDest::Router { router: rb, port: pb } => {
+                                assert_eq!((rb, pb), (r, p), "{t:?} link asymmetry");
+                            }
+                            _ => panic!("{t:?}: peer port is an endpoint"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routes_terminate_for_all_pairs() {
+        for t in all_topos() {
+            let g = t.build();
+            for s in 0..g.n_endpoints {
+                for d in 0..g.n_endpoints {
+                    if s != d {
+                        // hop_distance panics on loops.
+                        let h = g.hop_distance(s, d);
+                        assert!(h <= 4 * g.n_routers, "{t:?} {s}->{d}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_routes_are_minimal() {
+        let g = (Topology::Mesh { w: 4, h: 4 }).build();
+        for s in 0..16 {
+            for d in 0..16 {
+                if s == d {
+                    continue;
+                }
+                let (sx, sy) = (s % 4usize, s / 4usize);
+                let (dx, dy) = (d % 4usize, d / 4usize);
+                let manhattan = sx.abs_diff(dx) + sy.abs_diff(dy);
+                assert_eq!(g.hop_distance(s, d), manhattan);
+            }
+        }
+    }
+
+    #[test]
+    fn torus_routes_are_minimal_and_shorter_than_mesh() {
+        let gt = (Topology::Torus { w: 8, h: 8 }).build();
+        let gm = (Topology::Mesh { w: 8, h: 8 }).build();
+        for s in 0..64 {
+            for d in 0..64 {
+                if s == d {
+                    continue;
+                }
+                let (sx, sy) = (s % 8, s / 8);
+                let (dx, dy) = (d % 8, d / 8);
+                let wrap = |a: usize, b: usize, n: usize| {
+                    let fw = (b + n - a) % n;
+                    fw.min(n - fw)
+                };
+                assert_eq!(gt.hop_distance(s, d), wrap(sx, dx, 8) + wrap(sy, dy, 8));
+            }
+        }
+        assert!(gt.avg_hops() < gm.avg_hops());
+    }
+
+    #[test]
+    fn ring_dateline_vcs_are_assigned_after_wrap() {
+        let g = (Topology::Ring(8)).build();
+        // src 6 -> dst 1 cw: hops 6->7 (vc0), 7->0 (crossing, vc1), 0->1(vc1)
+        let h0 = g.route(6, 6, 1);
+        assert_eq!(h0.vc, 0);
+        let h1 = g.route(7, 6, 1);
+        assert_eq!(h1.vc, 1, "wrap hop must take VC1");
+        let h2 = g.route(0, 6, 1);
+        assert_eq!(h2.vc, 1, "post-wrap hops stay on VC1");
+    }
+
+    #[test]
+    fn torus_dateline_vcs() {
+        let g = (Topology::Torus { w: 4, h: 4 }).build();
+        // src endpoint 3 (x=3,y=0) -> dst 1 (x=1,y=0): cw dist 2, ccw 2 →
+        // tie goes cw (increasing x), crossing wrap at x=3.
+        let h = g.route(3, 3, 1);
+        assert_eq!(h.vc, 1, "crossing hop on VC1");
+        let h = g.route(0, 3, 1);
+        assert_eq!(h.vc, 1, "after-crossing hop on VC1");
+    }
+
+    #[test]
+    fn fat_tree_structure() {
+        let t = Topology::fat_tree(64);
+        let g = t.build();
+        assert_eq!(g.n_endpoints, 64);
+        // 16 leaves + 4 mid + 1 root
+        assert_eq!(g.n_routers, 21);
+        // Same-leaf endpoints are 0 router-hops apart... actually both on
+        // one router: distance 0.
+        assert_eq!(g.hop_distance(0, 1), 0);
+        // Cross-root pairs: leaf -> mid -> root -> mid -> leaf = 4 hops.
+        assert_eq!(g.hop_distance(0, 63), 4);
+        assert!(g.diameter() <= 4);
+    }
+
+    #[test]
+    fn fat_tree_parallel_uplinks_spread_by_hash() {
+        let g = Topology::fat_tree(64).build();
+        // Leaf router 0 has 4 endpoints + parallel up links.
+        let mut used = std::collections::HashSet::new();
+        for dst in 32..64 {
+            used.insert(g.route(0, 0, dst).port);
+        }
+        assert!(used.len() > 1, "hash should spread across parallel up-links");
+    }
+
+    #[test]
+    fn custom_up_down_is_connected() {
+        let t = Topology::Custom {
+            n_routers: 4,
+            links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+            endpoint_router: vec![0, 1, 2, 3],
+        };
+        let g = t.build();
+        for s in 0..4 {
+            for d in 0..4 {
+                if s != d {
+                    assert!(g.hop_distance(s, d) <= 3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disconnected")]
+    fn disconnected_custom_panics() {
+        let t = Topology::Custom {
+            n_routers: 4,
+            links: vec![(0, 1), (2, 3)],
+            endpoint_router: vec![0, 1, 2, 3],
+        };
+        t.build();
+    }
+
+    #[test]
+    fn avg_hops_ordering_matches_paper_intuition() {
+        // Table V cost/perf ordering: ring worst, then mesh, torus,
+        // fat tree best (for 64 endpoints).
+        let ring = Topology::Ring(64).build().avg_hops();
+        let mesh = (Topology::Mesh { w: 8, h: 8 }).build().avg_hops();
+        let torus = (Topology::Torus { w: 8, h: 8 }).build().avg_hops();
+        let ft = Topology::fat_tree(64).build().avg_hops();
+        assert!(ring > mesh, "ring {ring} vs mesh {mesh}");
+        assert!(mesh > torus, "mesh {mesh} vs torus {torus}");
+        assert!(torus > ft, "torus {torus} vs fat tree {ft}");
+    }
+
+    #[test]
+    fn router_resources_scale_with_ports() {
+        let cfg = crate::noc::NocConfig::paper();
+        let small = Topology::Ring(4).build().router_resources(&cfg);
+        let big = (Topology::Mesh { w: 4, h: 4 }).build().router_resources(&cfg);
+        assert!(big.luts > small.luts);
+        assert!(big.regs > small.regs);
+    }
+}

@@ -1,0 +1,230 @@
+//! Synthetic traffic patterns and latency-vs-load sweeps — the standard
+//! NoC evaluation methodology (Dally & Towles; the CONNECT paper uses the
+//! same) behind Table V's topology ordering: which fabric saturates first
+//! under the all-to-all style load the BMVM case study generates.
+
+use super::flit::Flit;
+use super::{Network, NocConfig, Topology};
+use crate::util::Rng;
+
+/// Classic destination patterns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Uniform random destinations.
+    Uniform,
+    /// dst = bit-reversed src (adversarial for meshes).
+    BitComplement,
+    /// dst = (src + n/2) mod n (maximal average distance on rings).
+    Tornado,
+    /// All sources target one hot endpoint.
+    Hotspot,
+    /// dst = src + 1 mod n (nearest neighbor, best case).
+    Neighbor,
+}
+
+impl Pattern {
+    /// Destination for `src` under this pattern (needs #endpoints and a
+    /// per-flit RNG for the random patterns).
+    pub fn dst(self, src: usize, n: usize, rng: &mut Rng) -> usize {
+        let d = match self {
+            Pattern::Uniform => (src + 1 + rng.index(n - 1)) % n,
+            Pattern::BitComplement => (!src) & (n - 1),
+            Pattern::Tornado => (src + n / 2) % n,
+            Pattern::Hotspot => 0,
+            Pattern::Neighbor => (src + 1) % n,
+        };
+        if d == src {
+            (d + 1) % n
+        } else {
+            d
+        }
+    }
+
+    pub const ALL: [Pattern; 5] = [
+        Pattern::Uniform,
+        Pattern::BitComplement,
+        Pattern::Tornado,
+        Pattern::Hotspot,
+        Pattern::Neighbor,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::Uniform => "uniform",
+            Pattern::BitComplement => "bit-complement",
+            Pattern::Tornado => "tornado",
+            Pattern::Hotspot => "hotspot",
+            Pattern::Neighbor => "neighbor",
+        }
+    }
+}
+
+/// Result of one open-loop load point.
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    /// Offered load in flits per endpoint per cycle.
+    pub offered: f64,
+    /// Mean flit latency (cycles).
+    pub avg_latency: f64,
+    /// Delivered throughput in flits per endpoint per cycle.
+    pub throughput: f64,
+    /// Whether the network kept up (all offered flits delivered within
+    /// the drain budget).
+    pub stable: bool,
+}
+
+/// Open-loop injection: each endpoint offers `load` flits/cycle
+/// (Bernoulli) for `warm + measure` cycles under `pattern`; flits are
+/// then drained. Deterministic in `seed`.
+pub fn run_load_point(
+    topo: &Topology,
+    cfg: NocConfig,
+    pattern: Pattern,
+    load: f64,
+    cycles: u64,
+    seed: u64,
+) -> LoadPoint {
+    let mut net = Network::new(topo, cfg);
+    let n = net.n_endpoints();
+    let mut rng = Rng::new(seed);
+    let mut offered = 0u64;
+    for _ in 0..cycles {
+        for s in 0..n {
+            if rng.chance(load) {
+                let d = pattern.dst(s, n, &mut rng);
+                net.inject(s, Flit::single(s, d, 0, 0));
+                offered += 1;
+            }
+        }
+        net.step();
+    }
+    // Drain with a generous budget; saturated networks may not finish.
+    let mut drain = 0u64;
+    let budget = cycles * 20 + 10_000;
+    while !net.idle() && drain < budget {
+        net.step();
+        drain += 1;
+    }
+    let avg_latency = net.stats().avg_latency();
+    let delivered = net.stats().delivered;
+    let stable = net.idle();
+    // Consume eject queues for hygiene.
+    for e in 0..n {
+        while net.eject(e).is_some() {}
+    }
+    LoadPoint {
+        offered: offered as f64 / (cycles as f64 * n as f64),
+        avg_latency,
+        throughput: delivered as f64 / (cycles as f64 * n as f64),
+        stable,
+    }
+}
+
+/// Latency-vs-load sweep; returns one [`LoadPoint`] per offered load.
+pub fn latency_load_sweep(
+    topo: &Topology,
+    cfg: NocConfig,
+    pattern: Pattern,
+    loads: &[f64],
+    cycles: u64,
+    seed: u64,
+) -> Vec<LoadPoint> {
+    loads
+        .iter()
+        .map(|&l| run_load_point(topo, cfg, pattern, l, cycles, seed))
+        .collect()
+}
+
+/// Approximate saturation load: the smallest offered load where mean
+/// latency exceeds `4×` the zero-load latency (binary refinement over
+/// the sweep grid).
+pub fn saturation_load(
+    topo: &Topology,
+    cfg: NocConfig,
+    pattern: Pattern,
+    cycles: u64,
+    seed: u64,
+) -> f64 {
+    let zero = run_load_point(topo, cfg, pattern, 0.02, cycles, seed).avg_latency;
+    let mut lo = 0.02;
+    let mut hi = 1.0;
+    for _ in 0..6 {
+        let mid = (lo + hi) / 2.0;
+        let p = run_load_point(topo, cfg, pattern, mid, cycles, seed);
+        if p.avg_latency > 4.0 * zero || !p.stable {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    (lo + hi) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patterns_never_self_target() {
+        let mut rng = Rng::new(1);
+        for p in Pattern::ALL {
+            for n in [4usize, 16, 64] {
+                for s in 0..n {
+                    let d = p.dst(s, n, &mut rng);
+                    assert_ne!(d, s, "{p:?} n={n}");
+                    assert!(d < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_load() {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let low = run_load_point(&topo, NocConfig::paper(), Pattern::Uniform, 0.05, 400, 3);
+        let high = run_load_point(&topo, NocConfig::paper(), Pattern::Uniform, 0.6, 400, 3);
+        assert!(low.stable);
+        assert!(
+            high.avg_latency > low.avg_latency,
+            "{} !> {}",
+            high.avg_latency,
+            low.avg_latency
+        );
+    }
+
+    #[test]
+    fn neighbor_beats_tornado_on_ring() {
+        let topo = Topology::Ring(16);
+        let nb = run_load_point(&topo, NocConfig::paper(), Pattern::Neighbor, 0.3, 400, 5);
+        let tn = run_load_point(&topo, NocConfig::paper(), Pattern::Tornado, 0.3, 400, 5);
+        assert!(nb.avg_latency < tn.avg_latency);
+    }
+
+    #[test]
+    fn hotspot_saturates_before_uniform() {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let cfg = NocConfig::paper();
+        let hs = saturation_load(&topo, cfg, Pattern::Hotspot, 300, 7);
+        let un = saturation_load(&topo, cfg, Pattern::Uniform, 300, 7);
+        assert!(hs < un, "hotspot {hs} vs uniform {un}");
+        // Hotspot ejection is 1 flit/cycle shared by 15 sources.
+        assert!(hs < 0.15);
+    }
+
+    #[test]
+    fn torus_sustains_more_uniform_load_than_ring() {
+        let cfg = NocConfig::paper();
+        let ring = saturation_load(&Topology::Ring(16), cfg, Pattern::Uniform, 300, 9);
+        let torus =
+            saturation_load(&Topology::Torus { w: 4, h: 4 }, cfg, Pattern::Uniform, 300, 9);
+        assert!(torus > ring, "torus {torus} vs ring {ring}");
+    }
+
+    #[test]
+    fn throughput_tracks_offered_when_stable() {
+        let topo = Topology::Torus { w: 4, h: 4 };
+        let p = run_load_point(&topo, NocConfig::paper(), Pattern::Uniform, 0.2, 500, 11);
+        assert!(p.stable);
+        assert!((p.throughput - p.offered).abs() < 0.02, "{p:?}");
+    }
+}

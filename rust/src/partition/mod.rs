@@ -1,0 +1,459 @@
+//! Partitioning a NoC across multiple FPGAs (paper §III, Fig 5).
+//!
+//! Given a NoC topology and a (user-specified or automatically derived)
+//! assignment of routers to FPGAs, the partitioner identifies the NoC
+//! links that cross chips and replaces each with a pair of quasi-SERDES
+//! endpoints — "in a manner oblivious to the designer": routing tables,
+//! PE wrappers and application logic are untouched; only link timing
+//! changes. This mirrors the paper's Python script that splits the
+//! CONNECT-generated Verilog into per-FPGA parts and stitches in the
+//! SERDES modules.
+//!
+//! The paper leaves cut selection to the user ("decisions (presently user
+//! specified) as to 'cuts'"); [`Partition::balanced`] additionally
+//! implements the obvious extension — a greedy Kernighan–Lin-style
+//! min-cut bisection — which the ablation benches compare against manual
+//! cuts.
+
+use crate::noc::topology::{PortDest, TopoGraph};
+use crate::noc::Network;
+use crate::resources::{Device, Resources};
+use crate::serdes::{wire_bits, SerdesConfig};
+use crate::util::Rng;
+
+/// A bidirectional NoC link that crosses FPGAs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CutLink {
+    pub a_router: usize,
+    pub a_port: usize,
+    pub b_router: usize,
+    pub b_port: usize,
+}
+
+/// An assignment of every router (and therefore its attached endpoints /
+/// PEs) to an FPGA.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub n_fpgas: usize,
+    /// `assignment[router] = fpga index`.
+    pub assignment: Vec<usize>,
+}
+
+impl Partition {
+    /// User-specified assignment (the paper's mode).
+    pub fn new(n_fpgas: usize, assignment: Vec<usize>) -> Self {
+        assert!(n_fpgas >= 1);
+        assert!(
+            assignment.iter().all(|&f| f < n_fpgas),
+            "assignment references missing FPGA"
+        );
+        for f in 0..n_fpgas {
+            assert!(assignment.contains(&f), "FPGA {f} has no routers");
+        }
+        Partition { n_fpgas, assignment }
+    }
+
+    /// Everything on one FPGA (the unpartitioned baseline).
+    pub fn single(n_routers: usize) -> Self {
+        Partition { n_fpgas: 1, assignment: vec![0; n_routers] }
+    }
+
+    /// The paper's Fig 5 / Fig 9 style cut: routers in `island` on FPGA 1,
+    /// the rest on FPGA 0.
+    pub fn island(n_routers: usize, island: &[usize]) -> Self {
+        let mut assignment = vec![0; n_routers];
+        for &r in island {
+            assignment[r] = 1;
+        }
+        Partition::new(2, assignment)
+    }
+
+    /// Greedy balanced min-cut partition into `n_fpgas` parts:
+    /// BFS-grown seeds followed by Kernighan–Lin-style single-move
+    /// refinement under a ±1 balance constraint. Deterministic for a
+    /// given seed.
+    pub fn balanced(topo: &TopoGraph, n_fpgas: usize, seed: u64) -> Self {
+        assert!(n_fpgas >= 1 && n_fpgas <= topo.n_routers);
+        let n = topo.n_routers;
+        let mut rng = Rng::new(seed);
+        // Neighbor lists.
+        let nbrs: Vec<Vec<usize>> = (0..n)
+            .map(|r| {
+                topo.ports[r]
+                    .iter()
+                    .filter_map(|p| match p {
+                        PortDest::Router { router, .. } => Some(*router),
+                        _ => None,
+                    })
+                    .collect()
+            })
+            .collect();
+        // Region growing from k random seeds.
+        let target = n.div_ceil(n_fpgas);
+        let mut assignment = vec![usize::MAX; n];
+        let mut sizes = vec![0usize; n_fpgas];
+        let mut seeds: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut seeds);
+        let mut frontiers: Vec<Vec<usize>> = Vec::new();
+        for f in 0..n_fpgas {
+            let s = seeds[f];
+            frontiers.push(vec![s]);
+        }
+        let mut remaining = n;
+        while remaining > 0 {
+            // Grow the currently-smallest region one router at a time so
+            // parts stay balanced even when frontiers exhaust unevenly.
+            let mut order: Vec<usize> = (0..n_fpgas).collect();
+            order.sort_by_key(|&f| sizes[f]);
+            let mut progressed = false;
+            'regions: for &f in &order {
+                while let Some(r) = frontiers[f].pop() {
+                    if assignment[r] != usize::MAX {
+                        continue;
+                    }
+                    assignment[r] = f;
+                    sizes[f] += 1;
+                    remaining -= 1;
+                    for &nb in &nbrs[r] {
+                        if assignment[nb] == usize::MAX {
+                            frontiers[f].push(nb);
+                        }
+                    }
+                    progressed = true;
+                    break 'regions;
+                }
+            }
+            if !progressed {
+                // All frontiers exhausted (disconnected leftovers):
+                // assign one to the smallest part and reseed its frontier.
+                if let Some(r) = (0..n).find(|&r| assignment[r] == usize::MAX) {
+                    let f = (0..n_fpgas).min_by_key(|&f| sizes[f]).unwrap();
+                    assignment[r] = f;
+                    sizes[f] += 1;
+                    remaining -= 1;
+                    frontiers[f].extend(nbrs[r].iter().copied());
+                }
+            }
+        }
+        // Balance forcing: region growing can strangle a region (its whole
+        // frontier claimed by others), leaving one part oversized. Push
+        // boundary routers from oversized parts to adjacent undersized
+        // parts, choosing the move with the least cut damage.
+        // A part does not need to be a connected region (an FPGA hosts any
+        // subset of routers), so any router may move; we pick the one that
+        // damages the cut least.
+        let mut guard = 0;
+        while guard < 10 * n {
+            guard += 1;
+            let from = (0..n_fpgas).max_by_key(|&f| sizes[f]).unwrap();
+            let to = (0..n_fpgas).min_by_key(|&f| sizes[f]).unwrap();
+            if sizes[from] <= sizes[to] + 1 {
+                break; // balanced within ±1
+            }
+            let best = (0..n)
+                .filter(|&r| assignment[r] == from)
+                .min_by_key(|&r| {
+                    let mut d = 0i64;
+                    for &x in &nbrs[r] {
+                        if assignment[x] == from {
+                            d += 1;
+                        } else if assignment[x] == to {
+                            d -= 1;
+                        }
+                    }
+                    d
+                })
+                .expect("non-empty part");
+            sizes[from] -= 1;
+            sizes[to] += 1;
+            assignment[best] = to;
+        }
+        // Refinement: move a router to a neighboring part if it reduces the
+        // cut and keeps balance within ±1 of target.
+        let cut_delta = |assignment: &[usize], r: usize, to: usize| -> i64 {
+            let from = assignment[r];
+            let mut d = 0i64;
+            for &nb in &nbrs[r] {
+                if assignment[nb] == from {
+                    d += 1; // new cut edge
+                }
+                if assignment[nb] == to {
+                    d -= 1; // healed cut edge
+                }
+            }
+            d
+        };
+        let mut improved = true;
+        let mut rounds = 0;
+        while improved && rounds < 20 {
+            improved = false;
+            rounds += 1;
+            for r in 0..n {
+                let from = assignment[r];
+                if sizes[from] <= target.saturating_sub(1) {
+                    continue;
+                }
+                let mut best: Option<(usize, i64)> = None;
+                for &nb in &nbrs[r] {
+                    let to = assignment[nb];
+                    if to == from || sizes[to] + 1 > target + 1 {
+                        continue;
+                    }
+                    let d = cut_delta(&assignment, r, to);
+                    if d < 0 && best.map_or(true, |(_, bd)| d < bd) {
+                        best = Some((to, d));
+                    }
+                }
+                if let Some((to, _)) = best {
+                    sizes[assignment[r]] -= 1;
+                    sizes[to] += 1;
+                    assignment[r] = to;
+                    improved = true;
+                }
+            }
+        }
+        // Parts can end up empty on tiny graphs; fall back to round-robin.
+        if (0..n_fpgas).any(|f| !assignment.contains(&f)) {
+            for (r, a) in assignment.iter_mut().enumerate() {
+                *a = r % n_fpgas;
+            }
+        }
+        Partition::new(n_fpgas, assignment)
+    }
+
+    /// The links this partition cuts (each bidirectional link reported
+    /// once, with `a_router < b_router` or (equal impossible)).
+    pub fn cut_links(&self, topo: &TopoGraph) -> Vec<CutLink> {
+        assert_eq!(self.assignment.len(), topo.n_routers);
+        let mut cuts = Vec::new();
+        for r in 0..topo.n_routers {
+            for (p, pd) in topo.ports[r].iter().enumerate() {
+                if let PortDest::Router { router, port } = pd {
+                    if r < *router && self.assignment[r] != self.assignment[*router] {
+                        cuts.push(CutLink {
+                            a_router: r,
+                            a_port: p,
+                            b_router: *router,
+                            b_port: *port,
+                        });
+                    }
+                }
+            }
+        }
+        cuts
+    }
+
+    /// Number of routers per FPGA.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0; self.n_fpgas];
+        for &f in &self.assignment {
+            s[f] += 1;
+        }
+        s
+    }
+
+    /// Install quasi-SERDES endpoints (both directions) on every cut link
+    /// of `net`. Routing, PEs and application logic are untouched — the
+    /// paper's "seamless" property.
+    pub fn apply(&self, net: &mut Network, serdes: SerdesConfig) -> Vec<CutLink> {
+        let cuts = self.cut_links(net.topo());
+        for c in &cuts {
+            net.install_serdes(c.a_router, c.a_port, serdes);
+            net.install_serdes(c.b_router, c.b_port, serdes);
+        }
+        cuts
+    }
+
+    /// FPGA pins each chip must dedicate to quasi-SERDES links
+    /// (`pins` wires per link direction; both directions of a cut touch
+    /// both chips).
+    pub fn pins_per_fpga(&self, topo: &TopoGraph, serdes: &SerdesConfig) -> Vec<usize> {
+        let mut pins = vec![0usize; self.n_fpgas];
+        for c in self.cut_links(topo) {
+            // TX + RX on each side.
+            pins[self.assignment[c.a_router]] += 2 * serdes.pins as usize;
+            pins[self.assignment[c.b_router]] += 2 * serdes.pins as usize;
+        }
+        pins
+    }
+
+    /// Per-FPGA NoC infrastructure cost: routers assigned to the chip plus
+    /// one pair of serdes endpoints per incident cut (application PE costs
+    /// are added by the app layer).
+    pub fn noc_resources_per_fpga(
+        &self,
+        topo: &TopoGraph,
+        cfg: &crate::noc::NocConfig,
+        serdes: &SerdesConfig,
+    ) -> Vec<Resources> {
+        let mut out = vec![Resources::ZERO; self.n_fpgas];
+        // Router cost, attributed per router.
+        let total = topo.router_resources(cfg);
+        let per_router = Resources {
+            regs: total.regs / topo.n_routers as u64,
+            luts: total.luts / topo.n_routers as u64,
+            dsp: 0,
+            bram_bits: 0,
+        };
+        for (r, &f) in self.assignment.iter().enumerate() {
+            let _ = r;
+            out[f] += per_router;
+        }
+        let flit_bits = wire_bits(cfg.flit_data_width, topo.n_endpoints);
+        for c in self.cut_links(topo) {
+            let ep = serdes.endpoint_resources(flit_bits);
+            // TX + RX endpoint on each side.
+            out[self.assignment[c.a_router]] += ep * 2;
+            out[self.assignment[c.b_router]] += ep * 2;
+        }
+        out
+    }
+
+    /// Check each part fits `device` given extra per-FPGA application
+    /// resources; returns per-FPGA totals.
+    pub fn check_fit(
+        &self,
+        topo: &TopoGraph,
+        cfg: &crate::noc::NocConfig,
+        serdes: &SerdesConfig,
+        app_per_fpga: &[Resources],
+        device: &Device,
+    ) -> (Vec<Resources>, bool) {
+        let mut totals = self.noc_resources_per_fpga(topo, cfg, serdes);
+        for (t, a) in totals.iter_mut().zip(app_per_fpga) {
+            *t += *a;
+        }
+        let ok = totals.iter().all(|&t| device.fits(t));
+        (totals, ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::{Flit, NocConfig, Topology};
+
+    /// The Fig 5 example: 4 routers, R0 (+ its PE) on its own FPGA.
+    fn fig5() -> (Topology, Partition) {
+        let t = Topology::Custom {
+            n_routers: 4,
+            links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+            endpoint_router: vec![0, 1, 2, 3],
+        };
+        let p = Partition::island(4, &[0]);
+        (t, p)
+    }
+
+    #[test]
+    fn fig5_cut_has_two_links() {
+        let (t, p) = fig5();
+        let g = t.build();
+        let cuts = p.cut_links(&g);
+        assert_eq!(cuts.len(), 2, "R0 touches links to R1 and R3");
+        assert!(cuts.iter().all(|c| c.a_router == 0));
+        assert_eq!(p.sizes(), vec![3, 1]);
+    }
+
+    #[test]
+    fn partitioned_network_delivers_identically_but_slower() {
+        let t = Topology::Mesh { w: 4, h: 4 };
+        let traffic = |n: &mut Network| {
+            let mut k = 0u32;
+            for s in 0..16usize {
+                for d in 0..16usize {
+                    if s != d {
+                        n.inject(s, Flit::single(s, d, k, (s * 100 + d) as u64));
+                        k += 1;
+                    }
+                }
+            }
+        };
+        let collect = |n: &mut Network| {
+            let mut got: Vec<(usize, usize, u64)> = Vec::new();
+            for d in 0..16 {
+                while let Some(f) = n.eject(d) {
+                    got.push((f.src, f.dst, f.data));
+                }
+            }
+            got.sort_unstable();
+            got
+        };
+
+        let mut mono = Network::new(&t, NocConfig::paper());
+        traffic(&mut mono);
+        let mono_cycles = mono.run_until_idle(100_000);
+        let mono_msgs = collect(&mut mono);
+
+        // Vertical bisection: left 2 columns FPGA0, right 2 columns FPGA1.
+        let assignment: Vec<usize> = (0..16).map(|r| usize::from(r % 4 >= 2)).collect();
+        let p = Partition::new(2, assignment);
+        let mut split = Network::new(&t, NocConfig::paper());
+        let cuts = p.apply(&mut split, SerdesConfig::default());
+        assert_eq!(cuts.len(), 4, "4 rows cross the bisection");
+        traffic(&mut split);
+        let split_cycles = split.run_until_idle(1_000_000);
+        let split_msgs = collect(&mut split);
+
+        assert_eq!(mono_msgs, split_msgs, "partitioning must not change results");
+        assert!(
+            split_cycles > mono_cycles,
+            "serdes must cost cycles ({split_cycles} vs {mono_cycles})"
+        );
+        // All four channel pairs saw traffic.
+        assert_eq!(split.serdes_channels().count(), 8);
+        assert!(split.serdes_channels().all(|(_, c)| c.carried > 0));
+    }
+
+    #[test]
+    fn balanced_partition_is_balanced_and_beats_random_cut() {
+        let t = Topology::Torus { w: 8, h: 8 };
+        let g = t.build();
+        let p = Partition::balanced(&g, 2, 42);
+        let sizes = p.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 64);
+        assert!(sizes.iter().all(|&s| (28..=36).contains(&s)), "{sizes:?}");
+        let cut = p.cut_links(&g).len();
+        // Random even/odd assignment cuts nearly every link.
+        let random = Partition::new(2, (0..64).map(|r| r % 2).collect());
+        let random_cut = random.cut_links(&g).len();
+        assert!(
+            cut < random_cut / 2,
+            "refined cut {cut} vs random {random_cut}"
+        );
+    }
+
+    #[test]
+    fn balanced_works_for_four_fpgas() {
+        let g = (Topology::Mesh { w: 8, h: 8 }).build();
+        let p = Partition::balanced(&g, 4, 7);
+        assert_eq!(p.sizes().iter().sum::<usize>(), 64);
+        assert!(p.sizes().iter().all(|&s| s >= 12), "{:?}", p.sizes());
+    }
+
+    #[test]
+    fn pins_and_resources_accounting() {
+        let (t, p) = fig5();
+        let g = t.build();
+        let serdes = SerdesConfig::default();
+        let pins = p.pins_per_fpga(&g, &serdes);
+        // FPGA1 (just R0): 2 cuts × 2 dirs × 8 pins = 32.
+        assert_eq!(pins[1], 32);
+        assert_eq!(pins[0], 32);
+        let res = p.noc_resources_per_fpga(&g, &NocConfig::paper(), &serdes);
+        assert!(res[0].luts > res[1].luts, "3 routers vs 1");
+        assert!(res[1].regs > 0);
+    }
+
+    #[test]
+    fn single_partition_cuts_nothing() {
+        let g = (Topology::Ring(8)).build();
+        let p = Partition::single(8);
+        assert!(p.cut_links(&g).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "no routers")]
+    fn empty_fpga_rejected() {
+        Partition::new(3, vec![0, 0, 1, 1]);
+    }
+}

@@ -1,0 +1,280 @@
+//! The *Data Collector* (paper Fig 4a): accepts flits from the router —
+//! "even with the flits arriving in an out-of-order fashion" — reassembles
+//! them into argument messages, and queues each completed message in the
+//! input FIFO of its argument. When every argument FIFO holds at least one
+//! message the PE can *start*.
+//!
+//! Message identity on the wire: `tag = (epoch << 8) | arg_index`. The
+//! epoch distinguishes successive invocations (LDPC iterations, particle
+//! filter frames, BMVM multiply rounds); `seq` orders flits within one
+//! message; reassembly is keyed by (source, arg, epoch) so concurrent
+//! senders never interleave.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::noc::flit::Flit;
+
+/// Build the wire tag for (epoch, argument index).
+#[inline]
+pub fn make_tag(epoch: u32, arg: u8) -> u32 {
+    (epoch << 8) | arg as u32
+}
+
+/// Split a wire tag into (epoch, argument index).
+#[inline]
+pub fn split_tag(tag: u32) -> (u32, u8) {
+    (tag >> 8, (tag & 0xFF) as u8)
+}
+
+/// A completed argument message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArgMessage {
+    pub epoch: u32,
+    pub src: usize,
+    /// Packed payload words (little-endian bit order, as
+    /// [`crate::noc::flit::depacketize`] produces).
+    pub payload: Vec<u64>,
+}
+
+#[derive(Debug)]
+struct Partial {
+    payload: Vec<u64>,
+    received: u32,
+    /// Total flits, known once the `last` flit arrives.
+    expected: Option<u32>,
+    /// Duplicate-detection bitmap over seq (messages are ≤ 4096 flits).
+    seen: Vec<u64>,
+}
+
+/// Reassembly + per-argument input FIFOs.
+#[derive(Debug)]
+pub struct Collector {
+    /// Bit width of each argument message.
+    arg_bits: Vec<usize>,
+    flit_width: u32,
+    fifos: Vec<VecDeque<ArgMessage>>,
+    partial: HashMap<(usize, u8, u32), Partial>,
+    /// Completed messages delivered (stats).
+    pub messages: u64,
+}
+
+impl Collector {
+    pub fn new(arg_bits: Vec<usize>, flit_width: u32) -> Self {
+        let n = arg_bits.len();
+        Collector {
+            arg_bits,
+            flit_width,
+            fifos: (0..n).map(|_| VecDeque::new()).collect(),
+            partial: HashMap::new(),
+            messages: 0,
+        }
+    }
+
+    pub fn n_args(&self) -> usize {
+        self.arg_bits.len()
+    }
+
+    pub fn arg_bits(&self) -> &[usize] {
+        &self.arg_bits
+    }
+
+    /// Accept one flit from the router.
+    pub fn accept(&mut self, f: Flit) {
+        let (epoch, arg) = split_tag(f.tag);
+        assert!(
+            (arg as usize) < self.arg_bits.len(),
+            "flit for unknown argument {arg} (PE has {})",
+            self.arg_bits.len()
+        );
+        let bits = self.arg_bits[arg as usize];
+        let w = self.flit_width as usize;
+        let nwords = bits.div_ceil(64).max(1);
+        let key = (f.src, arg, epoch);
+        let entry = self.partial.entry(key).or_insert_with(|| Partial {
+            payload: vec![0u64; nwords],
+            received: 0,
+            expected: None,
+            seen: vec![0u64; (bits.div_ceil(w).max(1)).div_ceil(64)],
+        });
+        let s = f.seq as usize;
+        let (word, bit) = (s / 64, s % 64);
+        if word >= entry.seen.len() || (entry.seen[word] >> bit) & 1 == 1 {
+            return; // duplicate or out-of-range flit: drop
+        }
+        entry.seen[word] |= 1 << bit;
+        entry.received += 1;
+        if f.last {
+            entry.expected = Some(f.seq + 1);
+        }
+        // Merge payload bits at seq * flit_width.
+        let lo = s * w;
+        let n = w.min(bits.saturating_sub(lo));
+        for b in 0..n {
+            if (f.data >> b) & 1 == 1 {
+                let p = lo + b;
+                entry.payload[p / 64] |= 1 << (p % 64);
+            }
+        }
+        if entry.expected == Some(entry.received) {
+            let done = self.partial.remove(&key).unwrap();
+            self.messages += 1;
+            self.fifos[arg as usize].push_back(ArgMessage {
+                epoch,
+                src: f.src,
+                payload: done.payload,
+            });
+        }
+    }
+
+    /// `start` condition (paper Fig 4a): every argument FIFO non-empty.
+    pub fn ready(&self) -> bool {
+        self.fifos.iter().all(|f| !f.is_empty())
+    }
+
+    /// Pop one message per argument (call only when [`Collector::ready`]).
+    /// Returns the argument values and the epoch of argument 0.
+    pub fn take(&mut self) -> (Vec<ArgMessage>, u32) {
+        debug_assert!(self.ready());
+        let args: Vec<ArgMessage> =
+            self.fifos.iter_mut().map(|f| f.pop_front().unwrap()).collect();
+        let epoch = args.first().map(|a| a.epoch).unwrap_or(0);
+        (args, epoch)
+    }
+
+    /// Messages queued for argument `arg`.
+    pub fn queued(&self, arg: usize) -> usize {
+        self.fifos[arg].len()
+    }
+
+    /// Pop a single argument FIFO (used by consumers with per-channel
+    /// FIFO semantics — e.g. the MIPS cores' blocking `PULL`, where each
+    /// argument is one incoming channel rather than one operand).
+    pub fn pop_arg(&mut self, arg: usize) -> Option<ArgMessage> {
+        self.fifos[arg].pop_front()
+    }
+
+    /// Incomplete reassemblies in flight.
+    pub fn partial_count(&self) -> usize {
+        self.partial.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::flit::packetize;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn tag_roundtrip() {
+        for (e, a) in [(0u32, 0u8), (1, 3), (0xFFFF, 255)] {
+            assert_eq!(split_tag(make_tag(e, a)), (e, a));
+        }
+    }
+
+    #[test]
+    fn out_of_order_reassembly() {
+        let mut c = Collector::new(vec![48, 16], 16);
+        let payload = [0xAABB_CCDD_EEFFu64];
+        let mut flits = packetize(3, 9, make_tag(5, 0), &payload, 48, 16);
+        assert_eq!(flits.len(), 3);
+        flits.swap(0, 2); // arrive tail first
+        for f in flits {
+            c.accept(f);
+        }
+        assert!(!c.ready(), "arg 1 still missing");
+        assert_eq!(c.queued(0), 1);
+        for f in packetize(4, 9, make_tag(5, 1), &[0x1234], 16, 16) {
+            c.accept(f);
+        }
+        assert!(c.ready());
+        let (args, epoch) = c.take();
+        assert_eq!(epoch, 5);
+        assert_eq!(args[0].payload[0], 0xAABB_CCDD_EEFF);
+        assert_eq!(args[0].src, 3);
+        assert_eq!(args[1].payload[0], 0x1234);
+        assert!(!c.ready());
+    }
+
+    #[test]
+    fn interleaved_sources_do_not_mix() {
+        let mut c = Collector::new(vec![32], 16);
+        let a = packetize(1, 0, make_tag(0, 0), &[0x1111_2222], 32, 16);
+        let b = packetize(2, 0, make_tag(0, 0), &[0x3333_4444], 32, 16);
+        // Interleave the two senders' flits.
+        c.accept(a[0]);
+        c.accept(b[0]);
+        c.accept(b[1]);
+        c.accept(a[1]);
+        assert_eq!(c.queued(0), 2);
+        let (first, _) = c.take();
+        // b completed first.
+        assert_eq!(first[0].payload[0], 0x3333_4444);
+        let (second, _) = c.take();
+        assert_eq!(second[0].payload[0], 0x1111_2222);
+    }
+
+    #[test]
+    fn duplicate_flits_dropped() {
+        let mut c = Collector::new(vec![32], 16);
+        let flits = packetize(0, 1, make_tag(0, 0), &[0xDEAD_BEEF], 32, 16);
+        c.accept(flits[0]);
+        c.accept(flits[0]); // duplicate
+        c.accept(flits[1]);
+        assert_eq!(c.queued(0), 1);
+        let (args, _) = c.take();
+        assert_eq!(args[0].payload[0], 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn epochs_kept_separate() {
+        let mut c = Collector::new(vec![16], 16);
+        for e in [2u32, 1, 3] {
+            for f in packetize(0, 1, make_tag(e, 0), &[e as u64], 16, 16) {
+                c.accept(f);
+            }
+        }
+        assert_eq!(c.queued(0), 3);
+        // FIFO order = completion order, not epoch order.
+        assert_eq!(c.take().1, 2);
+        assert_eq!(c.take().1, 1);
+        assert_eq!(c.take().1, 3);
+    }
+
+    #[test]
+    fn randomized_shuffled_multimessage() {
+        prop::check("collector reassembly", 60, |rng| {
+            let n_args = 1 + rng.index(4);
+            let bits: Vec<usize> = (0..n_args).map(|_| 8 + rng.index(120)).collect();
+            let mut c = Collector::new(bits.clone(), 16);
+            // One message per arg, shuffled together.
+            let mut all = Vec::new();
+            let mut want = Vec::new();
+            for (a, &b) in bits.iter().enumerate() {
+                let words = b.div_ceil(64);
+                let mut payload: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+                let tail = b % 64;
+                if tail != 0 {
+                    payload[words - 1] &= (1u64 << tail) - 1;
+                }
+                want.push(payload.clone());
+                all.extend(packetize(7, 0, make_tag(1, a as u8), &payload, b, 16));
+            }
+            rng.shuffle(&mut all);
+            for f in all {
+                c.accept(f);
+            }
+            prop::assert_prop(c.ready(), "not ready after all flits")?;
+            let (args, epoch) = c.take();
+            prop::assert_prop(epoch == 1, "epoch")?;
+            for (a, m) in args.iter().enumerate() {
+                prop::assert_prop(
+                    m.payload == want[a],
+                    format!("arg {a}: {:x?} != {:x?}", m.payload, want[a]),
+                )?;
+            }
+            Ok(())
+        });
+        let _ = Rng::new(0);
+    }
+}

@@ -1,0 +1,430 @@
+//! Processing elements and their NoC wrappers (paper §II-B, Figs 3–4).
+//!
+//! A processing element is the paper's three-module sandwich:
+//!
+//! ```text
+//!   NoC router ──► Data Collector ──► input FIFOs ─start─► Data
+//!   Processor ─done─► output FIFOs ──► Data Distributor ──► NoC router
+//! ```
+//!
+//! * [`collector::Collector`] reassembles (possibly out-of-order) flits
+//!   into argument messages and implements the all-arguments-ready
+//!   *start* condition.
+//! * [`Processor`] is the *Data processing* module of Fig 4c: the
+//!   handcrafted-or-HLS compute body. Implementations in this crate are
+//!   either bit-exact Rust datapaths ([`crate::apps`]) or AOT-compiled
+//!   JAX/Pallas artifacts executed through [`crate::runtime`].
+//! * [`WrappedPe`] adds the *Data Distributor* (packetize results, one
+//!   flit per cycle into the NI) plus the compute-latency model, and
+//!   [`PeSystem`] steps a whole NoC of wrapped PEs cycle by cycle.
+//!
+//! The wrapper-generation "script" of §II-B-1 corresponds to
+//! [`wrapper::WrapperSpec`] (interface declaration + resource model) and
+//! `WrappedPe::new` (instantiation).
+
+pub mod collector;
+pub mod wrapper;
+
+use std::collections::VecDeque;
+
+use crate::noc::flit::{packetize, NodeId};
+use crate::noc::Network;
+use collector::{make_tag, ArgMessage, Collector};
+pub use wrapper::WrapperSpec;
+
+/// A result message leaving a PE: destination endpoint, destination
+/// argument index, epoch, and payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OutMessage {
+    pub dst: NodeId,
+    pub arg: u8,
+    pub epoch: u32,
+    pub payload: Vec<u64>,
+    pub bits: usize,
+}
+
+impl OutMessage {
+    /// Single-word message helper.
+    pub fn word(dst: NodeId, arg: u8, epoch: u32, value: u64, bits: usize) -> Self {
+        assert!(bits <= 64);
+        OutMessage { dst, arg, epoch, payload: vec![value], bits }
+    }
+}
+
+/// The *Data processing* module (paper Fig 4c): consumes one message per
+/// input argument, produces result messages. Implementations must be
+/// deterministic.
+pub trait Processor {
+    /// Interface declaration (argument/result widths) — the a-priori
+    /// storage knowledge the wrapper script needs.
+    fn spec(&self) -> WrapperSpec;
+
+    /// Compute latency in cycles between `start` and `done` for one
+    /// invocation (FPGA datapath depth).
+    fn latency(&self) -> u64 {
+        1
+    }
+
+    /// Per-invocation latency when it depends on the consumed messages
+    /// (e.g. a command-dispatching PE whose DMA writes take longer than a
+    /// particle evaluation). Defaults to the static [`Processor::latency`].
+    fn latency_hint(&self, _args: &[collector::ArgMessage]) -> u64 {
+        self.latency()
+    }
+
+    /// Messages to send unprompted when the system starts (orchestrator /
+    /// source nodes; ordinary PEs return nothing).
+    fn boot(&mut self) -> Vec<OutMessage> {
+        Vec::new()
+    }
+
+    /// One invocation: `args[i]` is the message consumed from input FIFO
+    /// `i`; `epoch` is the epoch of argument 0.
+    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage>;
+
+    /// Host-side DMA readback of PE-resident result memory (the RIFFA
+    /// path of the BMVM top module, Fig 14). PEs whose results stay
+    /// on-chip return them here; others return `None`.
+    fn readback(&self) -> Option<Vec<u64>> {
+        None
+    }
+}
+
+/// A processing element wrapped for the NoC (collector + processor +
+/// distributor), attached to endpoint `node`.
+pub struct WrappedPe {
+    pub node: NodeId,
+    proc_: Box<dyn Processor>,
+    collector: Collector,
+    /// (completion cycle, results) of the invocation in flight.
+    pending: Option<(u64, Vec<OutMessage>)>,
+    /// Distributor queue: completed results waiting to be packetized.
+    out_q: VecDeque<OutMessage>,
+    /// Stats: invocations completed.
+    pub invocations: u64,
+    /// Stats: busy cycles (start..done).
+    pub busy_cycles: u64,
+}
+
+impl WrappedPe {
+    pub fn new(node: NodeId, processor: Box<dyn Processor>, flit_width: u32) -> Self {
+        let spec = processor.spec();
+        WrappedPe {
+            node,
+            collector: Collector::new(spec.arg_bits.clone(), flit_width),
+            proc_: processor,
+            pending: None,
+            out_q: VecDeque::new(),
+            invocations: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// Interface spec (for resource accounting).
+    pub fn spec(&self) -> WrapperSpec {
+        self.proc_.spec()
+    }
+
+    /// Queue this PE's boot messages (called once by [`PeSystem::step`]).
+    fn boot(&mut self) {
+        let msgs = self.proc_.boot();
+        self.out_q.extend(msgs);
+    }
+
+    /// One cycle: drain ejected flits, complete/start invocations, and
+    /// hand distributor output to the NI.
+    fn tick(&mut self, net: &mut Network, cycle: u64) {
+        // Collector side.
+        while let Some(f) = net.eject(self.node) {
+            self.collector.accept(f);
+        }
+        // `done`: release results.
+        if let Some((done_at, _)) = &self.pending {
+            if cycle >= *done_at {
+                let (_, msgs) = self.pending.take().unwrap();
+                self.out_q.extend(msgs);
+                self.invocations += 1;
+            }
+        }
+        // `start`: all argument FIFOs non-empty and datapath idle.
+        if self.pending.is_none() && self.collector.ready() {
+            let (args, epoch) = self.collector.take();
+            let lat = self.proc_.latency_hint(&args).max(1);
+            let msgs = self.proc_.process(&args, epoch);
+            self.busy_cycles += lat;
+            self.pending = Some((cycle + lat, msgs));
+        }
+        // Distributor: packetize and hand to the NI (the NI injects one
+        // flit per cycle; its queue models the output FIFOs).
+        while let Some(m) = self.out_q.pop_front() {
+            for f in packetize(
+                self.node,
+                m.dst,
+                make_tag(m.epoch, m.arg),
+                &m.payload,
+                m.bits,
+                net.cfg().flit_data_width,
+            ) {
+                net.inject(self.node, f);
+            }
+        }
+    }
+
+    /// Is this PE completely drained (no compute in flight, nothing queued
+    /// to send)? Collector FIFOs may legitimately hold unmatched args.
+    pub fn quiescent(&self) -> bool {
+        self.pending.is_none() && self.out_q.is_empty()
+    }
+
+    /// Access the collector (tests / diagnostics).
+    pub fn collector(&self) -> &Collector {
+        &self.collector
+    }
+
+    /// Host DMA readback of the processor's result memory.
+    pub fn readback(&self) -> Option<Vec<u64>> {
+        self.proc_.readback()
+    }
+}
+
+/// A NoC populated with wrapped PEs — the phase-1 result: "the processing
+/// elements are plugged on to a configurable network-on-chip topology of
+/// choice".
+pub struct PeSystem {
+    pub net: Network,
+    pes: Vec<Option<WrappedPe>>,
+    booted: bool,
+}
+
+impl PeSystem {
+    pub fn new(net: Network) -> Self {
+        let n = net.n_endpoints();
+        PeSystem { net, pes: (0..n).map(|_| None).collect(), booted: false }
+    }
+
+    /// Attach a processor at endpoint `node`.
+    pub fn attach(&mut self, node: NodeId, processor: Box<dyn Processor>) {
+        let fw = self.net.cfg().flit_data_width;
+        assert!(self.pes[node].is_none(), "endpoint {node} already has a PE");
+        self.pes[node] = Some(WrappedPe::new(node, processor, fw));
+    }
+
+    /// Endpoints with no PE attached keep their raw eject queues — the
+    /// host/testbench reads them via [`Network::eject`] on `self.net`.
+    pub fn pe(&self, node: NodeId) -> Option<&WrappedPe> {
+        self.pes[node].as_ref()
+    }
+
+    /// One simulation cycle: network then PEs.
+    pub fn step(&mut self) {
+        if !self.booted {
+            self.booted = true;
+            for pe in self.pes.iter_mut().flatten() {
+                pe.boot();
+            }
+        }
+        self.net.step();
+        let cycle = self.net.cycle();
+        // Split-borrow dance: PEs are ticked one at a time against the net.
+        for i in 0..self.pes.len() {
+            if let Some(mut pe) = self.pes[i].take() {
+                pe.tick(&mut self.net, cycle);
+                self.pes[i] = Some(pe);
+            }
+        }
+    }
+
+    /// True when the network is idle and every PE is drained.
+    pub fn quiescent(&self) -> bool {
+        self.booted
+            && self.net.idle()
+            && self.pes.iter().flatten().all(|pe| pe.quiescent())
+    }
+
+    /// Run until quiescent; returns cycles elapsed. Panics after
+    /// `max_cycles` (guards tests against protocol deadlocks).
+    pub fn run(&mut self, max_cycles: u64) -> u64 {
+        let start = self.net.cycle();
+        while !self.quiescent() {
+            self.step();
+            assert!(
+                self.net.cycle() - start <= max_cycles,
+                "PE system not quiescent after {max_cycles} cycles \
+                 (net pending {})",
+                self.net.pending()
+            );
+        }
+        self.net.cycle() - start
+    }
+
+    /// Total invocations across all PEs.
+    pub fn total_invocations(&self) -> u64 {
+        self.pes.iter().flatten().map(|p| p.invocations).sum()
+    }
+
+    /// Host DMA readback at endpoint `node` (see [`Processor::readback`]).
+    pub fn readback(&self, node: NodeId) -> Option<Vec<u64>> {
+        self.pes[node].as_ref().and_then(|p| p.readback())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::{NocConfig, Topology};
+
+    /// Boot-time source: sends fixed messages, consumes nothing... except
+    /// a dummy arg it never receives (so it stays idle after boot).
+    struct Source {
+        msgs: Vec<OutMessage>,
+    }
+    impl Processor for Source {
+        fn spec(&self) -> WrapperSpec {
+            WrapperSpec::new(vec![8], vec![16])
+        }
+        fn boot(&mut self) -> Vec<OutMessage> {
+            std::mem::take(&mut self.msgs)
+        }
+        fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
+            Vec::new()
+        }
+    }
+
+    /// adder(a, b) -> a + b, sent to a sink endpoint.
+    struct Adder {
+        sink: NodeId,
+        latency: u64,
+    }
+    impl Processor for Adder {
+        fn spec(&self) -> WrapperSpec {
+            WrapperSpec::new(vec![16, 16], vec![16])
+        }
+        fn latency(&self) -> u64 {
+            self.latency
+        }
+        fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+            let sum = (args[0].payload[0] + args[1].payload[0]) & 0xFFFF;
+            vec![OutMessage::word(self.sink, 0, epoch, sum, 16)]
+        }
+    }
+
+    fn mesh_system() -> PeSystem {
+        PeSystem::new(Network::new(&Topology::Mesh { w: 2, h: 2 }, NocConfig::paper()))
+    }
+
+    #[test]
+    fn source_adder_sink_pipeline() {
+        let mut sys = mesh_system();
+        // Node 0: source sends a=5 (arg0) and b=7 (arg1) to the adder at 3.
+        sys.attach(
+            0,
+            Box::new(Source {
+                msgs: vec![
+                    OutMessage::word(3, 0, 1, 5, 16),
+                    OutMessage::word(3, 1, 1, 7, 16),
+                ],
+            }),
+        );
+        sys.attach(3, Box::new(Adder { sink: 2, latency: 4 }));
+        let cycles = sys.run(10_000);
+        assert!(cycles > 4, "must include compute latency");
+        let f = sys.net.eject(2).expect("sum delivered to sink");
+        assert_eq!(f.data, 12);
+        assert_eq!(collector::split_tag(f.tag), (1, 0));
+        assert_eq!(sys.pe(3).unwrap().invocations, 1);
+        assert_eq!(sys.pe(3).unwrap().busy_cycles, 4);
+    }
+
+    #[test]
+    fn multiple_epochs_pipeline_through() {
+        let mut sys = mesh_system();
+        let msgs: Vec<OutMessage> = (0..10u32)
+            .flat_map(|e| {
+                vec![
+                    OutMessage::word(3, 0, e, e as u64, 16),
+                    OutMessage::word(3, 1, e, 100, 16),
+                ]
+            })
+            .collect();
+        sys.attach(0, Box::new(Source { msgs }));
+        sys.attach(3, Box::new(Adder { sink: 2, latency: 2 }));
+        sys.run(10_000);
+        let mut sums = Vec::new();
+        while let Some(f) = sys.net.eject(2) {
+            sums.push((collector::split_tag(f.tag).0, f.data));
+        }
+        sums.sort_unstable();
+        let want: Vec<(u32, u64)> = (0..10u32).map(|e| (e, 100 + e as u64)).collect();
+        assert_eq!(sums, want);
+        assert_eq!(sys.pe(3).unwrap().invocations, 10);
+    }
+
+    #[test]
+    fn latency_serializes_invocations() {
+        // With latency L and E epochs, the PE's busy time is at least E*L.
+        let mut sys = mesh_system();
+        let e = 8u32;
+        let msgs: Vec<OutMessage> = (0..e)
+            .flat_map(|ep| {
+                vec![
+                    OutMessage::word(3, 0, ep, 1, 16),
+                    OutMessage::word(3, 1, ep, 2, 16),
+                ]
+            })
+            .collect();
+        sys.attach(0, Box::new(Source { msgs }));
+        sys.attach(3, Box::new(Adder { sink: 2, latency: 50 }));
+        let cycles = sys.run(100_000);
+        assert!(
+            cycles >= 50 * e as u64,
+            "{cycles} cycles < {e} serialized invocations × 50"
+        );
+    }
+
+    #[test]
+    fn multiflit_arguments_cross_the_wrapper() {
+        // 80-bit arguments need 5 flits each at width 16.
+        struct Wide {
+            sink: NodeId,
+        }
+        impl Processor for Wide {
+            fn spec(&self) -> WrapperSpec {
+                WrapperSpec::new(vec![80], vec![80])
+            }
+            fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+                let mut p = args[0].payload.clone();
+                p[0] = p[0].wrapping_add(1);
+                vec![OutMessage { dst: self.sink, arg: 0, epoch, payload: p, bits: 80 }]
+            }
+        }
+        let mut sys = mesh_system();
+        sys.attach(
+            0,
+            Box::new(Source {
+                msgs: vec![OutMessage {
+                    dst: 3,
+                    arg: 0,
+                    epoch: 9,
+                    payload: vec![0xAAAA_BBBB_CCCC_DDDD, 0x1234],
+                    bits: 80,
+                }],
+            }),
+        );
+        sys.attach(3, Box::new(Wide { sink: 1 }));
+        sys.run(10_000);
+        let mut flits = Vec::new();
+        while let Some(f) = sys.net.eject(1) {
+            flits.push(f);
+        }
+        assert_eq!(flits.len(), 5);
+        let back = crate::noc::flit::depacketize(&flits, 80, 16);
+        assert_eq!(back[0], 0xAAAA_BBBB_CCCC_DDDE);
+        assert_eq!(back[1] & 0xFFFF, 0x1234);
+    }
+
+    #[test]
+    fn quiescence_requires_boot() {
+        let sys = mesh_system();
+        assert!(!sys.quiescent(), "unbooted system is not quiescent");
+    }
+}

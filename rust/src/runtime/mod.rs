@@ -1,0 +1,207 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Layer 2/3 seam of the three-layer architecture: `python/compile/aot.py`
+//! lowers the JAX models (which call the Pallas kernels) to **HLO text**
+//! under `artifacts/`; this module loads that text with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client
+//! and executes it from Rust — Python is never on the request path.
+//!
+//! HLO *text* (not a serialized proto) is the interchange format because
+//! jax ≥ 0.5 emits 64-bit instruction ids that the crate's xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+//!
+//! The exported entry points and shapes (mirroring `aot.py`):
+//!
+//! | artifact | inputs | outputs |
+//! |----------|--------|---------|
+//! | `ldpc_fano_b16_i5`   | i32[16,7] LLRs | (i32[16,7] sums,) |
+//! | `bmvm_pow_n64`       | u32[64,2] A, u32[2] v, i32 r | (u32[2],) |
+//! | `pfilter_weights_n64`| i32[16] ref, i32[64,16] cands, i32[64,2] parts | (i64[2] center, i64[64] rho) |
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Batch size of the LDPC artifact.
+pub const LDPC_BATCH: usize = 16;
+/// Iterations baked into the LDPC artifact.
+pub const LDPC_NITER: u32 = 5;
+/// Matrix dimension of the BMVM artifact.
+pub const BMVM_N: usize = 64;
+/// Particle count of the particle-filter artifact.
+pub const PF_PARTICLES: usize = 64;
+/// Histogram bins.
+pub const PF_BINS: usize = 16;
+
+/// Default artifacts directory: `$FABRICFLOW_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("FABRICFLOW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU engine holding compiled executables.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact.
+pub struct XlaExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl XlaEngine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(XlaEngine { client })
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<XlaExec> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(XlaExec {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Load a named artifact from [`artifacts_dir`].
+    pub fn load_artifact(&self, name: &str) -> Result<XlaExec> {
+        self.load_hlo(artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+impl XlaExec {
+    /// Execute with literal inputs; returns the elements of the output
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Build an i32 literal of the given dimensions from row-major data.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build a u32 literal.
+pub fn lit_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar i32 literal.
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+// ---------------------------------------------------------------------------
+// Typed wrappers over the three artifacts
+// ---------------------------------------------------------------------------
+
+/// Batched LDPC decode via the AOT artifact.
+pub struct XlaLdpcDecoder {
+    exec: XlaExec,
+}
+
+impl XlaLdpcDecoder {
+    pub fn load(engine: &XlaEngine) -> Result<Self> {
+        Ok(XlaLdpcDecoder {
+            exec: engine.load_artifact(&format!("ldpc_fano_b{LDPC_BATCH}_i{LDPC_NITER}"))?,
+        })
+    }
+
+    /// Decode a batch of LLR rows (`batch x 7`, padded to [`LDPC_BATCH`]).
+    /// Returns the final posterior sums per row.
+    pub fn decode_batch(&self, llrs: &[[i32; 7]]) -> Result<Vec<[i32; 7]>> {
+        assert!(llrs.len() <= LDPC_BATCH);
+        let mut flat = vec![0i32; LDPC_BATCH * 7];
+        for (i, row) in llrs.iter().enumerate() {
+            flat[i * 7..(i + 1) * 7].copy_from_slice(row);
+        }
+        let input = lit_i32(&flat, &[LDPC_BATCH as i64, 7])?;
+        let out = self.exec.run(&[input])?;
+        let sums: Vec<i32> = out[0].to_vec()?;
+        Ok(llrs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let mut row = [0i32; 7];
+                row.copy_from_slice(&sums[i * 7..(i + 1) * 7]);
+                row
+            })
+            .collect())
+    }
+}
+
+/// Dense GF(2) A^r·v via the AOT artifact (the XLA-resident oracle the
+/// BMVM hardware path is cross-checked against).
+pub struct XlaBmvm {
+    exec: XlaExec,
+}
+
+impl XlaBmvm {
+    pub fn load(engine: &XlaEngine) -> Result<Self> {
+        Ok(XlaBmvm { exec: engine.load_artifact(&format!("bmvm_pow_n{BMVM_N}"))? })
+    }
+
+    /// `a_rows` = packed rows of A (row-major, 2 u32 per row), `v` packed.
+    pub fn power_matvec(&self, a_rows: &[u32], v: &[u32], r: i32) -> Result<Vec<u32>> {
+        assert_eq!(a_rows.len(), BMVM_N * BMVM_N / 32);
+        assert_eq!(v.len(), BMVM_N / 32);
+        let a = lit_u32(a_rows, &[BMVM_N as i64, (BMVM_N / 32) as i64])?;
+        let vv = lit_u32(v, &[(BMVM_N / 32) as i64])?;
+        let out = self.exec.run(&[a, vv, lit_scalar_i32(r)])?;
+        Ok(out[0].to_vec()?)
+    }
+}
+
+/// Particle weighting + center update via the AOT artifact.
+pub struct XlaPfWeights {
+    exec: XlaExec,
+}
+
+impl XlaPfWeights {
+    pub fn load(engine: &XlaEngine) -> Result<Self> {
+        Ok(XlaPfWeights {
+            exec: engine.load_artifact(&format!("pfilter_weights_n{PF_PARTICLES}"))?,
+        })
+    }
+
+    /// Returns (center (x, y), rho per particle).
+    pub fn weights(
+        &self,
+        ref_hist: &[i32; PF_BINS],
+        cand_hists: &[[i32; PF_BINS]],
+        particles: &[(i32, i32)],
+    ) -> Result<((i64, i64), Vec<i64>)> {
+        assert_eq!(cand_hists.len(), PF_PARTICLES);
+        assert_eq!(particles.len(), PF_PARTICLES);
+        let cands: Vec<i32> = cand_hists.iter().flatten().copied().collect();
+        let parts: Vec<i32> = particles.iter().flat_map(|&(x, y)| [x, y]).collect();
+        let out = self.exec.run(&[
+            lit_i32(ref_hist.as_slice(), &[PF_BINS as i64])?,
+            lit_i32(&cands, &[PF_PARTICLES as i64, PF_BINS as i64])?,
+            lit_i32(&parts, &[PF_PARTICLES as i64, 2])?,
+        ])?;
+        let center: Vec<i64> = out[0].to_vec()?;
+        let rho: Vec<i64> = out[1].to_vec()?;
+        Ok(((center[0], center[1]), rho))
+    }
+}

@@ -1,0 +1,326 @@
+//! Quasi-SERDES link endpoints (paper §III, Fig 6).
+//!
+//! When the partitioner cuts an on-chip NoC link, the two halves keep
+//! talking through a pair of serializer/deserializer endpoints implemented
+//! over general-purpose FPGA pins — "quasi" because more than one pin
+//! carries the serialized flit (the paper's example uses an 8-wire link).
+//! The protocol (paper §III):
+//!
+//! > whenever a valid data (valid bit in the flit) is presented as input
+//! > from the router keep it in buffer and start sending 8 bits at a time
+//! > with MSB first; similarly, whenever a valid 8 bit MSB is received
+//! > reconstruct output data and put the data on the output port to the
+//! > router.
+//!
+//! [`SerdesChannel`] models one direction of such a link at cycle
+//! granularity: a flit occupies the pins for
+//! `ceil(flit_bits / pins) × clock_div` NoC cycles (`clock_div` models the
+//! slower off-chip I/O clock), transfers are pipelined back-to-back, and a
+//! bounded TX buffer back-pressures the router exactly like the paper's
+//! "keep it in buffer". [`serialize_flit`]/[`deserialize_flit`] implement
+//! the MSB-first wire format bit-exactly; the channel's timing model and
+//! the wire format are cross-checked in tests.
+
+use std::collections::VecDeque;
+
+use crate::noc::flit::Flit;
+use crate::resources::{self, Resources};
+use crate::util::bits::BitVec;
+use crate::util::clog2;
+
+/// Physical parameters of one quasi-SERDES link direction.
+#[derive(Clone, Copy, Debug)]
+pub struct SerdesConfig {
+    /// FPGA pins (wires) carrying the serialized flit. Paper: 8.
+    pub pins: u32,
+    /// NoC clock cycles per pin transfer (off-chip I/O runs slower than
+    /// the 100 MHz fabric; 1 = same clock).
+    pub clock_div: u32,
+    /// TX-side flit buffer depth ("keep it in buffer").
+    pub tx_buffer: usize,
+}
+
+impl Default for SerdesConfig {
+    fn default() -> Self {
+        // The paper's example link: 8 wires; buffer mirrors the router's
+        // flit buffer depth.
+        SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 }
+    }
+}
+
+impl SerdesConfig {
+    /// Cycles to serialize one flit of `flit_bits` total bits.
+    pub fn cycles_per_flit(&self, flit_bits: u32) -> u64 {
+        (flit_bits.div_ceil(self.pins) as u64) * self.clock_div as u64
+    }
+
+    /// FPGA cost of ONE endpoint (TX or RX side): shift register over the
+    /// full flit, bit counter, pin drivers, valid/handshake FSM, and the
+    /// TX flit buffer.
+    pub fn endpoint_resources(&self, flit_bits: u32) -> Resources {
+        resources::register(flit_bits)                       // shift register
+            + resources::counter(clog2(flit_bits as usize).max(1)) // bit counter
+            + resources::fsm(4)                              // idle/load/shift/present
+            + resources::Resources::new(self.pins as u64, self.pins as u64) // pin IOB regs
+            + resources::fifo(flit_bits, self.tx_buffer as u32)
+    }
+}
+
+/// Total serialized bits of a flit on the wire: payload + header
+/// (src, dst, tag, seq, last, vc) + valid bit. On the FPGA the header is
+/// part of the CONNECT flit; we serialize the same information.
+pub fn wire_bits(flit_data_width: u32, n_endpoints: usize) -> u32 {
+    let id = clog2(n_endpoints.max(2));
+    // valid + last + vc(2) + 2×endpoint id + tag(16) + seq(8) + payload
+    1 + 1 + 2 + 2 * id + 16 + 8 + flit_data_width
+}
+
+/// Serialize a flit MSB-first into per-cycle pin samples (`pins` bits per
+/// sample, last sample zero-padded). Bit-exact model of the Fig 6 shifter.
+pub fn serialize_flit(f: &Flit, flit_data_width: u32, n_endpoints: usize, pins: u32) -> Vec<u64> {
+    let id = clog2(n_endpoints.max(2)) as usize;
+    let total = wire_bits(flit_data_width, n_endpoints) as usize;
+    let mut bits = BitVec::zeros(total);
+    // Field layout (LSB..): payload | seq | tag | dst | src | vc | last | valid
+    let mut at = 0;
+    bits.insert_u64(at, flit_data_width as usize, f.data);
+    at += flit_data_width as usize;
+    bits.insert_u64(at, 8, f.seq as u64);
+    at += 8;
+    bits.insert_u64(at, 16, f.tag as u64);
+    at += 16;
+    bits.insert_u64(at, id, f.dst as u64);
+    at += id;
+    bits.insert_u64(at, id, f.src as u64);
+    at += id;
+    bits.insert_u64(at, 2, f.vc as u64);
+    at += 2;
+    bits.insert_u64(at, 1, f.last as u64);
+    at += 1;
+    bits.insert_u64(at, 1, 1); // valid
+    at += 1;
+    debug_assert_eq!(at, total);
+
+    // MSB first, `pins` bits per cycle.
+    let mut samples = Vec::with_capacity(total.div_ceil(pins as usize));
+    let msb: Vec<bool> = bits.iter_msb_first().collect();
+    for chunk in msb.chunks(pins as usize) {
+        let mut s = 0u64;
+        for (i, &b) in chunk.iter().enumerate() {
+            // First bit of the chunk drives the highest-numbered pin.
+            if b {
+                s |= 1 << (pins as usize - 1 - i);
+            }
+        }
+        samples.push(s);
+    }
+    samples
+}
+
+/// Reassemble a flit from pin samples produced by [`serialize_flit`].
+/// Returns `None` if the valid bit is clear.
+pub fn deserialize_flit(
+    samples: &[u64],
+    flit_data_width: u32,
+    n_endpoints: usize,
+    pins: u32,
+) -> Option<Flit> {
+    let id = clog2(n_endpoints.max(2)) as usize;
+    let total = wire_bits(flit_data_width, n_endpoints) as usize;
+    let mut bits = BitVec::zeros(total);
+    // Undo MSB-first: sample 0 carries bits total-1 .. total-pins.
+    let mut pos = total;
+    'outer: for &s in samples {
+        for i in 0..pins as usize {
+            if pos == 0 {
+                break 'outer;
+            }
+            pos -= 1;
+            let bit = (s >> (pins as usize - 1 - i)) & 1 == 1;
+            bits.set(pos, bit);
+        }
+    }
+    let mut at = 0;
+    let data = bits.extract_u64(at, flit_data_width as usize);
+    at += flit_data_width as usize;
+    let seq = bits.extract_u64(at, 8) as u32;
+    at += 8;
+    let tag = bits.extract_u64(at, 16) as u32;
+    at += 16;
+    let dst = bits.extract_u64(at, id) as usize;
+    at += id;
+    let src = bits.extract_u64(at, id) as usize;
+    at += id;
+    let vc = bits.extract_u64(at, 2) as u8;
+    at += 2;
+    let last = bits.extract_u64(at, 1) == 1;
+    at += 1;
+    let valid = bits.extract_u64(at, 1) == 1;
+    if !valid {
+        return None;
+    }
+    Some(Flit { src, dst, vc, tag, seq, last, data, injected_at: 0 })
+}
+
+/// One direction of a cut link at cycle granularity. The router-side
+/// output latch feeds [`SerdesChannel::push`]; [`SerdesChannel::pop_ready`]
+/// yields flits whose serialization has completed.
+#[derive(Clone, Debug)]
+pub struct SerdesChannel {
+    pub cfg: SerdesConfig,
+    /// Serialization time for one flit, precomputed.
+    pub ser_cycles: u64,
+    /// (flit, cycle at which its last pin sample lands).
+    queue: VecDeque<(Flit, u64)>,
+    /// Pins busy until this cycle.
+    busy_until: u64,
+    /// Total flits carried (stats).
+    pub carried: u64,
+}
+
+impl SerdesChannel {
+    pub fn new(cfg: SerdesConfig, flit_bits: u32) -> Self {
+        SerdesChannel {
+            ser_cycles: cfg.cycles_per_flit(flit_bits),
+            cfg,
+            queue: VecDeque::new(),
+            busy_until: 0,
+            carried: 0,
+        }
+    }
+
+    /// Is there TX buffer space for another flit?
+    pub fn can_accept(&self) -> bool {
+        self.queue.len() < self.cfg.tx_buffer
+    }
+
+    /// Accept a flit from the router at `cycle`; it completes transfer at
+    /// `max(busy_until, cycle) + ser_cycles`.
+    pub fn push(&mut self, flit: Flit, cycle: u64) {
+        debug_assert!(self.can_accept());
+        let start = self.busy_until.max(cycle);
+        let done = start + self.ser_cycles;
+        self.busy_until = done;
+        self.queue.push_back((flit, done));
+    }
+
+    /// Pop the next flit whose transfer completed by `cycle`.
+    pub fn pop_ready(&mut self, cycle: u64) -> Option<Flit> {
+        if let Some(&(_, done)) = self.queue.front() {
+            if done <= cycle {
+                self.carried += 1;
+                return self.queue.pop_front().map(|(f, _)| f);
+            }
+        }
+        None
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn wire_format_roundtrip_randomized() {
+        prop::check("serdes wire roundtrip", 200, |rng| {
+            let n_eps = 2 + rng.index(62);
+            let width = 8 + rng.index(25) as u32;
+            let pins = 1 + rng.index(16) as u32;
+            let f = Flit {
+                src: rng.index(n_eps),
+                dst: rng.index(n_eps),
+                vc: rng.index(4) as u8,
+                tag: rng.next_u32() & 0xFFFF,
+                seq: rng.index(256) as u32,
+                last: rng.bool(),
+                data: rng.next_u64() & ((1 << width) - 1),
+                injected_at: 0,
+            };
+            let samples = serialize_flit(&f, width, n_eps, pins);
+            assert_eq!(
+                samples.len(),
+                (wire_bits(width, n_eps) as usize).div_ceil(pins as usize)
+            );
+            let g = deserialize_flit(&samples, width, n_eps, pins).expect("valid");
+            prop::assert_prop(
+                g.src == f.src
+                    && g.dst == f.dst
+                    && g.vc == f.vc
+                    && g.tag == f.tag
+                    && g.seq == f.seq
+                    && g.last == f.last
+                    && g.data == f.data,
+                format!("{f:?} -> {g:?} (pins={pins} width={width})"),
+            )
+        });
+    }
+
+    #[test]
+    fn invalid_wire_data_rejected() {
+        // All-zero samples carry valid = 0.
+        let zero = vec![0u64; 10];
+        assert!(deserialize_flit(&zero, 16, 16, 8).is_none());
+    }
+
+    #[test]
+    fn paper_link_timing_8_pins() {
+        // Paper config: 16-bit payload, 16 endpoints, 8 wires.
+        let bits = wire_bits(16, 16); // 1+1+2+8+16+8+16 = 52
+        assert_eq!(bits, 52);
+        let cfg = SerdesConfig::default();
+        assert_eq!(cfg.cycles_per_flit(bits), 7); // ceil(52/8)
+        let slow = SerdesConfig { clock_div: 4, ..cfg };
+        assert_eq!(slow.cycles_per_flit(bits), 28);
+    }
+
+    #[test]
+    fn channel_pipelines_back_to_back() {
+        let cfg = SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 4 };
+        let mut ch = SerdesChannel::new(cfg, 52); // 7 cycles/flit
+        ch.push(Flit::single(0, 1, 0, 1), 0);
+        ch.push(Flit::single(0, 1, 1, 2), 0);
+        assert!(ch.pop_ready(6).is_none());
+        assert_eq!(ch.pop_ready(7).unwrap().data, 1);
+        assert!(ch.pop_ready(13).is_none(), "second flit lands at 14");
+        assert_eq!(ch.pop_ready(14).unwrap().data, 2);
+        assert_eq!(ch.carried, 2);
+    }
+
+    #[test]
+    fn channel_backpressures_at_tx_buffer() {
+        let cfg = SerdesConfig { pins: 1, clock_div: 1, tx_buffer: 2 };
+        let mut ch = SerdesChannel::new(cfg, 52);
+        ch.push(Flit::single(0, 1, 0, 0), 0);
+        ch.push(Flit::single(0, 1, 1, 0), 0);
+        assert!(!ch.can_accept(), "buffer full");
+        assert_eq!(ch.in_flight(), 2);
+        let _ = ch.pop_ready(52).unwrap();
+        assert!(ch.can_accept());
+    }
+
+    #[test]
+    fn more_pins_serialize_faster() {
+        let mut rng = Rng::new(3);
+        let bits = wire_bits(16, 64);
+        let mut last = u64::MAX;
+        for pins in [1u32, 4, 8, 16] {
+            let c = SerdesConfig { pins, clock_div: 1, tx_buffer: 8 }.cycles_per_flit(bits);
+            assert!(c < last, "pins={pins}");
+            last = c;
+        }
+        let _ = rng.next_u64();
+    }
+
+    #[test]
+    fn endpoint_resources_nonzero_and_scale() {
+        let small = SerdesConfig { pins: 4, clock_div: 1, tx_buffer: 4 }.endpoint_resources(52);
+        let big = SerdesConfig { pins: 16, clock_div: 1, tx_buffer: 16 }.endpoint_resources(80);
+        assert!(small.regs > 0 && small.luts > 0);
+        assert!(big.regs > small.regs);
+    }
+}

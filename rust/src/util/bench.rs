@@ -1,0 +1,223 @@
+//! Criterion-style micro-benchmark harness.
+//!
+//! `criterion` is not available in the offline container, so the bench
+//! targets under `rust/benches/` (declared with `harness = false`) use this
+//! module instead: warmup, sampled measurement, mean / σ / median / min,
+//! and optional throughput reporting. Output is plain text, one line per
+//! benchmark, stable enough to diff across runs.
+
+use std::time::{Duration, Instant};
+
+/// Configuration for a measurement run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock spent warming up before measuring.
+    pub warmup: Duration,
+    /// Number of samples collected.
+    pub samples: usize,
+    /// Minimum wall-clock per sample; iterations are batched to reach it.
+    pub min_sample_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            min_sample_time: Duration::from_millis(20),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for long end-to-end benches (table regeneration).
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            min_sample_time: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Summary statistics for one benchmark, in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub iters_total: u64,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.2} ns")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.2} s ", ns / 1e9)
+    }
+}
+
+/// A named group of benchmarks sharing a config (mirrors criterion's
+/// `BenchmarkGroup`).
+pub struct Bench {
+    config: BenchConfig,
+    results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `FABRICFLOW_BENCH_QUICK=1` drops sample counts for CI-style runs.
+        let config = if std::env::var("FABRICFLOW_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Bench { config, results: Vec::new() }
+    }
+
+    pub fn with_config(config: BenchConfig) -> Self {
+        Bench { config, results: Vec::new() }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call, and
+    /// print + record the stats. The closure's return value is
+    /// black-boxed to keep the optimizer honest.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        // Warmup, also calibrates iterations per sample.
+        let warm_start = Instant::now();
+        let mut iters_per_probe = 1u64;
+        let mut last_probe_ns = f64::MAX;
+        while warm_start.elapsed() < self.config.warmup {
+            let t = Instant::now();
+            for _ in 0..iters_per_probe {
+                black_box(f());
+            }
+            let el = t.elapsed();
+            last_probe_ns = el.as_nanos() as f64 / iters_per_probe as f64;
+            if el < self.config.min_sample_time && iters_per_probe < (1 << 30) {
+                iters_per_probe *= 2;
+            }
+        }
+        let per_iter_ns = last_probe_ns.max(0.1);
+        let iters_per_sample = ((self.config.min_sample_time.as_nanos() as f64
+            / per_iter_ns)
+            .ceil() as u64)
+            .max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.config.samples);
+        let mut iters_total = 0u64;
+        for _ in 0..self.config.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            let el = t.elapsed().as_nanos() as f64;
+            samples_ns.push(el / iters_per_sample as f64);
+            iters_total += iters_per_sample;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len() as f64;
+        let mean = samples_ns.iter().sum::<f64>() / n;
+        let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let stats = Stats {
+            name: name.to_string(),
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            median_ns: samples_ns[samples_ns.len() / 2],
+            min_ns: samples_ns[0],
+            iters_total,
+        };
+        println!(
+            "bench {:<48} mean {}  σ {}  median {}  min {}",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.stddev_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.min_ns),
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Like [`Bench::bench`] but also reports items/second throughput for
+    /// `items` logical elements processed per iteration.
+    pub fn bench_throughput<R>(
+        &mut self,
+        name: &str,
+        items: u64,
+        f: impl FnMut() -> R,
+    ) -> &Stats {
+        let idx = self.results.len();
+        self.bench(name, f);
+        let s = &self.results[idx];
+        let per_sec = items as f64 / (s.mean_ns / 1e9);
+        println!(
+            "      {:<48} throughput {:>12.0} items/s ({} items/iter)",
+            s.name, per_sec, items
+        );
+        &self.results[idx]
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            min_sample_time: Duration::from_micros(200),
+        });
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns * 1.5);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_reports() {
+        let mut b = Bench::with_config(BenchConfig {
+            warmup: Duration::from_millis(2),
+            samples: 2,
+            min_sample_time: Duration::from_micros(100),
+        });
+        b.bench_throughput("tp", 1000, || std::hint::black_box(3 * 7));
+        assert_eq!(b.results().len(), 1);
+    }
+}

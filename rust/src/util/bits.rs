@@ -1,0 +1,237 @@
+//! Packed bit vectors and helpers shared by the GF(2) algebra ([`crate::gf2`])
+//! and the quasi-SERDES pin model ([`crate::serdes`]).
+
+/// A fixed-length bit vector packed into `u64` words, LSB-first
+/// (bit `i` lives in word `i / 64`, position `i % 64`).
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl std::fmt::Debug for BitVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BitVec[{}]", self.len)?;
+        f.write_str(" ")?;
+        for i in 0..self.len.min(64) {
+            f.write_str(if self.get(i) { "1" } else { "0" })?;
+        }
+        if self.len > 64 {
+            f.write_str("…")?;
+        }
+        Ok(())
+    }
+}
+
+impl BitVec {
+    /// All-zero bit vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        BitVec { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    /// Build from a boolean slice.
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            v.set(i, b);
+        }
+        v
+    }
+
+    /// Build from the low `len` bits of `value` (LSB = bit 0).
+    pub fn from_u64(value: u64, len: usize) -> Self {
+        assert!(len <= 64);
+        let mut v = BitVec::zeros(len);
+        if len > 0 {
+            v.words[0] = value & Self::mask(len);
+        }
+        v
+    }
+
+    fn mask(len: usize) -> u64 {
+        if len >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << len) - 1
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw packed words (last word zero-padded past `len`).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, value: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if value {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// XOR-accumulate another vector of the same length.
+    pub fn xor_assign(&mut self, other: &BitVec) {
+        assert_eq!(self.len, other.len, "BitVec length mismatch");
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a ^= b;
+        }
+    }
+
+    /// Bitwise AND.
+    pub fn and(&self, other: &BitVec) -> BitVec {
+        assert_eq!(self.len, other.len);
+        BitVec {
+            len: self.len,
+            words: self.words.iter().zip(&other.words).map(|(a, b)| a & b).collect(),
+        }
+    }
+
+    /// Number of set bits.
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Parity (XOR of all bits) — GF(2) dot products reduce to this.
+    pub fn parity(&self) -> bool {
+        self.popcount() % 2 == 1
+    }
+
+    /// Extract bits `[lo, lo+n)` as the low bits of a u64 (n <= 64).
+    pub fn extract_u64(&self, lo: usize, n: usize) -> u64 {
+        assert!(n <= 64 && lo + n <= self.len);
+        let mut out = 0u64;
+        for i in 0..n {
+            if self.get(lo + i) {
+                out |= 1 << i;
+            }
+        }
+        out
+    }
+
+    /// Write the low `n` bits of `value` into `[lo, lo+n)`.
+    pub fn insert_u64(&mut self, lo: usize, n: usize, value: u64) {
+        assert!(n <= 64 && lo + n <= self.len);
+        for i in 0..n {
+            self.set(lo + i, (value >> i) & 1 == 1);
+        }
+    }
+
+    /// All-zero test.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Random bit vector (each bit Bernoulli(1/2)).
+    pub fn random(len: usize, rng: &mut crate::util::Rng) -> Self {
+        let mut v = BitVec::zeros(len);
+        for w in v.words.iter_mut() {
+            *w = rng.next_u64();
+        }
+        let tail = len % 64;
+        if tail != 0 {
+            *v.words.last_mut().unwrap() &= Self::mask(tail);
+        }
+        v
+    }
+
+    /// Iterate bits MSB-first over the logical vector — the quasi-SERDES
+    /// wire order (the paper sends MSB first).
+    pub fn iter_msb_first(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).rev().map(move |i| self.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(63, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(63) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(65) && !v.get(128));
+        assert_eq!(v.popcount(), 4);
+        v.set(64, false);
+        assert!(!v.get(64));
+        assert_eq!(v.popcount(), 3);
+    }
+
+    #[test]
+    fn from_u64_extract_roundtrip() {
+        let v = BitVec::from_u64(0b1011_0110, 8);
+        assert_eq!(v.extract_u64(0, 8), 0b1011_0110);
+        assert_eq!(v.extract_u64(1, 3), 0b011);
+        assert_eq!(v.len(), 8);
+    }
+
+    #[test]
+    fn insert_extract_across_word_boundary() {
+        let mut v = BitVec::zeros(100);
+        v.insert_u64(60, 16, 0xBEEF);
+        assert_eq!(v.extract_u64(60, 16), 0xBEEF);
+        assert_eq!(v.extract_u64(0, 60), 0);
+    }
+
+    #[test]
+    fn xor_and_parity() {
+        let a = BitVec::from_u64(0b1100, 4);
+        let b = BitVec::from_u64(0b1010, 4);
+        let mut c = a.clone();
+        c.xor_assign(&b);
+        assert_eq!(c.extract_u64(0, 4), 0b0110);
+        assert!(!c.parity());
+        assert_eq!(a.and(&b).extract_u64(0, 4), 0b1000);
+        assert!(a.and(&b).parity());
+    }
+
+    #[test]
+    fn msb_first_order() {
+        let v = BitVec::from_u64(0b1101, 4); // bits 0..3 = 1,0,1,1
+        let seq: Vec<bool> = v.iter_msb_first().collect();
+        assert_eq!(seq, vec![true, true, false, true]); // bit3,bit2,bit1,bit0
+    }
+
+    #[test]
+    fn random_respects_length_mask() {
+        let mut rng = Rng::new(11);
+        for len in [1usize, 7, 63, 64, 65, 127, 130] {
+            let v = BitVec::random(len, &mut rng);
+            // No bits set beyond `len`.
+            let total: u32 = v.words().iter().map(|w| w.count_ones()).sum();
+            assert_eq!(total, v.popcount());
+            if len % 64 != 0 {
+                let last = *v.words().last().unwrap();
+                assert_eq!(last >> (len % 64), 0, "tail bits must be clear");
+            }
+        }
+    }
+
+    #[test]
+    fn from_bools_matches() {
+        let v = BitVec::from_bools(&[true, false, true]);
+        assert!(v.get(0) && !v.get(1) && v.get(2));
+        assert_eq!(v.len(), 3);
+    }
+}

@@ -1,0 +1,81 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build container is offline and only the crates vendored for the
+//! `xla` dependency are available, so the usual ecosystem helpers
+//! (`rand`, `criterion`, `proptest`) are re-implemented here in minimal,
+//! deterministic form:
+//!
+//! * [`rng`] — SplitMix64-seeded xoshiro256++ PRNG with uniform / normal /
+//!   choice helpers. Every simulation in the crate is seeded and
+//!   reproducible.
+//! * [`bench`] — a criterion-style measurement harness (warmup, sampled
+//!   runs, mean/σ/median, throughput) used by all `harness = false` bench
+//!   targets under `rust/benches/`.
+//! * [`prop`] — a tiny randomized property-test driver: run a property over
+//!   N seeded random cases and report the first failing seed so it can be
+//!   replayed.
+//! * [`bits`] — packed bit-vector/bit-matrix helpers shared by the GF(2)
+//!   code and the SERDES pin model.
+
+pub mod rng;
+pub mod bench;
+pub mod prop;
+pub mod bits;
+
+pub use rng::Rng;
+
+/// Format a cycle count at a given clock as engineering-notation time.
+///
+/// Used by the table harness: the paper reports hardware times as
+/// `cycles / 100 MHz`.
+pub fn cycles_to_ms(cycles: u64, clock_hz: f64) -> f64 {
+    (cycles as f64) / clock_hz * 1e3
+}
+
+/// Integer ceiling division.
+#[inline]
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `ceil(log2(n))` for n >= 1; 0 for n <= 1.
+#[inline]
+pub const fn clog2(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 8), 0);
+        assert_eq!(div_ceil(1, 8), 1);
+        assert_eq!(div_ceil(8, 8), 1);
+        assert_eq!(div_ceil(9, 8), 2);
+        assert_eq!(div_ceil(16, 8), 2);
+    }
+
+    #[test]
+    fn clog2_basics() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(4), 2);
+        assert_eq!(clog2(5), 3);
+        assert_eq!(clog2(16), 4);
+        assert_eq!(clog2(17), 5);
+    }
+
+    #[test]
+    fn cycles_to_ms_at_100mhz() {
+        // 100 MHz -> 10 ns per cycle; 100_000 cycles = 1 ms.
+        let ms = cycles_to_ms(100_000, 100e6);
+        assert!((ms - 1.0).abs() < 1e-12);
+    }
+}

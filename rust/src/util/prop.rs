@@ -1,0 +1,77 @@
+//! Minimal randomized property-test driver (proptest is unavailable in the
+//! offline container).
+//!
+//! A property is a closure over a seeded [`Rng`]; [`check`] runs it over
+//! `cases` independent seeds derived from a base seed and panics with the
+//! *failing seed* on the first violation so the case can be replayed:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the libxla_extension rpath.
+//! use fabricflow::util::{prop, Rng};
+//! prop::check("add commutes", 64, |rng| {
+//!     let a = rng.next_u32() as u64;
+//!     let b = rng.next_u32() as u64;
+//!     prop::assert_prop(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Result of a single property case: `Ok(())` or an explanatory message.
+pub type CaseResult = Result<(), String>;
+
+/// Convenience: turn a boolean + message into a [`CaseResult`].
+pub fn assert_prop(ok: bool, msg: impl Into<String>) -> CaseResult {
+    if ok {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Base seed; override with `FABRICFLOW_PROP_SEED` to reproduce a failure
+/// reported by [`check`].
+fn base_seed() -> u64 {
+    std::env::var("FABRICFLOW_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFAB_C0DE)
+}
+
+/// Run `property` over `cases` seeded random cases. Panics on the first
+/// failure, printing the per-case seed to replay with
+/// `FABRICFLOW_PROP_SEED=<seed> cargo test <name>` (with `cases = 1`
+/// semantics: the failing case is always case 0 of that seed).
+pub fn check(name: &str, cases: u64, mut property: impl FnMut(&mut Rng) -> CaseResult) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay: FABRICFLOW_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("xor involutive", 32, |rng| {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            assert_prop((a ^ b) ^ b == a, "xor")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+}

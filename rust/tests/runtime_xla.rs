@@ -1,0 +1,154 @@
+//! Cross-language integration: the AOT-compiled JAX/Pallas artifacts must
+//! agree bit-for-bit with the Rust-native datapaths — the glue contract
+//! of the three-layer architecture.
+//!
+//! Requires `make artifacts` (the tests skip with a warning otherwise so
+//! `cargo test` stays green on a fresh checkout).
+
+use fabricflow::apps::bmvm::dense_power_matvec;
+use fabricflow::apps::ldpc::minsum::{MinsumVariant, ReferenceDecoder};
+use fabricflow::apps::pfilter::histo::{
+    bhattacharyya_rho, particle_weight, weighted_histogram, weighted_mean, BINS,
+};
+use fabricflow::apps::pfilter::video::synthetic_video;
+use fabricflow::gf2::pg::PgLdpcCode;
+use fabricflow::gf2::Gf2Matrix;
+use fabricflow::runtime::{
+    XlaBmvm, XlaEngine, XlaLdpcDecoder, XlaPfWeights, BMVM_N, LDPC_NITER, PF_PARTICLES,
+};
+use fabricflow::util::bits::BitVec;
+use fabricflow::util::Rng;
+
+fn engine_or_skip() -> Option<XlaEngine> {
+    if !fabricflow::runtime::artifacts_dir().exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(XlaEngine::cpu().expect("PJRT CPU client"))
+}
+
+#[test]
+fn ldpc_artifact_matches_rust_reference() {
+    let Some(engine) = engine_or_skip() else { return };
+    let dec = XlaLdpcDecoder::load(&engine).expect("load ldpc artifact");
+    let reference = ReferenceDecoder::new(PgLdpcCode::fano(), MinsumVariant::SignMagnitude);
+    let mut rng = Rng::new(0xA11CE);
+    let batch: Vec<[i32; 7]> = (0..16)
+        .map(|_| {
+            let mut row = [0i32; 7];
+            for v in row.iter_mut() {
+                *v = rng.range_i64(-200, 200) as i32;
+            }
+            row
+        })
+        .collect();
+    let xla_sums = dec.decode_batch(&batch).expect("decode");
+    for (row, got) in batch.iter().zip(&xla_sums) {
+        let want = reference.decode(row, LDPC_NITER);
+        assert_eq!(got.as_slice(), want.sums.as_slice(), "llrs {row:?}");
+    }
+}
+
+#[test]
+fn ldpc_artifact_corrects_single_errors() {
+    let Some(engine) = engine_or_skip() else { return };
+    let dec = XlaLdpcDecoder::load(&engine).expect("load");
+    let batch: Vec<[i32; 7]> = (0..7)
+        .map(|flip| {
+            let mut row = [100i32; 7];
+            row[flip] = -100;
+            row
+        })
+        .collect();
+    for sums in dec.decode_batch(&batch).expect("decode") {
+        assert!(sums.iter().all(|&s| s > 0), "corrected to all-zeros: {sums:?}");
+    }
+}
+
+fn pack_bitvec(v: &BitVec) -> Vec<u32> {
+    let mut out = Vec::new();
+    for w in v.words() {
+        out.push((*w & 0xFFFF_FFFF) as u32);
+        out.push((*w >> 32) as u32);
+    }
+    out.truncate(v.len().div_ceil(32));
+    out
+}
+
+#[test]
+fn bmvm_artifact_matches_rust_dense_oracle() {
+    let Some(engine) = engine_or_skip() else { return };
+    let bm = XlaBmvm::load(&engine).expect("load bmvm artifact");
+    let mut rng = Rng::new(0xB0B);
+    let a = Gf2Matrix::random(BMVM_N, BMVM_N, &mut rng);
+    let v = BitVec::random(BMVM_N, &mut rng);
+    let a_rows: Vec<u32> = (0..BMVM_N).flat_map(|r| pack_bitvec(a.row(r))).collect();
+    for r in [0i32, 1, 5, 17] {
+        let got = bm.power_matvec(&a_rows, &pack_bitvec(&v), r).expect("run");
+        let want = pack_bitvec(&dense_power_matvec(&a, &v, r as u32));
+        assert_eq!(got, want, "r={r}");
+    }
+}
+
+#[test]
+fn bmvm_artifact_matches_williams_hardware_path() {
+    // XLA dense artifact == Williams-LUT NoC hardware result: closes the
+    // loop between the sub-quadratic path and the dense oracle.
+    let Some(engine) = engine_or_skip() else { return };
+    let bm = XlaBmvm::load(&engine).expect("load");
+    let mut rng = Rng::new(0xC0DE);
+    let a = Gf2Matrix::random(BMVM_N, BMVM_N, &mut rng);
+    let v = BitVec::random(BMVM_N, &mut rng);
+    let luts = fabricflow::apps::bmvm::WilliamsLuts::preprocess(&a, 8);
+    let sys = fabricflow::apps::bmvm::BmvmSystem::new(
+        luts,
+        4,
+        fabricflow::noc::Topology::Mesh { w: 2, h: 2 },
+    );
+    let hw = sys.run(&v, 6, None);
+    let a_rows: Vec<u32> = (0..BMVM_N).flat_map(|r| pack_bitvec(a.row(r))).collect();
+    let xla = bm.power_matvec(&a_rows, &pack_bitvec(&v), 6).expect("run");
+    assert_eq!(xla, pack_bitvec(&hw.result));
+}
+
+#[test]
+fn pfilter_artifact_matches_rust_histo_path() {
+    let Some(engine) = engine_or_skip() else { return };
+    let pf = XlaPfWeights::load(&engine).expect("load pf artifact");
+    let video = synthetic_video(64, 48, 2, 6, 99);
+    let (cx, cy) = video.truth[0];
+    let ref_hist = weighted_histogram(&video.frames[0], cx, cy, 6);
+    let mut rng = Rng::new(0xF00D);
+    let particles: Vec<(i32, i32)> = (0..PF_PARTICLES)
+        .map(|_| (rng.range_i64(0, 64) as i32, rng.range_i64(0, 48) as i32))
+        .collect();
+    let cands: Vec<[i32; BINS]> = particles
+        .iter()
+        .map(|&(x, y)| {
+            let h = weighted_histogram(&video.frames[1], x, y, 6);
+            let mut out = [0i32; BINS];
+            for (o, &c) in out.iter_mut().zip(&h) {
+                *o = c as i32;
+            }
+            out
+        })
+        .collect();
+    let mut ref_i32 = [0i32; BINS];
+    for (o, &c) in ref_i32.iter_mut().zip(&ref_hist) {
+        *o = c as i32;
+    }
+    let ((gx, gy), rho) = pf.weights(&ref_i32, &cands, &particles).expect("run");
+    // Rust-native mirror.
+    let rust_rho: Vec<u64> = particles
+        .iter()
+        .map(|&(x, y)| {
+            bhattacharyya_rho(&ref_hist, &weighted_histogram(&video.frames[1], x, y, 6))
+        })
+        .collect();
+    for (a, b) in rho.iter().zip(&rust_rho) {
+        assert_eq!(*a as u64, *b);
+    }
+    let weights: Vec<u64> = rust_rho.iter().map(|&r| particle_weight(r)).collect();
+    let (wx, wy) = weighted_mean(&particles, &weights, (0, 0));
+    assert_eq!((gx as i32, gy as i32), (wx, wy), "weighted-mean center");
+}
