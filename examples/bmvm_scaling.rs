@@ -1,8 +1,10 @@
 //! Case study III driver (paper §VI, Figs 13–14): Williams sub-quadratic
 //! Boolean matrix-vector multiplication over the NoC — preprocessing,
-//! folding, topology sweep, multi-FPGA partitioning, and the XLA dense
-//! oracle cross-check. This is the communication-intensive workload that
-//! "shows the impact of the choice of topology".
+//! folding, topology sweep, multi-FPGA partitioning, and, optionally,
+//! the XLA dense oracle cross-check (`--features pjrt` after adding
+//! the `xla`/`anyhow` dependencies per rust/Cargo.toml). This is the
+//! communication-intensive workload that "shows the impact of the
+//! choice of topology".
 //!
 //! Run: `cargo run --release --example bmvm_scaling`
 
@@ -11,7 +13,6 @@ use fabricflow::apps::bmvm::{
 };
 use fabricflow::gf2::Gf2Matrix;
 use fabricflow::partition::Partition;
-use fabricflow::runtime::{artifacts_dir, XlaBmvm, XlaEngine, BMVM_N};
 use fabricflow::serdes::SerdesConfig;
 use fabricflow::util::bits::BitVec;
 use fabricflow::util::Rng;
@@ -41,7 +42,7 @@ fn main() {
         assert_eq!(run.result, expect, "{name}");
         println!(
             "  {name:9}: {:>7} cycles, {:.3} ms incl. {:.3} ms host link",
-            run.cycles,
+            run.report.cycles,
             run.time_ms,
             HostLink::default().roundtrip_ms(256, 256)
         );
@@ -52,7 +53,7 @@ fn main() {
         let sys = BmvmSystem::new(luts.clone(), pes, BmvmSystem::topology_for("mesh", pes));
         let run = sys.run(&v, 20, None);
         assert_eq!(run.result, expect);
-        println!("  {pes:2} PEs (f={}): {} cycles", sys.fold(), run.cycles);
+        println!("  {pes:2} PEs (f={}): {} cycles", sys.fold(), run.report.cycles);
     }
 
     println!("== hardware vs software vs dense oracle (n=256, r=50) ==");
@@ -76,32 +77,44 @@ fn main() {
     println!(
         "  sizes {:?}, {} cut links, {} cycles (vs {} single-FPGA)",
         part.sizes(),
-        part.cut_links(&topo.build()).len(),
-        split.cycles,
-        hw.cycles
+        split.report.cut_links,
+        split.report.cycles,
+        hw.report.cycles
     );
 
-    if artifacts_dir().exists() {
-        println!("== XLA dense-oracle artifact (n={BMVM_N}) ==");
-        let engine = XlaEngine::cpu().expect("pjrt");
-        let bm = XlaBmvm::load(&engine).expect("artifact");
-        let a = Gf2Matrix::random(BMVM_N, BMVM_N, &mut rng);
-        let v64 = BitVec::random(BMVM_N, &mut rng);
-        let pack = |b: &BitVec| -> Vec<u32> {
-            let mut out = Vec::new();
-            for w in b.words() {
-                out.push((*w & 0xFFFF_FFFF) as u32);
-                out.push((*w >> 32) as u32);
-            }
-            out.truncate(b.len().div_ceil(32));
-            out
-        };
-        let a_rows: Vec<u32> = (0..BMVM_N).flat_map(|r| pack(a.row(r))).collect();
-        let got = bm.power_matvec(&a_rows, &pack(&v64), 12).expect("run");
-        assert_eq!(got, pack(&dense_power_matvec(&a, &v64, 12)));
-        println!("  A^12·v via Pallas popcount kernel == rust dense oracle");
-    } else {
-        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
-    }
+    xla_cross_check();
     println!("bmvm_scaling OK");
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_cross_check() {
+    use fabricflow::runtime::{artifacts_dir, XlaBmvm, XlaEngine, BMVM_N};
+    if !artifacts_dir().exists() {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
+        return;
+    }
+    println!("== XLA dense-oracle artifact (n={BMVM_N}) ==");
+    let mut rng = Rng::new(0xB15);
+    let engine = XlaEngine::cpu().expect("pjrt");
+    let bm = XlaBmvm::load(&engine).expect("artifact");
+    let a = Gf2Matrix::random(BMVM_N, BMVM_N, &mut rng);
+    let v64 = BitVec::random(BMVM_N, &mut rng);
+    let pack = |b: &BitVec| -> Vec<u32> {
+        let mut out = Vec::new();
+        for w in b.words() {
+            out.push((*w & 0xFFFF_FFFF) as u32);
+            out.push((*w >> 32) as u32);
+        }
+        out.truncate(b.len().div_ceil(32));
+        out
+    };
+    let a_rows: Vec<u32> = (0..BMVM_N).flat_map(|r| pack(a.row(r))).collect();
+    let got = bm.power_matvec(&a_rows, &pack(&v64), 12).expect("run");
+    assert_eq!(got, pack(&dense_power_matvec(&a, &v64, 12)));
+    println!("  A^12·v via Pallas popcount kernel == rust dense oracle");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_cross_check() {
+    println!("(built without the `pjrt` feature — skipping the XLA cross-check)");
 }

@@ -1,15 +1,16 @@
 //! Case study I driver (paper §IV, Fig 9): LDPC min-sum decoding of the
 //! Fano-plane PG code over a 4×4 mesh NoC, single-FPGA and partitioned
 //! across two FPGAs along the Fig 9 dotted arc, cross-checked against the
-//! monolithic reference decoder and (when `make artifacts` has run) the
-//! AOT-compiled JAX/Pallas batch decoder via PJRT.
+//! monolithic reference decoder and, optionally, the AOT-compiled
+//! JAX/Pallas batch decoder via PJRT (build with `--features pjrt`
+//! after adding the `xla`/`anyhow` dependencies per rust/Cargo.toml,
+//! and run `make artifacts` first).
 //!
 //! Run: `cargo run --release --example ldpc_decode`
 
 use fabricflow::apps::ldpc::mapper::LdpcNocDecoder;
 use fabricflow::apps::ldpc::minsum::{codeword_llrs, MinsumVariant, ReferenceDecoder};
 use fabricflow::gf2::pg::PgLdpcCode;
-use fabricflow::runtime::{artifacts_dir, XlaEngine, XlaLdpcDecoder, LDPC_NITER};
 use fabricflow::serdes::SerdesConfig;
 use fabricflow::util::Rng;
 
@@ -26,7 +27,7 @@ fn main() {
         assert_eq!(run.result.sums, reference.decode(&llr, niter).sums);
         println!(
             "  flip bit {flip}: corrected in {} cycles ({} flits)",
-            run.cycles, run.flits_delivered
+            run.report.cycles, run.report.net.delivered
         );
     }
 
@@ -40,9 +41,9 @@ fn main() {
         assert_eq!(mono.result.sums, split.result.sums);
         println!(
             "  trial {trial}: 1 FPGA {} cycles, 2 FPGAs {} cycles ({}x slowdown)",
-            mono.cycles,
-            split.cycles,
-            split.cycles as f64 / mono.cycles as f64
+            mono.report.cycles,
+            split.report.cycles,
+            split.report.cycles as f64 / mono.report.cycles as f64
         );
     }
 
@@ -53,32 +54,43 @@ fn main() {
     assert_eq!(run.result.bits, vec![0; 21]);
     println!(
         "  two flipped bits corrected in {} cycles over {:?}",
-        run.cycles, big.topo
+        run.report.cycles, big.topo
     );
 
-    if artifacts_dir().exists() {
-        println!("== XLA artifact cross-check (JAX/Pallas via PJRT) ==");
-        let engine = XlaEngine::cpu().expect("pjrt");
-        let xdec = XlaLdpcDecoder::load(&engine).expect("artifact");
-        let short = LdpcNocDecoder::fano_on_mesh(MinsumVariant::SignMagnitude, LDPC_NITER);
-        let mut rng = Rng::new(2);
-        let batch: Vec<[i32; 7]> = (0..16)
-            .map(|_| {
-                let mut row = [0i32; 7];
-                for v in row.iter_mut() {
-                    *v = rng.range_i64(-150, 150) as i32;
-                }
-                row
-            })
-            .collect();
-        let xla = xdec.decode_batch(&batch).expect("decode");
-        for (row, sums) in batch.iter().zip(&xla) {
-            let noc = short.decode(row, None);
-            assert_eq!(noc.result.sums.as_slice(), sums.as_slice());
-        }
-        println!("  16 random LLR rows: NoC decoder == Pallas artifact, bit-exact");
-    } else {
-        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
-    }
+    xla_cross_check();
     println!("ldpc_decode OK");
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_cross_check() {
+    use fabricflow::runtime::{artifacts_dir, XlaEngine, XlaLdpcDecoder, LDPC_NITER};
+    if !artifacts_dir().exists() {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
+        return;
+    }
+    println!("== XLA artifact cross-check (JAX/Pallas via PJRT) ==");
+    let engine = XlaEngine::cpu().expect("pjrt");
+    let xdec = XlaLdpcDecoder::load(&engine).expect("artifact");
+    let short = LdpcNocDecoder::fano_on_mesh(MinsumVariant::SignMagnitude, LDPC_NITER);
+    let mut rng = Rng::new(2);
+    let batch: Vec<[i32; 7]> = (0..16)
+        .map(|_| {
+            let mut row = [0i32; 7];
+            for v in row.iter_mut() {
+                *v = rng.range_i64(-150, 150) as i32;
+            }
+            row
+        })
+        .collect();
+    let xla = xdec.decode_batch(&batch).expect("decode");
+    for (row, sums) in batch.iter().zip(&xla) {
+        let noc = short.decode(row, None);
+        assert_eq!(noc.result.sums.as_slice(), sums.as_slice());
+    }
+    println!("  16 random LLR rows: NoC decoder == Pallas artifact, bit-exact");
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_cross_check() {
+    println!("(built without the `pjrt` feature — skipping the XLA cross-check)");
 }

@@ -1,92 +1,155 @@
 //! Phase-2 driver (paper §III, Figs 5–6): partitioning a NoC across
 //! FPGAs over quasi-SERDES links — the Fig 5 example, pin budgets,
 //! per-FPGA resource fit, serialization sweeps, and the automatic
-//! min-cut partitioner extension.
+//! min-cut partitioner extension — with every system constructed through
+//! the unified `flow` API.
 //!
 //! Run: `cargo run --release --example multi_fpga`
 
-use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::flow::{FlowBuilder, MappedFlow, RunReport};
+use fabricflow::noc::Topology;
 use fabricflow::partition::Partition;
+use fabricflow::pe::collector::ArgMessage;
+use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
 use fabricflow::resources::Device;
-use fabricflow::serdes::{wire_bits, SerdesConfig};
-use fabricflow::util::Rng;
+use fabricflow::serdes::SerdesConfig;
 
-fn traffic(net: &mut Network, flits: u32, seed: u64) -> u64 {
-    let n = net.n_endpoints();
-    let mut rng = Rng::new(seed);
-    for i in 0..flits {
-        let s = rng.index(n);
-        let d = (s + 1 + rng.index(n - 1)) % n;
-        net.inject(s, Flit::single(s, d, i, i as u64));
+/// Boot-time scatter source: sends `count` single-flit messages
+/// round-robin across `dsts` (the taps), then stays idle.
+struct Scatter {
+    dsts: Vec<usize>,
+    count: u32,
+}
+impl Processor for Scatter {
+    fn spec(&self) -> WrapperSpec {
+        WrapperSpec::new(vec![16], vec![16])
     }
-    net.run_until_idle(100_000_000)
+    fn boot(&mut self) -> Vec<OutMessage> {
+        (0..self.count)
+            .map(|i| {
+                let dst = self.dsts[i as usize % self.dsts.len()];
+                OutMessage::word(dst, 0, i, (i as u64) & 0xFFFF, 16)
+            })
+            .collect()
+    }
+    fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
+        Vec::new()
+    }
+}
+
+/// The Fig 5 NoC: 4 routers in a cycle, one endpoint each.
+fn fig5_topology() -> Topology {
+    Topology::Custom {
+        n_routers: 4,
+        links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+        endpoint_router: vec![0, 1, 2, 3],
+    }
+}
+
+/// Fig 5 flow: a scatter source at N0 flooding taps at N1–N3; optionally
+/// R0 (+ its PE) on its own FPGA behind `serdes` links.
+fn fig5_flow(serdes: Option<SerdesConfig>) -> MappedFlow {
+    let mut fb = FlowBuilder::new("fig5");
+    fb.topology(fig5_topology())
+        .pe_at("src", 0, Box::new(Scatter { dsts: vec![1, 2, 3], count: 3000 }))
+        .tap_at("n1", 1)
+        .tap_at("n2", 2)
+        .tap_at("n3", 3)
+        .channel("src", "n1")
+        .channel("src", "n2")
+        .channel("src", "n3");
+    if let Some(s) = serdes {
+        fb.partition(Partition::island(4, &[0])).serdes(s);
+    }
+    fb.build().expect("fig5 flow is well-formed")
+}
+
+fn run(mut flow: MappedFlow) -> RunReport {
+    let report = flow.run().expect("flow drains");
+    // Sanity: every scattered flit reached a tap.
+    let got = flow.drain("n1").len() + flow.drain("n2").len() + flow.drain("n3").len();
+    assert_eq!(got, 3000, "lost flits");
+    report
 }
 
 fn main() {
     println!("== Fig 5: 4-router NoC, R0 (+N0) on its own FPGA ==");
-    let topo = Topology::Custom {
-        n_routers: 4,
-        links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
-        endpoint_router: vec![0, 1, 2, 3],
-    };
     let part = Partition::island(4, &[0]);
-    let g = topo.build();
+    let g = fig5_topology().build();
     let serdes = SerdesConfig::default();
     println!("  cut links: {:?}", part.cut_links(&g));
     println!(
         "  pins per FPGA (8-wire links, both directions): {:?}",
         part.pins_per_fpga(&g, &serdes)
     );
-    let res = part.noc_resources_per_fpga(&g, &NocConfig::paper(), &serdes);
-    for (f, r) in res.iter().enumerate() {
+    let base = run(fig5_flow(None));
+    let cut = run(fig5_flow(Some(serdes)));
+    for (f, r) in cut.resources_per_fpga.iter().enumerate() {
         println!(
-            "  FPGA {f}: NoC infrastructure {r} — fits DE0-Nano: {}",
+            "  FPGA {f}: NoC infrastructure + wrapper {r} — fits DE0-Nano: {}",
             Device::DE0_NANO.fits(*r)
         );
     }
-    let mut mono = Network::new(&topo, NocConfig::paper());
-    let base = traffic(&mut mono, 3000, 1);
-    let mut split = Network::new(&topo, NocConfig::paper());
-    part.apply(&mut split, serdes);
-    let cut = traffic(&mut split, 3000, 1);
-    println!("  3000 flits: 1 FPGA {base} cycles, 2 FPGAs {cut} cycles");
+    println!(
+        "  3000 flits: 1 FPGA {} cycles, 2 FPGAs {} cycles ({} serdes flits)",
+        base.cycles, cut.cycles, cut.serdes_flits
+    );
 
     println!("== serialization sweep (paper: 'depending on ... pins available') ==");
-    let bits = wire_bits(16, 4);
-    for pins in [1u32, 2, 4, 8, 16] {
-        let cfg = SerdesConfig { pins, clock_div: 1, tx_buffer: 8 };
-        let mut net = Network::new(&topo, NocConfig::paper());
-        part.apply(&mut net, cfg);
-        let cycles = traffic(&mut net, 3000, 1);
+    // Batched form of the same sweep: one fresh flow per pin count.
+    let pin_sweep = [1u32, 2, 4, 8, 16];
+    let runs = MappedFlow::run_batch(
+        pin_sweep,
+        |&pins| Ok(fig5_flow(Some(SerdesConfig { pins, clock_div: 1, tx_buffer: 8 }))),
+        |_, flow| flow.drain("n1").len() + flow.drain("n2").len() + flow.drain("n3").len(),
+    )
+    .expect("pin sweep");
+    for (&pins, (got, report)) in pin_sweep.iter().zip(&runs) {
+        assert_eq!(*got, 3000, "lost flits at {pins} pins");
         println!(
-            "  {pins:2} pins ({:2} cycles/flit on the link): {cycles} cycles",
-            cfg.cycles_per_flit(bits)
+            "  {pins:2} pins ({:2} cycles/flit on the link): {} cycles",
+            report.serdes_cycles_per_flit, report.cycles
         );
     }
 
     println!("== off-chip clock divider sweep ==");
     for div in [1u32, 2, 4] {
         let cfg = SerdesConfig { pins: 8, clock_div: div, tx_buffer: 8 };
-        let mut net = Network::new(&topo, NocConfig::paper());
-        part.apply(&mut net, cfg);
-        println!("  I/O clock 1/{div}: {} cycles", traffic(&mut net, 3000, 1));
+        println!("  I/O clock 1/{div}: {} cycles", run(fig5_flow(Some(cfg))).cycles);
     }
 
     println!("== automatic min-cut bisection of an 8x8 torus (extension) ==");
-    let torus = Topology::Torus { w: 8, h: 8 };
-    let tg = torus.build();
     for n_fpgas in [2usize, 4] {
-        let auto = Partition::balanced(&tg, n_fpgas, 42);
-        let cut = auto.cut_links(&tg).len();
+        // 8 scatter PEs feeding 56 taps, partitioned automatically by the
+        // builder via Partition::balanced.
+        let mut fb = FlowBuilder::new("torus-auto");
+        fb.topology(Topology::Torus { w: 8, h: 8 })
+            .auto_partition(n_fpgas)
+            .seed(42);
+        let taps: Vec<usize> = (8..64).collect();
+        for p in 0..8usize {
+            fb.pe_at(
+                &format!("src{p}"),
+                p,
+                Box::new(Scatter { dsts: taps.clone(), count: 1250 }),
+            );
+        }
+        for &t in &taps {
+            fb.tap_at(&format!("t{t}"), t);
+        }
+        let mut flow = fb.build().expect("torus flow");
+        let auto = flow.partition().expect("auto partition resolved").clone();
+        let report = flow.run().expect("torus flow drains");
         println!(
-            "  {n_fpgas} FPGAs: sizes {:?}, {cut} links cut, pins/FPGA {:?}",
+            "  {n_fpgas} FPGAs: sizes {:?}, {} links cut, pins/FPGA {:?}",
             auto.sizes(),
-            auto.pins_per_fpga(&tg, &serdes)
+            report.cut_links,
+            report.pins_per_fpga
         );
-        let mut net = Network::new(&torus, NocConfig::paper());
-        auto.apply(&mut net, serdes);
-        let cycles = traffic(&mut net, 10_000, 7);
-        println!("    10k flits drained in {cycles} cycles");
+        println!(
+            "    10k flits drained in {} cycles ({} serdes flits)",
+            report.cycles, report.serdes_flits
+        );
     }
     println!("multi_fpga OK");
 }

@@ -2,18 +2,17 @@
 //! tracking over the NoC — root orchestrator on Node 0, worker compute
 //! elements, frame DMA and particle scatter/gather as NoC traffic —
 //! validated against the monolithic reference tracker and the ground
-//! truth of the synthetic video, plus the AOT Pallas weight kernel.
+//! truth of the synthetic video, plus, optionally, the AOT Pallas
+//! weight kernel (`--features pjrt` after adding the `xla`/`anyhow`
+//! dependencies per rust/Cargo.toml).
 //!
 //! Run: `cargo run --release --example object_tracking`
 
-use fabricflow::apps::pfilter::histo::{weighted_histogram, BINS};
 use fabricflow::apps::pfilter::{
-    mean_error, synthetic_video, track_reference, PfilterNocTracker, TrackerParams,
+    mean_error, synthetic_video, track_reference, PfilterNocTracker, TrackerParams, Video,
 };
 use fabricflow::partition::Partition;
-use fabricflow::runtime::{artifacts_dir, XlaEngine, XlaPfWeights, PF_PARTICLES};
 use fabricflow::serdes::SerdesConfig;
-use fabricflow::util::Rng;
 
 fn main() {
     let video = synthetic_video(64, 48, 12, 6, 42);
@@ -31,7 +30,7 @@ fn main() {
     assert_eq!(run.centers, reference.centers, "NoC must equal the oracle");
     println!(
         "  {} cycles, {} flits (frame DMA + particles + gathers)",
-        run.cycles, run.flits_delivered
+        run.report.cycles, run.report.net.delivered
     );
     for (k, (&est, &truth)) in run.centers.iter().zip(&video.truth).enumerate().take(6) {
         println!("  frame {k:2}: est {est:?}  truth {truth:?}");
@@ -42,7 +41,7 @@ fn main() {
         let t = PfilterNocTracker::on_mesh(workers, params);
         let r = t.track(&video, video.truth[0], None);
         assert_eq!(r.centers, reference.centers);
-        println!("  {workers} workers: {} cycles", r.cycles);
+        println!("  {workers} workers: {} cycles", r.report.cycles);
     }
 
     println!("== 2-FPGA partition ==");
@@ -50,43 +49,56 @@ fn main() {
     let split = noc.track(&video, video.truth[0], Some((&part, SerdesConfig::default())));
     assert_eq!(split.centers, reference.centers);
     println!(
-        "  same trajectory, {} cycles (vs {} single-FPGA)",
-        split.cycles, run.cycles
+        "  same trajectory, {} cycles (vs {} single-FPGA), {} links cut",
+        split.report.cycles, run.report.cycles, split.report.cut_links
     );
 
-    if artifacts_dir().exists() {
-        println!("== XLA artifact cross-check (Pallas Bhattacharyya kernel) ==");
-        let engine = XlaEngine::cpu().expect("pjrt");
-        let pf = XlaPfWeights::load(&engine).expect("artifact");
-        let mut rng = Rng::new(3);
-        let (cx, cy) = video.truth[0];
-        let ref_hist = weighted_histogram(&video.frames[0], cx, cy, 6);
-        let particles: Vec<(i32, i32)> = (0..PF_PARTICLES)
-            .map(|_| (rng.range_i64(0, 64) as i32, rng.range_i64(0, 48) as i32))
-            .collect();
-        let cands: Vec<[i32; BINS]> = particles
-            .iter()
-            .map(|&(x, y)| {
-                let h = weighted_histogram(&video.frames[1], x, y, 6);
-                let mut o = [0i32; BINS];
-                for (dst, &c) in o.iter_mut().zip(&h) {
-                    *dst = c as i32;
-                }
-                o
-            })
-            .collect();
-        let mut rh = [0i32; BINS];
-        for (dst, &c) in rh.iter_mut().zip(&ref_hist) {
-            *dst = c as i32;
-        }
-        let (center, rho) = pf.weights(&rh, &cands, &particles).expect("run");
-        println!(
-            "  artifact center for {} random particles: {center:?} (max rho {})",
-            PF_PARTICLES,
-            rho.iter().max().unwrap()
-        );
-    } else {
-        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
-    }
+    xla_cross_check(&video);
     println!("object_tracking OK");
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_cross_check(video: &Video) {
+    use fabricflow::apps::pfilter::histo::{weighted_histogram, BINS};
+    use fabricflow::runtime::{artifacts_dir, XlaEngine, XlaPfWeights, PF_PARTICLES};
+    use fabricflow::util::Rng;
+    if !artifacts_dir().exists() {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA cross-check)");
+        return;
+    }
+    println!("== XLA artifact cross-check (Pallas Bhattacharyya kernel) ==");
+    let engine = XlaEngine::cpu().expect("pjrt");
+    let pf = XlaPfWeights::load(&engine).expect("artifact");
+    let mut rng = Rng::new(3);
+    let (cx, cy) = video.truth[0];
+    let ref_hist = weighted_histogram(&video.frames[0], cx, cy, 6);
+    let particles: Vec<(i32, i32)> = (0..PF_PARTICLES)
+        .map(|_| (rng.range_i64(0, 64) as i32, rng.range_i64(0, 48) as i32))
+        .collect();
+    let cands: Vec<[i32; BINS]> = particles
+        .iter()
+        .map(|&(x, y)| {
+            let h = weighted_histogram(&video.frames[1], x, y, 6);
+            let mut o = [0i32; BINS];
+            for (dst, &c) in o.iter_mut().zip(&h) {
+                *dst = c as i32;
+            }
+            o
+        })
+        .collect();
+    let mut rh = [0i32; BINS];
+    for (dst, &c) in rh.iter_mut().zip(&ref_hist) {
+        *dst = c as i32;
+    }
+    let (center, rho) = pf.weights(&rh, &cands, &particles).expect("run");
+    println!(
+        "  artifact center for {} random particles: {center:?} (max rho {})",
+        PF_PARTICLES,
+        rho.iter().max().unwrap()
+    );
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_cross_check(_video: &Video) {
+    println!("(built without the `pjrt` feature — skipping the XLA cross-check)");
 }

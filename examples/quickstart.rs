@@ -1,18 +1,21 @@
-//! Quickstart: the paper's Fig 1 flow end to end on a toy application.
+//! Quickstart: the paper's Fig 1 flow end to end on a toy application,
+//! built entirely through the unified `flow` API.
 //!
 //! 1. Express an application as message-passing processing elements
 //!    (phase 1): a splitter, two squarers, and an accumulator.
-//! 2. Wrap them (Data Collector / Processor / Distributor) and plug them
-//!    onto a CONNECT-style mesh NoC.
+//! 2. Register them on a [`fabricflow::flow::FlowBuilder`] — the builder
+//!    wraps each PE (Data Collector / Processor / Distributor) and plugs
+//!    it onto a CONNECT-style mesh NoC.
 //! 3. Partition the same NoC across two FPGAs with quasi-SERDES links
-//!    (phase 2) — same results, a few more cycles.
+//!    (phase 2) — same results, a few more cycles, one `RunReport`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use fabricflow::noc::{Network, NocConfig, Topology};
+use fabricflow::flow::{FlowBuilder, MappedFlow};
+use fabricflow::noc::Topology;
 use fabricflow::partition::Partition;
 use fabricflow::pe::collector::ArgMessage;
-use fabricflow::pe::{OutMessage, PeSystem, Processor, WrapperSpec};
+use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
 use fabricflow::serdes::SerdesConfig;
 
 /// Splits an input value into two messages for the squarers.
@@ -74,54 +77,62 @@ impl Processor for Accumulator {
     }
 }
 
-fn build() -> PeSystem {
-    let net = Network::new(&Topology::Mesh { w: 3, h: 2 }, NocConfig::paper());
-    let mut sys = PeSystem::new(net);
-    sys.attach(0, Box::new(Splitter { values: (1..=10).collect(), sq_a: 1, sq_b: 2 }));
-    sys.attach(1, Box::new(Squarer { acc: 3, arg_at_acc: 0 }));
-    sys.attach(2, Box::new(Squarer { acc: 3, arg_at_acc: 1 }));
-    sys.attach(3, Box::new(Accumulator { sink: 5 }));
-    sys
+/// One builder for both phases: the partition is the only difference.
+fn build(partitioned: bool) -> MappedFlow {
+    let mut fb = FlowBuilder::new("quickstart");
+    fb.topology(Topology::Mesh { w: 3, h: 2 })
+        .pe_at("split", 0, Box::new(Splitter { values: (1..=10).collect(), sq_a: 1, sq_b: 2 }))
+        .pe_at("square_a", 1, Box::new(Squarer { acc: 3, arg_at_acc: 0 }))
+        .pe_at("square_b", 2, Box::new(Squarer { acc: 3, arg_at_acc: 1 }))
+        .pe_at("acc", 3, Box::new(Accumulator { sink: 5 }))
+        .tap_at("sums", 5)
+        .channel("split", "square_a")
+        .channel("split", "square_b")
+        .channel("square_a", "acc")
+        .channel("square_b", "acc")
+        .channel("acc", "sums");
+    if partitioned {
+        // Left mesh column on FPGA 0, the rest on FPGA 1.
+        fb.partition(Partition::new(2, vec![0, 1, 1, 0, 1, 1]))
+            .serdes(SerdesConfig::default());
+    }
+    fb.build().expect("quickstart flow is well-formed")
 }
 
-fn drain(sys: &mut PeSystem) -> Vec<(u32, u64)> {
-    let mut out = Vec::new();
-    let mut groups: std::collections::HashMap<u32, Vec<fabricflow::noc::Flit>> =
-        Default::default();
-    while let Some(f) = sys.net.eject(5) {
-        groups.entry(f.tag >> 8).or_default().push(f);
-    }
-    for (epoch, flits) in groups {
-        let words = fabricflow::noc::flit::depacketize(&flits, 64, 16);
-        out.push((epoch, words[0]));
-    }
-    out.sort_unstable();
-    out
+fn drain(flow: &mut MappedFlow) -> Vec<(u32, u64)> {
+    flow.drain_messages("sums", 64)
+        .into_iter()
+        .map(|m| (m.epoch, m.words[0]))
+        .collect()
 }
 
 fn main() {
     // Phase 1: PEs on a single-FPGA NoC.
-    let mut sys = build();
-    let cycles = sys.run(1_000_000);
-    let results = drain(&mut sys);
-    println!("single FPGA: {cycles} cycles");
+    let mut flow = build(false);
+    let report = flow.run().expect("single-FPGA run");
+    let results = drain(&mut flow);
+    println!("single FPGA: {} cycles", report.cycles);
     for &(e, v) in &results {
         let x = e as u64 + 1;
         assert_eq!(v, x * x + (x + 1) * (x + 1));
         println!("  epoch {e}: {x}² + {}² = {v}", x + 1);
     }
 
-    // Phase 2: same design across two FPGAs (left column vs the rest).
-    let mut sys2 = build();
-    let part = Partition::new(2, vec![0, 1, 1, 0, 1, 1]);
-    let cuts = part.apply(&mut sys2.net, SerdesConfig::default());
-    let cycles2 = sys2.run(1_000_000);
-    let results2 = drain(&mut sys2);
+    // Phase 2: same design across two FPGAs — only the builder's
+    // partition line changes; PEs, channels and results do not.
+    let mut flow2 = build(true);
+    let report2 = flow2.run().expect("partitioned run");
+    let results2 = drain(&mut flow2);
     assert_eq!(results, results2, "partitioning must not change results");
     println!(
-        "two FPGAs ({} links cut, 8-wire quasi-SERDES): {cycles2} cycles (+{})",
-        cuts.len(),
-        cycles2 - cycles
+        "two FPGAs ({} links cut, 8-wire quasi-SERDES): {} cycles (+{})",
+        report2.cut_links,
+        report2.cycles,
+        report2.cycles - report.cycles
     );
+    for (f, r) in report2.resources_per_fpga.iter().enumerate() {
+        println!("  FPGA {f}: {r} | serdes pins {}", report2.pins_per_fpga[f]);
+    }
+    println!("  {report2}");
     println!("quickstart OK");
 }

@@ -21,14 +21,17 @@ fn main() {
     // --- Fig 9 / Tables I-II experiment: LDPC decode over the NoC ------
     let llr = codeword_llrs(&[0; 7], 100, &[3]);
     let dec = LdpcNocDecoder::fano_on_mesh(MinsumVariant::SignMagnitude, 10);
-    let mono_cycles = dec.decode(&llr, None).cycles;
+    let mono_cycles = dec.decode(&llr, None).report.cycles;
     b.bench("ldpc/fano_niter10_mesh4x4", || {
-        black_box(dec.decode(&llr, None).cycles)
+        black_box(dec.decode(&llr, None).report.cycles)
     });
     let p = dec.fig9_partition();
-    let split_cycles = dec.decode(&llr, Some((&p, SerdesConfig::default()))).cycles;
+    let split_cycles = dec
+        .decode(&llr, Some((&p, SerdesConfig::default())))
+        .report
+        .cycles;
     b.bench("ldpc/fano_niter10_2fpga_fig9cut", || {
-        black_box(dec.decode(&llr, Some((&p, SerdesConfig::default()))).cycles)
+        black_box(dec.decode(&llr, Some((&p, SerdesConfig::default()))).report.cycles)
     });
     println!(
         "      fig9: decode {} cycles on 1 FPGA, {} on 2 FPGAs ({:.2}x)",
@@ -39,7 +42,10 @@ fn main() {
 
     // Ablation: Fig 9 manual arc vs automatic min-cut.
     let auto = Partition::balanced(&dec.topo.build(), 2, 13);
-    let auto_cycles = dec.decode(&llr, Some((&auto, SerdesConfig::default()))).cycles;
+    let auto_cycles = dec
+        .decode(&llr, Some((&auto, SerdesConfig::default())))
+        .report
+        .cycles;
     println!(
         "      ablation cut placement: fig9 arc {} cuts -> {} cycles | auto {} cuts -> {} cycles",
         p.cut_links(&dec.topo.build()).len(),
@@ -73,7 +79,7 @@ fn main() {
     let params = TrackerParams { n_particles: 24, sigma: 2.5, roi_r: 4, seed: 5 };
     let tracker = PfilterNocTracker::on_mesh(4, params);
     b.bench("pfilter/3frames_24particles_4workers", || {
-        black_box(tracker.track(&video, video.truth[0], None).cycles)
+        black_box(tracker.track(&video, video.truth[0], None).report.cycles)
     });
 
     // --- Fig 13/14 + Tables IV-V: BMVM --------------------------------
@@ -91,7 +97,7 @@ fn main() {
         let label = format!("bmvm/n256_r10_16pe_{name}");
         let mut cycles = 0;
         b.bench(&label, || {
-            cycles = sys.run(&v, 10, None).cycles;
+            cycles = sys.run(&v, 10, None).report.cycles;
             black_box(cycles)
         });
         println!("      {label}: {cycles} fabric cycles");
@@ -107,7 +113,7 @@ fn main() {
     for pes in [4usize, 8, 16, 32, 64] {
         let sys = BmvmSystem::new(luts.clone(), pes, BmvmSystem::topology_for("ring", pes));
         let run = sys.run(&v, 10, None);
-        println!("  {pes:2} PEs (f={:2}): {} cycles", sys.fold(), run.cycles);
+        println!("  {pes:2} PEs (f={:2}): {} cycles", sys.fold(), run.report.cycles);
     }
 
     // Ablation: Williams k vs dense crossover (sequential oracles).
@@ -135,6 +141,6 @@ fn main() {
         let cfg = SerdesConfig { pins, clock_div: 1, tx_buffer: 8 };
         let run = sys.run(&v, 10, Some((&part, cfg)));
         let marker = if pins == 8 { "  <- paper" } else { "" };
-        println!("  {pins:2} pins: {} cycles{marker}", run.cycles);
+        println!("  {pins:2} pins: {} cycles{marker}", run.report.cycles);
     }
 }

@@ -17,10 +17,10 @@ pub mod software;
 pub mod pe;
 pub mod hostlink;
 
+use crate::flow::{FlowBuilder, RunReport};
 use crate::noc::flit::NodeId;
-use crate::noc::{Network, NocConfig, Topology};
+use crate::noc::{NocConfig, Topology};
 use crate::partition::Partition;
-use crate::pe::PeSystem;
 use crate::serdes::SerdesConfig;
 use crate::util::bits::BitVec;
 
@@ -31,12 +31,11 @@ pub use williams::{dense_power_matvec, WilliamsLuts};
 #[derive(Clone, Debug)]
 pub struct BmvmRunReport {
     pub result: BitVec,
-    /// Fabric cycles from boot to quiescence.
-    pub cycles: u64,
     /// End-to-end time including the host-link roundtrip, milliseconds
     /// (the quantity Tables IV–V report for the hardware).
     pub time_ms: f64,
-    pub flits_delivered: u64,
+    /// Unified flow report (fabric cycles, NoC stats, per-PE stats).
+    pub report: RunReport,
 }
 
 /// A BMVM accelerator instance: preprocessed LUTs + PE array + topology.
@@ -82,7 +81,10 @@ impl BmvmSystem {
     }
 
     /// Run `A^r · v` over the NoC; optionally partition the NoC across
-    /// FPGAs first.
+    /// FPGAs first. The PE array is assembled through the unified
+    /// [`FlowBuilder`]: one PE per folded block-column pinned to its
+    /// endpoint, with the all-to-all exchange summarized as a ring of
+    /// logical channels.
     pub fn run(
         &self,
         v: &BitVec,
@@ -90,14 +92,15 @@ impl BmvmSystem {
         partition: Option<(&Partition, SerdesConfig)>,
     ) -> BmvmRunReport {
         assert!(r >= 1);
-        let mut sys = PeSystem::new(Network::new(&self.topo, NocConfig::paper()));
-        if let Some((p, serdes)) = partition {
-            p.apply(&mut sys.net, serdes);
-        }
         let parts = self.luts.split_vector(v);
         let peers: Vec<NodeId> = (0..self.n_pes).collect();
+        let mut fb = FlowBuilder::new("bmvm");
+        fb.noc(NocConfig::paper())
+            .topology(self.topo.clone())
+            .max_cycles(2_000_000_000);
         for p in 0..self.n_pes {
-            sys.attach(
+            fb.pe_at(
+                &format!("pe{p}"),
                 p,
                 Box::new(pe::BmvmPe::new(
                     &self.luts,
@@ -108,22 +111,25 @@ impl BmvmSystem {
                     peers.clone(),
                 )),
             );
+            fb.channel(&format!("pe{p}"), &format!("pe{}", (p + 1) % self.n_pes));
         }
-        let cycles = sys.run(2_000_000_000);
+        if let Some((p, serdes)) = partition {
+            fb.partition(p.clone()).serdes(serdes);
+        }
+        let mut flow = fb.build().expect("BMVM flow layout is valid");
+        let report = flow.run().expect("BMVM reaches quiescence");
         // Host DMA readback (Fig 14's RIFFA path).
         let mut all = Vec::with_capacity(self.luts.blocks);
         for p in 0..self.n_pes {
-            all.extend(sys.readback(p).expect("BMVM PE has result memory"));
+            all.extend(
+                flow.readback(&format!("pe{p}"))
+                    .expect("BMVM PE has result memory"),
+            );
         }
         let result = self.luts.join_vector(&all);
-        let st = sys.net.stats();
         let n_bits = self.luts.n as u64;
-        BmvmRunReport {
-            result,
-            cycles,
-            time_ms: self.host.total_ms(cycles, 100e6, n_bits, n_bits),
-            flits_delivered: st.delivered,
-        }
+        let time_ms = self.host.total_ms(report.cycles, 100e6, n_bits, n_bits);
+        BmvmRunReport { result, time_ms, report }
     }
 
     /// Total BRAM bits the folded LUTs occupy across the PE array.
@@ -155,7 +161,7 @@ mod tests {
         for r in [1u32, 3, 10] {
             let run = sys.run(&v, r, None);
             assert_eq!(run.result, dense_power_matvec(&a, &v, r), "r={r}");
-            assert!(run.cycles > 0);
+            assert!(run.report.cycles > 0);
             assert!(run.time_ms > 0.05, "host overhead included");
         }
     }
@@ -177,7 +183,7 @@ mod tests {
             );
             let run = sys.run(&v, 4, None);
             assert_eq!(run.result, expect, "{name}");
-            cycles.insert(name, run.cycles);
+            cycles.insert(name, run.report.cycles);
         }
         // The paper's cost/performance ordering (Table V): ring slowest.
         // At this scaled-down 16-PE size torus and fat tree are within a
@@ -193,8 +199,8 @@ mod tests {
         let mut rng = Rng::new(41);
         let (_, sys) = table4_system(&mut rng);
         let v = BitVec::random(64, &mut rng);
-        let c10 = sys.run(&v, 10, None).cycles;
-        let c40 = sys.run(&v, 40, None).cycles;
+        let c10 = sys.run(&v, 10, None).report.cycles;
+        let c40 = sys.run(&v, 40, None).report.cycles;
         let ratio = c40 as f64 / c10 as f64;
         assert!(
             (3.0..5.0).contains(&ratio),
@@ -212,7 +218,9 @@ mod tests {
         let split = sys.run(&v, 5, Some((&part, SerdesConfig::default())));
         assert_eq!(split.result, dense_power_matvec(&a, &v, 5));
         assert_eq!(split.result, mono.result);
-        assert!(split.cycles > mono.cycles);
+        assert!(split.report.cycles > mono.report.cycles);
+        assert_eq!(split.report.n_fpgas, 2);
+        assert!(split.report.cut_links > 0);
     }
 
     #[test]

@@ -7,12 +7,17 @@
 //! arc: the left two mesh columns on FPGA 0, the right two on FPGA 1.
 //! Larger PG codes get a generic mesh sized to fit (the framework's
 //! scaling story).
+//!
+//! The decoder is constructed exclusively through
+//! [`crate::flow::FlowBuilder`]: bit/check node PEs pinned to their mesh
+//! endpoints, the LLR source PE, a `decisions` tap at the sink, and the
+//! bit↔check message edges declared as logical channels.
 
+use crate::flow::{FlowBuilder, RunReport};
 use crate::gf2::pg::PgLdpcCode;
 use crate::noc::flit::NodeId;
-use crate::noc::{Network, NocConfig, Topology};
+use crate::noc::{NocConfig, Topology};
 use crate::partition::Partition;
-use crate::pe::PeSystem;
 use crate::resources::{Device, Resources};
 use crate::serdes::SerdesConfig;
 
@@ -27,11 +32,8 @@ use super::dec_llr;
 #[derive(Clone, Debug)]
 pub struct LdpcRunReport {
     pub result: DecodeResult,
-    /// NoC cycles from boot to quiescence.
-    pub cycles: u64,
-    /// Flits injected / delivered during the decode.
-    pub flits_injected: u64,
-    pub flits_delivered: u64,
+    /// Unified flow report: cycles, NoC stats, per-PE stats, resources.
+    pub report: RunReport,
 }
 
 /// An LDPC decoder instance mapped on a mesh NoC.
@@ -84,15 +86,19 @@ impl LdpcNocDecoder {
         }
     }
 
-    /// Build the populated PE system for one decode of `llr`.
-    fn build(&self, llr: &[i32]) -> PeSystem {
+    /// Assemble the decode flow for `llr`: check PEs (output j goes to
+    /// bit `check_nb[c][j]` at argument 1 + position), bit PEs (output j
+    /// goes to check `bit_nb[b][j]` at its position), the LLR source, and
+    /// the decision tap, with the Tanner-graph edges declared as logical
+    /// channels.
+    fn flow(&self, llr: &[i32]) -> FlowBuilder {
         assert_eq!(llr.len(), self.code.n);
-        let net = Network::new(&self.topo, NocConfig::paper());
-        let mut sys = PeSystem::new(net);
+        let mut fb = FlowBuilder::new("ldpc");
+        fb.noc(NocConfig::paper())
+            .topology(self.topo.clone())
+            .max_cycles(10_000_000);
         let check_nb = self.code.check_neighbors();
         let bit_nb = self.code.bit_neighbors();
-        // Check PEs: output j goes to bit `check_nb[c][j]`, at argument
-        // 1 + (position of c in that bit's neighbor list).
         for (c, nb) in check_nb.iter().enumerate() {
             let targets: Vec<(NodeId, u8)> = nb
                 .iter()
@@ -101,10 +107,12 @@ impl LdpcNocDecoder {
                     (self.bit_ep[b], (1 + pos) as u8)
                 })
                 .collect();
-            sys.attach(self.check_ep[c], Box::new(CheckNodePe::new(self.variant, targets)));
+            fb.pe_at(
+                &format!("check{c}"),
+                self.check_ep[c],
+                Box::new(CheckNodePe::new(self.variant, targets)),
+            );
         }
-        // Bit PEs: output j goes to check `bit_nb[b][j]` at argument
-        // (position of b in that check's neighbor list).
         for (b, nb) in bit_nb.iter().enumerate() {
             let targets: Vec<(NodeId, u8)> = nb
                 .iter()
@@ -113,13 +121,14 @@ impl LdpcNocDecoder {
                     (self.check_ep[c], pos as u8)
                 })
                 .collect();
-            sys.attach(
+            fb.pe_at(
+                &format!("bit{b}"),
                 self.bit_ep[b],
                 Box::new(BitNodePe::new(self.niter, targets, self.sink_ep)),
             );
         }
-        // Source.
-        sys.attach(
+        fb.pe_at(
+            "source",
             self.source_ep,
             Box::new(LdpcSourcePe {
                 llr: llr.to_vec(),
@@ -129,7 +138,14 @@ impl LdpcNocDecoder {
                 check_args: check_nb,
             }),
         );
-        sys
+        fb.tap_at("decisions", self.sink_ep);
+        for (b, nb) in bit_nb.iter().enumerate() {
+            for &c in nb {
+                fb.channel(&format!("bit{b}"), &format!("check{c}"));
+            }
+            fb.channel(&format!("bit{b}"), "decisions");
+        }
+        fb
     }
 
     /// Decode over the NoC, optionally partitioned across FPGAs.
@@ -138,16 +154,17 @@ impl LdpcNocDecoder {
         llr: &[i32],
         partition: Option<(&Partition, SerdesConfig)>,
     ) -> LdpcRunReport {
-        let mut sys = self.build(llr);
+        let mut fb = self.flow(llr);
         if let Some((p, serdes)) = partition {
-            p.apply(&mut sys.net, serdes);
+            fb.partition(p.clone()).serdes(serdes);
         }
-        let cycles = sys.run(10_000_000);
+        let mut flow = fb.build().expect("LDPC flow layout is valid");
+        let report = flow.run().expect("decode reaches quiescence");
         // Collect decisions at the sink: one message per bit, identified
         // by source endpoint.
         let mut sums = vec![0i32; self.code.n];
         let mut seen = vec![false; self.code.n];
-        while let Some(f) = sys.net.eject(self.sink_ep) {
+        for f in flow.drain("decisions") {
             let b = self
                 .bit_ep
                 .iter()
@@ -160,12 +177,9 @@ impl LdpcNocDecoder {
         assert!(seen.iter().all(|&s| s), "missing decisions: {seen:?}");
         let bits: Vec<u8> = sums.iter().map(|&s| u8::from(s < 0)).collect();
         let valid_codeword = self.code.is_codeword(&bits);
-        let st = sys.net.stats();
         LdpcRunReport {
             result: DecodeResult { bits, sums, valid_codeword },
-            cycles,
-            flits_injected: st.injected,
-            flits_delivered: st.delivered,
+            report,
         }
     }
 
@@ -239,7 +253,7 @@ mod tests {
         let r = dec.decode(&llr, None);
         assert_eq!(r.result.bits, vec![0; 7]);
         assert!(r.result.valid_codeword);
-        assert!(r.cycles > 0);
+        assert!(r.report.cycles > 0);
     }
 
     #[test]
@@ -253,11 +267,29 @@ mod tests {
         let split = dec.decode(&llr, Some((&p, SerdesConfig::default())));
         assert_eq!(split.result.sums, mono.result.sums, "partitioning changed results");
         assert!(
-            split.cycles > mono.cycles,
+            split.report.cycles > mono.report.cycles,
             "quasi-SERDES must cost cycles ({} vs {})",
-            split.cycles,
-            mono.cycles
+            split.report.cycles,
+            mono.report.cycles
         );
+        // The unified report sees both sides of the cut.
+        assert_eq!(split.report.n_fpgas, 2);
+        assert_eq!(split.report.cut_links, 4, "4 mesh rows cross the arc");
+        assert!(split.report.serdes_flits > 0);
+    }
+
+    #[test]
+    fn flow_report_carries_per_pe_stats() {
+        let dec = LdpcNocDecoder::fano_on_mesh(MinsumVariant::SignMagnitude, 3);
+        let llr = codeword_llrs(&[0; 7], 60, &[]);
+        let run = dec.decode(&llr, None);
+        // 7 bit + 7 check + 1 source PEs.
+        assert_eq!(run.report.pes.len(), 15);
+        let bit0 = run.report.pes.iter().find(|p| p.name == "bit0").unwrap();
+        assert_eq!(bit0.node, 0);
+        assert!(bit0.invocations > 0, "bit node must fire each iteration");
+        assert!(run.report.total_invocations() > 0);
+        assert!(run.report.fits(&Device::ZC7020));
     }
 
     #[test]
@@ -267,8 +299,8 @@ mod tests {
         let llr = codeword_llrs(&[0; 7], 50, &[1]);
         let a = short.decode(&llr, None);
         let b = long.decode(&llr, None);
-        assert!(b.cycles > a.cycles);
-        assert!(b.flits_delivered > a.flits_delivered);
+        assert!(b.report.cycles > a.report.cycles);
+        assert!(b.report.net.delivered > a.report.net.delivered);
     }
 
     #[test]

@@ -20,10 +20,10 @@ pub mod histo;
 pub mod filter;
 pub mod pe;
 
+use crate::flow::{FlowBuilder, RunReport};
 use crate::noc::flit::NodeId;
-use crate::noc::{Network, NocConfig, Topology};
+use crate::noc::{NocConfig, Topology};
 use crate::partition::Partition;
-use crate::pe::PeSystem;
 use crate::serdes::SerdesConfig;
 
 pub use filter::{mean_error, track_reference, TrackTrace, TrackerParams};
@@ -34,9 +34,8 @@ pub use video::{synthetic_video, Video};
 pub struct PfilterRunReport {
     /// Estimated center per frame (index 0 = initial center).
     pub centers: Vec<(i32, i32)>,
-    pub cycles: u64,
-    pub flits_injected: u64,
-    pub flits_delivered: u64,
+    /// Unified flow report (cycles, NoC stats, per-PE stats).
+    pub report: RunReport,
 }
 
 /// The Fig 10 system: root + workers + sink on a mesh NoC.
@@ -70,50 +69,51 @@ impl PfilterNocTracker {
     }
 
     /// Track `video` from `init` over the NoC, optionally partitioned.
+    /// The Fig 10 system is assembled through the unified [`FlowBuilder`]:
+    /// the root orchestrator pinned to Node 0, one worker PE per mesh
+    /// endpoint, and a `centers` tap at the sink.
     pub fn track(
         &self,
         video: &Video,
         init: (i32, i32),
         partition: Option<(&Partition, SerdesConfig)>,
     ) -> PfilterRunReport {
-        let mut sys = PeSystem::new(Network::new(&self.topo, NocConfig::paper()));
-        if let Some((p, serdes)) = partition {
-            p.apply(&mut sys.net, serdes);
-        }
         let workers = self.worker_eps();
         let sink = self.sink_ep();
         assert!(sink > self.n_workers, "mesh too small");
+        let mut fb = FlowBuilder::new("pfilter");
+        fb.noc(NocConfig::paper())
+            .topology(self.topo.clone())
+            .max_cycles(500_000_000);
         for &w in &workers {
-            sys.attach(w, Box::new(pe::PfWorkerPe::new(self.root_ep())));
+            fb.pe_at(&format!("worker{w}"), w, Box::new(pe::PfWorkerPe::new(self.root_ep())));
+            fb.channel("root", &format!("worker{w}"));
         }
-        sys.attach(
+        fb.pe_at(
+            "root",
             self.root_ep(),
             Box::new(pe::PfRootPe::new(
                 video.clone(),
                 init,
                 self.params,
-                workers,
+                workers.clone(),
                 sink,
             )),
         );
-        let cycles = sys.run(500_000_000);
-        // Read the per-frame centers from the sink.
+        fb.tap_at("centers", sink);
+        fb.channel("root", "centers");
+        if let Some((p, serdes)) = partition {
+            fb.partition(p.clone()).serdes(serdes);
+        }
+        let mut flow = fb.build().expect("tracker flow layout is valid");
+        let report = flow.run().expect("tracking reaches quiescence");
+        // Read the per-frame centers from the tap: 48-bit messages, one
+        // per frame, carrying (frame, x, y) packed 16 bits each.
         let mut tagged: Vec<(u64, i32, i32)> = Vec::new();
-        let mut flits = Vec::new();
-        while let Some(f) = sys.net.eject(sink) {
-            flits.push(f);
-        }
-        // Center messages are 48-bit → 3 flits; group by epoch (frame).
-        let mut by_epoch: std::collections::HashMap<u32, Vec<crate::noc::Flit>> =
-            std::collections::HashMap::new();
-        for f in flits {
-            by_epoch.entry(f.tag >> 8).or_default().push(f);
-        }
-        for (_, group) in by_epoch {
-            let payload = crate::noc::flit::depacketize(&group, 48, 16);
-            let frame = payload[0] & 0xFFFF;
-            let x = ((payload[0] >> 16) & 0xFFFF) as u16 as i16 as i32;
-            let y = ((payload[0] >> 32) & 0xFFFF) as u16 as i16 as i32;
+        for msg in flow.drain_messages("centers", 48) {
+            let frame = msg.words[0] & 0xFFFF;
+            let x = ((msg.words[0] >> 16) & 0xFFFF) as u16 as i16 as i32;
+            let y = ((msg.words[0] >> 32) & 0xFFFF) as u16 as i16 as i32;
             tagged.push((frame, x, y));
         }
         tagged.sort_unstable();
@@ -122,13 +122,7 @@ impl PfilterNocTracker {
             assert_eq!(frame as usize, centers.len(), "missing frame center");
             centers.push((x, y));
         }
-        let st = sys.net.stats();
-        PfilterRunReport {
-            centers,
-            cycles,
-            flits_injected: st.injected,
-            flits_delivered: st.delivered,
-        }
+        PfilterRunReport { centers, report }
     }
 }
 
@@ -149,8 +143,8 @@ mod tests {
         let noc = PfilterNocTracker::on_mesh(4, p);
         let run = noc.track(&v, v.truth[0], None);
         assert_eq!(run.centers, reference.centers, "NoC must reproduce the oracle");
-        assert!(run.cycles > 0);
-        assert!(run.flits_delivered > 100, "frame DMA must traverse the NoC");
+        assert!(run.report.cycles > 0);
+        assert!(run.report.net.delivered > 100, "frame DMA must traverse the NoC");
     }
 
     #[test]
@@ -169,6 +163,7 @@ mod tests {
         let part = Partition::balanced(&noc.topo.build(), 2, 3);
         let split = noc.track(&v, v.truth[0], Some((&part, SerdesConfig::default())));
         assert_eq!(split.centers, mono.centers);
-        assert!(split.cycles > mono.cycles);
+        assert!(split.report.cycles > mono.report.cycles);
+        assert_eq!(split.report.n_fpgas, 2);
     }
 }

@@ -1,0 +1,1063 @@
+//! The unified flow API — one typed builder for the paper's Fig 1
+//! pipeline: **map** an application onto named processing elements,
+//! **wrap** them (Data Collector / Processor / Data Distributor) and plug
+//! them onto a CONNECT-style NoC, optionally **partition** the NoC across
+//! FPGAs over quasi-SERDES links, and **run** the whole system to
+//! quiescence with a unified [`RunReport`].
+//!
+//! Before this module, every case study hand-wired
+//! `Network::new → PeSystem::new → Partition::apply` with copy-pasted
+//! boilerplate and ad-hoc result types. [`FlowBuilder`] is now the single
+//! construction path (the three case studies and the examples all build
+//! through it); [`crate::pe::PeSystem`] and [`crate::noc::Network`]
+//! remain public as the low-level layer.
+//!
+//! A flow is assembled from:
+//!
+//! * **PEs** — named [`Processor`]s, pinned to an endpoint
+//!   ([`FlowBuilder::pe_at`], the paper's manual mode) or auto-placed
+//!   ([`FlowBuilder::pe`]) by the bisection-driven placer in [`placer`].
+//! * **Taps** — named bare endpoints whose eject queues the host reads
+//!   ([`MappedFlow::drain`] / [`MappedFlow::drain_messages`]) — the
+//!   paper's sink nodes.
+//! * **Channels** — logical `src → dst` message edges. They carry no
+//!   simulation semantics (routing is the NoC's job) but drive
+//!   auto-placement locality and document the application graph.
+//! * **Topology** — explicit, or an auto-sized mesh.
+//! * **Partition** — a user cut ([`FlowBuilder::partition`], the paper's
+//!   mode), or [`FlowBuilder::auto_partition`] via
+//!   [`Partition::balanced`]'s min-cut bisection; either installs
+//!   quasi-SERDES endpoints on every cut link.
+//!
+//! [`FlowBuilder::build`] validates the configuration
+//! ([`NocConfig::validate`]), the layout (names, endpoints, partition
+//! shape) and returns a [`MappedFlow`]; [`MappedFlow::run`] steps the
+//! system to quiescence and reports cycles, [`NetStats`], per-PE
+//! invocation/busy statistics, per-FPGA resource estimates and serdes
+//! overhead in one [`RunReport`]. [`MappedFlow::run_batch`] drives a
+//! fresh flow per input for batched experiments.
+
+pub mod placer;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::noc::flit::{depacketize, Flit, NodeId};
+use crate::noc::{NetStats, Network, NocConfig, Topology};
+use crate::partition::Partition;
+use crate::pe::collector::split_tag;
+use crate::pe::{PeSystem, Processor};
+use crate::resources::{Device, Resources};
+use crate::serdes::{wire_bits, SerdesConfig};
+
+/// Errors surfaced by [`FlowBuilder::build`] and [`MappedFlow::run`]
+/// (instead of the low-level layer's panics).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FlowError {
+    /// Invalid NoC configuration (see [`NocConfig::validate`]).
+    Config(String),
+    /// Invalid flow layout: duplicate names, endpoint collisions,
+    /// topology too small, malformed partition, …
+    Layout(String),
+    /// The system did not reach quiescence within the cycle budget
+    /// (protocol deadlock / livelock guard).
+    Timeout { cycles: u64, pending: usize },
+}
+
+impl fmt::Display for FlowError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FlowError::Config(msg) => write!(f, "invalid NoC config: {msg}"),
+            FlowError::Layout(msg) => write!(f, "invalid flow layout: {msg}"),
+            FlowError::Timeout { cycles, pending } => write!(
+                f,
+                "flow not quiescent after {cycles} cycles ({pending} flits pending)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FlowError {}
+
+/// Per-PE statistics in a [`RunReport`].
+#[derive(Clone, Debug)]
+pub struct PeRunStat {
+    pub name: String,
+    pub node: NodeId,
+    /// FPGA hosting the PE's router (0 when unpartitioned).
+    pub fpga: usize,
+    /// Invocations completed (paper: `start`…`done` handshakes).
+    pub invocations: u64,
+    /// Cycles the datapath was busy.
+    pub busy_cycles: u64,
+}
+
+/// The unified result of one flow run: every quantity the case studies
+/// used to compute by hand from `Network`/`PeSystem` internals.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Flow name (from [`FlowBuilder::new`]).
+    pub flow: String,
+    /// Cycles from the start of this run to quiescence.
+    pub cycles: u64,
+    /// Network counters (injected/delivered flits, latency, throughput).
+    pub net: NetStats,
+    /// Per-PE invocation/busy statistics.
+    pub pes: Vec<PeRunStat>,
+    /// FPGAs the NoC is partitioned across (1 = monolithic).
+    pub n_fpgas: usize,
+    /// NoC links cut by the partition.
+    pub cut_links: usize,
+    /// Quasi-SERDES serialization latency per flit (0 when unpartitioned).
+    pub serdes_cycles_per_flit: u64,
+    /// Flits carried over all quasi-SERDES channels.
+    pub serdes_flits: u64,
+    /// FPGA pins dedicated to quasi-SERDES links, per FPGA.
+    pub pins_per_fpga: Vec<usize>,
+    /// Resource estimate per FPGA: routers + serdes endpoints + PE
+    /// wrappers (+ any [`FlowBuilder::pe_resources`] app datapaths).
+    pub resources_per_fpga: Vec<Resources>,
+}
+
+impl RunReport {
+    /// Total PE invocations.
+    pub fn total_invocations(&self) -> u64 {
+        self.pes.iter().map(|p| p.invocations).sum()
+    }
+
+    /// Total PE busy cycles.
+    pub fn total_busy_cycles(&self) -> u64 {
+        self.pes.iter().map(|p| p.busy_cycles).sum()
+    }
+
+    /// Does every FPGA's estimate fit `device`?
+    pub fn fits(&self, device: &Device) -> bool {
+        self.resources_per_fpga.iter().all(|&r| device.fits(r))
+    }
+}
+
+impl fmt::Display for RunReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "flow '{}': {} cycles, {} PEs / {} invocations on {} FPGA(s)",
+            self.flow,
+            self.cycles,
+            self.pes.len(),
+            self.total_invocations(),
+            self.n_fpgas
+        )?;
+        if self.cut_links > 0 {
+            write!(
+                f,
+                ", {} links cut ({} serdes flits @ {} cycles/flit)",
+                self.cut_links, self.serdes_flits, self.serdes_cycles_per_flit
+            )?;
+        }
+        write!(f, " | {}", self.net)
+    }
+}
+
+/// A reassembled message drained from a tap endpoint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TapMessage {
+    /// Sending endpoint.
+    pub src: NodeId,
+    /// Message epoch (invocation / frame / iteration index).
+    pub epoch: u32,
+    /// Destination argument index.
+    pub arg: u8,
+    /// Payload words (little-endian bit order, as
+    /// [`crate::noc::flit::depacketize`] produces).
+    pub words: Vec<u64>,
+}
+
+struct PeSlot {
+    name: String,
+    node: Option<NodeId>,
+    proc_: Option<Box<dyn Processor>>,
+}
+
+struct TapSlot {
+    name: String,
+    node: Option<NodeId>,
+}
+
+enum PartitionSpec {
+    Whole,
+    Manual(Partition),
+    Auto(usize),
+}
+
+/// Builder for the full map → wrap → partition → run pipeline. See the
+/// [module docs](self) for the vocabulary and `examples/quickstart.rs`
+/// for an end-to-end walkthrough.
+pub struct FlowBuilder {
+    name: String,
+    cfg: NocConfig,
+    topo: Option<Topology>,
+    serdes: SerdesConfig,
+    partition: PartitionSpec,
+    pes: Vec<PeSlot>,
+    taps: Vec<TapSlot>,
+    channels: Vec<(String, String, u64)>,
+    extra_resources: Vec<(String, Resources)>,
+    max_cycles: u64,
+    seed: u64,
+}
+
+impl FlowBuilder {
+    /// Start a flow with the paper's NoC configuration, no partition, and
+    /// an auto-sized mesh unless [`FlowBuilder::topology`] is called.
+    pub fn new(name: &str) -> Self {
+        FlowBuilder {
+            name: name.to_string(),
+            cfg: NocConfig::paper(),
+            topo: None,
+            serdes: SerdesConfig::default(),
+            partition: PartitionSpec::Whole,
+            pes: Vec::new(),
+            taps: Vec::new(),
+            channels: Vec::new(),
+            extra_resources: Vec::new(),
+            max_cycles: 2_000_000_000,
+            seed: 0,
+        }
+    }
+
+    /// Override the NoC configuration (validated at [`FlowBuilder::build`]).
+    pub fn noc(&mut self, cfg: NocConfig) -> &mut Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Pick the topology explicitly. Without this, `build` sizes a mesh
+    /// to fit every PE and tap.
+    pub fn topology(&mut self, topo: Topology) -> &mut Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    /// Quasi-SERDES link parameters used on cut links.
+    pub fn serdes(&mut self, serdes: SerdesConfig) -> &mut Self {
+        self.serdes = serdes;
+        self
+    }
+
+    /// Partition the NoC with a user-specified cut (the paper's mode).
+    pub fn partition(&mut self, partition: Partition) -> &mut Self {
+        self.partition = PartitionSpec::Manual(partition);
+        self
+    }
+
+    /// Partition automatically into `n_fpgas` parts via
+    /// [`Partition::balanced`] (seeded by [`FlowBuilder::seed`]).
+    pub fn auto_partition(&mut self, n_fpgas: usize) -> &mut Self {
+        self.partition = PartitionSpec::Auto(n_fpgas);
+        self
+    }
+
+    /// Seed for the automatic partitioner.
+    pub fn seed(&mut self, seed: u64) -> &mut Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Cycle budget for [`MappedFlow::run`] (deadlock guard).
+    pub fn max_cycles(&mut self, max_cycles: u64) -> &mut Self {
+        self.max_cycles = max_cycles;
+        self
+    }
+
+    /// Register a PE for automatic placement.
+    pub fn pe(&mut self, name: &str, processor: Box<dyn Processor>) -> &mut Self {
+        self.pes.push(PeSlot { name: name.to_string(), node: None, proc_: Some(processor) });
+        self
+    }
+
+    /// Register a PE pinned to endpoint `node` (the paper's manual maps:
+    /// Fig 9's bit/check grid, Fig 10's root on Node 0, …).
+    pub fn pe_at(
+        &mut self,
+        name: &str,
+        node: NodeId,
+        processor: Box<dyn Processor>,
+    ) -> &mut Self {
+        self.pes.push(PeSlot {
+            name: name.to_string(),
+            node: Some(node),
+            proc_: Some(processor),
+        });
+        self
+    }
+
+    /// Declare the application-datapath resources of PE `name` (added to
+    /// its wrapper overhead in [`RunReport::resources_per_fpga`]).
+    pub fn pe_resources(&mut self, name: &str, resources: Resources) -> &mut Self {
+        self.extra_resources.push((name.to_string(), resources));
+        self
+    }
+
+    /// Register a tap (bare host-read endpoint) for automatic placement.
+    pub fn tap(&mut self, name: &str) -> &mut Self {
+        self.taps.push(TapSlot { name: name.to_string(), node: None });
+        self
+    }
+
+    /// Register a tap pinned to endpoint `node`.
+    pub fn tap_at(&mut self, name: &str, node: NodeId) -> &mut Self {
+        self.taps.push(TapSlot { name: name.to_string(), node: Some(node) });
+        self
+    }
+
+    /// Declare a logical channel between two named PEs/taps (weight 1).
+    pub fn channel(&mut self, from: &str, to: &str) -> &mut Self {
+        self.channel_weighted(from, to, 1)
+    }
+
+    /// Declare a weighted logical channel (heavier channels bind tighter
+    /// under auto-placement).
+    pub fn channel_weighted(&mut self, from: &str, to: &str, weight: u64) -> &mut Self {
+        self.channels.push((from.to_string(), to.to_string(), weight));
+        self
+    }
+
+    fn unit_index(&self, name: &str) -> Option<usize> {
+        self.pes
+            .iter()
+            .position(|p| p.name == name)
+            .or_else(|| {
+                self.taps
+                    .iter()
+                    .position(|t| t.name == name)
+                    .map(|i| i + self.pes.len())
+            })
+    }
+
+    /// Validate, place, wrap and wire the flow into a runnable
+    /// [`MappedFlow`]. Consumes the registered processors: a second
+    /// `build` on the same builder is an error.
+    pub fn build(&mut self) -> Result<MappedFlow, FlowError> {
+        self.cfg.validate().map_err(FlowError::Config)?;
+        if self.pes.is_empty() {
+            return Err(FlowError::Layout("flow has no processing elements".into()));
+        }
+        // Unique names across PEs and taps.
+        let mut names: Vec<&str> = self
+            .pes
+            .iter()
+            .map(|p| p.name.as_str())
+            .chain(self.taps.iter().map(|t| t.name.as_str()))
+            .collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            if w[0] == w[1] {
+                return Err(FlowError::Layout(format!("duplicate name '{}'", w[0])));
+            }
+        }
+        for (name, _) in &self.extra_resources {
+            if !self.pes.iter().any(|p| p.name == *name) {
+                return Err(FlowError::Layout(format!(
+                    "pe_resources for unknown PE '{name}'"
+                )));
+            }
+        }
+        let n_units = self.pes.len() + self.taps.len();
+        let topo = match &self.topo {
+            Some(t) => t.clone(),
+            None => {
+                let w = ((n_units as f64).sqrt().ceil() as usize).max(2);
+                let h = n_units.div_ceil(w).max(1);
+                Topology::Mesh { w, h }
+            }
+        };
+        let graph = topo.build();
+        let n_eps = graph.n_endpoints;
+        if n_units > n_eps {
+            return Err(FlowError::Layout(format!(
+                "{n_units} PEs/taps but topology {topo:?} has only {n_eps} endpoints"
+            )));
+        }
+        // Pinned endpoints: in range, collision-free.
+        let fixed: Vec<Option<NodeId>> = self
+            .pes
+            .iter()
+            .map(|p| p.node)
+            .chain(self.taps.iter().map(|t| t.node))
+            .collect();
+        let mut used = vec![false; n_eps];
+        for (u, &node) in fixed.iter().enumerate() {
+            let Some(node) = node else { continue };
+            if node >= n_eps {
+                return Err(FlowError::Layout(format!(
+                    "'{}' pinned to endpoint {node} but topology has {n_eps}",
+                    names_at(&self.pes, &self.taps, u)
+                )));
+            }
+            if used[node] {
+                return Err(FlowError::Layout(format!(
+                    "endpoint {node} assigned twice (second: '{}')",
+                    names_at(&self.pes, &self.taps, u)
+                )));
+            }
+            used[node] = true;
+        }
+        // Resolve the partition before placement so the placer can see it.
+        let partition = match &self.partition {
+            PartitionSpec::Whole => None,
+            PartitionSpec::Manual(p) => {
+                if p.assignment.len() != graph.n_routers {
+                    return Err(FlowError::Layout(format!(
+                        "partition covers {} routers but topology has {}",
+                        p.assignment.len(),
+                        graph.n_routers
+                    )));
+                }
+                Some(p.clone())
+            }
+            PartitionSpec::Auto(k) => {
+                if *k < 1 || *k > graph.n_routers {
+                    return Err(FlowError::Layout(format!(
+                        "cannot split {} routers across {k} FPGAs",
+                        graph.n_routers
+                    )));
+                }
+                Some(Partition::balanced(&graph, *k, self.seed))
+            }
+        };
+        // Resolve channels to unit indices.
+        let mut edges = Vec::with_capacity(self.channels.len());
+        for (a, b, w) in &self.channels {
+            let ia = self.unit_index(a).ok_or_else(|| {
+                FlowError::Layout(format!("channel endpoint '{a}' is not a PE or tap"))
+            })?;
+            let ib = self.unit_index(b).ok_or_else(|| {
+                FlowError::Layout(format!("channel endpoint '{b}' is not a PE or tap"))
+            })?;
+            edges.push((ia, ib, *w));
+        }
+        // Place the unpinned units (bisection-aware when partitioned).
+        let cut_penalty = if partition.is_some() {
+            self.serdes
+                .cycles_per_flit(wire_bits(self.cfg.flit_data_width, n_eps))
+        } else {
+            0
+        };
+        let place = placer::auto_place(&graph, &fixed, &edges, partition.as_ref(), cut_penalty)
+            .map_err(FlowError::Layout)?;
+        // Wire the system: network, serdes on cut links, wrapped PEs.
+        let mut net = Network::new(&topo, self.cfg);
+        let cut_links = match &partition {
+            Some(p) => p.apply(&mut net, self.serdes).len(),
+            None => 0,
+        };
+        let mut sys = PeSystem::new(net);
+        let n_pes = self.pes.len();
+        let mut pe_names = Vec::with_capacity(n_pes);
+        let mut pe_resources = Vec::with_capacity(n_pes);
+        for (i, slot) in self.pes.iter_mut().enumerate() {
+            let proc_ = slot.proc_.take().ok_or_else(|| {
+                FlowError::Layout(format!(
+                    "PE '{}' already consumed by an earlier build()",
+                    slot.name
+                ))
+            })?;
+            let mut r = proc_.spec().resources();
+            if let Some((_, extra)) =
+                self.extra_resources.iter().find(|(n, _)| *n == slot.name)
+            {
+                r += *extra;
+            }
+            sys.attach(place[i], proc_);
+            pe_names.push((slot.name.clone(), place[i]));
+            pe_resources.push(r);
+        }
+        let tap_names: Vec<(String, NodeId)> = self
+            .taps
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.clone(), place[n_pes + i]))
+            .collect();
+        Ok(MappedFlow {
+            name: self.name.clone(),
+            sys,
+            pe_names,
+            tap_names,
+            pe_resources,
+            partition,
+            serdes: self.serdes,
+            cut_links,
+            max_cycles: self.max_cycles,
+        })
+    }
+}
+
+fn names_at(pes: &[PeSlot], taps: &[TapSlot], unit: usize) -> String {
+    if unit < pes.len() {
+        pes[unit].name.clone()
+    } else {
+        taps[unit - pes.len()].name.clone()
+    }
+}
+
+/// A built flow: wrapped PEs plugged onto the (possibly partitioned) NoC,
+/// ready to run. The phase-1 + phase-2 result of the paper's pipeline.
+pub struct MappedFlow {
+    name: String,
+    sys: PeSystem,
+    pe_names: Vec<(String, NodeId)>,
+    tap_names: Vec<(String, NodeId)>,
+    pe_resources: Vec<Resources>,
+    partition: Option<Partition>,
+    serdes: SerdesConfig,
+    cut_links: usize,
+    max_cycles: u64,
+}
+
+impl MappedFlow {
+    /// Flow name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Endpoint a named PE or tap landed on (manual or auto-placed).
+    pub fn node_of(&self, name: &str) -> Option<NodeId> {
+        self.pe_names
+            .iter()
+            .chain(self.tap_names.iter())
+            .find(|(n, _)| n.as_str() == name)
+            .map(|&(_, node)| node)
+    }
+
+    /// The resolved partition (None when monolithic).
+    pub fn partition(&self) -> Option<&Partition> {
+        self.partition.as_ref()
+    }
+
+    /// Run until the network is idle and every PE is drained; returns the
+    /// unified report. Exceeding the cycle budget yields
+    /// [`FlowError::Timeout`] instead of the low-level layer's panic.
+    pub fn run(&mut self) -> Result<RunReport, FlowError> {
+        let start = self.sys.net.cycle();
+        while !self.sys.quiescent() {
+            self.sys.step();
+            if self.sys.net.cycle() - start > self.max_cycles {
+                return Err(FlowError::Timeout {
+                    cycles: self.sys.net.cycle() - start,
+                    pending: self.sys.net.pending(),
+                });
+            }
+        }
+        Ok(self.report(self.sys.net.cycle() - start))
+    }
+
+    /// Build one fresh flow per input, run it, and collect a value from
+    /// the quiescent system — the batched-run primitive behind sweeps
+    /// (BER curves, topology menus, r-sweeps).
+    pub fn run_batch<I, T>(
+        inputs: impl IntoIterator<Item = I>,
+        mut build: impl FnMut(&I) -> Result<MappedFlow, FlowError>,
+        mut collect: impl FnMut(&I, &mut MappedFlow) -> T,
+    ) -> Result<Vec<(T, RunReport)>, FlowError> {
+        let mut out = Vec::new();
+        for input in inputs {
+            let mut flow = build(&input)?;
+            let report = flow.run()?;
+            let value = collect(&input, &mut flow);
+            out.push((value, report));
+        }
+        Ok(out)
+    }
+
+    /// The unified report for `cycles` elapsed (also computed by
+    /// [`MappedFlow::run`]).
+    pub fn report(&self, cycles: u64) -> RunReport {
+        let topo = self.sys.net.topo();
+        let cfg = *self.sys.net.cfg();
+        let n_fpgas = self.partition.as_ref().map_or(1, |p| p.n_fpgas);
+        let mut resources_per_fpga = match &self.partition {
+            Some(p) => p.noc_resources_per_fpga(topo, &cfg, &self.serdes),
+            None => vec![topo.router_resources(&cfg)],
+        };
+        let mut pes = Vec::with_capacity(self.pe_names.len());
+        for ((name, node), res) in self.pe_names.iter().zip(&self.pe_resources) {
+            let fpga = self.fpga_of(*node);
+            resources_per_fpga[fpga] += *res;
+            let wpe = self.sys.pe(*node).expect("PE attached at its endpoint");
+            pes.push(PeRunStat {
+                name: name.clone(),
+                node: *node,
+                fpga,
+                invocations: wpe.invocations,
+                busy_cycles: wpe.busy_cycles,
+            });
+        }
+        let serdes_flits = self.sys.net.serdes_channels().map(|(_, c)| c.carried).sum();
+        let serdes_cycles_per_flit = self
+            .sys
+            .net
+            .serdes_channels()
+            .next()
+            .map_or(0, |(_, c)| c.ser_cycles);
+        let pins_per_fpga = match &self.partition {
+            Some(p) => p.pins_per_fpga(topo, &self.serdes),
+            None => vec![0],
+        };
+        RunReport {
+            flow: self.name.clone(),
+            cycles,
+            net: self.sys.net.stats().clone(),
+            pes,
+            n_fpgas,
+            cut_links: self.cut_links,
+            serdes_cycles_per_flit,
+            serdes_flits,
+            pins_per_fpga,
+            resources_per_fpga,
+        }
+    }
+
+    /// Drain every flit ejected at a tap (raw host read).
+    pub fn drain(&mut self, tap: &str) -> Vec<Flit> {
+        let node = self.tap_node(tap);
+        let mut out = Vec::new();
+        while let Some(f) = self.sys.net.eject(node) {
+            out.push(f);
+        }
+        out
+    }
+
+    /// Drain a tap and reassemble flits into `bits`-wide messages, one
+    /// per (source, epoch, argument), sorted by (epoch, source, argument).
+    pub fn drain_messages(&mut self, tap: &str, bits: usize) -> Vec<TapMessage> {
+        let fw = self.sys.net.cfg().flit_data_width;
+        let mut groups: BTreeMap<(u32, NodeId, u8), Vec<Flit>> = BTreeMap::new();
+        for f in self.drain(tap) {
+            let (epoch, arg) = split_tag(f.tag);
+            groups.entry((epoch, f.src, arg)).or_default().push(f);
+        }
+        groups
+            .into_iter()
+            .map(|((epoch, src, arg), flits)| TapMessage {
+                src,
+                epoch,
+                arg,
+                words: depacketize(&flits, bits, fw),
+            })
+            .collect()
+    }
+
+    /// Host DMA readback of a named PE's result memory (the RIFFA path).
+    pub fn readback(&self, pe: &str) -> Option<Vec<u64>> {
+        let node = self
+            .pe_names
+            .iter()
+            .find(|(n, _)| n.as_str() == pe)
+            .map(|&(_, node)| node)?;
+        self.sys.readback(node)
+    }
+
+    fn fpga_of(&self, node: NodeId) -> usize {
+        match &self.partition {
+            Some(p) => p.assignment[self.sys.net.topo().endpoint_router(node)],
+            None => 0,
+        }
+    }
+
+    fn tap_node(&self, name: &str) -> NodeId {
+        self.tap_names
+            .iter()
+            .find(|(n, _)| n.as_str() == name)
+            .unwrap_or_else(|| panic!("flow '{}' has no tap '{name}'", self.name))
+            .1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::{Allocator, Flit};
+    use crate::pe::collector::ArgMessage;
+    use crate::pe::{OutMessage, WrapperSpec};
+
+    /// Boot-time source sending fixed messages, then idle.
+    struct Source {
+        msgs: Vec<OutMessage>,
+    }
+    impl Processor for Source {
+        fn spec(&self) -> WrapperSpec {
+            WrapperSpec::new(vec![8], vec![16])
+        }
+        fn boot(&mut self) -> Vec<OutMessage> {
+            std::mem::take(&mut self.msgs)
+        }
+        fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
+            Vec::new()
+        }
+    }
+
+    /// adder(a, b) -> a + b, sent to `sink`.
+    struct Adder {
+        sink: NodeId,
+        latency: u64,
+    }
+    impl Processor for Adder {
+        fn spec(&self) -> WrapperSpec {
+            WrapperSpec::new(vec![16, 16], vec![16])
+        }
+        fn latency(&self) -> u64 {
+            self.latency
+        }
+        fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+            let sum = (args[0].payload[0] + args[1].payload[0]) & 0xFFFF;
+            vec![OutMessage::word(self.sink, 0, epoch, sum, 16)]
+        }
+    }
+
+    fn source_msgs(epochs: u32, adder_at: NodeId) -> Vec<OutMessage> {
+        (0..epochs)
+            .flat_map(|e| {
+                vec![
+                    OutMessage::word(adder_at, 0, e, e as u64, 16),
+                    OutMessage::word(adder_at, 1, e, 100, 16),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn flow_reproduces_legacy_pe_system_bit_for_bit() {
+        // Legacy wiring (the pre-flow construction path).
+        let mut sys = PeSystem::new(Network::new(
+            &Topology::Mesh { w: 2, h: 2 },
+            NocConfig::paper(),
+        ));
+        sys.attach(0, Box::new(Source { msgs: source_msgs(10, 3) }));
+        sys.attach(3, Box::new(Adder { sink: 2, latency: 2 }));
+        let legacy_cycles = sys.run(100_000);
+        let mut legacy = Vec::new();
+        while let Some(f) = sys.net.eject(2) {
+            legacy.push((f.src, f.dst, f.tag, f.data));
+        }
+
+        // Same system through the flow API.
+        let mut fb = FlowBuilder::new("adder");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("src", 0, Box::new(Source { msgs: source_msgs(10, 3) }))
+            .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 2 }))
+            .tap_at("out", 2);
+        let mut flow = fb.build().unwrap();
+        let report = flow.run().unwrap();
+        let got: Vec<_> = flow
+            .drain("out")
+            .into_iter()
+            .map(|f| (f.src, f.dst, f.tag, f.data))
+            .collect();
+        assert_eq!(got, legacy, "flow must not change delivery");
+        assert_eq!(report.cycles, legacy_cycles, "flow must not change timing");
+        assert_eq!(report.total_invocations(), 10);
+    }
+
+    #[test]
+    fn report_carries_pe_stats_and_resources() {
+        let mut fb = FlowBuilder::new("stats");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("src", 0, Box::new(Source { msgs: source_msgs(4, 3) }))
+            .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 5 }))
+            .tap_at("out", 2)
+            .pe_resources("add", Resources::new(64, 110));
+        let mut flow = fb.build().unwrap();
+        let report = flow.run().unwrap();
+        let add = report.pes.iter().find(|p| p.name == "add").unwrap();
+        assert_eq!(add.node, 3);
+        assert_eq!(add.invocations, 4);
+        assert_eq!(add.busy_cycles, 20);
+        assert_eq!(report.n_fpgas, 1);
+        assert_eq!(report.resources_per_fpga.len(), 1);
+        // Routers + two wrappers + the declared datapath.
+        let topo_only = (Topology::Mesh { w: 2, h: 2 })
+            .build()
+            .router_resources(&NocConfig::paper());
+        assert!(report.resources_per_fpga[0].regs > topo_only.regs + 64);
+        assert!(report.fits(&Device::ZC7020));
+        assert!(format!("{report}").contains("flow 'stats'"));
+    }
+
+    #[test]
+    fn partitioned_flow_same_results_more_cycles() {
+        let build = |partitioned: bool| -> MappedFlow {
+            let mut fb = FlowBuilder::new("cut");
+            fb.topology(Topology::Mesh { w: 2, h: 2 })
+                .pe_at("src", 0, Box::new(Source { msgs: source_msgs(8, 3) }))
+                .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 1 }))
+                .tap_at("out", 2);
+            if partitioned {
+                fb.partition(Partition::new(2, vec![0, 0, 1, 1]));
+            }
+            fb.build().unwrap()
+        };
+        let mut mono = build(false);
+        let mono_report = mono.run().unwrap();
+        let mono_msgs = mono.drain_messages("out", 16);
+
+        let mut split = build(true);
+        let split_report = split.run().unwrap();
+        let split_msgs = split.drain_messages("out", 16);
+
+        assert_eq!(mono_msgs, split_msgs, "partitioning must not change results");
+        assert!(split_report.cycles > mono_report.cycles);
+        assert_eq!(split_report.n_fpgas, 2);
+        assert!(split_report.cut_links > 0);
+        assert!(split_report.serdes_flits > 0);
+        assert!(split_report.serdes_cycles_per_flit > 0);
+        assert_eq!(split_report.pins_per_fpga.len(), 2);
+        assert_eq!(split_report.resources_per_fpga.len(), 2);
+    }
+
+    #[test]
+    fn auto_topology_auto_placement_and_auto_partition() {
+        let mut fb = FlowBuilder::new("auto");
+        // No topology, no endpoints: everything derived.
+        fb.pe("src", Box::new(Source { msgs: Vec::new() }))
+            .pe("add", Box::new(Adder { sink: 0, latency: 1 }))
+            .tap("out")
+            .channel("src", "add")
+            .channel("add", "out")
+            .auto_partition(2)
+            .seed(7);
+        let flow = fb.build().unwrap();
+        // Feed the adder through the placed endpoints.
+        let add = flow.node_of("add").unwrap();
+        let out = flow.node_of("out").unwrap();
+        assert_ne!(add, out);
+        // Rebuild with a source that targets the placed endpoints.
+        let mut fb2 = FlowBuilder::new("auto2");
+        fb2.pe(
+            "src",
+            Box::new(Source {
+                msgs: vec![
+                    OutMessage::word(add, 0, 1, 5, 16),
+                    OutMessage::word(add, 1, 1, 7, 16),
+                ],
+            }),
+        )
+        .pe_at("add", add, Box::new(Adder { sink: out, latency: 3 }))
+        .tap_at("out", out)
+        .channel("src", "add")
+        .auto_partition(2)
+        .seed(7);
+        let mut flow2 = fb2.build().unwrap();
+        let report = flow2.run().unwrap();
+        let msgs = flow2.drain_messages("out", 16);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].words[0], 12);
+        assert_eq!(msgs[0].epoch, 1);
+        assert_eq!(report.n_fpgas, 2);
+    }
+
+    #[test]
+    fn run_batch_builds_fresh_flows() {
+        let runs = MappedFlow::run_batch(
+            [1u64, 2, 3],
+            |&x| {
+                let mut fb = FlowBuilder::new("batch");
+                fb.topology(Topology::Mesh { w: 2, h: 2 })
+                    .pe_at(
+                        "src",
+                        0,
+                        Box::new(Source {
+                            msgs: vec![
+                                OutMessage::word(3, 0, 0, x, 16),
+                                OutMessage::word(3, 1, 0, 10, 16),
+                            ],
+                        }),
+                    )
+                    .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 1 }))
+                    .tap_at("out", 2);
+                fb.build()
+            },
+            |_, flow| flow.drain_messages("out", 16)[0].words[0],
+        )
+        .unwrap();
+        let sums: Vec<u64> = runs.iter().map(|(v, _)| *v).collect();
+        assert_eq!(sums, vec![11, 12, 13]);
+        assert!(runs.iter().all(|(_, r)| r.cycles > 0));
+    }
+
+    #[test]
+    fn config_errors_are_results_not_panics() {
+        let mut fb = FlowBuilder::new("bad");
+        fb.noc(NocConfig { flit_data_width: 0, ..NocConfig::paper() })
+            .pe("p", Box::new(Source { msgs: Vec::new() }));
+        assert!(matches!(fb.build(), Err(FlowError::Config(_))));
+
+        let mut fb = FlowBuilder::new("bad2");
+        fb.noc(NocConfig {
+            buffer_depth: 0,
+            allocator: Allocator::SeparableInputFirstRR,
+            ..NocConfig::paper()
+        })
+        .pe("p", Box::new(Source { msgs: Vec::new() }));
+        assert!(matches!(fb.build(), Err(FlowError::Config(_))));
+    }
+
+    #[test]
+    fn layout_errors_are_descriptive() {
+        // Duplicate name.
+        let mut fb = FlowBuilder::new("dup");
+        fb.pe("x", Box::new(Source { msgs: Vec::new() }))
+            .tap("x");
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // Endpoint collision.
+        let mut fb = FlowBuilder::new("collide");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("a", 1, Box::new(Source { msgs: Vec::new() }))
+            .tap_at("t", 1);
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // Endpoint out of range.
+        let mut fb = FlowBuilder::new("range");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("a", 9, Box::new(Source { msgs: Vec::new() }));
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // Too many units for the topology.
+        let mut fb = FlowBuilder::new("full");
+        fb.topology(Topology::Mesh { w: 2, h: 2 });
+        for i in 0..5 {
+            fb.pe(&format!("p{i}"), Box::new(Source { msgs: Vec::new() }));
+        }
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // Partition shaped for a different topology.
+        let mut fb = FlowBuilder::new("shape");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("a", 0, Box::new(Source { msgs: Vec::new() }))
+            .partition(Partition::new(2, vec![0, 1]));
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // Channel to an unknown unit.
+        let mut fb = FlowBuilder::new("chan");
+        fb.pe("a", Box::new(Source { msgs: Vec::new() }))
+            .channel("a", "ghost");
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // No PEs at all.
+        let mut fb = FlowBuilder::new("empty");
+        fb.tap("t");
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+    }
+
+    #[test]
+    fn second_build_is_an_error() {
+        let mut fb = FlowBuilder::new("twice");
+        fb.pe("p", Box::new(Source { msgs: Vec::new() }));
+        assert!(fb.build().is_ok());
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+    }
+
+    #[test]
+    fn timeout_is_a_result() {
+        // An adder whose second argument never arrives stays non-quiescent
+        // only if something keeps circulating — instead, exercise the
+        // budget with a source that sends more work than the budget allows.
+        let mut fb = FlowBuilder::new("slow");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("src", 0, Box::new(Source { msgs: source_msgs(50, 3) }))
+            .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 1000 }))
+            .tap_at("out", 2)
+            .max_cycles(100);
+        let mut flow = fb.build().unwrap();
+        match flow.run() {
+            Err(FlowError::Timeout { cycles, .. }) => assert!(cycles > 100),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drain_messages_reassembles_multiflit_messages() {
+        // 48-bit messages cross the wrapper as 3 flits at width 16.
+        struct Wide {
+            sink: NodeId,
+        }
+        impl Processor for Wide {
+            fn spec(&self) -> WrapperSpec {
+                WrapperSpec::new(vec![48], vec![48])
+            }
+            fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+                let mut p = args[0].payload.clone();
+                p[0] = p[0].wrapping_add(1) & 0xFFFF_FFFF_FFFF;
+                vec![OutMessage { dst: self.sink, arg: 0, epoch, payload: p, bits: 48 }]
+            }
+        }
+        let mut fb = FlowBuilder::new("wide");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at(
+                "src",
+                0,
+                Box::new(Source {
+                    msgs: vec![OutMessage {
+                        dst: 3,
+                        arg: 0,
+                        epoch: 9,
+                        payload: vec![0xAAAA_BBBB_CCCC],
+                        bits: 48,
+                    }],
+                }),
+            )
+            .pe_at("wide", 3, Box::new(Wide { sink: 1 }))
+            .tap_at("out", 1);
+        let mut flow = fb.build().unwrap();
+        flow.run().unwrap();
+        let msgs = flow.drain_messages("out", 48);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].words, vec![0xAAAA_BBBB_CCCD]);
+        assert_eq!(msgs[0].epoch, 9);
+        assert_eq!(msgs[0].src, 3);
+    }
+
+    #[test]
+    fn unknown_tap_panics_with_flow_name() {
+        let mut fb = FlowBuilder::new("named");
+        fb.pe("p", Box::new(Source { msgs: Vec::new() }));
+        let mut flow = fb.build().unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            flow.drain("ghost");
+        }));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn report_without_running_reflects_zero_cycles() {
+        let mut fb = FlowBuilder::new("fresh");
+        fb.pe("p", Box::new(Source { msgs: Vec::new() }));
+        let flow = fb.build().unwrap();
+        let report = flow.report(0);
+        assert_eq!(report.cycles, 0);
+        assert_eq!(report.total_invocations(), 0);
+        assert_eq!(report.flow, "fresh");
+    }
+
+    #[test]
+    fn eject_flit_fields_survive_the_flow_layer() {
+        // drain() must hand back raw flits unchanged (the LDPC decoder
+        // keys its decisions on f.src).
+        let mut fb = FlowBuilder::new("raw");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at(
+                "src",
+                0,
+                Box::new(Source { msgs: vec![OutMessage::word(2, 4, 7, 0xBEEF, 16)] }),
+            )
+            .tap_at("out", 2);
+        let mut flow = fb.build().unwrap();
+        flow.run().unwrap();
+        let flits = flow.drain("out");
+        assert_eq!(flits.len(), 1);
+        let f: &Flit = &flits[0];
+        assert_eq!((f.src, f.dst), (0, 2));
+        assert_eq!(split_tag(f.tag), (7, 4));
+        assert_eq!(f.data, 0xBEEF);
+    }
+}

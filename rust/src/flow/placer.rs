@@ -1,0 +1,199 @@
+//! Automatic PE → endpoint placement for [`super::FlowBuilder`].
+//!
+//! The paper leaves placement to the designer (every figure pins PEs to
+//! endpoints by hand); the flow API keeps that as the primary mode but
+//! adds a deterministic auto-placer for unplaced PEs/taps. The placer is
+//! *bisection-driven*: when the flow is partitioned across FPGAs (the
+//! automatic mode reuses [`Partition::balanced`]'s min-cut bisection),
+//! logical channels that would cross the cut are charged the quasi-SERDES
+//! serialization latency, so communicating PEs cluster on the same chip;
+//! within a chip, channels are charged their router hop distance, so they
+//! cluster on adjacent routers.
+//!
+//! Units already pinned by the user act as seeds: the remaining units are
+//! visited in BFS order over the logical channel graph (heaviest channel
+//! first) and greedily assigned the free endpoint minimizing the total
+//! weighted cost against already-placed neighbors. Everything is
+//! deterministic — same flow, same placement.
+
+use std::cmp::Reverse;
+use std::collections::VecDeque;
+
+use crate::noc::flit::NodeId;
+use crate::noc::topology::TopoGraph;
+use crate::partition::Partition;
+
+/// Place every logical unit (PE or tap) on a distinct endpoint.
+///
+/// `fixed[u]` pins unit `u` (validated unique/in-range by the caller);
+/// `edges` are logical channels `(unit, unit, weight)`; `cut_penalty` is
+/// the extra cost (in hop-equivalents) of a channel crossing `partition`.
+pub(super) fn auto_place(
+    graph: &TopoGraph,
+    fixed: &[Option<NodeId>],
+    edges: &[(usize, usize, u64)],
+    partition: Option<&Partition>,
+    cut_penalty: u64,
+) -> Result<Vec<NodeId>, String> {
+    let n = fixed.len();
+    let n_eps = graph.n_endpoints;
+    if n > n_eps {
+        return Err(format!(
+            "{n} PEs/taps need more endpoints than the topology's {n_eps}"
+        ));
+    }
+    let mut used = vec![false; n_eps];
+    let mut place: Vec<Option<NodeId>> = fixed.to_vec();
+    for &ep in fixed.iter().flatten() {
+        used[ep] = true;
+    }
+    if place.iter().all(|p| p.is_some()) {
+        return Ok(place.into_iter().map(|p| p.unwrap()).collect());
+    }
+
+    // Undirected channel adjacency (self-channels carry no information).
+    let mut adj: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+    for &(a, b, w) in edges {
+        if a != b {
+            adj[a].push((b, w));
+            adj[b].push((a, w));
+        }
+    }
+
+    // Visit order: BFS from the pinned seeds over the channel graph,
+    // heaviest channel first; disconnected components start from their
+    // highest-degree unit.
+    let mut order: Vec<usize> = Vec::new();
+    let mut seen: Vec<bool> = fixed.iter().map(|f| f.is_some()).collect();
+    let mut queue: VecDeque<usize> = (0..n).filter(|&u| seen[u]).collect();
+    loop {
+        while let Some(u) = queue.pop_front() {
+            let mut nbrs = adj[u].clone();
+            nbrs.sort_by_key(|&(v, w)| (Reverse(w), v));
+            for (v, _) in nbrs {
+                if !seen[v] {
+                    seen[v] = true;
+                    order.push(v);
+                    queue.push_back(v);
+                }
+            }
+        }
+        match (0..n)
+            .filter(|&u| !seen[u])
+            .max_by_key(|&u| (adj[u].len(), Reverse(u)))
+        {
+            Some(u) => {
+                seen[u] = true;
+                order.push(u);
+                queue.push_back(u);
+            }
+            None => break,
+        }
+    }
+
+    let fpga_of = |ep: NodeId| -> usize {
+        partition.map_or(0, |p| p.assignment[graph.endpoint_router(ep)])
+    };
+    for u in order {
+        let mut best: Option<(u64, NodeId)> = None;
+        for ep in 0..n_eps {
+            if used[ep] {
+                continue;
+            }
+            let mut cost = 0u64;
+            for &(v, w) in &adj[u] {
+                if let Some(pv) = place[v] {
+                    let mut c = graph.hop_distance(ep, pv) as u64;
+                    if fpga_of(ep) != fpga_of(pv) {
+                        c += cut_penalty;
+                    }
+                    cost += w.max(1) * c;
+                }
+            }
+            if best.is_none() || cost < best.unwrap().0 {
+                best = Some((cost, ep));
+            }
+        }
+        let (_, ep) = best.expect("free endpoint exists (n <= n_eps)");
+        place[u] = Some(ep);
+        used[ep] = true;
+    }
+    Ok(place.into_iter().map(|p| p.unwrap()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::Topology;
+
+    #[test]
+    fn respects_fixed_and_fills_the_rest() {
+        let g = (Topology::Mesh { w: 3, h: 3 }).build();
+        let fixed = vec![Some(4), None, None, Some(0)];
+        let edges = vec![(0, 1, 1), (0, 2, 1), (0, 3, 1)];
+        let place = auto_place(&g, &fixed, &edges, None, 0).unwrap();
+        assert_eq!(place[0], 4);
+        assert_eq!(place[3], 0);
+        // All distinct, all in range.
+        let mut sorted = place.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        assert!(place.iter().all(|&p| p < 9));
+        // Units 1 and 2 talk only to the hub at endpoint 4: the greedy
+        // placer puts them on adjacent routers.
+        assert!(g.hop_distance(place[1], 4) <= 1);
+        assert!(g.hop_distance(place[2], 4) <= 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = (Topology::Torus { w: 4, h: 4 }).build();
+        let fixed = vec![None; 10];
+        let edges: Vec<(usize, usize, u64)> =
+            (0..9).map(|i| (i, i + 1, 1 + (i as u64 % 3))).collect();
+        let a = auto_place(&g, &fixed, &edges, None, 0).unwrap();
+        let b = auto_place(&g, &fixed, &edges, None, 0).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn star_beats_adversarial_placement() {
+        // A hub with 8 leaves on a 4x4 mesh: the greedy placement's total
+        // hop cost must beat pinning the leaves to the far corner region.
+        let g = (Topology::Mesh { w: 4, h: 4 }).build();
+        let n = 9;
+        let edges: Vec<(usize, usize, u64)> = (1..n).map(|l| (0, l, 1)).collect();
+        let fixed = vec![None; n];
+        let place = auto_place(&g, &fixed, &edges, None, 0).unwrap();
+        let cost = |p: &[NodeId]| -> usize {
+            (1..n).map(|l| g.hop_distance(p[0], p[l])).sum()
+        };
+        // Adversary: hub at 0, leaves packed into the opposite corner.
+        let bad: Vec<NodeId> = std::iter::once(0)
+            .chain((0..8).map(|i| 15 - i))
+            .collect();
+        assert!(cost(&place) < cost(&bad), "{place:?}");
+    }
+
+    #[test]
+    fn cut_penalty_groups_heavy_pairs_on_one_fpga() {
+        let g = (Topology::Mesh { w: 4, h: 4 }).build();
+        let p = Partition::balanced(&g, 2, 1);
+        // Four independent heavy pairs.
+        let edges = vec![(0, 1, 10), (2, 3, 10), (4, 5, 10), (6, 7, 10)];
+        let fixed = vec![None; 8];
+        let place = auto_place(&g, &fixed, &edges, Some(&p), 50).unwrap();
+        for (a, b, _) in edges {
+            let fa = p.assignment[g.endpoint_router(place[a])];
+            let fb = p.assignment[g.endpoint_router(place[b])];
+            assert_eq!(fa, fb, "pair ({a},{b}) split across FPGAs: {place:?}");
+        }
+    }
+
+    #[test]
+    fn too_many_units_is_an_error() {
+        let g = (Topology::Mesh { w: 2, h: 2 }).build();
+        assert!(auto_place(&g, &[None; 5], &[], None, 0).is_err());
+    }
+}

@@ -6,31 +6,80 @@
 //! reproduction of *"Framework for Application Mapping over
 //! Packet-switched Network of FPGAs: Case Studies"* (IIT Bombay, 2015).
 //!
-//! The library is organized as the paper's two-phase flow plus the
-//! substrates it depends on:
+//! The paper's whole pitch is a *semi-automated flow*, and [`flow`] is
+//! that flow as one typed API: express the application as named
+//! processing elements and logical channels, pick (or auto-size) a
+//! topology, place the PEs (by hand, as in every paper figure, or via
+//! the bisection-driven auto-placer), wrap them with Data Collector /
+//! Data Distributor adapters onto a CONNECT-style NoC, optionally cut
+//! the NoC across FPGAs "in a manner oblivious to the designer", and run
+//! the whole system cycle by cycle with one unified report:
 //!
-//! * **Phase 1 — application mapping to NoC** ([`pe`], [`noc`]): express the
-//!   application as communicating processing elements, wrap each PE with a
-//!   *Data Collector* / *Data Processor* / *Data Distributor* adapter, and
-//!   plug the wrapped PEs onto a CONNECT-style packet-switched NoC.
+//! ```
+//! use fabricflow::flow::FlowBuilder;
+//! use fabricflow::noc::Topology;
+//! use fabricflow::partition::Partition;
+//! use fabricflow::pe::collector::ArgMessage;
+//! use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
+//!
+//! /// Boot-time source feeding one argument to the doubler at endpoint 1.
+//! struct Feed;
+//! impl Processor for Feed {
+//!     fn spec(&self) -> WrapperSpec { WrapperSpec::new(vec![16], vec![16]) }
+//!     fn boot(&mut self) -> Vec<OutMessage> {
+//!         vec![OutMessage::word(1, 0, 0, 21, 16)]
+//!     }
+//!     fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> { Vec::new() }
+//! }
+//!
+//! /// Doubles its argument and forwards the result to the tap at endpoint 2.
+//! struct Doubler;
+//! impl Processor for Doubler {
+//!     fn spec(&self) -> WrapperSpec { WrapperSpec::new(vec![16], vec![16]) }
+//!     fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+//!         vec![OutMessage::word(2, 0, epoch, args[0].payload[0] * 2, 16)]
+//!     }
+//! }
+//!
+//! let mut fb = FlowBuilder::new("doubler");
+//! fb.topology(Topology::Mesh { w: 2, h: 2 })      // phase 1: map …
+//!     .pe_at("feed", 0, Box::new(Feed))           //   … wrap, plug on the NoC
+//!     .pe_at("double", 1, Box::new(Doubler))
+//!     .tap_at("out", 2)
+//!     .channel("feed", "double")
+//!     .partition(Partition::island(4, &[0]));     // phase 2: 2 FPGAs
+//! let mut flow = fb.build().unwrap();
+//! let report = flow.run().unwrap();               // cycle-accurate run
+//! assert_eq!(flow.drain_messages("out", 16)[0].words[0], 42);
+//! assert!(report.cut_links > 0);                  // quasi-SERDES in the path
+//! ```
+//!
+//! The library layers under that API follow the paper's two-phase flow:
+//!
+//! * **Phase 1 — application mapping to NoC** ([`pe`], [`noc`]): the
+//!   [`pe::Processor`] trait and collector/distributor wrappers, and the
+//!   cycle-level packet-switched NoC simulator (ring/mesh/torus/fat-tree
+//!   and custom topologies, CONNECT-style routers).
 //! * **Phase 2 — partitioning across FPGAs** ([`partition`], [`serdes`]):
-//!   cut NoC links along a user-specified (or automatically derived)
-//!   partition and stitch in quasi-SERDES endpoints that serialize flits
-//!   over a few GPIO pins, so the design runs unchanged across chips.
+//!   user-specified or automatically derived cuts, with quasi-SERDES
+//!   endpoints stitched onto every cut link so the design runs unchanged
+//!   across chips.
 //! * **Case studies** ([`apps`]): LDPC min-sum decoding over a 4×4 mesh,
 //!   particle-filter object tracking, and Boolean matrix-vector
 //!   multiplication over GF(2) using Ryan Williams' sub-quadratic
-//!   algorithm.
+//!   algorithm — all constructed exclusively through [`flow::FlowBuilder`].
 //! * **Substrates**: [`gf2`] (GF(2)/GF(2^s) algebra and projective-geometry
 //!   LDPC codes), [`resources`] (zc7020-style FPGA resource model),
-//!   [`dfg`]+[`mips`] (the paper's compiler-driven toy flow, Fig 2),
-//!   [`runtime`] (PJRT execution of AOT-compiled JAX/Pallas artifacts),
-//!   and [`util`] (PRNG, bench harness, property-test driver).
+//!   [`dfg`]+[`mips`] (the paper's compiler-driven toy flow, Fig 2), and
+//!   [`util`] (PRNG, bench harness, property-test driver).
 //!
 //! Compute hot-spots (batched LDPC decode, BMVM, particle weights) are
-//! authored in JAX/Pallas under `python/compile/`, AOT-lowered to HLO text
-//! at build time (`make artifacts`) and executed from Rust through
-//! [`runtime`]; Python is never on the request path.
+//! additionally authored in JAX/Pallas under `python/compile/`, AOT-lowered
+//! to HLO text (`make artifacts`) and executed through the `runtime`
+//! module, which is gated behind the `pjrt` feature because it needs the
+//! vendored `xla` crate; the default build has no dependencies at all.
+//!
+//! The reproducible experiment index lives in `EXPERIMENTS.md`.
 
 pub mod util;
 pub mod gf2;
@@ -39,6 +88,8 @@ pub mod noc;
 pub mod serdes;
 pub mod partition;
 pub mod pe;
+pub mod flow;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod dfg;
 pub mod mips;

@@ -139,7 +139,10 @@ fn cmd_ldpc(args: &Args) {
     let run = dec.decode(&llr, None);
     println!(
         "  single FPGA : bits {:?} valid={} cycles={} flits={}",
-        run.result.bits, run.result.valid_codeword, run.cycles, run.flits_delivered
+        run.result.bits,
+        run.result.valid_codeword,
+        run.report.cycles,
+        run.report.net.delivered
     );
     if args.has("partition") {
         let p = dec.fig9_partition();
@@ -147,8 +150,8 @@ fn cmd_ldpc(args: &Args) {
         println!(
             "  2 FPGAs     : bits {:?} cycles={} (+{} serdes cycles)",
             split.result.bits,
-            split.cycles,
-            split.cycles - run.cycles
+            split.report.cycles,
+            split.report.cycles - run.report.cycles
         );
     }
 }
@@ -172,7 +175,7 @@ fn cmd_track(args: &Args) {
     for (k, (&est, &truth)) in run.centers.iter().zip(&video.truth).enumerate() {
         println!("  frame {k:2}: est {est:?} truth {truth:?}");
     }
-    println!("  cycles={} flits={}", run.cycles, run.flits_delivered);
+    println!("  cycles={} flits={}", run.report.cycles, run.report.net.delivered);
 }
 
 fn cmd_bmvm(args: &Args) {
@@ -195,7 +198,7 @@ fn cmd_bmvm(args: &Args) {
     assert_eq!(run.result, dense_power_matvec(&a, &v, r), "verify vs dense oracle");
     println!(
         "  cycles={} time={:.3} ms (incl. host link) flits={} — verified vs dense A^r v",
-        run.cycles, run.time_ms, run.flits_delivered
+        run.report.cycles, run.time_ms, run.report.net.delivered
     );
 }
 

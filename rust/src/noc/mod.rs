@@ -78,4 +78,73 @@ impl NocConfig {
     pub fn paper() -> Self {
         Self::default()
     }
+
+    /// Validate the configuration, returning a description of the first
+    /// problem found. Used by [`crate::flow::FlowBuilder::build`] to
+    /// surface config errors as `Result` instead of deep simulator
+    /// panics.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.flit_data_width == 0 {
+            return Err("flit_data_width must be >= 1".into());
+        }
+        if self.flit_data_width > 64 {
+            return Err(format!(
+                "flit_data_width {} exceeds the 64-bit payload word",
+                self.flit_data_width
+            ));
+        }
+        if self.buffer_depth == 0 {
+            return Err("buffer_depth must be >= 1 (Peek flow control needs a buffer)".into());
+        }
+        if self.num_vcs == 0 {
+            return Err("num_vcs must be >= 1".into());
+        }
+        if self.num_vcs > 4 {
+            return Err(format!(
+                "num_vcs {} exceeds the flit header's 2-bit VC field",
+                self.num_vcs
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_is_valid() {
+        assert_eq!(NocConfig::paper().validate(), Ok(()));
+    }
+
+    #[test]
+    fn zero_fields_are_rejected() {
+        for cfg in [
+            NocConfig { flit_data_width: 0, ..NocConfig::paper() },
+            NocConfig { buffer_depth: 0, ..NocConfig::paper() },
+            NocConfig { num_vcs: 0, ..NocConfig::paper() },
+        ] {
+            assert!(cfg.validate().is_err(), "{cfg:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn out_of_range_fields_are_rejected() {
+        let wide = NocConfig { flit_data_width: 65, ..NocConfig::paper() };
+        assert!(wide.validate().is_err());
+        let vcs = NocConfig { num_vcs: 5, ..NocConfig::paper() };
+        assert!(vcs.validate().is_err());
+    }
+
+    #[test]
+    fn boundary_values_are_accepted() {
+        let cfg = NocConfig {
+            flit_data_width: 64,
+            buffer_depth: 1,
+            num_vcs: 4,
+            allocator: Allocator::FixedPriority,
+        };
+        assert_eq!(cfg.validate(), Ok(()));
+    }
 }

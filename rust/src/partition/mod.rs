@@ -456,4 +456,70 @@ mod tests {
     fn empty_fpga_rejected() {
         Partition::new(3, vec![0, 0, 1, 1]);
     }
+
+    #[test]
+    fn balanced_is_deterministic_for_a_seed() {
+        for t in [
+            Topology::Mesh { w: 8, h: 8 },
+            Topology::Torus { w: 6, h: 6 },
+            Topology::Ring(32),
+        ] {
+            let g = t.build();
+            for k in [2usize, 3, 4] {
+                let a = Partition::balanced(&g, k, 99);
+                let b = Partition::balanced(&g, k, 99);
+                assert_eq!(a, b, "{t:?} k={k} must replay identically");
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_leaves_no_fpga_empty() {
+        for t in [
+            Topology::Mesh { w: 5, h: 3 },
+            Topology::Ring(9),
+            Topology::Torus { w: 4, h: 4 },
+            Topology::fat_tree(16),
+        ] {
+            let g = t.build();
+            for k in 2..=5usize {
+                if k > g.n_routers {
+                    continue;
+                }
+                for seed in 0..5u64 {
+                    let p = Partition::balanced(&g, k, seed);
+                    assert!(
+                        p.sizes().iter().all(|&s| s > 0),
+                        "{t:?} k={k} seed={seed}: {:?}",
+                        p.sizes()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_cut_no_worse_than_round_robin() {
+        // The trivial balanced split — routers round-robin across FPGAs —
+        // cuts nearly every link; the bisection must never do worse on
+        // the paper's mesh/ring/torus topologies.
+        for t in [
+            Topology::Mesh { w: 6, h: 6 },
+            Topology::Ring(24),
+            Topology::Torus { w: 6, h: 6 },
+        ] {
+            let g = t.build();
+            for k in [2usize, 4] {
+                let auto = Partition::balanced(&g, k, 7);
+                let trivial =
+                    Partition::new(k, (0..g.n_routers).map(|r| r % k).collect());
+                assert!(
+                    auto.cut_links(&g).len() <= trivial.cut_links(&g).len(),
+                    "{t:?} k={k}: {} vs {}",
+                    auto.cut_links(&g).len(),
+                    trivial.cut_links(&g).len()
+                );
+            }
+        }
+    }
 }

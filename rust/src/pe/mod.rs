@@ -13,7 +13,8 @@
 //! * [`Processor`] is the *Data processing* module of Fig 4c: the
 //!   handcrafted-or-HLS compute body. Implementations in this crate are
 //!   either bit-exact Rust datapaths ([`crate::apps`]) or AOT-compiled
-//!   JAX/Pallas artifacts executed through [`crate::runtime`].
+//!   JAX/Pallas artifacts executed through the `pjrt`-gated `runtime`
+//!   module.
 //! * [`WrappedPe`] adds the *Data Distributor* (packetize results, one
 //!   flit per cycle into the NI) plus the compute-latency model, and
 //!   [`PeSystem`] steps a whole NoC of wrapped PEs cycle by cycle.

@@ -1,5 +1,9 @@
 //! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
 //!
+//! Compiled only with the `pjrt` cargo feature: this module needs the
+//! vendored `xla` crate and `anyhow`, which offline containers do not
+//! ship (see Cargo.toml for how to enable it).
+//!
 //! Layer 2/3 seam of the three-layer architecture: `python/compile/aot.py`
 //! lowers the JAX models (which call the Pallas kernels) to **HLO text**
 //! under `artifacts/`; this module loads that text with

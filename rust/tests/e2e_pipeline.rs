@@ -133,7 +133,7 @@ fn serdes_timing_monotone_in_pins() {
     for pins in [1u32, 2, 4, 8, 16] {
         let run = sys.run(&v, 6, Some((&p, SerdesConfig { pins, clock_div: 1, tx_buffer: 8 })));
         assert_eq!(run.result, expect, "pins={pins}");
-        assert!(run.cycles <= last, "more pins must not slow down ({pins})");
-        last = run.cycles;
+        assert!(run.report.cycles <= last, "more pins must not slow down ({pins})");
+        last = run.report.cycles;
     }
 }

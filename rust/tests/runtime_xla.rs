@@ -2,8 +2,11 @@
 //! agree bit-for-bit with the Rust-native datapaths — the glue contract
 //! of the three-layer architecture.
 //!
-//! Requires `make artifacts` (the tests skip with a warning otherwise so
-//! `cargo test` stays green on a fresh checkout).
+//! Gated behind the `pjrt` feature (the runtime module needs the vendored
+//! `xla` crate, see Cargo.toml); additionally requires `make artifacts`
+//! (the tests skip with a warning otherwise so `cargo test` stays green
+//! on a fresh checkout).
+#![cfg(feature = "pjrt")]
 
 use fabricflow::apps::bmvm::dense_power_matvec;
 use fabricflow::apps::ldpc::minsum::{MinsumVariant, ReferenceDecoder};
