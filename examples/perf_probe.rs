@@ -15,7 +15,7 @@ fn main() {
             let d = (s + 1 + rng.index(63)) % 64;
             net.inject(s, Flit::single(s, d, i, i as u64));
         }
-        total_cycles += net.run_until_idle(10_000_000);
+        total_cycles += net.run_until_idle(10_000_000).expect("network stalled");
     }
     let el = t.elapsed();
     println!("run x50 (10k flits each): {:?}, {} cycles total", el, total_cycles);

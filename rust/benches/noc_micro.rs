@@ -20,7 +20,7 @@ fn uniform_drain(topo: &Topology, cfg: NocConfig, flits: u32, seed: u64) -> (u64
         let d = (s + 1 + rng.index(n - 1)) % n;
         net.inject(s, Flit::single(s, d, i, i as u64));
     }
-    let cycles = net.run_until_idle(100_000_000);
+    let cycles = net.run_until_idle(100_000_000).expect("network stalled");
     (cycles, net.stats().delivered)
 }
 
@@ -86,7 +86,7 @@ fn main() {
             let d = (s + 1 + rng.index(15)) % 16;
             net.inject(s, Flit::single(s, d, i, i as u64));
         }
-        let cycles = net.run_until_idle(100_000_000);
+        let cycles = net.run_until_idle(100_000_000).expect("network stalled");
         let marker = if pins == 8 { "  <- paper" } else { "" };
         println!("  {pins:2} pins: {cycles} cycles{marker}");
     }

@@ -20,19 +20,9 @@ use super::video::Frame;
 /// Histogram bins (8-bit pixels, 16 levels).
 pub const BINS: usize = 16;
 
-/// Integer square root (floor), Newton's method on u64.
-pub fn isqrt(v: u64) -> u64 {
-    if v < 2 {
-        return v;
-    }
-    let mut x = v;
-    let mut y = (x + 1) / 2;
-    while y < x {
-        x = y;
-        y = (x + v / x) / 2;
-    }
-    x
-}
+/// Integer square root (floor) — the iterative datapath block; shared
+/// implementation in [`crate::util`].
+pub use crate::util::isqrt;
 
 /// Distance-weighted histogram of the square ROI of half-size `r` around
 /// `(cx, cy)` (out-of-frame pixels read as 0, like the FPGA line buffer).

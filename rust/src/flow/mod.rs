@@ -43,7 +43,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::noc::flit::{depacketize, Flit, NodeId};
-use crate::noc::{NetStats, Network, NocConfig, Topology};
+use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
 use crate::partition::Partition;
 use crate::pe::collector::split_tag;
 use crate::pe::{PeSystem, Processor};
@@ -120,6 +120,28 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// Report for a bare-network run (no PEs attached) — the reporting
+    /// path of the scenario matrix ([`crate::noc::scenario`]), so
+    /// network-only experiments speak the same result vocabulary as full
+    /// flows.
+    pub fn from_network(name: &str, cycles: u64, net: &Network) -> RunReport {
+        let serdes_flits = net.serdes_channels().map(|(_, c)| c.carried).sum();
+        let serdes_cycles_per_flit =
+            net.serdes_channels().next().map_or(0, |(_, c)| c.ser_cycles);
+        RunReport {
+            flow: name.to_string(),
+            cycles,
+            net: net.stats().clone(),
+            pes: Vec::new(),
+            n_fpgas: 1,
+            cut_links: net.serdes_channels().count(),
+            serdes_cycles_per_flit,
+            serdes_flits,
+            pins_per_fpga: vec![0],
+            resources_per_fpga: vec![net.topo().router_resources(net.cfg())],
+        }
+    }
+
     /// Total PE invocations.
     pub fn total_invocations(&self) -> u64 {
         self.pes.iter().map(|p| p.invocations).sum()
@@ -228,6 +250,46 @@ impl FlowBuilder {
     /// Override the NoC configuration (validated at [`FlowBuilder::build`]).
     pub fn noc(&mut self, cfg: NocConfig) -> &mut Self {
         self.cfg = cfg;
+        self
+    }
+
+    /// Select the simulation engine: the cycle-stepped
+    /// [`SimEngine::Reference`] or the event-driven
+    /// [`SimEngine::EventDriven`] fast path, which skips idle routers and
+    /// produces bit-identical results (cycles, stats, eject order):
+    ///
+    /// ```
+    /// use fabricflow::flow::FlowBuilder;
+    /// use fabricflow::noc::{SimEngine, Topology};
+    /// use fabricflow::pe::collector::ArgMessage;
+    /// use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
+    ///
+    /// /// Boot-time source: one 16-bit message to the tap at endpoint 1.
+    /// struct Ping;
+    /// impl Processor for Ping {
+    ///     fn spec(&self) -> WrapperSpec { WrapperSpec::new(vec![16], vec![16]) }
+    ///     fn boot(&mut self) -> Vec<OutMessage> {
+    ///         vec![OutMessage::word(1, 0, 0, 99, 16)]
+    ///     }
+    ///     fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
+    ///         Vec::new()
+    ///     }
+    /// }
+    ///
+    /// let run = |engine: SimEngine| {
+    ///     let mut fb = FlowBuilder::new("engine-demo");
+    ///     fb.topology(Topology::Mesh { w: 2, h: 2 })
+    ///         .engine(engine)
+    ///         .pe_at("src", 0, Box::new(Ping))
+    ///         .tap_at("sink", 1);
+    ///     let mut flow = fb.build().unwrap();
+    ///     let report = flow.run().unwrap();
+    ///     (report.cycles, flow.drain("sink").len())
+    /// };
+    /// assert_eq!(run(SimEngine::Reference), run(SimEngine::EventDriven));
+    /// ```
+    pub fn engine(&mut self, engine: SimEngine) -> &mut Self {
+        self.cfg.engine = engine;
         self
     }
 
@@ -756,6 +818,31 @@ mod tests {
         assert_eq!(got, legacy, "flow must not change delivery");
         assert_eq!(report.cycles, legacy_cycles, "flow must not change timing");
         assert_eq!(report.total_invocations(), 10);
+    }
+
+    #[test]
+    fn event_engine_flow_is_bit_identical_to_reference() {
+        // Whole-flow conformance: wrapped PEs + partition + serdes on
+        // both engines must agree on results AND timing.
+        let run = |engine: SimEngine, partitioned: bool| {
+            let mut fb = FlowBuilder::new("engines");
+            fb.topology(Topology::Mesh { w: 2, h: 2 })
+                .engine(engine)
+                .pe_at("src", 0, Box::new(Source { msgs: source_msgs(12, 3) }))
+                .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 2 }))
+                .tap_at("out", 2);
+            if partitioned {
+                fb.partition(Partition::new(2, vec![0, 0, 1, 1]));
+            }
+            let mut flow = fb.build().unwrap();
+            let report = flow.run().unwrap();
+            (report.cycles, report.net.clone(), flow.drain_messages("out", 16))
+        };
+        for partitioned in [false, true] {
+            let reference = run(SimEngine::Reference, partitioned);
+            let event = run(SimEngine::EventDriven, partitioned);
+            assert_eq!(reference, event, "partitioned={partitioned}");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! fabricflow bmvm --topo torus --r 100  # §VI BMVM on a topology
 //! fabricflow dfg --cores 4              # Fig 2 DFG→MIPS flow
 //! fabricflow noc --topo mesh8x8         # raw NoC traffic experiment
+//! fabricflow scenarios --topo mesh8x8   # scenario matrix (engine-selectable)
 //! fabricflow partition                  # Fig 5 quasi-SERDES demo
 //! fabricflow resources                  # device + component inventory
 //! ```
@@ -21,7 +22,7 @@ use fabricflow::apps::ldpc::mapper::LdpcNocDecoder;
 use fabricflow::apps::ldpc::minsum::{codeword_llrs, MinsumVariant};
 use fabricflow::apps::pfilter::{synthetic_video, PfilterNocTracker, TrackerParams};
 use fabricflow::gf2::Gf2Matrix;
-use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::noc::{scenario, Flit, Network, NocConfig, SimEngine, Topology};
 use fabricflow::resources::Device;
 use fabricflow::serdes::SerdesConfig;
 use fabricflow::tables::{self, TableOpts};
@@ -234,11 +235,51 @@ fn cmd_noc(args: &Args) {
         let d = (s + 1 + rng.index(n - 1)) % n;
         net.inject(s, Flit::single(s, d, i, i as u64));
     }
-    let cycles = net.run_until_idle(100_000_000);
+    let cycles = net.run_until_idle(100_000_000).expect("network stalled");
     println!("{topo:?}: {} endpoints, {flits} flits uniform-random", n);
     println!("  drained in {cycles} cycles — {}", net.stats());
     let g = net.topo();
     println!("  avg hops {:.2}, diameter {}", g.avg_hops(), g.diameter());
+}
+
+fn cmd_scenarios(args: &Args) {
+    let eps = args.get("endpoints", 64usize);
+    let topo = topo_from_name(&args.str("topo", "mesh8x8"), eps);
+    let engine = match args.str("engine", "event").as_str() {
+        "ref" | "reference" => SimEngine::Reference,
+        "event" | "event-driven" => SimEngine::EventDriven,
+        other => panic!("unknown engine '{other}' (reference, event)"),
+    };
+    let load = args.get("load", 0.05f64);
+    let cycles = args.get("cycles", 2_000u64);
+    let seed = args.get("seed", 1u64);
+    let which = args.str("scenario", "all");
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    println!(
+        "scenario matrix on {topo:?} — {} engine, load {load}, {cycles}-cycle window, seed {seed}"
+    );
+    let mut matched = false;
+    for scn in scenario::registry() {
+        if which != "all" && scn.name != which {
+            continue;
+        }
+        matched = true;
+        match scenario::run_scenario(&scn, &topo, cfg, load, cycles, seed) {
+            Ok(out) => println!("  {:14} {}", scn.name, out.report),
+            Err(stall) => println!("  {:14} STALLED: {stall}", scn.name),
+        }
+    }
+    if !matched {
+        eprintln!(
+            "unknown scenario '{which}' (one of: {}, all)",
+            scenario::registry()
+                .iter()
+                .map(|s| s.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        std::process::exit(2);
+    }
 }
 
 fn cmd_resources() {
@@ -281,7 +322,7 @@ fn cmd_partition_demo(args: &Args) {
         let d = (s + 1 + rng.index(3)) % 4;
         net.inject(s, Flit::single(s, d, i, i as u64));
     }
-    let cycles = net.run_until_idle(10_000_000);
+    let cycles = net.run_until_idle(10_000_000).expect("network stalled");
     println!("  2000 flits drained in {cycles} cycles — {}", net.stats());
     for ((r, port), ch) in net.serdes_channels() {
         println!(
@@ -295,7 +336,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!(
-            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|partition|resources> [flags]"
+            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|scenarios|partition|resources> [flags]"
         );
         std::process::exit(2);
     };
@@ -307,6 +348,7 @@ fn main() {
         "bmvm" => cmd_bmvm(&args),
         "dfg" => cmd_dfg(&args),
         "noc" => cmd_noc(&args),
+        "scenarios" => cmd_scenarios(&args),
         "partition" => cmd_partition_demo(&args),
         "resources" => cmd_resources(),
         other => {

@@ -1,0 +1,269 @@
+//! Event-driven fast-path simulation engine.
+//!
+//! [`super::Network`] has two interchangeable steppers behind
+//! [`super::SimEngine`]:
+//!
+//! * **[`super::SimEngine::Reference`]** — the original cycle stepper: every
+//!   cycle visits every router for link delivery, every endpoint NI for
+//!   injection, and every router again for allocation. Simple, and the
+//!   semantic ground truth.
+//! * **[`super::SimEngine::EventDriven`]** — this module: each phase sweeps only
+//!   the routers/endpoints that can possibly do work, tracked in
+//!   [`ActiveSet`] worklists, and `run_until_idle` advances time in jumps
+//!   when the only future events are quasi-SERDES completions. On a
+//!   large or lightly loaded fabric most routers are idle most cycles,
+//!   so the sweep is a handful of entries instead of `O(routers)`.
+//!
+//! The fast path is **bit-identical** to the reference: within each phase
+//! the worklist is swept in ascending index order (the reference's
+//! iteration order), membership is exactly the reference's skip
+//! condition, and a skipped entity is one for which the reference loop
+//! body is a provable no-op. `tests/engine_diff.rs` enforces this over
+//! the whole scenario matrix — same `NetStats` (including the per-flit
+//! latency histogram), same eject order, same completion cycle.
+
+use std::fmt;
+
+use super::network::Network;
+
+/// [`Network::run_until_idle`] exhausted its cycle budget (protocol
+/// deadlock, livelock, or simply a budget that was too small): `pending`
+/// flits are still queued or in flight after `cycles` cycles. The
+/// network state is intact — callers may retry with a larger budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stalled {
+    /// Cycles elapsed inside the exhausted `run_until_idle` call.
+    pub cycles: u64,
+    /// Flits still queued at NIs or inside the network.
+    pub pending: usize,
+}
+
+impl fmt::Display for Stalled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "network not idle after {} cycles ({} flits pending)",
+            self.cycles, self.pending
+        )
+    }
+}
+
+impl std::error::Error for Stalled {}
+
+/// A set of small indices with O(1) insert and sorted sweep, used as the
+/// per-phase worklist. Members persist across cycles until a sweep finds
+/// them inactive (lazy deletion: the sweep re-inserts survivors).
+#[derive(Clone, Debug)]
+pub(super) struct ActiveSet {
+    in_set: Vec<bool>,
+    items: Vec<usize>,
+}
+
+impl ActiveSet {
+    pub(super) fn new(n: usize) -> Self {
+        ActiveSet { in_set: vec![false; n], items: Vec::new() }
+    }
+
+    #[inline]
+    pub(super) fn insert(&mut self, i: usize) {
+        if !self.in_set[i] {
+            self.in_set[i] = true;
+            self.items.push(i);
+        }
+    }
+
+    /// Move the members into `out` in ascending order and clear the set.
+    /// The caller re-inserts whatever is still active after its sweep.
+    pub(super) fn begin_sweep(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        out.append(&mut self.items);
+        out.sort_unstable();
+        for &i in out.iter() {
+            self.in_set[i] = false;
+        }
+    }
+}
+
+impl Network {
+    /// One cycle of the event-driven engine. Each phase runs the exact
+    /// reference phase body, but only over worklist members, in the same
+    /// ascending order the reference loops use.
+    pub(super) fn step_event(&mut self) {
+        let mut sweep = std::mem::take(&mut self.sweep);
+
+        // Phase 1 — link delivery: routers holding a latched flit or an
+        // in-flight serdes channel. (The reference additionally visits
+        // every serdes-bearing router to poll `pop_ready`; polling an
+        // empty channel is a no-op, so idle channels can be skipped.)
+        self.deliver_set.begin_sweep(&mut sweep);
+        for &r in &sweep {
+            if self.latched[r] == 0 && !self.serdes_busy(r) {
+                continue;
+            }
+            self.deliver_router(r);
+            if self.latched[r] > 0 || self.serdes_busy(r) {
+                self.deliver_set.insert(r);
+            }
+        }
+
+        // Phase 2 — injection: endpoints with queued source flits (an
+        // endpoint out of NI credits stays in the set and retries).
+        self.ni_set.begin_sweep(&mut sweep);
+        for &e in &sweep {
+            self.inject_ni(e);
+            if !self.src_q[e].is_empty() {
+                self.ni_set.insert(e);
+            }
+        }
+
+        // Phase 3 — allocation: routers with at least one buffered flit.
+        // Sweeping in ascending order preserves the reference's
+        // same-cycle credit-return visibility between routers.
+        self.alloc_set.begin_sweep(&mut sweep);
+        for &r in &sweep {
+            if self.occupancy[r] == 0 {
+                continue;
+            }
+            self.allocate_router(r);
+            if self.occupancy[r] > 0 {
+                self.alloc_set.insert(r);
+            }
+        }
+
+        self.sweep = sweep;
+    }
+
+    /// Does router `r` have a serdes channel with flits in flight?
+    #[inline]
+    pub(super) fn serdes_busy(&self, r: usize) -> bool {
+        self.has_serdes[r]
+            && self.serdes[r].iter().flatten().any(|ch| ch.in_flight() > 0)
+    }
+
+    /// Earliest cycle at which any serdes channel completes a transfer —
+    /// the only kind of future event a frozen network can be waiting on.
+    pub(super) fn next_serdes_ready(&self) -> Option<u64> {
+        self.serdes
+            .iter()
+            .flatten()
+            .flatten()
+            .filter_map(|ch| ch.next_ready())
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::flit::Flit;
+    use super::super::{Network, NocConfig, SimEngine, Topology};
+    use super::*;
+    use crate::util::Rng;
+
+    fn event_cfg() -> NocConfig {
+        NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() }
+    }
+
+    #[test]
+    fn active_set_sweeps_sorted_and_dedups() {
+        let mut s = ActiveSet::new(8);
+        s.insert(5);
+        s.insert(1);
+        s.insert(5);
+        s.insert(3);
+        let mut out = Vec::new();
+        s.begin_sweep(&mut out);
+        assert_eq!(out, vec![1, 3, 5]);
+        // Set is now empty.
+        s.begin_sweep(&mut out);
+        assert!(out.is_empty());
+        // Re-insertion after a sweep works.
+        s.insert(1);
+        s.begin_sweep(&mut out);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn event_engine_matches_reference_on_random_traffic() {
+        for topo in [
+            Topology::Ring(8),
+            Topology::Mesh { w: 4, h: 4 },
+            Topology::Torus { w: 4, h: 4 },
+            Topology::fat_tree(16),
+        ] {
+            let run = |engine: SimEngine| {
+                let cfg = NocConfig { engine, ..NocConfig::paper() };
+                let mut net = Network::new(&topo, cfg);
+                let n = net.n_endpoints();
+                let mut rng = Rng::new(0xD1FF);
+                for k in 0..600u32 {
+                    let s = rng.index(n);
+                    let d = (s + 1 + rng.index(n - 1)) % n;
+                    net.inject(s, Flit::single(s, d, k, k as u64));
+                }
+                let cycles = net.run_until_idle(1_000_000).unwrap();
+                let mut ejects = Vec::new();
+                for e in 0..n {
+                    while let Some(f) = net.eject(e) {
+                        ejects.push((e, f.src, f.tag, f.data));
+                    }
+                }
+                (cycles, net.stats().clone(), ejects)
+            };
+            let reference = run(SimEngine::Reference);
+            let event = run(SimEngine::EventDriven);
+            assert_eq!(reference.0, event.0, "{topo:?} cycle count");
+            assert_eq!(reference.1, event.1, "{topo:?} stats");
+            assert_eq!(reference.2, event.2, "{topo:?} eject order");
+        }
+    }
+
+    #[test]
+    fn event_engine_fast_forwards_over_idle_gaps() {
+        let mut net = Network::new(&Topology::Mesh { w: 4, h: 4 }, event_cfg());
+        net.inject(0, Flit::single(0, 15, 0, 0));
+        net.run_until_idle(1000).unwrap();
+        let drained_at = net.cycle();
+        net.fast_forward_to(drained_at + 10_000);
+        assert_eq!(net.cycle(), drained_at + 10_000);
+        assert_eq!(net.stats().cycles, drained_at + 10_000);
+        // The network still works after the jump.
+        net.inject(3, Flit::single(3, 12, 1, 7));
+        net.run_until_idle(1000).unwrap();
+        assert_eq!(net.stats().delivered, 2);
+        assert_eq!(net.eject(12).unwrap().data, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "fast_forward_to on a non-idle network")]
+    fn fast_forward_requires_idle() {
+        let mut net = Network::new(&Topology::Mesh { w: 2, h: 2 }, event_cfg());
+        net.inject(0, Flit::single(0, 3, 0, 0));
+        net.fast_forward_to(100);
+    }
+
+    #[test]
+    fn event_engine_jumps_serdes_waits_bit_identically() {
+        use crate::partition::Partition;
+        use crate::serdes::SerdesConfig;
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+        // A slow link (clock_div 6) creates long windows where nothing
+        // can move and only the serdes timer advances.
+        let serdes = SerdesConfig { pins: 2, clock_div: 6, tx_buffer: 4 };
+        let run = |engine: SimEngine| {
+            let cfg = NocConfig { engine, ..NocConfig::paper() };
+            let mut net = Network::new(&topo, cfg);
+            part.apply(&mut net, serdes);
+            net.inject(0, Flit::single(0, 15, 9, 0xF00D));
+            net.inject(5, Flit::single(5, 10, 8, 0xCAFE));
+            let cycles = net.run_until_idle(1_000_000).unwrap();
+            (cycles, net.cycle(), net.stats().clone())
+        };
+        let reference = run(SimEngine::Reference);
+        let event = run(SimEngine::EventDriven);
+        assert_eq!(reference, event);
+        // Sanity: serialization really dominated (wire is dozens of
+        // cycles per flit at 2 pins / clock_div 6).
+        assert!(reference.0 > 100, "serdes wait too short: {}", reference.0);
+    }
+}

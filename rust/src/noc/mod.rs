@@ -23,17 +23,49 @@
 //! The simulator is deterministic: same inputs → same cycle counts, so
 //! every experiment in EXPERIMENTS.md is reproducible bit-for-bit.
 
+pub mod engine;
 pub mod flit;
 pub mod topology;
 pub mod router;
 pub mod network;
+pub mod scenario;
 pub mod stats;
 pub mod traffic;
 
+pub use engine::Stalled;
 pub use flit::{Flit, NodeId};
 pub use network::Network;
 pub use stats::NetStats;
 pub use topology::Topology;
+
+/// Which stepper advances the simulation (see [`engine`]).
+///
+/// Both engines produce **bit-identical** results — same [`NetStats`]
+/// (including the latency histogram), same eject order, same completion
+/// cycle — enforced by `tests/engine_diff.rs` over the scenario matrix.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SimEngine {
+    /// The original per-cycle stepper: every router, every endpoint,
+    /// every cycle. Simple; the semantic ground truth.
+    #[default]
+    Reference,
+    /// Event-driven fast path: sweeps only active routers/endpoints via
+    /// worklists and jumps over cycles in which nothing can move.
+    EventDriven,
+}
+
+impl SimEngine {
+    /// Both engines, for matrix-style tests and benches.
+    pub const ALL: [SimEngine; 2] = [SimEngine::Reference, SimEngine::EventDriven];
+
+    /// Short name used in tables and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimEngine::Reference => "reference",
+            SimEngine::EventDriven => "event",
+        }
+    }
+}
 
 /// Output allocation policy (stage 2 of the separable allocator).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +92,11 @@ pub struct NocConfig {
     pub num_vcs: usize,
     /// Allocation policy.
     pub allocator: Allocator,
+    /// Simulation engine stepping this network (not a hardware knob:
+    /// both engines model the identical microarchitecture and produce
+    /// bit-identical results; `EventDriven` is just faster on large or
+    /// lightly loaded fabrics).
+    pub engine: SimEngine,
 }
 
 impl Default for NocConfig {
@@ -69,6 +106,7 @@ impl Default for NocConfig {
             buffer_depth: 8,
             num_vcs: 1,
             allocator: Allocator::SeparableInputFirstRR,
+            engine: SimEngine::Reference,
         }
     }
 }
@@ -144,6 +182,7 @@ mod tests {
             buffer_depth: 1,
             num_vcs: 4,
             allocator: Allocator::FixedPriority,
+            engine: SimEngine::EventDriven,
         };
         assert_eq!(cfg.validate(), Ok(()));
     }

@@ -18,46 +18,63 @@
 //! Everything is deterministic; routers are processed in index order and
 //! ties break round-robin, so a given workload always produces the same
 //! cycle count.
+//!
+//! Two steppers implement the cycle ([`super::SimEngine`]): the reference
+//! loops over every router/endpoint each cycle; the event-driven fast
+//! path in [`super::engine`] sweeps only active ones through the same
+//! per-router phase bodies below, producing bit-identical results.
 
 use std::collections::VecDeque;
 
+use super::engine::{ActiveSet, Stalled};
 use super::flit::{Flit, NodeId};
 use super::router::{InputPort, OutputPort, Router};
 use super::stats::NetStats;
 use super::topology::{PortDest, TopoGraph, Topology};
-use super::{Allocator, NocConfig};
+use super::{Allocator, NocConfig, SimEngine};
 use crate::serdes::{wire_bits, SerdesChannel, SerdesConfig};
 
 /// A built, steppable NoC.
 pub struct Network {
-    cfg: NocConfig,
-    topo: TopoGraph,
-    routers: Vec<Router>,
+    pub(super) cfg: NocConfig,
+    pub(super) topo: TopoGraph,
+    pub(super) routers: Vec<Router>,
     /// Per-endpoint unbounded source queues (the PE distributor pushes
     /// here; the NI drains one flit per cycle).
-    src_q: Vec<VecDeque<Flit>>,
+    pub(super) src_q: Vec<VecDeque<Flit>>,
     /// Per-endpoint eject queues (the PE collector drains these).
-    eject_q: Vec<VecDeque<Flit>>,
+    pub(super) eject_q: Vec<VecDeque<Flit>>,
     /// NI peek credits into the router-local input port, per VC.
-    ni_credits: Vec<Vec<u32>>,
-    cycle: u64,
+    pub(super) ni_credits: Vec<Vec<u32>>,
+    pub(super) cycle: u64,
     /// Flits inside routers/latches (not source or eject queues).
-    in_network: usize,
-    stats: NetStats,
+    pub(super) in_network: usize,
+    pub(super) stats: NetStats,
     /// Scratch: stage-1 requests (input, vc, out_port, out_vc) per router.
-    scratch_req: Vec<(usize, usize, usize, u8)>,
+    pub(super) scratch_req: Vec<(usize, usize, usize, u8)>,
     /// Scratch: stage-2 grants (no per-cycle allocation in the hot loop).
-    scratch_grant: Vec<(usize, usize, usize, u8)>,
+    pub(super) scratch_grant: Vec<(usize, usize, usize, u8)>,
     /// Flits buffered in each router's input VCs (skip idle routers).
-    occupancy: Vec<u32>,
+    pub(super) occupancy: Vec<u32>,
     /// Latched output flits per router (skip idle routers in delivery).
-    latched: Vec<u32>,
+    pub(super) latched: Vec<u32>,
     /// Routers with a serdes channel on some output (their delivery phase
     /// must run even when no latch is set).
-    has_serdes: Vec<bool>,
+    pub(super) has_serdes: Vec<bool>,
     /// Quasi-SERDES channels installed on cut links, keyed (router, port);
     /// `None` = ordinary on-chip link. Installed by the partitioner.
-    serdes: Vec<Vec<Option<SerdesChannel>>>,
+    pub(super) serdes: Vec<Vec<Option<SerdesChannel>>>,
+    /// Event-engine worklist: routers with a latch or busy serdes.
+    pub(super) deliver_set: ActiveSet,
+    /// Event-engine worklist: routers with buffered flits.
+    pub(super) alloc_set: ActiveSet,
+    /// Event-engine worklist: endpoints with queued source flits.
+    pub(super) ni_set: ActiveSet,
+    /// Scratch for the event engine's per-phase sweeps.
+    pub(super) sweep: Vec<usize>,
+    /// Flit movements since construction (delivery, injection, grants,
+    /// serdes transfers) — the event engine's progress detector.
+    pub(super) moves: u64,
 }
 
 impl Network {
@@ -112,6 +129,11 @@ impl Network {
             latched: vec![0; n_routers],
             has_serdes: vec![false; n_routers],
             serdes,
+            deliver_set: ActiveSet::new(n_routers),
+            alloc_set: ActiveSet::new(n_routers),
+            ni_set: ActiveSet::new(n_eps),
+            sweep: Vec::new(),
+            moves: 0,
         }
     }
 
@@ -167,6 +189,7 @@ impl Network {
         flit.src = e;
         self.stats.injected += 1;
         self.src_q[e].push_back(flit);
+        self.ni_set.insert(e);
     }
 
     /// Packetize `payload` (`bits` meaningful bits) into flits and inject.
@@ -204,28 +227,77 @@ impl Network {
         self.pending() == 0
     }
 
-    /// Advance one cycle.
+    /// Advance one cycle with the engine selected in [`NocConfig`].
     pub fn step(&mut self) {
         self.cycle += 1;
         self.stats.cycles = self.cycle;
+        match self.cfg.engine {
+            SimEngine::Reference => self.step_reference(),
+            SimEngine::EventDriven => self.step_event(),
+        }
+    }
+
+    /// The reference stepper: every router/endpoint, every cycle.
+    fn step_reference(&mut self) {
         self.deliver_links();
         self.inject_nis();
         self.allocate_all();
     }
 
-    /// Step until idle; returns cycles elapsed. Panics after `max_cycles`
-    /// (deadlock / livelock guard for tests and benches).
-    pub fn run_until_idle(&mut self, max_cycles: u64) -> u64 {
+    /// Jump the clock forward without stepping. Only valid while the
+    /// network is completely idle: stepping an idle network is a pure
+    /// no-op (no flit anywhere, allocator/RR state untouched on empty
+    /// passes), so the jump is observationally identical to stepping
+    /// cycle-by-cycle — scenario replay uses this to skip injection gaps
+    /// under the event engine.
+    pub fn fast_forward_to(&mut self, cycle: u64) {
+        assert!(self.idle(), "fast_forward_to on a non-idle network");
+        assert!(cycle >= self.cycle, "fast_forward_to goes backwards");
+        self.cycle = cycle;
+        self.stats.cycles = cycle;
+    }
+
+    /// Step until idle; returns cycles elapsed, or [`Stalled`] once
+    /// `max_cycles` cycles pass with flits still pending (deadlock /
+    /// livelock / too-small-budget guard). The network state is left
+    /// intact on error, so a caller may resume with a larger budget.
+    ///
+    /// Under [`SimEngine::EventDriven`] two fast paths apply: cycles in
+    /// which provably nothing can move (the network is only waiting on a
+    /// quasi-SERDES transfer to complete) are skipped in one jump, and a
+    /// frozen network with *no* future serdes event returns [`Stalled`]
+    /// immediately instead of spinning out the budget.
+    pub fn run_until_idle(&mut self, max_cycles: u64) -> Result<u64, Stalled> {
         let start = self.cycle;
         while !self.idle() {
+            if self.cycle - start >= max_cycles {
+                return Err(Stalled {
+                    cycles: self.cycle - start,
+                    pending: self.pending(),
+                });
+            }
+            let before = self.moves;
             self.step();
-            assert!(
-                self.cycle - start <= max_cycles,
-                "network not idle after {max_cycles} cycles ({} pending)",
-                self.pending()
-            );
+            if self.cfg.engine == SimEngine::EventDriven && self.moves == before {
+                // Nothing moved and the state is deterministic, so nothing
+                // will move until the next timed event — a serdes
+                // completion — or ever.
+                match self.next_serdes_ready() {
+                    Some(t) if t > self.cycle => {
+                        let target = (t - 1).min(start + max_cycles);
+                        self.cycle = target;
+                        self.stats.cycles = target;
+                    }
+                    _ => {
+                        return Err(Stalled {
+                            cycles: self.cycle - start,
+                            pending: self.pending(),
+                        });
+                    }
+                }
+            }
         }
-        self.cycle - start
+        Ok(self.cycle - start)
     }
 
     // -- phase 1 ------------------------------------------------------------
@@ -236,77 +308,93 @@ impl Network {
             if self.latched[r] == 0 && !self.has_serdes[r] {
                 continue;
             }
-            for p in 0..self.routers[r].outputs.len() {
-                // Quasi-SERDES link: the channel sits between the latch and
-                // the far-side input buffer. Flits whose serialization
-                // completed land first; then the latch (if any) enters the
-                // channel's TX buffer when there is room — otherwise the
-                // occupied latch back-pressures the allocator exactly like
-                // the paper's "keep it in buffer" protocol.
-                if let Some(ch) = self.serdes[r][p].as_mut() {
-                    if let Some(flit) = ch.pop_ready(self.cycle) {
-                        match self.topo.ports[r][p] {
-                            PortDest::Router { router, port } => {
-                                self.stats.link_hops += 1;
-                                self.occupancy[router] += 1;
-                                self.routers[router].inputs[port].vcs[flit.vc as usize]
-                                    .push_back(flit);
-                            }
-                            PortDest::Endpoint(_) => unreachable!("serdes on endpoint link"),
+            self.deliver_router(r);
+        }
+    }
+
+    /// Deliver router `r`'s latched/serialized flits (one phase-1 body;
+    /// both engines call this).
+    pub(super) fn deliver_router(&mut self, r: usize) {
+        for p in 0..self.routers[r].outputs.len() {
+            // Quasi-SERDES link: the channel sits between the latch and
+            // the far-side input buffer. Flits whose serialization
+            // completed land first; then the latch (if any) enters the
+            // channel's TX buffer when there is room — otherwise the
+            // occupied latch back-pressures the allocator exactly like
+            // the paper's "keep it in buffer" protocol.
+            if self.serdes[r][p].is_some() {
+                let popped = self.serdes[r][p].as_mut().unwrap().pop_ready(self.cycle);
+                if let Some(flit) = popped {
+                    match self.topo.ports[r][p] {
+                        PortDest::Router { router, port } => {
+                            self.stats.link_hops += 1;
+                            self.moves += 1;
+                            self.buffer_flit(router, port, flit);
                         }
+                        PortDest::Endpoint(_) => unreachable!("serdes on endpoint link"),
                     }
-                    let ch = self.serdes[r][p].as_mut().unwrap();
-                    if ch.can_accept() {
-                        if let Some(flit) = self.routers[r].outputs[p].latch.take() {
-                            self.latched[r] -= 1;
-                            ch.push(flit, self.cycle);
-                        }
-                    }
-                    continue;
                 }
-                let Some(flit) = self.routers[r].outputs[p].latch.take() else {
-                    continue;
-                };
-                self.latched[r] -= 1;
-                match self.topo.ports[r][p] {
-                    PortDest::Endpoint(e) => {
-                        self.stats.delivered += 1;
-                        let lat = self.cycle - flit.injected_at;
-                        self.stats.total_latency += lat;
-                        self.stats.max_latency = self.stats.max_latency.max(lat);
-                        self.in_network -= 1;
-                        self.eject_q[e].push_back(flit);
+                if self.serdes[r][p].as_ref().unwrap().can_accept() {
+                    if let Some(flit) = self.routers[r].outputs[p].latch.take() {
+                        self.latched[r] -= 1;
+                        self.moves += 1;
+                        self.serdes[r][p].as_mut().unwrap().push(flit, self.cycle);
                     }
-                    PortDest::Router { router, port } => {
-                        self.stats.link_hops += 1;
-                        self.occupancy[router] += 1;
-                        self.routers[router].inputs[port].vcs[flit.vc as usize]
-                            .push_back(flit);
-                    }
+                }
+                continue;
+            }
+            let Some(flit) = self.routers[r].outputs[p].latch.take() else {
+                continue;
+            };
+            self.latched[r] -= 1;
+            self.moves += 1;
+            match self.topo.ports[r][p] {
+                PortDest::Endpoint(e) => {
+                    self.stats.record_delivery(self.cycle - flit.injected_at);
+                    self.in_network -= 1;
+                    self.eject_q[e].push_back(flit);
+                }
+                PortDest::Router { router, port } => {
+                    self.stats.link_hops += 1;
+                    self.buffer_flit(router, port, flit);
                 }
             }
         }
+    }
+
+    /// Land `flit` in the downstream input buffer, keeping the occupancy
+    /// counter and the allocation worklist in sync.
+    fn buffer_flit(&mut self, router: usize, port: usize, flit: Flit) {
+        self.occupancy[router] += 1;
+        self.alloc_set.insert(router);
+        self.routers[router].inputs[port].vcs[flit.vc as usize].push_back(flit);
     }
 
     // -- phase 2 ------------------------------------------------------------
 
     fn inject_nis(&mut self) {
         for e in 0..self.src_q.len() {
-            if self.src_q[e].is_empty() {
-                continue;
-            }
-            let vc = self.topo.initial_vc() as usize;
-            if self.ni_credits[e][vc] == 0 {
-                continue;
-            }
-            let mut flit = self.src_q[e].pop_front().unwrap();
-            flit.vc = vc as u8;
-            let (r, p) = self.topo.endpoint_attach[e];
-            self.ni_credits[e][vc] -= 1;
-            self.in_network += 1;
-            self.occupancy[r] += 1;
-            self.routers[r].inputs[p].vcs[vc].push_back(flit);
+            self.inject_ni(e);
         }
+    }
+
+    /// Inject at most one flit from endpoint `e`'s source queue (one
+    /// phase-2 body; both engines call this).
+    pub(super) fn inject_ni(&mut self, e: usize) {
+        if self.src_q[e].is_empty() {
+            return;
+        }
+        let vc = self.topo.initial_vc() as usize;
+        if self.ni_credits[e][vc] == 0 {
+            return;
+        }
+        let mut flit = self.src_q[e].pop_front().unwrap();
+        flit.vc = vc as u8;
+        let (r, p) = self.topo.endpoint_attach[e];
+        self.ni_credits[e][vc] -= 1;
+        self.in_network += 1;
+        self.moves += 1;
+        self.buffer_flit(r, p, flit);
     }
 
     // -- phase 3 ------------------------------------------------------------
@@ -317,11 +405,17 @@ impl Network {
             if self.occupancy[r] == 0 {
                 continue;
             }
-            match self.cfg.allocator {
-                Allocator::SeparableInputFirstRR => self.allocate_input_first(r, true),
-                Allocator::FixedPriority => self.allocate_input_first(r, false),
-                Allocator::SeparableOutputFirstRR => self.allocate_output_first(r),
-            }
+            self.allocate_router(r);
+        }
+    }
+
+    /// Run the configured allocator on router `r` (one phase-3 body; both
+    /// engines call this).
+    pub(super) fn allocate_router(&mut self, r: usize) {
+        match self.cfg.allocator {
+            Allocator::SeparableInputFirstRR => self.allocate_input_first(r, true),
+            Allocator::FixedPriority => self.allocate_input_first(r, false),
+            Allocator::SeparableOutputFirstRR => self.allocate_output_first(r),
         }
     }
 
@@ -451,6 +545,8 @@ impl Network {
         self.routers[r].inputs[i].head_hop[v] = None; // next head re-routes
         self.occupancy[r] -= 1;
         self.latched[r] += 1;
+        self.deliver_set.insert(r);
+        self.moves += 1;
         // Peek/credit return to whoever feeds input port i.
         match self.topo.ports[r][i] {
             PortDest::Endpoint(e) => self.ni_credits[e][v] += 1,
@@ -480,7 +576,7 @@ mod tests {
     fn single_flit_crosses_mesh() {
         let mut n = net(Topology::Mesh { w: 4, h: 4 });
         n.inject(0, Flit::single(0, 15, 7, 0xABCD));
-        let cycles = n.run_until_idle(1000);
+        let cycles = n.run_until_idle(1000).unwrap();
         // 6 router hops (XY: 3 east + 3 south) + inject + eject overhead.
         assert!(cycles >= 6, "too fast: {cycles}");
         assert!(cycles <= 12, "too slow: {cycles}");
@@ -506,7 +602,7 @@ mod tests {
                     }
                 }
             }
-            n.run_until_idle(100_000);
+            n.run_until_idle(100_000).unwrap();
             assert_eq!(
                 n.stats().delivered,
                 (eps * (eps - 1)) as u64,
@@ -529,7 +625,7 @@ mod tests {
         let mut n = net(Topology::Mesh { w: 2, h: 2 });
         let payload = [0xDEAD_BEEF_CAFE_F00Du64, 0x1234];
         n.send_message(1, 2, 9, &payload, 80);
-        n.run_until_idle(1000);
+        n.run_until_idle(1000).unwrap();
         let mut flits = Vec::new();
         while let Some(f) = n.eject(2) {
             flits.push(f);
@@ -548,7 +644,7 @@ mod tests {
         for i in 0..32 {
             n.inject(0, Flit::single(0, 1, i, i as u64));
         }
-        let cycles = n.run_until_idle(10_000);
+        let cycles = n.run_until_idle(10_000).unwrap();
         // 32 flits over one link: at least 32 cycles (1 eject/cycle).
         assert!(cycles >= 32, "eject rate exceeded 1/cycle: {cycles}");
         assert_eq!(n.stats().delivered, 32);
@@ -574,7 +670,7 @@ mod tests {
                 }
                 n.inject(s, Flit::single(s, d, k, k as u64));
             }
-            n.run_until_idle(200_000);
+            n.run_until_idle(200_000).unwrap();
             assert_eq!(n.stats().delivered, 2000, "{t:?}");
         }
     }
@@ -583,12 +679,14 @@ mod tests {
     fn latency_accounting_sane() {
         let mut n = net(Topology::Mesh { w: 4, h: 4 });
         n.inject(0, Flit::single(0, 15, 0, 0));
-        n.run_until_idle(100);
+        n.run_until_idle(100).unwrap();
         let s = n.stats();
         assert_eq!(s.delivered, 1);
         assert!(s.avg_latency() >= 6.0);
         assert_eq!(s.max_latency as f64, s.avg_latency());
         assert_eq!(s.avg_hops(), 6.0); // XY distance 0 -> 15 on 4x4
+        // The one delivery landed in exactly one histogram bucket.
+        assert_eq!(s.latency_hist.iter().sum::<u64>(), 1);
     }
 
     #[test]
@@ -603,7 +701,7 @@ mod tests {
                 }
             }
         }
-        n.run_until_idle(50_000);
+        n.run_until_idle(50_000).unwrap();
         assert_eq!(n.stats().delivered, 72);
     }
 
@@ -619,7 +717,7 @@ mod tests {
                 }
             }
         }
-        n.run_until_idle(50_000);
+        n.run_until_idle(50_000).unwrap();
         assert_eq!(n.stats().delivered, 72);
     }
 
@@ -637,7 +735,7 @@ mod tests {
                 }
             }
         }
-        n.run_until_idle(100_000);
+        n.run_until_idle(100_000).unwrap();
         assert_eq!(n.stats().delivered, 15 * 8);
     }
 
@@ -651,8 +749,39 @@ mod tests {
                 let d = (s + 1 + rng.index(15)) % 16;
                 n.inject(s, Flit::single(s, d, k, k as u64));
             }
-            n.run_until_idle(100_000)
+            n.run_until_idle(100_000).unwrap()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn run_until_idle_reports_exhaustion_instead_of_panicking() {
+        // Tiny buffers + a hotspot: 120 flits cannot possibly drain in 20
+        // cycles (ejection is 1 flit/cycle), so the budget is exhausted
+        // with flits in flight — previously a silent footgun (an assert
+        // in release-ish harnesses), now a typed error.
+        for engine in [SimEngine::Reference, SimEngine::EventDriven] {
+            let cfg = NocConfig { buffer_depth: 1, engine, ..NocConfig::paper() };
+            let mut n = Network::new(&Topology::Mesh { w: 4, h: 4 }, cfg);
+            for s in 0..16usize {
+                for k in 0..8 {
+                    if s != 5 {
+                        n.inject(s, Flit::single(s, 5, k, 0));
+                    }
+                }
+            }
+            let stalled = n.run_until_idle(20).expect_err("cannot drain in 20 cycles");
+            assert_eq!(stalled.cycles, 20, "{engine:?}");
+            assert!(stalled.pending > 0, "{engine:?}");
+            assert_eq!(
+                stalled.pending as u64 + n.stats().delivered,
+                15 * 8,
+                "{engine:?}: exhaustion must not lose flits"
+            );
+            // The error is resumable: a real budget finishes the drain.
+            let resumed = n.run_until_idle(100_000).unwrap();
+            assert!(resumed > 0);
+            assert_eq!(n.stats().delivered, 15 * 8, "{engine:?}");
+        }
     }
 }

@@ -1,0 +1,466 @@
+//! Scenario matrix: named traffic workloads × topologies × load points.
+//!
+//! A **scenario** is a named, seeded recipe for an injection schedule.
+//! Materializing it yields a [`Trace`] — a concrete, sorted list of
+//! `(cycle, src, dst)` injections — and both simulation engines
+//! ([`super::SimEngine`]) replay the *same* trace, which is what makes
+//! differential engine testing exact and golden-trace regression files
+//! meaningful.
+//!
+//! The registry crosses the classic synthetic patterns
+//! ([`Pattern`](super::traffic::Pattern)) with bursty on/off traffic and
+//! communication skeletons derived from the paper's three case studies:
+//!
+//! * `ldpc-trace` — the Fig 9 decoder's bit↔check message exchange, one
+//!   bipartite round trip per decoding iteration.
+//! * `pfilter-trace` — the Fig 10 tracker's master→worker particle
+//!   scatter and worker→master histogram gather, once per frame.
+//! * `bmvm-trace` — the §VI engine's ring rotation of partial products
+//!   with a periodic gather to the host-facing node.
+//!
+//! Run the whole matrix from the CLI (`fabricflow scenarios`), assert
+//! engine conformance over it (`tests/engine_diff.rs`), or pin one load
+//! point per case study as a golden file (`tests/golden_traces.rs`).
+//! See EXPERIMENTS.md §Scenario matrix.
+
+use super::engine::Stalled;
+use super::flit::Flit;
+use super::traffic::Pattern;
+use super::{Network, NocConfig, SimEngine, Topology};
+use crate::flow::RunReport;
+use crate::util::Rng;
+
+/// One scheduled injection of a [`Trace`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Cycle (relative to replay start) at which the flit is handed to
+    /// the source NI.
+    pub cycle: u64,
+    pub src: usize,
+    pub dst: usize,
+    pub tag: u32,
+    pub data: u64,
+}
+
+/// A fully materialized injection schedule, sorted by cycle (ties in
+/// generation order, which is endpoint order).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Last scheduled injection cycle (0 for an empty trace).
+    pub fn horizon(&self) -> u64 {
+        self.events.last().map_or(0, |e| e.cycle)
+    }
+}
+
+/// Workload family of a [`Scenario`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// Bernoulli(load) injection per endpoint per cycle; destinations by
+    /// the classic `Pattern`.
+    Synthetic(Pattern),
+    /// On/off bursts: `on` cycles of Bernoulli(min(4×load, 1)) uniform
+    /// traffic, then `off` silent cycles — the workload that exercises
+    /// the event engine's idle-gap fast-forward.
+    Bursty { on: u64, off: u64 },
+    /// LDPC decode skeleton (bit↔check exchange per iteration).
+    Ldpc,
+    /// Particle-filter skeleton (scatter/gather per frame).
+    Pfilter,
+    /// BMVM skeleton (ring rotation + periodic gather).
+    Bmvm,
+}
+
+/// A named workload in the registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub workload: Workload,
+}
+
+/// Every named scenario. Adding an entry here automatically enrolls it
+/// in the differential engine matrix and the CLI.
+pub fn registry() -> Vec<Scenario> {
+    vec![
+        Scenario { name: "uniform", workload: Workload::Synthetic(Pattern::Uniform) },
+        Scenario { name: "hotspot", workload: Workload::Synthetic(Pattern::Hotspot) },
+        Scenario { name: "tornado", workload: Workload::Synthetic(Pattern::Tornado) },
+        Scenario { name: "transpose", workload: Workload::Synthetic(Pattern::Transpose) },
+        Scenario {
+            name: "bit-reverse",
+            workload: Workload::Synthetic(Pattern::BitReverse),
+        },
+        Scenario { name: "bursty", workload: Workload::Bursty { on: 32, off: 96 } },
+        Scenario { name: "ldpc-trace", workload: Workload::Ldpc },
+        Scenario { name: "pfilter-trace", workload: Workload::Pfilter },
+        Scenario { name: "bmvm-trace", workload: Workload::Bmvm },
+    ]
+}
+
+/// Look up a scenario by name.
+pub fn find(name: &str) -> Option<Scenario> {
+    registry().into_iter().find(|s| s.name == name)
+}
+
+impl Scenario {
+    /// Materialize the injection schedule for `n` endpoints over a
+    /// `cycles`-long injection window at offered `load` (flits per
+    /// endpoint per cycle for the stochastic workloads; an intensity
+    /// knob scaling the app skeletons' period). Deterministic in `seed`.
+    pub fn trace(&self, n: usize, load: f64, cycles: u64, seed: u64) -> Trace {
+        assert!(n >= 2, "scenarios need at least 2 endpoints");
+        let mut rng = Rng::new(seed ^ fnv1a(self.name));
+        let mut events = Vec::new();
+        match self.workload {
+            Workload::Synthetic(pattern) => {
+                for c in 0..cycles {
+                    for s in 0..n {
+                        if rng.chance(load) {
+                            let dst = pattern.dst(s, n, &mut rng);
+                            push(&mut events, c, s, dst, &mut rng);
+                        }
+                    }
+                }
+            }
+            Workload::Bursty { on, off } => {
+                let period = on + off;
+                let burst_load = (4.0 * load).min(1.0);
+                for c in 0..cycles {
+                    if c % period >= on {
+                        continue;
+                    }
+                    for s in 0..n {
+                        if rng.chance(burst_load) {
+                            let dst = Pattern::Uniform.dst(s, n, &mut rng);
+                            push(&mut events, c, s, dst, &mut rng);
+                        }
+                    }
+                }
+            }
+            Workload::Ldpc => {
+                // Bipartite graph: bit nodes [0, n_bits) each attached to
+                // three check nodes [n_bits, n). One iteration = bits →
+                // checks at the period start, checks → bits half a period
+                // later (the min-sum half-iterations of Fig 9).
+                let n_bits = (2 * n).div_ceil(3).min(n - 1);
+                let n_checks = n - n_bits;
+                let period = period_for(load, 32);
+                let iters = cycles / period;
+                for it in 0..iters {
+                    let at = it * period;
+                    for b in 0..n_bits {
+                        for k in 0..3usize {
+                            let c = n_bits + (b + k * (1 + n_checks / 3)) % n_checks;
+                            push(&mut events, at, b, c, &mut rng);
+                        }
+                    }
+                    let back = at + period / 2;
+                    for chk in 0..n_checks {
+                        for k in 0..3usize {
+                            let b = (chk + k * (1 + n_bits / 3)) % n_bits;
+                            push(&mut events, back, n_bits + chk, b, &mut rng);
+                        }
+                    }
+                }
+            }
+            Workload::Pfilter => {
+                // Master at endpoint 0; workers 1..n. Per frame: scatter
+                // one particle-batch message to each worker, then each
+                // worker returns a 4-flit histogram (Fig 10's ROI stats).
+                let period = period_for(load, 64);
+                let frames = cycles / period;
+                for f in 0..frames {
+                    let at = f * period;
+                    for w in 1..n {
+                        push(&mut events, at, 0, w, &mut rng);
+                    }
+                    let back = at + period / 3;
+                    for w in 1..n {
+                        for _ in 0..4 {
+                            push(&mut events, back, w, 0, &mut rng);
+                        }
+                    }
+                }
+            }
+            Workload::Bmvm => {
+                // Ring rotation of partial products (each PE feeds its
+                // successor every round); every fourth round all PEs also
+                // report to the host-facing node 0.
+                let period = period_for(load, 16);
+                let rounds = cycles / period;
+                for r in 0..rounds {
+                    let at = r * period;
+                    for s in 0..n {
+                        push(&mut events, at, s, (s + 1) % n, &mut rng);
+                    }
+                    if r % 4 == 3 {
+                        for s in 1..n {
+                            push(&mut events, at + period / 2, s, 0, &mut rng);
+                        }
+                    }
+                }
+            }
+        }
+        Trace { events }
+    }
+}
+
+/// App-skeleton period in cycles: `base / (10 × load)`, clamped to
+/// something steppable — so the default load 0.1 yields exactly `base`,
+/// and raising the load shrinks the period (more iterations per window).
+fn period_for(load: f64, base: u64) -> u64 {
+    let load = load.clamp(0.001, 1.0);
+    ((base as f64 / (load * 10.0)).round() as u64).clamp(4, 65_536)
+}
+
+fn push(events: &mut Vec<TraceEvent>, cycle: u64, src: usize, dst: usize, rng: &mut Rng) {
+    let tag = events.len() as u32;
+    events.push(TraceEvent { cycle, src, dst, tag, data: rng.next_u64() & 0xFFFF });
+}
+
+#[inline]
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Replay `trace` into `net`: inject each event at its scheduled cycle,
+/// stepping in between (the event engine fast-forwards over fully idle
+/// gaps — a pure no-op skip, see [`Network::fast_forward_to`]), then run
+/// to idle under `drain_budget`. Returns total cycles elapsed.
+pub fn replay(net: &mut Network, trace: &Trace, drain_budget: u64) -> Result<u64, Stalled> {
+    let start = net.cycle();
+    let jump = net.cfg().engine == SimEngine::EventDriven;
+    let mut i = 0;
+    while i < trace.events.len() {
+        let at = start + trace.events[i].cycle;
+        while net.cycle() < at {
+            if jump && net.idle() {
+                net.fast_forward_to(at);
+                break;
+            }
+            net.step();
+        }
+        while i < trace.events.len() && start + trace.events[i].cycle == at {
+            let e = trace.events[i];
+            net.inject(e.src, Flit::single(e.src, e.dst, e.tag, e.data));
+            i += 1;
+        }
+    }
+    net.run_until_idle(drain_budget)?;
+    Ok(net.cycle() - start)
+}
+
+/// One ejected flit, in eject order — the unit of golden-trace and
+/// engine-conformance comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EjectRecord {
+    /// Endpoint the flit was ejected at.
+    pub endpoint: usize,
+    pub src: usize,
+    pub tag: u32,
+    pub data: u64,
+    /// Cycle the flit was handed to its source NI.
+    pub injected_at: u64,
+}
+
+/// Drain every eject queue (in endpoint order, preserving per-endpoint
+/// eject order).
+pub fn drain_all(net: &mut Network) -> Vec<EjectRecord> {
+    let mut out = Vec::new();
+    for e in 0..net.n_endpoints() {
+        while let Some(f) = net.eject(e) {
+            out.push(EjectRecord {
+                endpoint: e,
+                src: f.src,
+                tag: f.tag,
+                data: f.data,
+                injected_at: f.injected_at,
+            });
+        }
+    }
+    out
+}
+
+/// Result of one scenario run: the unified flow-level report plus the
+/// exact eject sequence.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub report: RunReport,
+    pub ejects: Vec<EjectRecord>,
+}
+
+/// Build a network, materialize the scenario trace, replay it, and wrap
+/// the outcome in a [`RunReport`] (flow-level reporting for bare-network
+/// experiments).
+pub fn run_scenario(
+    scn: &Scenario,
+    topo: &Topology,
+    cfg: NocConfig,
+    load: f64,
+    cycles: u64,
+    seed: u64,
+) -> Result<ScenarioOutcome, Stalled> {
+    let mut net = Network::new(topo, cfg);
+    let trace = scn.trace(net.n_endpoints(), load, cycles, seed);
+    let budget = cycles.saturating_mul(50) + 100_000;
+    let elapsed = replay(&mut net, &trace, budget)?;
+    let ejects = drain_all(&mut net);
+    let name = format!("scenario/{}@{}", scn.name, topo.name());
+    let report = RunReport::from_network(&name, elapsed, &net);
+    Ok(ScenarioOutcome { report, ejects })
+}
+
+/// One cell of the differential matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixPoint {
+    pub scenario: Scenario,
+    pub topo: Topology,
+    pub load: f64,
+    pub cycles: u64,
+    pub seed: u64,
+}
+
+/// The small default matrix: every scenario on four topology families at
+/// one load point — fast enough for the default (debug) test job.
+pub fn default_matrix() -> Vec<MatrixPoint> {
+    let topos = [
+        Topology::Ring(8),
+        Topology::Mesh { w: 4, h: 4 },
+        Topology::Torus { w: 4, h: 4 },
+        Topology::fat_tree(16),
+    ];
+    let mut pts = Vec::new();
+    for topo in topos {
+        for scenario in registry() {
+            pts.push(MatrixPoint {
+                scenario,
+                topo: topo.clone(),
+                load: 0.1,
+                cycles: 400,
+                seed: 1,
+            });
+        }
+    }
+    pts
+}
+
+/// The full conformance matrix (× loads × seeds, plus an 8×8 mesh) —
+/// run under `--release` in the CI conformance job.
+pub fn full_matrix() -> Vec<MatrixPoint> {
+    let topos = [
+        Topology::Ring(8),
+        Topology::Mesh { w: 4, h: 4 },
+        Topology::Mesh { w: 8, h: 8 },
+        Topology::Torus { w: 4, h: 4 },
+        Topology::fat_tree(16),
+    ];
+    let mut pts = Vec::new();
+    for topo in topos {
+        for scenario in registry() {
+            for load in [0.02, 0.1, 0.35] {
+                for seed in [1u64, 7] {
+                    pts.push(MatrixPoint {
+                        scenario,
+                        topo: topo.clone(),
+                        load,
+                        cycles: 800,
+                        seed,
+                    });
+                }
+            }
+        }
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_findable() {
+        let reg = registry();
+        for (i, a) in reg.iter().enumerate() {
+            for b in &reg[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+            assert_eq!(find(a.name), Some(*a));
+        }
+        assert_eq!(find("no-such-scenario"), None);
+    }
+
+    #[test]
+    fn traces_are_sorted_deterministic_and_in_range() {
+        for scn in registry() {
+            let t1 = scn.trace(16, 0.1, 300, 42);
+            let t2 = scn.trace(16, 0.1, 300, 42);
+            assert_eq!(t1, t2, "{} not deterministic", scn.name);
+            assert!(!t1.is_empty(), "{} generated no traffic", scn.name);
+            assert!(t1.horizon() < 300, "{} injects past the window", scn.name);
+            let mut last = 0;
+            for e in &t1.events {
+                assert!(e.cycle >= last, "{} trace unsorted", scn.name);
+                last = e.cycle;
+                assert!(e.src < 16 && e.dst < 16 && e.src != e.dst, "{}", scn.name);
+            }
+            let t3 = scn.trace(16, 0.1, 300, 43);
+            if matches!(scn.workload, Workload::Synthetic(_) | Workload::Bursty { .. }) {
+                assert_ne!(t1, t3, "{} ignores its seed", scn.name);
+            }
+        }
+    }
+
+    #[test]
+    fn replay_delivers_the_whole_trace_on_both_engines() {
+        let scn = find("bursty").unwrap();
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        for engine in SimEngine::ALL {
+            let cfg = NocConfig { engine, ..NocConfig::paper() };
+            let out = run_scenario(&scn, &topo, cfg, 0.1, 500, 3).unwrap();
+            assert_eq!(out.report.net.injected, out.report.net.delivered);
+            assert_eq!(out.ejects.len() as u64, out.report.net.delivered);
+            assert!(out.report.cycles > 0);
+            assert!(out.report.flow.contains("bursty"));
+        }
+    }
+
+    #[test]
+    fn app_skeletons_touch_many_endpoints() {
+        for name in ["ldpc-trace", "pfilter-trace", "bmvm-trace"] {
+            let scn = find(name).unwrap();
+            let t = scn.trace(16, 0.1, 400, 1);
+            let mut srcs: Vec<usize> = t.events.iter().map(|e| e.src).collect();
+            srcs.sort_unstable();
+            srcs.dedup();
+            assert!(srcs.len() >= 8, "{name}: only {} sources", srcs.len());
+        }
+    }
+
+    #[test]
+    fn ldpc_trace_is_bipartite() {
+        let scn = find("ldpc-trace").unwrap();
+        let t = scn.trace(12, 0.1, 200, 1);
+        let n_bits = (2 * 12usize).div_ceil(3); // 8
+        for e in &t.events {
+            let src_is_bit = e.src < n_bits;
+            let dst_is_bit = e.dst < n_bits;
+            assert_ne!(src_is_bit, dst_is_bit, "non-bipartite edge {e:?}");
+        }
+    }
+}

@@ -1,7 +1,14 @@
 //! Network statistics: latency, throughput, link utilization.
 
+/// Number of power-of-two latency histogram buckets ([`NetStats::latency_hist`]).
+pub const LAT_BUCKETS: usize = 24;
+
 /// Counters accumulated by [`super::Network`] during simulation.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq`/`Eq` compare every counter — including the per-flit
+/// latency histogram — which is what the engine-conformance tests use to
+/// assert the event-driven engine is bit-identical to the reference.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct NetStats {
     /// Flits handed to source NIs.
     pub injected: u64,
@@ -11,6 +18,11 @@ pub struct NetStats {
     pub total_latency: u64,
     /// Worst single-flit latency.
     pub max_latency: u64,
+    /// Per-flit latency histogram in power-of-two buckets: bucket `b`
+    /// counts deliveries with latency in `[2^(b-1), 2^b)` (bucket 0 =
+    /// zero-latency; the last bucket absorbs the tail). Grown lazily, so
+    /// trailing zero buckets are simply absent.
+    pub latency_hist: Vec<u64>,
     /// Total flit-hops over router→router links (for link utilization).
     pub link_hops: u64,
     /// Cycles simulated.
@@ -18,6 +30,18 @@ pub struct NetStats {
 }
 
 impl NetStats {
+    /// Record one flit delivery with the given latency (cycles).
+    pub(crate) fn record_delivery(&mut self, latency: u64) {
+        self.delivered += 1;
+        self.total_latency += latency;
+        self.max_latency = self.max_latency.max(latency);
+        let bucket = latency_bucket(latency);
+        if self.latency_hist.len() <= bucket {
+            self.latency_hist.resize(bucket + 1, 0);
+        }
+        self.latency_hist[bucket] += 1;
+    }
+
     /// Mean flit latency in cycles (0 if nothing delivered).
     pub fn avg_latency(&self) -> f64 {
         if self.delivered == 0 {
@@ -43,6 +67,15 @@ impl NetStats {
         } else {
             self.link_hops as f64 / self.delivered as f64
         }
+    }
+}
+
+/// Histogram bucket for a latency value (see [`NetStats::latency_hist`]).
+pub fn latency_bucket(latency: u64) -> usize {
+    if latency == 0 {
+        0
+    } else {
+        (u64::BITS - latency.leading_zeros()).min(LAT_BUCKETS as u32 - 1) as usize
     }
 }
 
@@ -72,6 +105,7 @@ mod tests {
             delivered: 8,
             total_latency: 80,
             max_latency: 20,
+            latency_hist: Vec::new(),
             link_hops: 24,
             cycles: 100,
         };
@@ -81,5 +115,34 @@ mod tests {
         let z = NetStats::default();
         assert_eq!(z.avg_latency(), 0.0);
         assert_eq!(z.throughput(), 0.0);
+    }
+
+    #[test]
+    fn record_delivery_fills_histogram() {
+        let mut s = NetStats::default();
+        for lat in [0u64, 1, 2, 3, 4, 100] {
+            s.record_delivery(lat);
+        }
+        assert_eq!(s.delivered, 6);
+        assert_eq!(s.total_latency, 110);
+        assert_eq!(s.max_latency, 100);
+        assert_eq!(s.latency_hist.iter().sum::<u64>(), 6);
+        // lat 0 -> bucket 0; lat 1 -> 1; lat 2..3 -> 2; lat 4 -> 3;
+        // lat 100 -> 7.
+        assert_eq!(s.latency_hist[0], 1);
+        assert_eq!(s.latency_hist[1], 1);
+        assert_eq!(s.latency_hist[2], 2);
+        assert_eq!(s.latency_hist[3], 1);
+        assert_eq!(s.latency_hist[7], 1);
+    }
+
+    #[test]
+    fn latency_bucket_boundaries() {
+        assert_eq!(latency_bucket(0), 0);
+        assert_eq!(latency_bucket(1), 1);
+        assert_eq!(latency_bucket(2), 2);
+        assert_eq!(latency_bucket(3), 2);
+        assert_eq!(latency_bucket(4), 3);
+        assert_eq!(latency_bucket(u64::MAX), LAT_BUCKETS - 1);
     }
 }

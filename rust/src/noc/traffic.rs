@@ -20,6 +20,12 @@ pub enum Pattern {
     Hotspot,
     /// dst = src + 1 mod n (nearest neighbor, best case).
     Neighbor,
+    /// Matrix transpose on a √n×√n grid: (x, y) → (y, x). Falls back to
+    /// the reversal permutation n-1-src when n is not a perfect square.
+    Transpose,
+    /// dst = bit-reversed src over log2(n) bits (FFT-style). Falls back
+    /// to the reversal permutation when n is not a power of two.
+    BitReverse,
 }
 
 impl Pattern {
@@ -32,6 +38,23 @@ impl Pattern {
             Pattern::Tornado => (src + n / 2) % n,
             Pattern::Hotspot => 0,
             Pattern::Neighbor => (src + 1) % n,
+            Pattern::Transpose => {
+                let w = crate::util::isqrt(n as u64) as usize;
+                if w * w == n && w > 1 {
+                    let (x, y) = (src % w, src / w);
+                    x * w + y
+                } else {
+                    n - 1 - src
+                }
+            }
+            Pattern::BitReverse => {
+                if n.is_power_of_two() && n > 1 {
+                    let b = n.trailing_zeros();
+                    src.reverse_bits() >> (usize::BITS - b)
+                } else {
+                    n - 1 - src
+                }
+            }
         };
         if d == src {
             (d + 1) % n
@@ -40,12 +63,14 @@ impl Pattern {
         }
     }
 
-    pub const ALL: [Pattern; 5] = [
+    pub const ALL: [Pattern; 7] = [
         Pattern::Uniform,
         Pattern::BitComplement,
         Pattern::Tornado,
         Pattern::Hotspot,
         Pattern::Neighbor,
+        Pattern::Transpose,
+        Pattern::BitReverse,
     ];
 
     pub fn name(self) -> &'static str {
@@ -55,6 +80,8 @@ impl Pattern {
             Pattern::Tornado => "tornado",
             Pattern::Hotspot => "hotspot",
             Pattern::Neighbor => "neighbor",
+            Pattern::Transpose => "transpose",
+            Pattern::BitReverse => "bit-reverse",
         }
     }
 }
@@ -173,6 +200,25 @@ mod tests {
                     let d = p.dst(s, n, &mut rng);
                     assert_ne!(d, s, "{p:?} n={n}");
                     assert!(d < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_and_bit_reverse_are_involutions() {
+        // Off the fixed points (which the self-guard perturbs), applying
+        // the permutation twice returns the source.
+        let mut rng = Rng::new(2);
+        for n in [16usize, 64] {
+            for s in 0..n {
+                for p in [Pattern::Transpose, Pattern::BitReverse] {
+                    let d = p.dst(s, n, &mut rng);
+                    if p.dst(d, n, &mut rng) != s {
+                        // s must have been a fixed point bumped by the
+                        // self-guard: d == s + 1 mod n.
+                        assert_eq!(d, (s + 1) % n, "{p:?} n={n} s={s}");
+                    }
                 }
             }
         }

@@ -381,7 +381,7 @@ mod tests {
 
         let mut mono = Network::new(&t, NocConfig::paper());
         traffic(&mut mono);
-        let mono_cycles = mono.run_until_idle(100_000);
+        let mono_cycles = mono.run_until_idle(100_000).unwrap();
         let mono_msgs = collect(&mut mono);
 
         // Vertical bisection: left 2 columns FPGA0, right 2 columns FPGA1.
@@ -391,7 +391,7 @@ mod tests {
         let cuts = p.apply(&mut split, SerdesConfig::default());
         assert_eq!(cuts.len(), 4, "4 rows cross the bisection");
         traffic(&mut split);
-        let split_cycles = split.run_until_idle(1_000_000);
+        let split_cycles = split.run_until_idle(1_000_000).unwrap();
         let split_msgs = collect(&mut split);
 
         assert_eq!(mono_msgs, split_msgs, "partitioning must not change results");

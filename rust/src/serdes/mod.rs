@@ -218,6 +218,13 @@ impl SerdesChannel {
     pub fn in_flight(&self) -> usize {
         self.queue.len()
     }
+
+    /// Cycle at which the channel's next flit completes its transfer
+    /// (`None` when nothing is in flight). The event-driven engine jumps
+    /// the clock here when the whole network is otherwise frozen.
+    pub fn next_ready(&self) -> Option<u64> {
+        self.queue.front().map(|&(_, done)| done)
+    }
 }
 
 #[cfg(test)]

@@ -38,6 +38,22 @@ pub const fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Integer square root (floor), Newton's method on u64. Shared by the
+/// particle-filter Bhattacharyya datapath and grid-shaped traffic
+/// patterns.
+pub fn isqrt(v: u64) -> u64 {
+    if v < 2 {
+        return v;
+    }
+    let mut x = v;
+    let mut y = (x + 1) / 2;
+    while y < x {
+        x = y;
+        y = (x + v / x) / 2;
+    }
+    x
+}
+
 /// `ceil(log2(n))` for n >= 1; 0 for n <= 1.
 #[inline]
 pub const fn clog2(n: usize) -> u32 {

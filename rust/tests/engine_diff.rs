@@ -1,0 +1,96 @@
+//! Differential conformance: the event-driven engine must be
+//! **bit-identical** to the cycle-stepped reference across the scenario
+//! matrix — same injected/ejected counts, same per-flit latency
+//! histogram (inside `NetStats` equality), same eject order, same final
+//! cycle.
+//!
+//! The default job runs the small matrix; the full matrix (more loads,
+//! seeds and an 8×8 mesh) is `#[ignore]`d and executed under `--release`
+//! by the CI conformance job:
+//!
+//! ```text
+//! cargo test --release --test engine_diff -- --include-ignored
+//! ```
+
+use fabricflow::noc::scenario::{self, EjectRecord, MatrixPoint};
+use fabricflow::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::SerdesConfig;
+
+/// (elapsed cycles, absolute final cycle, stats, eject order).
+type RunDigest = (u64, u64, NetStats, Vec<EjectRecord>);
+
+fn run_point(pt: &MatrixPoint, engine: SimEngine) -> RunDigest {
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let mut net = Network::new(&pt.topo, cfg);
+    let trace = pt.scenario.trace(net.n_endpoints(), pt.load, pt.cycles, pt.seed);
+    let elapsed = scenario::replay(&mut net, &trace, 10_000_000)
+        .unwrap_or_else(|e| panic!("{} on {:?} ({engine:?}): {e}", pt.scenario.name, pt.topo));
+    let ejects = scenario::drain_all(&mut net);
+    (elapsed, net.cycle(), net.stats().clone(), ejects)
+}
+
+fn assert_point_conforms(pt: &MatrixPoint) {
+    let reference = run_point(pt, SimEngine::Reference);
+    let event = run_point(pt, SimEngine::EventDriven);
+    let ctx = format!(
+        "{} on {:?} load={} seed={}",
+        pt.scenario.name, pt.topo, pt.load, pt.seed
+    );
+    assert_eq!(reference.0, event.0, "elapsed cycles differ: {ctx}");
+    assert_eq!(reference.1, event.1, "final cycle differs: {ctx}");
+    assert_eq!(reference.2, event.2, "NetStats differ: {ctx}");
+    assert_eq!(
+        reference.3.len(),
+        event.3.len(),
+        "eject count differs: {ctx}"
+    );
+    assert_eq!(reference.3, event.3, "eject order differs: {ctx}");
+    // The point actually exercised the network.
+    assert!(reference.2.injected > 0, "empty scenario: {ctx}");
+    assert_eq!(reference.2.injected, reference.2.delivered, "lost flits: {ctx}");
+}
+
+#[test]
+fn engines_agree_on_default_matrix() {
+    let pts = scenario::default_matrix();
+    assert!(pts.len() >= 30, "matrix suspiciously small: {}", pts.len());
+    for pt in &pts {
+        assert_point_conforms(pt);
+    }
+}
+
+#[test]
+#[ignore = "full matrix: run with --release in the CI conformance job"]
+fn engines_agree_on_full_matrix() {
+    for pt in &scenario::full_matrix() {
+        assert_point_conforms(pt);
+    }
+}
+
+/// Partitioned networks exercise the event engine's serdes time-jump
+/// path; results must still be bit-identical.
+#[test]
+fn engines_agree_on_partitioned_mesh() {
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+    for (pins, clock_div) in [(8u32, 1u32), (2, 4)] {
+        for scn_name in ["uniform", "bursty", "bmvm-trace"] {
+            let scn = scenario::find(scn_name).unwrap();
+            let run = |engine: SimEngine| {
+                let cfg = NocConfig { engine, ..NocConfig::paper() };
+                let mut net = Network::new(&topo, cfg);
+                part.apply(&mut net, SerdesConfig { pins, clock_div, tx_buffer: 8 });
+                let trace = scn.trace(net.n_endpoints(), 0.08, 300, 5);
+                let elapsed = scenario::replay(&mut net, &trace, 10_000_000).unwrap();
+                (elapsed, net.cycle(), net.stats().clone(), scenario::drain_all(&mut net))
+            };
+            let reference = run(SimEngine::Reference);
+            let event = run(SimEngine::EventDriven);
+            assert_eq!(
+                reference, event,
+                "{scn_name} pins={pins} clock_div={clock_div}"
+            );
+        }
+    }
+}

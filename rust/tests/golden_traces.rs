@@ -1,0 +1,158 @@
+//! Golden-trace regression: one pinned load point per case-study
+//! scenario (ldpc, pfilter, bmvm). Each run is serialized to canonical
+//! JSON — full `NetStats` plus the exact eject sequence — and compared
+//! byte-for-byte against `tests/golden/<name>.json`, so a refactor that
+//! changes network behavior in *any* observable way fails loudly instead
+//! of silently shifting results.
+//!
+//! The files are **blessed automatically on first run** (or when
+//! `FABRICFLOW_BLESS=1` is set) and should be committed. Both engines
+//! are checked against the same golden file, so this doubles as an
+//! engine-conformance anchor.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use fabricflow::noc::scenario::{self, ScenarioOutcome};
+use fabricflow::noc::{NocConfig, SimEngine, Topology};
+
+struct GoldenCase {
+    name: &'static str,
+    scenario: &'static str,
+    topo: Topology,
+    load: f64,
+    cycles: u64,
+    seed: u64,
+}
+
+fn cases() -> Vec<GoldenCase> {
+    vec![
+        GoldenCase {
+            name: "ldpc",
+            scenario: "ldpc-trace",
+            topo: Topology::Mesh { w: 4, h: 4 },
+            load: 0.1,
+            cycles: 320,
+            seed: 11,
+        },
+        GoldenCase {
+            name: "pfilter",
+            scenario: "pfilter-trace",
+            topo: Topology::Torus { w: 4, h: 4 },
+            load: 0.1,
+            cycles: 320,
+            seed: 12,
+        },
+        GoldenCase {
+            name: "bmvm",
+            scenario: "bmvm-trace",
+            topo: Topology::Ring(8),
+            load: 0.1,
+            cycles: 320,
+            seed: 13,
+        },
+    ]
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("{name}.json"))
+}
+
+/// Canonical JSON for an outcome: integers only (derived float metrics
+/// are recomputable), stable field order, one eject per line.
+fn render(case: &GoldenCase, out: &ScenarioOutcome) -> String {
+    let s = &out.report.net;
+    let mut j = String::new();
+    let _ = writeln!(j, "{{");
+    let _ = writeln!(j, "  \"scenario\": \"{}\",", case.scenario);
+    let _ = writeln!(j, "  \"topology\": \"{:?}\",", case.topo);
+    let _ = writeln!(
+        j,
+        "  \"load\": \"{}\", \"window\": {}, \"seed\": {},",
+        case.load, case.cycles, case.seed
+    );
+    let _ = writeln!(j, "  \"cycles\": {},", out.report.cycles);
+    let _ = writeln!(j, "  \"stats\": {{");
+    let _ = writeln!(j, "    \"injected\": {},", s.injected);
+    let _ = writeln!(j, "    \"delivered\": {},", s.delivered);
+    let _ = writeln!(j, "    \"total_latency\": {},", s.total_latency);
+    let _ = writeln!(j, "    \"max_latency\": {},", s.max_latency);
+    let _ = writeln!(j, "    \"latency_hist\": {:?},", s.latency_hist);
+    let _ = writeln!(j, "    \"link_hops\": {},", s.link_hops);
+    let _ = writeln!(j, "    \"cycles\": {}", s.cycles);
+    let _ = writeln!(j, "  }},");
+    let _ = writeln!(j, "  \"ejects\": [");
+    for (i, e) in out.ejects.iter().enumerate() {
+        let comma = if i + 1 == out.ejects.len() { "" } else { "," };
+        let _ = writeln!(
+            j,
+            "    [{}, {}, {}, {}, {}]{comma}",
+            e.endpoint, e.src, e.tag, e.data, e.injected_at
+        );
+    }
+    let _ = writeln!(j, "  ]");
+    let _ = writeln!(j, "}}");
+    j
+}
+
+fn run_case(case: &GoldenCase, engine: SimEngine) -> ScenarioOutcome {
+    let scn = scenario::find(case.scenario).expect("scenario registered");
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    scenario::run_scenario(&scn, &case.topo, cfg, case.load, case.cycles, case.seed)
+        .unwrap_or_else(|e| panic!("{} golden run stalled: {e}", case.name))
+}
+
+#[test]
+fn golden_traces_are_stable() {
+    let bless_all = std::env::var("FABRICFLOW_BLESS").is_ok();
+    for case in cases() {
+        let reference = render(&case, &run_case(&case, SimEngine::Reference));
+        let event = render(&case, &run_case(&case, SimEngine::EventDriven));
+        assert_eq!(
+            reference, event,
+            "{}: engines disagree — fix the engine before blessing",
+            case.name
+        );
+        let path = golden_path(case.name);
+        if bless_all || !path.exists() {
+            // Under FABRICFLOW_REQUIRE_GOLDEN (the CI conformance job) a
+            // missing golden is a hard failure — silent re-blessing on a
+            // fresh checkout would make this regression test inert.
+            assert!(
+                bless_all || std::env::var("FABRICFLOW_REQUIRE_GOLDEN").is_err(),
+                "{}: golden file {} is missing — run `cargo test --test \
+                 golden_traces` locally and commit the blessed file",
+                case.name,
+                path.display()
+            );
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &reference).unwrap();
+            eprintln!("blessed golden file {}", path.display());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        assert_eq!(
+            reference,
+            want,
+            "{}: network behavior drifted from {} — if the change is \
+             intentional, re-bless with FABRICFLOW_BLESS=1",
+            case.name,
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn golden_runs_are_nontrivial() {
+    // Guard the goldens against degenerating into empty runs (e.g. a
+    // trace-generation change that stops producing traffic).
+    for case in cases() {
+        let out = run_case(&case, SimEngine::Reference);
+        assert!(out.report.net.injected > 100, "{} too small", case.name);
+        assert_eq!(out.report.net.injected, out.report.net.delivered, "{}", case.name);
+        assert_eq!(out.ejects.len() as u64, out.report.net.delivered, "{}", case.name);
+    }
+}

@@ -1,7 +1,8 @@
 //! Heavier randomized property tests over whole-system invariants
 //! (seeded and replayable via `FABRICFLOW_PROP_SEED`, see `util::prop`).
 
-use fabricflow::noc::{Flit, Network, NocConfig, Topology};
+use fabricflow::noc::scenario;
+use fabricflow::noc::{Flit, Network, NocConfig, SimEngine, Topology};
 use fabricflow::partition::Partition;
 use fabricflow::pe::collector::{make_tag, Collector};
 use fabricflow::serdes::SerdesConfig;
@@ -51,7 +52,7 @@ fn prop_noc_delivers_everything_exactly_once() {
             net.inject(s, Flit::single(s, d, i as u32, data));
             sent.push((s, d, data));
         }
-        net.run_until_idle(10_000_000);
+        net.run_until_idle(10_000_000).expect("network stalled");
         let mut got: Vec<(usize, usize, u64)> = Vec::new();
         for d in 0..n {
             while let Some(f) = net.eject(d) {
@@ -62,6 +63,118 @@ fn prop_noc_delivers_everything_exactly_once() {
         sent.sort_unstable();
         got.sort_unstable();
         prop::assert_prop(sent == got, format!("{topo:?}: loss or duplication"))
+    });
+}
+
+fn random_engine(rng: &mut Rng) -> SimEngine {
+    if rng.bool() {
+        SimEngine::EventDriven
+    } else {
+        SimEngine::Reference
+    }
+}
+
+/// An uncontended flit takes exactly `hop_distance` router→router links
+/// on mesh and torus — i.e. the implemented XY / dimension-order routing
+/// is minimal (either engine).
+#[test]
+fn prop_routing_is_minimal_on_mesh_and_torus() {
+    prop::check("minimal routing", 40, |rng| {
+        let w = 2 + rng.index(6);
+        let h = 2 + rng.index(6);
+        let topo = if rng.bool() {
+            Topology::Torus { w, h }
+        } else {
+            Topology::Mesh { w, h }
+        };
+        let cfg = NocConfig { engine: random_engine(rng), ..NocConfig::paper() };
+        let g = topo.build();
+        let mut net = Network::new(&topo, cfg);
+        let n = w * h;
+        let s = rng.index(n);
+        let d = (s + 1 + rng.index(n - 1)) % n;
+        net.inject(s, Flit::single(s, d, 0, 0));
+        net.run_until_idle(100_000).map_err(|e| format!("{topo:?}: {e}"))?;
+        prop::assert_prop(
+            net.stats().link_hops as usize == g.hop_distance(s, d),
+            format!(
+                "{topo:?} {s}->{d}: took {} hops, hop_distance {}",
+                net.stats().link_hops,
+                g.hop_distance(s, d)
+            ),
+        )
+    });
+}
+
+/// Every injected flit — including multi-flit messages — is eventually
+/// ejected at its destination under `run_until_idle`, on any topology,
+/// with either engine.
+#[test]
+fn prop_every_injected_flit_is_eventually_ejected() {
+    prop::check("eventual ejection", 25, |rng| {
+        let topo = random_topology(rng);
+        let cfg = NocConfig { engine: random_engine(rng), ..NocConfig::paper() };
+        let mut net = Network::new(&topo, cfg);
+        let n = net.n_endpoints();
+        if n < 2 {
+            return Ok(());
+        }
+        let mut expect_per_dst = vec![0u64; n];
+        for m in 0..(20 + rng.index(60)) {
+            let s = rng.index(n);
+            let d = (s + 1 + rng.index(n - 1)) % n;
+            let bits = 1 + rng.index(120);
+            let payload: Vec<u64> = (0..bits.div_ceil(64)).map(|_| rng.next_u64()).collect();
+            net.send_message(s, d, m as u32, &payload, bits);
+            expect_per_dst[d] += bits.div_ceil(16).max(1) as u64;
+        }
+        net.run_until_idle(10_000_000).map_err(|e| format!("{topo:?}: {e}"))?;
+        prop::assert_prop(
+            net.stats().delivered == net.stats().injected,
+            format!("{topo:?}: delivered != injected"),
+        )?;
+        for d in 0..n {
+            let mut got = 0u64;
+            while let Some(f) = net.eject(d) {
+                prop::assert_prop(f.dst == d, format!("{topo:?}: misdelivery at {d}"))?;
+                got += 1;
+            }
+            prop::assert_prop(
+                got == expect_per_dst[d],
+                format!("{topo:?} dst {d}: {got} != {}", expect_per_dst[d]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Simulation is a pure function of (topology, scenario, seed): replaying
+/// the identical trace yields identical stats, eject order and final
+/// cycle — for either engine.
+#[test]
+fn prop_simulation_is_deterministic_for_a_fixed_seed() {
+    prop::check("deterministic replay", 12, |rng| {
+        let topo = random_topology(rng);
+        let g = topo.build();
+        if g.n_endpoints < 2 {
+            return Ok(());
+        }
+        let reg = scenario::registry();
+        let scn = reg[rng.index(reg.len())];
+        let engine = random_engine(rng);
+        let seed = rng.next_u64();
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let mut go = || {
+            scenario::run_scenario(&scn, &topo, cfg, 0.08, 300, seed)
+                .map_err(|e| format!("{topo:?} {}: {e}", scn.name))
+                .map(|out| (out.report.cycles, out.report.net.clone(), out.ejects))
+        };
+        let a = go()?;
+        let b = go()?;
+        prop::assert_prop(
+            a == b,
+            format!("{topo:?} {} ({engine:?}) not deterministic", scn.name),
+        )
     });
 }
 
@@ -98,7 +211,7 @@ fn prop_partition_preserves_delivery() {
             for (i, &(s, d, x)) in traffic.iter().enumerate() {
                 net.inject(s, Flit::single(s, d, i as u32, x));
             }
-            let cycles = net.run_until_idle(50_000_000);
+            let cycles = net.run_until_idle(50_000_000).expect("network stalled");
             let mut got: Vec<(usize, usize, u64)> = Vec::new();
             for d in 0..g.n_endpoints {
                 while let Some(f) = net.eject(d) {
