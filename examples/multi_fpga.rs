@@ -10,7 +10,7 @@ use fabricflow::flow::{FlowBuilder, MappedFlow, RunReport};
 use fabricflow::noc::Topology;
 use fabricflow::partition::Partition;
 use fabricflow::pe::collector::ArgMessage;
-use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
+use fabricflow::pe::{MsgSink, Processor, WrapperSpec};
 use fabricflow::resources::Device;
 use fabricflow::serdes::SerdesConfig;
 
@@ -24,17 +24,13 @@ impl Processor for Scatter {
     fn spec(&self) -> WrapperSpec {
         WrapperSpec::new(vec![16], vec![16])
     }
-    fn boot(&mut self) -> Vec<OutMessage> {
-        (0..self.count)
-            .map(|i| {
-                let dst = self.dsts[i as usize % self.dsts.len()];
-                OutMessage::word(dst, 0, i, (i as u64) & 0xFFFF, 16)
-            })
-            .collect()
+    fn boot(&mut self, out: &mut MsgSink) {
+        for i in 0..self.count {
+            let dst = self.dsts[i as usize % self.dsts.len()];
+            out.word(dst, 0, i, (i as u64) & 0xFFFF, 16);
+        }
     }
-    fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
-        Vec::new()
-    }
+    fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
 }
 
 /// The Fig 5 NoC: 4 routers in a cycle, one endpoint each.

@@ -15,7 +15,7 @@ use fabricflow::flow::{FlowBuilder, MappedFlow};
 use fabricflow::noc::Topology;
 use fabricflow::partition::Partition;
 use fabricflow::pe::collector::ArgMessage;
-use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
+use fabricflow::pe::{MsgSink, Processor, WrapperSpec};
 use fabricflow::serdes::SerdesConfig;
 
 /// Splits an input value into two messages for the squarers.
@@ -28,21 +28,13 @@ impl Processor for Splitter {
     fn spec(&self) -> WrapperSpec {
         WrapperSpec::new(vec![32], vec![32, 32])
     }
-    fn boot(&mut self) -> Vec<OutMessage> {
-        self.values
-            .iter()
-            .enumerate()
-            .flat_map(|(e, &v)| {
-                vec![
-                    OutMessage::word(self.sq_a, 0, e as u32, v, 32),
-                    OutMessage::word(self.sq_b, 0, e as u32, v + 1, 32),
-                ]
-            })
-            .collect()
+    fn boot(&mut self, out: &mut MsgSink) {
+        for (e, &v) in self.values.iter().enumerate() {
+            out.word(self.sq_a, 0, e as u32, v, 32);
+            out.word(self.sq_b, 0, e as u32, v + 1, 32);
+        }
     }
-    fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
-        Vec::new()
-    }
+    fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
 }
 
 /// Squares its argument (latency 4 — a 2-stage multiplier datapath).
@@ -57,9 +49,9 @@ impl Processor for Squarer {
     fn latency(&self) -> u64 {
         4
     }
-    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
         let x = args[0].payload[0];
-        vec![OutMessage::word(self.acc, self.arg_at_acc, epoch, x * x, 64)]
+        out.word(self.acc, self.arg_at_acc, epoch, x * x, 64);
     }
 }
 
@@ -71,9 +63,9 @@ impl Processor for Accumulator {
     fn spec(&self) -> WrapperSpec {
         WrapperSpec::new(vec![64, 64], vec![64])
     }
-    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
         let s = args[0].payload[0] + args[1].payload[0];
-        vec![OutMessage::word(self.sink, 0, epoch, s, 64)]
+        out.word(self.sink, 0, epoch, s, 64);
     }
 }
 

@@ -1,70 +1,21 @@
-//! Reference vs event-driven engine wall-clock on scenario-matrix
-//! points (`cargo bench --bench noc_engine`).
+//! Reference vs event-driven engine wall-clock on the tracked benchmark
+//! matrix (`cargo bench --bench noc_engine`).
 //!
-//! The acceptance headline is the low-load 8×8 mesh: most routers idle
-//! most cycles, so the reference pays the full O(routers) sweep for a
-//! handful of flit moves while the event engine visits only the active
-//! set. Results are cross-checked for bit-identity in the same run.
-
-use std::time::Instant;
-
-use fabricflow::noc::scenario::{self, Trace};
-use fabricflow::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
-
-fn run_once(topo: &Topology, engine: SimEngine, trace: &Trace) -> (u64, NetStats) {
-    let cfg = NocConfig { engine, ..NocConfig::paper() };
-    let mut net = Network::new(topo, cfg);
-    let cycles = scenario::replay(&mut net, trace, 100_000_000).expect("stalled");
-    (cycles, net.stats().clone())
-}
-
-/// Best-of-`reps` wall time plus the (engine-independent) run digest.
-fn time_engine(
-    topo: &Topology,
-    engine: SimEngine,
-    trace: &Trace,
-    reps: usize,
-) -> (f64, u64, NetStats) {
-    let mut best = f64::INFINITY;
-    let mut digest = None;
-    for _ in 0..reps {
-        let t = Instant::now();
-        let d = run_once(topo, engine, trace);
-        best = best.min(t.elapsed().as_secs_f64());
-        digest = Some(d);
-    }
-    let (cycles, stats) = digest.unwrap();
-    (best, cycles, stats)
-}
+//! Delegates to [`fabricflow::perf`] — the same matrix `fabricflow
+//! bench` serializes to `BENCH_noc.json` — so the bench binary, the CLI
+//! subcommand and the CI perf-smoke job all measure identical points.
+//! Bit-identity of the two engines is cross-checked per point in the
+//! same run.
+//!
+//! Headlines:
+//! * `low-load-mesh8x8/uniform` — event-engine speedup (idle-skip).
+//! * `saturated-mesh8x8/uniform` — raw per-flit cost of the
+//!   zero-allocation core (flat VC rings, precomputed route table).
 
 fn main() {
-    println!("engine comparison: reference vs event-driven (best of 3)\n");
-    let points: &[(&str, Topology, &str, f64, u64)] = &[
-        ("low-load 8x8 mesh (headline)", Topology::Mesh { w: 8, h: 8 }, "uniform", 0.02, 30_000),
-        ("very-low-load 8x8 mesh", Topology::Mesh { w: 8, h: 8 }, "uniform", 0.005, 30_000),
-        ("bursty 8x8 mesh (idle gaps)", Topology::Mesh { w: 8, h: 8 }, "bursty", 0.02, 30_000),
-        ("mid-load 8x8 torus", Topology::Torus { w: 8, h: 8 }, "uniform", 0.2, 5_000),
-        ("ldpc trace 4x4 mesh", Topology::Mesh { w: 4, h: 4 }, "ldpc-trace", 0.1, 20_000),
-    ];
-    for (label, topo, scn_name, load, window) in points {
-        let scn = scenario::find(scn_name).expect("scenario registered");
-        let n = topo.build().n_endpoints;
-        let trace = scn.trace(n, *load, *window, 1);
-        let (t_ref, c_ref, s_ref) = time_engine(topo, SimEngine::Reference, &trace, 3);
-        let (t_evt, c_evt, s_evt) = time_engine(topo, SimEngine::EventDriven, &trace, 3);
-        assert_eq!(
-            (c_ref, &s_ref),
-            (c_evt, &s_evt),
-            "{label}: engines disagree — conformance bug"
-        );
-        println!(
-            "  {label:32} {:>7} flits {:>9} cycles | ref {:>8.2} ms  event {:>8.2} ms  => {:.2}x",
-            s_ref.injected,
-            c_ref,
-            t_ref * 1e3,
-            t_evt * 1e3,
-            t_ref / t_evt
-        );
-    }
+    println!("engine comparison over the tracked matrix (best of 3)\n");
+    let report = fabricflow::perf::run(false);
+    print!("{}", report.render_table());
     println!("\n(bit-identity of stats + completion cycle asserted per point)");
+    println!("(refresh the committed baseline with `cargo run --release -- bench`)");
 }

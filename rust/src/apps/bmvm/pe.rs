@@ -24,7 +24,7 @@ use std::collections::HashMap;
 
 use crate::noc::flit::NodeId;
 use crate::pe::collector::ArgMessage;
-use crate::pe::{OutMessage, Processor, WrapperSpec};
+use crate::pe::{MsgSink, Processor, WrapperSpec};
 use crate::resources::{self, Resources};
 
 use super::williams::WilliamsLuts;
@@ -46,6 +46,13 @@ pub struct BmvmPe {
     /// epoch → (remote batches received, accumulated owned rows).
     acc: HashMap<u32, (usize, Vec<u64>)>,
     epoch: u32,
+    /// Scratch: per-epoch pre-XOR'd contributions (one word per block).
+    contrib: Vec<u64>,
+    /// Scratch: unpacked incoming batch.
+    batch: Vec<u64>,
+    /// Recycled accumulator/row buffers — epochs allocate nothing after
+    /// warm-up.
+    slot_pool: Vec<Vec<u64>>,
     /// Stats: total LUT words read.
     pub lut_reads: u64,
 }
@@ -90,23 +97,26 @@ impl BmvmPe {
             peers,
             acc: HashMap::new(),
             epoch: 0,
+            contrib: Vec::new(),
+            batch: Vec::new(),
+            slot_pool: Vec::new(),
             lut_reads: 0,
         }
     }
 
     /// Contributions of this PE's columns for the current `self.v`,
-    /// pre-XOR'd per destination block row.
-    fn contributions(&mut self) -> Vec<u64> {
-        let mut contrib = vec![0u64; self.blocks];
+    /// pre-XOR'd per destination block row, into the `contrib` scratch.
+    fn compute_contributions(&mut self) {
+        self.contrib.clear();
+        self.contrib.resize(self.blocks, 0);
         for c in 0..self.f {
             let mask = self.v[c] as usize;
             let words = &self.lut[c][mask * self.blocks..(mask + 1) * self.blocks];
             self.lut_reads += self.blocks as u64;
             for (j, &w) in words.iter().enumerate() {
-                contrib[j] ^= w;
+                self.contrib[j] ^= w;
             }
         }
-        contrib
     }
 
     /// Pack `f` k-bit words into one payload word.
@@ -118,43 +128,55 @@ impl BmvmPe {
         p
     }
 
+    /// Unpack a payload word into `f` k-bit words (cleared `out` first).
+    fn unpack_into(&self, p: u64, out: &mut Vec<u64>) {
+        out.clear();
+        let mask = (1u64 << self.k) - 1;
+        for i in 0..self.f {
+            out.push((p >> (i * self.k)) & mask);
+        }
+    }
+
+    #[cfg(test)]
     fn unpack(&self, p: u64) -> Vec<u64> {
-        (0..self.f)
-            .map(|i| (p >> (i * self.k)) & ((1u64 << self.k) - 1))
-            .collect()
+        let mut out = Vec::new();
+        self.unpack_into(p, &mut out);
+        out
+    }
+
+    /// The accumulator slot for `epoch`, created from the buffer pool on
+    /// first touch (split borrows keep it a single map lookup).
+    fn acc_slot(&mut self, epoch: u32) -> &mut (usize, Vec<u64>) {
+        let BmvmPe { acc, slot_pool, f, .. } = self;
+        acc.entry(epoch)
+            .or_insert_with(|| (0, crate::util::pooled_words(slot_pool, *f)))
     }
 
     /// Emit the scatter for epoch `e` and fold in the self-contribution.
-    fn send_epoch(&mut self, e: u32) -> Vec<OutMessage> {
-        let contrib = self.contributions();
-        let mut msgs = Vec::with_capacity(self.n_pes - 1);
-        for dst in 0..self.n_pes {
-            let batch = &contrib[dst * self.f..(dst + 1) * self.f];
-            if dst == self.pe {
-                let slot = self
-                    .acc
-                    .entry(e)
-                    .or_insert_with(|| (0, vec![0u64; self.f]));
-                for (a, &w) in slot.1.iter_mut().zip(batch) {
-                    *a ^= w;
-                }
-            } else {
-                msgs.push(OutMessage::word(
-                    self.peers[dst],
-                    0,
-                    e,
-                    self.pack(batch),
-                    self.f * self.k,
-                ));
+    fn send_epoch(&mut self, e: u32, out: &mut MsgSink) {
+        self.compute_contributions();
+        let (pe, f) = (self.pe, self.f);
+        // Own-rows batch folds straight into the epoch accumulator.
+        let contrib = std::mem::take(&mut self.contrib);
+        {
+            let slot = self.acc_slot(e);
+            for (a, &w) in slot.1.iter_mut().zip(&contrib[pe * f..(pe + 1) * f]) {
+                *a ^= w;
             }
         }
-        msgs
+        for dst in 0..self.n_pes {
+            if dst == pe {
+                continue;
+            }
+            let batch = &contrib[dst * f..(dst + 1) * f];
+            out.word(self.peers[dst], 0, e, self.pack(batch), f * self.k);
+        }
+        self.contrib = contrib;
     }
 
     /// Complete every epoch whose gather is full (possibly several in a
     /// row when this PE was the last straggler).
-    fn maybe_finalize(&mut self) -> Vec<OutMessage> {
-        let mut msgs = Vec::new();
+    fn maybe_finalize(&mut self, out: &mut MsgSink) {
         loop {
             let complete = self
                 .acc
@@ -164,14 +186,14 @@ impl BmvmPe {
                 break;
             }
             let (_, rows) = self.acc.remove(&self.epoch).unwrap();
-            self.v = rows;
+            let spent = std::mem::replace(&mut self.v, rows);
+            self.slot_pool.push(spent);
             self.epoch += 1;
             if self.epoch < self.r {
                 let e = self.epoch;
-                msgs.extend(self.send_epoch(e));
+                self.send_epoch(e, out);
             }
         }
-        msgs
     }
 }
 
@@ -201,26 +223,25 @@ impl Processor for BmvmPe {
         }
     }
 
-    fn boot(&mut self) -> Vec<OutMessage> {
-        let mut msgs = self.send_epoch(0);
+    fn boot(&mut self, out: &mut MsgSink) {
+        self.send_epoch(0, out);
         // Single-PE systems (or trailing epochs with no remote input)
         // finalize immediately.
-        msgs.extend(self.maybe_finalize());
-        msgs
+        self.maybe_finalize(out);
     }
 
-    fn process(&mut self, args: &[ArgMessage], _epoch: u32) -> Vec<OutMessage> {
-        let m = &args[0];
-        let batch = self.unpack(m.payload[0]);
-        let slot = self
-            .acc
-            .entry(m.epoch)
-            .or_insert_with(|| (0, vec![0u64; self.f]));
+    fn process(&mut self, args: &[ArgMessage], _epoch: u32, out: &mut MsgSink) {
+        let (m_epoch, payload) = (args[0].epoch, args[0].payload[0]);
+        // Unpack into the batch scratch, then XOR into the accumulator.
+        let mut batch = std::mem::take(&mut self.batch);
+        self.unpack_into(payload, &mut batch);
+        let slot = self.acc_slot(m_epoch);
         slot.0 += 1;
         for (a, &w) in slot.1.iter_mut().zip(&batch) {
             *a ^= w;
         }
-        self.maybe_finalize()
+        self.batch = batch;
+        self.maybe_finalize(out);
     }
 
     fn readback(&self) -> Option<Vec<u64>> {
@@ -254,8 +275,9 @@ mod tests {
         let v = BitVec::random(16, &mut rng);
         let parts = luts.split_vector(&v);
         let mut pe = BmvmPe::new(&luts, &parts, 0, 1, 6, vec![0]);
-        let msgs = pe.boot();
-        assert!(msgs.is_empty(), "single PE sends nothing");
+        let mut sink = MsgSink::new();
+        pe.boot(&mut sink);
+        assert!(sink.is_empty(), "single PE sends nothing");
         let got = luts.join_vector(&pe.readback().unwrap());
         assert_eq!(got, super::super::williams::dense_power_matvec(&a, &v, 6));
     }

@@ -21,7 +21,7 @@
 
 use crate::noc::flit::NodeId;
 use crate::pe::collector::ArgMessage;
-use crate::pe::{OutMessage, Processor, WrapperSpec};
+use crate::pe::{MsgSink, Processor, WrapperSpec};
 use crate::resources::{self, Resources};
 use crate::util::clog2;
 
@@ -55,16 +55,14 @@ impl Processor for CheckNodePe {
         clog2(self.bit_targets.len()) as u64 + 1
     }
 
-    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
         self.scratch_u.clear();
         self.scratch_u
             .extend(args.iter().map(|a| dec_llr(a.payload[0])));
         check_update(self.variant, &self.scratch_u, &mut self.scratch_o);
-        self.scratch_o
-            .iter()
-            .zip(&self.bit_targets)
-            .map(|(&v, &(dst, arg))| OutMessage::word(dst, arg, epoch, enc_llr(v), 16))
-            .collect()
+        for (&v, &(dst, arg)) in self.scratch_o.iter().zip(&self.bit_targets) {
+            out.word(dst, arg, epoch, enc_llr(v), 16);
+        }
     }
 }
 
@@ -100,22 +98,18 @@ impl Processor for BitNodePe {
         clog2(self.check_targets.len() + 1) as u64 + 2
     }
 
-    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
         let u0 = dec_llr(args[0].payload[0]);
         self.scratch_v.clear();
         self.scratch_v
             .extend(args[1..].iter().map(|a| dec_llr(a.payload[0])));
         let sum = bit_update(u0, &self.scratch_v, &mut self.scratch_o);
         if epoch + 1 < self.niter {
-            self.scratch_o
-                .iter()
-                .zip(&self.check_targets)
-                .map(|(&u, &(dst, arg))| {
-                    OutMessage::word(dst, arg, epoch + 1, enc_llr(u), 16)
-                })
-                .collect()
+            for (&u, &(dst, arg)) in self.scratch_o.iter().zip(&self.check_targets) {
+                out.word(dst, arg, epoch + 1, enc_llr(u), 16);
+            }
         } else {
-            vec![OutMessage::word(self.sink, 0, epoch, enc_llr(sum), 16)]
+            out.word(self.sink, 0, epoch, enc_llr(sum), 16);
         }
     }
 }
@@ -139,32 +133,22 @@ impl Processor for LdpcSourcePe {
         WrapperSpec::new(vec![16], vec![16])
     }
 
-    fn boot(&mut self) -> Vec<OutMessage> {
-        let mut msgs = Vec::new();
+    fn boot(&mut self, out: &mut MsgSink) {
         // Initial u_ij to check nodes (epoch 0).
         for (c, args) in self.check_args.iter().enumerate() {
             for (pos, &bit) in args.iter().enumerate() {
-                msgs.push(OutMessage::word(
-                    self.check_ep[c],
-                    pos as u8,
-                    0,
-                    enc_llr(sat(self.llr[bit])),
-                    16,
-                ));
+                out.word(self.check_ep[c], pos as u8, 0, enc_llr(sat(self.llr[bit])), 16);
             }
         }
         // u0 to every bit node, once per iteration epoch.
         for e in 0..self.niter {
             for (b, &ep) in self.bit_ep.iter().enumerate() {
-                msgs.push(OutMessage::word(ep, 0, e, enc_llr(sat(self.llr[b])), 16));
+                out.word(ep, 0, e, enc_llr(sat(self.llr[b])), 16);
             }
         }
-        msgs
     }
 
-    fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
-        Vec::new()
-    }
+    fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -233,7 +217,9 @@ mod tests {
             .enumerate()
             .map(|(i, &x)| ArgMessage { epoch: 4, src: i, payload: vec![enc_llr(x)] })
             .collect();
-        let out = pe.process(&args, 4);
+        let mut sink = MsgSink::new();
+        pe.process(&args, 4, &mut sink);
+        let out = sink.take();
         assert_eq!(out.len(), 3);
         assert_eq!(out[0].dst, 10);
         assert_eq!(out[0].arg, 1);
@@ -255,13 +241,16 @@ mod tests {
             }));
             a
         };
+        let mut sink = MsgSink::new();
         // Mid-iteration: forwards updates with epoch+1.
-        let out = pe.process(&mk(10, [1, -2, 3], 0), 0);
+        pe.process(&mk(10, [1, -2, 3], 0), 0, &mut sink);
+        let out = sink.take();
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|m| m.epoch == 1));
         assert_eq!(dec_llr(out[0].payload[0]), 11); // sum 12 - 1
         // Final iteration: decision to sink.
-        let out = pe.process(&mk(-10, [1, -2, 3], 2), 2);
+        pe.process(&mk(-10, [1, -2, 3], 2), 2, &mut sink);
+        let out = sink.take();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].dst, 30);
         assert_eq!(dec_llr(out[0].payload[0]), -8);
@@ -276,10 +265,13 @@ mod tests {
             check_ep: vec![5, 6],
             check_args: vec![vec![0, 1], vec![1, 2]],
         };
-        let msgs = src.boot();
+        let mut sink = MsgSink::new();
+        src.boot(&mut sink);
         // 4 check-arg messages + 3 bits × 4 epochs.
-        assert_eq!(msgs.len(), 4 + 12);
-        assert!(src.process(&[], 0).is_empty());
+        assert_eq!(sink.len(), 4 + 12);
+        sink.take();
+        src.process(&[], 0, &mut sink);
+        assert!(sink.is_empty());
     }
 
     #[test]

@@ -81,7 +81,28 @@ pub fn weighted_mean(
 
 /// Deterministic Gaussian particle proposal around `center` — shared by
 /// the reference tracker and the NoC root node so both see identical
-/// particle sets.
+/// particle sets. Writes into `out` (cleared first) so per-frame callers
+/// can reuse one buffer.
+pub fn sample_particles_into(
+    rng: &mut crate::util::Rng,
+    center: (i32, i32),
+    n: usize,
+    sigma: f64,
+    bounds: (usize, usize),
+    out: &mut Vec<(i32, i32)>,
+) {
+    out.clear();
+    out.extend((0..n).map(|_| {
+        let x = (center.0 as f64 + sigma * rng.normal()).round() as i32;
+        let y = (center.1 as f64 + sigma * rng.normal()).round() as i32;
+        (
+            x.clamp(0, bounds.0 as i32 - 1),
+            y.clamp(0, bounds.1 as i32 - 1),
+        )
+    }));
+}
+
+/// Allocating wrapper around [`sample_particles_into`].
 pub fn sample_particles(
     rng: &mut crate::util::Rng,
     center: (i32, i32),
@@ -89,16 +110,9 @@ pub fn sample_particles(
     sigma: f64,
     bounds: (usize, usize),
 ) -> Vec<(i32, i32)> {
-    (0..n)
-        .map(|_| {
-            let x = (center.0 as f64 + sigma * rng.normal()).round() as i32;
-            let y = (center.1 as f64 + sigma * rng.normal()).round() as i32;
-            (
-                x.clamp(0, bounds.0 as i32 - 1),
-                y.clamp(0, bounds.1 as i32 - 1),
-            )
-        })
-        .collect()
+    let mut out = Vec::with_capacity(n);
+    sample_particles_into(rng, center, n, sigma, bounds, &mut out);
+    out
 }
 
 #[cfg(test)]

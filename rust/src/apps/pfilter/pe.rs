@@ -24,13 +24,13 @@
 
 use crate::noc::flit::NodeId;
 use crate::pe::collector::ArgMessage;
-use crate::pe::{OutMessage, Processor, WrapperSpec};
+use crate::pe::{MsgSink, OutMessage, Processor, WrapperSpec};
 use crate::resources::{self, Resources};
 use crate::util::Rng;
 
 use super::filter::TrackerParams;
 use super::histo::{
-    bhattacharyya_rho, particle_weight, sample_particles, weighted_histogram,
+    bhattacharyya_rho, particle_weight, sample_particles_into, weighted_histogram,
     weighted_mean, BINS,
 };
 use super::video::{Frame, Video};
@@ -72,28 +72,52 @@ fn payload_for(bits: usize) -> Vec<u64> {
     vec![0u64; bits.div_ceil(64).max(1)]
 }
 
-/// Build a CONFIG command.
+fn fill_config(p: &mut [u64], w: usize, h: usize, r: i32) {
+    set_bits(p, 0, 8, OP_CONFIG);
+    set_bits(p, 8, 16, w as u64);
+    set_bits(p, 24, 16, h as u64);
+    set_bits(p, 40, 8, r as u64);
+}
+
+fn fill_ref_hist(p: &mut [u64], hist: &[u32; BINS]) {
+    set_bits(p, 0, 8, OP_REF_HIST);
+    for (b, &c) in hist.iter().enumerate() {
+        set_bits(p, 8 + 32 * b, 32, c as u64);
+    }
+}
+
+fn fill_frame_chunk(p: &mut [u64], offset: usize, pixels: &[u8]) {
+    set_bits(p, 0, 8, OP_FRAME_CHUNK);
+    set_bits(p, 8, 32, offset as u64);
+    set_bits(p, 40, 16, pixels.len() as u64);
+    for (i, &px) in pixels.iter().enumerate() {
+        set_bits(p, 56 + 8 * i, 8, px as u64);
+    }
+}
+
+fn fill_particle(p: &mut [u64], id: usize, x: i32, y: i32) {
+    set_bits(p, 0, 8, OP_PARTICLE);
+    set_bits(p, 8, 16, id as u64);
+    set_bits(p, 24, 16, (x as i16 as u16) as u64);
+    set_bits(p, 40, 16, (y as i16 as u16) as u64);
+}
+
+/// Build a CONFIG command (allocating; tests/host-side).
 pub fn msg_config(dst: NodeId, epoch: u32, w: usize, h: usize, r: i32) -> OutMessage {
     let mut p = payload_for(48);
-    set_bits(&mut p, 0, 8, OP_CONFIG);
-    set_bits(&mut p, 8, 16, w as u64);
-    set_bits(&mut p, 24, 16, h as u64);
-    set_bits(&mut p, 40, 8, r as u64);
+    fill_config(&mut p, w, h, r);
     OutMessage { dst, arg: 0, epoch, payload: p, bits: 48 }
 }
 
-/// Build a REF_HIST command.
+/// Build a REF_HIST command (allocating; tests/host-side).
 pub fn msg_ref_hist(dst: NodeId, epoch: u32, hist: &[u32; BINS]) -> OutMessage {
     let bits = 8 + 32 * BINS;
     let mut p = payload_for(bits);
-    set_bits(&mut p, 0, 8, OP_REF_HIST);
-    for (b, &c) in hist.iter().enumerate() {
-        set_bits(&mut p, 8 + 32 * b, 32, c as u64);
-    }
+    fill_ref_hist(&mut p, hist);
     OutMessage { dst, arg: 0, epoch, payload: p, bits }
 }
 
-/// Build a FRAME_CHUNK command.
+/// Build a FRAME_CHUNK command (allocating; tests/host-side).
 pub fn msg_frame_chunk(
     dst: NodeId,
     epoch: u32,
@@ -103,22 +127,14 @@ pub fn msg_frame_chunk(
     assert!(pixels.len() <= CHUNK_PIXELS && !pixels.is_empty());
     let bits = 56 + pixels.len() * 8;
     let mut p = payload_for(bits);
-    set_bits(&mut p, 0, 8, OP_FRAME_CHUNK);
-    set_bits(&mut p, 8, 32, offset as u64);
-    set_bits(&mut p, 40, 16, pixels.len() as u64);
-    for (i, &px) in pixels.iter().enumerate() {
-        set_bits(&mut p, 56 + 8 * i, 8, px as u64);
-    }
+    fill_frame_chunk(&mut p, offset, pixels);
     OutMessage { dst, arg: 0, epoch, payload: p, bits }
 }
 
-/// Build a PARTICLE command.
+/// Build a PARTICLE command (allocating; tests/host-side).
 pub fn msg_particle(dst: NodeId, epoch: u32, id: usize, x: i32, y: i32) -> OutMessage {
     let mut p = payload_for(56);
-    set_bits(&mut p, 0, 8, OP_PARTICLE);
-    set_bits(&mut p, 8, 16, id as u64);
-    set_bits(&mut p, 24, 16, (x as i16 as u16) as u64);
-    set_bits(&mut p, 40, 16, (y as i16 as u16) as u64);
+    fill_particle(&mut p, id, x, y);
     OutMessage { dst, arg: 0, epoch, payload: p, bits: 56 }
 }
 
@@ -170,7 +186,7 @@ impl Processor for PfWorkerPe {
         }
     }
 
-    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
         let p = &args[0].payload;
         match get_bits(p, 0, 8) {
             op if op == OP_CONFIG => {
@@ -178,13 +194,11 @@ impl Processor for PfWorkerPe {
                 self.h = get_bits(p, 24, 16) as usize;
                 self.roi_r = get_bits(p, 40, 8) as i32;
                 self.frame = Frame::new(self.w, self.h);
-                Vec::new()
             }
             op if op == OP_REF_HIST => {
                 for b in 0..BINS {
                     self.ref_hist[b] = get_bits(p, 8 + 32 * b, 32) as u32;
                 }
-                Vec::new()
             }
             op if op == OP_FRAME_CHUNK => {
                 let off = get_bits(p, 8, 32) as usize;
@@ -195,7 +209,6 @@ impl Processor for PfWorkerPe {
                         self.frame.pix[off + i] = px;
                     }
                 }
-                Vec::new()
             }
             op if op == OP_PARTICLE => {
                 let id = get_bits(p, 8, 16) as usize;
@@ -204,16 +217,9 @@ impl Processor for PfWorkerPe {
                 let h = weighted_histogram(&self.frame, x, y, self.roi_r);
                 let rho = bhattacharyya_rho(&self.ref_hist, &h);
                 self.particles_done += 1;
-                let mut resp = payload_for(RESP_BITS);
-                set_bits(&mut resp, 0, 16, id as u64);
-                set_bits(&mut resp, 16, 32, rho);
-                vec![OutMessage {
-                    dst: self.root,
-                    arg: 0,
-                    epoch,
-                    payload: resp,
-                    bits: RESP_BITS,
-                }]
+                let resp = out.message(self.root, 0, epoch, RESP_BITS);
+                set_bits(resp, 0, 16, id as u64);
+                set_bits(resp, 16, 32, rho);
             }
             op => panic!("unknown worker opcode {op}"),
         }
@@ -258,46 +264,42 @@ impl PfRootPe {
         }
     }
 
-    /// Messages that ship frame `k` and its particle batch to the workers.
-    fn launch_frame(&mut self, k: usize) -> Vec<OutMessage> {
+    /// Emit the messages that ship frame `k` and its particle batch to
+    /// the workers (pooled payloads — per-frame steady state allocates
+    /// nothing once the particle/weight buffers have warmed up).
+    fn launch_frame(&mut self, k: usize, out: &mut MsgSink) {
         let epoch = k as u32;
-        let mut msgs = Vec::new();
         let frame = &self.video.frames[k];
         for &w in &self.workers {
             for (ci, chunk) in frame.pix.chunks(CHUNK_PIXELS).enumerate() {
-                msgs.push(msg_frame_chunk(w, epoch, ci * CHUNK_PIXELS, chunk));
+                let bits = 56 + chunk.len() * 8;
+                fill_frame_chunk(out.message(w, 0, epoch, bits), ci * CHUNK_PIXELS, chunk);
             }
         }
         let bounds = (self.video.w(), self.video.h());
-        self.particles = sample_particles(
+        sample_particles_into(
             &mut self.rng,
             self.center,
             self.params.n_particles,
             self.params.sigma,
             bounds,
+            &mut self.particles,
         );
-        self.rho = vec![0; self.particles.len()];
+        self.rho.clear();
+        self.rho.resize(self.particles.len(), 0);
         self.got = 0;
         for (i, &(x, y)) in self.particles.iter().enumerate() {
             let w = self.workers[i % self.workers.len()];
-            msgs.push(msg_particle(w, epoch, i, x, y));
+            fill_particle(out.message(w, 0, epoch, 56), i, x, y);
         }
         self.frame_idx = k;
-        msgs
     }
 
-    fn center_msg(&self) -> OutMessage {
-        let mut p = payload_for(48);
-        set_bits(&mut p, 0, 16, self.frame_idx as u64);
-        set_bits(&mut p, 16, 16, (self.center.0 as i16 as u16) as u64);
-        set_bits(&mut p, 32, 16, (self.center.1 as i16 as u16) as u64);
-        OutMessage {
-            dst: self.sink,
-            arg: 0,
-            epoch: self.frame_idx as u32,
-            payload: p,
-            bits: 48,
-        }
+    fn emit_center(&self, out: &mut MsgSink) {
+        let p = out.message(self.sink, 0, self.frame_idx as u32, 48);
+        set_bits(p, 0, 16, self.frame_idx as u64);
+        set_bits(p, 16, 16, (self.center.0 as i16 as u16) as u64);
+        set_bits(p, 32, 16, (self.center.1 as i16 as u16) as u64);
     }
 }
 
@@ -315,7 +317,7 @@ impl Processor for PfRootPe {
         }
     }
 
-    fn boot(&mut self) -> Vec<OutMessage> {
+    fn boot(&mut self, out: &mut MsgSink) {
         let (w, h) = (self.video.w(), self.video.h());
         let ref_hist = weighted_histogram(
             &self.video.frames[0],
@@ -323,16 +325,14 @@ impl Processor for PfRootPe {
             self.center.1,
             self.params.roi_r,
         );
-        let mut msgs = Vec::new();
         for &wk in &self.workers {
-            msgs.push(msg_config(wk, 0, w, h, self.params.roi_r));
-            msgs.push(msg_ref_hist(wk, 0, &ref_hist));
+            fill_config(out.message(wk, 0, 0, 48), w, h, self.params.roi_r);
+            fill_ref_hist(out.message(wk, 0, 0, 8 + 32 * BINS), &ref_hist);
         }
-        msgs.extend(self.launch_frame(1));
-        msgs
+        self.launch_frame(1, out);
     }
 
-    fn process(&mut self, args: &[ArgMessage], _epoch: u32) -> Vec<OutMessage> {
+    fn process(&mut self, args: &[ArgMessage], _epoch: u32, out: &mut MsgSink) {
         let p = &args[0].payload;
         let id = get_bits(p, 0, 16) as usize;
         let rho = get_bits(p, 16, 32);
@@ -340,17 +340,19 @@ impl Processor for PfRootPe {
         self.rho[id] = rho;
         self.got += 1;
         if self.got < self.particles.len() {
-            return Vec::new();
+            return;
         }
         // All responses in: weighted-mean center update (paper §V box).
-        let weights: Vec<u64> = self.rho.iter().map(|&r| particle_weight(r)).collect();
-        self.center = weighted_mean(&self.particles, &weights, self.center);
-        let mut msgs = vec![self.center_msg()];
+        // `rho` doubles as the weight buffer (weights derive pointwise).
+        for r in self.rho.iter_mut() {
+            *r = particle_weight(*r);
+        }
+        self.center = weighted_mean(&self.particles, &self.rho, self.center);
+        self.emit_center(out);
         if self.frame_idx + 1 < self.video.frames.len() {
             let next = self.frame_idx + 1;
-            msgs.extend(self.launch_frame(next));
+            self.launch_frame(next, out);
         }
-        msgs
     }
 }
 
@@ -409,17 +411,20 @@ mod tests {
         use crate::apps::pfilter::video::synthetic_video;
         let v = synthetic_video(32, 24, 2, 4, 8);
         let mut w = PfWorkerPe::new(0);
+        let mut sink = MsgSink::new();
         let mk = |m: OutMessage| ArgMessage { epoch: m.epoch, src: 0, payload: m.payload };
         // CONFIG + REF + full frame + one particle.
         let ref_hist = weighted_histogram(&v.frames[0], 10, 10, 4);
-        assert!(w.process(&[mk(msg_config(1, 0, 32, 24, 4))], 0).is_empty());
-        assert!(w.process(&[mk(msg_ref_hist(1, 0, &ref_hist))], 0).is_empty());
+        w.process(&[mk(msg_config(1, 0, 32, 24, 4))], 0, &mut sink);
+        assert!(sink.is_empty());
+        w.process(&[mk(msg_ref_hist(1, 0, &ref_hist))], 0, &mut sink);
+        assert!(sink.is_empty());
         for (ci, chunk) in v.frames[1].pix.chunks(CHUNK_PIXELS).enumerate() {
-            assert!(w
-                .process(&[mk(msg_frame_chunk(1, 1, ci * CHUNK_PIXELS, chunk))], 1)
-                .is_empty());
+            w.process(&[mk(msg_frame_chunk(1, 1, ci * CHUNK_PIXELS, chunk))], 1, &mut sink);
+            assert!(sink.is_empty());
         }
-        let out = w.process(&[mk(msg_particle(1, 1, 7, 12, 9))], 1);
+        w.process(&[mk(msg_particle(1, 1, 7, 12, 9))], 1, &mut sink);
+        let out = sink.take();
         assert_eq!(out.len(), 1);
         let id = get_bits(&out[0].payload, 0, 16);
         let rho = get_bits(&out[0].payload, 16, 32);

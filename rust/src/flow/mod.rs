@@ -262,18 +262,16 @@ impl FlowBuilder {
     /// use fabricflow::flow::FlowBuilder;
     /// use fabricflow::noc::{SimEngine, Topology};
     /// use fabricflow::pe::collector::ArgMessage;
-    /// use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
+    /// use fabricflow::pe::{MsgSink, Processor, WrapperSpec};
     ///
     /// /// Boot-time source: one 16-bit message to the tap at endpoint 1.
     /// struct Ping;
     /// impl Processor for Ping {
     ///     fn spec(&self) -> WrapperSpec { WrapperSpec::new(vec![16], vec![16]) }
-    ///     fn boot(&mut self) -> Vec<OutMessage> {
-    ///         vec![OutMessage::word(1, 0, 0, 99, 16)]
+    ///     fn boot(&mut self, out: &mut MsgSink) {
+    ///         out.word(1, 0, 0, 99, 16);
     ///     }
-    ///     fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
-    ///         Vec::new()
-    ///     }
+    ///     fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
     /// }
     ///
     /// let run = |engine: SimEngine| {
@@ -740,7 +738,7 @@ mod tests {
     use super::*;
     use crate::noc::{Allocator, Flit};
     use crate::pe::collector::ArgMessage;
-    use crate::pe::{OutMessage, WrapperSpec};
+    use crate::pe::{MsgSink, OutMessage, WrapperSpec};
 
     /// Boot-time source sending fixed messages, then idle.
     struct Source {
@@ -750,12 +748,12 @@ mod tests {
         fn spec(&self) -> WrapperSpec {
             WrapperSpec::new(vec![8], vec![16])
         }
-        fn boot(&mut self) -> Vec<OutMessage> {
-            std::mem::take(&mut self.msgs)
+        fn boot(&mut self, out: &mut MsgSink) {
+            for m in std::mem::take(&mut self.msgs) {
+                out.push(m);
+            }
         }
-        fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
-            Vec::new()
-        }
+        fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
     }
 
     /// adder(a, b) -> a + b, sent to `sink`.
@@ -770,9 +768,9 @@ mod tests {
         fn latency(&self) -> u64 {
             self.latency
         }
-        fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+        fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
             let sum = (args[0].payload[0] + args[1].payload[0]) & 0xFFFF;
-            vec![OutMessage::word(self.sink, 0, epoch, sum, 16)]
+            out.word(self.sink, 0, epoch, sum, 16);
         }
     }
 
@@ -1072,10 +1070,10 @@ mod tests {
             fn spec(&self) -> WrapperSpec {
                 WrapperSpec::new(vec![48], vec![48])
             }
-            fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
-                let mut p = args[0].payload.clone();
+            fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
+                let p = out.message(self.sink, 0, epoch, 48);
+                p.copy_from_slice(&args[0].payload);
                 p[0] = p[0].wrapping_add(1) & 0xFFFF_FFFF_FFFF;
-                vec![OutMessage { dst: self.sink, arg: 0, epoch, payload: p, bits: 48 }]
             }
         }
         let mut fb = FlowBuilder::new("wide");

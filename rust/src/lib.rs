@@ -20,24 +20,24 @@
 //! use fabricflow::noc::Topology;
 //! use fabricflow::partition::Partition;
 //! use fabricflow::pe::collector::ArgMessage;
-//! use fabricflow::pe::{OutMessage, Processor, WrapperSpec};
+//! use fabricflow::pe::{MsgSink, Processor, WrapperSpec};
 //!
 //! /// Boot-time source feeding one argument to the doubler at endpoint 1.
 //! struct Feed;
 //! impl Processor for Feed {
 //!     fn spec(&self) -> WrapperSpec { WrapperSpec::new(vec![16], vec![16]) }
-//!     fn boot(&mut self) -> Vec<OutMessage> {
-//!         vec![OutMessage::word(1, 0, 0, 21, 16)]
+//!     fn boot(&mut self, out: &mut MsgSink) {
+//!         out.word(1, 0, 0, 21, 16);
 //!     }
-//!     fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> { Vec::new() }
+//!     fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
 //! }
 //!
 //! /// Doubles its argument and forwards the result to the tap at endpoint 2.
 //! struct Doubler;
 //! impl Processor for Doubler {
 //!     fn spec(&self) -> WrapperSpec { WrapperSpec::new(vec![16], vec![16]) }
-//!     fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
-//!         vec![OutMessage::word(2, 0, epoch, args[0].payload[0] * 2, 16)]
+//!     fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
+//!         out.word(2, 0, epoch, args[0].payload[0] * 2, 16);
 //!     }
 //! }
 //!
@@ -95,3 +95,4 @@ pub mod dfg;
 pub mod mips;
 pub mod apps;
 pub mod tables;
+pub mod perf;

@@ -8,6 +8,7 @@
 //! fabricflow dfg --cores 4              # Fig 2 DFG→MIPS flow
 //! fabricflow noc --topo mesh8x8         # raw NoC traffic experiment
 //! fabricflow scenarios --topo mesh8x8   # scenario matrix (engine-selectable)
+//! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
 //! fabricflow partition                  # Fig 5 quasi-SERDES demo
 //! fabricflow resources                  # device + component inventory
 //! ```
@@ -282,6 +283,21 @@ fn cmd_scenarios(args: &Args) {
     }
 }
 
+fn cmd_bench(args: &Args) {
+    let quick = args.has("quick");
+    let out = args.str("out", "BENCH_noc.json");
+    let report = fabricflow::perf::run(quick);
+    // Table on stderr so `--out -` leaves stdout as pure, parseable JSON.
+    eprint!("{}", report.render_table());
+    let json = report.to_json();
+    if out == "-" {
+        print!("{json}");
+    } else {
+        std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+        println!("wrote {out}");
+    }
+}
+
 fn cmd_resources() {
     for d in [Device::ZC7020, Device::VIRTEX6_ML605, Device::DE0_NANO] {
         println!(
@@ -336,7 +352,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!(
-            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|scenarios|partition|resources> [flags]"
+            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|scenarios|bench|partition|resources> [flags]"
         );
         std::process::exit(2);
     };
@@ -349,6 +365,7 @@ fn main() {
         "dfg" => cmd_dfg(&args),
         "noc" => cmd_noc(&args),
         "scenarios" => cmd_scenarios(&args),
+        "bench" => cmd_bench(&args),
         "partition" => cmd_partition_demo(&args),
         "resources" => cmd_resources(),
         other => {

@@ -42,21 +42,34 @@ impl Flit {
     }
 }
 
+// The flat flit arena stores `Flit` by value, one slot per buffer entry;
+// keep the struct from growing past its current cache footprint (48 bytes
+// on 64-bit targets — three slots per pair of cache lines).
+const _: () = assert!(
+    std::mem::size_of::<Flit>() <= 48,
+    "Flit grew past 48 bytes — the NoC arena is sized by this struct"
+);
+
 /// Split a message payload (little-endian over `u64` words, `bits` total)
-/// into flits of `flit_width` payload bits each.
-pub fn packetize(
+/// into flits of `flit_width` payload bits each, appended to `out`.
+///
+/// This is the zero-allocation form: hot paths (`Network::send_message`,
+/// the PE Data Distributor) pass a persistent scratch buffer whose
+/// capacity survives across messages.
+pub fn packetize_into(
     src: NodeId,
     dst: NodeId,
     tag: u32,
     payload: &[u64],
     bits: usize,
     flit_width: u32,
-) -> Vec<Flit> {
+    out: &mut Vec<Flit>,
+) {
     assert!(flit_width >= 1 && flit_width <= 64);
     assert!(bits <= payload.len() * 64, "payload shorter than declared bits");
     let w = flit_width as usize;
     let nflits = bits.div_ceil(w).max(1);
-    let mut flits = Vec::with_capacity(nflits);
+    out.reserve(nflits);
     for i in 0..nflits {
         let lo = i * w;
         let n = w.min(bits.saturating_sub(lo)).max(0);
@@ -67,7 +80,7 @@ pub fn packetize(
                 chunk |= 1 << b;
             }
         }
-        flits.push(Flit {
+        out.push(Flit {
             src,
             dst,
             vc: 0,
@@ -78,6 +91,20 @@ pub fn packetize(
             injected_at: 0,
         });
     }
+}
+
+/// Allocating convenience wrapper around [`packetize_into`] (tests,
+/// host-side setup code).
+pub fn packetize(
+    src: NodeId,
+    dst: NodeId,
+    tag: u32,
+    payload: &[u64],
+    bits: usize,
+    flit_width: u32,
+) -> Vec<Flit> {
+    let mut flits = Vec::new();
+    packetize_into(src, dst, tag, payload, bits, flit_width, &mut flits);
     flits
 }
 
@@ -145,6 +172,24 @@ mod tests {
             prop::assert_prop(back == masked, format!("bits={bits} width={width}"))
         });
         let _ = rng.next_u64();
+    }
+
+    #[test]
+    fn packetize_into_appends_and_reuses_capacity() {
+        let mut buf = Vec::new();
+        packetize_into(0, 1, 7, &[0xAAAA], 16, 16, &mut buf);
+        assert_eq!(buf.len(), 1);
+        // A second message appends after the first.
+        packetize_into(0, 2, 8, &[0xBBBB_CCCC], 32, 16, &mut buf);
+        assert_eq!(buf.len(), 3);
+        assert_eq!(buf[0].data, 0xAAAA);
+        assert_eq!((buf[1].data, buf[2].data), (0xCCCC, 0xBBBB));
+        // Clearing keeps capacity — the scratch-buffer reuse pattern.
+        let cap = buf.capacity();
+        buf.clear();
+        packetize_into(0, 1, 9, &[1, 2, 3], 192, 16, &mut buf);
+        assert_eq!(buf.len(), 12);
+        assert!(buf.capacity() >= cap);
     }
 
     #[test]

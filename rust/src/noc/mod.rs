@@ -134,6 +134,12 @@ impl NocConfig {
         if self.buffer_depth == 0 {
             return Err("buffer_depth must be >= 1 (Peek flow control needs a buffer)".into());
         }
+        if self.buffer_depth > u16::MAX as usize {
+            return Err(format!(
+                "buffer_depth {} exceeds the flit arena's 16-bit ring index",
+                self.buffer_depth
+            ));
+        }
         if self.num_vcs == 0 {
             return Err("num_vcs must be >= 1".into());
         }
@@ -173,6 +179,8 @@ mod tests {
         assert!(wide.validate().is_err());
         let vcs = NocConfig { num_vcs: 5, ..NocConfig::paper() };
         assert!(vcs.validate().is_err());
+        let deep = NocConfig { buffer_depth: 1 << 17, ..NocConfig::paper() };
+        assert!(deep.validate().is_err(), "arena ring index is 16-bit");
     }
 
     #[test]

@@ -27,21 +27,56 @@
 use std::collections::VecDeque;
 
 use super::engine::{ActiveSet, Stalled};
-use super::flit::{Flit, NodeId};
-use super::router::{InputPort, OutputPort, Router};
+use super::flit::{packetize_into, Flit, NodeId};
+use super::router::{OutputPort, Router};
 use super::stats::NetStats;
-use super::topology::{PortDest, TopoGraph, Topology};
+use super::topology::{Hop, PortDest, RoutePlan, TopoGraph, Topology};
 use super::{Allocator, NocConfig, SimEngine};
 use crate::serdes::{wire_bits, SerdesChannel, SerdesConfig};
+
+/// One input-VC FIFO of the flat flit arena: a fixed-capacity ring of
+/// `buffer_depth` slots. Capacity is a build-time constant — Peek flow
+/// control bounds occupancy to the credit count, which equals the depth —
+/// so rings never grow and never allocate.
+#[derive(Clone, Copy, Debug, Default)]
+struct VcRing {
+    /// Index of the oldest flit within the slab, `0..depth`.
+    head: u16,
+    /// Buffered flits, `0..=depth`.
+    len: u16,
+}
 
 /// A built, steppable NoC.
 pub struct Network {
     pub(super) cfg: NocConfig,
     pub(super) topo: TopoGraph,
+    /// Precomputed flat route table (see [`RoutePlan`]); looked up once
+    /// per flit arrival, never inside the allocator.
+    routes: RoutePlan,
     pub(super) routers: Vec<Router>,
+    /// Flat per-network flit arena: the input VC ring of (router `r`,
+    /// port `p`, VC `v`) occupies slots `[slab * depth, (slab+1) * depth)`
+    /// where `slab = vc_base[r] + p * num_vcs + v` — one contiguous
+    /// allocation holds every buffered flit in the fabric, and a router's
+    /// whole VC state is adjacent in memory.
+    flit_buf: Vec<Flit>,
+    /// Packed [`Hop`] for each occupied arena slot, computed when the
+    /// flit lands (routing is pure in (router, src, dst), so the stored
+    /// value can never go stale). Parallel to `flit_buf` so the allocator
+    /// stage-1 scan touches only ring metadata and 2-byte hops.
+    hop_buf: Vec<u16>,
+    /// Ring head/len per VC slab.
+    rings: Vec<VcRing>,
+    /// First VC-slab index of each router.
+    vc_base: Vec<u32>,
+    /// `cfg.buffer_depth`, cached for slot arithmetic.
+    vc_depth: usize,
     /// Per-endpoint unbounded source queues (the PE distributor pushes
     /// here; the NI drains one flit per cycle).
     pub(super) src_q: Vec<VecDeque<Flit>>,
+    /// Total flits across all source queues — kept in sync by
+    /// `inject`/`inject_ni` so [`Network::pending`] is O(1).
+    queued_src: usize,
     /// Per-endpoint eject queues (the PE collector drains these).
     pub(super) eject_q: Vec<VecDeque<Flit>>,
     /// NI peek credits into the router-local input port, per VC.
@@ -54,6 +89,13 @@ pub struct Network {
     pub(super) scratch_req: Vec<(usize, usize, usize, u8)>,
     /// Scratch: stage-2 grants (no per-cycle allocation in the hot loop).
     pub(super) scratch_grant: Vec<(usize, usize, usize, u8)>,
+    /// Scratch: per-input head request for the output-first allocator,
+    /// `(vc, out_port, out_vc, valid)`.
+    scratch_in: Vec<(usize, usize, u8, bool)>,
+    /// Scratch: inputs already granted this cycle (output-first stage 2).
+    scratch_taken: Vec<bool>,
+    /// Scratch: packetization buffer for [`Network::send_message`].
+    pkt_scratch: Vec<Flit>,
     /// Flits buffered in each router's input VCs (skip idle routers).
     pub(super) occupancy: Vec<u32>,
     /// Latched output flits per router (skip idle routers in delivery).
@@ -88,14 +130,15 @@ impl Network {
     /// partitioner, which rewrites graphs).
     pub fn from_graph(topo: TopoGraph, mut cfg: NocConfig) -> Self {
         cfg.num_vcs = cfg.num_vcs.max(topo.min_vcs);
-        let routers = topo
+        assert!(
+            cfg.buffer_depth <= u16::MAX as usize,
+            "buffer_depth {} exceeds the arena ring index width",
+            cfg.buffer_depth
+        );
+        let routers: Vec<Router> = topo
             .ports
             .iter()
             .map(|ports| Router {
-                inputs: ports
-                    .iter()
-                    .map(|_| InputPort::new(cfg.num_vcs, cfg.buffer_depth))
-                    .collect(),
                 outputs: ports
                     .iter()
                     .map(|pd| match pd {
@@ -110,13 +153,29 @@ impl Network {
                 rr_vc: vec![0; ports.len()],
             })
             .collect();
+        // Carve the flat arena: one slab of `buffer_depth` slots per
+        // (router, input port, VC), routers laid out back to back.
+        let mut vc_base = Vec::with_capacity(topo.n_routers);
+        let mut total_slabs = 0usize;
+        for ports in &topo.ports {
+            vc_base.push(total_slabs as u32);
+            total_slabs += ports.len() * cfg.num_vcs;
+        }
         let n_eps = topo.n_endpoints;
         let n_routers = topo.n_routers;
         let serdes = topo.ports.iter().map(|p| vec![None; p.len()]).collect();
+        let routes = topo.route_plan();
         Network {
             cfg,
+            routes,
             routers,
+            flit_buf: vec![Flit::single(0, 0, 0, 0); total_slabs * cfg.buffer_depth],
+            hop_buf: vec![0; total_slabs * cfg.buffer_depth],
+            rings: vec![VcRing::default(); total_slabs],
+            vc_base,
+            vc_depth: cfg.buffer_depth,
             src_q: vec![VecDeque::new(); n_eps],
+            queued_src: 0,
             eject_q: vec![VecDeque::new(); n_eps],
             ni_credits: vec![vec![cfg.buffer_depth as u32; cfg.num_vcs]; n_eps],
             topo,
@@ -125,6 +184,9 @@ impl Network {
             stats: NetStats::default(),
             scratch_req: Vec::new(),
             scratch_grant: Vec::new(),
+            scratch_in: Vec::new(),
+            scratch_taken: Vec::new(),
+            pkt_scratch: Vec::new(),
             occupancy: vec![0; n_routers],
             latched: vec![0; n_routers],
             has_serdes: vec![false; n_routers],
@@ -135,6 +197,47 @@ impl Network {
             sweep: Vec::new(),
             moves: 0,
         }
+    }
+
+    // -- flat flit arena ----------------------------------------------------
+
+    /// VC-slab index of (router, input port, VC).
+    #[inline]
+    fn vc_slab(&self, r: usize, port: usize, vc: usize) -> usize {
+        self.vc_base[r] as usize + port * self.cfg.num_vcs + vc
+    }
+
+    /// Append a flit (and its precomputed hop) to a VC ring.
+    #[inline]
+    fn vc_push(&mut self, slab: usize, flit: Flit, hop: Hop) {
+        let ring = self.rings[slab];
+        debug_assert!(
+            (ring.len as usize) < self.vc_depth,
+            "VC ring overfull (credit protocol violated)"
+        );
+        let slot = slab * self.vc_depth
+            + (ring.head as usize + ring.len as usize) % self.vc_depth;
+        self.flit_buf[slot] = flit;
+        self.hop_buf[slot] = hop.pack();
+        self.rings[slab].len = ring.len + 1;
+    }
+
+    /// Pop the head flit of a VC ring.
+    #[inline]
+    fn vc_pop(&mut self, slab: usize) -> Flit {
+        let ring = self.rings[slab];
+        debug_assert!(ring.len > 0, "pop from empty VC ring");
+        let slot = slab * self.vc_depth + ring.head as usize;
+        self.rings[slab].head = ((ring.head as usize + 1) % self.vc_depth) as u16;
+        self.rings[slab].len = ring.len - 1;
+        self.flit_buf[slot]
+    }
+
+    /// The head flit's routing decision (ring must be non-empty).
+    #[inline]
+    fn vc_head_hop(&self, slab: usize) -> Hop {
+        debug_assert!(self.rings[slab].len > 0);
+        Hop::unpack(self.hop_buf[slab * self.vc_depth + self.rings[slab].head as usize])
     }
 
     /// Replace the on-chip link leaving `(router, port)` with a
@@ -189,10 +292,12 @@ impl Network {
         flit.src = e;
         self.stats.injected += 1;
         self.src_q[e].push_back(flit);
+        self.queued_src += 1;
         self.ni_set.insert(e);
     }
 
     /// Packetize `payload` (`bits` meaningful bits) into flits and inject.
+    /// Uses a persistent scratch buffer — no allocation after warm-up.
     pub fn send_message(
         &mut self,
         src: NodeId,
@@ -201,10 +306,12 @@ impl Network {
         payload: &[u64],
         bits: usize,
     ) {
-        for f in super::flit::packetize(src, dst, tag, payload, bits, self.cfg.flit_data_width)
-        {
+        let mut scratch = std::mem::take(&mut self.pkt_scratch);
+        packetize_into(src, dst, tag, payload, bits, self.cfg.flit_data_width, &mut scratch);
+        for f in scratch.drain(..) {
             self.inject(src, f);
         }
+        self.pkt_scratch = scratch;
     }
 
     /// Pop the next ejected flit at endpoint `e`, if any.
@@ -217,12 +324,21 @@ impl Network {
         self.eject_q[e].len()
     }
 
-    /// Flits not yet delivered (source queues + in-network).
+    /// Flits not yet delivered (source queues + in-network). O(1): the
+    /// source-queue total is maintained by `inject`/`inject_ni` instead
+    /// of summing every endpoint's queue on every `run_until_idle` cycle.
+    #[inline]
     pub fn pending(&self) -> usize {
-        self.in_network + self.src_q.iter().map(|q| q.len()).sum::<usize>()
+        debug_assert_eq!(
+            self.queued_src,
+            self.src_q.iter().map(|q| q.len()).sum::<usize>(),
+            "queued_src counter out of sync"
+        );
+        self.in_network + self.queued_src
     }
 
     /// True when no flit is queued at any NI or inside the network.
+    #[inline]
     pub fn idle(&self) -> bool {
         self.pending() == 0
     }
@@ -314,6 +430,7 @@ impl Network {
 
     /// Deliver router `r`'s latched/serialized flits (one phase-1 body;
     /// both engines call this).
+    #[inline]
     pub(super) fn deliver_router(&mut self, r: usize) {
         for p in 0..self.routers[r].outputs.len() {
             // Quasi-SERDES link: the channel sits between the latch and
@@ -363,11 +480,16 @@ impl Network {
     }
 
     /// Land `flit` in the downstream input buffer, keeping the occupancy
-    /// counter and the allocation worklist in sync.
+    /// counter and the allocation worklist in sync. The routing decision
+    /// for the flit's stay at `router` is made HERE — one route-table
+    /// lookup per arrival — so the allocator never routes.
+    #[inline]
     fn buffer_flit(&mut self, router: usize, port: usize, flit: Flit) {
+        let hop = self.routes.hop(&self.topo, router, flit.src, flit.dst);
         self.occupancy[router] += 1;
         self.alloc_set.insert(router);
-        self.routers[router].inputs[port].vcs[flit.vc as usize].push_back(flit);
+        let slab = self.vc_slab(router, port, flit.vc as usize);
+        self.vc_push(slab, flit, hop);
     }
 
     // -- phase 2 ------------------------------------------------------------
@@ -380,6 +502,7 @@ impl Network {
 
     /// Inject at most one flit from endpoint `e`'s source queue (one
     /// phase-2 body; both engines call this).
+    #[inline]
     pub(super) fn inject_ni(&mut self, e: usize) {
         if self.src_q[e].is_empty() {
             return;
@@ -389,6 +512,7 @@ impl Network {
             return;
         }
         let mut flit = self.src_q[e].pop_front().unwrap();
+        self.queued_src -= 1;
         flit.vc = vc as u8;
         let (r, p) = self.topo.endpoint_attach[e];
         self.ni_credits[e][vc] -= 1;
@@ -411,6 +535,7 @@ impl Network {
 
     /// Run the configured allocator on router `r` (one phase-3 body; both
     /// engines call this).
+    #[inline]
     pub(super) fn allocate_router(&mut self, r: usize) {
         match self.cfg.allocator {
             Allocator::SeparableInputFirstRR => self.allocate_input_first(r, true),
@@ -422,25 +547,19 @@ impl Network {
     /// Stage 1: each input nominates one (vc, out_port, out_vc) request.
     /// Stage 2: each output grants one requesting input (RR or fixed).
     fn allocate_input_first(&mut self, r: usize, round_robin: bool) {
-        let n_ports = self.routers[r].inputs.len();
+        let n_ports = self.routers[r].rr_vc.len();
         self.scratch_req.clear();
         for i in 0..n_ports {
             let start = if round_robin { self.routers[r].rr_vc[i] } else { 0 };
             let n_vcs = self.cfg.num_vcs;
             for k in 0..n_vcs {
                 let v = (start + k) % n_vcs;
-                let Some(head) = self.routers[r].inputs[i].vcs[v].front() else {
+                let slab = self.vc_slab(r, i, v);
+                if self.rings[slab].len == 0 {
                     continue;
-                };
-                // Memoized: a blocked head's route never changes.
-                let hop = match self.routers[r].inputs[i].head_hop[v] {
-                    Some(h) => h,
-                    None => {
-                        let h = self.topo.route(r, head.src, head.dst);
-                        self.routers[r].inputs[i].head_hop[v] = Some(h);
-                        h
-                    }
-                };
+                }
+                // The hop was precomputed when the head flit arrived.
+                let hop = self.vc_head_hop(slab);
                 if self.routers[r].outputs[hop.port].ready(hop.vc) {
                     self.scratch_req.push((i, v, hop.port, hop.vc));
                     break;
@@ -487,62 +606,65 @@ impl Network {
     /// Output-first separable variant (ablation): outputs scan inputs in
     /// RR order and claim the first input whose head flit targets them;
     /// an input may be granted by at most one output.
+    ///
+    /// Requests are indexed by input in a persistent scratch slot array
+    /// and granted inputs tracked in a persistent mask, so the stage-2
+    /// scan is O(outputs × inputs) with zero per-cycle allocation
+    /// (previously a fresh `vec![false; n_ports]` plus an O(n³) nested
+    /// search over the request list, every router, every cycle).
     fn allocate_output_first(&mut self, r: usize) {
-        let n_ports = self.routers[r].inputs.len();
-        // Precompute each input's head request (first non-empty VC, RR).
-        self.scratch_req.clear();
+        let n_ports = self.routers[r].rr_vc.len();
+        let n_vcs = self.cfg.num_vcs;
+        // Stage 1: each input's head request (first non-empty VC, RR).
+        self.scratch_in.clear();
+        self.scratch_in.resize(n_ports, (0, 0, 0, false));
+        self.scratch_taken.clear();
+        self.scratch_taken.resize(n_ports, false);
         for i in 0..n_ports {
             let start = self.routers[r].rr_vc[i];
-            let n_vcs = self.cfg.num_vcs;
             for k in 0..n_vcs {
                 let v = (start + k) % n_vcs;
-                let Some(head) = self.routers[r].inputs[i].vcs[v].front() else {
+                let slab = self.vc_slab(r, i, v);
+                if self.rings[slab].len == 0 {
                     continue;
-                };
-                let hop = match self.routers[r].inputs[i].head_hop[v] {
-                    Some(h) => h,
-                    None => {
-                        let h = self.topo.route(r, head.src, head.dst);
-                        self.routers[r].inputs[i].head_hop[v] = Some(h);
-                        h
-                    }
-                };
-                self.scratch_req.push((i, v, hop.port, hop.vc));
+                }
+                let hop = self.vc_head_hop(slab);
+                self.scratch_in[i] = (v, hop.port, hop.vc, true);
                 break;
             }
         }
-        let reqs = std::mem::take(&mut self.scratch_req);
-        let mut input_taken = vec![false; n_ports];
+        // Stage 2: each output takes the first requesting input in RR
+        // order that is still free and whose target VC has space.
         for o in 0..n_ports {
             let rr = self.routers[r].outputs[o].rr_input;
-            let pick = (0..n_ports)
-                .map(|k| (rr + k) % n_ports)
-                .filter_map(|i| {
-                    reqs.iter()
-                        .find(|(ri, _, op, ov)| {
-                            *ri == i
-                                && *op == o
-                                && !input_taken[i]
-                                && self.routers[r].outputs[o].ready(*ov)
-                        })
-                        .copied()
-                })
-                .next();
+            let mut pick = None;
+            for k in 0..n_ports {
+                let i = (rr + k) % n_ports;
+                let (v, op, ov, valid) = self.scratch_in[i];
+                if valid
+                    && op == o
+                    && !self.scratch_taken[i]
+                    && self.routers[r].outputs[o].ready(ov)
+                {
+                    pick = Some((i, v, op, ov));
+                    break;
+                }
+            }
             if let Some((i, v, op, ov)) = pick {
-                input_taken[i] = true;
+                self.scratch_taken[i] = true;
                 self.commit_move(r, i, v, op, ov);
                 self.routers[r].outputs[o].rr_input = (i + 1) % n_ports;
-                self.routers[r].rr_vc[i] = (v + 1) % self.cfg.num_vcs;
+                self.routers[r].rr_vc[i] = (v + 1) % n_vcs;
             }
         }
-        self.scratch_req = reqs;
     }
 
     /// Move the head flit of (router r, input i, vc v) to output latch
     /// (op, ov), returning a peek credit upstream.
+    #[inline]
     fn commit_move(&mut self, r: usize, i: usize, v: usize, op: usize, ov: u8) {
-        let mut flit = self.routers[r].inputs[i].vcs[v].pop_front().unwrap();
-        self.routers[r].inputs[i].head_hop[v] = None; // next head re-routes
+        let slab = self.vc_slab(r, i, v);
+        let mut flit = self.vc_pop(slab);
         self.occupancy[r] -= 1;
         self.latched[r] += 1;
         self.deliver_set.insert(r);
@@ -559,8 +681,44 @@ impl Network {
             self.routers[r].outputs[op].credits[ov as usize] -= 1;
         }
         flit.vc = ov;
-        debug_assert!(self.routers[r].outputs[op].latch.is_none());
+        #[cfg(debug_assertions)]
+        self.check_latch_free(r, op);
         self.routers[r].outputs[op].latch = Some(flit);
+    }
+
+    /// Debug-build invariant: the allocator must never write an occupied
+    /// output latch — a double write would silently drop a flit in
+    /// flight. Stage-1's `ready()` check makes this structurally
+    /// impossible; this typed check documents and enforces it in debug
+    /// builds at zero release-mode cost.
+    #[cfg(debug_assertions)]
+    #[inline]
+    fn check_latch_free(&self, router: usize, port: usize) {
+        if self.routers[router].outputs[port].latch.is_some() {
+            panic!("{}", LatchOverwrite { router, port, cycle: self.cycle });
+        }
+    }
+}
+
+/// Diagnostic payload of the debug-build latch invariant (see
+/// `Network::check_latch_free`).
+#[cfg(debug_assertions)]
+#[derive(Clone, Copy, Debug)]
+struct LatchOverwrite {
+    router: usize,
+    port: usize,
+    cycle: u64,
+}
+
+#[cfg(debug_assertions)]
+impl std::fmt::Display for LatchOverwrite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "output latch double-write at router {} port {} in cycle {} — \
+             allocator granted an occupied latch (flit would be dropped)",
+            self.router, self.port, self.cycle
+        )
     }
 }
 
@@ -737,6 +895,56 @@ mod tests {
         }
         n.run_until_idle(100_000).unwrap();
         assert_eq!(n.stats().delivered, 15 * 8);
+    }
+
+    #[test]
+    fn vc_rings_wrap_around_their_fixed_capacity() {
+        // Drive one ring through several full fill/drain cycles so the
+        // head index wraps: contents must stay FIFO and hops intact.
+        let mut n = net(Topology::Mesh { w: 2, h: 2 });
+        let depth = n.vc_depth;
+        let slab = n.vc_slab(1, 2, 0);
+        let mut next_tag = 0u32;
+        for round in 0..3 {
+            // Partially fill, partially drain, to misalign head from 0.
+            let fill = depth - round.min(depth - 1);
+            for _ in 0..fill {
+                let f = Flit::single(0, 3, next_tag, next_tag as u64);
+                n.vc_push(slab, f, Hop { port: 1, vc: 0 });
+                next_tag += 1;
+            }
+            assert_eq!(n.rings[slab].len as usize, fill);
+            assert_eq!(n.vc_head_hop(slab), Hop { port: 1, vc: 0 });
+            let mut prev = None;
+            for _ in 0..fill {
+                let f = n.vc_pop(slab);
+                if let Some(p) = prev {
+                    assert!(f.tag == p + 1, "FIFO order broken across wrap");
+                }
+                prev = Some(f.tag);
+            }
+            assert_eq!(n.rings[slab].len, 0);
+        }
+    }
+
+    #[test]
+    fn arena_is_one_contiguous_slab_per_network() {
+        // Layout guarantee the perf work relies on: every (router, port,
+        // vc) ring maps into the single arena without overlap.
+        let n = net(Topology::Torus { w: 3, h: 3 });
+        let mut seen = vec![false; n.rings.len()];
+        for r in 0..n.topo.n_routers {
+            for p in 0..n.topo.ports[r].len() {
+                for v in 0..n.cfg.num_vcs {
+                    let slab = n.vc_slab(r, p, v);
+                    assert!(!seen[slab], "slab collision at ({r},{p},{v})");
+                    seen[slab] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "arena has unreachable slabs");
+        assert_eq!(n.flit_buf.len(), n.rings.len() * n.vc_depth);
+        assert_eq!(n.hop_buf.len(), n.flit_buf.len());
     }
 
     #[test]

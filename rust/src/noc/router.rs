@@ -1,6 +1,5 @@
-//! Router state: per-input virtual-channel flit buffers, per-output link
-//! latches and peek/credit counters, and round-robin pointers for the
-//! separable allocator.
+//! Router state: per-output link latches, peek/credit counters, and
+//! round-robin pointers for the separable allocator.
 //!
 //! The microarchitecture follows CONNECT's input-queued router: each input
 //! port has `num_vcs` FIFOs of `buffer_depth` flits; each output port
@@ -9,35 +8,14 @@
 //! zero-latency credit counters — the sender combinationally *peeks* the
 //! receiver's free space, which is exactly what immediate credit return
 //! computes.
-
-use std::collections::VecDeque;
+//!
+//! The input-side flit storage itself does **not** live here: all input
+//! VC FIFOs of all routers are fixed-capacity rings carved out of one
+//! flat per-network arena (see `network.rs`), so a router's buffered
+//! flits are contiguous in memory and the steady-state loop allocates
+//! nothing. This struct keeps only the output-side and arbitration state.
 
 use super::flit::Flit;
-use super::topology::Hop;
-
-/// One input port: a flit FIFO per virtual channel.
-#[derive(Clone, Debug)]
-pub(crate) struct InputPort {
-    pub vcs: Vec<VecDeque<Flit>>,
-    /// Memoized routing decision for the current head flit of each VC
-    /// (route computation is pure in (router, src, dst), so a blocked
-    /// head's hop never changes; invalidated when the head is popped).
-    pub head_hop: Vec<Option<Hop>>,
-}
-
-impl InputPort {
-    pub fn new(num_vcs: usize, depth: usize) -> Self {
-        InputPort {
-            vcs: (0..num_vcs).map(|_| VecDeque::with_capacity(depth)).collect(),
-            head_hop: vec![None; num_vcs],
-        }
-    }
-
-    #[allow(dead_code)] // diagnostics helper
-    pub fn is_empty(&self) -> bool {
-        self.vcs.iter().all(|q| q.is_empty())
-    }
-}
 
 /// One output port: the link latch (flit in flight this cycle) plus the
 /// peek/credit view of the downstream input buffer.
@@ -67,22 +45,14 @@ impl OutputPort {
     }
 }
 
-/// Router state. Allocation logic lives in [`super::network::Network`]
-/// (it needs the topology and neighboring routers for peek credits).
+/// Router state. Allocation logic and the input-buffer arena live in
+/// [`super::network::Network`] (allocation needs the topology and
+/// neighboring routers for peek credits).
 #[derive(Clone, Debug)]
 pub(crate) struct Router {
-    pub inputs: Vec<InputPort>,
     pub outputs: Vec<OutputPort>,
     /// Round-robin pointer over VCs, per input (stage-1 selection).
     pub rr_vc: Vec<usize>,
-}
-
-impl Router {
-    #[allow(dead_code)] // diagnostics helper
-    pub fn is_empty(&self) -> bool {
-        self.inputs.iter().all(|i| i.is_empty())
-            && self.outputs.iter().all(|o| o.latch.is_none())
-    }
 }
 
 #[cfg(test)]
@@ -99,13 +69,5 @@ mod tests {
         // Endpoint-facing port: no credit vector, latch-only.
         let e = OutputPort::new(vec![]);
         assert!(e.ready(0) && e.ready(3));
-    }
-
-    #[test]
-    fn input_port_empty_tracking() {
-        let mut p = InputPort::new(2, 4);
-        assert!(p.is_empty());
-        p.vcs[1].push_back(Flit::single(0, 1, 0, 0));
-        assert!(!p.is_empty());
     }
 }

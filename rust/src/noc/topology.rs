@@ -410,6 +410,67 @@ pub struct Hop {
     pub vc: u8,
 }
 
+impl Hop {
+    /// Pack into 16 bits: port in bits 2.., VC in bits 0..2 (the flit
+    /// header's 2-bit VC field, see [`super::NocConfig::validate`]).
+    #[inline]
+    pub(crate) fn pack(self) -> u16 {
+        debug_assert!(self.port < (1 << 14) && self.vc < 4);
+        ((self.port as u16) << 2) | self.vc as u16
+    }
+
+    #[inline]
+    pub(crate) fn unpack(x: u16) -> Hop {
+        Hop { port: (x >> 2) as usize, vc: (x & 3) as u8 }
+    }
+}
+
+/// Precomputed routing, built once per network at
+/// [`crate::noc::Network::from_graph`] so the simulation hot loop never
+/// re-derives a hop: one flat-array lookup per flit *arrival* (the hop is
+/// stored next to the flit in the input-buffer arena), zero per
+/// allocation attempt.
+///
+/// The table shape follows what the routing function actually depends on:
+///
+/// * **`PerDst`** — mesh XY and single-link up*/down* ignore the flit
+///   source, so `[router][dst]` suffices (the shape `RouteKind::UpDown`
+///   already had, flattened and packed).
+/// * **`PerSrcDst`** — ring/torus dateline VCs and multi-link fat-tree
+///   spreading key on the source too; small fabrics get the full cube.
+/// * **`Compute`** — fabrics past [`RoutePlan::TABLE_CAP`] entries fall
+///   back to [`TopoGraph::route`] (still once per arrival, never per
+///   allocation attempt).
+///
+/// Every entry is filled from [`TopoGraph::route`], so a plan lookup is
+/// *definitionally* bit-identical to the reference routing function.
+#[derive(Clone, Debug)]
+pub(crate) enum RoutePlan {
+    /// `hops[cur * n_eps + dst]`, packed [`Hop`]s.
+    PerDst { n_eps: usize, hops: Vec<u16> },
+    /// `hops[(cur * n_eps + src) * n_eps + dst]`, packed [`Hop`]s.
+    PerSrcDst { n_eps: usize, hops: Vec<u16> },
+    /// Too large to tabulate: delegate to [`TopoGraph::route`].
+    Compute,
+}
+
+impl RoutePlan {
+    /// Largest table materialized (entries of 2 bytes → ≤ 8 MiB).
+    const TABLE_CAP: usize = 1 << 22;
+
+    /// The hop for a `src → dst` flit currently buffered at router `cur`.
+    #[inline]
+    pub(crate) fn hop(&self, g: &TopoGraph, cur: usize, src: usize, dst: usize) -> Hop {
+        match self {
+            RoutePlan::PerDst { n_eps, hops } => Hop::unpack(hops[cur * n_eps + dst]),
+            RoutePlan::PerSrcDst { n_eps, hops } => {
+                Hop::unpack(hops[(cur * n_eps + src) * n_eps + dst])
+            }
+            RoutePlan::Compute => g.route(cur, src, dst),
+        }
+    }
+}
+
 impl TopoGraph {
     /// Router an endpoint attaches to.
     pub fn endpoint_router(&self, e: usize) -> usize {
@@ -472,6 +533,45 @@ impl TopoGraph {
                 let h = hash2(src as u64, dst as u64) as usize;
                 Hop { port: choices[h % choices.len()] as usize, vc: 0 }
             }
+        }
+    }
+
+    /// Build the precomputed [`RoutePlan`] for this graph (see its docs
+    /// for the shape selection). Pure function of the graph, so it can be
+    /// rebuilt at any time and always agrees with [`TopoGraph::route`].
+    pub(crate) fn route_plan(&self) -> RoutePlan {
+        let (n, e) = (self.n_routers, self.n_endpoints);
+        let src_independent = match &self.kind {
+            // XY ignores the source entirely.
+            RouteKind::Mesh { .. } => true,
+            // Up*/down* spreads over parallel links by a src⊕dst hash;
+            // with single links everywhere the hash picks index 0 always.
+            RouteKind::UpDown { next_ports } => {
+                next_ports.iter().flatten().all(|c| c.len() == 1)
+            }
+            // Ring/torus dateline VCs depend on the source router.
+            RouteKind::Ring { .. } | RouteKind::Torus { .. } => false,
+        };
+        if src_independent && n * e <= RoutePlan::TABLE_CAP {
+            let mut hops = Vec::with_capacity(n * e);
+            for cur in 0..n {
+                for dst in 0..e {
+                    hops.push(self.route(cur, 0, dst).pack());
+                }
+            }
+            RoutePlan::PerDst { n_eps: e, hops }
+        } else if n * e * e <= RoutePlan::TABLE_CAP {
+            let mut hops = Vec::with_capacity(n * e * e);
+            for cur in 0..n {
+                for src in 0..e {
+                    for dst in 0..e {
+                        hops.push(self.route(cur, src, dst).pack());
+                    }
+                }
+            }
+            RoutePlan::PerSrcDst { n_eps: e, hops }
+        } else {
+            RoutePlan::Compute
         }
     }
 
@@ -814,6 +914,59 @@ mod tests {
         assert!(ring > mesh, "ring {ring} vs mesh {mesh}");
         assert!(mesh > torus, "mesh {mesh} vs torus {torus}");
         assert!(torus > ft, "torus {torus} vs fat tree {ft}");
+    }
+
+    #[test]
+    fn route_plan_agrees_with_route_everywhere() {
+        // The precomputed plan must be a pure tabulation of `route`:
+        // every (router, src, dst) triple, every topology family.
+        for t in all_topos() {
+            let g = t.build();
+            let plan = g.route_plan();
+            for cur in 0..g.n_routers {
+                for s in 0..g.n_endpoints {
+                    for d in 0..g.n_endpoints {
+                        assert_eq!(
+                            plan.hop(&g, cur, s, d),
+                            g.route(cur, s, d),
+                            "{t:?} at router {cur}, {s}->{d}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_plan_shapes_match_routing_dependencies() {
+        // Mesh is src-independent; ring/torus need the source (dateline);
+        // fat trees with parallel up-links need it too (hash spreading).
+        assert!(matches!(
+            (Topology::Mesh { w: 4, h: 4 }).build().route_plan(),
+            RoutePlan::PerDst { .. }
+        ));
+        assert!(matches!(
+            Topology::Ring(8).build().route_plan(),
+            RoutePlan::PerSrcDst { .. }
+        ));
+        assert!(matches!(
+            (Topology::Torus { w: 4, h: 4 }).build().route_plan(),
+            RoutePlan::PerSrcDst { .. }
+        ));
+        assert!(matches!(
+            Topology::fat_tree(64).build().route_plan(),
+            RoutePlan::PerSrcDst { .. }
+        ));
+    }
+
+    #[test]
+    fn hop_packing_roundtrips() {
+        for port in [0usize, 1, 5, 100, (1 << 14) - 1] {
+            for vc in 0u8..4 {
+                let h = Hop { port, vc };
+                assert_eq!(Hop::unpack(h.pack()), h);
+            }
+        }
     }
 
     #[test]

@@ -54,6 +54,11 @@ pub struct Collector {
     flit_width: u32,
     fifos: Vec<VecDeque<ArgMessage>>,
     partial: HashMap<(usize, u8, u32), Partial>,
+    /// Recycled word buffers: spent argument payloads and duplicate
+    /// bitmaps return here and seed the next reassembly — steady-state
+    /// message traffic allocates nothing (the hardware analogue: input
+    /// memory modules are fixed BRAM, "known a priori", §II-B-1).
+    pool: Vec<Vec<u64>>,
     /// Completed messages delivered (stats).
     pub messages: u64,
 }
@@ -66,6 +71,7 @@ impl Collector {
             flit_width,
             fifos: (0..n).map(|_| VecDeque::new()).collect(),
             partial: HashMap::new(),
+            pool: Vec::new(),
             messages: 0,
         }
     }
@@ -90,11 +96,13 @@ impl Collector {
         let w = self.flit_width as usize;
         let nwords = bits.div_ceil(64).max(1);
         let key = (f.src, arg, epoch);
-        let entry = self.partial.entry(key).or_insert_with(|| Partial {
-            payload: vec![0u64; nwords],
+        // Split borrows so `entry` can pull pooled buffers in one lookup.
+        let Collector { partial, pool, fifos, messages, .. } = self;
+        let entry = partial.entry(key).or_insert_with(|| Partial {
+            payload: crate::util::pooled_words(pool, nwords),
             received: 0,
             expected: None,
-            seen: vec![0u64; (bits.div_ceil(w).max(1)).div_ceil(64)],
+            seen: crate::util::pooled_words(pool, (bits.div_ceil(w).max(1)).div_ceil(64)),
         });
         let s = f.seq as usize;
         let (word, bit) = (s / 64, s % 64);
@@ -116,9 +124,10 @@ impl Collector {
             }
         }
         if entry.expected == Some(entry.received) {
-            let done = self.partial.remove(&key).unwrap();
-            self.messages += 1;
-            self.fifos[arg as usize].push_back(ArgMessage {
+            let done = partial.remove(&key).unwrap();
+            pool.push(done.seen);
+            *messages += 1;
+            fifos[arg as usize].push_back(ArgMessage {
                 epoch,
                 src: f.src,
                 payload: done.payload,
@@ -131,14 +140,30 @@ impl Collector {
         self.fifos.iter().all(|f| !f.is_empty())
     }
 
+    /// Pop one message per argument into `out` (cleared first; call only
+    /// when [`Collector::ready`]). Returns the epoch of argument 0. This
+    /// is the zero-allocation form: the wrapper reuses one scratch `Vec`
+    /// and hands spent payloads back via [`Collector::recycle`].
+    pub fn take_into(&mut self, out: &mut Vec<ArgMessage>) -> u32 {
+        debug_assert!(self.ready());
+        out.clear();
+        out.extend(self.fifos.iter_mut().map(|f| f.pop_front().unwrap()));
+        out.first().map(|a| a.epoch).unwrap_or(0)
+    }
+
     /// Pop one message per argument (call only when [`Collector::ready`]).
     /// Returns the argument values and the epoch of argument 0.
+    /// Allocating wrapper around [`Collector::take_into`].
     pub fn take(&mut self) -> (Vec<ArgMessage>, u32) {
-        debug_assert!(self.ready());
-        let args: Vec<ArgMessage> =
-            self.fifos.iter_mut().map(|f| f.pop_front().unwrap()).collect();
-        let epoch = args.first().map(|a| a.epoch).unwrap_or(0);
+        let mut args = Vec::new();
+        let epoch = self.take_into(&mut args);
         (args, epoch)
+    }
+
+    /// Return a consumed argument's payload buffer to the reassembly
+    /// pool (steady-state loop: flits → partial → FIFO → PE → pool).
+    pub fn recycle(&mut self, msg: ArgMessage) {
+        self.pool.push(msg.payload);
     }
 
     /// Messages queued for argument `arg`.
@@ -239,6 +264,27 @@ mod tests {
         assert_eq!(c.take().1, 2);
         assert_eq!(c.take().1, 1);
         assert_eq!(c.take().1, 3);
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_and_rezeroed() {
+        let mut c = Collector::new(vec![32], 16);
+        let mut scratch = Vec::new();
+        for round in 0u32..5 {
+            for f in packetize(0, 1, make_tag(round, 0), &[0xF0F0_0000 + round as u64], 32, 16)
+            {
+                c.accept(f);
+            }
+            let epoch = c.take_into(&mut scratch);
+            assert_eq!(epoch, round);
+            assert_eq!(scratch[0].payload[0], 0xF0F0_0000 + round as u64);
+            for a in scratch.drain(..) {
+                c.recycle(a);
+            }
+        }
+        // After the first round the pool feeds every reassembly; the
+        // recycled buffers must come back zeroed (no stale bits).
+        assert!(c.partial_count() == 0);
     }
 
     #[test]

@@ -22,13 +22,22 @@
 //! The wrapper-generation "script" of §II-B-1 corresponds to
 //! [`wrapper::WrapperSpec`] (interface declaration + resource model) and
 //! `WrappedPe::new` (instantiation).
+//!
+//! ## Sink-style results
+//!
+//! Processors emit results into a [`MsgSink`] instead of returning a
+//! fresh `Vec<OutMessage>` per invocation. The sink pools payload
+//! buffers: the distributor returns each spent payload after
+//! packetization, so a steady-state epoch (an LDPC iteration, a particle
+//! frame, a BMVM round) allocates nothing after warm-up — matching the
+//! hardware, where the output FIFOs are fixed BRAM.
 
 pub mod collector;
 pub mod wrapper;
 
 use std::collections::VecDeque;
 
-use crate::noc::flit::{packetize, NodeId};
+use crate::noc::flit::{packetize_into, Flit, NodeId};
 use crate::noc::Network;
 use collector::{make_tag, ArgMessage, Collector};
 pub use wrapper::WrapperSpec;
@@ -45,16 +54,96 @@ pub struct OutMessage {
 }
 
 impl OutMessage {
-    /// Single-word message helper.
+    /// Single-word message helper (host-side/setup convenience; inside a
+    /// [`Processor`] prefer [`MsgSink::word`], which reuses pooled
+    /// buffers).
     pub fn word(dst: NodeId, arg: u8, epoch: u32, value: u64, bits: usize) -> Self {
         assert!(bits <= 64);
         OutMessage { dst, arg, epoch, payload: vec![value], bits }
     }
 }
 
+/// Where a [`Processor`] deposits its result messages: an ordered queue
+/// with a pool of recycled payload buffers behind it.
+///
+/// The pooled emitters ([`MsgSink::word`], [`MsgSink::message`]) are the
+/// zero-allocation path — after warm-up every payload buffer comes from
+/// the pool and goes back to it once the Data Distributor has packetized
+/// the message.
+#[derive(Debug, Default)]
+pub struct MsgSink {
+    msgs: Vec<OutMessage>,
+    pool: Vec<Vec<u64>>,
+}
+
+impl MsgSink {
+    pub fn new() -> Self {
+        MsgSink::default()
+    }
+
+    /// A zeroed payload buffer of `words` words, reusing pool capacity.
+    fn pooled(&mut self, words: usize) -> Vec<u64> {
+        crate::util::pooled_words(&mut self.pool, words)
+    }
+
+    /// Emit a single-word message (`bits` ≤ 64).
+    pub fn word(&mut self, dst: NodeId, arg: u8, epoch: u32, value: u64, bits: usize) {
+        assert!(bits <= 64);
+        let mut payload = self.pooled(1);
+        payload[0] = value;
+        self.msgs.push(OutMessage { dst, arg, epoch, payload, bits });
+    }
+
+    /// Emit a `bits`-wide message, returning its zeroed payload buffer
+    /// for the caller to fill in place.
+    pub fn message(
+        &mut self,
+        dst: NodeId,
+        arg: u8,
+        epoch: u32,
+        bits: usize,
+    ) -> &mut Vec<u64> {
+        let words = bits.div_ceil(64).max(1);
+        let payload = self.pooled(words);
+        self.msgs.push(OutMessage { dst, arg, epoch, payload, bits });
+        &mut self.msgs.last_mut().unwrap().payload
+    }
+
+    /// Emit an already-built message (allocating path; setup code and
+    /// tests).
+    pub fn push(&mut self, m: OutMessage) {
+        self.msgs.push(m);
+    }
+
+    /// Return a spent payload buffer to the pool (the Data Distributor
+    /// calls this after packetizing each message).
+    pub fn recycle(&mut self, payload: Vec<u64>) {
+        self.pool.push(payload);
+    }
+
+    /// Queued messages not yet drained.
+    pub fn len(&self) -> usize {
+        self.msgs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    /// Drain the queued messages in emission order.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, OutMessage> {
+        self.msgs.drain(..)
+    }
+
+    /// Take the queued messages as a fresh `Vec` (test convenience).
+    pub fn take(&mut self) -> Vec<OutMessage> {
+        std::mem::take(&mut self.msgs)
+    }
+}
+
 /// The *Data processing* module (paper Fig 4c): consumes one message per
-/// input argument, produces result messages. Implementations must be
-/// deterministic.
+/// input argument, emits result messages into the sink. Implementations
+/// must be deterministic.
 pub trait Processor {
     /// Interface declaration (argument/result widths) — the a-priori
     /// storage knowledge the wrapper script needs.
@@ -74,14 +163,12 @@ pub trait Processor {
     }
 
     /// Messages to send unprompted when the system starts (orchestrator /
-    /// source nodes; ordinary PEs return nothing).
-    fn boot(&mut self) -> Vec<OutMessage> {
-        Vec::new()
-    }
+    /// source nodes; ordinary PEs emit nothing).
+    fn boot(&mut self, _out: &mut MsgSink) {}
 
     /// One invocation: `args[i]` is the message consumed from input FIFO
-    /// `i`; `epoch` is the epoch of argument 0.
-    fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage>;
+    /// `i`; `epoch` is the epoch of argument 0. Results go into `out`.
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink);
 
     /// Host-side DMA readback of PE-resident result memory (the RIFFA
     /// path of the BMVM top module, Fig 14). PEs whose results stay
@@ -97,10 +184,19 @@ pub struct WrappedPe {
     pub node: NodeId,
     proc_: Box<dyn Processor>,
     collector: Collector,
-    /// (completion cycle, results) of the invocation in flight.
-    pending: Option<(u64, Vec<OutMessage>)>,
+    /// The processor's result sink (owns the payload pool).
+    sink: MsgSink,
+    /// Completion cycle of the invocation in flight.
+    pending_done: Option<u64>,
+    /// Results of the invocation in flight, released at `done`.
+    pending_msgs: Vec<OutMessage>,
+    /// Scratch: arguments of the current invocation (recycled into the
+    /// collector's payload pool after `process`).
+    args: Vec<ArgMessage>,
     /// Distributor queue: completed results waiting to be packetized.
     out_q: VecDeque<OutMessage>,
+    /// Scratch: packetization buffer.
+    flits: Vec<Flit>,
     /// Stats: invocations completed.
     pub invocations: u64,
     /// Stats: busy cycles (start..done).
@@ -114,8 +210,12 @@ impl WrappedPe {
             node,
             collector: Collector::new(spec.arg_bits.clone(), flit_width),
             proc_: processor,
-            pending: None,
+            sink: MsgSink::new(),
+            pending_done: None,
+            pending_msgs: Vec::new(),
+            args: Vec::new(),
             out_q: VecDeque::new(),
+            flits: Vec::new(),
             invocations: 0,
             busy_cycles: 0,
         }
@@ -128,8 +228,9 @@ impl WrappedPe {
 
     /// Queue this PE's boot messages (called once by [`PeSystem::step`]).
     fn boot(&mut self) {
-        let msgs = self.proc_.boot();
-        self.out_q.extend(msgs);
+        debug_assert!(self.sink.is_empty());
+        self.proc_.boot(&mut self.sink);
+        self.out_q.extend(self.sink.drain());
     }
 
     /// One cycle: drain ejected flits, complete/start invocations, and
@@ -140,41 +241,52 @@ impl WrappedPe {
             self.collector.accept(f);
         }
         // `done`: release results.
-        if let Some((done_at, _)) = &self.pending {
-            if cycle >= *done_at {
-                let (_, msgs) = self.pending.take().unwrap();
-                self.out_q.extend(msgs);
+        if let Some(done_at) = self.pending_done {
+            if cycle >= done_at {
+                self.pending_done = None;
+                self.out_q.extend(self.pending_msgs.drain(..));
                 self.invocations += 1;
             }
         }
         // `start`: all argument FIFOs non-empty and datapath idle.
-        if self.pending.is_none() && self.collector.ready() {
-            let (args, epoch) = self.collector.take();
-            let lat = self.proc_.latency_hint(&args).max(1);
-            let msgs = self.proc_.process(&args, epoch);
+        if self.pending_done.is_none() && self.collector.ready() {
+            let epoch = self.collector.take_into(&mut self.args);
+            let lat = self.proc_.latency_hint(&self.args).max(1);
+            debug_assert!(self.sink.is_empty());
+            self.proc_.process(&self.args, epoch, &mut self.sink);
+            // Spent argument payloads feed the collector's buffer pool.
+            for a in self.args.drain(..) {
+                self.collector.recycle(a);
+            }
             self.busy_cycles += lat;
-            self.pending = Some((cycle + lat, msgs));
+            self.pending_done = Some(cycle + lat);
+            self.pending_msgs.extend(self.sink.drain());
         }
         // Distributor: packetize and hand to the NI (the NI injects one
-        // flit per cycle; its queue models the output FIFOs).
-        while let Some(m) = self.out_q.pop_front() {
-            for f in packetize(
+        // flit per cycle; its queue models the output FIFOs). The spent
+        // payload goes back to the sink's pool.
+        while let Some(mut m) = self.out_q.pop_front() {
+            self.flits.clear();
+            packetize_into(
                 self.node,
                 m.dst,
                 make_tag(m.epoch, m.arg),
                 &m.payload,
                 m.bits,
                 net.cfg().flit_data_width,
-            ) {
+                &mut self.flits,
+            );
+            for f in self.flits.drain(..) {
                 net.inject(self.node, f);
             }
+            self.sink.recycle(std::mem::take(&mut m.payload));
         }
     }
 
     /// Is this PE completely drained (no compute in flight, nothing queued
     /// to send)? Collector FIFOs may legitimately hold unmatched args.
     pub fn quiescent(&self) -> bool {
-        self.pending.is_none() && self.out_q.is_empty()
+        self.pending_done.is_none() && self.out_q.is_empty()
     }
 
     /// Access the collector (tests / diagnostics).
@@ -283,12 +395,12 @@ mod tests {
         fn spec(&self) -> WrapperSpec {
             WrapperSpec::new(vec![8], vec![16])
         }
-        fn boot(&mut self) -> Vec<OutMessage> {
-            std::mem::take(&mut self.msgs)
+        fn boot(&mut self, out: &mut MsgSink) {
+            for m in std::mem::take(&mut self.msgs) {
+                out.push(m);
+            }
         }
-        fn process(&mut self, _: &[ArgMessage], _: u32) -> Vec<OutMessage> {
-            Vec::new()
-        }
+        fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
     }
 
     /// adder(a, b) -> a + b, sent to a sink endpoint.
@@ -303,14 +415,33 @@ mod tests {
         fn latency(&self) -> u64 {
             self.latency
         }
-        fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
+        fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
             let sum = (args[0].payload[0] + args[1].payload[0]) & 0xFFFF;
-            vec![OutMessage::word(self.sink, 0, epoch, sum, 16)]
+            out.word(self.sink, 0, epoch, sum, 16);
         }
     }
 
     fn mesh_system() -> PeSystem {
         PeSystem::new(Network::new(&Topology::Mesh { w: 2, h: 2 }, NocConfig::paper()))
+    }
+
+    #[test]
+    fn msg_sink_pools_payload_buffers() {
+        let mut s = MsgSink::new();
+        s.word(1, 0, 0, 42, 16);
+        let m = s.take().pop().unwrap();
+        assert_eq!(m.payload, vec![42]);
+        let cap_ptr = m.payload.as_ptr();
+        s.recycle(m.payload);
+        // Next emission reuses the recycled buffer (zeroed, same storage).
+        s.word(2, 1, 1, 7, 16);
+        let m2 = s.take().pop().unwrap();
+        assert_eq!(m2.payload, vec![7]);
+        assert_eq!(m2.payload.as_ptr(), cap_ptr, "pool must reuse storage");
+        // message() hands out a zeroed multi-word buffer.
+        let p = s.message(3, 0, 2, 130);
+        assert_eq!(p.len(), 3);
+        assert!(p.iter().all(|&w| w == 0));
     }
 
     #[test]
@@ -392,10 +523,10 @@ mod tests {
             fn spec(&self) -> WrapperSpec {
                 WrapperSpec::new(vec![80], vec![80])
             }
-            fn process(&mut self, args: &[ArgMessage], epoch: u32) -> Vec<OutMessage> {
-                let mut p = args[0].payload.clone();
+            fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
+                let p = out.message(self.sink, 0, epoch, 80);
+                p.copy_from_slice(&args[0].payload);
                 p[0] = p[0].wrapping_add(1);
-                vec![OutMessage { dst: self.sink, arg: 0, epoch, payload: p, bits: 80 }]
             }
         }
         let mut sys = mesh_system();

@@ -1,0 +1,301 @@
+//! Tracked NoC benchmark matrix — the engine behind `fabricflow bench`
+//! and `cargo bench --bench noc_engine`.
+//!
+//! Runs a fixed set of scenario-matrix points on **both** simulation
+//! engines, cross-checks bit-identity in the same run, and reports
+//! throughput in simulated **flits/sec** and **cycles/sec** of wall
+//! clock. `fabricflow bench` serializes the result as `BENCH_noc.json`
+//! so the perf trajectory of the simulator is tracked in-repo: refresh
+//! the file after an optimization PR and the diff *is* the benchmark
+//! history (see EXPERIMENTS.md §Performance).
+//!
+//! The acceptance headline for the zero-allocation core is
+//! `saturated-mesh8x8/uniform`: at high offered load every router is
+//! busy every cycle, so the run measures raw per-flit cost — buffer
+//! layout, route lookup, allocator scratch — rather than idle-skip
+//! cleverness (which the low-load points measure instead).
+
+use std::time::Instant;
+
+use crate::noc::scenario::{self, Trace};
+use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
+
+/// One benchmark point: a scenario-matrix cell with a fixed seed.
+#[derive(Clone, Debug)]
+pub struct BenchPoint {
+    /// Stable identifier used in JSON and printouts.
+    pub label: &'static str,
+    pub topo: Topology,
+    pub scenario: &'static str,
+    pub load: f64,
+    /// Injection-window length in cycles.
+    pub window: u64,
+}
+
+/// The tracked matrix. Labels are stable across PRs — tooling diffs
+/// `BENCH_noc.json` by label.
+pub fn points() -> Vec<BenchPoint> {
+    vec![
+        BenchPoint {
+            label: "saturated-mesh8x8/uniform",
+            topo: Topology::Mesh { w: 8, h: 8 },
+            scenario: "uniform",
+            load: 0.5,
+            window: 4_000,
+        },
+        BenchPoint {
+            label: "low-load-mesh8x8/uniform",
+            topo: Topology::Mesh { w: 8, h: 8 },
+            scenario: "uniform",
+            load: 0.02,
+            window: 30_000,
+        },
+        BenchPoint {
+            label: "very-low-load-mesh8x8/uniform",
+            topo: Topology::Mesh { w: 8, h: 8 },
+            scenario: "uniform",
+            load: 0.005,
+            window: 30_000,
+        },
+        BenchPoint {
+            label: "bursty-mesh8x8/bursty",
+            topo: Topology::Mesh { w: 8, h: 8 },
+            scenario: "bursty",
+            load: 0.02,
+            window: 30_000,
+        },
+        BenchPoint {
+            label: "mid-load-torus8x8/uniform",
+            topo: Topology::Torus { w: 8, h: 8 },
+            scenario: "uniform",
+            load: 0.2,
+            window: 5_000,
+        },
+        BenchPoint {
+            label: "hotspot-mesh8x8/hotspot",
+            topo: Topology::Mesh { w: 8, h: 8 },
+            scenario: "hotspot",
+            load: 0.1,
+            window: 5_000,
+        },
+        BenchPoint {
+            label: "ldpc-trace-mesh4x4/ldpc-trace",
+            topo: Topology::Mesh { w: 4, h: 4 },
+            scenario: "ldpc-trace",
+            load: 0.1,
+            window: 20_000,
+        },
+    ]
+}
+
+/// Measured result of one (point, engine) cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub engine: SimEngine,
+    /// Best-of-reps wall time for the full replay+drain, seconds.
+    pub wall_s: f64,
+    /// Flits injected (== delivered; cross-checked).
+    pub flits: u64,
+    /// Simulated cycles to drain.
+    pub cycles: u64,
+}
+
+impl CellResult {
+    pub fn flits_per_sec(&self) -> f64 {
+        self.flits as f64 / self.wall_s
+    }
+
+    pub fn cycles_per_sec(&self) -> f64 {
+        self.cycles as f64 / self.wall_s
+    }
+}
+
+/// One point's results on both engines (stats proven identical).
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    pub label: &'static str,
+    pub reference: CellResult,
+    pub event: CellResult,
+}
+
+impl PointResult {
+    /// Event-engine wall-clock speedup over the reference.
+    pub fn speedup(&self) -> f64 {
+        self.reference.wall_s / self.event.wall_s
+    }
+}
+
+/// A full matrix run.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// `quick` profile (1 rep, shrunk windows) vs full (best of 3).
+    pub quick: bool,
+    pub points: Vec<PointResult>,
+}
+
+/// One replay; the timer starts AFTER `Network::new` so construction
+/// cost (route-table tabulation, arena zeroing) never skews the
+/// per-flit throughput this file exists to track.
+fn run_once(pt: &BenchPoint, engine: SimEngine, trace: &Trace) -> (f64, u64, NetStats) {
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let mut net = Network::new(&pt.topo, cfg);
+    let t = Instant::now();
+    let cycles = scenario::replay(&mut net, trace, 100_000_000)
+        .unwrap_or_else(|e| panic!("{}: {e}", pt.label));
+    let wall_s = t.elapsed().as_secs_f64();
+    (wall_s, cycles, net.stats().clone())
+}
+
+/// Best-of-`reps` wall time plus the run digest (identical across reps:
+/// the simulator is deterministic).
+fn time_cell(
+    pt: &BenchPoint,
+    engine: SimEngine,
+    trace: &Trace,
+    reps: usize,
+) -> (CellResult, (u64, NetStats)) {
+    let mut best = f64::INFINITY;
+    let mut digest = None;
+    for _ in 0..reps {
+        let (wall_s, cycles, stats) = run_once(pt, engine, trace);
+        best = best.min(wall_s);
+        digest = Some((cycles, stats));
+    }
+    let (cycles, stats) = digest.unwrap();
+    assert_eq!(
+        stats.injected, stats.delivered,
+        "{}: lost flits under {engine:?}",
+        pt.label
+    );
+    let cell = CellResult { engine, wall_s: best, flits: stats.delivered, cycles };
+    (cell, (cycles, stats))
+}
+
+/// Run one point on both engines, asserting bit-identity of the digests
+/// produced by the timed runs themselves (no extra untimed replay).
+pub fn run_point(pt: &BenchPoint, reps: usize, window_scale: f64) -> PointResult {
+    let scn = scenario::find(pt.scenario).expect("scenario registered");
+    let n = pt.topo.build().n_endpoints;
+    let window = ((pt.window as f64 * window_scale) as u64).max(100);
+    let trace = scn.trace(n, pt.load, window, 1);
+    let (reference, ref_digest) = time_cell(pt, SimEngine::Reference, &trace, reps);
+    let (event, evt_digest) = time_cell(pt, SimEngine::EventDriven, &trace, reps);
+    assert_eq!(
+        ref_digest, evt_digest,
+        "{}: engines disagree — conformance bug, numbers would be meaningless",
+        pt.label
+    );
+    PointResult { label: pt.label, reference, event }
+}
+
+/// Run the whole tracked matrix. `quick` shrinks windows 4x and uses one
+/// rep — the CI perf-smoke profile.
+pub fn run(quick: bool) -> BenchReport {
+    let (reps, scale) = if quick { (1, 0.25) } else { (3, 1.0) };
+    let points = points()
+        .iter()
+        .map(|pt| run_point(pt, reps, scale))
+        .collect();
+    BenchReport { quick, points }
+}
+
+impl BenchReport {
+    /// Serialize as stable, diffable JSON (hand-rolled: the default
+    /// build has no dependencies).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = writeln!(j, "{{");
+        let _ = writeln!(j, "  \"schema\": \"fabricflow-bench-noc/v1\",");
+        let _ = writeln!(j, "  \"profile\": \"{}\",", if self.quick { "quick" } else { "full" });
+        let _ = writeln!(
+            j,
+            "  \"note\": \"regenerate with `cargo run --release -- bench{}`\",",
+            if self.quick { " --quick" } else { "" }
+        );
+        let _ = writeln!(j, "  \"points\": [");
+        for (i, p) in self.points.iter().enumerate() {
+            let comma = if i + 1 == self.points.len() { "" } else { "," };
+            let _ = writeln!(j, "    {{");
+            let _ = writeln!(j, "      \"label\": \"{}\",", p.label);
+            for (key, c) in [("reference", &p.reference), ("event", &p.event)] {
+                let _ = writeln!(j, "      \"{key}\": {{");
+                let _ = writeln!(j, "        \"flits\": {},", c.flits);
+                let _ = writeln!(j, "        \"cycles\": {},", c.cycles);
+                let _ = writeln!(j, "        \"wall_ms\": {:.3},", c.wall_s * 1e3);
+                let _ = writeln!(j, "        \"flits_per_sec\": {:.0},", c.flits_per_sec());
+                let _ = writeln!(j, "        \"cycles_per_sec\": {:.0}", c.cycles_per_sec());
+                let _ = writeln!(j, "      }},");
+            }
+            let _ = writeln!(j, "      \"event_speedup\": {:.2}", p.speedup());
+            let _ = writeln!(j, "    }}{comma}");
+        }
+        let _ = writeln!(j, "  ]");
+        let _ = writeln!(j, "}}");
+        j
+    }
+
+    /// Human-readable table (the CLI and bench-binary printout).
+    pub fn render_table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "NoC benchmark matrix ({} profile; bit-identity asserted per point)",
+            if self.quick { "quick" } else { "full" }
+        );
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "  {:32} {:>8} flits {:>9} cyc | ref {:>9.0} flit/s  event {:>9.0} flit/s  => {:.2}x",
+                p.label,
+                p.reference.flits,
+                p.reference.cycles,
+                p.reference.flits_per_sec(),
+                p.event.flits_per_sec(),
+                p.speedup()
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_unique_and_scenarios_exist() {
+        let pts = points();
+        for (i, a) in pts.iter().enumerate() {
+            assert!(scenario::find(a.scenario).is_some(), "{}", a.label);
+            for b in &pts[i + 1..] {
+                assert_ne!(a.label, b.label);
+            }
+        }
+        assert!(pts.iter().any(|p| p.label == "saturated-mesh8x8/uniform"));
+    }
+
+    #[test]
+    fn one_point_runs_and_serializes() {
+        // Tiny profile of the headline point: engines must agree and the
+        // JSON must carry its label and throughput fields.
+        let pt = BenchPoint {
+            label: "saturated-mesh8x8/uniform",
+            topo: Topology::Mesh { w: 4, h: 4 },
+            scenario: "uniform",
+            load: 0.3,
+            window: 200,
+        };
+        let res = run_point(&pt, 1, 1.0);
+        assert!(res.reference.flits > 0);
+        assert_eq!(res.reference.flits, res.event.flits);
+        assert_eq!(res.reference.cycles, res.event.cycles);
+        let report = BenchReport { quick: true, points: vec![res] };
+        let json = report.to_json();
+        assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
+        assert!(json.contains("flits_per_sec"));
+        assert!(json.contains("\"profile\": \"quick\""));
+        assert!(report.render_table().contains("saturated-mesh8x8"));
+    }
+}

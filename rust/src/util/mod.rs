@@ -54,6 +54,21 @@ pub fn isqrt(v: u64) -> u64 {
     x
 }
 
+/// Pop a recycled buffer from `pool` and present it as `words` zeroed
+/// words, or allocate a fresh one when the pool is empty — the shared
+/// pop-or-allocate step behind the crate's zero-allocation buffer pools
+/// (PE message sink, collector reassembly, BMVM accumulators).
+pub fn pooled_words(pool: &mut Vec<Vec<u64>>, words: usize) -> Vec<u64> {
+    match pool.pop() {
+        Some(mut p) => {
+            p.clear();
+            p.resize(words, 0);
+            p
+        }
+        None => vec![0; words],
+    }
+}
+
 /// `ceil(log2(n))` for n >= 1; 0 for n <= 1.
 #[inline]
 pub const fn clog2(n: usize) -> u32 {
@@ -86,6 +101,21 @@ mod tests {
         assert_eq!(clog2(5), 3);
         assert_eq!(clog2(16), 4);
         assert_eq!(clog2(17), 5);
+    }
+
+    #[test]
+    fn pooled_words_reuses_and_rezeroes() {
+        let mut pool: Vec<Vec<u64>> = Vec::new();
+        let mut b = pooled_words(&mut pool, 2);
+        assert_eq!(b, vec![0, 0]);
+        b[0] = 0xFFFF;
+        let ptr = b.as_ptr();
+        pool.push(b);
+        // Reuse the same storage, re-zeroed, at a different size.
+        let b2 = pooled_words(&mut pool, 1);
+        assert_eq!(b2, vec![0]);
+        assert_eq!(b2.as_ptr(), ptr);
+        assert!(pool.is_empty());
     }
 
     #[test]

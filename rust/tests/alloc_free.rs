@@ -1,0 +1,306 @@
+//! Steady-state allocation audit: after warm-up, `Network::step` (both
+//! engines) and the hot PE `process` bodies must perform **zero** heap
+//! allocations — the acceptance criterion of the flat-arena /
+//! pooled-buffer work. A counting global allocator wraps `System`; each
+//! measured region snapshots the counter and asserts the delta is 0.
+//!
+//! This file deliberately contains a single `#[test]` so no concurrent
+//! test thread can pollute the global counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fabricflow::apps::bmvm::pe::BmvmPe;
+use fabricflow::apps::bmvm::WilliamsLuts;
+use fabricflow::apps::ldpc::minsum::MinsumVariant;
+use fabricflow::apps::ldpc::nodes::{BitNodePe, CheckNodePe};
+use fabricflow::apps::pfilter::pe::{
+    msg_config, msg_frame_chunk, msg_particle, msg_ref_hist, PfRootPe, PfWorkerPe,
+    CHUNK_PIXELS,
+};
+use fabricflow::apps::pfilter::{histo, video::synthetic_video, TrackerParams};
+use fabricflow::gf2::Gf2Matrix;
+use fabricflow::noc::{Flit, Network, NocConfig, SimEngine, Topology};
+use fabricflow::pe::collector::ArgMessage;
+use fabricflow::pe::{MsgSink, OutMessage, Processor};
+use fabricflow::util::bits::BitVec;
+use fabricflow::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Run `f` and return how many allocations it performed.
+fn count<R>(f: impl FnOnce() -> R) -> u64 {
+    let before = allocs();
+    let r = f();
+    std::hint::black_box(r);
+    allocs() - before
+}
+
+/// All-to-all single-flit wave (every endpoint to every other).
+fn inject_uniform_wave(net: &mut Network) {
+    let n = net.n_endpoints();
+    for s in 0..n {
+        for d in 0..n {
+            if s != d {
+                net.inject(s, Flit::single(s, d, (s * n + d) as u32, d as u64));
+            }
+        }
+    }
+}
+
+fn drain_all(net: &mut Network) {
+    for e in 0..net.n_endpoints() {
+        while net.eject(e).is_some() {}
+    }
+}
+
+fn network_steady_state_is_alloc_free(engine: SimEngine) {
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let mut net = Network::new(&Topology::Mesh { w: 8, h: 8 }, cfg);
+    let n = net.n_endpoints();
+
+    // Warm-up 1 — hotspot flood: 63 senders × 64 flits to one ejector
+    // (1 flit/cycle) forces max latency past 4000 cycles, growing the
+    // latency histogram beyond any bucket the measured uniform wave
+    // (which drains in a few hundred cycles) can touch.
+    for s in 0..n {
+        for k in 0..64 {
+            if s != 5 {
+                net.inject(s, Flit::single(s, 5, k, 0));
+            }
+        }
+    }
+    net.run_until_idle(10_000_000).expect("hotspot warm-up stalled");
+    drain_all(&mut net);
+
+    // Warm-up 2 — two rounds of the EXACT workload we will measure, so
+    // every queue/scratch/worklist buffer reaches its measured-region
+    // peak capacity (same flit counts per endpoint, same message).
+    for round in 0..2 {
+        inject_uniform_wave(&mut net);
+        net.send_message(0, 63, round, &[0xDEAD_BEEF, 0x1234], 96);
+        net.run_until_idle(10_000_000).expect("uniform warm-up stalled");
+        drain_all(&mut net);
+    }
+
+    // Measure: injection + multi-flit message + full drain, zero allocs.
+    let delta = count(|| {
+        inject_uniform_wave(&mut net);
+        net.send_message(0, 63, 2, &[0xCAFE_F00D, 0x5678], 96);
+        net.run_until_idle(10_000_000).expect("measured drain stalled")
+    });
+    assert_eq!(
+        delta, 0,
+        "{engine:?}: Network::step allocated {delta} times after warm-up"
+    );
+    assert_eq!(net.stats().delivered, net.stats().injected);
+    drain_all(&mut net);
+}
+
+fn check_node_process_is_alloc_free() {
+    let mut pe = CheckNodePe::new(
+        MinsumVariant::SignMagnitude,
+        vec![(1, 0), (2, 1), (3, 2)],
+    );
+    let mut sink = MsgSink::new();
+    let args: Vec<ArgMessage> = (0..3)
+        .map(|i| ArgMessage { epoch: 0, src: i, payload: vec![100 + i as u64] })
+        .collect();
+    let mut spent: Vec<OutMessage> = Vec::new();
+    let round = |pe: &mut CheckNodePe, sink: &mut MsgSink, spent: &mut Vec<OutMessage>| {
+        pe.process(&args, 0, sink);
+        spent.extend(sink.drain());
+        for mut m in spent.drain(..) {
+            sink.recycle(std::mem::take(&mut m.payload));
+        }
+    };
+    for _ in 0..4 {
+        round(&mut pe, &mut sink, &mut spent);
+    }
+    let delta = count(|| {
+        for _ in 0..200 {
+            round(&mut pe, &mut sink, &mut spent);
+        }
+    });
+    assert_eq!(delta, 0, "CheckNodePe::process allocated {delta} times");
+}
+
+fn bit_node_process_is_alloc_free() {
+    let mut pe = BitNodePe::new(u32::MAX, vec![(1, 0), (2, 1), (3, 2)], 9);
+    let mut sink = MsgSink::new();
+    let args: Vec<ArgMessage> = (0..4)
+        .map(|i| ArgMessage { epoch: 0, src: i, payload: vec![100 + i as u64] })
+        .collect();
+    let mut spent: Vec<OutMessage> = Vec::new();
+    let round = |pe: &mut BitNodePe, sink: &mut MsgSink, spent: &mut Vec<OutMessage>| {
+        pe.process(&args, 0, sink);
+        spent.extend(sink.drain());
+        for mut m in spent.drain(..) {
+            sink.recycle(std::mem::take(&mut m.payload));
+        }
+    };
+    for _ in 0..4 {
+        round(&mut pe, &mut sink, &mut spent);
+    }
+    let delta = count(|| {
+        for _ in 0..200 {
+            round(&mut pe, &mut sink, &mut spent);
+        }
+    });
+    assert_eq!(delta, 0, "BitNodePe::process allocated {delta} times");
+}
+
+fn bmvm_epochs_are_alloc_free() {
+    let mut rng = Rng::new(42);
+    let a = Gf2Matrix::random(16, 16, &mut rng);
+    let luts = WilliamsLuts::preprocess(&a, 4);
+    let v = BitVec::random(16, &mut rng);
+    let parts = luts.split_vector(&v);
+    let n_pes = 4;
+    let mut pe = BmvmPe::new(&luts, &parts, 0, n_pes, u32::MAX, vec![0, 1, 2, 3]);
+    let mut sink = MsgSink::new();
+    pe.boot(&mut sink);
+    let mut spent: Vec<OutMessage> = Vec::new();
+    let mut arg = ArgMessage { epoch: 0, src: 1, payload: vec![0] };
+    // One epoch: the three remote batches arrive, the last completes the
+    // gather and triggers the next epoch's scatter through the sink.
+    let epoch_round = |pe: &mut BmvmPe,
+                       sink: &mut MsgSink,
+                       spent: &mut Vec<OutMessage>,
+                       arg: &mut ArgMessage,
+                       e: u32| {
+        for src in 1..n_pes {
+            arg.epoch = e;
+            arg.src = src;
+            arg.payload[0] = (src as u64) << (e % 7);
+            pe.process(std::slice::from_ref(arg), e, sink);
+        }
+        spent.extend(sink.drain());
+        for mut m in spent.drain(..) {
+            sink.recycle(std::mem::take(&mut m.payload));
+        }
+    };
+    let mut e = 0u32;
+    for _ in 0..8 {
+        epoch_round(&mut pe, &mut sink, &mut spent, &mut arg, e);
+        e += 1;
+    }
+    let delta = count(|| {
+        for _ in 0..100 {
+            epoch_round(&mut pe, &mut sink, &mut spent, &mut arg, e);
+            e += 1;
+        }
+    });
+    assert_eq!(delta, 0, "BmvmPe epochs allocated {delta} times");
+}
+
+fn pfilter_particle_path_is_alloc_free() {
+    let video = synthetic_video(32, 24, 2, 4, 8);
+    let mut w = PfWorkerPe::new(0);
+    let mut sink = MsgSink::new();
+    let mk = |m: OutMessage| ArgMessage { epoch: m.epoch, src: 0, payload: m.payload };
+    w.process(&[mk(msg_config(1, 0, 32, 24, 4))], 0, &mut sink);
+    let ref_hist = histo::weighted_histogram(&video.frames[0], 10, 10, 4);
+    w.process(&[mk(msg_ref_hist(1, 0, &ref_hist))], 0, &mut sink);
+    for (ci, chunk) in video.frames[1].pix.chunks(CHUNK_PIXELS).enumerate() {
+        w.process(&[mk(msg_frame_chunk(1, 1, ci * CHUNK_PIXELS, chunk))], 1, &mut sink);
+    }
+    let arg = mk(msg_particle(1, 1, 0, 10, 10));
+    let mut spent: Vec<OutMessage> = Vec::new();
+    let round = |w: &mut PfWorkerPe,
+                 sink: &mut MsgSink,
+                 spent: &mut Vec<OutMessage>,
+                 arg: &ArgMessage| {
+        w.process(std::slice::from_ref(arg), 1, sink);
+        spent.extend(sink.drain());
+        for mut m in spent.drain(..) {
+            sink.recycle(std::mem::take(&mut m.payload));
+        }
+    };
+    for _ in 0..4 {
+        round(&mut w, &mut sink, &mut spent, &arg);
+    }
+    let delta = count(|| {
+        for _ in 0..100 {
+            round(&mut w, &mut sink, &mut spent, &arg);
+        }
+    });
+    assert_eq!(delta, 0, "PfWorkerPe PARTICLE path allocated {delta} times");
+}
+
+fn pfilter_root_frame_loop_is_alloc_free() {
+    // The root's per-frame epoch: gather all particle responses, update
+    // the center, stream it, and launch the next frame (chunks +
+    // particles through pooled sink payloads, particles/weights into
+    // reused buffers).
+    let n_particles = 8usize;
+    let params = TrackerParams { n_particles, sigma: 2.0, roi_r: 3, seed: 5 };
+    let video = synthetic_video(16, 16, 60, 3, 8);
+    let mut root = PfRootPe::new(video, (8, 8), params, vec![1, 2], 3);
+    let mut sink = MsgSink::new();
+    root.boot(&mut sink); // config + ref hist + frame 1 launch
+    let mut spent: Vec<OutMessage> = Vec::new();
+    // One response message, rewritten in place per particle: id in bits
+    // 0..16, rho in bits 16..48 (rho < 2^16 so weights fit u64).
+    let mut arg = ArgMessage { epoch: 0, src: 1, payload: vec![0] };
+    let frame_round = |root: &mut PfRootPe,
+                       sink: &mut MsgSink,
+                       spent: &mut Vec<OutMessage>,
+                       arg: &mut ArgMessage| {
+        for id in 0..n_particles {
+            arg.payload[0] = (id as u64) | (((id as u64 + 1) & 0xFFFF) << 16);
+            root.process(std::slice::from_ref(arg), 0, sink);
+        }
+        spent.extend(sink.drain());
+        for mut m in spent.drain(..) {
+            sink.recycle(std::mem::take(&mut m.payload));
+        }
+    };
+    for _ in 0..8 {
+        frame_round(&mut root, &mut sink, &mut spent, &mut arg);
+    }
+    let delta = count(|| {
+        for _ in 0..40 {
+            frame_round(&mut root, &mut sink, &mut spent, &mut arg);
+        }
+    });
+    assert_eq!(delta, 0, "PfRootPe frame loop allocated {delta} times");
+}
+
+#[test]
+fn steady_state_simulation_does_not_allocate() {
+    network_steady_state_is_alloc_free(SimEngine::Reference);
+    network_steady_state_is_alloc_free(SimEngine::EventDriven);
+    check_node_process_is_alloc_free();
+    bit_node_process_is_alloc_free();
+    bmvm_epochs_are_alloc_free();
+    pfilter_particle_path_is_alloc_free();
+    pfilter_root_frame_loop_is_alloc_free();
+}

@@ -68,6 +68,52 @@ fn engines_agree_on_full_matrix() {
     }
 }
 
+/// The flat-arena VC rings are sized by `buffer_depth`; engines must
+/// stay bit-identical at every depth, including depth 1 (maximum
+/// backpressure, every ring wraps constantly) and under hotspot traffic
+/// that keeps rings full. Guards the arena refactor: same `NetStats`
+/// (latency histogram included), same eject order, same completion
+/// cycle as the reference stepper.
+#[test]
+fn engines_agree_across_buffer_depths() {
+    for depth in [1usize, 2, 8] {
+        for topo in [Topology::Mesh { w: 4, h: 4 }, Topology::Torus { w: 4, h: 4 }] {
+            for scn_name in ["uniform", "hotspot"] {
+                let scn = scenario::find(scn_name).unwrap();
+                let run = |engine: SimEngine| {
+                    let cfg = NocConfig {
+                        engine,
+                        buffer_depth: depth,
+                        ..NocConfig::paper()
+                    };
+                    let mut net = Network::new(&topo, cfg);
+                    let trace = scn.trace(net.n_endpoints(), 0.15, 300, 9);
+                    let elapsed = scenario::replay(&mut net, &trace, 10_000_000)
+                        .unwrap_or_else(|e| {
+                            panic!("{scn_name} depth={depth} ({engine:?}): {e}")
+                        });
+                    (
+                        elapsed,
+                        net.cycle(),
+                        net.stats().clone(),
+                        scenario::drain_all(&mut net),
+                    )
+                };
+                let reference = run(SimEngine::Reference);
+                let event = run(SimEngine::EventDriven);
+                assert_eq!(
+                    reference, event,
+                    "{scn_name} on {topo:?} at buffer_depth {depth}"
+                );
+                assert_eq!(
+                    reference.2.injected, reference.2.delivered,
+                    "{scn_name} depth={depth}: lost flits"
+                );
+            }
+        }
+    }
+}
+
 /// Partitioned networks exercise the event engine's serdes time-jump
 /// path; results must still be bit-identical.
 #[test]
