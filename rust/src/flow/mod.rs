@@ -43,10 +43,11 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::noc::flit::{depacketize, Flit, NodeId};
+use crate::noc::multichip::{LinkStat, MultiChipSim};
 use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
 use crate::partition::Partition;
 use crate::pe::collector::split_tag;
-use crate::pe::{PeSystem, Processor};
+use crate::pe::{MultiChipPeSystem, PeSystem, Processor, WrappedPe};
 use crate::resources::{Device, Resources};
 use crate::serdes::{wire_bits, SerdesConfig};
 
@@ -117,6 +118,12 @@ pub struct RunReport {
     /// Resource estimate per FPGA: routers + serdes endpoints + PE
     /// wrappers (+ any [`FlowBuilder::pe_resources`] app datapaths).
     pub resources_per_fpga: Vec<Resources>,
+    /// Per-chip [`NetStats`] of a sharded run ([`FlowBuilder::multichip`]
+    /// / [`RunReport::from_multichip`]); empty for monolithic runs.
+    pub per_chip: Vec<NetStats>,
+    /// Per-wire-link occupancy/stall statistics of a sharded run; empty
+    /// for monolithic runs.
+    pub links: Vec<LinkStat>,
 }
 
 impl RunReport {
@@ -139,6 +146,31 @@ impl RunReport {
             serdes_flits,
             pins_per_fpga: vec![0],
             resources_per_fpga: vec![net.topo().router_resources(net.cfg())],
+            per_chip: Vec::new(),
+            links: Vec::new(),
+        }
+    }
+
+    /// Report for a bare sharded-fabric run (no PEs attached) — the
+    /// multi-chip reporting path of the scenario matrix, with per-chip
+    /// `NetStats` and per-link occupancy alongside the combined counters.
+    pub fn from_multichip(name: &str, cycles: u64, sim: &MultiChipSim) -> RunReport {
+        let partition = sim.partition();
+        let topo = sim.global_topo();
+        let serdes = sim.serdes_cfg();
+        RunReport {
+            flow: name.to_string(),
+            cycles,
+            net: sim.stats(),
+            pes: Vec::new(),
+            n_fpgas: sim.n_chips(),
+            cut_links: sim.n_cut_links(),
+            serdes_cycles_per_flit: sim.serdes_cycles_per_flit(),
+            serdes_flits: sim.wire_flits(),
+            pins_per_fpga: partition.pins_per_fpga(topo, serdes),
+            resources_per_fpga: partition.noc_resources_per_fpga(topo, sim.cfg(), serdes),
+            per_chip: sim.chips().iter().map(|c| c.stats().clone()).collect(),
+            links: sim.link_stats(),
         }
     }
 
@@ -220,6 +252,8 @@ pub struct FlowBuilder {
     topo: Option<Topology>,
     serdes: SerdesConfig,
     partition: PartitionSpec,
+    multichip: bool,
+    pinned: Vec<(String, String)>,
     pes: Vec<PeSlot>,
     taps: Vec<TapSlot>,
     channels: Vec<(String, String, u64)>,
@@ -238,6 +272,8 @@ impl FlowBuilder {
             topo: None,
             serdes: SerdesConfig::default(),
             partition: PartitionSpec::Whole,
+            multichip: false,
+            pinned: Vec::new(),
             pes: Vec::new(),
             taps: Vec::new(),
             channels: Vec::new(),
@@ -314,6 +350,41 @@ impl FlowBuilder {
     /// [`Partition::balanced`] (seeded by [`FlowBuilder::seed`]).
     pub fn auto_partition(&mut self, n_fpgas: usize) -> &mut Self {
         self.partition = PartitionSpec::Auto(n_fpgas);
+        self
+    }
+
+    /// Run the partitioned flow as a true sharded co-simulation: one
+    /// [`Network`] per FPGA, cut links bridged by cycle-true serializing
+    /// wire channels ([`MultiChipSim`]). Results are identical to the
+    /// monolithic simulation (same messages, same per-source order at
+    /// each destination) with honest cross-chip link timing, and
+    /// [`RunReport`] gains per-chip [`NetStats`] plus per-link
+    /// occupancy/stall statistics. Requires a partition
+    /// ([`FlowBuilder::partition`] / [`FlowBuilder::auto_partition`]).
+    ///
+    /// Cut-crossing flits are genuinely serialized, and the wire format
+    /// carries a 16-bit tag (`(epoch << 8) | arg`) and an 8-bit flit
+    /// sequence number — sharded flows therefore need message epochs
+    /// < 256 and messages of ≤ 256 flits; the wire channel asserts
+    /// loudly otherwise instead of corrupting silently.
+    pub fn multichip(&mut self, serdes: SerdesConfig) -> &mut Self {
+        self.serdes = serdes;
+        self.multichip = true;
+        self
+    }
+
+    /// Keep two endpoint-pinned units' routers on the same FPGA (e.g. a
+    /// PE and the tap collecting its results — the pfilter root and its
+    /// histogram sink). Under [`FlowBuilder::auto_partition`] the pair
+    /// constrains the bisection ([`Partition::balanced_pinned`]); with a
+    /// manual [`FlowBuilder::partition`] the pair is validated against
+    /// the given cut. Both units must be placed with
+    /// [`FlowBuilder::pe_at`] / [`FlowBuilder::tap_at`]; an
+    /// unsatisfiable or violated constraint surfaces as a typed
+    /// [`FlowError::Layout`] instead of a partitioner panic or a silent
+    /// no-op.
+    pub fn pin_together(&mut self, a: &str, b: &str) -> &mut Self {
+        self.pinned.push((a.to_string(), b.to_string()));
         self
     }
 
@@ -462,8 +533,32 @@ impl FlowBuilder {
             }
             used[node] = true;
         }
+        // Resolve pin_together pairs to their routers: both units must
+        // be endpoint-pinned so the routers are known before placement.
+        // The pairs are honored in EVERY partition mode below (auto
+        // constrains the bisection, manual is validated, whole is
+        // trivially co-located) — never silently dropped.
+        let mut pinned_pairs = Vec::with_capacity(self.pinned.len());
+        for (a, b) in &self.pinned {
+            let router_of = |name: &str| -> Result<usize, FlowError> {
+                let u = self.unit_index(name).ok_or_else(|| {
+                    FlowError::Layout(format!(
+                        "pin_together endpoint '{name}' is not a PE or tap"
+                    ))
+                })?;
+                let ep = fixed[u].ok_or_else(|| {
+                    FlowError::Layout(format!(
+                        "pin_together('{name}') needs an endpoint-pinned \
+                         unit (use pe_at/tap_at)"
+                    ))
+                })?;
+                Ok(graph.endpoint_router(ep))
+            };
+            pinned_pairs.push((a.as_str(), b.as_str(), router_of(a)?, router_of(b)?));
+        }
         // Resolve the partition before placement so the placer can see it.
         let partition = match &self.partition {
+            // One FPGA: every pinned pair trivially shares it.
             PartitionSpec::Whole => None,
             PartitionSpec::Manual(p) => {
                 if p.assignment.len() != graph.n_routers {
@@ -472,6 +567,14 @@ impl FlowBuilder {
                         p.assignment.len(),
                         graph.n_routers
                     )));
+                }
+                for &(a, b, ra, rb) in &pinned_pairs {
+                    if p.assignment[ra] != p.assignment[rb] {
+                        return Err(FlowError::Layout(format!(
+                            "partition splits pinned pair '{a}'/'{b}' \
+                             (routers {ra} and {rb} on different FPGAs)"
+                        )));
+                    }
                 }
                 Some(p.clone())
             }
@@ -482,9 +585,24 @@ impl FlowBuilder {
                         graph.n_routers
                     )));
                 }
-                Some(Partition::balanced(&graph, *k, self.seed))
+                if pinned_pairs.is_empty() {
+                    Some(Partition::balanced(&graph, *k, self.seed))
+                } else {
+                    let pairs: Vec<(usize, usize)> =
+                        pinned_pairs.iter().map(|&(_, _, ra, rb)| (ra, rb)).collect();
+                    let p = Partition::balanced_pinned(&graph, *k, self.seed, &pairs)
+                        .map_err(|e| {
+                            FlowError::Layout(format!("auto-partition: {e}"))
+                        })?;
+                    Some(p)
+                }
             }
         };
+        if self.multichip && partition.is_none() {
+            return Err(FlowError::Layout(
+                "multichip() needs a partition (partition()/auto_partition())".into(),
+            ));
+        }
         // Resolve channels to unit indices.
         let mut edges = Vec::with_capacity(self.channels.len());
         for (a, b, w) in &self.channels {
@@ -505,13 +623,24 @@ impl FlowBuilder {
         };
         let place = placer::auto_place(&graph, &fixed, &edges, partition.as_ref(), cut_penalty)
             .map_err(FlowError::Layout)?;
-        // Wire the system: network, serdes on cut links, wrapped PEs.
-        let mut net = Network::new(&topo, self.cfg);
-        let cut_links = match &partition {
-            Some(p) => p.apply(&mut net, self.serdes).len(),
-            None => 0,
+        // Wire the system: a monolithic network (serdes spliced into cut
+        // links) or the sharded multi-chip fabric of one Network per FPGA.
+        let cut_links = partition.as_ref().map_or(0, |p| p.cut_links(&graph).len());
+        let mut sim = if self.multichip {
+            let p = partition.as_ref().expect("checked above");
+            FlowSim::Sharded(MultiChipPeSystem::new(MultiChipSim::from_graph(
+                graph,
+                self.cfg,
+                p,
+                self.serdes,
+            )))
+        } else {
+            let mut net = Network::new(&topo, self.cfg);
+            if let Some(p) = &partition {
+                p.apply(&mut net, self.serdes);
+            }
+            FlowSim::Mono(PeSystem::new(net))
         };
-        let mut sys = PeSystem::new(net);
         let n_pes = self.pes.len();
         let mut pe_names = Vec::with_capacity(n_pes);
         let mut pe_resources = Vec::with_capacity(n_pes);
@@ -528,7 +657,10 @@ impl FlowBuilder {
             {
                 r += *extra;
             }
-            sys.attach(place[i], proc_);
+            match &mut sim {
+                FlowSim::Mono(sys) => sys.attach(place[i], proc_),
+                FlowSim::Sharded(sys) => sys.attach(place[i], proc_),
+            }
             pe_names.push((slot.name.clone(), place[i]));
             pe_resources.push(r);
         }
@@ -540,7 +672,7 @@ impl FlowBuilder {
             .collect();
         Ok(MappedFlow {
             name: self.name.clone(),
-            sys,
+            sim,
             pe_names,
             tap_names,
             pe_resources,
@@ -560,11 +692,84 @@ fn names_at(pes: &[PeSlot], taps: &[TapSlot], unit: usize) -> String {
     }
 }
 
+/// The simulation backend of a [`MappedFlow`]: one monolithic network
+/// (serdes channels spliced into cut links) or the sharded multi-chip
+/// fabric ([`FlowBuilder::multichip`]).
+enum FlowSim {
+    Mono(PeSystem),
+    Sharded(MultiChipPeSystem),
+}
+
+impl FlowSim {
+    fn step(&mut self) {
+        match self {
+            FlowSim::Mono(sys) => sys.step(),
+            FlowSim::Sharded(sys) => sys.step(),
+        }
+    }
+
+    fn quiescent(&self) -> bool {
+        match self {
+            FlowSim::Mono(sys) => sys.quiescent(),
+            FlowSim::Sharded(sys) => sys.quiescent(),
+        }
+    }
+
+    fn cycle(&self) -> u64 {
+        match self {
+            FlowSim::Mono(sys) => sys.net.cycle(),
+            FlowSim::Sharded(sys) => sys.sim.cycle(),
+        }
+    }
+
+    fn pending(&self) -> usize {
+        match self {
+            FlowSim::Mono(sys) => sys.net.pending(),
+            FlowSim::Sharded(sys) => sys.sim.pending(),
+        }
+    }
+
+    fn eject(&mut self, node: NodeId) -> Option<Flit> {
+        match self {
+            FlowSim::Mono(sys) => sys.net.eject(node),
+            FlowSim::Sharded(sys) => sys.sim.eject(node),
+        }
+    }
+
+    fn flit_width(&self) -> u32 {
+        match self {
+            FlowSim::Mono(sys) => sys.net.cfg().flit_data_width,
+            FlowSim::Sharded(sys) => sys.sim.cfg().flit_data_width,
+        }
+    }
+
+    fn pe(&self, node: NodeId) -> Option<&WrappedPe> {
+        match self {
+            FlowSim::Mono(sys) => sys.pe(node),
+            FlowSim::Sharded(sys) => sys.pe(node),
+        }
+    }
+
+    fn readback(&self, node: NodeId) -> Option<Vec<u64>> {
+        match self {
+            FlowSim::Mono(sys) => sys.readback(node),
+            FlowSim::Sharded(sys) => sys.readback(node),
+        }
+    }
+
+    fn endpoint_router(&self, node: NodeId) -> usize {
+        match self {
+            FlowSim::Mono(sys) => sys.net.topo().endpoint_router(node),
+            FlowSim::Sharded(sys) => sys.sim.global_topo().endpoint_router(node),
+        }
+    }
+}
+
 /// A built flow: wrapped PEs plugged onto the (possibly partitioned) NoC,
 /// ready to run. The phase-1 + phase-2 result of the paper's pipeline.
 pub struct MappedFlow {
     name: String,
-    sys: PeSystem,
+    sim: FlowSim,
     pe_names: Vec<(String, NodeId)>,
     tap_names: Vec<(String, NodeId)>,
     pe_resources: Vec<Resources>,
@@ -598,17 +803,17 @@ impl MappedFlow {
     /// unified report. Exceeding the cycle budget yields
     /// [`FlowError::Timeout`] instead of the low-level layer's panic.
     pub fn run(&mut self) -> Result<RunReport, FlowError> {
-        let start = self.sys.net.cycle();
-        while !self.sys.quiescent() {
-            self.sys.step();
-            if self.sys.net.cycle() - start > self.max_cycles {
+        let start = self.sim.cycle();
+        while !self.sim.quiescent() {
+            self.sim.step();
+            if self.sim.cycle() - start > self.max_cycles {
                 return Err(FlowError::Timeout {
-                    cycles: self.sys.net.cycle() - start,
-                    pending: self.sys.net.pending(),
+                    cycles: self.sim.cycle() - start,
+                    pending: self.sim.pending(),
                 });
             }
         }
-        Ok(self.report(self.sys.net.cycle() - start))
+        Ok(self.report(self.sim.cycle() - start))
     }
 
     /// Build one fresh flow per input, run it, and collect a value from
@@ -632,19 +837,51 @@ impl MappedFlow {
     /// The unified report for `cycles` elapsed (also computed by
     /// [`MappedFlow::run`]).
     pub fn report(&self, cycles: u64) -> RunReport {
-        let topo = self.sys.net.topo();
-        let cfg = *self.sys.net.cfg();
-        let n_fpgas = self.partition.as_ref().map_or(1, |p| p.n_fpgas);
-        let mut resources_per_fpga = match &self.partition {
-            Some(p) => p.noc_resources_per_fpga(topo, &cfg, &self.serdes),
-            None => vec![topo.router_resources(&cfg)],
+        let mut report = match &self.sim {
+            FlowSim::Mono(sys) => {
+                let topo = sys.net.topo();
+                let cfg = *sys.net.cfg();
+                let resources_per_fpga = match &self.partition {
+                    Some(p) => p.noc_resources_per_fpga(topo, &cfg, &self.serdes),
+                    None => vec![topo.router_resources(&cfg)],
+                };
+                let serdes_flits =
+                    sys.net.serdes_channels().map(|(_, c)| c.carried).sum();
+                let serdes_cycles_per_flit = sys
+                    .net
+                    .serdes_channels()
+                    .next()
+                    .map_or(0, |(_, c)| c.ser_cycles);
+                let pins_per_fpga = match &self.partition {
+                    Some(p) => p.pins_per_fpga(topo, &self.serdes),
+                    None => vec![0],
+                };
+                RunReport {
+                    flow: self.name.clone(),
+                    cycles,
+                    net: sys.net.stats().clone(),
+                    pes: Vec::new(),
+                    n_fpgas: self.partition.as_ref().map_or(1, |p| p.n_fpgas),
+                    cut_links: self.cut_links,
+                    serdes_cycles_per_flit,
+                    serdes_flits,
+                    pins_per_fpga,
+                    resources_per_fpga,
+                    per_chip: Vec::new(),
+                    links: Vec::new(),
+                }
+            }
+            FlowSim::Sharded(sys) => {
+                RunReport::from_multichip(&self.name, cycles, &sys.sim)
+            }
         };
-        let mut pes = Vec::with_capacity(self.pe_names.len());
+        // Per-PE stats, and wrapper/datapath resources onto the FPGA
+        // hosting each PE.
         for ((name, node), res) in self.pe_names.iter().zip(&self.pe_resources) {
             let fpga = self.fpga_of(*node);
-            resources_per_fpga[fpga] += *res;
-            let wpe = self.sys.pe(*node).expect("PE attached at its endpoint");
-            pes.push(PeRunStat {
+            report.resources_per_fpga[fpga] += *res;
+            let wpe = self.sim.pe(*node).expect("PE attached at its endpoint");
+            report.pes.push(PeRunStat {
                 name: name.clone(),
                 node: *node,
                 fpga,
@@ -652,36 +889,14 @@ impl MappedFlow {
                 busy_cycles: wpe.busy_cycles,
             });
         }
-        let serdes_flits = self.sys.net.serdes_channels().map(|(_, c)| c.carried).sum();
-        let serdes_cycles_per_flit = self
-            .sys
-            .net
-            .serdes_channels()
-            .next()
-            .map_or(0, |(_, c)| c.ser_cycles);
-        let pins_per_fpga = match &self.partition {
-            Some(p) => p.pins_per_fpga(topo, &self.serdes),
-            None => vec![0],
-        };
-        RunReport {
-            flow: self.name.clone(),
-            cycles,
-            net: self.sys.net.stats().clone(),
-            pes,
-            n_fpgas,
-            cut_links: self.cut_links,
-            serdes_cycles_per_flit,
-            serdes_flits,
-            pins_per_fpga,
-            resources_per_fpga,
-        }
+        report
     }
 
     /// Drain every flit ejected at a tap (raw host read).
     pub fn drain(&mut self, tap: &str) -> Vec<Flit> {
         let node = self.tap_node(tap);
         let mut out = Vec::new();
-        while let Some(f) = self.sys.net.eject(node) {
+        while let Some(f) = self.sim.eject(node) {
             out.push(f);
         }
         out
@@ -690,7 +905,7 @@ impl MappedFlow {
     /// Drain a tap and reassemble flits into `bits`-wide messages, one
     /// per (source, epoch, argument), sorted by (epoch, source, argument).
     pub fn drain_messages(&mut self, tap: &str, bits: usize) -> Vec<TapMessage> {
-        let fw = self.sys.net.cfg().flit_data_width;
+        let fw = self.sim.flit_width();
         let mut groups: BTreeMap<(u32, NodeId, u8), Vec<Flit>> = BTreeMap::new();
         for f in self.drain(tap) {
             let (epoch, arg) = split_tag(f.tag);
@@ -714,12 +929,12 @@ impl MappedFlow {
             .iter()
             .find(|(n, _)| n.as_str() == pe)
             .map(|&(_, node)| node)?;
-        self.sys.readback(node)
+        self.sim.readback(node)
     }
 
     fn fpga_of(&self, node: NodeId) -> usize {
         match &self.partition {
-            Some(p) => p.assignment[self.sys.net.topo().endpoint_router(node)],
+            Some(p) => p.assignment[self.sim.endpoint_router(node)],
             None => 0,
         }
     }
@@ -897,6 +1112,101 @@ mod tests {
         assert!(split_report.serdes_cycles_per_flit > 0);
         assert_eq!(split_report.pins_per_fpga.len(), 2);
         assert_eq!(split_report.resources_per_fpga.len(), 2);
+    }
+
+    #[test]
+    fn multichip_flow_same_messages_as_monolithic_partition() {
+        // The same partitioned flow through the monolithic backend and
+        // the sharded co-simulation: identical reassembled messages; the
+        // sharded run carries per-chip stats and per-link occupancy.
+        let build = |multichip: bool| -> MappedFlow {
+            let mut fb = FlowBuilder::new("sharded");
+            fb.topology(Topology::Mesh { w: 2, h: 2 })
+                .pe_at("src", 0, Box::new(Source { msgs: source_msgs(10, 3) }))
+                .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 2 }))
+                .tap_at("out", 2)
+                .partition(Partition::new(2, vec![0, 0, 1, 1]));
+            if multichip {
+                fb.multichip(SerdesConfig::default());
+            }
+            fb.build().unwrap()
+        };
+        let mut mono = build(false);
+        let mono_report = mono.run().unwrap();
+        let mono_msgs = mono.drain_messages("out", 16);
+
+        let mut sharded = build(true);
+        let sharded_report = sharded.run().unwrap();
+        let sharded_msgs = sharded.drain_messages("out", 16);
+
+        assert_eq!(mono_msgs, sharded_msgs, "sharding must not change results");
+        assert!(sharded_report.cycles >= mono_report.cycles);
+        assert_eq!(sharded_report.n_fpgas, 2);
+        assert_eq!(sharded_report.per_chip.len(), 2);
+        assert!(!sharded_report.links.is_empty());
+        assert!(sharded_report.links.iter().any(|l| l.carried > 0));
+        assert!(sharded_report.serdes_flits > 0);
+        assert_eq!(
+            sharded_report.per_chip.iter().map(|s| s.delivered).sum::<u64>(),
+            sharded_report.net.delivered
+        );
+        // Mono runs report no sharded extras.
+        assert!(mono_report.per_chip.is_empty() && mono_report.links.is_empty());
+        // PE stats flow through the sharded backend too.
+        let add = sharded_report.pes.iter().find(|p| p.name == "add").unwrap();
+        assert_eq!(add.invocations, 10);
+        assert_eq!(add.fpga, 1);
+    }
+
+    #[test]
+    fn multichip_without_partition_is_a_layout_error() {
+        let mut fb = FlowBuilder::new("nopart");
+        fb.pe("p", Box::new(Source { msgs: Vec::new() }))
+            .multichip(SerdesConfig::default());
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+    }
+
+    #[test]
+    fn pin_together_keeps_units_on_one_fpga() {
+        // The pfilter-root shape: a root PE and the tap collecting its
+        // histograms must share a chip under auto-partitioning.
+        let mut fb = FlowBuilder::new("pinned");
+        fb.topology(Topology::Mesh { w: 4, h: 4 })
+            .pe_at("root", 0, Box::new(Source { msgs: Vec::new() }))
+            .tap_at("histo", 1)
+            .auto_partition(2)
+            .seed(5)
+            .pin_together("root", "histo");
+        let flow = fb.build().unwrap();
+        let p = flow.partition().unwrap();
+        assert_eq!(p.assignment[0], p.assignment[1], "pinned pair split across FPGAs");
+
+        // Unpinned units cannot be pinned together (placement unknown).
+        let mut fb = FlowBuilder::new("unpinned");
+        fb.pe("a", Box::new(Source { msgs: Vec::new() }))
+            .tap("t")
+            .auto_partition(2)
+            .pin_together("a", "t");
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // A manual partition that splits a pinned pair is rejected, not
+        // silently accepted.
+        let mut fb = FlowBuilder::new("manual-split");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("root", 0, Box::new(Source { msgs: Vec::new() }))
+            .tap_at("histo", 3)
+            .partition(Partition::new(2, vec![0, 0, 1, 1]))
+            .pin_together("root", "histo");
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
+
+        // ...while a manual partition that honors it builds fine.
+        let mut fb = FlowBuilder::new("manual-ok");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("root", 0, Box::new(Source { msgs: Vec::new() }))
+            .tap_at("histo", 1)
+            .partition(Partition::new(2, vec![0, 0, 1, 1]))
+            .pin_together("root", "histo");
+        assert!(fb.build().is_ok());
     }
 
     #[test]

@@ -60,10 +60,13 @@
 //!   [`pe::Processor`] trait and collector/distributor wrappers, and the
 //!   cycle-level packet-switched NoC simulator (ring/mesh/torus/fat-tree
 //!   and custom topologies, CONNECT-style routers).
-//! * **Phase 2 — partitioning across FPGAs** ([`partition`], [`serdes`]):
-//!   user-specified or automatically derived cuts, with quasi-SERDES
-//!   endpoints stitched onto every cut link so the design runs unchanged
-//!   across chips.
+//! * **Phase 2 — partitioning across FPGAs** ([`partition`], [`serdes`],
+//!   [`noc::multichip`]): user-specified or automatically derived cuts,
+//!   with quasi-SERDES endpoints stitched onto every cut link so the
+//!   design runs unchanged across chips — either spliced into one
+//!   monolithic network, or executed as a true sharded co-simulation
+//!   (one `Network` per FPGA, cut links genuinely serializing each flit;
+//!   [`flow::FlowBuilder::multichip`]).
 //! * **Case studies** ([`apps`]): LDPC min-sum decoding over a 4×4 mesh,
 //!   particle-filter object tracking, and Boolean matrix-vector
 //!   multiplication over GF(2) using Ryan Williams' sub-quadratic

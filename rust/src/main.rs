@@ -8,6 +8,7 @@
 //! fabricflow dfg --cores 4              # Fig 2 DFG→MIPS flow
 //! fabricflow noc --topo mesh8x8         # raw NoC traffic experiment
 //! fabricflow scenarios --topo mesh8x8   # scenario matrix (engine-selectable)
+//! fabricflow scenarios --chips 2        # …sharded across FPGAs (multichip co-sim)
 //! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
 //! fabricflow partition                  # Fig 5 quasi-SERDES demo
 //! fabricflow resources                  # device + component inventory
@@ -255,9 +256,24 @@ fn cmd_scenarios(args: &Args) {
     let cycles = args.get("cycles", 2_000u64);
     let seed = args.get("seed", 1u64);
     let which = args.str("scenario", "all");
+    // --chips N (N >= 2) runs the sharded multi-FPGA co-simulation:
+    // Partition::balanced over N chips, cut links on quasi-serdes wires.
+    let chips = args.get("chips", 0usize);
     let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let partition = (chips >= 2).then(|| Partition::balanced(&topo.build(), chips, seed));
+    let serdes = SerdesConfig {
+        pins: args.get("pins", 8u32),
+        clock_div: args.get("clock-div", 1u32),
+        tx_buffer: 8,
+    };
     println!(
-        "scenario matrix on {topo:?} — {} engine, load {load}, {cycles}-cycle window, seed {seed}"
+        "scenario matrix on {topo:?} — {} engine, load {load}, {cycles}-cycle window, seed {seed}{}",
+        engine.name(),
+        if chips >= 2 {
+            format!(", sharded across {chips} FPGAs ({} pins)", serdes.pins)
+        } else {
+            String::new()
+        }
     );
     let mut matched = false;
     for scn in scenario::registry() {
@@ -265,8 +281,30 @@ fn cmd_scenarios(args: &Args) {
             continue;
         }
         matched = true;
-        match scenario::run_scenario(&scn, &topo, cfg, load, cycles, seed) {
-            Ok(out) => println!("  {:14} {}", scn.name, out.report),
+        let outcome = match &partition {
+            Some(p) => {
+                let sharding = scenario::Sharding { partition: p, serdes };
+                scenario::run_scenario_multichip(&scn, &topo, cfg, &sharding, load, cycles, seed)
+            }
+            None => scenario::run_scenario(&scn, &topo, cfg, load, cycles, seed),
+        };
+        match outcome {
+            Ok(out) => {
+                println!("  {:14} {}", scn.name, out.report);
+                if let Some(busiest) =
+                    out.report.links.iter().max_by_key(|l| l.active_cycles)
+                {
+                    println!(
+                        "  {:14}   busiest link R{}→R{}: {} flits, {:.1}% occupied, {} stall cyc",
+                        "",
+                        busiest.from.0,
+                        busiest.to.0,
+                        busiest.carried,
+                        100.0 * busiest.occupancy(out.report.net.cycles),
+                        busiest.stall_cycles
+                    );
+                }
+            }
             Err(stall) => println!("  {:14} STALLED: {stall}", scn.name),
         }
     }

@@ -25,6 +25,7 @@
 
 pub mod engine;
 pub mod flit;
+pub mod multichip;
 pub mod topology;
 pub mod router;
 pub mod network;
@@ -34,6 +35,7 @@ pub mod traffic;
 
 pub use engine::Stalled;
 pub use flit::{Flit, NodeId};
+pub use multichip::{LinkStat, MultiChipSim};
 pub use network::Network;
 pub use stats::NetStats;
 pub use topology::Topology;

@@ -1,0 +1,867 @@
+//! Sharded multi-FPGA co-simulation (paper §III, Fig 6).
+//!
+//! The monolithic path models a partitioned fabric as ONE [`Network`]
+//! with [`crate::serdes::SerdesChannel`]s spliced into cut links — the
+//! timing is right, but the "seamless partitioning" claim is never
+//! actually *executed*: there is still a single flit arena, a single
+//! allocator sweep, a single clock. [`MultiChipSim`] closes that gap by
+//! materializing one `Network` **per FPGA**:
+//!
+//! * each chip gets its own flit arena, allocator state and route plan,
+//!   built over the chip-local subgraph
+//!   ([`super::topology::chip_graph`]) — routes are the *global* routing
+//!   function tabulated per chip, so a flit follows the monolithic path
+//!   hop for hop, virtual channels included;
+//! * every cut link becomes a pair of directed [`WireChannel`]s that
+//!   **actually serialize** each flit into MSB-first pin samples
+//!   ([`crate::serdes::serialize_flit_into`]) and deserialize on the far
+//!   side, `ceil(wire_bits / pins) × clock_div` cycles later;
+//! * the TX side is a bounded buffer that back-pressures the local
+//!   router exactly like the paper's "keep it in buffer" protocol, and
+//!   per-VC gateway credits mirror the remote input ring so a flit never
+//!   enters the wire without guaranteed landing space (the monolithic
+//!   credit loop, stretched across chips);
+//! * the chips are co-scheduled in lockstep: one cycle per chip, then a
+//!   link-synchronization barrier that carries credits, completed
+//!   transfers and fresh TX flits between chips. Chips are independent
+//!   within a cycle, so [`MultiChipSim::set_threaded`] steps them on
+//!   scoped threads between barriers.
+//!
+//! Two schedulers mirror the single-chip engines: with
+//! [`SimEngine::Reference`] every chip steps every cycle (the lockstep
+//! ground truth); with [`SimEngine::EventDriven`] each chip uses its
+//! ActiveSet worklists and [`MultiChipSim::run_until_idle`] jumps over
+//! spans where every chip is idle and only a wire transfer is pending.
+//! Both produce identical results (`tests/multichip_diff.rs`), and the
+//! sharded simulation delivers the same messages in the same
+//! per-(source, destination) order as the monolithic `Network` — the
+//! differential conformance suite enforces it across the scenario
+//! matrix.
+
+use std::collections::VecDeque;
+
+use super::engine::Stalled;
+use super::flit::{Flit, NodeId};
+use super::stats::NetStats;
+use super::topology::{chip_graph, TopoGraph, Topology};
+use super::{Network, NocConfig, SimEngine};
+use crate::partition::Partition;
+use crate::serdes::{
+    deserialize_flit_from, serialize_flit_into, wire_bits, SerdesConfig,
+};
+
+/// Wire-format parameters shared by every channel of a sharded fabric.
+#[derive(Clone, Copy, Debug)]
+struct WireFmt {
+    width: u32,
+    n_eps: usize,
+    pins: u32,
+}
+
+/// One flit on the wire: its serialized pin samples, the completion
+/// cycle of its last sample, and the `injected_at` sidecar (a simulator
+/// timestamp, not wire data).
+#[derive(Debug)]
+struct WireEntry {
+    samples: Vec<u64>,
+    injected_at: u64,
+    done: u64,
+}
+
+/// One direction of a cut link at cycle granularity, carrying *actually
+/// serialized* flits. Sample buffers are pooled: the steady-state TX →
+/// RX loop allocates nothing after warm-up.
+#[derive(Debug)]
+struct WireChannel {
+    ser_cycles: u64,
+    tx_buffer: usize,
+    queue: VecDeque<WireEntry>,
+    pool: Vec<Vec<u64>>,
+    busy_until: u64,
+    carried: u64,
+    /// Cycles the pins spent actively shifting (transfers never overlap
+    /// on one link, so this is exact occupancy).
+    active_cycles: u64,
+    /// Cycles a latched flit waited because the TX buffer was full.
+    stall_cycles: u64,
+}
+
+impl WireChannel {
+    fn new(serdes: &SerdesConfig, flit_bits: u32) -> Self {
+        WireChannel {
+            ser_cycles: serdes.cycles_per_flit(flit_bits),
+            tx_buffer: serdes.tx_buffer,
+            queue: VecDeque::new(),
+            pool: Vec::new(),
+            busy_until: 0,
+            carried: 0,
+            active_cycles: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    fn can_accept(&self) -> bool {
+        self.queue.len() < self.tx_buffer
+    }
+
+    /// Serialize `f` onto the pins at `cycle`; its last sample lands at
+    /// `max(busy_until, cycle) + ser_cycles` (back-to-back pipelining).
+    fn push(&mut self, f: &Flit, cycle: u64, fmt: WireFmt) {
+        debug_assert!(self.can_accept());
+        // Fields that do not fit the wire format would silently corrupt
+        // on a real link; fail loudly in simulation instead.
+        assert!(f.tag < 1 << 16, "flit tag {} exceeds the 16-bit wire field", f.tag);
+        assert!(f.seq < 1 << 8, "flit seq {} exceeds the 8-bit wire field", f.seq);
+        assert!(
+            fmt.width >= 64 || f.data >> fmt.width == 0,
+            "flit data {:#x} exceeds the {}-bit wire payload",
+            f.data,
+            fmt.width
+        );
+        let mut samples = self.pool.pop().unwrap_or_default();
+        serialize_flit_into(f, fmt.width, fmt.n_eps, fmt.pins, &mut samples);
+        let start = self.busy_until.max(cycle);
+        let done = start + self.ser_cycles;
+        self.busy_until = done;
+        self.active_cycles += self.ser_cycles;
+        self.queue.push_back(WireEntry { samples, injected_at: f.injected_at, done });
+    }
+
+    /// Deserialize the next flit whose transfer completed by `cycle`.
+    fn pop_ready(&mut self, cycle: u64, fmt: WireFmt) -> Option<Flit> {
+        if !self.queue.front().is_some_and(|e| e.done <= cycle) {
+            return None;
+        }
+        let entry = self.queue.pop_front().unwrap();
+        let mut flit = deserialize_flit_from(&entry.samples, fmt.width, fmt.n_eps, fmt.pins)
+            .expect("wire channel carried an invalid flit");
+        flit.injected_at = entry.injected_at;
+        self.pool.push(entry.samples);
+        self.carried += 1;
+        Some(flit)
+    }
+
+    fn next_ready(&self) -> Option<u64> {
+        self.queue.front().map(|e| e.done)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// One directed cut-link bridge between two chips.
+#[derive(Debug)]
+struct Link {
+    from_chip: usize,
+    /// Chip-local router index of the TX side.
+    from_router: usize,
+    from_port: usize,
+    to_chip: usize,
+    /// Chip-local router index of the RX side.
+    to_router: usize,
+    to_port: usize,
+    /// Global router ids (reporting only).
+    from_global: usize,
+    to_global: usize,
+    chan: WireChannel,
+}
+
+/// Per-link occupancy/stall statistics, reported through
+/// [`crate::flow::RunReport`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LinkStat {
+    pub from_chip: usize,
+    pub to_chip: usize,
+    /// Global (router, port) of the transmitting side.
+    pub from: (usize, usize),
+    /// Global (router, port) of the receiving side.
+    pub to: (usize, usize),
+    /// Flits carried end to end.
+    pub carried: u64,
+    /// Cycles the pins spent actively shifting.
+    pub active_cycles: u64,
+    /// Cycles a latched flit waited on a full TX buffer.
+    pub stall_cycles: u64,
+    /// Serialization latency per flit.
+    pub cycles_per_flit: u64,
+    /// Flits on the wire right now.
+    pub in_flight: usize,
+}
+
+impl LinkStat {
+    /// Fraction of `elapsed` cycles the pins were busy.
+    pub fn occupancy(&self, elapsed: u64) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            self.active_cycles as f64 / elapsed as f64
+        }
+    }
+}
+
+/// The sharded multi-FPGA co-simulation: one [`Network`] per FPGA of a
+/// [`Partition`], cut links bridged by cycle-true serializing
+/// [`WireChannel`]s. See the [module docs](self).
+pub struct MultiChipSim {
+    chips: Vec<Network>,
+    links: Vec<Link>,
+    /// `links[i]` pairs with `links[reverse[i]]` — the same physical cut
+    /// in the opposite direction.
+    reverse: Vec<usize>,
+    partition: Partition,
+    global: TopoGraph,
+    /// Chip hosting each global endpoint.
+    ep_chip: Vec<usize>,
+    serdes: SerdesConfig,
+    cfg: NocConfig,
+    fmt: WireFmt,
+    cycle: u64,
+    /// Flits currently inside wire channels (owned by no chip).
+    in_flight: usize,
+    /// Wire events (pushes + pops) — with the chips' `moves` counters,
+    /// the progress detector for stall reporting.
+    wire_moves: u64,
+    threaded: bool,
+    credit_scratch: Vec<(u32, u8)>,
+}
+
+impl MultiChipSim {
+    /// Shard `topo` across the FPGAs of `partition`, bridging every cut
+    /// link with a pair of `serdes`-timed wire channels.
+    pub fn new(
+        topo: &Topology,
+        cfg: NocConfig,
+        partition: &Partition,
+        serdes: SerdesConfig,
+    ) -> Self {
+        Self::from_graph(topo.build(), cfg, partition, serdes)
+    }
+
+    /// [`MultiChipSim::new`] over an already-built router graph.
+    pub fn from_graph(
+        global: TopoGraph,
+        cfg: NocConfig,
+        partition: &Partition,
+        serdes: SerdesConfig,
+    ) -> Self {
+        assert_eq!(
+            partition.assignment.len(),
+            global.n_routers,
+            "partition covers {} routers but the topology has {}",
+            partition.assignment.len(),
+            global.n_routers
+        );
+        assert!(
+            (1..=64).contains(&serdes.pins),
+            "serdes pins must be 1..=64 (one u64 pin sample), got {}",
+            serdes.pins
+        );
+        assert!(serdes.tx_buffer >= 1, "serdes tx_buffer must be >= 1");
+        let flit_bits = wire_bits(cfg.flit_data_width, global.n_endpoints);
+        let fmt = WireFmt {
+            width: cfg.flit_data_width,
+            n_eps: global.n_endpoints,
+            pins: serdes.pins,
+        };
+        // Directed wire links: cut k becomes ids 2k (a→b) and 2k+1 (b→a).
+        let cuts = partition.cut_links(&global);
+        let mut link_at: Vec<Vec<u32>> = global
+            .ports
+            .iter()
+            .map(|ports| vec![u32::MAX; ports.len()])
+            .collect();
+        for (k, c) in cuts.iter().enumerate() {
+            link_at[c.a_router][c.a_port] = 2 * k as u32;
+            link_at[c.b_router][c.b_port] = 2 * k as u32 + 1;
+        }
+        // One Network per chip over the chip-local subgraph.
+        let mut chips = Vec::with_capacity(partition.n_fpgas);
+        let mut local_of = vec![usize::MAX; global.n_routers];
+        let mut cfg = cfg;
+        for chip in 0..partition.n_fpgas {
+            let (graph, locals) =
+                chip_graph(&global, &partition.assignment, chip, |r, p| link_at[r][p]);
+            for (i, &g) in locals.iter().enumerate() {
+                local_of[g] = i;
+            }
+            chips.push(Network::from_graph(graph, cfg));
+        }
+        // Chips raise num_vcs to the topology minimum; mirror that in the
+        // stored config so reporting sees what was actually built.
+        if let Some(first) = chips.first() {
+            cfg.num_vcs = first.cfg().num_vcs;
+        }
+        let mut links = Vec::with_capacity(2 * cuts.len());
+        let mut reverse = Vec::with_capacity(2 * cuts.len());
+        for c in &cuts {
+            let (fa, fb) = (
+                partition.assignment[c.a_router],
+                partition.assignment[c.b_router],
+            );
+            links.push(Link {
+                from_chip: fa,
+                from_router: local_of[c.a_router],
+                from_port: c.a_port,
+                to_chip: fb,
+                to_router: local_of[c.b_router],
+                to_port: c.b_port,
+                from_global: c.a_router,
+                to_global: c.b_router,
+                chan: WireChannel::new(&serdes, flit_bits),
+            });
+            links.push(Link {
+                from_chip: fb,
+                from_router: local_of[c.b_router],
+                from_port: c.b_port,
+                to_chip: fa,
+                to_router: local_of[c.a_router],
+                to_port: c.a_port,
+                from_global: c.b_router,
+                to_global: c.a_router,
+                chan: WireChannel::new(&serdes, flit_bits),
+            });
+            reverse.push(links.len() - 1);
+            reverse.push(links.len() - 2);
+        }
+        let ep_chip = global
+            .endpoint_attach
+            .iter()
+            .map(|&(r, _)| partition.assignment[r])
+            .collect();
+        MultiChipSim {
+            chips,
+            links,
+            reverse,
+            partition: partition.clone(),
+            global,
+            ep_chip,
+            serdes,
+            cfg,
+            fmt,
+            cycle: 0,
+            in_flight: 0,
+            wire_moves: 0,
+            threaded: false,
+            credit_scratch: Vec::new(),
+        }
+    }
+
+    /// Step the chips on scoped threads between link barriers. Results
+    /// are identical either way — the point is to *demonstrate* (and
+    /// differentially test) that chips are independent between
+    /// synchronization barriers, the property a real distributed
+    /// deployment relies on. It is not a throughput feature: spawning a
+    /// scope per cycle costs far more than a small chip's step, so keep
+    /// it off in benchmarks until a persistent worker pool exists.
+    pub fn set_threaded(&mut self, threaded: bool) {
+        self.threaded = threaded;
+    }
+
+    /// Global endpoint count.
+    pub fn n_endpoints(&self) -> usize {
+        self.global.n_endpoints
+    }
+
+    /// FPGAs in the fabric.
+    pub fn n_chips(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Bidirectional cut links bridged by wire-channel pairs.
+    pub fn n_cut_links(&self) -> usize {
+        self.links.len() / 2
+    }
+
+    /// Chip hosting global endpoint `e`.
+    pub fn chip_of(&self, e: NodeId) -> usize {
+        self.ep_chip[e]
+    }
+
+    /// The per-chip networks (per-chip `NetStats` live here).
+    pub fn chips(&self) -> &[Network] {
+        &self.chips
+    }
+
+    /// Mutable access to the chip hosting endpoint `e` (the PE layer
+    /// ticks each wrapped PE against its own chip).
+    pub fn chip_for_endpoint_mut(&mut self, e: NodeId) -> &mut Network {
+        &mut self.chips[self.ep_chip[e]]
+    }
+
+    /// The whole-fabric router graph the shards were carved from.
+    pub fn global_topo(&self) -> &TopoGraph {
+        &self.global
+    }
+
+    /// The partition this fabric is sharded by.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Quasi-SERDES link parameters of the cut-link bridges.
+    pub fn serdes_cfg(&self) -> &SerdesConfig {
+        &self.serdes
+    }
+
+    /// NoC configuration every chip was built with.
+    pub fn cfg(&self) -> &NocConfig {
+        &self.cfg
+    }
+
+    /// Serialization latency per flit on the cut links (0 when the
+    /// partition cuts nothing).
+    pub fn serdes_cycles_per_flit(&self) -> u64 {
+        self.links.first().map_or(0, |l| l.chan.ser_cycles)
+    }
+
+    /// Synchronized cycle counter (equal across every chip).
+    pub fn cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Hand a flit to its source chip's NI.
+    pub fn inject(&mut self, e: NodeId, flit: Flit) {
+        self.chips[self.ep_chip[e]].inject(e, flit);
+    }
+
+    /// Packetize and inject a message at endpoint `src` (see
+    /// [`Network::send_message`]).
+    pub fn send_message(
+        &mut self,
+        src: NodeId,
+        dst: NodeId,
+        tag: u32,
+        payload: &[u64],
+        bits: usize,
+    ) {
+        self.chips[self.ep_chip[src]].send_message(src, dst, tag, payload, bits);
+    }
+
+    /// Pop the next flit ejected at endpoint `e`, if any.
+    pub fn eject(&mut self, e: NodeId) -> Option<Flit> {
+        self.chips[self.ep_chip[e]].eject(e)
+    }
+
+    /// Flits not yet delivered anywhere in the fabric: queued at NIs,
+    /// inside a chip, or on a wire.
+    pub fn pending(&self) -> usize {
+        self.chips.iter().map(|c| c.pending()).sum::<usize>() + self.in_flight
+    }
+
+    /// True when every chip is drained and no flit is on any wire.
+    pub fn idle(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Per-link occupancy/stall statistics.
+    pub fn link_stats(&self) -> Vec<LinkStat> {
+        self.links
+            .iter()
+            .map(|l| LinkStat {
+                from_chip: l.from_chip,
+                to_chip: l.to_chip,
+                from: (l.from_global, l.from_port),
+                to: (l.to_global, l.to_port),
+                carried: l.chan.carried,
+                active_cycles: l.chan.active_cycles,
+                stall_cycles: l.chan.stall_cycles,
+                cycles_per_flit: l.chan.ser_cycles,
+                in_flight: l.chan.in_flight(),
+            })
+            .collect()
+    }
+
+    /// Flits carried over all wire channels.
+    pub fn wire_flits(&self) -> u64 {
+        self.links.iter().map(|l| l.chan.carried).sum()
+    }
+
+    /// Fabric-wide counters: per-chip [`NetStats`] summed. A flit is
+    /// counted `injected` on its source chip and `delivered` on its
+    /// destination chip, so the totals match the monolithic simulation;
+    /// `link_hops` includes one hop per wire crossing (as the monolithic
+    /// serdes path counts it).
+    pub fn stats(&self) -> NetStats {
+        let mut total = NetStats::default();
+        for chip in &self.chips {
+            let s = chip.stats();
+            total.injected += s.injected;
+            total.delivered += s.delivered;
+            total.total_latency += s.total_latency;
+            total.max_latency = total.max_latency.max(s.max_latency);
+            total.link_hops += s.link_hops;
+            if total.latency_hist.len() < s.latency_hist.len() {
+                total.latency_hist.resize(s.latency_hist.len(), 0);
+            }
+            for (b, &n) in s.latency_hist.iter().enumerate() {
+                total.latency_hist[b] += n;
+            }
+        }
+        total.cycles = self.cycle;
+        total
+    }
+
+    /// Advance the whole fabric one cycle: every chip steps (serially or
+    /// on scoped threads), then the link-synchronization barrier carries
+    /// credits, completed transfers and fresh TX flits between chips.
+    pub fn step(&mut self) {
+        self.cycle += 1;
+        if self.threaded && self.chips.len() > 1 {
+            std::thread::scope(|s| {
+                for chip in self.chips.iter_mut() {
+                    s.spawn(move || chip.step());
+                }
+            });
+        } else {
+            for chip in &mut self.chips {
+                chip.step();
+            }
+        }
+        debug_assert!(self.chips.iter().all(|c| c.cycle() == self.cycle));
+        self.sync_links();
+    }
+
+    /// The link-synchronization barrier between chip steps.
+    fn sync_links(&mut self) {
+        let cycle = self.cycle;
+        let MultiChipSim {
+            chips,
+            links,
+            reverse,
+            credit_scratch,
+            fmt,
+            in_flight,
+            wire_moves,
+            ..
+        } = self;
+        // Credits: pops the chips performed this cycle free TX credits
+        // on the far side of the reverse link. The (link, vc) tuple
+        // fully names the TX port, so the returns of every chip drain
+        // into one scratch before being applied.
+        credit_scratch.clear();
+        for chip in chips.iter_mut() {
+            credit_scratch.append(&mut chip.gw_credit_returns);
+        }
+        for &(link, vc) in credit_scratch.iter() {
+            let tx = &links[reverse[link as usize]];
+            chips[tx.from_chip].gateway_credit(tx.from_router, tx.from_port, vc);
+        }
+        // RX: deserialize flits whose last pin sample has landed. The
+        // credit protocol guarantees input-ring space on arrival.
+        for link in links.iter_mut() {
+            if let Some(flit) = link.chan.pop_ready(cycle, *fmt) {
+                *in_flight -= 1;
+                *wire_moves += 1;
+                chips[link.to_chip].gateway_offer(link.to_router, link.to_port, flit);
+            }
+        }
+        // TX: pull gateway latches into channels with buffer room; a
+        // full buffer leaves the latch in place, back-pressuring the
+        // chip's allocator ("keep it in buffer").
+        for link in links.iter_mut() {
+            let chip = &mut chips[link.from_chip];
+            if link.chan.can_accept() {
+                if let Some(flit) = chip.gateway_take(link.from_router, link.from_port) {
+                    link.chan.push(&flit, cycle, *fmt);
+                    *in_flight += 1;
+                    *wire_moves += 1;
+                }
+            } else if chip.gateway_latched(link.from_router, link.from_port) {
+                link.chan.stall_cycles += 1;
+            }
+        }
+    }
+
+    /// Total flit movements across chips and wires (progress detector).
+    fn total_moves(&self) -> u64 {
+        self.chips.iter().map(|c| c.moves).sum::<u64>() + self.wire_moves
+    }
+
+    /// Earliest cycle at which any wire completes a transfer.
+    fn next_wire_ready(&self) -> Option<u64> {
+        self.links.iter().filter_map(|l| l.chan.next_ready()).min()
+    }
+
+    /// Jump the synchronized clock forward. Only valid while the whole
+    /// fabric is idle (every chip drained, nothing on any wire) —
+    /// scenario replay uses this to skip injection gaps.
+    pub fn fast_forward_to(&mut self, cycle: u64) {
+        assert!(self.idle(), "fast_forward_to on a non-idle fabric");
+        assert!(cycle >= self.cycle, "fast_forward_to goes backwards");
+        for chip in &mut self.chips {
+            chip.fast_forward_to(cycle);
+        }
+        self.cycle = cycle;
+    }
+
+    /// Jump every (idle) chip to `cycle` while wires are still busy —
+    /// the fast path's serdes-only-span skip.
+    fn fast_forward_chips(&mut self, cycle: u64) {
+        for chip in &mut self.chips {
+            chip.fast_forward_to(cycle);
+        }
+        self.cycle = cycle;
+    }
+
+    /// Step until the whole fabric is idle; returns cycles elapsed, or
+    /// [`Stalled`] once `max_cycles` pass with flits still pending. Under
+    /// [`SimEngine::EventDriven`], spans where every chip is idle and the
+    /// fabric is only waiting on a wire transfer are skipped in one jump;
+    /// a frozen fabric with no future wire event returns [`Stalled`]
+    /// immediately.
+    pub fn run_until_idle(&mut self, max_cycles: u64) -> Result<u64, Stalled> {
+        let start = self.cycle;
+        while !self.idle() {
+            if self.cycle - start >= max_cycles {
+                return Err(Stalled {
+                    cycles: self.cycle - start,
+                    pending: self.pending(),
+                });
+            }
+            let before = self.total_moves();
+            self.step();
+            if self.total_moves() == before {
+                match self.next_wire_ready() {
+                    Some(t) if t > self.cycle => {
+                        // Only wires can change the fabric state. The
+                        // reference scheduler steps through the span (the
+                        // lockstep ground truth); the fast path jumps it
+                        // when every chip is provably inert.
+                        let all_idle = self.chips.iter().all(|c| c.idle());
+                        if self.cfg.engine == SimEngine::EventDriven && all_idle {
+                            let target = (t - 1).min(start + max_cycles);
+                            self.fast_forward_chips(target);
+                        }
+                    }
+                    Some(_) => {}
+                    None => {
+                        return Err(Stalled {
+                            cycles: self.cycle - start,
+                            pending: self.pending(),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(self.cycle - start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::Topology;
+    use crate::util::Rng;
+
+    fn bisection(n: usize, cols: usize) -> Partition {
+        Partition::new(2, (0..n).map(|r| usize::from(r % cols >= cols / 2)).collect())
+    }
+
+    fn uniform_traffic(seed: u64, n: usize, count: u32) -> Vec<(usize, usize, u32, u64)> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|k| {
+                let s = rng.index(n);
+                let d = (s + 1 + rng.index(n - 1)) % n;
+                (s, d, k, rng.next_u64() & 0xFFFF)
+            })
+            .collect()
+    }
+
+    fn drain_sorted(
+        mut eject: impl FnMut(usize) -> Option<Flit>,
+        n: usize,
+    ) -> Vec<(usize, usize, u32, u64)> {
+        let mut got = Vec::new();
+        for d in 0..n {
+            while let Some(f) = eject(d) {
+                got.push((f.src, f.dst, f.tag, f.data));
+            }
+        }
+        got.sort_unstable();
+        got
+    }
+
+    #[test]
+    fn single_chip_partition_is_bit_identical_to_monolithic() {
+        // n_fpgas = 1: no cuts, no wires — the sharded simulation IS the
+        // monolithic network and must match it cycle for cycle.
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let traffic = uniform_traffic(0xA11CE, 16, 400);
+        let mut mono = Network::new(&topo, NocConfig::paper());
+        let mut sim = MultiChipSim::new(
+            &topo,
+            NocConfig::paper(),
+            &Partition::single(16),
+            SerdesConfig::default(),
+        );
+        for &(s, d, k, x) in &traffic {
+            mono.inject(s, Flit::single(s, d, k, x));
+            sim.inject(s, Flit::single(s, d, k, x));
+        }
+        let mc = mono.run_until_idle(1_000_000).unwrap();
+        let sc = sim.run_until_idle(1_000_000).unwrap();
+        assert_eq!(mc, sc, "no cut means no extra latency");
+        assert_eq!(mono.stats(), &sim.stats());
+        assert_eq!(
+            drain_sorted(|e| mono.eject(e), 16),
+            drain_sorted(|e| sim.eject(e), 16)
+        );
+    }
+
+    #[test]
+    fn bisected_mesh_delivers_the_same_multiset_slower() {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let part = bisection(16, 4);
+        let traffic = uniform_traffic(7, 16, 600);
+        let mut mono = Network::new(&topo, NocConfig::paper());
+        let mut sim =
+            MultiChipSim::new(&topo, NocConfig::paper(), &part, SerdesConfig::default());
+        assert_eq!(sim.n_chips(), 2);
+        assert_eq!(sim.n_cut_links(), 4);
+        for &(s, d, k, x) in &traffic {
+            mono.inject(s, Flit::single(s, d, k, x));
+            sim.inject(s, Flit::single(s, d, k, x));
+        }
+        let mc = mono.run_until_idle(1_000_000).unwrap();
+        let sc = sim.run_until_idle(10_000_000).unwrap();
+        assert!(sc > mc, "serialization must cost cycles ({sc} vs {mc})");
+        assert_eq!(
+            drain_sorted(|e| mono.eject(e), 16),
+            drain_sorted(|e| sim.eject(e), 16),
+            "sharding must not change delivery"
+        );
+        let combined = sim.stats();
+        assert_eq!(combined.injected, 600);
+        assert_eq!(combined.delivered, 600);
+        // Same routes, hop for hop: combined link hops match monolithic.
+        assert_eq!(combined.link_hops, mono.stats().link_hops);
+        assert!(sim.wire_flits() > 0);
+        let stats = sim.link_stats();
+        assert_eq!(stats.len(), 8);
+        for l in &stats {
+            assert_eq!(l.active_cycles, l.carried * l.cycles_per_flit);
+            assert_eq!(l.in_flight, 0);
+        }
+    }
+
+    #[test]
+    fn schedulers_and_threads_agree_exactly() {
+        // Reference lockstep, event-driven fast path, and threaded
+        // stepping must be indistinguishable: same final cycle, same
+        // combined stats, same eject order.
+        let topo = Topology::Torus { w: 4, h: 4 };
+        let part = bisection(16, 4);
+        let serdes = SerdesConfig { pins: 2, clock_div: 3, tx_buffer: 4 };
+        let traffic = uniform_traffic(99, 16, 300);
+        let run = |engine: SimEngine, threaded: bool| {
+            let cfg = NocConfig { engine, ..NocConfig::paper() };
+            let mut sim = MultiChipSim::new(&topo, cfg, &part, serdes);
+            sim.set_threaded(threaded);
+            for &(s, d, k, x) in &traffic {
+                sim.inject(s, Flit::single(s, d, k, x));
+            }
+            let cycles = sim.run_until_idle(50_000_000).unwrap();
+            let mut ejects = Vec::new();
+            for e in 0..16 {
+                while let Some(f) = sim.eject(e) {
+                    ejects.push((e, f.src, f.tag, f.data));
+                }
+            }
+            (cycles, sim.cycle(), sim.stats(), ejects)
+        };
+        let reference = run(SimEngine::Reference, false);
+        let event = run(SimEngine::EventDriven, false);
+        let threaded = run(SimEngine::EventDriven, true);
+        assert_eq!(reference, event, "fast path must match lockstep");
+        assert_eq!(event, threaded, "threads must not change results");
+    }
+
+    #[test]
+    fn depth_one_tx_buffer_backpressures_without_loss() {
+        // Two maximum-backpressure corners, exactly-once delivery in
+        // both. (a) tx_buffer 1 + buffer_depth 1: every hotspot flit
+        // squeezes through one latch, one wire slot and one ring slot —
+        // the per-VC credits throttle harder than the TX buffer, so the
+        // latch never stalls but nothing may be lost. (b) tx_buffer 1 +
+        // the paper's depth 8: credits allow 8 outstanding flits, the
+        // one-slot wire is the bottleneck, and the TX latch must
+        // visibly stall.
+        let topo = Topology::Mesh { w: 4, h: 2 };
+        let part = bisection(8, 4);
+        let serdes = SerdesConfig { pins: 4, clock_div: 1, tx_buffer: 1 };
+        for depth in [1usize, 8] {
+            let cfg = NocConfig { buffer_depth: depth, ..NocConfig::paper() };
+            let mut sim = MultiChipSim::new(&topo, cfg, &part, serdes);
+            let mut sent = Vec::new();
+            for s in 0..8usize {
+                for k in 0..16u32 {
+                    if s != 6 {
+                        let tag = (s * 16) as u32 + k;
+                        sim.inject(s, Flit::single(s, 6, tag, tag as u64));
+                        sent.push((s, 6usize, tag, tag as u64));
+                    }
+                }
+            }
+            sim.run_until_idle(10_000_000).unwrap();
+            sent.sort_unstable();
+            assert_eq!(drain_sorted(|e| sim.eject(e), 8), sent, "depth {depth}");
+            if depth > serdes.tx_buffer {
+                assert!(
+                    sim.link_stats().iter().any(|l| l.stall_cycles > 0),
+                    "hotspot through a one-slot wire at depth {depth} must stall the latch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_source_destination_order_is_preserved() {
+        // Flits between one (src, dst) pair may never overtake each
+        // other, monolithic or sharded: deterministic memoryless routing
+        // sends them down one FIFO path.
+        let topo = Topology::Torus { w: 4, h: 4 };
+        let part = Partition::balanced(&topo.build(), 4, 3);
+        let mut sim = MultiChipSim::new(
+            &topo,
+            NocConfig::paper(),
+            &part,
+            SerdesConfig { pins: 1, clock_div: 2, tx_buffer: 2 },
+        );
+        for k in 0..64u32 {
+            sim.inject(2, Flit::single(2, 13, k, k as u64));
+            sim.inject(9, Flit::single(9, 13, 1000 + k, k as u64));
+        }
+        sim.run_until_idle(10_000_000).unwrap();
+        let mut from2 = Vec::new();
+        let mut from9 = Vec::new();
+        while let Some(f) = sim.eject(13) {
+            if f.src == 2 {
+                from2.push(f.tag);
+            } else {
+                from9.push(f.tag - 1000);
+            }
+        }
+        assert_eq!(from2, (0..64).collect::<Vec<u32>>());
+        assert_eq!(from9, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn stalled_is_reported_with_pending_counts() {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let part = bisection(16, 4);
+        // Slow wire: clock_div 16 at 1 pin ≈ 800+ cycles per flit.
+        let serdes = SerdesConfig { pins: 1, clock_div: 16, tx_buffer: 2 };
+        let mut sim = MultiChipSim::new(&topo, NocConfig::paper(), &part, serdes);
+        for k in 0..8u32 {
+            sim.inject(0, Flit::single(0, 15, k, k as u64));
+        }
+        let stalled = sim.run_until_idle(30).expect_err("cannot drain in 30 cycles");
+        assert_eq!(stalled.cycles, 30);
+        assert!(stalled.pending > 0);
+        // Resumable: a real budget finishes the drain.
+        sim.run_until_idle(10_000_000).unwrap();
+        assert_eq!(sim.stats().delivered, 8);
+    }
+}

@@ -117,6 +117,11 @@ pub struct Network {
     /// Flit movements since construction (delivery, injection, grants,
     /// serdes transfers) — the event engine's progress detector.
     pub(super) moves: u64,
+    /// Credits freed this cycle for flits that arrived over a cut link:
+    /// `(outgoing link id at the fed input port, vc)`. Drained by the
+    /// multi-chip coordinator, which credits the paired TX port on the
+    /// far chip. Always empty on monolithic networks.
+    pub(super) gw_credit_returns: Vec<(u32, u8)>,
 }
 
 impl Network {
@@ -145,7 +150,11 @@ impl Network {
                         // Endpoint-facing output: latch only (ejection is
                         // never back-pressured).
                         PortDest::Endpoint(_) => OutputPort::new(vec![]),
-                        PortDest::Router { .. } => {
+                        // Gateway outputs carry the same per-VC credits:
+                        // they mirror the REMOTE chip's input-ring space,
+                        // consumed here and returned by the coordinator
+                        // when the far allocator pops the flit.
+                        PortDest::Router { .. } | PortDest::Gateway { .. } => {
                             OutputPort::new(vec![cfg.buffer_depth as u32; cfg.num_vcs])
                         }
                     })
@@ -196,6 +205,7 @@ impl Network {
             ni_set: ActiveSet::new(n_eps),
             sweep: Vec::new(),
             moves: 0,
+            gw_credit_returns: Vec::new(),
         }
     }
 
@@ -251,6 +261,46 @@ impl Network {
         let bits = wire_bits(self.cfg.flit_data_width, self.topo.n_endpoints);
         self.serdes[router][port] = Some(SerdesChannel::new(cfg, bits));
         self.has_serdes[router] = true;
+    }
+
+    // -- multi-chip coordinator hooks ---------------------------------------
+    //
+    // `MultiChipSim` drives gateway ports from outside the per-cycle
+    // phases: it takes latched flits into wire channels, lands arriving
+    // flits in input rings, and carries credits between chips.
+
+    /// Take the flit latched on gateway output `(r, p)`, if any. The flit
+    /// leaves this chip's accounting; the coordinator owns it until the
+    /// far chip buffers it.
+    pub(super) fn gateway_take(&mut self, r: usize, p: usize) -> Option<Flit> {
+        debug_assert!(matches!(self.topo.ports[r][p], PortDest::Gateway { .. }));
+        let flit = self.routers[r].outputs[p].latch.take()?;
+        self.in_network -= 1;
+        self.moves += 1;
+        Some(flit)
+    }
+
+    /// Is a flit latched on gateway output `(r, p)` (i.e. waiting for TX
+    /// buffer space)?
+    pub(super) fn gateway_latched(&self, r: usize, p: usize) -> bool {
+        self.routers[r].outputs[p].latch.is_some()
+    }
+
+    /// Land a flit arriving over a cut link in input port `(r, p)`. Ring
+    /// space is guaranteed by the gateway credit protocol (the TX side
+    /// consumed a credit before the flit entered the wire); `vc_push`'s
+    /// debug assert enforces it.
+    pub(super) fn gateway_offer(&mut self, r: usize, p: usize, flit: Flit) {
+        self.stats.link_hops += 1;
+        self.in_network += 1;
+        self.moves += 1;
+        self.buffer_flit(r, p, flit);
+    }
+
+    /// Return one credit to gateway output `(r, p)` on `vc`: the far chip
+    /// popped a flit this link fed into its input ring.
+    pub(super) fn gateway_credit(&mut self, r: usize, p: usize, vc: u8) {
+        self.routers[r].outputs[p].credits[vc as usize] += 1;
     }
 
     /// Installed serdes channels as ((router, port), &channel).
@@ -433,6 +483,11 @@ impl Network {
     #[inline]
     pub(super) fn deliver_router(&mut self, r: usize) {
         for p in 0..self.routers[r].outputs.len() {
+            // Gateway latches are drained by the multi-chip coordinator
+            // (`MultiChipSim`), never by the on-chip deliver phase.
+            if matches!(self.topo.ports[r][p], PortDest::Gateway { .. }) {
+                continue;
+            }
             // Quasi-SERDES link: the channel sits between the latch and
             // the far-side input buffer. Flits whose serialization
             // completed land first; then the latch (if any) enters the
@@ -449,6 +504,9 @@ impl Network {
                             self.buffer_flit(router, port, flit);
                         }
                         PortDest::Endpoint(_) => unreachable!("serdes on endpoint link"),
+                        // install_serdes only accepts Router ports, and
+                        // gateway ports were skipped above.
+                        PortDest::Gateway { .. } => unreachable!("serdes on gateway link"),
                     }
                 }
                 if self.serdes[r][p].as_ref().unwrap().can_accept() {
@@ -475,6 +533,7 @@ impl Network {
                     self.stats.link_hops += 1;
                     self.buffer_flit(router, port, flit);
                 }
+                PortDest::Gateway { .. } => unreachable!("skipped above"),
             }
         }
     }
@@ -666,8 +725,15 @@ impl Network {
         let slab = self.vc_slab(r, i, v);
         let mut flit = self.vc_pop(slab);
         self.occupancy[r] -= 1;
-        self.latched[r] += 1;
-        self.deliver_set.insert(r);
+        if matches!(self.topo.ports[r][op], PortDest::Gateway { .. }) {
+            // Gateway latches are polled by the multi-chip coordinator;
+            // keeping them out of `latched`/`deliver_set` lets the
+            // deliver phase skip routers whose only pending output is a
+            // cut link.
+        } else {
+            self.latched[r] += 1;
+            self.deliver_set.insert(r);
+        }
         self.moves += 1;
         // Peek/credit return to whoever feeds input port i.
         match self.topo.ports[r][i] {
@@ -675,6 +741,10 @@ impl Network {
             PortDest::Router { router, port } => {
                 self.routers[router].outputs[port].credits[v] += 1;
             }
+            // The feeder is a cut link: the credit belongs to the far
+            // chip's TX port. Queue it for the coordinator to carry
+            // across at the next link-synchronization barrier.
+            PortDest::Gateway { link } => self.gw_credit_returns.push((link, v as u8)),
         }
         // Consume downstream space.
         if !self.routers[r].outputs[op].credits.is_empty() {

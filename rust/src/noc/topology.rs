@@ -31,6 +31,12 @@ pub enum PortDest {
     Endpoint(usize),
     /// Link to `port` (input) of `router`, 1-cycle traversal.
     Router { router: usize, port: usize },
+    /// Cut link leaving this chip: the flit latched here is carried to
+    /// another FPGA's `Network` by the multi-chip coordinator
+    /// ([`crate::noc::multichip::MultiChipSim`]) over directed wire link
+    /// `link`. Only appears in chip-local graphs built by
+    /// [`chip_graph`]; whole-fabric topologies never contain it.
+    Gateway { link: u32 },
 }
 
 /// A built topology: the router graph plus everything `route` needs.
@@ -60,6 +66,13 @@ enum RouteKind {
     /// Table-driven up*/down* (fat tree, custom): for each (router, dst
     /// endpoint), the set of equally-good output ports.
     UpDown { next_ports: Vec<Vec<Vec<u16>>> },
+    /// Chip-local view of a partitioned fabric: the *global* routing
+    /// function tabulated over this chip's routers, packed [`Hop`]s at
+    /// `hops[(local_router * n_eps + src) * n_eps + dst]`. Port indices
+    /// are the global ones (chip graphs preserve per-router port
+    /// numbering), so the sharded simulation follows the monolithic
+    /// path hop for hop.
+    Chip { n_eps: usize, hops: Vec<u16> },
 }
 
 /// Topology descriptor. All constructors attach one endpoint per
@@ -311,6 +324,85 @@ fn build_custom(
     }
 }
 
+/// Build the chip-local view of `global` for the sharded multi-FPGA
+/// co-simulation ([`crate::noc::multichip::MultiChipSim`]): routers with
+/// `assignment[r] == chip` are kept (densely renumbered), per-router
+/// **port numbering is preserved** so the global routing function's port
+/// indices stay valid, links to same-chip routers stay
+/// [`PortDest::Router`], links to other chips become
+/// [`PortDest::Gateway`] (with `gateway_link(global_router, port)`
+/// naming the directed wire link leaving that port), and routing is the
+/// global route function tabulated over the chip's routers
+/// ([`RouteKind::Chip`]) — the sharded simulation therefore follows the
+/// monolithic path hop for hop, virtual channels included.
+///
+/// Endpoints keep their **global** ids: `n_endpoints` is the fabric-wide
+/// count and remote endpoints get a `usize::MAX` attach sentinel (they
+/// are never injected at or ejected from this chip, so the sentinel is
+/// only ever hit on a protocol bug, loudly).
+///
+/// Returns the chip graph plus the local→global router map.
+pub(crate) fn chip_graph(
+    global: &TopoGraph,
+    assignment: &[usize],
+    chip: usize,
+    mut gateway_link: impl FnMut(usize, usize) -> u32,
+) -> (TopoGraph, Vec<usize>) {
+    assert_eq!(assignment.len(), global.n_routers, "assignment/topology mismatch");
+    let locals: Vec<usize> =
+        (0..global.n_routers).filter(|&r| assignment[r] == chip).collect();
+    assert!(!locals.is_empty(), "chip {chip} has no routers");
+    let mut local_of = vec![usize::MAX; global.n_routers];
+    for (i, &g) in locals.iter().enumerate() {
+        local_of[g] = i;
+    }
+    let e = global.n_endpoints;
+    let mut ports = Vec::with_capacity(locals.len());
+    for &g in &locals {
+        let row: Vec<PortDest> = global.ports[g]
+            .iter()
+            .enumerate()
+            .map(|(p, pd)| match *pd {
+                PortDest::Endpoint(ep) => PortDest::Endpoint(ep),
+                PortDest::Router { router, port } if assignment[router] == chip => {
+                    PortDest::Router { router: local_of[router], port }
+                }
+                PortDest::Router { .. } => PortDest::Gateway { link: gateway_link(g, p) },
+                PortDest::Gateway { .. } => unreachable!("chip graph of a chip graph"),
+            })
+            .collect();
+        ports.push(row);
+    }
+    let mut endpoint_attach = vec![(usize::MAX, usize::MAX); e];
+    for (ep, &(r, p)) in global.endpoint_attach.iter().enumerate() {
+        if assignment[r] == chip {
+            endpoint_attach[ep] = (local_of[r], p);
+        }
+    }
+    // Tabulate the global routing function over the chip's routers. Every
+    // (src, dst) pair is filled — including pairs whose path never visits
+    // this chip — so a lookup can never miss.
+    let mut hops = Vec::with_capacity(locals.len() * e * e);
+    for &g in &locals {
+        for src in 0..e {
+            for dst in 0..e {
+                hops.push(global.route(g, src, dst).pack());
+            }
+        }
+    }
+    (
+        TopoGraph {
+            n_routers: locals.len(),
+            n_endpoints: e,
+            ports,
+            endpoint_attach,
+            min_vcs: global.min_vcs,
+            kind: RouteKind::Chip { n_eps: e, hops },
+        },
+        locals,
+    )
+}
+
 /// Compute up/down routing tables over a BFS spanning tree rooted at
 /// router 0: for each (router, destination endpoint), the set of
 /// equally-good output ports.
@@ -533,6 +625,9 @@ impl TopoGraph {
                 let h = hash2(src as u64, dst as u64) as usize;
                 Hop { port: choices[h % choices.len()] as usize, vc: 0 }
             }
+            RouteKind::Chip { n_eps, hops } => {
+                Hop::unpack(hops[(cur * n_eps + src) * n_eps + dst])
+            }
         }
     }
 
@@ -541,6 +636,12 @@ impl TopoGraph {
     /// rebuilt at any time and always agrees with [`TopoGraph::route`].
     pub(crate) fn route_plan(&self) -> RoutePlan {
         let (n, e) = (self.n_routers, self.n_endpoints);
+        // Chip graphs already carry a flat per-(router, src, dst) table;
+        // `route` is a single packed-hop lookup, so tabulating again
+        // would only duplicate memory.
+        if matches!(&self.kind, RouteKind::Chip { .. }) {
+            return RoutePlan::Compute;
+        }
         let src_independent = match &self.kind {
             // XY ignores the source entirely.
             RouteKind::Mesh { .. } => true,
@@ -551,6 +652,7 @@ impl TopoGraph {
             }
             // Ring/torus dateline VCs depend on the source router.
             RouteKind::Ring { .. } | RouteKind::Torus { .. } => false,
+            RouteKind::Chip { .. } => unreachable!("handled above"),
         };
         if src_independent && n * e <= RoutePlan::TABLE_CAP {
             let mut hops = Vec::with_capacity(n * e);
@@ -592,6 +694,9 @@ impl TopoGraph {
             match self.ports[cur][hop.port] {
                 PortDest::Router { router, .. } => cur = router,
                 PortDest::Endpoint(_) => unreachable!("local port before dst router"),
+                PortDest::Gateway { .. } => {
+                    panic!("hop_distance({src}, {dst}) crosses a chip boundary")
+                }
             }
             hops += 1;
             assert!(hops <= 4 * self.n_routers, "routing loop {src}->{dst}");
@@ -967,6 +1072,77 @@ mod tests {
                 assert_eq!(Hop::unpack(h.pack()), h);
             }
         }
+    }
+
+    #[test]
+    fn chip_graph_preserves_ports_and_global_routes() {
+        // Vertical bisection of a 4x4 mesh: every chip router keeps its
+        // global port numbering and the chip route table replays the
+        // global routing function exactly.
+        let g = (Topology::Mesh { w: 4, h: 4 }).build();
+        let assignment: Vec<usize> = (0..16).map(|r| usize::from(r % 4 >= 2)).collect();
+        for chip in 0..2usize {
+            let mut next_link = 0u32;
+            let (cg, locals) = chip_graph(&g, &assignment, chip, |_, _| {
+                let l = next_link;
+                next_link += 1;
+                l
+            });
+            assert_eq!(cg.n_routers, 8);
+            assert_eq!(cg.n_endpoints, 16);
+            for (local, &global_r) in locals.iter().enumerate() {
+                assert_eq!(cg.ports[local].len(), g.ports[global_r].len());
+                for s in 0..16 {
+                    for d in 0..16 {
+                        assert_eq!(
+                            cg.route(local, s, d),
+                            g.route(global_r, s, d),
+                            "chip {chip} router {global_r} {s}->{d}"
+                        );
+                    }
+                }
+            }
+            // Local endpoints attach at renumbered routers; remote ones
+            // keep the loud sentinel.
+            for e in 0..16 {
+                let (r, _) = g.endpoint_attach[e];
+                if assignment[r] == chip {
+                    assert_eq!(locals[cg.endpoint_attach[e].0], r);
+                } else {
+                    assert_eq!(cg.endpoint_attach[e], (usize::MAX, usize::MAX));
+                }
+            }
+            // Exactly the 4 cut rows became gateways, with distinct links.
+            let gateways = cg
+                .ports
+                .iter()
+                .flatten()
+                .filter(|p| matches!(p, PortDest::Gateway { .. }))
+                .count();
+            assert_eq!(gateways, 4, "4 rows cross the bisection");
+            assert_eq!(next_link, 4);
+        }
+    }
+
+    #[test]
+    fn chip_graph_keeps_dateline_vcs() {
+        // Torus routing raises the VC after the wrap link; the chip-local
+        // table must reproduce that, or sharded rings/tori deadlock.
+        let g = (Topology::Torus { w: 4, h: 4 }).build();
+        let assignment: Vec<usize> = (0..16).map(|r| usize::from(r % 4 >= 2)).collect();
+        let (cg, locals) = chip_graph(&g, &assignment, 0, |_, _| 0);
+        assert_eq!(cg.min_vcs, 2);
+        let mut saw_vc1 = false;
+        for (local, &gr) in locals.iter().enumerate() {
+            for s in 0..16 {
+                for d in 0..16 {
+                    let h = cg.route(local, s, d);
+                    assert_eq!(h, g.route(gr, s, d));
+                    saw_vc1 |= h.vc == 1;
+                }
+            }
+        }
+        assert!(saw_vc1, "dateline VC assignments must survive sharding");
     }
 
     #[test]

@@ -15,11 +15,49 @@
 //! min-cut bisection — which the ablation benches compare against manual
 //! cuts.
 
+use std::fmt;
+
 use crate::noc::topology::{PortDest, TopoGraph};
 use crate::noc::Network;
 use crate::resources::{Device, Resources};
 use crate::serdes::{wire_bits, SerdesConfig};
 use crate::util::Rng;
+
+/// Typed partition-construction failures ([`Partition::try_new`],
+/// [`Partition::balanced_pinned`]) — surfaced as `Result`s instead of
+/// the legacy constructor panics, so the flow layer can report them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartitionError {
+    /// The assignment names an FPGA index `>= n_fpgas`.
+    UnknownFpga { router: usize, fpga: usize, n_fpgas: usize },
+    /// Some FPGA ended up hosting no routers — with pinned pairs this is
+    /// how "a cut isolates a node" manifests: the constraint forced every
+    /// router off one chip.
+    EmptyFpga(usize),
+    /// A pinned pair references a router outside the topology.
+    PinOutOfRange { router: usize, n_routers: usize },
+}
+
+impl fmt::Display for PartitionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PartitionError::UnknownFpga { router, fpga, n_fpgas } => write!(
+                f,
+                "assignment references missing FPGA: router {router} on FPGA {fpga} \
+                 of {n_fpgas}"
+            ),
+            PartitionError::EmptyFpga(fpga) => {
+                write!(f, "FPGA {fpga} has no routers")
+            }
+            PartitionError::PinOutOfRange { router, n_routers } => write!(
+                f,
+                "pinned pair references router {router} but the topology has {n_routers}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PartitionError {}
 
 /// A bidirectional NoC link that crosses FPGAs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,17 +78,27 @@ pub struct Partition {
 }
 
 impl Partition {
-    /// User-specified assignment (the paper's mode).
+    /// User-specified assignment (the paper's mode). Panics on malformed
+    /// input; [`Partition::try_new`] is the typed-error form.
     pub fn new(n_fpgas: usize, assignment: Vec<usize>) -> Self {
+        Self::try_new(n_fpgas, assignment).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`Partition::new`] returning a [`PartitionError`] instead of
+    /// panicking (empty FPGAs, out-of-range assignments).
+    pub fn try_new(n_fpgas: usize, assignment: Vec<usize>) -> Result<Self, PartitionError> {
         assert!(n_fpgas >= 1);
-        assert!(
-            assignment.iter().all(|&f| f < n_fpgas),
-            "assignment references missing FPGA"
-        );
-        for f in 0..n_fpgas {
-            assert!(assignment.contains(&f), "FPGA {f} has no routers");
+        for (router, &fpga) in assignment.iter().enumerate() {
+            if fpga >= n_fpgas {
+                return Err(PartitionError::UnknownFpga { router, fpga, n_fpgas });
+            }
         }
-        Partition { n_fpgas, assignment }
+        for f in 0..n_fpgas {
+            if !assignment.contains(&f) {
+                return Err(PartitionError::EmptyFpga(f));
+            }
+        }
+        Ok(Partition { n_fpgas, assignment })
     }
 
     /// Everything on one FPGA (the unpartitioned baseline).
@@ -219,6 +267,69 @@ impl Partition {
             }
         }
         Partition::new(n_fpgas, assignment)
+    }
+
+    /// [`Partition::balanced`] under co-location constraints: every
+    /// `(a, b)` pair of `pinned` routers lands on the same FPGA. This is
+    /// the fix for PEs whose collector must share their chip (e.g. the
+    /// pfilter root and its histogram sink): the unconstrained bisection
+    /// happily split such pairs, and the resulting layout either panicked
+    /// later ("FPGA has no routers" once everything was pushed off a
+    /// chip) or silently paid a serdes round trip on every handshake.
+    ///
+    /// Pinned pairs are merged union-find style into groups; after the
+    /// unconstrained bisection each group is pulled onto its majority
+    /// chip (ties to the lowest index). An unsatisfiable constraint set
+    /// — a chip left with no routers — returns a typed
+    /// [`PartitionError`] instead of the legacy constructor panic.
+    pub fn balanced_pinned(
+        topo: &TopoGraph,
+        n_fpgas: usize,
+        seed: u64,
+        pinned: &[(usize, usize)],
+    ) -> Result<Self, PartitionError> {
+        let n = topo.n_routers;
+        for &(a, b) in pinned {
+            for r in [a, b] {
+                if r >= n {
+                    return Err(PartitionError::PinOutOfRange { router: r, n_routers: n });
+                }
+            }
+        }
+        // Union-find over pinned pairs.
+        let mut root: Vec<usize> = (0..n).collect();
+        fn find(root: &mut [usize], x: usize) -> usize {
+            if root[x] != x {
+                let r = find(root, root[x]);
+                root[x] = r;
+            }
+            root[x]
+        }
+        for &(a, b) in pinned {
+            let (ra, rb) = (find(&mut root, a), find(&mut root, b));
+            if ra != rb {
+                root[ra.max(rb)] = ra.min(rb);
+            }
+        }
+        let seeded = Partition::balanced(topo, n_fpgas, seed);
+        let mut assignment = seeded.assignment;
+        // Pull each pinned group onto its majority chip.
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for r in 0..n {
+            let g = find(&mut root, r);
+            members[g].push(r);
+        }
+        for group in members.iter().filter(|g| g.len() > 1) {
+            let mut votes = vec![0usize; n_fpgas];
+            for &r in group {
+                votes[assignment[r]] += 1;
+            }
+            let target = (0..n_fpgas).max_by_key(|&f| (votes[f], n_fpgas - f)).unwrap();
+            for &r in group {
+                assignment[r] = target;
+            }
+        }
+        Self::try_new(n_fpgas, assignment)
     }
 
     /// The links this partition cuts (each bidirectional link reported
@@ -455,6 +566,83 @@ mod tests {
     #[should_panic(expected = "no routers")]
     fn empty_fpga_rejected() {
         Partition::new(3, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn try_new_returns_typed_errors() {
+        assert_eq!(
+            Partition::try_new(3, vec![0, 0, 1, 1]),
+            Err(PartitionError::EmptyFpga(2))
+        );
+        assert_eq!(
+            Partition::try_new(2, vec![0, 5]),
+            Err(PartitionError::UnknownFpga { router: 1, fpga: 5, n_fpgas: 2 })
+        );
+        assert!(Partition::try_new(2, vec![0, 1, 0]).is_ok());
+        // Display strings match the legacy panic messages callers grep.
+        assert!(format!("{}", PartitionError::EmptyFpga(2)).contains("has no routers"));
+    }
+
+    #[test]
+    fn balanced_pinned_keeps_pfilter_root_with_its_collector() {
+        // Regression: the Fig 10 tracker pins its root PE at node 0 and
+        // reads histograms at node 1. The unconstrained bisection of a
+        // 4x4 mesh happily split routers 0 and 1 for some seeds; pinned,
+        // they must share a chip for EVERY seed, while the partition
+        // stays balanced and every FPGA keeps routers.
+        // Routers 5 = (1,1) and 10 = (2,2): every straight middle
+        // bisection of the mesh (vertical or horizontal) separates them,
+        // so the constraint genuinely binds.
+        let g = (Topology::Mesh { w: 4, h: 4 }).build();
+        let (root, collector) = (5usize, 10usize);
+        let mut ever_split = false;
+        for seed in 0..24u64 {
+            let free = Partition::balanced(&g, 2, seed);
+            ever_split |= free.assignment[root] != free.assignment[collector];
+            let p = Partition::balanced_pinned(&g, 2, seed, &[(root, collector)]).unwrap();
+            assert_eq!(
+                p.assignment[root], p.assignment[collector],
+                "seed {seed}: root split from collector"
+            );
+            assert!(p.sizes().iter().all(|&s| s > 0), "seed {seed}: {:?}", p.sizes());
+        }
+        assert!(
+            ever_split,
+            "constraint never binds — pick a pair the free bisection splits"
+        );
+    }
+
+    #[test]
+    fn balanced_pinned_chains_transitive_groups() {
+        // (0,1) + (1,2) pin three routers together.
+        let g = (Topology::Mesh { w: 4, h: 4 }).build();
+        let p = Partition::balanced_pinned(&g, 2, 9, &[(0, 1), (1, 2)]).unwrap();
+        assert_eq!(p.assignment[0], p.assignment[1]);
+        assert_eq!(p.assignment[1], p.assignment[2]);
+    }
+
+    #[test]
+    fn balanced_pinned_reports_isolation_as_typed_error() {
+        // 2 routers, 2 FPGAs, both routers pinned together: one FPGA is
+        // necessarily left without routers — a typed error, not the
+        // later "FPGA has no routers" panic.
+        let g = (Topology::Ring(2)).build();
+        let err = Partition::balanced_pinned(&g, 2, 1, &[(0, 1)]).unwrap_err();
+        assert!(matches!(err, PartitionError::EmptyFpga(_)), "{err}");
+        // Out-of-range pins are typed too.
+        let err = Partition::balanced_pinned(&g, 2, 1, &[(0, 9)]).unwrap_err();
+        assert_eq!(err, PartitionError::PinOutOfRange { router: 9, n_routers: 2 });
+    }
+
+    #[test]
+    fn balanced_pinned_without_pins_matches_balanced() {
+        let g = (Topology::Torus { w: 4, h: 4 }).build();
+        for seed in [1u64, 7, 42] {
+            assert_eq!(
+                Partition::balanced_pinned(&g, 2, seed, &[]).unwrap(),
+                Partition::balanced(&g, 2, seed)
+            );
+        }
     }
 
     #[test]

@@ -17,8 +17,11 @@
 
 use std::time::Instant;
 
+use crate::noc::multichip::MultiChipSim;
 use crate::noc::scenario::{self, Trace};
 use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
+use crate::partition::Partition;
+use crate::serdes::SerdesConfig;
 
 /// One benchmark point: a scenario-matrix cell with a fixed seed.
 #[derive(Clone, Debug)]
@@ -88,6 +91,59 @@ pub fn points() -> Vec<BenchPoint> {
     ]
 }
 
+/// One monolithic-vs-sharded comparison point: the same case-study trace
+/// replayed on the whole-fabric `Network` and on the [`MultiChipSim`]
+/// sharded across `n_fpgas` FPGAs at the paper's link parameters. The
+/// tracked quantity is the **simulated-cycle slowdown** the quasi-serdes
+/// links cost each case study (plus the wall-clock cost of co-simulating
+/// the shards).
+#[derive(Clone, Debug)]
+pub struct MultiBenchPoint {
+    pub label: &'static str,
+    pub topo: Topology,
+    pub scenario: &'static str,
+    pub load: f64,
+    pub window: u64,
+    pub n_fpgas: usize,
+    pub pins: u32,
+    pub clock_div: u32,
+}
+
+/// The tracked monolithic-vs-sharded matrix: the three case-study
+/// skeletons at the paper's 8-pin link, 2-way partitioned.
+pub fn multichip_points() -> Vec<MultiBenchPoint> {
+    let paper_link = |label, topo, scenario, window| MultiBenchPoint {
+        label,
+        topo,
+        scenario,
+        load: 0.1,
+        window,
+        n_fpgas: 2,
+        pins: 8,
+        clock_div: 1,
+    };
+    vec![
+        paper_link(
+            "ldpc-mesh4x4/2fpga-8pin",
+            Topology::Mesh { w: 4, h: 4 },
+            "ldpc-trace",
+            5_000,
+        ),
+        paper_link(
+            "pfilter-torus4x4/2fpga-8pin",
+            Topology::Torus { w: 4, h: 4 },
+            "pfilter-trace",
+            5_000,
+        ),
+        paper_link(
+            "bmvm-ring8/2fpga-8pin",
+            Topology::Ring(8),
+            "bmvm-trace",
+            5_000,
+        ),
+    ]
+}
+
 /// Measured result of one (point, engine) cell.
 #[derive(Clone, Debug)]
 pub struct CellResult {
@@ -125,12 +181,34 @@ impl PointResult {
     }
 }
 
+/// One multichip point's results: the same trace monolithic and sharded.
+#[derive(Clone, Debug)]
+pub struct MultiPointResult {
+    pub label: &'static str,
+    pub mono: CellResult,
+    pub sharded: CellResult,
+}
+
+impl MultiPointResult {
+    /// Simulated-cycle slowdown the quasi-serdes links cost (≥ 1).
+    pub fn cycle_slowdown(&self) -> f64 {
+        self.sharded.cycles as f64 / self.mono.cycles as f64
+    }
+
+    /// Wall-clock cost of co-simulating the shards vs one network.
+    pub fn wall_ratio(&self) -> f64 {
+        self.sharded.wall_s / self.mono.wall_s
+    }
+}
+
 /// A full matrix run.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
     /// `quick` profile (1 rep, shrunk windows) vs full (best of 3).
     pub quick: bool,
     pub points: Vec<PointResult>,
+    /// Monolithic-vs-sharded slowdown per case study.
+    pub multichip: Vec<MultiPointResult>,
 }
 
 /// One replay; the timer starts AFTER `Network::new` so construction
@@ -188,6 +266,62 @@ pub fn run_point(pt: &BenchPoint, reps: usize, window_scale: f64) -> PointResult
     PointResult { label: pt.label, reference, event }
 }
 
+/// Run one monolithic-vs-sharded point (event engine on both sides;
+/// the engines' own conformance is covered by [`run_point`]).
+pub fn run_multichip_point(pt: &MultiBenchPoint, reps: usize, window_scale: f64) -> MultiPointResult {
+    let scn = scenario::find(pt.scenario).expect("scenario registered");
+    let graph = pt.topo.build();
+    let n = graph.n_endpoints;
+    let window = ((pt.window as f64 * window_scale) as u64).max(100);
+    let trace = scn.trace(n, pt.load, window, 1);
+    let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+    let partition = Partition::balanced(&graph, pt.n_fpgas, 1);
+    let serdes = SerdesConfig { pins: pt.pins, clock_div: pt.clock_div, tx_buffer: 8 };
+
+    let mut mono_best = f64::INFINITY;
+    let mut mono_digest = (0u64, NetStats::default());
+    for _ in 0..reps {
+        let mut net = Network::new(&pt.topo, cfg);
+        let t = Instant::now();
+        let cycles = scenario::replay(&mut net, &trace, 100_000_000)
+            .unwrap_or_else(|e| panic!("{} (mono): {e}", pt.label));
+        mono_best = mono_best.min(t.elapsed().as_secs_f64());
+        mono_digest = (cycles, net.stats().clone());
+    }
+    let mut sh_best = f64::INFINITY;
+    let mut sh_digest = (0u64, NetStats::default());
+    for _ in 0..reps {
+        let mut sim = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+        let t = Instant::now();
+        let cycles = scenario::replay_multichip(&mut sim, &trace, 1_000_000_000)
+            .unwrap_or_else(|e| panic!("{} (sharded): {e}", pt.label));
+        sh_best = sh_best.min(t.elapsed().as_secs_f64());
+        sh_digest = (cycles, sim.stats());
+    }
+    // Conformance: neither side lost flits, the shards followed the
+    // monolithic routes (hop counts match), and serialization only adds.
+    assert_eq!(mono_digest.1.injected, mono_digest.1.delivered, "{}", pt.label);
+    assert_eq!(sh_digest.1.injected, sh_digest.1.delivered, "{}", pt.label);
+    assert_eq!(mono_digest.1.delivered, sh_digest.1.delivered, "{}", pt.label);
+    assert_eq!(mono_digest.1.link_hops, sh_digest.1.link_hops, "{}", pt.label);
+    assert!(sh_digest.0 >= mono_digest.0, "{}: serdes made it faster?!", pt.label);
+    MultiPointResult {
+        label: pt.label,
+        mono: CellResult {
+            engine: SimEngine::EventDriven,
+            wall_s: mono_best,
+            flits: mono_digest.1.delivered,
+            cycles: mono_digest.0,
+        },
+        sharded: CellResult {
+            engine: SimEngine::EventDriven,
+            wall_s: sh_best,
+            flits: sh_digest.1.delivered,
+            cycles: sh_digest.0,
+        },
+    }
+}
+
 /// Run the whole tracked matrix. `quick` shrinks windows 4x and uses one
 /// rep — the CI perf-smoke profile.
 pub fn run(quick: bool) -> BenchReport {
@@ -196,7 +330,11 @@ pub fn run(quick: bool) -> BenchReport {
         .iter()
         .map(|pt| run_point(pt, reps, scale))
         .collect();
-    BenchReport { quick, points }
+    let multichip = multichip_points()
+        .iter()
+        .map(|pt| run_multichip_point(pt, reps, scale))
+        .collect();
+    BenchReport { quick, points, multichip }
 }
 
 impl BenchReport {
@@ -230,6 +368,24 @@ impl BenchReport {
             let _ = writeln!(j, "      \"event_speedup\": {:.2}", p.speedup());
             let _ = writeln!(j, "    }}{comma}");
         }
+        let _ = writeln!(j, "  ],");
+        let _ = writeln!(j, "  \"multichip\": [");
+        for (i, p) in self.multichip.iter().enumerate() {
+            let comma = if i + 1 == self.multichip.len() { "" } else { "," };
+            let _ = writeln!(j, "    {{");
+            let _ = writeln!(j, "      \"label\": \"{}\",", p.label);
+            for (key, c) in [("monolithic", &p.mono), ("sharded", &p.sharded)] {
+                let _ = writeln!(j, "      \"{key}\": {{");
+                let _ = writeln!(j, "        \"flits\": {},", c.flits);
+                let _ = writeln!(j, "        \"cycles\": {},", c.cycles);
+                let _ = writeln!(j, "        \"wall_ms\": {:.3},", c.wall_s * 1e3);
+                let _ = writeln!(j, "        \"flits_per_sec\": {:.0}", c.flits_per_sec());
+                let _ = writeln!(j, "      }},");
+            }
+            let _ = writeln!(j, "      \"cycle_slowdown\": {:.3},", p.cycle_slowdown());
+            let _ = writeln!(j, "      \"wall_ratio\": {:.2}", p.wall_ratio());
+            let _ = writeln!(j, "    }}{comma}");
+        }
         let _ = writeln!(j, "  ]");
         let _ = writeln!(j, "}}");
         j
@@ -255,6 +411,20 @@ impl BenchReport {
                 p.event.flits_per_sec(),
                 p.speedup()
             );
+        }
+        if !self.multichip.is_empty() {
+            let _ = writeln!(s, "Monolithic vs sharded multi-FPGA (simulated-cycle slowdown)");
+            for p in &self.multichip {
+                let _ = writeln!(
+                    s,
+                    "  {:32} {:>8} flits | mono {:>9} cyc  sharded {:>9} cyc  => {:.2}x slower",
+                    p.label,
+                    p.mono.flits,
+                    p.mono.cycles,
+                    p.sharded.cycles,
+                    p.cycle_slowdown()
+                );
+            }
         }
         s
     }
@@ -291,11 +461,51 @@ mod tests {
         assert!(res.reference.flits > 0);
         assert_eq!(res.reference.flits, res.event.flits);
         assert_eq!(res.reference.cycles, res.event.cycles);
-        let report = BenchReport { quick: true, points: vec![res] };
+        let report = BenchReport { quick: true, points: vec![res], multichip: Vec::new() };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
         assert!(json.contains("flits_per_sec"));
         assert!(json.contains("\"profile\": \"quick\""));
+        assert!(json.contains("\"multichip\": ["));
         assert!(report.render_table().contains("saturated-mesh8x8"));
+    }
+
+    #[test]
+    fn multichip_labels_are_unique_and_scenarios_exist() {
+        let pts = multichip_points();
+        assert_eq!(pts.len(), 3, "one point per case study");
+        for (i, a) in pts.iter().enumerate() {
+            assert!(scenario::find(a.scenario).is_some(), "{}", a.label);
+            for b in &pts[i + 1..] {
+                assert_ne!(a.label, b.label);
+            }
+        }
+    }
+
+    #[test]
+    fn multichip_point_runs_and_serializes() {
+        // A shrunk bmvm point: the sharded run must deliver the same
+        // flit count, cost at least as many cycles, and serialize into
+        // the multichip JSON section.
+        let pt = MultiBenchPoint {
+            label: "bmvm-ring8/2fpga-8pin",
+            topo: Topology::Ring(8),
+            scenario: "bmvm-trace",
+            load: 0.1,
+            window: 400,
+            n_fpgas: 2,
+            pins: 8,
+            clock_div: 1,
+        };
+        let res = run_multichip_point(&pt, 1, 1.0);
+        assert!(res.mono.flits > 0);
+        assert_eq!(res.mono.flits, res.sharded.flits);
+        assert!(res.cycle_slowdown() >= 1.0);
+        let report =
+            BenchReport { quick: true, points: Vec::new(), multichip: vec![res] };
+        let json = report.to_json();
+        assert!(json.contains("\"label\": \"bmvm-ring8/2fpga-8pin\""));
+        assert!(json.contains("cycle_slowdown"));
+        assert!(report.render_table().contains("sharded"));
     }
 }

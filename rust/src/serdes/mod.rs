@@ -25,7 +25,6 @@ use std::collections::VecDeque;
 
 use crate::noc::flit::Flit;
 use crate::resources::{self, Resources};
-use crate::util::bits::BitVec;
 use crate::util::clog2;
 
 /// Physical parameters of one quasi-SERDES link direction.
@@ -75,59 +74,128 @@ pub fn wire_bits(flit_data_width: u32, n_endpoints: usize) -> u32 {
     1 + 1 + 2 + 2 * id + 16 + 8 + flit_data_width
 }
 
-/// Serialize a flit MSB-first into per-cycle pin samples (`pins` bits per
-/// sample, last sample zero-padded). Bit-exact model of the Fig 6 shifter.
-pub fn serialize_flit(f: &Flit, flit_data_width: u32, n_endpoints: usize, pins: u32) -> Vec<u64> {
+/// Words of the fixed stack bit-buffer the (de)serializers shift through
+/// — 256 bits, comfortably above any supported wire format (≤ 64 payload
+/// bits + header). The sharded co-simulation serializes every flit that
+/// crosses a cut link, so this path must not allocate.
+const WIRE_WORDS: usize = 4;
+
+/// Write the low `n` bits of `v` at bit offset `at` of an LSB-first
+/// packed word buffer.
+#[inline]
+fn put_bits(words: &mut [u64; WIRE_WORDS], at: usize, n: usize, v: u64) {
+    if n == 0 {
+        return;
+    }
+    let v = if n >= 64 { v } else { v & ((1u64 << n) - 1) };
+    let (w, b) = (at / 64, at % 64);
+    words[w] |= v << b;
+    if b != 0 && b + n > 64 {
+        words[w + 1] |= v >> (64 - b);
+    }
+}
+
+/// Read `n` bits at bit offset `at` of an LSB-first packed word buffer.
+#[inline]
+fn get_bits(words: &[u64; WIRE_WORDS], at: usize, n: usize) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    let (w, b) = (at / 64, at % 64);
+    let mut v = words[w] >> b;
+    if b != 0 && b + n > 64 {
+        v |= words[w + 1] << (64 - b);
+    }
+    if n < 64 {
+        v &= (1u64 << n) - 1;
+    }
+    v
+}
+
+/// Pack a flit's fields into the wire bit layout
+/// (LSB..: payload | seq | tag | dst | src | vc | last | valid).
+fn pack_wire(f: &Flit, flit_data_width: u32, n_endpoints: usize) -> ([u64; WIRE_WORDS], usize) {
     let id = clog2(n_endpoints.max(2)) as usize;
     let total = wire_bits(flit_data_width, n_endpoints) as usize;
-    let mut bits = BitVec::zeros(total);
-    // Field layout (LSB..): payload | seq | tag | dst | src | vc | last | valid
+    assert!(total <= 64 * WIRE_WORDS, "wire format exceeds {} bits", 64 * WIRE_WORDS);
+    let mut words = [0u64; WIRE_WORDS];
     let mut at = 0;
-    bits.insert_u64(at, flit_data_width as usize, f.data);
+    put_bits(&mut words, at, flit_data_width as usize, f.data);
     at += flit_data_width as usize;
-    bits.insert_u64(at, 8, f.seq as u64);
+    put_bits(&mut words, at, 8, f.seq as u64);
     at += 8;
-    bits.insert_u64(at, 16, f.tag as u64);
+    put_bits(&mut words, at, 16, f.tag as u64);
     at += 16;
-    bits.insert_u64(at, id, f.dst as u64);
+    put_bits(&mut words, at, id, f.dst as u64);
     at += id;
-    bits.insert_u64(at, id, f.src as u64);
+    put_bits(&mut words, at, id, f.src as u64);
     at += id;
-    bits.insert_u64(at, 2, f.vc as u64);
+    put_bits(&mut words, at, 2, f.vc as u64);
     at += 2;
-    bits.insert_u64(at, 1, f.last as u64);
+    put_bits(&mut words, at, 1, f.last as u64);
     at += 1;
-    bits.insert_u64(at, 1, 1); // valid
+    put_bits(&mut words, at, 1, 1); // valid
     at += 1;
     debug_assert_eq!(at, total);
+    (words, total)
+}
 
-    // MSB first, `pins` bits per cycle.
-    let mut samples = Vec::with_capacity(total.div_ceil(pins as usize));
-    let msb: Vec<bool> = bits.iter_msb_first().collect();
-    for chunk in msb.chunks(pins as usize) {
+/// Serialize a flit MSB-first into per-cycle pin samples (`pins` bits per
+/// sample, last sample zero-padded), appended to a cleared `out` — the
+/// zero-allocation form used by the multi-chip wire channels (pass a
+/// pooled buffer whose capacity survives across flits). Bit-exact model
+/// of the Fig 6 shifter.
+pub fn serialize_flit_into(
+    f: &Flit,
+    flit_data_width: u32,
+    n_endpoints: usize,
+    pins: u32,
+    out: &mut Vec<u64>,
+) {
+    assert!((1..=64).contains(&pins), "pins must be 1..=64, got {pins}");
+    let (words, total) = pack_wire(f, flit_data_width, n_endpoints);
+    out.clear();
+    out.reserve(total.div_ceil(pins as usize));
+    let p = pins as usize;
+    // MSB first: the first bit of each sample drives the highest pin.
+    let mut pos = total;
+    while pos > 0 {
         let mut s = 0u64;
-        for (i, &b) in chunk.iter().enumerate() {
-            // First bit of the chunk drives the highest-numbered pin.
-            if b {
-                s |= 1 << (pins as usize - 1 - i);
+        for i in 0..p {
+            if pos == 0 {
+                break;
+            }
+            pos -= 1;
+            if (words[pos / 64] >> (pos % 64)) & 1 == 1 {
+                s |= 1 << (p - 1 - i);
             }
         }
-        samples.push(s);
+        out.push(s);
     }
+}
+
+/// Allocating convenience wrapper around [`serialize_flit_into`].
+pub fn serialize_flit(f: &Flit, flit_data_width: u32, n_endpoints: usize, pins: u32) -> Vec<u64> {
+    let mut samples = Vec::new();
+    serialize_flit_into(f, flit_data_width, n_endpoints, pins, &mut samples);
     samples
 }
 
-/// Reassemble a flit from pin samples produced by [`serialize_flit`].
-/// Returns `None` if the valid bit is clear.
-pub fn deserialize_flit(
+/// Reassemble a flit from pin samples produced by [`serialize_flit`] /
+/// [`serialize_flit_into`]. Returns `None` if the valid bit is clear.
+/// Allocation-free (`injected_at` is a simulator artifact, not wire data;
+/// it comes back 0).
+pub fn deserialize_flit_from(
     samples: &[u64],
     flit_data_width: u32,
     n_endpoints: usize,
     pins: u32,
 ) -> Option<Flit> {
+    assert!((1..=64).contains(&pins), "pins must be 1..=64, got {pins}");
     let id = clog2(n_endpoints.max(2)) as usize;
     let total = wire_bits(flit_data_width, n_endpoints) as usize;
-    let mut bits = BitVec::zeros(total);
+    assert!(total <= 64 * WIRE_WORDS, "wire format exceeds {} bits", 64 * WIRE_WORDS);
+    let mut words = [0u64; WIRE_WORDS];
     // Undo MSB-first: sample 0 carries bits total-1 .. total-pins.
     let mut pos = total;
     'outer: for &s in samples {
@@ -136,30 +204,41 @@ pub fn deserialize_flit(
                 break 'outer;
             }
             pos -= 1;
-            let bit = (s >> (pins as usize - 1 - i)) & 1 == 1;
-            bits.set(pos, bit);
+            if (s >> (pins as usize - 1 - i)) & 1 == 1 {
+                words[pos / 64] |= 1 << (pos % 64);
+            }
         }
     }
     let mut at = 0;
-    let data = bits.extract_u64(at, flit_data_width as usize);
+    let data = get_bits(&words, at, flit_data_width as usize);
     at += flit_data_width as usize;
-    let seq = bits.extract_u64(at, 8) as u32;
+    let seq = get_bits(&words, at, 8) as u32;
     at += 8;
-    let tag = bits.extract_u64(at, 16) as u32;
+    let tag = get_bits(&words, at, 16) as u32;
     at += 16;
-    let dst = bits.extract_u64(at, id) as usize;
+    let dst = get_bits(&words, at, id) as usize;
     at += id;
-    let src = bits.extract_u64(at, id) as usize;
+    let src = get_bits(&words, at, id) as usize;
     at += id;
-    let vc = bits.extract_u64(at, 2) as u8;
+    let vc = get_bits(&words, at, 2) as u8;
     at += 2;
-    let last = bits.extract_u64(at, 1) == 1;
+    let last = get_bits(&words, at, 1) == 1;
     at += 1;
-    let valid = bits.extract_u64(at, 1) == 1;
+    let valid = get_bits(&words, at, 1) == 1;
     if !valid {
         return None;
     }
     Some(Flit { src, dst, vc, tag, seq, last, data, injected_at: 0 })
+}
+
+/// Alias of [`deserialize_flit_from`] (kept for the original name).
+pub fn deserialize_flit(
+    samples: &[u64],
+    flit_data_width: u32,
+    n_endpoints: usize,
+    pins: u32,
+) -> Option<Flit> {
+    deserialize_flit_from(samples, flit_data_width, n_endpoints, pins)
 }
 
 /// One direction of a cut link at cycle granularity. The router-side
@@ -230,7 +309,101 @@ impl SerdesChannel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::bits::BitVec;
     use crate::util::{prop, Rng};
+
+    /// The original BitVec-based serializer, kept verbatim as the format
+    /// oracle: the allocation-free stack-buffer path must emit the exact
+    /// same pin samples.
+    fn reference_serialize(
+        f: &Flit,
+        flit_data_width: u32,
+        n_endpoints: usize,
+        pins: u32,
+    ) -> Vec<u64> {
+        let id = clog2(n_endpoints.max(2)) as usize;
+        let total = wire_bits(flit_data_width, n_endpoints) as usize;
+        let mut bits = BitVec::zeros(total);
+        let mut at = 0;
+        bits.insert_u64(at, flit_data_width as usize, f.data);
+        at += flit_data_width as usize;
+        bits.insert_u64(at, 8, f.seq as u64);
+        at += 8;
+        bits.insert_u64(at, 16, f.tag as u64);
+        at += 16;
+        bits.insert_u64(at, id, f.dst as u64);
+        at += id;
+        bits.insert_u64(at, id, f.src as u64);
+        at += id;
+        bits.insert_u64(at, 2, f.vc as u64);
+        at += 2;
+        bits.insert_u64(at, 1, f.last as u64);
+        at += 1;
+        bits.insert_u64(at, 1, 1); // valid
+        debug_assert_eq!(at + 1, total);
+        let msb: Vec<bool> = bits.iter_msb_first().collect();
+        let mut samples = Vec::new();
+        for chunk in msb.chunks(pins as usize) {
+            let mut s = 0u64;
+            for (i, &b) in chunk.iter().enumerate() {
+                if b {
+                    s |= 1 << (pins as usize - 1 - i);
+                }
+            }
+            samples.push(s);
+        }
+        samples
+    }
+
+    fn random_flit(rng: &mut Rng, n_eps: usize, width: u32) -> Flit {
+        Flit {
+            src: rng.index(n_eps),
+            dst: rng.index(n_eps),
+            vc: rng.index(4) as u8,
+            tag: rng.next_u32() & 0xFFFF,
+            seq: rng.index(256) as u32,
+            last: rng.bool(),
+            data: rng.next_u64() & if width >= 64 { u64::MAX } else { (1 << width) - 1 },
+            injected_at: 0,
+        }
+    }
+
+    #[test]
+    fn stack_serializer_matches_bitvec_reference() {
+        prop::check("serdes stack == BitVec reference", 300, |rng| {
+            let n_eps = 2 + rng.index(200);
+            let width = 1 + rng.index(64) as u32;
+            // Non-divisor pin counts (7, 13, ...) included deliberately.
+            let pins = 1 + rng.index(64) as u32;
+            let f = random_flit(rng, n_eps, width);
+            let fast = serialize_flit(&f, width, n_eps, pins);
+            let slow = reference_serialize(&f, width, n_eps, pins);
+            prop::assert_prop(
+                fast == slow,
+                format!("samples diverge (pins={pins} width={width} eps={n_eps}): {f:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn serialize_into_reuses_the_buffer_and_roundtrips_pins_7() {
+        // The multichip wire path: one pooled buffer, many flits, pins=7
+        // (52 wire bits -> 8 samples, last one 4-bit padded).
+        let mut buf = Vec::new();
+        let mut cap = 0;
+        for tag in 0..20u32 {
+            let f = Flit { tag, ..Flit::single(3, 9, 0, 0x1234 + tag as u64) };
+            serialize_flit_into(&f, 16, 16, 7, &mut buf);
+            assert_eq!(buf.len(), (wire_bits(16, 16) as usize).div_ceil(7));
+            let g = deserialize_flit_from(&buf, 16, 16, 7).expect("valid");
+            assert_eq!((g.tag, g.data, g.src, g.dst), (tag, f.data, 3, 9));
+            if tag == 0 {
+                cap = buf.capacity();
+            } else {
+                assert_eq!(buf.capacity(), cap, "buffer must be reused, not regrown");
+            }
+        }
+    }
 
     #[test]
     fn wire_format_roundtrip_randomized() {

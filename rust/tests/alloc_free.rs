@@ -20,9 +20,12 @@ use fabricflow::apps::pfilter::pe::{
 };
 use fabricflow::apps::pfilter::{histo, video::synthetic_video, TrackerParams};
 use fabricflow::gf2::Gf2Matrix;
+use fabricflow::noc::multichip::MultiChipSim;
 use fabricflow::noc::{Flit, Network, NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
 use fabricflow::pe::collector::ArgMessage;
 use fabricflow::pe::{MsgSink, OutMessage, Processor};
+use fabricflow::serdes::SerdesConfig;
 use fabricflow::util::bits::BitVec;
 use fabricflow::util::Rng;
 
@@ -122,6 +125,68 @@ fn network_steady_state_is_alloc_free(engine: SimEngine) {
     );
     assert_eq!(net.stats().delivered, net.stats().injected);
     drain_all(&mut net);
+}
+
+/// The sharded multi-chip step loop — per-chip networks, wire-channel
+/// serialize/deserialize, credit barriers — is 0-alloc after warm-up on
+/// both schedulers: serdes sample buffers come from per-link pools and
+/// per-link/credit scratch reuses its capacity.
+fn multichip_steady_state_is_alloc_free(engine: SimEngine) {
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+    let mut sim = MultiChipSim::new(&topo, cfg, &part, SerdesConfig::default());
+    let n = sim.n_endpoints();
+
+    // Warm-up 1 — hotspot flood across the cut grows every latency
+    // histogram bucket the measured wave could touch.
+    for s in 0..n {
+        for k in 0..64 {
+            if s != 5 {
+                sim.inject(s, Flit::single(s, 5, k, 0));
+            }
+        }
+    }
+    sim.run_until_idle(100_000_000).expect("hotspot warm-up stalled");
+    for e in 0..n {
+        while sim.eject(e).is_some() {}
+    }
+
+    // Warm-up 2 — two rounds of the exact measured workload, so source
+    // queues, wire pools, rings and credit scratch reach peak capacity.
+    for round in 0..2u32 {
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    sim.inject(s, Flit::single(s, d, (s * n + d) as u32, d as u64));
+                }
+            }
+        }
+        sim.send_message(0, 15, round, &[0xDEAD_BEEF, 0x1234], 96);
+        sim.run_until_idle(100_000_000).expect("uniform warm-up stalled");
+        for e in 0..n {
+            while sim.eject(e).is_some() {}
+        }
+    }
+
+    // Measure: injection + multi-flit message + full sharded drain.
+    let delta = count(|| {
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    sim.inject(s, Flit::single(s, d, (s * n + d) as u32, d as u64));
+                }
+            }
+        }
+        sim.send_message(0, 15, 2, &[0xCAFE_F00D, 0x5678], 96);
+        sim.run_until_idle(100_000_000).expect("measured drain stalled")
+    });
+    assert_eq!(
+        delta, 0,
+        "{engine:?}: MultiChipSim::step allocated {delta} times after warm-up"
+    );
+    let stats = sim.stats();
+    assert_eq!(stats.delivered, stats.injected);
 }
 
 fn check_node_process_is_alloc_free() {
@@ -298,6 +363,8 @@ fn pfilter_root_frame_loop_is_alloc_free() {
 fn steady_state_simulation_does_not_allocate() {
     network_steady_state_is_alloc_free(SimEngine::Reference);
     network_steady_state_is_alloc_free(SimEngine::EventDriven);
+    multichip_steady_state_is_alloc_free(SimEngine::Reference);
+    multichip_steady_state_is_alloc_free(SimEngine::EventDriven);
     check_node_process_is_alloc_free();
     bit_node_process_is_alloc_free();
     bmvm_epochs_are_alloc_free();

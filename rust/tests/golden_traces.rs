@@ -15,6 +15,8 @@ use std::path::PathBuf;
 
 use fabricflow::noc::scenario::{self, ScenarioOutcome};
 use fabricflow::noc::{NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::SerdesConfig;
 
 struct GoldenCase {
     name: &'static str,
@@ -23,35 +25,44 @@ struct GoldenCase {
     load: f64,
     cycles: u64,
     seed: u64,
+    /// 0 = monolithic; >= 2 = sharded across that many FPGAs at the
+    /// paper's 8-pin quasi-serdes link (`Partition::balanced`, seed 42).
+    chips: usize,
 }
 
 fn cases() -> Vec<GoldenCase> {
-    vec![
+    let mono = |name, scenario, topo, seed| GoldenCase {
+        name,
+        scenario,
+        topo,
+        load: 0.1,
+        cycles: 320,
+        seed,
+        chips: 0,
+    };
+    let mut cases = vec![
+        mono("ldpc", "ldpc-trace", Topology::Mesh { w: 4, h: 4 }, 11),
+        mono("pfilter", "pfilter-trace", Topology::Torus { w: 4, h: 4 }, 12),
+        mono("bmvm", "bmvm-trace", Topology::Ring(8), 13),
+    ];
+    // Sharded twins at the paper's 8-pin link: cross-chip timing
+    // regressions (wire serialization, credit barriers, scheduler
+    // ordering) change these files loudly.
+    cases.extend([
         GoldenCase {
-            name: "ldpc",
-            scenario: "ldpc-trace",
-            topo: Topology::Mesh { w: 4, h: 4 },
-            load: 0.1,
-            cycles: 320,
-            seed: 11,
+            chips: 2,
+            ..mono("ldpc-mc2", "ldpc-trace", Topology::Mesh { w: 4, h: 4 }, 11)
         },
         GoldenCase {
-            name: "pfilter",
-            scenario: "pfilter-trace",
-            topo: Topology::Torus { w: 4, h: 4 },
-            load: 0.1,
-            cycles: 320,
-            seed: 12,
+            chips: 2,
+            ..mono("pfilter-mc2", "pfilter-trace", Topology::Torus { w: 4, h: 4 }, 12)
         },
         GoldenCase {
-            name: "bmvm",
-            scenario: "bmvm-trace",
-            topo: Topology::Ring(8),
-            load: 0.1,
-            cycles: 320,
-            seed: 13,
+            chips: 2,
+            ..mono("bmvm-mc2", "bmvm-trace", Topology::Ring(8), 13)
         },
-    ]
+    ]);
+    cases
 }
 
 fn golden_path(name: &str) -> PathBuf {
@@ -73,6 +84,9 @@ fn render(case: &GoldenCase, out: &ScenarioOutcome) -> String {
         "  \"load\": \"{}\", \"window\": {}, \"seed\": {},",
         case.load, case.cycles, case.seed
     );
+    if case.chips > 0 {
+        let _ = writeln!(j, "  \"chips\": {}, \"pins\": 8,", case.chips);
+    }
     let _ = writeln!(j, "  \"cycles\": {},", out.report.cycles);
     let _ = writeln!(j, "  \"stats\": {{");
     let _ = writeln!(j, "    \"injected\": {},", s.injected);
@@ -100,6 +114,17 @@ fn render(case: &GoldenCase, out: &ScenarioOutcome) -> String {
 fn run_case(case: &GoldenCase, engine: SimEngine) -> ScenarioOutcome {
     let scn = scenario::find(case.scenario).expect("scenario registered");
     let cfg = NocConfig { engine, ..NocConfig::paper() };
+    if case.chips > 0 {
+        let partition = Partition::balanced(&case.topo.build(), case.chips, 42);
+        let sharding = scenario::Sharding {
+            partition: &partition,
+            serdes: SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 },
+        };
+        return scenario::run_scenario_multichip(
+            &scn, &case.topo, cfg, &sharding, case.load, case.cycles, case.seed,
+        )
+        .unwrap_or_else(|e| panic!("{} golden run stalled: {e}", case.name));
+    }
     scenario::run_scenario(&scn, &case.topo, cfg, case.load, case.cycles, case.seed)
         .unwrap_or_else(|e| panic!("{} golden run stalled: {e}", case.name))
 }

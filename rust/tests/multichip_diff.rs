@@ -1,0 +1,219 @@
+//! Differential conformance for the sharded multi-FPGA co-simulation:
+//! for every scenario in the registry, the [`MultiChipSim`] (one
+//! `Network` per FPGA, cut links on serializing quasi-serdes wires) must
+//! deliver **the same messages** as the monolithic `Network` — identical
+//! payload bytes, identical per-(source → destination) order — and its
+//! completion cycle must be **≥** the monolithic one (serialization can
+//! only add latency). Both multichip schedulers (lockstep reference and
+//! the event-driven fast path) must also agree with each other exactly.
+//!
+//! The default job runs a small slice; the full matrix (every scenario ×
+//! {2,4}-way partitions × serdes {pins 1/8/32} × {clock_div 1/4}) is
+//! `#[ignore]`d and executed under `--release` by the CI conformance job:
+//!
+//! ```text
+//! cargo test --release --test multichip_diff -- --include-ignored
+//! ```
+
+use std::collections::BTreeMap;
+
+use fabricflow::noc::multichip::MultiChipSim;
+use fabricflow::noc::scenario::{self, EjectRecord, Scenario};
+use fabricflow::noc::{NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::SerdesConfig;
+
+/// Per-(destination, source) eject sequences: the order a destination
+/// sees flits from ONE source is routing-determined and must be
+/// identical monolithic vs sharded (deterministic memoryless routing
+/// sends a (src, dst) pair down one FIFO path). Interleaving ACROSS
+/// sources legitimately shifts with link timing, so it is not compared.
+fn per_pair_sequences(
+    ejects: &[EjectRecord],
+) -> BTreeMap<(usize, usize), Vec<(u32, u64)>> {
+    let mut seq: BTreeMap<(usize, usize), Vec<(u32, u64)>> = BTreeMap::new();
+    for e in ejects {
+        seq.entry((e.endpoint, e.src)).or_default().push((e.tag, e.data));
+    }
+    seq
+}
+
+struct DiffPoint {
+    scenario: Scenario,
+    topo: Topology,
+    n_fpgas: usize,
+    serdes: SerdesConfig,
+    load: f64,
+    cycles: u64,
+    seed: u64,
+}
+
+fn assert_point_conforms(pt: &DiffPoint) {
+    let ctx = format!(
+        "{} on {:?} × {} FPGAs, pins={} clock_div={}",
+        pt.scenario.name, pt.topo, pt.n_fpgas, pt.serdes.pins, pt.serdes.clock_div
+    );
+    let graph = pt.topo.build();
+    let partition = Partition::balanced(&graph, pt.n_fpgas, 42);
+
+    // Monolithic baseline (no serdes anywhere).
+    let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+    let mono = scenario::run_scenario(&pt.scenario, &pt.topo, cfg, pt.load, pt.cycles, pt.seed)
+        .unwrap_or_else(|e| panic!("{ctx} (mono): {e}"));
+
+    // Sharded run on both schedulers.
+    let mut sharded = Vec::new();
+    for engine in SimEngine::ALL {
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let sharding = scenario::Sharding { partition: &partition, serdes: pt.serdes };
+        let out = scenario::run_scenario_multichip(
+            &pt.scenario,
+            &pt.topo,
+            cfg,
+            &sharding,
+            pt.load,
+            pt.cycles,
+            pt.seed,
+        )
+        .unwrap_or_else(|e| panic!("{ctx} ({engine:?}): {e}"));
+        sharded.push(out);
+    }
+    assert_eq!(
+        (sharded[0].report.cycles, &sharded[0].report.net, &sharded[0].ejects),
+        (sharded[1].report.cycles, &sharded[1].report.net, &sharded[1].ejects),
+        "multichip schedulers disagree: {ctx}"
+    );
+    let sh = &sharded[0];
+
+    // Nothing lost, nothing duplicated.
+    assert!(mono.report.net.injected > 0, "empty scenario: {ctx}");
+    assert_eq!(sh.report.net.injected, mono.report.net.injected, "{ctx}");
+    assert_eq!(sh.report.net.delivered, mono.report.net.delivered, "{ctx}");
+    // Hop-for-hop route fidelity: the shards walked the monolithic paths.
+    assert_eq!(sh.report.net.link_hops, mono.report.net.link_hops, "{ctx}");
+    // Same messages, same payload bytes, same per-(dst, src) order.
+    assert_eq!(
+        per_pair_sequences(&sh.ejects),
+        per_pair_sequences(&mono.ejects),
+        "delivery diverged: {ctx}"
+    );
+    // Serialization can only add latency.
+    assert!(
+        sh.report.cycles >= mono.report.cycles,
+        "{ctx}: sharded {} cycles < monolithic {}",
+        sh.report.cycles,
+        mono.report.cycles
+    );
+    // When the partition cuts traffic (it always does on these balanced
+    // bisections of connected scenarios), wires actually carried flits.
+    assert!(sh.report.serdes_flits > 0, "no wire traffic: {ctx}");
+    assert_eq!(sh.report.per_chip.len(), pt.n_fpgas, "{ctx}");
+    assert_eq!(
+        sh.report.per_chip.iter().map(|s| s.delivered).sum::<u64>(),
+        sh.report.net.delivered,
+        "{ctx}"
+    );
+}
+
+/// The default slice: every registered scenario, 2-way partitions of a
+/// mesh, at the paper's 8-pin link. Small enough for the debug test job.
+#[test]
+fn sharded_sim_matches_monolithic_on_default_slice() {
+    let reg = scenario::registry();
+    assert!(reg.len() >= 9, "registry shrank: {}", reg.len());
+    for scenario in reg {
+        assert_point_conforms(&DiffPoint {
+            scenario,
+            topo: Topology::Mesh { w: 4, h: 4 },
+            n_fpgas: 2,
+            serdes: SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 },
+            load: 0.1,
+            cycles: 300,
+            seed: 1,
+        });
+    }
+}
+
+/// Case-study skeletons on their paper topologies, 2- and 4-way.
+#[test]
+fn sharded_sim_matches_monolithic_on_case_studies() {
+    let cases = [
+        ("ldpc-trace", Topology::Mesh { w: 4, h: 4 }),
+        ("pfilter-trace", Topology::Torus { w: 4, h: 4 }),
+        ("bmvm-trace", Topology::Ring(8)),
+    ];
+    for (name, topo) in cases {
+        for n_fpgas in [2usize, 4] {
+            assert_point_conforms(&DiffPoint {
+                scenario: scenario::find(name).unwrap(),
+                topo: topo.clone(),
+                n_fpgas,
+                serdes: SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 },
+                load: 0.1,
+                cycles: 300,
+                seed: 2,
+            });
+        }
+    }
+}
+
+/// The full matrix: every scenario × {2,4}-way partitions × serdes
+/// {pins 1/8/32} × {clock_div 1/4} on mesh, torus and ring fabrics.
+#[test]
+#[ignore = "full matrix: run with --release in the CI conformance job"]
+fn sharded_sim_matches_monolithic_on_full_matrix() {
+    let topos = [
+        Topology::Mesh { w: 4, h: 4 },
+        Topology::Torus { w: 4, h: 4 },
+        Topology::Ring(8),
+        Topology::fat_tree(16),
+    ];
+    for topo in &topos {
+        for scenario in scenario::registry() {
+            for n_fpgas in [2usize, 4] {
+                for pins in [1u32, 8, 32] {
+                    for clock_div in [1u32, 4] {
+                        assert_point_conforms(&DiffPoint {
+                            scenario,
+                            topo: topo.clone(),
+                            n_fpgas,
+                            serdes: SerdesConfig { pins, clock_div, tx_buffer: 8 },
+                            load: 0.08,
+                            cycles: 250,
+                            seed: 7,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Threaded stepping (scoped threads between link barriers) is bit-
+/// identical to single-threaded stepping.
+#[test]
+fn threaded_stepping_matches_lockstep() {
+    use fabricflow::noc::Flit;
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let partition = Partition::balanced(&topo.build(), 4, 9);
+    let serdes = SerdesConfig { pins: 4, clock_div: 2, tx_buffer: 4 };
+    let run = |threaded: bool| {
+        let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+        let mut sim = MultiChipSim::new(&topo, cfg, &partition, serdes);
+        sim.set_threaded(threaded);
+        for k in 0..400u32 {
+            let s = (k as usize * 7) % 16;
+            let d = (s + 1 + (k as usize * 3) % 15) % 16;
+            sim.inject(s, Flit::single(s, d, k, (k * 11) as u64 & 0xFFFF));
+        }
+        let cycles = sim.run_until_idle(50_000_000).unwrap();
+        let mut ejects = Vec::new();
+        for e in 0..16 {
+            while let Some(f) = sim.eject(e) {
+                ejects.push((e, f.src, f.tag, f.data));
+            }
+        }
+        (cycles, sim.stats(), ejects)
+    };
+    assert_eq!(run(false), run(true));
+}
