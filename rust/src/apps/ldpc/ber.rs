@@ -24,7 +24,8 @@ pub struct BerPoint {
 
 /// Monte-Carlo BER over a binary symmetric channel with crossover `p`,
 /// all-zeros codeword (the code is linear), `frames` trials, `niter`
-/// min-sum iterations. Deterministic in `seed`.
+/// min-sum iterations. Deterministic in `seed`. Serial; equal to
+/// [`ber_sweep_fleet`] at one thread by definition.
 pub fn ber_sweep(
     code: &PgLdpcCode,
     variant: MinsumVariant,
@@ -34,10 +35,32 @@ pub fn ber_sweep(
     amp: i32,
     seed: u64,
 ) -> Vec<BerPoint> {
-    let dec = ReferenceDecoder::new(code.clone(), variant);
+    ber_sweep_fleet(code, variant, ps, frames, niter, amp, seed, 1)
+}
+
+/// [`ber_sweep`] on the fleet: the SNR (crossover) × seed grid fans out
+/// across `threads` pooled workers, one [`ReferenceDecoder`] per worker
+/// reused for every point it pulls. Each point's Monte-Carlo stream is
+/// seeded independently (`seed ^ hash(p)`), so the curve is
+/// **bit-identical for any thread count** and to the serial
+/// [`ber_sweep`] — the fleet only changes wall-clock, never statistics.
+#[allow(clippy::too_many_arguments)]
+pub fn ber_sweep_fleet(
+    code: &PgLdpcCode,
+    variant: MinsumVariant,
+    ps: &[f64],
+    frames: usize,
+    niter: u32,
+    amp: i32,
+    seed: u64,
+    threads: usize,
+) -> Vec<BerPoint> {
     let n = code.n;
-    ps.iter()
-        .map(|&p| {
+    crate::fleet::run_jobs(
+        ps,
+        threads,
+        |_| ReferenceDecoder::new(code.clone(), variant),
+        |dec, &p, _| {
             let mut rng = Rng::new(seed ^ (p * 1e9) as u64);
             let mut bit_errs = 0u64;
             let mut frame_errs = 0u64;
@@ -66,8 +89,8 @@ pub fn ber_sweep(
                 fer: frame_errs as f64 / frames as f64,
                 raw_ber: raw_errs as f64 / (frames * n) as f64,
             }
-        })
-        .collect()
+        },
+    )
 }
 
 #[cfg(test)]
@@ -94,6 +117,31 @@ mod tests {
                 pt.ber,
                 pt.raw_ber
             );
+        }
+    }
+
+    #[test]
+    fn fleet_curve_is_bit_identical_to_serial() {
+        let code = PgLdpcCode::fano();
+        let ps = [0.01, 0.03, 0.05, 0.08, 0.12, 0.2];
+        let serial = ber_sweep(&code, MinsumVariant::SignMagnitude, &ps, 120, 8, 100, 9);
+        for threads in [2usize, 4] {
+            let fleet = ber_sweep_fleet(
+                &code,
+                MinsumVariant::SignMagnitude,
+                &ps,
+                120,
+                8,
+                100,
+                9,
+                threads,
+            );
+            for (s, f) in serial.iter().zip(&fleet) {
+                assert_eq!(s.p, f.p, "threads={threads}");
+                assert_eq!(s.ber, f.ber, "threads={threads}: statistics must not move");
+                assert_eq!(s.fer, f.fer, "threads={threads}");
+                assert_eq!(s.raw_ber, f.raw_ber, "threads={threads}");
+            }
         }
     }
 

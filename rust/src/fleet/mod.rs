@@ -1,0 +1,163 @@
+//! Fleet execution: a zero-dependency scoped-thread worker pool that
+//! turns "one simulation" into "thousands per second".
+//!
+//! Design exploration over the paper's framework — picking a CONNECT
+//! topology, link pin count, partition — means running the *same* fabric
+//! over many scenarios, loads, seeds and SNR points. The fleet layer is
+//! the engine every such sweep runs on:
+//!
+//! * **Jobs, not threads, define the work.** [`run_jobs`] takes a slice
+//!   of job descriptions and pulls indices off one atomic cursor; adding
+//!   a worker never changes *what* runs, only *where*.
+//! * **Workers are pooled state.** Each worker thread builds its state
+//!   once (`make_worker`, typically a [`crate::noc::Network`] replica
+//!   from a [`crate::noc::SharedFabric`], reset between jobs) and reuses
+//!   it for every job it pulls — construction cost (route-table
+//!   tabulation, arena allocation) is paid per *worker*, not per *job*.
+//! * **Output is deterministic by construction.** Every job writes its
+//!   result into the slot named by its job index, so the returned vector
+//!   is bit-identical regardless of thread count or scheduling order —
+//!   provided each job is a pure function of its description and a
+//!   freshly reset worker, which `Network::reset`'s fresh-equality
+//!   guarantee supplies. `tests/fleet_sweep.rs` enforces thread-count
+//!   invariance differentially.
+//!
+//! The pool is deliberately minimal — `std::thread::scope`, one
+//! `AtomicUsize`, no channels, no dependencies — because the simulations
+//! themselves are the expensive part; see `EXPERIMENTS.md` §Sweeps for
+//! the grid runners built on top ([`crate::noc::scenario::run_grid`],
+//! [`crate::flow::Sweep`], [`crate::apps::ldpc::ber::ber_sweep_fleet`])
+//! and the `"sweep"` section of `BENCH_noc.json` for tracked jobs/sec.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker threads to use when the caller does not care: the machine's
+/// available parallelism (1 if it cannot be determined).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Run every job in `jobs` across `threads` pooled workers and return
+/// one result per job, **in job order** (bit-identical for any thread
+/// count — see the [module docs](self)).
+///
+/// `make_worker(t)` builds worker `t`'s pooled state on its own thread;
+/// `run_job(worker, job, index)` executes one job against it. A panic in
+/// either propagates. `threads` is clamped to `1..=jobs.len()`; with one
+/// thread everything runs inline on the caller's thread (no spawn).
+///
+/// ```
+/// use fabricflow::fleet;
+/// let jobs: Vec<u64> = (0..100).collect();
+/// let squares = fleet::run_jobs(&jobs, 4, |_| (), |_, &j, _| j * j);
+/// assert_eq!(squares[7], 49);
+/// ```
+pub fn run_jobs<J, W, R>(
+    jobs: &[J],
+    threads: usize,
+    make_worker: impl Fn(usize) -> W + Sync,
+    run_job: impl Fn(&mut W, &J, usize) -> R + Sync,
+) -> Vec<R>
+where
+    J: Sync,
+    R: Send,
+{
+    let threads = threads.clamp(1, jobs.len().max(1));
+    // Pre-sized slot array: job i's result lands in slot i no matter
+    // which worker ran it or when.
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(jobs.len());
+    slots.resize_with(jobs.len(), || None);
+    if threads == 1 {
+        let mut worker = make_worker(0);
+        for (i, job) in jobs.iter().enumerate() {
+            slots[i] = Some(run_job(&mut worker, job, i));
+        }
+    } else {
+        let cursor = AtomicUsize::new(0);
+        let filled = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let cursor = &cursor;
+                    let make_worker = &make_worker;
+                    let run_job = &run_job;
+                    s.spawn(move || {
+                        let mut worker = make_worker(t);
+                        let mut out = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            let Some(job) = jobs.get(i) else { break };
+                            out.push((i, run_job(&mut worker, job, i)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("fleet worker panicked"))
+                .collect::<Vec<(usize, R)>>()
+        });
+        for (i, r) in filled {
+            debug_assert!(slots[i].is_none(), "job {i} ran twice");
+            slots[i] = Some(r);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|r| r.expect("atomic cursor covers every job exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn results_land_in_job_order_for_any_thread_count() {
+        let jobs: Vec<usize> = (0..257).collect();
+        let want: Vec<usize> = jobs.iter().map(|j| j * 3 + 1).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            let got = run_jobs(&jobs, threads, |_| (), |_, &j, _| j * 3 + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn workers_are_constructed_once_and_reused() {
+        let built = AtomicUsize::new(0);
+        let jobs = [0u32; 100];
+        let counts = run_jobs(
+            &jobs,
+            4,
+            |_| {
+                built.fetch_add(1, Ordering::Relaxed);
+                0u32 // per-worker job counter
+            },
+            |count, _, _| {
+                *count += 1;
+                *count
+            },
+        );
+        assert!(built.load(Ordering::Relaxed) <= 4, "one worker state per thread");
+        // Every job saw pooled (monotonically reused) worker state.
+        let max_reuse = counts.into_iter().max().unwrap();
+        assert!(max_reuse >= 100 / 4, "workers must be reused across jobs");
+    }
+
+    #[test]
+    fn edge_shapes() {
+        // Empty job list, threads > jobs, single job.
+        let none: Vec<u32> = run_jobs(&[] as &[u32], 8, |_| (), |_, &j, _| j);
+        assert!(none.is_empty());
+        let one = run_jobs(&[41u32], 16, |_| (), |_, &j, _| j + 1);
+        assert_eq!(one, vec![42]);
+    }
+
+    #[test]
+    fn job_index_is_passed_through() {
+        let jobs = [10u32, 20, 30];
+        let got = run_jobs(&jobs, 2, |_| (), |_, &j, i| (i, j));
+        assert_eq!(got, vec![(0, 10), (1, 20), (2, 30)]);
+    }
+}

@@ -818,7 +818,8 @@ impl MappedFlow {
 
     /// Build one fresh flow per input, run it, and collect a value from
     /// the quiescent system — the batched-run primitive behind sweeps
-    /// (BER curves, topology menus, r-sweeps).
+    /// (BER curves, topology menus, r-sweeps). Serial; [`Sweep`] is the
+    /// fleet-parallel counterpart with identical results.
     pub fn run_batch<I, T>(
         inputs: impl IntoIterator<Item = I>,
         mut build: impl FnMut(&I) -> Result<MappedFlow, FlowError>,
@@ -945,6 +946,73 @@ impl MappedFlow {
             .find(|(n, _)| n.as_str() == name)
             .unwrap_or_else(|| panic!("flow '{}' has no tap '{name}'", self.name))
             .1
+    }
+}
+
+/// Fleet-parallel flow sweeps: one fresh [`MappedFlow`] per input, built
+/// and run on `threads` pooled workers ([`crate::fleet::run_jobs`]),
+/// results returned **in input order** — bit-identical to
+/// [`MappedFlow::run_batch`] over the same inputs for any thread count,
+/// because every flow is deterministic and self-contained. This is the
+/// design-exploration front end: BER curves, topology menus, partition
+/// seeds, r-sweeps, each input one independent simulation.
+///
+/// Unlike `run_batch`, an error (build failure, run timeout) does not
+/// cancel the other jobs — every input still runs to completion and the
+/// error returned is deterministically the first one in INPUT order,
+/// independent of scheduling. Pre-validate inputs if a sweep is
+/// expensive enough that running past a failure matters.
+pub struct Sweep {
+    threads: usize,
+}
+
+impl Sweep {
+    /// A sweep over `threads` workers (clamped to at least 1; use
+    /// [`crate::fleet::default_threads`] for the machine's parallelism).
+    pub fn new(threads: usize) -> Self {
+        Sweep { threads: threads.max(1) }
+    }
+
+    /// Run one flow per input and collect `(collect(..), RunReport)` per
+    /// input, in input order.
+    pub fn run<I, T>(
+        &self,
+        inputs: &[I],
+        build: impl Fn(&I) -> Result<MappedFlow, FlowError> + Sync,
+        collect: impl Fn(&I, &mut MappedFlow) -> T + Sync,
+    ) -> Result<Vec<(T, RunReport)>, FlowError>
+    where
+        I: Sync,
+        T: Send,
+    {
+        let runs = crate::fleet::run_jobs(
+            inputs,
+            self.threads,
+            |_| (),
+            |_, input, _| -> Result<(T, RunReport), FlowError> {
+                let mut flow = build(input)?;
+                let report = flow.run()?;
+                Ok((collect(input, &mut flow), report))
+            },
+        );
+        runs.into_iter().collect()
+    }
+}
+
+impl FlowBuilder {
+    /// [`MappedFlow::run_batch`] on the fleet: build/run/collect one flow
+    /// per input across `threads` workers. See [`Sweep`].
+    pub fn run_sweep<I, T>(
+        inputs: &[I],
+        threads: usize,
+        build: impl Fn(&I) -> Result<MappedFlow, FlowError> + Sync,
+        collect: impl Fn(&I, &mut MappedFlow) -> T + Sync,
+    ) -> Result<Vec<(T, RunReport)>, FlowError>
+    where
+        I: Sync,
+        T: Send,
+    {
+        Sweep::new(threads).run(inputs, build, collect)
     }
 }
 
@@ -1277,6 +1345,56 @@ mod tests {
         let sums: Vec<u64> = runs.iter().map(|(v, _)| *v).collect();
         assert_eq!(sums, vec![11, 12, 13]);
         assert!(runs.iter().all(|(_, r)| r.cycles > 0));
+    }
+
+    #[test]
+    fn sweep_matches_run_batch_for_any_thread_count() {
+        let build = |&x: &u64| {
+            let mut fb = FlowBuilder::new("sweep");
+            fb.topology(Topology::Mesh { w: 2, h: 2 })
+                .pe_at(
+                    "src",
+                    0,
+                    Box::new(Source {
+                        msgs: vec![
+                            OutMessage::word(3, 0, 0, x, 16),
+                            OutMessage::word(3, 1, 0, 10, 16),
+                        ],
+                    }),
+                )
+                .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 1 }))
+                .tap_at("out", 2);
+            fb.build()
+        };
+        let collect =
+            |_: &u64, flow: &mut MappedFlow| flow.drain_messages("out", 16)[0].words[0];
+        let inputs: Vec<u64> = (1..=9).collect();
+        let serial = MappedFlow::run_batch(inputs.iter().copied(), |&x| build(&x), |&x, f| {
+            collect(&x, f)
+        })
+        .unwrap();
+        for threads in [1usize, 3, 8] {
+            let swept = FlowBuilder::run_sweep(&inputs, threads, build, collect).unwrap();
+            assert_eq!(swept.len(), serial.len());
+            for (i, ((sv, sr), (pv, pr))) in serial.iter().zip(&swept).enumerate() {
+                assert_eq!(sv, pv, "threads={threads} input {i}");
+                assert_eq!(sr.cycles, pr.cycles, "threads={threads} input {i}");
+                assert_eq!(sr.net, pr.net, "threads={threads} input {i}");
+            }
+        }
+        // Errors propagate out of the fleet too.
+        let bad = FlowBuilder::run_sweep(
+            &inputs,
+            2,
+            |_| {
+                let mut fb = FlowBuilder::new("bad");
+                fb.noc(NocConfig { flit_data_width: 0, ..NocConfig::paper() })
+                    .pe("p", Box::new(Source { msgs: Vec::new() }));
+                fb.build()
+            },
+            |_, _| 0u64,
+        );
+        assert!(matches!(bad, Err(FlowError::Config(_))));
     }
 
     #[test]

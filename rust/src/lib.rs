@@ -71,6 +71,13 @@
 //!   particle-filter object tracking, and Boolean matrix-vector
 //!   multiplication over GF(2) using Ryan Williams' sub-quadratic
 //!   algorithm — all constructed exclusively through [`flow::FlowBuilder`].
+//! * **Fleet execution** ([`fleet`], [`noc::scenario::run_grid`],
+//!   [`flow::Sweep`]): design-exploration grids (scenario × load × seed,
+//!   BER SNR points, multichip wire configs) run on a zero-dependency
+//!   scoped-thread worker pool. Fabrics are constructed once
+//!   ([`noc::SharedFabric`] shares one tabulated route table across
+//!   replicas) and [`noc::Network::reset`] between jobs; results are
+//!   bit-identical for any thread count.
 //! * **Substrates**: [`gf2`] (GF(2)/GF(2^s) algebra and projective-geometry
 //!   LDPC codes), [`resources`] (zc7020-style FPGA resource model),
 //!   [`dfg`]+[`mips`] (the paper's compiler-driven toy flow, Fig 2), and
@@ -92,6 +99,7 @@ pub mod serdes;
 pub mod partition;
 pub mod pe;
 pub mod flow;
+pub mod fleet;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod dfg;

@@ -9,7 +9,10 @@
 //! fabricflow noc --topo mesh8x8         # raw NoC traffic experiment
 //! fabricflow scenarios --topo mesh8x8   # scenario matrix (engine-selectable)
 //! fabricflow scenarios --chips 2        # …sharded across FPGAs (multichip co-sim)
+//! fabricflow sweep --threads 8          # fleet: scenario × load × seed grid
+//! fabricflow sweep --chips 2 --pins 1,8 # …multichip grid across wire configs
 //! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
+//! fabricflow bench --only sweep         # …regenerate one section, keep the rest
 //! fabricflow partition                  # Fig 5 quasi-SERDES demo
 //! fabricflow resources                  # device + component inventory
 //! ```
@@ -321,13 +324,134 @@ fn cmd_scenarios(args: &Args) {
     }
 }
 
+fn cmd_sweep(args: &Args) {
+    use std::time::Instant;
+    let eps = args.get("endpoints", 64usize);
+    let topo = topo_from_name(&args.str("topo", "mesh8x8"), eps);
+    let engine = match args.str("engine", "event").as_str() {
+        "ref" | "reference" => SimEngine::Reference,
+        "event" | "event-driven" => SimEngine::EventDriven,
+        other => panic!("unknown engine '{other}' (reference, event)"),
+    };
+    let threads = args.get("threads", fabricflow::fleet::default_threads());
+    let cycles = args.get("cycles", 800u64);
+    let loads: Vec<f64> = args
+        .str("loads", "0.02,0.1")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad --loads entry"))
+        .collect();
+    // --seeds N sweeps seeds 1..=N.
+    let seeds: Vec<u64> = (1..=args.get("seeds", 4u64)).collect();
+    let which = args.str("scenario", "all");
+    let scenarios: Vec<scenario::Scenario> = scenario::registry()
+        .into_iter()
+        .filter(|s| which == "all" || s.name == which)
+        .collect();
+    if scenarios.is_empty() {
+        eprintln!("unknown scenario '{which}'");
+        std::process::exit(2);
+    }
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let grid = scenario::SweepGrid { topo: topo.clone(), cfg, scenarios, loads, seeds, cycles };
+    let chips = args.get("chips", 0usize);
+    let t = Instant::now();
+    // (cells for the per-cell printout, merged stats for the aggregate)
+    let (n_jobs, rows, mut agg) = if chips >= 2 {
+        let partition = Partition::balanced(&topo.build(), chips, args.get("seed", 1u64));
+        let pins: Vec<u32> = args
+            .str("pins", "8")
+            .split(',')
+            .map(|s| s.trim().parse().expect("bad --pins entry"))
+            .collect();
+        let divs: Vec<u32> = args
+            .str("clock-divs", "1")
+            .split(',')
+            .map(|s| s.trim().parse().expect("bad --clock-divs entry"))
+            .collect();
+        let mut serdes_points = Vec::new();
+        for &p in &pins {
+            for &d in &divs {
+                serdes_points.push(SerdesConfig { pins: p, clock_div: d, tx_buffer: 8 });
+            }
+        }
+        let cells = scenario::run_multichip_grid(&grid, &partition, &serdes_points, threads)
+            .unwrap_or_else(|e| panic!("multichip sweep stalled: {e}"));
+        let mut agg = fabricflow::noc::NetStats::default();
+        let rows: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                agg.merge(&c.stats);
+                format!(
+                    "{:12} load {:<5} seed {:<3} {:>2} pins /{} div: {:>8} cyc {:>7} flits {:>6} wire | p50 {} p95 {} p99 {}",
+                    c.scenario, c.load, c.seed, c.pins, c.clock_div, c.cycles,
+                    c.stats.delivered, c.wire_flits,
+                    c.stats.p50(), c.stats.p95(), c.stats.p99()
+                )
+            })
+            .collect();
+        (cells.len(), rows, agg)
+    } else {
+        let cells = scenario::run_grid(&grid, threads)
+            .unwrap_or_else(|e| panic!("sweep stalled: {e}"));
+        let mut agg = fabricflow::noc::NetStats::default();
+        let rows: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                agg.merge(&c.stats);
+                format!(
+                    "{:12} load {:<5} seed {:<3} {:>8} cyc {:>7} flits | p50 {} p95 {} p99 {}",
+                    c.scenario, c.load, c.seed, c.cycles, c.stats.delivered,
+                    c.stats.p50(), c.stats.p95(), c.stats.p99()
+                )
+            })
+            .collect();
+        (cells.len(), rows, agg)
+    };
+    let wall = t.elapsed().as_secs_f64();
+    println!(
+        "fleet sweep on {topo:?} — {} engine, {n_jobs} jobs, {threads} thread(s){}",
+        engine.name(),
+        if chips >= 2 { format!(", {chips} FPGAs") } else { String::new() }
+    );
+    for row in rows {
+        println!("  {row}");
+    }
+    agg.cycles = 0; // per-job clocks are independent; don't fake a fabric clock
+    println!(
+        "  aggregate: {} injected, {} delivered, avg lat {:.1}, p50 {} p95 {} p99 {}",
+        agg.injected,
+        agg.delivered,
+        agg.avg_latency(),
+        agg.p50(),
+        agg.p95(),
+        agg.p99()
+    );
+    println!("  {n_jobs} jobs in {:.1} ms — {:.1} jobs/sec", wall * 1e3, n_jobs as f64 / wall);
+}
+
 fn cmd_bench(args: &Args) {
     let quick = args.has("quick");
     let out = args.str("out", "BENCH_noc.json");
-    let report = fabricflow::perf::run(quick);
+    let sel = match args.flags.get("only") {
+        Some(s) => fabricflow::perf::BenchSelect::parse(s).unwrap_or_else(|| {
+            eprintln!("bad --only '{s}' (comma-separated: points, multichip, sweep)");
+            std::process::exit(2);
+        }),
+        None => fabricflow::perf::BenchSelect::ALL,
+    };
+    let report = fabricflow::perf::run_selected(quick, sel);
     // Table on stderr so `--out -` leaves stdout as pure, parseable JSON.
     eprint!("{}", report.render_table());
-    let json = report.to_json();
+    // --only + an existing file: read-modify-write, preserving the
+    // sections this run did not regenerate.
+    let json = if sel.is_all() || out == "-" {
+        report.to_json()
+    } else {
+        match std::fs::read_to_string(&out) {
+            Ok(old) => fabricflow::perf::merge_sections(&old, &report, sel),
+            Err(_) => report.to_json(),
+        }
+    };
     if out == "-" {
         print!("{json}");
     } else {
@@ -390,7 +514,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprintln!(
-            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|scenarios|bench|partition|resources> [flags]"
+            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|scenarios|sweep|bench|partition|resources> [flags]"
         );
         std::process::exit(2);
     };
@@ -403,6 +527,7 @@ fn main() {
         "dfg" => cmd_dfg(&args),
         "noc" => cmd_noc(&args),
         "scenarios" => cmd_scenarios(&args),
+        "sweep" => cmd_sweep(&args),
         "bench" => cmd_bench(&args),
         "partition" => cmd_partition_demo(&args),
         "resources" => cmd_resources(),

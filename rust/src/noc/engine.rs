@@ -72,6 +72,15 @@ impl ActiveSet {
         }
     }
 
+    /// Drop every member in place (capacity retained) — the worklist
+    /// half of [`Network::reset`].
+    pub(super) fn clear(&mut self) {
+        for &i in &self.items {
+            self.in_set[i] = false;
+        }
+        self.items.clear();
+    }
+
     /// Move the members into `out` in ascending order and clear the set.
     /// The caller re-inserts whatever is still active after its sweep.
     pub(super) fn begin_sweep(&mut self, out: &mut Vec<usize>) {

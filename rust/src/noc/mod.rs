@@ -36,7 +36,7 @@ pub mod traffic;
 pub use engine::Stalled;
 pub use flit::{Flit, NodeId};
 pub use multichip::{LinkStat, MultiChipSim};
-pub use network::Network;
+pub use network::{Network, SharedFabric};
 pub use stats::NetStats;
 pub use topology::Topology;
 

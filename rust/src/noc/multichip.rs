@@ -141,6 +141,19 @@ impl WireChannel {
         Some(flit)
     }
 
+    /// Drop in-flight entries and counters in place; queued sample
+    /// buffers return to the pool so a reset fabric still serializes
+    /// without allocating.
+    fn reset(&mut self) {
+        while let Some(e) = self.queue.pop_front() {
+            self.pool.push(e.samples);
+        }
+        self.busy_until = 0;
+        self.carried = 0;
+        self.active_cycles = 0;
+        self.stall_cycles = 0;
+    }
+
     fn next_ready(&self) -> Option<u64> {
         self.queue.front().map(|e| e.done)
     }
@@ -477,29 +490,38 @@ impl MultiChipSim {
         self.links.iter().map(|l| l.chan.carried).sum()
     }
 
-    /// Fabric-wide counters: per-chip [`NetStats`] summed. A flit is
-    /// counted `injected` on its source chip and `delivered` on its
-    /// destination chip, so the totals match the monolithic simulation;
-    /// `link_hops` includes one hop per wire crossing (as the monolithic
-    /// serdes path counts it).
+    /// Fabric-wide counters: per-chip [`NetStats`] merged
+    /// ([`NetStats::merge`]). A flit is counted `injected` on its source
+    /// chip and `delivered` on its destination chip, so the totals match
+    /// the monolithic simulation; `link_hops` includes one hop per wire
+    /// crossing (as the monolithic serdes path counts it). The merged
+    /// `cycles` is overwritten with the fabric's synchronized clock.
     pub fn stats(&self) -> NetStats {
         let mut total = NetStats::default();
         for chip in &self.chips {
-            let s = chip.stats();
-            total.injected += s.injected;
-            total.delivered += s.delivered;
-            total.total_latency += s.total_latency;
-            total.max_latency = total.max_latency.max(s.max_latency);
-            total.link_hops += s.link_hops;
-            if total.latency_hist.len() < s.latency_hist.len() {
-                total.latency_hist.resize(s.latency_hist.len(), 0);
-            }
-            for (b, &n) in s.latency_hist.iter().enumerate() {
-                total.latency_hist[b] += n;
-            }
+            total.merge(chip.stats());
         }
         total.cycles = self.cycle;
         total
+    }
+
+    /// Restore the whole fabric to cycle 0, exactly as freshly
+    /// constructed, without rebuilding anything: every chip's
+    /// [`Network::reset`] plus the wire channels' in-flight queues and
+    /// counters, cleared in place. Chip graphs, route tables and wire
+    /// formats are untouched, so a fleet worker reruns a sharded
+    /// simulation at reset cost, not construction cost.
+    pub fn reset(&mut self) {
+        for chip in &mut self.chips {
+            chip.reset();
+        }
+        for link in &mut self.links {
+            link.chan.reset();
+        }
+        self.cycle = 0;
+        self.in_flight = 0;
+        self.wire_moves = 0;
+        self.credit_scratch.clear();
     }
 
     /// Advance the whole fabric one cycle: every chip steps (serially or
@@ -845,6 +867,44 @@ mod tests {
         }
         assert_eq!(from2, (0..64).collect::<Vec<u32>>());
         assert_eq!(from9, (0..64).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn reset_rerun_is_bit_identical_to_fresh_fabric() {
+        // Construct-once + reset must be indistinguishable from a fresh
+        // MultiChipSim on both schedulers: same cycles, same combined
+        // stats, same link stats, same eject order.
+        let topo = Topology::Torus { w: 4, h: 4 };
+        let part = bisection(16, 4);
+        let serdes = SerdesConfig { pins: 4, clock_div: 2, tx_buffer: 2 };
+        let traffic = uniform_traffic(0xF1EE7, 16, 250);
+        for engine in SimEngine::ALL {
+            let cfg = NocConfig { engine, ..NocConfig::paper() };
+            let run = |sim: &mut MultiChipSim| {
+                for &(s, d, k, x) in &traffic {
+                    sim.inject(s, Flit::single(s, d, k, x));
+                }
+                let cycles = sim.run_until_idle(10_000_000).unwrap();
+                let mut ejects = Vec::new();
+                for e in 0..16 {
+                    while let Some(f) = sim.eject(e) {
+                        ejects.push((e, f.src, f.tag, f.data, f.injected_at));
+                    }
+                }
+                (cycles, sim.stats(), sim.link_stats(), ejects)
+            };
+            let mut fresh = MultiChipSim::new(&topo, cfg, &part, serdes);
+            let want = run(&mut fresh);
+
+            let mut reused = MultiChipSim::new(&topo, cfg, &part, serdes);
+            run(&mut reused);
+            reused.reset();
+            assert_eq!(reused.cycle(), 0, "{engine:?}");
+            assert!(reused.idle(), "{engine:?}");
+            assert_eq!(reused.wire_flits(), 0, "{engine:?}");
+            let got = run(&mut reused);
+            assert_eq!(got, want, "{engine:?}: reset fabric diverged from fresh");
+        }
     }
 
     #[test]

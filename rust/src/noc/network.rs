@@ -25,6 +25,7 @@
 //! per-router phase bodies below, producing bit-identical results.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use super::engine::{ActiveSet, Stalled};
 use super::flit::{packetize_into, Flit, NodeId};
@@ -46,13 +47,57 @@ struct VcRing {
     len: u16,
 }
 
+/// The immutable half of a built network — the router graph plus its
+/// tabulated [`RoutePlan`] — behind [`Arc`], so many [`Network`]
+/// replicas (fleet workers, sweep jobs) share ONE route table instead
+/// of re-tabulating and holding up to 4M entries each.
+///
+/// ```
+/// use fabricflow::noc::{NocConfig, SharedFabric, Topology};
+/// let fabric = SharedFabric::new(&Topology::Torus { w: 4, h: 4 });
+/// let a = fabric.network(NocConfig::paper()); // cheap replica
+/// let b = fabric.network(NocConfig::paper()); // shares a's route table
+/// assert_eq!(a.n_endpoints(), b.n_endpoints());
+/// ```
+#[derive(Clone)]
+pub struct SharedFabric {
+    topo: Arc<TopoGraph>,
+    plan: Arc<RoutePlan>,
+}
+
+impl SharedFabric {
+    /// Build the graph and tabulate its route plan once.
+    pub fn new(topo: &Topology) -> Self {
+        Self::from_graph(topo.build())
+    }
+
+    /// [`SharedFabric::new`] over an already-built router graph.
+    pub fn from_graph(topo: TopoGraph) -> Self {
+        let plan = topo.route_plan();
+        SharedFabric { topo: Arc::new(topo), plan: Arc::new(plan) }
+    }
+
+    /// The shared router graph.
+    pub fn topo(&self) -> &TopoGraph {
+        &self.topo
+    }
+
+    /// A fresh network replica over the shared graph + route table. The
+    /// replica owns only its mutable simulation state (arena, queues,
+    /// latches, stats); topology and routes are the shared `Arc`s.
+    pub fn network(&self, cfg: NocConfig) -> Network {
+        Network::from_shared(self.topo.clone(), self.plan.clone(), cfg)
+    }
+}
+
 /// A built, steppable NoC.
 pub struct Network {
     pub(super) cfg: NocConfig,
-    pub(super) topo: TopoGraph,
+    pub(super) topo: Arc<TopoGraph>,
     /// Precomputed flat route table (see [`RoutePlan`]); looked up once
-    /// per flit arrival, never inside the allocator.
-    routes: RoutePlan,
+    /// per flit arrival, never inside the allocator. Shared (`Arc`)
+    /// across every replica built from the same [`SharedFabric`].
+    routes: Arc<RoutePlan>,
     pub(super) routers: Vec<Router>,
     /// Flat per-network flit arena: the input VC ring of (router `r`,
     /// port `p`, VC `v`) occupies slots `[slab * depth, (slab+1) * depth)`
@@ -132,8 +177,15 @@ impl Network {
     }
 
     /// Build from an already-constructed router graph (used by the
-    /// partitioner, which rewrites graphs).
-    pub fn from_graph(topo: TopoGraph, mut cfg: NocConfig) -> Self {
+    /// partitioner, which rewrites graphs). Tabulates a private route
+    /// plan; use [`SharedFabric`] to share one plan across replicas.
+    pub fn from_graph(topo: TopoGraph, cfg: NocConfig) -> Self {
+        let plan = topo.route_plan();
+        Self::from_shared(Arc::new(topo), Arc::new(plan), cfg)
+    }
+
+    /// Build over a shared graph + route plan (see [`SharedFabric`]).
+    fn from_shared(topo: Arc<TopoGraph>, routes: Arc<RoutePlan>, mut cfg: NocConfig) -> Self {
         cfg.num_vcs = cfg.num_vcs.max(topo.min_vcs);
         assert!(
             cfg.buffer_depth <= u16::MAX as usize,
@@ -173,7 +225,6 @@ impl Network {
         let n_eps = topo.n_endpoints;
         let n_routers = topo.n_routers;
         let serdes = topo.ports.iter().map(|p| vec![None; p.len()]).collect();
-        let routes = topo.route_plan();
         Network {
             cfg,
             routes,
@@ -207,6 +258,63 @@ impl Network {
             moves: 0,
             gw_credit_returns: Vec::new(),
         }
+    }
+
+    /// Restore the network to cycle 0, exactly as freshly constructed —
+    /// without reconstructing anything. Mutable simulation state (ring
+    /// heads, latches, credits, queues, stats, serdes channels, RR
+    /// pointers, worklists) is cleared in place; the topology, the
+    /// tabulated [`RoutePlan`], every buffer's capacity and any
+    /// installed serdes channels are untouched. A handful of memsets
+    /// over per-router metadata — no allocation, no route tabulation —
+    /// so a fleet worker can run thousands of simulations on one
+    /// constructed fabric. A reset network is bit-identical to a fresh
+    /// one: same cycle counts, same stats, same eject order
+    /// (`tests/fleet_sweep.rs` enforces it differentially).
+    pub fn reset(&mut self) {
+        for ring in &mut self.rings {
+            *ring = VcRing::default();
+        }
+        // Stale arena contents are unreachable once every ring is empty;
+        // `flit_buf`/`hop_buf` need no touch.
+        let depth = self.cfg.buffer_depth as u32;
+        for router in &mut self.routers {
+            for out in &mut router.outputs {
+                out.latch = None;
+                out.rr_input = 0;
+                for c in &mut out.credits {
+                    *c = depth;
+                }
+            }
+            for v in &mut router.rr_vc {
+                *v = 0;
+            }
+        }
+        for q in &mut self.src_q {
+            q.clear();
+        }
+        self.queued_src = 0;
+        for q in &mut self.eject_q {
+            q.clear();
+        }
+        for credits in &mut self.ni_credits {
+            for c in credits.iter_mut() {
+                *c = depth;
+            }
+        }
+        self.cycle = 0;
+        self.in_network = 0;
+        self.stats.reset();
+        self.occupancy.fill(0);
+        self.latched.fill(0);
+        for ch in self.serdes.iter_mut().flatten().flatten() {
+            ch.reset();
+        }
+        self.deliver_set.clear();
+        self.alloc_set.clear();
+        self.ni_set.clear();
+        self.moves = 0;
+        self.gw_credit_returns.clear();
     }
 
     // -- flat flit arena ----------------------------------------------------
@@ -1030,6 +1138,72 @@ mod tests {
             n.run_until_idle(100_000).unwrap()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn reset_rerun_is_bit_identical_to_fresh() {
+        // Construct once, run, reset, run again: the second run must be
+        // indistinguishable from a run on a freshly built network —
+        // cycles, stats (histogram included), and eject order.
+        use crate::util::Rng;
+        for engine in SimEngine::ALL {
+            let cfg = NocConfig { engine, ..NocConfig::paper() };
+            let inject = |n: &mut Network| {
+                let mut rng = Rng::new(0x5EED);
+                for k in 0..400u32 {
+                    let s = rng.index(16);
+                    let d = (s + 1 + rng.index(15)) % 16;
+                    n.inject(s, Flit::single(s, d, k, k as u64));
+                }
+            };
+            let drain = |n: &mut Network| {
+                let cycles = n.run_until_idle(1_000_000).unwrap();
+                let mut ejects = Vec::new();
+                for e in 0..16 {
+                    while let Some(f) = n.eject(e) {
+                        ejects.push((e, f.src, f.tag, f.data, f.injected_at));
+                    }
+                }
+                (cycles, n.stats().clone(), ejects)
+            };
+            let mut fresh = Network::new(&Topology::Torus { w: 4, h: 4 }, cfg);
+            inject(&mut fresh);
+            let want = drain(&mut fresh);
+
+            let mut reused = Network::new(&Topology::Torus { w: 4, h: 4 }, cfg);
+            inject(&mut reused);
+            drain(&mut reused);
+            reused.reset();
+            assert_eq!(reused.cycle(), 0, "{engine:?}");
+            assert!(reused.idle(), "{engine:?}");
+            inject(&mut reused);
+            let got = drain(&mut reused);
+            assert_eq!(got, want, "{engine:?}: reset run diverged from fresh");
+        }
+    }
+
+    #[test]
+    fn shared_fabric_replicas_share_one_route_table() {
+        let fabric = SharedFabric::new(&Topology::Torus { w: 4, h: 4 });
+        let a = fabric.network(NocConfig::paper());
+        let b = fabric.network(NocConfig::paper());
+        assert!(std::sync::Arc::ptr_eq(&a.routes, &b.routes), "plan duplicated");
+        assert!(std::sync::Arc::ptr_eq(&a.topo, &b.topo), "graph duplicated");
+        // And a replica behaves exactly like a from-scratch build.
+        let mut plain = Network::new(&Topology::Torus { w: 4, h: 4 }, NocConfig::paper());
+        let mut replica = fabric.network(NocConfig::paper());
+        for s in 0..16usize {
+            for d in 0..16usize {
+                if s != d {
+                    plain.inject(s, Flit::single(s, d, 0, 0));
+                    replica.inject(s, Flit::single(s, d, 0, 0));
+                }
+            }
+        }
+        let pc = plain.run_until_idle(100_000).unwrap();
+        let rc = replica.run_until_idle(100_000).unwrap();
+        assert_eq!(pc, rc);
+        assert_eq!(plain.stats(), replica.stats());
     }
 
     #[test]

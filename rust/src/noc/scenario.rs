@@ -26,8 +26,11 @@
 use super::engine::Stalled;
 use super::flit::Flit;
 use super::multichip::MultiChipSim;
+use super::network::SharedFabric;
+use super::stats::NetStats;
 use super::traffic::Pattern;
 use super::{Network, NocConfig, SimEngine, Topology};
+use crate::fleet;
 use crate::flow::RunReport;
 use crate::partition::Partition;
 use crate::serdes::SerdesConfig;
@@ -423,6 +426,188 @@ pub fn run_scenario_multichip(
     Ok(ScenarioOutcome { report, ejects })
 }
 
+/// FNV-1a digest of an eject stream — the compact fingerprint sweep
+/// grids carry per cell so determinism checks (thread-count invariance,
+/// reset-vs-fresh, fleet-vs-serial) compare complete delivery behavior
+/// without storing every flit of every job.
+pub fn eject_digest(ejects: &[EjectRecord]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for e in ejects {
+        mix(e.endpoint as u64);
+        mix(e.src as u64);
+        mix(e.tag as u64);
+        mix(e.data);
+        mix(e.injected_at);
+    }
+    h
+}
+
+/// A sweep grid: every scenario × load × seed on one topology — the
+/// fleet's unit of design exploration ([`run_grid`]). Jobs are
+/// enumerated in a fixed order (scenario outer, then load, then seed),
+/// so cell `i` means the same run no matter how many workers execute
+/// the grid.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub topo: Topology,
+    pub cfg: NocConfig,
+    pub scenarios: Vec<Scenario>,
+    pub loads: Vec<f64>,
+    pub seeds: Vec<u64>,
+    /// Injection-window length per cell, in cycles.
+    pub cycles: u64,
+}
+
+impl SweepGrid {
+    /// The grid's job list in canonical order.
+    pub fn jobs(&self) -> Vec<SweepJob> {
+        let n = self.scenarios.len() * self.loads.len() * self.seeds.len();
+        let mut jobs = Vec::with_capacity(n);
+        for &scenario in &self.scenarios {
+            for &load in &self.loads {
+                for &seed in &self.seeds {
+                    jobs.push(SweepJob { scenario, load, seed });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+/// One cell of a [`SweepGrid`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SweepJob {
+    pub scenario: Scenario,
+    pub load: f64,
+    pub seed: u64,
+}
+
+/// Result of one sweep-grid cell: the run's counters plus a digest of
+/// the complete eject stream. `PartialEq` compares everything, which is
+/// what the thread-count-invariance test keys on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GridCell {
+    pub scenario: &'static str,
+    pub load: f64,
+    pub seed: u64,
+    /// Cycles from replay start to idle.
+    pub cycles: u64,
+    pub stats: NetStats,
+    /// [`eject_digest`] of the cell's full delivery stream.
+    pub eject_digest: u64,
+}
+
+/// Run a whole [`SweepGrid`] on the fleet: `threads` workers each build
+/// ONE network replica from a [`SharedFabric`] (route table shared
+/// across all of them, tabulated once) and pull cells off the atomic
+/// cursor, [`Network::reset`]-ing between cells. Output is bit-identical
+/// for any `threads` and identical to running [`run_scenario`] per cell
+/// (`tests/fleet_sweep.rs` proves both), because each cell is a pure
+/// function of its job and a reset replica is exactly a fresh network.
+pub fn run_grid(grid: &SweepGrid, threads: usize) -> Result<Vec<GridCell>, Stalled> {
+    let fabric = SharedFabric::new(&grid.topo);
+    let jobs = grid.jobs();
+    let budget = grid.cycles.saturating_mul(50) + 100_000;
+    let cells = fleet::run_jobs(
+        &jobs,
+        threads,
+        |_| fabric.network(grid.cfg),
+        |net, job, _| -> Result<GridCell, Stalled> {
+            net.reset();
+            let trace = job.scenario.trace(net.n_endpoints(), job.load, grid.cycles, job.seed);
+            let cycles = replay(net, &trace, budget)?;
+            let ejects = drain_all(net);
+            Ok(GridCell {
+                scenario: job.scenario.name,
+                load: job.load,
+                seed: job.seed,
+                cycles,
+                stats: net.stats().clone(),
+                eject_digest: eject_digest(&ejects),
+            })
+        },
+    );
+    cells.into_iter().collect()
+}
+
+/// One cell of a multichip sweep grid: a [`SweepJob`] at a given wire
+/// configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiGridCell {
+    pub scenario: &'static str,
+    pub load: f64,
+    pub seed: u64,
+    pub pins: u32,
+    pub clock_div: u32,
+    pub cycles: u64,
+    pub stats: NetStats,
+    /// Flits carried over the cut-link wire channels.
+    pub wire_flits: u64,
+    pub eject_digest: u64,
+}
+
+/// [`run_grid`] on the sharded co-simulation, additionally crossed with
+/// `serdes_points` (the pins × clock-div axis of link design
+/// exploration). Jobs are ordered wire-config-major, so a worker's
+/// pooled [`MultiChipSim`] is rebuilt only when its next cell changes
+/// wire parameters and [`MultiChipSim::reset`] otherwise; results are
+/// thread-count invariant all the same.
+pub fn run_multichip_grid(
+    grid: &SweepGrid,
+    partition: &Partition,
+    serdes_points: &[SerdesConfig],
+    threads: usize,
+) -> Result<Vec<MultiGridCell>, Stalled> {
+    let global = grid.topo.build();
+    let base = grid.jobs();
+    let mut jobs = Vec::with_capacity(serdes_points.len() * base.len());
+    for &serdes in serdes_points {
+        for &job in &base {
+            jobs.push((job, serdes));
+        }
+    }
+    let cells = fleet::run_jobs(
+        &jobs,
+        threads,
+        |_| None::<((u32, u32, usize), MultiChipSim)>,
+        |slot, &(job, serdes), _| -> Result<MultiGridCell, Stalled> {
+            let key = (serdes.pins, serdes.clock_div, serdes.tx_buffer);
+            match slot {
+                Some((k, sim)) if *k == key => sim.reset(),
+                _ => {
+                    let sim =
+                        MultiChipSim::from_graph(global.clone(), grid.cfg, partition, serdes);
+                    *slot = Some((key, sim));
+                }
+            }
+            let sim = &mut slot.as_mut().expect("worker sim installed above").1;
+            let trace = job.scenario.trace(sim.n_endpoints(), job.load, grid.cycles, job.seed);
+            let budget = (grid.cycles.saturating_mul(50) + 100_000)
+                .saturating_mul(sim.serdes_cycles_per_flit().max(1));
+            let cycles = replay_multichip(sim, &trace, budget)?;
+            let ejects = drain_all_multichip(sim);
+            Ok(MultiGridCell {
+                scenario: job.scenario.name,
+                load: job.load,
+                seed: job.seed,
+                pins: serdes.pins,
+                clock_div: serdes.clock_div,
+                cycles,
+                stats: sim.stats(),
+                wire_flits: sim.wire_flits(),
+                eject_digest: eject_digest(&ejects),
+            })
+        },
+    );
+    cells.into_iter().collect()
+}
+
 /// One cell of the differential matrix.
 #[derive(Clone, Debug)]
 pub struct MatrixPoint {
@@ -556,6 +741,77 @@ mod tests {
             digests.push((out.report.cycles, out.report.net.clone(), out.ejects));
         }
         assert_eq!(digests[0], digests[1], "schedulers must agree");
+    }
+
+    #[test]
+    fn sweep_grid_enumerates_jobs_in_canonical_order() {
+        let grid = SweepGrid {
+            topo: Topology::Mesh { w: 4, h: 4 },
+            cfg: NocConfig::paper(),
+            scenarios: vec![find("uniform").unwrap(), find("hotspot").unwrap()],
+            loads: vec![0.02, 0.1],
+            seeds: vec![1, 2, 3],
+            cycles: 100,
+        };
+        let jobs = grid.jobs();
+        assert_eq!(jobs.len(), 2 * 2 * 3);
+        // Scenario-major, then load, then seed — stable across PRs so
+        // cell indices stay meaningful in tooling.
+        assert_eq!(jobs[0].scenario.name, "uniform");
+        assert_eq!((jobs[0].load, jobs[0].seed), (0.02, 1));
+        assert_eq!((jobs[2].load, jobs[2].seed), (0.02, 3));
+        assert_eq!((jobs[3].load, jobs[3].seed), (0.1, 1));
+        assert_eq!(jobs[6].scenario.name, "hotspot");
+    }
+
+    #[test]
+    fn run_grid_smoke_and_digest_sensitivity() {
+        let grid = SweepGrid {
+            topo: Topology::Mesh { w: 4, h: 4 },
+            cfg: NocConfig::paper(),
+            scenarios: vec![find("uniform").unwrap()],
+            loads: vec![0.1],
+            seeds: vec![1, 2],
+            cycles: 150,
+        };
+        let cells = run_grid(&grid, 1).unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.stats.injected, c.stats.delivered);
+            assert!(c.stats.delivered > 0);
+            assert!(c.cycles > 0);
+        }
+        // Different seeds deliver different streams → different digests.
+        assert_ne!(cells[0].eject_digest, cells[1].eject_digest);
+    }
+
+    #[test]
+    fn multichip_grid_reuses_and_rebuilds_across_wire_points() {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+        let grid = SweepGrid {
+            topo,
+            cfg: NocConfig::paper(),
+            scenarios: vec![find("uniform").unwrap()],
+            loads: vec![0.1],
+            seeds: vec![1, 2],
+            cycles: 120,
+        };
+        let points = [
+            SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 },
+            SerdesConfig { pins: 1, clock_div: 2, tx_buffer: 8 },
+        ];
+        let cells = run_multichip_grid(&grid, &part, &points, 1).unwrap();
+        assert_eq!(cells.len(), 4);
+        // Same workload, slower wire → strictly more cycles, same
+        // delivery counts. (Eject interleaving may legally differ across
+        // wire speeds — only per-source order is guaranteed — so the
+        // digest is compared within a wire config, not across.)
+        for s in 0..2 {
+            assert!(cells[2 + s].cycles > cells[s].cycles, "seed {s}");
+            assert_eq!(cells[2 + s].stats.delivered, cells[s].stats.delivered, "seed {s}");
+            assert!(cells[s].wire_flits > 0);
+        }
     }
 
     #[test]

@@ -42,6 +42,78 @@ impl NetStats {
         self.latency_hist[bucket] += 1;
     }
 
+    /// Zero every counter in place, keeping the histogram's capacity —
+    /// the stats half of [`super::Network::reset`]. Equal (`==`) to a
+    /// fresh `NetStats::default()` afterwards.
+    pub(crate) fn reset(&mut self) {
+        self.injected = 0;
+        self.delivered = 0;
+        self.total_latency = 0;
+        self.max_latency = 0;
+        self.latency_hist.clear();
+        self.link_hops = 0;
+        self.cycles = 0;
+    }
+
+    /// Fold `other` into `self`: counters sum, `max_latency` takes the
+    /// max, histograms add bucket-wise, and `cycles` takes the max (for
+    /// independent runs the merged view spans the longest one; callers
+    /// tracking a shared clock — e.g. the multi-chip fabric — overwrite
+    /// it). Commutative and associative, so fleet results aggregate in
+    /// any grouping without hand-rolled loops.
+    pub fn merge(&mut self, other: &NetStats) {
+        self.injected += other.injected;
+        self.delivered += other.delivered;
+        self.total_latency += other.total_latency;
+        self.max_latency = self.max_latency.max(other.max_latency);
+        if self.latency_hist.len() < other.latency_hist.len() {
+            self.latency_hist.resize(other.latency_hist.len(), 0);
+        }
+        for (b, &n) in other.latency_hist.iter().enumerate() {
+            self.latency_hist[b] += n;
+        }
+        self.link_hops += other.link_hops;
+        self.cycles = self.cycles.max(other.cycles);
+    }
+
+    /// Latency at quantile `q` (0..=1), read from the power-of-two
+    /// histogram: the inclusive upper edge (`2^b − 1`) of the first
+    /// bucket at which the cumulative delivery count reaches
+    /// `ceil(q × delivered)` — an upper bound within 2× of the exact
+    /// order statistic, which is what a log-bucketed histogram can
+    /// resolve. Returns 0 when nothing was delivered.
+    pub fn latency_percentile(&self, q: f64) -> u64 {
+        if self.delivered == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.delivered as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, &n) in self.latency_hist.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return if b == 0 { 0 } else { (1u64 << b) - 1 };
+            }
+        }
+        // Histogram incomplete (merged from partial counters): fall back
+        // to the exact worst case.
+        self.max_latency
+    }
+
+    /// Median delivery latency (see [`NetStats::latency_percentile`]).
+    pub fn p50(&self) -> u64 {
+        self.latency_percentile(0.50)
+    }
+
+    /// 95th-percentile delivery latency.
+    pub fn p95(&self) -> u64 {
+        self.latency_percentile(0.95)
+    }
+
+    /// 99th-percentile delivery latency.
+    pub fn p99(&self) -> u64 {
+        self.latency_percentile(0.99)
+    }
+
     /// Mean flit latency in cycles (0 if nothing delivered).
     pub fn avg_latency(&self) -> f64 {
         if self.delivered == 0 {
@@ -134,6 +206,81 @@ mod tests {
         assert_eq!(s.latency_hist[2], 2);
         assert_eq!(s.latency_hist[3], 1);
         assert_eq!(s.latency_hist[7], 1);
+    }
+
+    fn sample(seed: u64, n: u64) -> NetStats {
+        let mut s = NetStats {
+            injected: n,
+            cycles: 100 + seed,
+            link_hops: 3 * n,
+            ..NetStats::default()
+        };
+        for k in 0..n {
+            s.record_delivery((seed.wrapping_mul(k) % 700) + k % 3);
+        }
+        s
+    }
+
+    fn merged(a: &NetStats, b: &NetStats) -> NetStats {
+        let mut m = a.clone();
+        m.merge(b);
+        m
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let (a, b, c) = (sample(17, 40), sample(91, 7), sample(5, 120));
+        assert_eq!(merged(&a, &b), merged(&b, &a));
+        assert_eq!(
+            merged(&merged(&a, &b), &c),
+            merged(&a, &merged(&b, &c)),
+            "merge must associate so fleet shards aggregate in any order"
+        );
+        let m = merged(&merged(&a, &b), &c);
+        assert_eq!(m.injected, a.injected + b.injected + c.injected);
+        assert_eq!(m.delivered, a.delivered + b.delivered + c.delivered);
+        assert_eq!(m.total_latency, a.total_latency + b.total_latency + c.total_latency);
+        assert_eq!(m.max_latency, a.max_latency.max(b.max_latency).max(c.max_latency));
+        assert_eq!(m.cycles, a.cycles.max(b.cycles).max(c.cycles));
+        assert_eq!(
+            m.latency_hist.iter().sum::<u64>(),
+            m.delivered,
+            "every delivery lands in exactly one merged bucket"
+        );
+        // Identity element.
+        assert_eq!(merged(&a, &NetStats::default()), a);
+    }
+
+    #[test]
+    fn percentiles_read_bucket_upper_edges() {
+        let mut s = NetStats::default();
+        // 90 deliveries at latency 1 (bucket 1), 10 at latency 1000
+        // (bucket 10): p50 sits in bucket 1, p95/p99 in bucket 10.
+        for _ in 0..90 {
+            s.record_delivery(1);
+        }
+        for _ in 0..10 {
+            s.record_delivery(1000);
+        }
+        assert_eq!(s.p50(), 1);
+        assert_eq!(s.p95(), (1 << 10) - 1);
+        assert_eq!(s.p99(), (1 << 10) - 1);
+        assert_eq!(s.latency_percentile(1.0), (1 << 10) - 1);
+        // All-zero latencies report 0; empty stats report 0.
+        let mut z = NetStats::default();
+        z.record_delivery(0);
+        assert_eq!(z.p99(), 0);
+        assert_eq!(NetStats::default().p50(), 0);
+        // Percentiles survive a merge.
+        let m = merged(&s, &z);
+        assert_eq!(m.p95(), (1 << 10) - 1);
+    }
+
+    #[test]
+    fn reset_equals_fresh_default() {
+        let mut s = sample(3, 25);
+        s.reset();
+        assert_eq!(s, NetStats::default());
     }
 
     #[test]

@@ -17,9 +17,10 @@
 
 use std::time::Instant;
 
+use crate::fleet;
 use crate::noc::multichip::MultiChipSim;
-use crate::noc::scenario::{self, Trace};
-use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
+use crate::noc::scenario::{self, SweepGrid, Trace};
+use crate::noc::{NetStats, Network, NocConfig, SharedFabric, SimEngine, Topology};
 use crate::partition::Partition;
 use crate::serdes::SerdesConfig;
 
@@ -201,6 +202,65 @@ impl MultiPointResult {
     }
 }
 
+/// Measured fleet throughput: the `"sweep"` section of
+/// `BENCH_noc.json`. Two tracked quantities: the **job-level speedup**
+/// of running one sweep grid on N workers vs 1 (thread-count invariance
+/// of the results is asserted inside the same run), and the
+/// **construct-once-vs-rebuild speedup** of `SharedFabric` + `reset()`
+/// over a fresh `Network::new` per job.
+#[derive(Clone, Debug)]
+pub struct SweepBench {
+    /// Cells in the throughput grid.
+    pub grid_jobs: usize,
+    /// Worker threads of the parallel run.
+    pub threads: usize,
+    pub serial_jobs_per_sec: f64,
+    pub parallel_jobs_per_sec: f64,
+    /// `parallel_jobs_per_sec / serial_jobs_per_sec` (the ISSUE's
+    /// "jobs/sec at 1 vs N threads" headline).
+    pub parallel_speedup: f64,
+    /// Jobs of the reuse-vs-rebuild comparison.
+    pub reuse_jobs: usize,
+    pub rebuild_jobs_per_sec: f64,
+    pub reuse_jobs_per_sec: f64,
+    /// `reuse_jobs_per_sec / rebuild_jobs_per_sec`.
+    pub reuse_speedup: f64,
+}
+
+/// Which `BENCH_noc.json` sections a bench invocation regenerates
+/// (`fabricflow bench --only points|multichip|sweep`); unselected
+/// sections are preserved from the existing file by
+/// [`merge_sections`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BenchSelect {
+    pub points: bool,
+    pub multichip: bool,
+    pub sweep: bool,
+}
+
+impl BenchSelect {
+    /// Every section (the default `fabricflow bench`).
+    pub const ALL: BenchSelect = BenchSelect { points: true, multichip: true, sweep: true };
+
+    /// Parse a comma-separated `--only` value.
+    pub fn parse(s: &str) -> Option<BenchSelect> {
+        let mut sel = BenchSelect { points: false, multichip: false, sweep: false };
+        for part in s.split(',') {
+            match part.trim() {
+                "points" => sel.points = true,
+                "multichip" => sel.multichip = true,
+                "sweep" => sel.sweep = true,
+                _ => return None,
+            }
+        }
+        Some(sel)
+    }
+
+    pub fn is_all(&self) -> bool {
+        *self == Self::ALL
+    }
+}
+
 /// A full matrix run.
 #[derive(Clone, Debug)]
 pub struct BenchReport {
@@ -209,6 +269,8 @@ pub struct BenchReport {
     pub points: Vec<PointResult>,
     /// Monolithic-vs-sharded slowdown per case study.
     pub multichip: Vec<MultiPointResult>,
+    /// Fleet sweep throughput (None when the section was not run).
+    pub sweep: Option<SweepBench>,
 }
 
 /// One replay; the timer starts AFTER `Network::new` so construction
@@ -322,19 +384,106 @@ pub fn run_multichip_point(pt: &MultiBenchPoint, reps: usize, window_scale: f64)
     }
 }
 
+/// Run the fleet sweep benchmark (the `"sweep"` section): one grid
+/// timed at 1 worker and at N, results asserted bit-identical, plus the
+/// construct-once-vs-rebuild comparison on a full-route-cube torus.
+pub fn run_sweep_bench(quick: bool) -> SweepBench {
+    let seeds: Vec<u64> = if quick { (1..=6).collect() } else { (1..=16).collect() };
+    let grid = SweepGrid {
+        topo: Topology::Mesh { w: 8, h: 8 },
+        cfg: NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() },
+        scenarios: ["uniform", "hotspot", "bursty"]
+            .iter()
+            .map(|n| scenario::find(n).expect("scenario registered"))
+            .collect(),
+        loads: vec![0.02, 0.1],
+        seeds,
+        cycles: if quick { 400 } else { 1200 },
+    };
+    let grid_jobs = grid.jobs().len();
+    let threads = fleet::default_threads().max(2);
+    let t = Instant::now();
+    let serial = scenario::run_grid(&grid, 1).expect("sweep grid stalled (serial)");
+    let serial_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let parallel = scenario::run_grid(&grid, threads).expect("sweep grid stalled (parallel)");
+    let parallel_s = t.elapsed().as_secs_f64();
+    assert_eq!(
+        serial, parallel,
+        "fleet output must be thread-count invariant — numbers would be meaningless"
+    );
+
+    // Construct-once vs rebuild: a torus tabulates the full
+    // [router][src][dst] route cube, so per-job reconstruction is the
+    // dominant cost at a short window — exactly the overhead
+    // SharedFabric + reset() deletes. Both loops run the identical job
+    // list and must deliver identical flit totals.
+    let topo = Topology::Torus { w: 8, h: 8 };
+    let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let reuse_jobs = if quick { 16 } else { 48 };
+    let window = 200u64;
+    let mut rebuilt_flits = 0u64;
+    let t = Instant::now();
+    for s in 0..reuse_jobs {
+        let mut net = Network::new(&topo, cfg);
+        let trace = scn.trace(net.n_endpoints(), 0.05, window, s as u64 + 1);
+        scenario::replay(&mut net, &trace, 10_000_000).expect("rebuild job stalled");
+        rebuilt_flits += net.stats().delivered;
+    }
+    let rebuild_s = t.elapsed().as_secs_f64();
+    let mut reused_flits = 0u64;
+    let t = Instant::now();
+    let fabric = SharedFabric::new(&topo);
+    let mut net = fabric.network(cfg);
+    for s in 0..reuse_jobs {
+        net.reset();
+        let trace = scn.trace(net.n_endpoints(), 0.05, window, s as u64 + 1);
+        scenario::replay(&mut net, &trace, 10_000_000).expect("reuse job stalled");
+        reused_flits += net.stats().delivered;
+    }
+    let reuse_s = t.elapsed().as_secs_f64();
+    assert_eq!(rebuilt_flits, reused_flits, "reset() run diverged from rebuilds");
+    SweepBench {
+        grid_jobs,
+        threads,
+        serial_jobs_per_sec: grid_jobs as f64 / serial_s,
+        parallel_jobs_per_sec: grid_jobs as f64 / parallel_s,
+        parallel_speedup: serial_s / parallel_s,
+        reuse_jobs,
+        rebuild_jobs_per_sec: reuse_jobs as f64 / rebuild_s,
+        reuse_jobs_per_sec: reuse_jobs as f64 / reuse_s,
+        reuse_speedup: rebuild_s / reuse_s,
+    }
+}
+
 /// Run the whole tracked matrix. `quick` shrinks windows 4x and uses one
 /// rep — the CI perf-smoke profile.
 pub fn run(quick: bool) -> BenchReport {
+    run_selected(quick, BenchSelect::ALL)
+}
+
+/// Run only the selected sections (`fabricflow bench --only …`). The
+/// point matrices are enumerated through the fleet pool at ONE worker:
+/// cells time wall-clock, so running them concurrently would contend
+/// and corrupt the numbers — the fleet here buys the job/slot plumbing,
+/// not parallelism. The sweep section is where threads>1 is measured.
+pub fn run_selected(quick: bool, sel: BenchSelect) -> BenchReport {
     let (reps, scale) = if quick { (1, 0.25) } else { (3, 1.0) };
-    let points = points()
-        .iter()
-        .map(|pt| run_point(pt, reps, scale))
-        .collect();
-    let multichip = multichip_points()
-        .iter()
-        .map(|pt| run_multichip_point(pt, reps, scale))
-        .collect();
-    BenchReport { quick, points, multichip }
+    let points = if sel.points {
+        let pts = points();
+        fleet::run_jobs(&pts, 1, |_| (), |_, pt, _| run_point(pt, reps, scale))
+    } else {
+        Vec::new()
+    };
+    let multichip = if sel.multichip {
+        let pts = multichip_points();
+        fleet::run_jobs(&pts, 1, |_| (), |_, pt, _| run_multichip_point(pt, reps, scale))
+    } else {
+        Vec::new()
+    };
+    let sweep = sel.sweep.then(|| run_sweep_bench(quick));
+    BenchReport { quick, points, multichip, sweep }
 }
 
 impl BenchReport {
@@ -386,7 +535,33 @@ impl BenchReport {
             let _ = writeln!(j, "      \"wall_ratio\": {:.2}", p.wall_ratio());
             let _ = writeln!(j, "    }}{comma}");
         }
-        let _ = writeln!(j, "  ]");
+        let _ = writeln!(j, "  ],");
+        match &self.sweep {
+            Some(s) => {
+                let _ = writeln!(j, "  \"sweep\": {{");
+                let _ = writeln!(j, "    \"grid_jobs\": {},", s.grid_jobs);
+                let _ = writeln!(j, "    \"threads\": {},", s.threads);
+                let _ = writeln!(j, "    \"serial_jobs_per_sec\": {:.1},", s.serial_jobs_per_sec);
+                let _ = writeln!(
+                    j,
+                    "    \"parallel_jobs_per_sec\": {:.1},",
+                    s.parallel_jobs_per_sec
+                );
+                let _ = writeln!(j, "    \"parallel_speedup\": {:.2},", s.parallel_speedup);
+                let _ = writeln!(j, "    \"reuse_jobs\": {},", s.reuse_jobs);
+                let _ = writeln!(
+                    j,
+                    "    \"rebuild_jobs_per_sec\": {:.1},",
+                    s.rebuild_jobs_per_sec
+                );
+                let _ = writeln!(j, "    \"reuse_jobs_per_sec\": {:.1},", s.reuse_jobs_per_sec);
+                let _ = writeln!(j, "    \"reuse_speedup\": {:.2}", s.reuse_speedup);
+                let _ = writeln!(j, "  }}");
+            }
+            None => {
+                let _ = writeln!(j, "  \"sweep\": null");
+            }
+        }
         let _ = writeln!(j, "}}");
         j
     }
@@ -426,8 +601,106 @@ impl BenchReport {
                 );
             }
         }
+        if let Some(sw) = &self.sweep {
+            let _ = writeln!(s, "Fleet sweep throughput (results asserted thread-invariant)");
+            let _ = writeln!(
+                s,
+                "  {:32} {:>8.1} job/s @1T {:>8.1} job/s @{}T  => {:.2}x",
+                format!("grid/{} jobs", sw.grid_jobs),
+                sw.serial_jobs_per_sec,
+                sw.parallel_jobs_per_sec,
+                sw.threads,
+                sw.parallel_speedup
+            );
+            let _ = writeln!(
+                s,
+                "  {:32} {:>8.1} job/s fresh {:>6.1} job/s reset  => {:.2}x",
+                format!("construct-once/{} jobs", sw.reuse_jobs),
+                sw.rebuild_jobs_per_sec,
+                sw.reuse_jobs_per_sec,
+                sw.reuse_speedup
+            );
+        }
         s
     }
+}
+
+/// Byte span of the VALUE of top-level `"key": …` in `json` — an
+/// array/object matched bracket-wise (string-literal aware), or a
+/// scalar up to the next comma/newline/closing brace. `None` if the key
+/// is absent or its value is malformed.
+fn section_span(json: &str, key: &str) -> Option<(usize, usize)> {
+    let pat = format!("\"{key}\":");
+    let at = json.find(&pat)?;
+    let bytes = json.as_bytes();
+    let mut i = at + pat.len();
+    while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    if i >= bytes.len() {
+        return None;
+    }
+    let start = i;
+    let (open, close) = match bytes[i] {
+        b'[' => (b'[', b']'),
+        b'{' => (b'{', b'}'),
+        _ => {
+            while i < bytes.len() && !matches!(bytes[i], b',' | b'\n' | b'}') {
+                i += 1;
+            }
+            return Some((start, i));
+        }
+    };
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut escaped = false;
+    while i < bytes.len() {
+        let c = bytes[i];
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == b'\\' {
+                escaped = true;
+            } else if c == b'"' {
+                in_str = false;
+            }
+        } else if c == b'"' {
+            in_str = true;
+        } else if c == open {
+            depth += 1;
+        } else if c == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some((start, i + 1));
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Read-modify-write for `BENCH_noc.json` (`fabricflow bench --only`):
+/// serialize `fresh`, then splice the UNSELECTED sections' value text
+/// back in from `old_json`, so regenerating one section preserves the
+/// others byte for byte. A section missing from the old file is left as
+/// `fresh` emitted it (empty / null).
+pub fn merge_sections(old_json: &str, fresh: &BenchReport, sel: BenchSelect) -> String {
+    let mut out = fresh.to_json();
+    for (key, selected) in
+        [("points", sel.points), ("multichip", sel.multichip), ("sweep", sel.sweep)]
+    {
+        if selected {
+            continue;
+        }
+        // Spans are recomputed after each splice: earlier replacements
+        // shift later offsets.
+        if let (Some((os, oe)), Some((fs, fe))) =
+            (section_span(old_json, key), section_span(&out, key))
+        {
+            out.replace_range(fs..fe, &old_json[os..oe]);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -461,12 +734,14 @@ mod tests {
         assert!(res.reference.flits > 0);
         assert_eq!(res.reference.flits, res.event.flits);
         assert_eq!(res.reference.cycles, res.event.cycles);
-        let report = BenchReport { quick: true, points: vec![res], multichip: Vec::new() };
+        let report =
+            BenchReport { quick: true, points: vec![res], multichip: Vec::new(), sweep: None };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
         assert!(json.contains("flits_per_sec"));
         assert!(json.contains("\"profile\": \"quick\""));
         assert!(json.contains("\"multichip\": ["));
+        assert!(json.contains("\"sweep\": null"));
         assert!(report.render_table().contains("saturated-mesh8x8"));
     }
 
@@ -502,10 +777,136 @@ mod tests {
         assert_eq!(res.mono.flits, res.sharded.flits);
         assert!(res.cycle_slowdown() >= 1.0);
         let report =
-            BenchReport { quick: true, points: Vec::new(), multichip: vec![res] };
+            BenchReport { quick: true, points: Vec::new(), multichip: vec![res], sweep: None };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"bmvm-ring8/2fpga-8pin\""));
         assert!(json.contains("cycle_slowdown"));
         assert!(report.render_table().contains("sharded"));
+    }
+
+    fn sweep_stub() -> SweepBench {
+        SweepBench {
+            grid_jobs: 36,
+            threads: 4,
+            serial_jobs_per_sec: 100.0,
+            parallel_jobs_per_sec: 310.0,
+            parallel_speedup: 3.1,
+            reuse_jobs: 16,
+            rebuild_jobs_per_sec: 50.0,
+            reuse_jobs_per_sec: 200.0,
+            reuse_speedup: 4.0,
+        }
+    }
+
+    #[test]
+    fn sweep_section_serializes_and_renders() {
+        let report = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: Some(sweep_stub()),
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"sweep\": {"));
+        assert!(json.contains("\"parallel_speedup\": 3.10"));
+        assert!(json.contains("\"reuse_speedup\": 4.00"));
+        assert!(report.render_table().contains("Fleet sweep throughput"));
+    }
+
+    #[test]
+    fn bench_select_parses_only_flags() {
+        assert_eq!(
+            BenchSelect::parse("sweep"),
+            Some(BenchSelect { points: false, multichip: false, sweep: true })
+        );
+        assert_eq!(
+            BenchSelect::parse("points,multichip"),
+            Some(BenchSelect { points: true, multichip: true, sweep: false })
+        );
+        assert_eq!(BenchSelect::parse("points,multichip,sweep"), Some(BenchSelect::ALL));
+        assert!(BenchSelect::ALL.is_all());
+        assert_eq!(BenchSelect::parse("everything"), None);
+    }
+
+    #[test]
+    fn merge_preserves_unselected_sections_byte_for_byte() {
+        // An "old" file with real points and a sweep section.
+        let old = BenchReport {
+            quick: false,
+            points: vec![PointResult {
+                label: "saturated-mesh8x8/uniform",
+                reference: CellResult {
+                    engine: SimEngine::Reference,
+                    wall_s: 0.5,
+                    flits: 1000,
+                    cycles: 4000,
+                },
+                event: CellResult {
+                    engine: SimEngine::EventDriven,
+                    wall_s: 0.25,
+                    flits: 1000,
+                    cycles: 4000,
+                },
+            }],
+            multichip: Vec::new(),
+            sweep: Some(sweep_stub()),
+        }
+        .to_json();
+        // A fresh sweep-only run: points/multichip empty, new sweep.
+        let mut new_sweep = sweep_stub();
+        new_sweep.parallel_speedup = 9.99;
+        let fresh = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: Some(new_sweep),
+        };
+        let sel = BenchSelect { points: false, multichip: false, sweep: true };
+        let merged = merge_sections(&old, &fresh, sel);
+        // Old points preserved verbatim, new sweep spliced in.
+        let (os, oe) = section_span(&old, "points").unwrap();
+        let (ms, me) = section_span(&merged, "points").unwrap();
+        assert_eq!(&old[os..oe], &merged[ms..me], "unselected section changed");
+        assert!(merged.contains("\"label\": \"saturated-mesh8x8/uniform\""));
+        assert!(merged.contains("\"parallel_speedup\": 9.99"));
+        assert!(!merged.contains("\"parallel_speedup\": 3.10"));
+        // And the other way: regenerating points keeps the old sweep.
+        let sel = BenchSelect { points: true, multichip: false, sweep: false };
+        let fresh_points = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+        };
+        let merged = merge_sections(&old, &fresh_points, sel);
+        assert!(merged.contains("\"parallel_speedup\": 3.10"));
+        assert!(!merged.contains("\"sweep\": null"));
+    }
+
+    #[test]
+    fn section_span_handles_the_placeholder_and_nesting() {
+        let json = "{\n  \"note\": \"has [brackets] and {braces}\",\n  \"points\": [],\n  \"multichip\": [\n    { \"label\": \"a[0]\" }\n  ],\n  \"sweep\": null\n}\n";
+        let (s, e) = section_span(json, "points").unwrap();
+        assert_eq!(&json[s..e], "[]");
+        let (s, e) = section_span(json, "multichip").unwrap();
+        assert!(json[s..e].starts_with('[') && json[s..e].ends_with(']'));
+        assert!(json[s..e].contains("a[0]"));
+        let (s, e) = section_span(json, "sweep").unwrap();
+        assert_eq!(&json[s..e], "null");
+        assert!(section_span(json, "missing").is_none());
+    }
+
+    #[test]
+    fn sweep_bench_runs_tiny() {
+        // A real (tiny) sweep bench: speedups are wall-clock and may be
+        // anything on a loaded CI box, but the run itself must complete
+        // with coherent counts (thread invariance is asserted inside).
+        let sw = run_sweep_bench(true);
+        assert_eq!(sw.grid_jobs, 3 * 2 * 6);
+        assert!(sw.threads >= 2);
+        assert!(sw.serial_jobs_per_sec > 0.0);
+        assert!(sw.parallel_jobs_per_sec > 0.0);
+        assert!(sw.reuse_jobs_per_sec > 0.0);
+        assert!(sw.rebuild_jobs_per_sec > 0.0);
     }
 }

@@ -273,6 +273,14 @@ impl SerdesChannel {
         self.queue.len() < self.cfg.tx_buffer
     }
 
+    /// Drop all in-flight flits and counters in place (queue capacity
+    /// retained) — the serdes half of [`crate::noc::Network::reset`].
+    pub fn reset(&mut self) {
+        self.queue.clear();
+        self.busy_until = 0;
+        self.carried = 0;
+    }
+
     /// Accept a flit from the router at `cycle`; it completes transfer at
     /// `max(busy_until, cycle) + ser_cycles`.
     pub fn push(&mut self, flit: Flit, cycle: u64) {

@@ -125,6 +125,22 @@ fn network_steady_state_is_alloc_free(engine: SimEngine) {
     );
     assert_eq!(net.stats().delivered, net.stats().injected);
     drain_all(&mut net);
+
+    // Fleet contract: reset() + a second full run is 0-alloc too —
+    // queues, rings, histogram and worklists keep their capacity, so a
+    // pooled worker reruns simulations without ever touching the heap.
+    let delta = count(|| {
+        net.reset();
+        inject_uniform_wave(&mut net);
+        net.send_message(0, 63, 3, &[0xCAFE_F00D, 0x5678], 96);
+        net.run_until_idle(10_000_000).expect("post-reset drain stalled")
+    });
+    assert_eq!(
+        delta, 0,
+        "{engine:?}: reset() + rerun allocated {delta} times after warm-up"
+    );
+    assert_eq!(net.stats().delivered, net.stats().injected);
+    drain_all(&mut net);
 }
 
 /// The sharded multi-chip step loop — per-chip networks, wire-channel
@@ -184,6 +200,30 @@ fn multichip_steady_state_is_alloc_free(engine: SimEngine) {
     assert_eq!(
         delta, 0,
         "{engine:?}: MultiChipSim::step allocated {delta} times after warm-up"
+    );
+    let stats = sim.stats();
+    assert_eq!(stats.delivered, stats.injected);
+    for e in 0..n {
+        while sim.eject(e).is_some() {}
+    }
+
+    // reset() + a second full sharded run: per-chip state, wire queues
+    // and sample pools all keep their capacity.
+    let delta = count(|| {
+        sim.reset();
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    sim.inject(s, Flit::single(s, d, (s * n + d) as u32, d as u64));
+                }
+            }
+        }
+        sim.send_message(0, 15, 3, &[0xCAFE_F00D, 0x5678], 96);
+        sim.run_until_idle(100_000_000).expect("post-reset drain stalled")
+    });
+    assert_eq!(
+        delta, 0,
+        "{engine:?}: MultiChipSim reset() + rerun allocated {delta} times"
     );
     let stats = sim.stats();
     assert_eq!(stats.delivered, stats.injected);

@@ -1,0 +1,167 @@
+//! Fleet conformance: the sweep layer must never change what a
+//! simulation computes — only how many run per second.
+//!
+//! Three contracts, enforced differentially:
+//!
+//! 1. **reset ≡ fresh** — a `Network::reset` (and `MultiChipSim::reset`)
+//!    rerun is bit-identical to a freshly constructed fabric, on both
+//!    engines, including partitioned networks with serdes channels
+//!    spliced in (the worker-pooling primitive).
+//! 2. **thread-count invariance** — `run_grid` output is byte-identical
+//!    for 1, 2 and 8 workers (the slot-array + pure-job contract).
+//! 3. **fleet ≡ serial** — the grid equals the pre-fleet serial path
+//!    (`run_scenario` per cell, fresh network each time) cell for cell.
+
+use fabricflow::noc::scenario::{
+    self, drain_all, drain_all_multichip, eject_digest, GridCell, SweepGrid,
+};
+use fabricflow::noc::{Flit, Network, NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::SerdesConfig;
+use fabricflow::util::Rng;
+
+fn grid(topo: Topology, engine: SimEngine) -> SweepGrid {
+    SweepGrid {
+        topo,
+        cfg: NocConfig { engine, ..NocConfig::paper() },
+        scenarios: ["uniform", "hotspot", "bursty", "ldpc-trace"]
+            .iter()
+            .map(|n| scenario::find(n).expect("registered"))
+            .collect(),
+        loads: vec![0.02, 0.1],
+        seeds: vec![1, 7],
+        cycles: 300,
+    }
+}
+
+#[test]
+fn run_grid_is_thread_count_invariant() {
+    for engine in SimEngine::ALL {
+        let g = grid(Topology::Mesh { w: 4, h: 4 }, engine);
+        let one = scenario::run_grid(&g, 1).unwrap();
+        assert_eq!(one.len(), 4 * 2 * 2);
+        for threads in [2usize, 8] {
+            let many = scenario::run_grid(&g, threads).unwrap();
+            assert_eq!(one, many, "{engine:?} with {threads} threads diverged");
+        }
+    }
+}
+
+#[test]
+fn run_grid_matches_the_serial_scenario_path() {
+    // The fleet path (shared fabric, pooled reset workers) against the
+    // old serial path (fresh Network per cell via run_scenario): every
+    // counter and the complete eject stream must agree.
+    let g = grid(Topology::Torus { w: 4, h: 4 }, SimEngine::EventDriven);
+    let fleet_cells = scenario::run_grid(&g, 8).unwrap();
+    let mut serial_cells = Vec::new();
+    for job in g.jobs() {
+        let out =
+            scenario::run_scenario(&job.scenario, &g.topo, g.cfg, job.load, g.cycles, job.seed)
+                .unwrap();
+        serial_cells.push(GridCell {
+            scenario: job.scenario.name,
+            load: job.load,
+            seed: job.seed,
+            cycles: out.report.cycles,
+            stats: out.report.net.clone(),
+            eject_digest: eject_digest(&out.ejects),
+        });
+    }
+    assert_eq!(fleet_cells, serial_cells, "fleet grid diverged from serial path");
+}
+
+#[test]
+fn multichip_grid_is_thread_count_invariant() {
+    let g = SweepGrid {
+        topo: Topology::Mesh { w: 4, h: 4 },
+        cfg: NocConfig::paper(),
+        scenarios: vec![scenario::find("uniform").unwrap()],
+        loads: vec![0.1],
+        seeds: vec![1, 2, 3],
+        cycles: 200,
+    };
+    let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+    let points = [
+        SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 },
+        SerdesConfig { pins: 2, clock_div: 2, tx_buffer: 4 },
+    ];
+    let one = scenario::run_multichip_grid(&g, &part, &points, 1).unwrap();
+    assert_eq!(one.len(), 2 * 3);
+    for threads in [2usize, 8] {
+        let many = scenario::run_multichip_grid(&g, &part, &points, threads).unwrap();
+        assert_eq!(one, many, "{threads} threads diverged");
+    }
+    for c in &one {
+        assert_eq!(c.stats.injected, c.stats.delivered);
+        assert!(c.wire_flits > 0, "bisected uniform traffic must cross the cut");
+    }
+}
+
+#[test]
+fn reset_rerun_matches_fresh_partitioned_network() {
+    // The serdes-spliced monolithic network (the one configuration the
+    // unit tests don't reset-cycle): install a partition's channels,
+    // run, reset, run again — bit-identical to a fresh build+apply.
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+    let serdes = SerdesConfig { pins: 2, clock_div: 3, tx_buffer: 4 };
+    for engine in SimEngine::ALL {
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let build = || {
+            let mut net = Network::new(&topo, cfg);
+            part.apply(&mut net, serdes);
+            net
+        };
+        let run = |net: &mut Network| {
+            let mut rng = Rng::new(0xC0FFEE);
+            for k in 0..300u32 {
+                let s = rng.index(16);
+                let d = (s + 1 + rng.index(15)) % 16;
+                net.inject(s, Flit::single(s, d, k, k as u64));
+            }
+            let cycles = net.run_until_idle(10_000_000).unwrap();
+            let serdes_flits: u64 = net.serdes_channels().map(|(_, c)| c.carried).sum();
+            (cycles, net.stats().clone(), serdes_flits, drain_all(net))
+        };
+        let mut fresh = build();
+        let want = run(&mut fresh);
+        assert!(want.2 > 0, "{engine:?}: traffic must cross the serdes channels");
+
+        let mut reused = build();
+        run(&mut reused);
+        reused.reset();
+        // Channels survive the reset (the partition is part of the
+        // fabric, not of one run) with their counters cleared.
+        assert_eq!(reused.serdes_channels().count(), fresh.serdes_channels().count());
+        assert!(reused.serdes_channels().all(|(_, c)| c.carried == 0 && c.in_flight() == 0));
+        let got = run(&mut reused);
+        assert_eq!(got, want, "{engine:?}: reset partitioned network diverged");
+    }
+}
+
+#[test]
+fn multichip_reset_matches_fresh_across_trace_replay() {
+    // reset ≡ fresh for the sharded fabric under the scenario replay
+    // machinery (fast-forward jumps included), both schedulers.
+    use fabricflow::noc::multichip::MultiChipSim;
+    let topo = Topology::Torus { w: 4, h: 4 };
+    let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+    let serdes = SerdesConfig { pins: 4, clock_div: 2, tx_buffer: 4 };
+    let scn = scenario::find("bursty").unwrap();
+    let trace = scn.trace(16, 0.1, 400, 5);
+    for engine in SimEngine::ALL {
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let replay = |sim: &mut MultiChipSim| {
+            let cycles = scenario::replay_multichip(sim, &trace, 10_000_000).unwrap();
+            (cycles, sim.stats(), sim.wire_flits(), drain_all_multichip(sim))
+        };
+        let mut fresh = MultiChipSim::new(&topo, cfg, &part, serdes);
+        let want = replay(&mut fresh);
+        let mut reused = MultiChipSim::new(&topo, cfg, &part, serdes);
+        replay(&mut reused);
+        reused.reset();
+        let got = replay(&mut reused);
+        assert_eq!(got, want, "{engine:?}: reset sharded fabric diverged");
+    }
+}
