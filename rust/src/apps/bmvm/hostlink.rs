@@ -1,52 +1,23 @@
 //! Host ↔ FPGA link model (RIFFA 2.0 in the paper, §VI-B/C).
 //!
-//! The paper's hardware times "include the roundtrip time over RIFFA",
-//! and at r ∈ {1, 10} that roundtrip dominates (Table IV reports the same
-//! 0.052 ms for both). We model the link as a fixed per-call overhead
-//! plus a bandwidth term:
-//!
-//! * `call_overhead_us` — driver + PCIe + RIFFA channel setup for one
-//!   accelerator call, calibrated to Table IV's r = 1 row (~52 µs total
-//!   when compute is negligible).
-//! * `gbps` — streaming bandwidth for the vector upload/result download
-//!   (RIFFA 2.0 on gen2 x8 sustains ≈ 3.6 GB/s; transfers here are tiny,
-//!   so this term barely matters — kept for completeness and for scaling
-//!   studies with larger n).
+//! The timing model was born here for the BMVM case study, but the
+//! host link is not BMVM-specific — it is the transport every
+//! accelerator call crosses — so the implementation now lives in the
+//! shared serving layer as [`crate::serve::hostlink::HostLink`],
+//! alongside the wire codec that frames requests over that link. This
+//! module re-exports it so the BMVM public API (`apps::bmvm::HostLink`,
+//! used by `tables.rs` and the CLI) is unchanged; delegation is proven
+//! byte-identical in `serve::hostlink`'s tests.
 
-/// Host-link timing model.
-#[derive(Clone, Copy, Debug)]
-pub struct HostLink {
-    /// Fixed per-call overhead, microseconds.
-    pub call_overhead_us: f64,
-    /// Streaming bandwidth, gigabits per second.
-    pub gbps: f64,
-}
-
-impl Default for HostLink {
-    fn default() -> Self {
-        HostLink { call_overhead_us: 51.0, gbps: 25.0 }
-    }
-}
-
-impl HostLink {
-    /// Roundtrip time for one accelerator call moving `bits_up` to the
-    /// board and `bits_down` back, in milliseconds.
-    pub fn roundtrip_ms(&self, bits_up: u64, bits_down: u64) -> f64 {
-        let transfer_us = (bits_up + bits_down) as f64 / (self.gbps * 1e3);
-        (self.call_overhead_us + transfer_us) / 1e3
-    }
-
-    /// Total hardware time for a run: host roundtrip + fabric cycles at
-    /// `clock_hz` (the paper's 100 MHz), in milliseconds.
-    pub fn total_ms(&self, cycles: u64, clock_hz: f64, bits_up: u64, bits_down: u64) -> f64 {
-        self.roundtrip_ms(bits_up, bits_down) + crate::util::cycles_to_ms(cycles, clock_hz)
-    }
-}
+pub use crate::serve::hostlink::HostLink;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    // The original calibration tests, kept here on the re-exported
+    // path: Table IV's r = 1 row must stay reachable through the BMVM
+    // API regardless of where the struct lives.
     #[test]
     fn overhead_dominates_small_transfers() {
         let l = HostLink::default();

@@ -78,6 +78,12 @@
 //!   ([`noc::SharedFabric`] shares one tabulated route table across
 //!   replicas) and [`noc::Network::reset`] between jobs; results are
 //!   bit-identical for any thread count.
+//! * **Serving** ([`serve`]): the long-lived `fabricflow serve` process —
+//!   a pool of warm replicas answering typed request frames
+//!   ([`serve::hostlink`]) from stdin or a socket under bounded-queue
+//!   admission control, byte-identical to the batch paths; paired with
+//!   the seeded open-loop generator behind `fabricflow loadgen`
+//!   ([`serve::loadgen`]) for latency-vs-offered-load measurement.
 //! * **Substrates**: [`gf2`] (GF(2)/GF(2^s) algebra and projective-geometry
 //!   LDPC codes), [`resources`] (zc7020-style FPGA resource model),
 //!   [`dfg`]+[`mips`] (the paper's compiler-driven toy flow, Fig 2), and
@@ -100,6 +106,7 @@ pub mod partition;
 pub mod pe;
 pub mod flow;
 pub mod fleet;
+pub mod serve;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod dfg;

@@ -13,14 +13,16 @@
 //! fabricflow sweep --chips 2 --pins 1,8 # …multichip grid across wire configs
 //! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
 //! fabricflow bench --only sweep         # …regenerate one section, keep the rest
+//! fabricflow serve --threads 2          # resident pool serving request frames
+//! fabricflow loadgen --rate 500 | fabricflow serve   # open-loop pipe
 //! fabricflow partition                  # Fig 5 quasi-SERDES demo
 //! fabricflow resources                  # device + component inventory
 //! ```
 //!
-//! (clap is unavailable in the offline container; flags are parsed by the
-//! small [`Args`] helper.)
-
-use std::collections::HashMap;
+//! (clap is unavailable in the offline container; flags are parsed by
+//! the strict [`args`] helper: unknown flags, positional arguments, and
+//! unparsable values all print the subcommand's usage to stderr and
+//! exit 2 instead of being silently ignored or panicking.)
 
 use fabricflow::apps::bmvm::{dense_power_matvec, BmvmSystem, WilliamsLuts};
 use fabricflow::apps::ldpc::mapper::LdpcNocDecoder;
@@ -30,115 +32,223 @@ use fabricflow::gf2::Gf2Matrix;
 use fabricflow::noc::{scenario, Flit, Network, NocConfig, SimEngine, Topology};
 use fabricflow::resources::Device;
 use fabricflow::serdes::SerdesConfig;
+use fabricflow::serve::{self, loadgen};
 use fabricflow::tables::{self, TableOpts};
+use fabricflow::util::args::{self, flag, switch, ArgSpec, Parsed};
 use fabricflow::util::bits::BitVec;
 use fabricflow::util::Rng;
 use fabricflow::{dfg, mips, partition::Partition};
 
-/// Minimal `--flag value` / `--switch` parser.
-struct Args {
-    flags: HashMap<String, String>,
-    switches: Vec<String>,
+/// One subcommand: its flag table and usage line.
+struct Command {
+    name: &'static str,
+    spec: &'static [ArgSpec],
+    usage: &'static str,
+    run: fn(&Parsed) -> Result<(), String>,
 }
 
-impl Args {
-    fn parse(argv: &[String]) -> Self {
-        let mut flags = HashMap::new();
-        let mut switches = Vec::new();
-        let mut i = 0;
-        while i < argv.len() {
-            let a = &argv[i];
-            if let Some(name) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    switches.push(name.to_string());
-                    i += 1;
-                }
-            } else {
-                switches.push(a.clone());
-                i += 1;
-            }
-        }
-        Args { flags, switches }
-    }
+const COMMANDS: &[Command] = &[
+    Command {
+        name: "tables",
+        spec: &[flag("id"), flag("reps"), flag("seed"), switch("quick")],
+        usage: "tables [--id t1..t5|all] [--reps N] [--seed S] [--quick]",
+        run: cmd_tables,
+    },
+    Command {
+        name: "ldpc",
+        spec: &[flag("niter"), flag("variant"), flag("flip"), switch("partition")],
+        usage: "ldpc [--niter N] [--variant sm|paper] [--flip i,j,…] [--partition]",
+        run: cmd_ldpc,
+    },
+    Command {
+        name: "track",
+        spec: &[
+            flag("frames"),
+            flag("workers"),
+            flag("particles"),
+            flag("sigma"),
+            flag("roi"),
+            flag("seed"),
+            flag("vseed"),
+        ],
+        usage: "track [--frames N] [--workers N] [--particles N] [--sigma F] [--roi R] [--seed S] [--vseed S]",
+        run: cmd_track,
+    },
+    Command {
+        name: "bmvm",
+        spec: &[flag("n"), flag("k"), flag("pes"), flag("r"), flag("topo"), flag("seed")],
+        usage: "bmvm [--n N] [--k K] [--pes P] [--r R] [--topo ring|mesh|torus|fat-tree] [--seed S]",
+        run: cmd_bmvm,
+    },
+    Command {
+        name: "dfg",
+        spec: &[flag("cores"), flag("file")],
+        usage: "dfg [--cores N] [--file PROGRAM]",
+        run: cmd_dfg,
+    },
+    Command {
+        name: "noc",
+        spec: &[flag("endpoints"), flag("topo"), flag("flits"), flag("seed")],
+        usage: "noc [--endpoints N] [--topo NAME] [--flits N] [--seed S]",
+        run: cmd_noc,
+    },
+    Command {
+        name: "scenarios",
+        spec: &[
+            flag("endpoints"),
+            flag("topo"),
+            flag("engine"),
+            flag("load"),
+            flag("cycles"),
+            flag("seed"),
+            flag("scenario"),
+            flag("chips"),
+            flag("pins"),
+            flag("clock-div"),
+        ],
+        usage: "scenarios [--topo NAME] [--engine reference|event] [--load F] [--cycles N] [--seed S] [--scenario NAME] [--chips N --pins P --clock-div D]",
+        run: cmd_scenarios,
+    },
+    Command {
+        name: "sweep",
+        spec: &[
+            flag("endpoints"),
+            flag("topo"),
+            flag("engine"),
+            flag("threads"),
+            flag("cycles"),
+            flag("loads"),
+            flag("seeds"),
+            flag("seed"),
+            flag("scenario"),
+            flag("chips"),
+            flag("pins"),
+            flag("clock-divs"),
+        ],
+        usage: "sweep [--topo NAME] [--engine reference|event] [--threads N] [--cycles N] [--loads a,b] [--seeds N] [--scenario NAME] [--chips N --pins p1,p2 --clock-divs d1,d2]",
+        run: cmd_sweep,
+    },
+    Command {
+        name: "bench",
+        spec: &[flag("out"), flag("only"), switch("quick")],
+        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve]",
+        run: cmd_bench,
+    },
+    Command {
+        name: "serve",
+        spec: &[
+            flag("threads"),
+            flag("queue"),
+            flag("admission"),
+            flag("topo"),
+            flag("endpoints"),
+            flag("uds"),
+            flag("bmvm-n"),
+            flag("bmvm-k"),
+            flag("bmvm-pes"),
+            flag("bmvm-topo"),
+            flag("bmvm-seed"),
+            switch("fail-on-reject"),
+        ],
+        usage: "serve [--threads N] [--queue CAP] [--admission block|reject] [--topo NAME] [--uds PATH] [--bmvm-n N --bmvm-k K --bmvm-pes P --bmvm-topo NAME --bmvm-seed S] [--fail-on-reject]",
+        run: cmd_serve,
+    },
+    Command {
+        name: "loadgen",
+        spec: &[
+            flag("requests"),
+            flag("rate"),
+            flag("seed"),
+            flag("mix"),
+            flag("arrivals"),
+            flag("on-ms"),
+            flag("off-ms"),
+            flag("bmvm-n"),
+            switch("max-speed"),
+        ],
+        usage: "loadgen [--requests N] [--rate RPS] [--seed S] [--mix scenario,ldpc,pfilter,bmvm] [--arrivals poisson|bursty --on-ms N --off-ms N] [--bmvm-n N] [--max-speed]",
+        run: cmd_loadgen,
+    },
+    Command {
+        name: "partition",
+        spec: &[flag("pins"), flag("clock-div")],
+        usage: "partition [--pins P] [--clock-div D]",
+        run: cmd_partition_demo,
+    },
+    Command { name: "resources", spec: &[], usage: "resources", run: cmd_resources },
+];
 
-    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
-        self.flags
-            .get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
-    }
-
-    fn str(&self, name: &str, default: &str) -> String {
-        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
-    }
-
-    fn has(&self, name: &str) -> bool {
-        self.switches.iter().any(|s| s == name)
-    }
-}
-
-fn topo_from_name(name: &str, endpoints: usize) -> Topology {
+fn topo_from_name(name: &str, endpoints: usize) -> Result<Topology, String> {
     match name {
-        "ring" => Topology::Ring(endpoints),
+        "ring" => Ok(Topology::Ring(endpoints)),
         "mesh" | "torus" => {
             let side = (endpoints as f64).sqrt().ceil() as usize;
-            if name == "mesh" {
-                Topology::Mesh { w: side, h: endpoints.div_ceil(side) }
+            let h = endpoints.div_ceil(side);
+            Ok(if name == "mesh" {
+                Topology::Mesh { w: side, h }
             } else {
-                Topology::Torus { w: side, h: endpoints.div_ceil(side) }
-            }
+                Topology::Torus { w: side, h }
+            })
         }
-        "fat_tree" => Topology::fat_tree(endpoints),
+        "fat_tree" => Ok(Topology::fat_tree(endpoints)),
         other => {
             // meshWxH / torusWxH
             for (prefix, is_torus) in [("mesh", false), ("torus", true)] {
                 if let Some(dims) = other.strip_prefix(prefix) {
                     if let Some((w, h)) = dims.split_once('x') {
-                        let (w, h) = (w.parse().unwrap(), h.parse().unwrap());
-                        return if is_torus {
-                            Topology::Torus { w, h }
-                        } else {
-                            Topology::Mesh { w, h }
-                        };
+                        if let (Ok(w), Ok(h)) = (w.parse(), h.parse()) {
+                            return Ok(if is_torus {
+                                Topology::Torus { w, h }
+                            } else {
+                                Topology::Mesh { w, h }
+                            });
+                        }
                     }
                 }
             }
-            panic!("unknown topology '{other}'");
+            Err(format!("unknown topology '{other}' (ring, mesh, torus, fat_tree, meshWxH, torusWxH)"))
         }
     }
 }
 
-fn cmd_tables(args: &Args) {
+fn engine_from_name(name: &str) -> Result<SimEngine, String> {
+    match name {
+        "ref" | "reference" => Ok(SimEngine::Reference),
+        "event" | "event-driven" => Ok(SimEngine::EventDriven),
+        other => Err(format!("unknown engine '{other}' (reference, event)")),
+    }
+}
+
+fn bad(e: args::ArgError) -> String {
+    e.to_string()
+}
+
+fn cmd_tables(p: &Parsed) -> Result<(), String> {
     let opts = TableOpts {
-        reps: args.get("reps", 3usize),
-        quick: args.has("quick"),
-        seed: args.get("seed", 0x7AB1Eu64),
+        reps: p.get_or("reps", 3usize).map_err(bad)?,
+        quick: p.has("quick"),
+        seed: p.get_or("seed", 0x7AB1Eu64).map_err(bad)?,
     };
-    match args.str("id", "all").as_str() {
+    match p.raw("id").unwrap_or("all") {
         "t1" => print!("{}", tables::table1()),
         "t2" => print!("{}", tables::table2()),
         "t3" => print!("{}", tables::table3()),
         "t4" => print!("{}", tables::table4(&opts)),
         "t5" => print!("{}", tables::table5(&opts)),
         "all" => print!("{}", tables::all_tables(&opts)),
-        other => eprintln!("unknown table id '{other}' (t1..t5, all)"),
+        other => return Err(format!("unknown table id '{other}' (t1..t5, all)")),
     }
+    Ok(())
 }
 
-fn cmd_ldpc(args: &Args) {
-    let niter = args.get("niter", 10u32);
-    let variant = match args.str("variant", "sm").as_str() {
+fn cmd_ldpc(p: &Parsed) -> Result<(), String> {
+    let niter = p.get_or("niter", 10u32).map_err(bad)?;
+    let variant = match p.raw("variant").unwrap_or("sm") {
         "paper" => MinsumVariant::PaperListing,
-        _ => MinsumVariant::SignMagnitude,
+        "sm" => MinsumVariant::SignMagnitude,
+        other => return Err(format!("unknown variant '{other}' (sm, paper)")),
     };
-    let flips: Vec<usize> = args
-        .flags
-        .get("flip")
-        .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
-        .unwrap_or_default();
+    let flips: Vec<usize> = p.get_list("flip").map_err(bad)?.unwrap_or_default();
     let dec = LdpcNocDecoder::fano_on_mesh(variant, niter);
     let llr = codeword_llrs(&[0; 7], 100, &flips);
     println!("LDPC Fano decode over 4x4 mesh, niter={niter}, flips={flips:?}");
@@ -150,9 +260,9 @@ fn cmd_ldpc(args: &Args) {
         run.report.cycles,
         run.report.net.delivered
     );
-    if args.has("partition") {
-        let p = dec.fig9_partition();
-        let split = dec.decode(&llr, Some((&p, SerdesConfig::default())));
+    if p.has("partition") {
+        let part = dec.fig9_partition();
+        let split = dec.decode(&llr, Some((&part, SerdesConfig::default())));
         println!(
             "  2 FPGAs     : bits {:?} cycles={} (+{} serdes cycles)",
             split.result.bits,
@@ -160,18 +270,19 @@ fn cmd_ldpc(args: &Args) {
             split.report.cycles - run.report.cycles
         );
     }
+    Ok(())
 }
 
-fn cmd_track(args: &Args) {
-    let frames = args.get("frames", 8usize);
-    let workers = args.get("workers", 4usize);
+fn cmd_track(p: &Parsed) -> Result<(), String> {
+    let frames = p.get_or("frames", 8usize).map_err(bad)?;
+    let workers = p.get_or("workers", 4usize).map_err(bad)?;
     let params = TrackerParams {
-        n_particles: args.get("particles", 32usize),
-        sigma: args.get("sigma", 3.0f64),
-        roi_r: args.get("roi", 5i32),
-        seed: args.get("seed", 7u64),
+        n_particles: p.get_or("particles", 32usize).map_err(bad)?,
+        sigma: p.get_or("sigma", 3.0f64).map_err(bad)?,
+        roi_r: p.get_or("roi", 5i32).map_err(bad)?,
+        seed: p.get_or("seed", 7u64).map_err(bad)?,
     };
-    let video = synthetic_video(64, 48, frames, 6, args.get("vseed", 11u64));
+    let video = synthetic_video(64, 48, frames, 6, p.get_or("vseed", 11u64).map_err(bad)?);
     let tracker = PfilterNocTracker::on_mesh(workers, params);
     println!(
         "particle filter over NoC: {frames} frames, {} particles, {workers} workers",
@@ -182,15 +293,16 @@ fn cmd_track(args: &Args) {
         println!("  frame {k:2}: est {est:?} truth {truth:?}");
     }
     println!("  cycles={} flits={}", run.report.cycles, run.report.net.delivered);
+    Ok(())
 }
 
-fn cmd_bmvm(args: &Args) {
-    let n = args.get("n", 1024usize);
-    let k = args.get("k", 4usize);
-    let pes = args.get("pes", 64usize);
-    let r = args.get("r", 10u32);
-    let topo = args.str("topo", "mesh");
-    let mut rng = Rng::new(args.get("seed", 3u64));
+fn cmd_bmvm(p: &Parsed) -> Result<(), String> {
+    let n = p.get_or("n", 1024usize).map_err(bad)?;
+    let k = p.get_or("k", 4usize).map_err(bad)?;
+    let pes = p.get_or("pes", 64usize).map_err(bad)?;
+    let r = p.get_or("r", 10u32).map_err(bad)?;
+    let topo = p.raw("topo").unwrap_or("mesh").to_string();
+    let mut rng = Rng::new(p.get_or("seed", 3u64).map_err(bad)?);
     let a = Gf2Matrix::random(n, n, &mut rng);
     let luts = WilliamsLuts::preprocess(&a, k);
     let v = BitVec::random(n, &mut rng);
@@ -206,18 +318,18 @@ fn cmd_bmvm(args: &Args) {
         "  cycles={} time={:.3} ms (incl. host link) flits={} — verified vs dense A^r v",
         run.report.cycles, run.time_ms, run.report.net.delivered
     );
+    Ok(())
 }
 
 const DFG_SAMPLE: &str = "input a;\ninput b;\nt0 = a + b;\nt1 = a * 7;\nt2 = t0 ^ t1;\nt3 = t2 min b;\nt4 = t3 << 2;\ny = t4 - a;\noutput y;\n";
 
-fn cmd_dfg(args: &Args) {
-    let cores = args.get("cores", 2usize);
-    let src = args
-        .flags
-        .get("file")
-        .map(|f| std::fs::read_to_string(f).expect("read program"))
-        .unwrap_or_else(|| DFG_SAMPLE.to_string());
-    let g = dfg::parse(&src).expect("parse straight-line code");
+fn cmd_dfg(p: &Parsed) -> Result<(), String> {
+    let cores = p.get_or("cores", 2usize).map_err(bad)?;
+    let src = match p.raw("file") {
+        Some(f) => std::fs::read_to_string(f).map_err(|e| format!("read {f}: {e}"))?,
+        None => DFG_SAMPLE.to_string(),
+    };
+    let g = dfg::parse(&src).map_err(|e| format!("parse program: {e}"))?;
     let prog = mips::compile(&g, cores);
     println!("; DFG: {} nodes, {} outputs, {} cores", g.nodes.len(), g.outputs.len(), cores);
     print!("{}", prog.listing());
@@ -226,15 +338,16 @@ fn cmd_dfg(args: &Args) {
     println!("; inputs {a_args:?} -> outputs {:?} (oracle {:?})", run.outputs, g.eval(&a_args));
     println!("; {} cycles, blocked/core {:?}", run.cycles, run.blocked);
     assert_eq!(run.outputs, g.eval(&a_args));
+    Ok(())
 }
 
-fn cmd_noc(args: &Args) {
-    let eps = args.get("endpoints", 16usize);
-    let topo = topo_from_name(&args.str("topo", "mesh4x4"), eps);
-    let flits = args.get("flits", 5000u32);
+fn cmd_noc(p: &Parsed) -> Result<(), String> {
+    let eps = p.get_or("endpoints", 16usize).map_err(bad)?;
+    let topo = topo_from_name(p.raw("topo").unwrap_or("mesh4x4"), eps)?;
+    let flits = p.get_or("flits", 5000u32).map_err(bad)?;
     let mut net = Network::new(&topo, NocConfig::paper());
     let n = net.n_endpoints();
-    let mut rng = Rng::new(args.get("seed", 1u64));
+    let mut rng = Rng::new(p.get_or("seed", 1u64).map_err(bad)?);
     for i in 0..flits {
         let s = rng.index(n);
         let d = (s + 1 + rng.index(n - 1)) % n;
@@ -245,28 +358,25 @@ fn cmd_noc(args: &Args) {
     println!("  drained in {cycles} cycles — {}", net.stats());
     let g = net.topo();
     println!("  avg hops {:.2}, diameter {}", g.avg_hops(), g.diameter());
+    Ok(())
 }
 
-fn cmd_scenarios(args: &Args) {
-    let eps = args.get("endpoints", 64usize);
-    let topo = topo_from_name(&args.str("topo", "mesh8x8"), eps);
-    let engine = match args.str("engine", "event").as_str() {
-        "ref" | "reference" => SimEngine::Reference,
-        "event" | "event-driven" => SimEngine::EventDriven,
-        other => panic!("unknown engine '{other}' (reference, event)"),
-    };
-    let load = args.get("load", 0.05f64);
-    let cycles = args.get("cycles", 2_000u64);
-    let seed = args.get("seed", 1u64);
-    let which = args.str("scenario", "all");
+fn cmd_scenarios(p: &Parsed) -> Result<(), String> {
+    let eps = p.get_or("endpoints", 64usize).map_err(bad)?;
+    let topo = topo_from_name(p.raw("topo").unwrap_or("mesh8x8"), eps)?;
+    let engine = engine_from_name(p.raw("engine").unwrap_or("event"))?;
+    let load = p.get_or("load", 0.05f64).map_err(bad)?;
+    let cycles = p.get_or("cycles", 2_000u64).map_err(bad)?;
+    let seed = p.get_or("seed", 1u64).map_err(bad)?;
+    let which = p.raw("scenario").unwrap_or("all").to_string();
     // --chips N (N >= 2) runs the sharded multi-FPGA co-simulation:
     // Partition::balanced over N chips, cut links on quasi-serdes wires.
-    let chips = args.get("chips", 0usize);
+    let chips = p.get_or("chips", 0usize).map_err(bad)?;
     let cfg = NocConfig { engine, ..NocConfig::paper() };
     let partition = (chips >= 2).then(|| Partition::balanced(&topo.build(), chips, seed));
     let serdes = SerdesConfig {
-        pins: args.get("pins", 8u32),
-        clock_div: args.get("clock-div", 1u32),
+        pins: p.get_or("pins", 8u32).map_err(bad)?,
+        clock_div: p.get_or("clock-div", 1u32).map_err(bad)?,
         tx_buffer: 8,
     };
     println!(
@@ -285,8 +395,8 @@ fn cmd_scenarios(args: &Args) {
         }
         matched = true;
         let outcome = match &partition {
-            Some(p) => {
-                let sharding = scenario::Sharding { partition: p, serdes };
+            Some(part) => {
+                let sharding = scenario::Sharding { partition: part, serdes };
                 scenario::run_scenario_multichip(&scn, &topo, cfg, &sharding, load, cycles, seed)
             }
             None => scenario::run_scenario(&scn, &topo, cfg, load, cycles, seed),
@@ -312,70 +422,52 @@ fn cmd_scenarios(args: &Args) {
         }
     }
     if !matched {
-        eprintln!(
+        return Err(format!(
             "unknown scenario '{which}' (one of: {}, all)",
-            scenario::registry()
-                .iter()
-                .map(|s| s.name)
-                .collect::<Vec<_>>()
-                .join(", ")
-        );
-        std::process::exit(2);
+            scenario::registry().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+        ));
     }
+    Ok(())
 }
 
-fn cmd_sweep(args: &Args) {
+fn cmd_sweep(p: &Parsed) -> Result<(), String> {
     use std::time::Instant;
-    let eps = args.get("endpoints", 64usize);
-    let topo = topo_from_name(&args.str("topo", "mesh8x8"), eps);
-    let engine = match args.str("engine", "event").as_str() {
-        "ref" | "reference" => SimEngine::Reference,
-        "event" | "event-driven" => SimEngine::EventDriven,
-        other => panic!("unknown engine '{other}' (reference, event)"),
-    };
-    let threads = args.get("threads", fabricflow::fleet::default_threads());
-    let cycles = args.get("cycles", 800u64);
-    let loads: Vec<f64> = args
-        .str("loads", "0.02,0.1")
-        .split(',')
-        .map(|s| s.trim().parse().expect("bad --loads entry"))
-        .collect();
+    let eps = p.get_or("endpoints", 64usize).map_err(bad)?;
+    let topo = topo_from_name(p.raw("topo").unwrap_or("mesh8x8"), eps)?;
+    let engine = engine_from_name(p.raw("engine").unwrap_or("event"))?;
+    let threads = p.get_or("threads", fabricflow::fleet::default_threads()).map_err(bad)?;
+    let cycles = p.get_or("cycles", 800u64).map_err(bad)?;
+    let loads: Vec<f64> =
+        p.get_list("loads").map_err(bad)?.unwrap_or_else(|| vec![0.02, 0.1]);
     // --seeds N sweeps seeds 1..=N.
-    let seeds: Vec<u64> = (1..=args.get("seeds", 4u64)).collect();
-    let which = args.str("scenario", "all");
+    let seeds: Vec<u64> = (1..=p.get_or("seeds", 4u64).map_err(bad)?).collect();
+    let which = p.raw("scenario").unwrap_or("all").to_string();
     let scenarios: Vec<scenario::Scenario> = scenario::registry()
         .into_iter()
         .filter(|s| which == "all" || s.name == which)
         .collect();
     if scenarios.is_empty() {
-        eprintln!("unknown scenario '{which}'");
-        std::process::exit(2);
+        return Err(format!("unknown scenario '{which}'"));
     }
     let cfg = NocConfig { engine, ..NocConfig::paper() };
     let grid = scenario::SweepGrid { topo: topo.clone(), cfg, scenarios, loads, seeds, cycles };
-    let chips = args.get("chips", 0usize);
+    let chips = p.get_or("chips", 0usize).map_err(bad)?;
     let t = Instant::now();
     // (cells for the per-cell printout, merged stats for the aggregate)
     let (n_jobs, rows, mut agg) = if chips >= 2 {
-        let partition = Partition::balanced(&topo.build(), chips, args.get("seed", 1u64));
-        let pins: Vec<u32> = args
-            .str("pins", "8")
-            .split(',')
-            .map(|s| s.trim().parse().expect("bad --pins entry"))
-            .collect();
-        let divs: Vec<u32> = args
-            .str("clock-divs", "1")
-            .split(',')
-            .map(|s| s.trim().parse().expect("bad --clock-divs entry"))
-            .collect();
+        let partition =
+            Partition::balanced(&topo.build(), chips, p.get_or("seed", 1u64).map_err(bad)?);
+        let pins: Vec<u32> = p.get_list("pins").map_err(bad)?.unwrap_or_else(|| vec![8]);
+        let divs: Vec<u32> =
+            p.get_list("clock-divs").map_err(bad)?.unwrap_or_else(|| vec![1]);
         let mut serdes_points = Vec::new();
-        for &p in &pins {
+        for &pin in &pins {
             for &d in &divs {
-                serdes_points.push(SerdesConfig { pins: p, clock_div: d, tx_buffer: 8 });
+                serdes_points.push(SerdesConfig { pins: pin, clock_div: d, tx_buffer: 8 });
             }
         }
         let cells = scenario::run_multichip_grid(&grid, &partition, &serdes_points, threads)
-            .unwrap_or_else(|e| panic!("multichip sweep stalled: {e}"));
+            .map_err(|e| format!("multichip sweep stalled: {e}"))?;
         let mut agg = fabricflow::noc::NetStats::default();
         let rows: Vec<String> = cells
             .iter()
@@ -392,7 +484,7 @@ fn cmd_sweep(args: &Args) {
         (cells.len(), rows, agg)
     } else {
         let cells = scenario::run_grid(&grid, threads)
-            .unwrap_or_else(|e| panic!("sweep stalled: {e}"));
+            .map_err(|e| format!("sweep stalled: {e}"))?;
         let mut agg = fabricflow::noc::NetStats::default();
         let rows: Vec<String> = cells
             .iter()
@@ -427,16 +519,16 @@ fn cmd_sweep(args: &Args) {
         agg.p99()
     );
     println!("  {n_jobs} jobs in {:.1} ms — {:.1} jobs/sec", wall * 1e3, n_jobs as f64 / wall);
+    Ok(())
 }
 
-fn cmd_bench(args: &Args) {
-    let quick = args.has("quick");
-    let out = args.str("out", "BENCH_noc.json");
-    let sel = match args.flags.get("only") {
-        Some(s) => fabricflow::perf::BenchSelect::parse(s).unwrap_or_else(|| {
-            eprintln!("bad --only '{s}' (comma-separated: points, multichip, sweep)");
-            std::process::exit(2);
-        }),
+fn cmd_bench(p: &Parsed) -> Result<(), String> {
+    let quick = p.has("quick");
+    let out = p.raw("out").unwrap_or("BENCH_noc.json").to_string();
+    let sel = match p.raw("only") {
+        Some(s) => fabricflow::perf::BenchSelect::parse(s).ok_or_else(|| {
+            format!("bad --only '{s}' (comma-separated: points, multichip, sweep, serve)")
+        })?,
         None => fabricflow::perf::BenchSelect::ALL,
     };
     let report = fabricflow::perf::run_selected(quick, sel);
@@ -455,12 +547,119 @@ fn cmd_bench(args: &Args) {
     if out == "-" {
         print!("{json}");
     } else {
-        std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+        std::fs::write(&out, &json).map_err(|e| format!("write {out}: {e}"))?;
         println!("wrote {out}");
     }
+    Ok(())
 }
 
-fn cmd_resources() {
+fn serve_config(p: &Parsed) -> Result<serve::ServeConfig, String> {
+    let mut cfg = serve::ServeConfig::default();
+    cfg.threads = p.get_or("threads", cfg.threads).map_err(bad)?;
+    cfg.queue_cap = p.get_or("queue", cfg.queue_cap).map_err(bad)?;
+    if let Some(a) = p.raw("admission") {
+        cfg.admission = serve::Admission::parse(a)
+            .ok_or_else(|| format!("unknown admission '{a}' (block, reject)"))?;
+    }
+    if let Some(t) = p.raw("topo") {
+        cfg.topo = topo_from_name(t, p.get_or("endpoints", 16usize).map_err(bad)?)?;
+    }
+    cfg.bmvm.n = p.get_or("bmvm-n", cfg.bmvm.n).map_err(bad)?;
+    cfg.bmvm.k = p.get_or("bmvm-k", cfg.bmvm.k).map_err(bad)?;
+    cfg.bmvm.pes = p.get_or("bmvm-pes", cfg.bmvm.pes).map_err(bad)?;
+    if let Some(t) = p.raw("bmvm-topo") {
+        cfg.bmvm.topo = t.to_string();
+    }
+    cfg.bmvm.seed = p.get_or("bmvm-seed", cfg.bmvm.seed).map_err(bad)?;
+    cfg.bmvm.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_serve(p: &Parsed) -> Result<(), String> {
+    let cfg = serve_config(p)?;
+    // Frames go to stdout; everything human-readable goes to stderr so
+    // `loadgen | serve > responses.bin` stays clean.
+    eprintln!(
+        "serve: {} warm replicas on {:?}, queue {} ({:?} admission)",
+        cfg.threads, cfg.topo, cfg.queue_cap, cfg.admission
+    );
+    let summary = match p.raw("uds") {
+        Some(path) => {
+            // Unix-socket mode: accept ONE connection and serve it to
+            // EOF (the open-loop client closes its write half when the
+            // stream ends).
+            let _ = std::fs::remove_file(path);
+            let listener = std::os::unix::net::UnixListener::bind(path)
+                .map_err(|e| format!("bind {path}: {e}"))?;
+            eprintln!("serve: listening on {path}");
+            let (sock, _) = listener.accept().map_err(|e| format!("accept: {e}"))?;
+            let reader = sock.try_clone().map_err(|e| format!("clone socket: {e}"))?;
+            let summary = serve::serve_stream(&cfg, reader, sock)
+                .map_err(|e| format!("serve: {e}"))?;
+            let _ = std::fs::remove_file(path);
+            summary
+        }
+        None => serve::serve_stream(&cfg, std::io::stdin().lock(), std::io::stdout().lock())
+            .map_err(|e| format!("serve: {e}"))?,
+    };
+    eprintln!("{}", summary.render());
+    if p.has("fail-on-reject") && summary.rejected > 0 {
+        return Err(format!(
+            "{} requests rejected below the declared saturation point",
+            summary.rejected
+        ));
+    }
+    Ok(())
+}
+
+fn cmd_loadgen(p: &Parsed) -> Result<(), String> {
+    let mut cfg = loadgen::LoadgenConfig::default();
+    cfg.requests = p.get_or("requests", cfg.requests).map_err(bad)?;
+    cfg.rate = p.get_or("rate", cfg.rate).map_err(bad)?;
+    cfg.seed = p.get_or("seed", cfg.seed).map_err(bad)?;
+    if let Some(mix) = p.raw("mix") {
+        let mut kinds = Vec::new();
+        for part in mix.split(',').filter(|s| !s.is_empty()) {
+            kinds.push(loadgen::ReqKind::parse(part).ok_or_else(|| {
+                format!("unknown mix kind '{part}' (scenario, ldpc, pfilter, bmvm)")
+            })?);
+        }
+        if kinds.is_empty() {
+            return Err("--mix must name at least one kind".to_string());
+        }
+        cfg.mix = kinds;
+    }
+    match p.raw("arrivals").unwrap_or("poisson") {
+        "poisson" => cfg.arrivals = loadgen::ArrivalModel::Poisson,
+        "bursty" => {
+            cfg.arrivals = loadgen::ArrivalModel::Bursty {
+                on_ms: p.get_or("on-ms", 10u64).map_err(bad)?,
+                off_ms: p.get_or("off-ms", 30u64).map_err(bad)?,
+            }
+        }
+        other => return Err(format!("unknown arrivals '{other}' (poisson, bursty)")),
+    }
+    cfg.bmvm.n = p.get_or("bmvm-n", cfg.bmvm.n).map_err(bad)?;
+    let pace = !p.has("max-speed");
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let offered_s = loadgen::write_stream(&cfg, &mut out, pace)
+        .map_err(|e| format!("loadgen: {e}"))?;
+    eprintln!(
+        "loadgen: {} requests, seed {}, {} — offered span {:.3}s",
+        cfg.requests,
+        cfg.seed,
+        if cfg.rate > 0.0 {
+            format!("{:.0} req/s {:?}", cfg.rate, cfg.arrivals)
+        } else {
+            "flood".to_string()
+        },
+        offered_s
+    );
+    Ok(())
+}
+
+fn cmd_resources(_p: &Parsed) -> Result<(), String> {
     for d in [Device::ZC7020, Device::VIRTEX6_ML605, Device::DE0_NANO] {
         println!(
             "{:28} {:>7} FF {:>7} LUT {:>4} DSP {:>6} Kb BRAM",
@@ -473,27 +672,28 @@ fn cmd_resources() {
     }
     println!();
     print!("{}", tables::table1());
+    Ok(())
 }
 
-fn cmd_partition_demo(args: &Args) {
+fn cmd_partition_demo(p: &Parsed) -> Result<(), String> {
     // Fig 5: 4-router custom NoC, R0 on its own FPGA.
     let topo = Topology::Custom {
         n_routers: 4,
         links: vec![(0, 1), (1, 2), (2, 3), (3, 0)],
         endpoint_router: vec![0, 1, 2, 3],
     };
-    let p = Partition::island(4, &[0]);
+    let part = Partition::island(4, &[0]);
     let serdes = SerdesConfig {
-        pins: args.get("pins", 8u32),
-        clock_div: args.get("clock-div", 1u32),
+        pins: p.get_or("pins", 8u32).map_err(bad)?,
+        clock_div: p.get_or("clock-div", 1u32).map_err(bad)?,
         tx_buffer: 8,
     };
     let g = topo.build();
     println!("Fig 5 demo: 4-router NoC, R0+N0 on FPGA 1, rest on FPGA 0");
-    println!("  cut links: {:?}", p.cut_links(&g));
-    println!("  pins/FPGA: {:?}", p.pins_per_fpga(&g, &serdes));
+    println!("  cut links: {:?}", part.cut_links(&g));
+    println!("  pins/FPGA: {:?}", part.pins_per_fpga(&g, &serdes));
     let mut net = Network::new(&topo, NocConfig::paper());
-    p.apply(&mut net, serdes);
+    part.apply(&mut net, serdes);
     let mut rng = Rng::new(9);
     for i in 0..2000u32 {
         let s = rng.index(4);
@@ -508,32 +708,35 @@ fn cmd_partition_demo(args: &Args) {
             ch.carried, ch.ser_cycles
         );
     }
+    Ok(())
+}
+
+fn usage_banner() -> String {
+    let names: Vec<&str> = COMMANDS.iter().map(|c| c.name).collect();
+    format!("usage: fabricflow <{}> [flags]", names.join("|"))
 }
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let Some(cmd) = argv.first().cloned() else {
-        eprintln!(
-            "usage: fabricflow <tables|ldpc|track|bmvm|dfg|noc|scenarios|sweep|bench|partition|resources> [flags]"
-        );
+    let Some(cmd_name) = argv.first().cloned() else {
+        eprintln!("{}", usage_banner());
         std::process::exit(2);
     };
-    let args = Args::parse(&argv[1..]);
-    match cmd.as_str() {
-        "tables" => cmd_tables(&args),
-        "ldpc" => cmd_ldpc(&args),
-        "track" => cmd_track(&args),
-        "bmvm" => cmd_bmvm(&args),
-        "dfg" => cmd_dfg(&args),
-        "noc" => cmd_noc(&args),
-        "scenarios" => cmd_scenarios(&args),
-        "sweep" => cmd_sweep(&args),
-        "bench" => cmd_bench(&args),
-        "partition" => cmd_partition_demo(&args),
-        "resources" => cmd_resources(),
-        other => {
-            eprintln!("unknown command '{other}'");
+    let Some(cmd) = COMMANDS.iter().find(|c| c.name == cmd_name) else {
+        eprintln!("unknown command '{cmd_name}'");
+        eprintln!("{}", usage_banner());
+        std::process::exit(2);
+    };
+    let parsed = match args::parse(cmd.spec, &argv[1..]) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("fabricflow {}: {e}", cmd.name);
+            eprintln!("usage: fabricflow {}", cmd.usage);
             std::process::exit(2);
         }
+    };
+    if let Err(e) = (cmd.run)(&parsed) {
+        eprintln!("fabricflow {}: {e}", cmd.name);
+        std::process::exit(1);
     }
 }

@@ -125,16 +125,27 @@ impl Scenario {
     /// endpoint per cycle for the stochastic workloads; an intensity
     /// knob scaling the app skeletons' period). Deterministic in `seed`.
     pub fn trace(&self, n: usize, load: f64, cycles: u64, seed: u64) -> Trace {
+        let mut out = Trace::default();
+        self.trace_into(n, load, cycles, seed, &mut out);
+        out
+    }
+
+    /// [`Scenario::trace`] into a caller-owned buffer: `out` is cleared
+    /// and refilled, reusing its allocation — the serve loop's warm
+    /// replicas regenerate per-request traces without touching the heap
+    /// once the scratch trace has grown to steady-state size.
+    pub fn trace_into(&self, n: usize, load: f64, cycles: u64, seed: u64, out: &mut Trace) {
         assert!(n >= 2, "scenarios need at least 2 endpoints");
         let mut rng = Rng::new(seed ^ fnv1a(self.name));
-        let mut events = Vec::new();
+        out.events.clear();
+        let events = &mut out.events;
         match self.workload {
             Workload::Synthetic(pattern) => {
                 for c in 0..cycles {
                     for s in 0..n {
                         if rng.chance(load) {
                             let dst = pattern.dst(s, n, &mut rng);
-                            push(&mut events, c, s, dst, &mut rng);
+                            push(events, c, s, dst, &mut rng);
                         }
                     }
                 }
@@ -149,7 +160,7 @@ impl Scenario {
                     for s in 0..n {
                         if rng.chance(burst_load) {
                             let dst = Pattern::Uniform.dst(s, n, &mut rng);
-                            push(&mut events, c, s, dst, &mut rng);
+                            push(events, c, s, dst, &mut rng);
                         }
                     }
                 }
@@ -168,14 +179,14 @@ impl Scenario {
                     for b in 0..n_bits {
                         for k in 0..3usize {
                             let c = n_bits + (b + k * (1 + n_checks / 3)) % n_checks;
-                            push(&mut events, at, b, c, &mut rng);
+                            push(events, at, b, c, &mut rng);
                         }
                     }
                     let back = at + period / 2;
                     for chk in 0..n_checks {
                         for k in 0..3usize {
                             let b = (chk + k * (1 + n_bits / 3)) % n_bits;
-                            push(&mut events, back, n_bits + chk, b, &mut rng);
+                            push(events, back, n_bits + chk, b, &mut rng);
                         }
                     }
                 }
@@ -189,12 +200,12 @@ impl Scenario {
                 for f in 0..frames {
                     let at = f * period;
                     for w in 1..n {
-                        push(&mut events, at, 0, w, &mut rng);
+                        push(events, at, 0, w, &mut rng);
                     }
                     let back = at + period / 3;
                     for w in 1..n {
                         for _ in 0..4 {
-                            push(&mut events, back, w, 0, &mut rng);
+                            push(events, back, w, 0, &mut rng);
                         }
                     }
                 }
@@ -208,17 +219,16 @@ impl Scenario {
                 for r in 0..rounds {
                     let at = r * period;
                     for s in 0..n {
-                        push(&mut events, at, s, (s + 1) % n, &mut rng);
+                        push(events, at, s, (s + 1) % n, &mut rng);
                     }
                     if r % 4 == 3 {
                         for s in 1..n {
-                            push(&mut events, at + period / 2, s, 0, &mut rng);
+                            push(events, at + period / 2, s, 0, &mut rng);
                         }
                     }
                 }
             }
         }
-        Trace { events }
     }
 }
 
@@ -326,6 +336,14 @@ pub struct EjectRecord {
 /// eject order).
 pub fn drain_all(net: &mut Network) -> Vec<EjectRecord> {
     let mut out = Vec::new();
+    drain_all_into(net, &mut out);
+    out
+}
+
+/// [`drain_all`] into a caller-owned buffer: `out` is cleared and
+/// refilled, reusing its allocation across serve-loop requests.
+pub fn drain_all_into(net: &mut Network, out: &mut Vec<EjectRecord>) {
+    out.clear();
     for e in 0..net.n_endpoints() {
         while let Some(f) = net.eject(e) {
             out.push(EjectRecord {
@@ -337,7 +355,6 @@ pub fn drain_all(net: &mut Network) -> Vec<EjectRecord> {
             });
         }
     }
-    out
 }
 
 /// Result of one scenario run: the unified flow-level report plus the

@@ -23,6 +23,7 @@ use crate::noc::scenario::{self, SweepGrid, Trace};
 use crate::noc::{NetStats, Network, NocConfig, SharedFabric, SimEngine, Topology};
 use crate::partition::Partition;
 use crate::serdes::SerdesConfig;
+use crate::serve::{self, loadgen};
 
 /// One benchmark point: a scenario-matrix cell with a fixed seed.
 #[derive(Clone, Debug)]
@@ -227,8 +228,38 @@ pub struct SweepBench {
     pub reuse_speedup: f64,
 }
 
+/// One offered-load point of the serving benchmark: a seeded open-loop
+/// loadgen stream paced through [`serve::serve_stream`] in-process.
+#[derive(Clone, Debug)]
+pub struct ServePoint {
+    pub label: String,
+    /// Offered rate, requests/sec (`0.0` = flood, no pacing).
+    pub offered_rps: f64,
+    pub requests: u64,
+    pub served: u64,
+    pub rejected: u64,
+    pub achieved_rps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub rejection_rate: f64,
+}
+
+/// The `"serve"` section of `BENCH_noc.json`: service latency
+/// percentiles, throughput, and rejection rate vs offered load on the
+/// warm replica pool. Request *bytes* are deterministic in the loadgen
+/// seed; latencies and the flood point's rejection split are wall-clock
+/// measurements (unbaselined, like every other timing in the file).
+#[derive(Clone, Debug)]
+pub struct ServeBench {
+    pub threads: usize,
+    pub queue_cap: usize,
+    pub points: Vec<ServePoint>,
+}
+
 /// Which `BENCH_noc.json` sections a bench invocation regenerates
-/// (`fabricflow bench --only points|multichip|sweep`); unselected
+/// (`fabricflow bench --only points|multichip|sweep|serve`); unselected
 /// sections are preserved from the existing file by
 /// [`merge_sections`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -236,20 +267,24 @@ pub struct BenchSelect {
     pub points: bool,
     pub multichip: bool,
     pub sweep: bool,
+    pub serve: bool,
 }
 
 impl BenchSelect {
     /// Every section (the default `fabricflow bench`).
-    pub const ALL: BenchSelect = BenchSelect { points: true, multichip: true, sweep: true };
+    pub const ALL: BenchSelect =
+        BenchSelect { points: true, multichip: true, sweep: true, serve: true };
 
     /// Parse a comma-separated `--only` value.
     pub fn parse(s: &str) -> Option<BenchSelect> {
-        let mut sel = BenchSelect { points: false, multichip: false, sweep: false };
+        let mut sel =
+            BenchSelect { points: false, multichip: false, sweep: false, serve: false };
         for part in s.split(',') {
             match part.trim() {
                 "points" => sel.points = true,
                 "multichip" => sel.multichip = true,
                 "sweep" => sel.sweep = true,
+                "serve" => sel.serve = true,
                 _ => return None,
             }
         }
@@ -271,6 +306,9 @@ pub struct BenchReport {
     pub multichip: Vec<MultiPointResult>,
     /// Fleet sweep throughput (None when the section was not run).
     pub sweep: Option<SweepBench>,
+    /// Serving latency vs offered load (None when the section was not
+    /// run).
+    pub serve: Option<ServeBench>,
 }
 
 /// One replay; the timer starts AFTER `Network::new` so construction
@@ -457,6 +495,62 @@ pub fn run_sweep_bench(quick: bool) -> SweepBench {
     }
 }
 
+/// Run the serving benchmark (the `"serve"` section): the same seeded
+/// scenario-request stream offered at increasing Poisson rates through
+/// an in-process [`loadgen::PacedReader`] → [`serve::serve_stream`]
+/// pipe, plus one unpaced flood point that drives the pool into
+/// admission control. Reject admission with the default bounded queue:
+/// below saturation every paced point must serve everything; the flood
+/// point is where rejection shows up.
+pub fn run_serve_bench(quick: bool) -> ServeBench {
+    let cfg = serve::ServeConfig {
+        admission: serve::Admission::Reject,
+        ..serve::ServeConfig::default()
+    };
+    let requests: u64 = if quick { 60 } else { 300 };
+    let rates: &[f64] = if quick { &[500.0, 2000.0] } else { &[500.0, 2000.0, 8000.0] };
+    let mut points = Vec::new();
+    for (i, &rate) in rates.iter().chain(std::iter::once(&0.0)).enumerate() {
+        let lg = loadgen::LoadgenConfig {
+            requests,
+            rate,
+            seed: 7,
+            mix: vec![loadgen::ReqKind::Scenario],
+            arrivals: loadgen::ArrivalModel::Poisson,
+            bmvm: cfg.bmvm.clone(),
+        };
+        let label = if rate > 0.0 {
+            format!("poisson-{}rps", rate as u64)
+        } else {
+            "flood".to_string()
+        };
+        let input = loadgen::PacedReader::new(&lg);
+        // Responses go to a discarding sink: their bytes are covered by
+        // the differential tests; the bench only tracks timing.
+        let summary = serve::serve_stream(&cfg, input, std::io::sink())
+            .unwrap_or_else(|e| panic!("serve bench point {i}: {e}"));
+        assert_eq!(
+            summary.arrived, requests,
+            "{label}: loadgen stream lost frames in flight"
+        );
+        assert_eq!(summary.errors, 0, "{label}: loadgen emitted an unservable request");
+        points.push(ServePoint {
+            label,
+            offered_rps: rate,
+            requests,
+            served: summary.served,
+            rejected: summary.rejected,
+            achieved_rps: summary.achieved_rps(),
+            p50_us: summary.latency_us.p50(),
+            p95_us: summary.latency_us.p95(),
+            p99_us: summary.latency_us.p99(),
+            max_us: summary.latency_us.max_latency,
+            rejection_rate: summary.rejection_rate(),
+        });
+    }
+    ServeBench { threads: cfg.threads, queue_cap: cfg.queue_cap, points }
+}
+
 /// Run the whole tracked matrix. `quick` shrinks windows 4x and uses one
 /// rep — the CI perf-smoke profile.
 pub fn run(quick: bool) -> BenchReport {
@@ -483,7 +577,8 @@ pub fn run_selected(quick: bool, sel: BenchSelect) -> BenchReport {
         Vec::new()
     };
     let sweep = sel.sweep.then(|| run_sweep_bench(quick));
-    BenchReport { quick, points, multichip, sweep }
+    let serve = sel.serve.then(|| run_serve_bench(quick));
+    BenchReport { quick, points, multichip, sweep, serve }
 }
 
 impl BenchReport {
@@ -556,10 +651,39 @@ impl BenchReport {
                 );
                 let _ = writeln!(j, "    \"reuse_jobs_per_sec\": {:.1},", s.reuse_jobs_per_sec);
                 let _ = writeln!(j, "    \"reuse_speedup\": {:.2}", s.reuse_speedup);
+                let _ = writeln!(j, "  }},");
+            }
+            None => {
+                let _ = writeln!(j, "  \"sweep\": null,");
+            }
+        }
+        match &self.serve {
+            Some(sv) => {
+                let _ = writeln!(j, "  \"serve\": {{");
+                let _ = writeln!(j, "    \"threads\": {},", sv.threads);
+                let _ = writeln!(j, "    \"queue_cap\": {},", sv.queue_cap);
+                let _ = writeln!(j, "    \"points\": [");
+                for (i, p) in sv.points.iter().enumerate() {
+                    let comma = if i + 1 == sv.points.len() { "" } else { "," };
+                    let _ = writeln!(j, "      {{");
+                    let _ = writeln!(j, "        \"label\": \"{}\",", p.label);
+                    let _ = writeln!(j, "        \"offered_rps\": {:.1},", p.offered_rps);
+                    let _ = writeln!(j, "        \"requests\": {},", p.requests);
+                    let _ = writeln!(j, "        \"served\": {},", p.served);
+                    let _ = writeln!(j, "        \"rejected\": {},", p.rejected);
+                    let _ = writeln!(j, "        \"achieved_rps\": {:.1},", p.achieved_rps);
+                    let _ = writeln!(j, "        \"p50_us\": {},", p.p50_us);
+                    let _ = writeln!(j, "        \"p95_us\": {},", p.p95_us);
+                    let _ = writeln!(j, "        \"p99_us\": {},", p.p99_us);
+                    let _ = writeln!(j, "        \"max_us\": {},", p.max_us);
+                    let _ = writeln!(j, "        \"rejection_rate\": {:.4}", p.rejection_rate);
+                    let _ = writeln!(j, "      }}{comma}");
+                }
+                let _ = writeln!(j, "    ]");
                 let _ = writeln!(j, "  }}");
             }
             None => {
-                let _ = writeln!(j, "  \"sweep\": null");
+                let _ = writeln!(j, "  \"serve\": null");
             }
         }
         let _ = writeln!(j, "}}");
@@ -620,6 +744,25 @@ impl BenchReport {
                 sw.reuse_jobs_per_sec,
                 sw.reuse_speedup
             );
+        }
+        if let Some(sv) = &self.serve {
+            let _ = writeln!(
+                s,
+                "Serving latency vs offered load ({} threads, queue {})",
+                sv.threads, sv.queue_cap
+            );
+            for p in &sv.points {
+                let _ = writeln!(
+                    s,
+                    "  {:32} {:>8.0} req/s offered {:>8.0} served | p50 {:>6}us p99 {:>6}us | rej {:>5.1}%",
+                    p.label,
+                    p.offered_rps,
+                    p.achieved_rps,
+                    p.p50_us,
+                    p.p99_us,
+                    p.rejection_rate * 100.0
+                );
+            }
         }
         s
     }
@@ -686,9 +829,12 @@ fn section_span(json: &str, key: &str) -> Option<(usize, usize)> {
 /// `fresh` emitted it (empty / null).
 pub fn merge_sections(old_json: &str, fresh: &BenchReport, sel: BenchSelect) -> String {
     let mut out = fresh.to_json();
-    for (key, selected) in
-        [("points", sel.points), ("multichip", sel.multichip), ("sweep", sel.sweep)]
-    {
+    for (key, selected) in [
+        ("points", sel.points),
+        ("multichip", sel.multichip),
+        ("sweep", sel.sweep),
+        ("serve", sel.serve),
+    ] {
         if selected {
             continue;
         }
@@ -734,14 +880,20 @@ mod tests {
         assert!(res.reference.flits > 0);
         assert_eq!(res.reference.flits, res.event.flits);
         assert_eq!(res.reference.cycles, res.event.cycles);
-        let report =
-            BenchReport { quick: true, points: vec![res], multichip: Vec::new(), sweep: None };
+        let report = BenchReport {
+            quick: true,
+            points: vec![res],
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+        };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
         assert!(json.contains("flits_per_sec"));
         assert!(json.contains("\"profile\": \"quick\""));
         assert!(json.contains("\"multichip\": ["));
-        assert!(json.contains("\"sweep\": null"));
+        assert!(json.contains("\"sweep\": null,"));
+        assert!(json.contains("\"serve\": null"));
         assert!(report.render_table().contains("saturated-mesh8x8"));
     }
 
@@ -776,8 +928,13 @@ mod tests {
         assert!(res.mono.flits > 0);
         assert_eq!(res.mono.flits, res.sharded.flits);
         assert!(res.cycle_slowdown() >= 1.0);
-        let report =
-            BenchReport { quick: true, points: Vec::new(), multichip: vec![res], sweep: None };
+        let report = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: vec![res],
+            sweep: None,
+            serve: None,
+        };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"bmvm-ring8/2fpga-8pin\""));
         assert!(json.contains("cycle_slowdown"));
@@ -798,6 +955,41 @@ mod tests {
         }
     }
 
+    fn serve_stub() -> ServeBench {
+        ServeBench {
+            threads: 2,
+            queue_cap: 64,
+            points: vec![
+                ServePoint {
+                    label: "poisson-500rps".into(),
+                    offered_rps: 500.0,
+                    requests: 60,
+                    served: 60,
+                    rejected: 0,
+                    achieved_rps: 498.2,
+                    p50_us: 210,
+                    p95_us: 400,
+                    p99_us: 700,
+                    max_us: 900,
+                    rejection_rate: 0.0,
+                },
+                ServePoint {
+                    label: "flood".into(),
+                    offered_rps: 0.0,
+                    requests: 60,
+                    served: 48,
+                    rejected: 12,
+                    achieved_rps: 9000.0,
+                    p50_us: 150,
+                    p95_us: 300,
+                    p99_us: 500,
+                    max_us: 650,
+                    rejection_rate: 0.2,
+                },
+            ],
+        }
+    }
+
     #[test]
     fn sweep_section_serializes_and_renders() {
         let report = BenchReport {
@@ -805,6 +997,7 @@ mod tests {
             points: Vec::new(),
             multichip: Vec::new(),
             sweep: Some(sweep_stub()),
+            serve: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"sweep\": {"));
@@ -814,16 +1007,40 @@ mod tests {
     }
 
     #[test]
+    fn serve_section_serializes_and_renders() {
+        let report = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: Some(serve_stub()),
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"serve\": {"));
+        assert!(json.contains("\"label\": \"poisson-500rps\""));
+        assert!(json.contains("\"p99_us\": 700"));
+        assert!(json.contains("\"rejection_rate\": 0.2000"));
+        let table = report.render_table();
+        assert!(table.contains("Serving latency vs offered load"));
+        assert!(table.contains("flood"));
+    }
+
+    #[test]
     fn bench_select_parses_only_flags() {
         assert_eq!(
             BenchSelect::parse("sweep"),
-            Some(BenchSelect { points: false, multichip: false, sweep: true })
+            Some(BenchSelect { points: false, multichip: false, sweep: true, serve: false })
+        );
+        assert_eq!(
+            BenchSelect::parse("serve"),
+            Some(BenchSelect { points: false, multichip: false, sweep: false, serve: true })
         );
         assert_eq!(
             BenchSelect::parse("points,multichip"),
-            Some(BenchSelect { points: true, multichip: true, sweep: false })
+            Some(BenchSelect { points: true, multichip: true, sweep: false, serve: false })
         );
-        assert_eq!(BenchSelect::parse("points,multichip,sweep"), Some(BenchSelect::ALL));
+        assert_eq!(BenchSelect::parse("points,multichip,sweep,serve"), Some(BenchSelect::ALL));
+        assert_ne!(BenchSelect::parse("points,multichip,sweep"), Some(BenchSelect::ALL));
         assert!(BenchSelect::ALL.is_all());
         assert_eq!(BenchSelect::parse("everything"), None);
     }
@@ -850,6 +1067,7 @@ mod tests {
             }],
             multichip: Vec::new(),
             sweep: Some(sweep_stub()),
+            serve: Some(serve_stub()),
         }
         .to_json();
         // A fresh sweep-only run: points/multichip empty, new sweep.
@@ -860,8 +1078,9 @@ mod tests {
             points: Vec::new(),
             multichip: Vec::new(),
             sweep: Some(new_sweep),
+            serve: None,
         };
-        let sel = BenchSelect { points: false, multichip: false, sweep: true };
+        let sel = BenchSelect { points: false, multichip: false, sweep: true, serve: false };
         let merged = merge_sections(&old, &fresh, sel);
         // Old points preserved verbatim, new sweep spliced in.
         let (os, oe) = section_span(&old, "points").unwrap();
@@ -870,17 +1089,25 @@ mod tests {
         assert!(merged.contains("\"label\": \"saturated-mesh8x8/uniform\""));
         assert!(merged.contains("\"parallel_speedup\": 9.99"));
         assert!(!merged.contains("\"parallel_speedup\": 3.10"));
-        // And the other way: regenerating points keeps the old sweep.
-        let sel = BenchSelect { points: true, multichip: false, sweep: false };
+        // The unselected serve section came through byte-for-byte too.
+        let (os, oe) = section_span(&old, "serve").unwrap();
+        let (ms, me) = section_span(&merged, "serve").unwrap();
+        assert_eq!(&old[os..oe], &merged[ms..me], "serve section changed");
+        // And the other way: regenerating points keeps the old sweep
+        // and serve sections.
+        let sel = BenchSelect { points: true, multichip: false, sweep: false, serve: false };
         let fresh_points = BenchReport {
             quick: true,
             points: Vec::new(),
             multichip: Vec::new(),
             sweep: None,
+            serve: None,
         };
         let merged = merge_sections(&old, &fresh_points, sel);
         assert!(merged.contains("\"parallel_speedup\": 3.10"));
         assert!(!merged.contains("\"sweep\": null"));
+        assert!(merged.contains("\"label\": \"poisson-500rps\""));
+        assert!(!merged.contains("\"serve\": null"));
     }
 
     #[test]
@@ -894,6 +1121,24 @@ mod tests {
         let (s, e) = section_span(json, "sweep").unwrap();
         assert_eq!(&json[s..e], "null");
         assert!(section_span(json, "missing").is_none());
+    }
+
+    #[test]
+    fn serve_bench_runs_tiny() {
+        // A real quick serve bench: latencies are wall-clock, but the
+        // accounting must reconcile at every point and the flood point
+        // must exist (it is where admission control gets exercised).
+        let sv = run_serve_bench(true);
+        assert_eq!(sv.points.len(), 3, "two paced points + flood");
+        assert_eq!(sv.points.last().unwrap().label, "flood");
+        for p in &sv.points {
+            assert_eq!(p.served + p.rejected, p.requests, "{}", p.label);
+            assert!(p.achieved_rps > 0.0, "{}", p.label);
+            // Percentiles are bucket upper edges, so p50 can exceed the
+            // exact max; only the quantile ordering is guaranteed.
+            assert!(p.p99_us >= p.p50_us, "{}", p.label);
+            assert!(p.max_us > 0, "{}", p.label);
+        }
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! `fabricflow loadgen` — deterministic open-loop request generation.
+//!
+//! An open-loop generator decides *when* each request arrives from a
+//! seeded arrival process, independent of how fast the server answers —
+//! the discipline that actually exposes tail latency and admission
+//! control (a closed-loop client self-throttles the moment the server
+//! slows down and never saturates it). Two properties matter here:
+//!
+//! - **The request bytes are a pure function of the seed.** The mix,
+//!   per-request parameters, and frame encoding never consult the
+//!   clock; `--rate` and the arrival model shape only the *schedule*
+//!   (when frames are released), so two runs with the same seed pipe
+//!   byte-identical streams into the server. That is what makes the CI
+//!   smoke job and the differential pool-vs-batch tests reproducible.
+//! - **Arrivals are seeded too.** Poisson inter-arrival gaps come from
+//!   the inverse-CDF transform of the same [`Rng`] stream; the bursty
+//!   model gates that process with a deterministic on/off square wave.
+//!   `--rate 0` floods: every frame is released immediately.
+//!
+//! Request parameters target the default [`super::ServeConfig`]
+//! resident state (Fano LDPC decoder, the n=32 BMVM matrix), so a
+//! loadgen stream is servable out of the box:
+//! `fabricflow loadgen --requests 300 --rate 300 --seed 7 | fabricflow serve`.
+
+use std::io::{self, Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::apps::ldpc::MinsumVariant;
+use crate::util::bits::BitVec;
+use crate::util::Rng;
+
+use super::hostlink::{BmvmRequest, LdpcRequest, PfilterRequest, Request, ScenarioRequest};
+use super::BmvmResident;
+
+/// Which request types the generated stream cycles through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    Scenario,
+    Ldpc,
+    Pfilter,
+    Bmvm,
+}
+
+impl ReqKind {
+    pub fn parse(s: &str) -> Option<ReqKind> {
+        match s {
+            "scenario" => Some(ReqKind::Scenario),
+            "ldpc" => Some(ReqKind::Ldpc),
+            "pfilter" => Some(ReqKind::Pfilter),
+            "bmvm" => Some(ReqKind::Bmvm),
+            _ => None,
+        }
+    }
+}
+
+/// When requests are released into the pipe.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalModel {
+    /// Memoryless arrivals at the offered rate.
+    Poisson,
+    /// Poisson arrivals gated by a deterministic on/off square wave:
+    /// `on_ms` of traffic, `off_ms` of silence, repeating. The offered
+    /// rate applies *within* bursts, so the long-run average rate is
+    /// `rate * on/(on+off)`.
+    Bursty { on_ms: u64, off_ms: u64 },
+}
+
+/// One loadgen run: `requests` frames at `rate` offered req/s.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub requests: u64,
+    /// Offered rate in requests/second; `0.0` floods (no pacing).
+    pub rate: f64,
+    pub seed: u64,
+    /// Round-robin mix; must be non-empty.
+    pub mix: Vec<ReqKind>,
+    pub arrivals: ArrivalModel,
+    /// Resident BMVM shape requests must match (the server's config).
+    pub bmvm: BmvmResident,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            requests: 100,
+            rate: 0.0,
+            seed: 1,
+            mix: vec![ReqKind::Scenario],
+            arrivals: ArrivalModel::Poisson,
+            bmvm: BmvmResident::default(),
+        }
+    }
+}
+
+/// The `i`-th request of the stream — deterministic in `(cfg.seed, i)`
+/// via a forked per-request RNG, so any subsequence can be regenerated
+/// independently.
+pub fn gen_request(cfg: &LoadgenConfig, i: u64) -> Request {
+    let kind = cfg.mix[(i % cfg.mix.len() as u64) as usize];
+    let mut rng = Rng::new(cfg.seed ^ 0x10AD_0000).fork(i);
+    match kind {
+        ReqKind::Scenario => Request::Scenario(ScenarioRequest {
+            scenario: 0, // uniform
+            load: 0.05,
+            cycles: 200,
+            seed: rng.next_u64(),
+        }),
+        ReqKind::Ldpc => {
+            let variant = if i % 2 == 0 {
+                MinsumVariant::SignMagnitude
+            } else {
+                MinsumVariant::PaperListing
+            };
+            // Fano-code LLRs: confident magnitudes with random signs.
+            let llr = (0..7)
+                .map(|_| {
+                    let mag = 20 + rng.range_i64(0, 80) as i32;
+                    if rng.bool() {
+                        mag
+                    } else {
+                        -mag
+                    }
+                })
+                .collect();
+            Request::Ldpc(LdpcRequest { niter: 4, variant, llr })
+        }
+        ReqKind::Pfilter => Request::Pfilter(PfilterRequest {
+            width: 32,
+            height: 24,
+            frames: 3,
+            obj_r: 3,
+            vseed: rng.next_u64(),
+            n_particles: 16,
+            sigma: 2.0,
+            roi_r: 4,
+            seed: rng.next_u64(),
+            workers: 2,
+        }),
+        ReqKind::Bmvm => Request::Bmvm(BmvmRequest {
+            r: 1 + (i % 3) as u32,
+            v: BitVec::random(cfg.bmvm.n, &mut rng),
+        }),
+    }
+}
+
+/// Generate the full stream: the encoded frame bytes, per-frame byte
+/// offsets (frame `i` spans `offsets[i]..offsets[i+1]`), and per-frame
+/// release times in seconds. Bytes and offsets depend only on
+/// `(seed, mix, requests, bmvm)`; release times additionally on
+/// `(rate, arrivals)`. With `rate == 0` every release time is 0.
+pub fn generate(cfg: &LoadgenConfig) -> (Vec<u8>, Vec<usize>, Vec<f64>) {
+    assert!(!cfg.mix.is_empty(), "loadgen mix must name at least one kind");
+    let mut bytes = Vec::new();
+    let mut offsets = Vec::with_capacity(cfg.requests as usize + 1);
+    let mut release = Vec::with_capacity(cfg.requests as usize);
+    let mut clock = ArrivalClock::new(cfg.seed, cfg.rate, cfg.arrivals);
+    for i in 0..cfg.requests {
+        offsets.push(bytes.len());
+        gen_request(cfg, i).encode(i as u32, &mut bytes);
+        release.push(clock.next_arrival_s());
+    }
+    offsets.push(bytes.len());
+    (bytes, offsets, release)
+}
+
+/// Seeded arrival-time process (seconds since stream start). `busy_s`
+/// accumulates the raw exponential gaps; the bursty model maps that
+/// busy-time axis onto wall time by splicing in the off-windows, so the
+/// projection is a pure function and never compounds across calls.
+struct ArrivalClock {
+    rng: Rng,
+    rate: f64,
+    arrivals: ArrivalModel,
+    busy_s: f64,
+}
+
+impl ArrivalClock {
+    fn new(seed: u64, rate: f64, arrivals: ArrivalModel) -> ArrivalClock {
+        ArrivalClock { rng: Rng::new(seed ^ 0x0A99_17A1), rate, arrivals, busy_s: 0.0 }
+    }
+
+    fn next_arrival_s(&mut self) -> f64 {
+        if self.rate <= 0.0 {
+            return 0.0;
+        }
+        // Inverse-CDF exponential gap; clamp u away from 1 so ln() is
+        // finite.
+        let u = self.rng.f64().min(1.0 - 1e-12);
+        self.busy_s += -(1.0 - u).ln() / self.rate;
+        match self.arrivals {
+            ArrivalModel::Poisson => self.busy_s,
+            ArrivalModel::Bursty { on_ms, off_ms } => {
+                let on = on_ms.max(1) as f64 / 1e3;
+                let off = off_ms as f64 / 1e3;
+                let bursts = (self.busy_s / on).floor();
+                let within = self.busy_s - bursts * on;
+                bursts * (on + off) + within
+            }
+        }
+    }
+}
+
+/// Write the stream to `out`. When `pace` is true and the config has a
+/// positive rate, sleeps each frame until its scheduled release;
+/// otherwise writes everything back-to-back (`--max-speed`). Returns
+/// the release time of the last frame (offered duration, seconds).
+pub fn write_stream<W: Write>(cfg: &LoadgenConfig, out: &mut W, pace: bool) -> io::Result<f64> {
+    let (bytes, offsets, release) = generate(cfg);
+    let start = Instant::now();
+    for i in 0..release.len() {
+        if pace && cfg.rate > 0.0 {
+            let due = Duration::from_secs_f64(release[i]);
+            let elapsed = start.elapsed();
+            if due > elapsed {
+                std::thread::sleep(due - elapsed);
+            }
+        }
+        out.write_all(&bytes[offsets[i]..offsets[i + 1]])?;
+        out.flush()?;
+    }
+    Ok(release.last().copied().unwrap_or(0.0))
+}
+
+/// A [`Read`] source that releases each frame at its scheduled time —
+/// the in-process open-loop driver behind `bench --only serve`, where
+/// spawning a real `loadgen | serve` pipe would make the benchmark
+/// depend on process plumbing.
+pub struct PacedReader {
+    bytes: Vec<u8>,
+    offsets: Vec<usize>,
+    release: Vec<f64>,
+    /// Next frame index to release.
+    frame: usize,
+    /// Read cursor within released bytes.
+    pos: usize,
+    start: Instant,
+}
+
+impl PacedReader {
+    pub fn new(cfg: &LoadgenConfig) -> PacedReader {
+        let (bytes, offsets, release) = generate(cfg);
+        PacedReader { bytes, offsets, release, frame: 0, pos: 0, start: Instant::now() }
+    }
+}
+
+impl Read for PacedReader {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.bytes.len() {
+            return Ok(0); // EOF
+        }
+        // Release every frame already due; if none is pending, sleep
+        // until the next one (open loop: the schedule never waits for
+        // the consumer).
+        if self.pos >= self.offsets[self.frame.min(self.release.len())] {
+            while self.frame < self.release.len() {
+                let due = Duration::from_secs_f64(self.release[self.frame]);
+                let elapsed = self.start.elapsed();
+                if due > elapsed {
+                    if self.offsets[self.frame] > self.pos {
+                        break; // already have released bytes to hand out
+                    }
+                    std::thread::sleep(due - elapsed);
+                }
+                self.frame += 1;
+            }
+        }
+        let avail_to = if self.frame < self.offsets.len() {
+            self.offsets[self.frame]
+        } else {
+            self.bytes.len()
+        };
+        let n = buf.len().min(avail_to - self.pos);
+        buf[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> LoadgenConfig {
+        LoadgenConfig {
+            requests: 24,
+            rate: 1000.0,
+            seed,
+            mix: vec![ReqKind::Scenario, ReqKind::Ldpc, ReqKind::Bmvm],
+            ..LoadgenConfig::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_and_rate_never_changes_bytes() {
+        let (a, ao, ar) = generate(&cfg(7));
+        let (b, bo, br) = generate(&cfg(7));
+        assert_eq!(a, b);
+        assert_eq!(ao, bo);
+        assert_eq!(ar, br);
+        // A different rate reshapes only the schedule.
+        let (c, co, cr) = generate(&LoadgenConfig { rate: 10.0, ..cfg(7) });
+        assert_eq!(a, c);
+        assert_eq!(ao, co);
+        assert_ne!(ar, cr);
+        // A flood run has the same bytes and an all-zero schedule.
+        let (d, _, dr) = generate(&LoadgenConfig { rate: 0.0, ..cfg(7) });
+        assert_eq!(a, d);
+        assert!(dr.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let (a, _, _) = generate(&cfg(7));
+        let (b, _, _) = generate(&cfg(8));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn arrival_times_are_monotone_and_near_rate() {
+        let c = LoadgenConfig { requests: 400, rate: 2000.0, ..cfg(3) };
+        let (_, _, times) = generate(&c);
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0], "arrivals must be non-decreasing");
+        }
+        let span = *times.last().unwrap();
+        let achieved = (times.len() - 1) as f64 / span;
+        assert!(
+            (achieved - 2000.0).abs() < 600.0,
+            "400 Poisson arrivals at 2000/s spanned {span:.4}s ({achieved:.0}/s)"
+        );
+    }
+
+    #[test]
+    fn bursty_schedule_stretches_the_timeline() {
+        let base = LoadgenConfig { requests: 200, rate: 2000.0, ..cfg(5) };
+        let (_, _, poisson) = generate(&base);
+        let bursty = LoadgenConfig {
+            arrivals: ArrivalModel::Bursty { on_ms: 10, off_ms: 30 },
+            ..base
+        };
+        let (_, _, burst) = generate(&bursty);
+        for w in burst.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(
+            burst.last().unwrap() > poisson.last().unwrap(),
+            "off-windows must stretch the schedule"
+        );
+    }
+
+    #[test]
+    fn generated_frames_decode_and_are_served() {
+        let c = LoadgenConfig {
+            requests: 8,
+            rate: 0.0,
+            mix: vec![ReqKind::Scenario, ReqKind::Ldpc, ReqKind::Pfilter, ReqKind::Bmvm],
+            ..cfg(11)
+        };
+        let (bytes, _, _) = generate(&c);
+        let scfg = super::super::ServeConfig {
+            admission: super::super::Admission::Block,
+            ..Default::default()
+        };
+        let (out, summary) = super::super::serve_bytes(&scfg, &bytes).unwrap();
+        assert_eq!(summary.arrived, 8);
+        assert_eq!(summary.served, 8);
+        assert_eq!(summary.errors, 0, "loadgen must emit only servable requests");
+        let resps = super::super::parse_responses(&out).unwrap();
+        assert_eq!(resps.len(), 8);
+    }
+
+    #[test]
+    fn write_stream_unpaced_matches_generate() {
+        let c = cfg(9);
+        let (bytes, _, _) = generate(&c);
+        let mut sink = Vec::new();
+        write_stream(&c, &mut sink, false).unwrap();
+        assert_eq!(sink, bytes);
+    }
+
+    #[test]
+    fn paced_reader_yields_the_exact_stream() {
+        let c = LoadgenConfig { requests: 12, rate: 0.0, ..cfg(13) };
+        let (bytes, _, _) = generate(&c);
+        let mut r = PacedReader::new(&c);
+        let mut got = Vec::new();
+        r.read_to_end(&mut got).unwrap();
+        assert_eq!(got, bytes);
+    }
+
+    #[test]
+    fn req_kind_parse() {
+        assert_eq!(ReqKind::parse("scenario"), Some(ReqKind::Scenario));
+        assert_eq!(ReqKind::parse("ldpc"), Some(ReqKind::Ldpc));
+        assert_eq!(ReqKind::parse("pfilter"), Some(ReqKind::Pfilter));
+        assert_eq!(ReqKind::parse("bmvm"), Some(ReqKind::Bmvm));
+        assert_eq!(ReqKind::parse("noc"), None);
+    }
+}

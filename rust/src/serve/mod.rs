@@ -1,0 +1,898 @@
+//! `fabricflow serve` — a long-lived service front-end over the warm
+//! replica machinery.
+//!
+//! Everything else in the crate is batch: build a fabric, run one
+//! workload, exit. This module is the layer that turns the simulator
+//! into the network-attached accelerator *service* the paper's
+//! deployment story implies (FPGAs fronted by a transport stack, many
+//! clients sharing one fabric): a resident process holds a pool of warm
+//! [`SharedFabric`] replicas — route table tabulated once, one
+//! [`Network`] per worker thread, [`Network::reset`] between requests,
+//! zero allocations in the steady state — and serves a stream of typed
+//! requests framed by [`hostlink`] over any byte stream (stdin/stdout,
+//! a Unix socket, or an in-memory buffer in tests and benches).
+//!
+//! Three properties are load-bearing and tested:
+//!
+//! 1. **Bit-identity with batch.** Every request is served by literally
+//!    the batch code path — [`scenario::replay`] on a reset replica for
+//!    [`hostlink::ScenarioRequest`] (a reset replica is provably a fresh
+//!    network), `LdpcNocDecoder::decode` / `PfilterNocTracker::track` /
+//!    `BmvmSystem::run` for the app requests — with all seeding carried
+//!    in the request. `tests/serve_stream.rs` proves responses are
+//!    byte-identical to the batch path for every request type and any
+//!    thread count.
+//! 2. **Deterministic output order.** The reader assigns each frame a
+//!    sequence number at arrival; a reordering emitter writes responses
+//!    strictly in that order, so the complete response stream is
+//!    byte-identical no matter how many workers raced on the queue.
+//! 3. **Bounded admission.** The job queue never grows past
+//!    [`ServeConfig::queue_cap`]: [`Admission::Reject`] answers excess
+//!    requests with a backpressure frame immediately (open-loop
+//!    clients, the `loadgen` default), [`Admission::Block`] stops
+//!    reading input until a slot frees (closed-loop pipes, differential
+//!    tests).
+//!
+//! Service latency (enqueue → response encoded) is recorded per request
+//! in **microseconds** through the same power-of-two histogram the NoC
+//! uses for flit latency ([`NetStats`]), so the service report gets
+//! p50/p95/p99/max for free; `fabricflow bench --only serve` writes the
+//! latency-vs-offered-load matrix into the `"serve"` section of
+//! `BENCH_noc.json`. See README §Serving and EXPERIMENTS.md §Serving.
+
+pub mod hostlink;
+pub mod loadgen;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::apps::bmvm::{BmvmSystem, WilliamsLuts};
+use crate::apps::ldpc::LdpcNocDecoder;
+use crate::apps::pfilter::{synthetic_video, PfilterNocTracker, TrackerParams};
+use crate::gf2::Gf2Matrix;
+use crate::noc::scenario::{self, EjectRecord, Scenario, Trace};
+use crate::noc::{NetStats, Network, NocConfig, SharedFabric, SimEngine, Topology};
+use crate::util::Rng;
+
+use hostlink::{
+    decode_frame, BmvmRequest, BmvmResponse, CodecError, LdpcRequest, LdpcResponse,
+    PfilterRequest, PfilterResponse, Request, Response, ScenarioRequest, ScenarioResponse,
+    ServeErrorCode, MAGIC,
+};
+
+/// What happens to a request that finds the bounded queue full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Stop reading input until a slot frees (closed-loop clients; the
+    /// response stream stays fully deterministic).
+    Block,
+    /// Answer immediately with a `Rejected` backpressure frame carrying
+    /// the queue depth (open-loop clients; which requests are rejected
+    /// depends on real-time arrival vs service timing).
+    Reject,
+}
+
+impl Admission {
+    pub fn parse(s: &str) -> Option<Admission> {
+        match s {
+            "block" => Some(Admission::Block),
+            "reject" => Some(Admission::Reject),
+            _ => None,
+        }
+    }
+}
+
+/// The server-resident BMVM system ([`hostlink::BmvmRequest`] carries
+/// only `r` and the vector): matrix seeded here, preprocessed into
+/// Williams LUTs once per worker at startup. Every worker derives the
+/// identical matrix from the seed, so responses are worker-agnostic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BmvmResident {
+    /// Matrix dimension n (vector length requests must match).
+    pub n: usize,
+    /// Williams tile size k.
+    pub k: usize,
+    /// PE count (must divide ceil(n/k)).
+    pub pes: usize,
+    /// Topology family: `ring`, `mesh`, `torus`, or `fat-tree`.
+    pub topo: String,
+    /// Matrix seed.
+    pub seed: u64,
+}
+
+impl Default for BmvmResident {
+    fn default() -> Self {
+        BmvmResident { n: 32, k: 8, pes: 4, topo: "ring".into(), seed: 0xB14B }
+    }
+}
+
+impl BmvmResident {
+    /// `Err` describes the first invalid parameter (surfaced as a CLI
+    /// usage error instead of a deep assert).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.n > 4096 {
+            return Err(format!("bmvm n {} out of range 1..=4096", self.n));
+        }
+        if !(1..=16).contains(&self.k) {
+            return Err(format!("bmvm k {} out of range 1..=16", self.k));
+        }
+        let blocks = crate::util::div_ceil(self.n, self.k);
+        if self.pes == 0 || blocks % self.pes != 0 {
+            return Err(format!(
+                "bmvm pes {} must divide the {} blocks of n={} k={}",
+                self.pes, blocks, self.n, self.k
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the resident system (deterministic in the config).
+    pub fn build(&self) -> BmvmSystem {
+        let a = Gf2Matrix::random(self.n, self.n, &mut Rng::new(self.seed));
+        let luts = WilliamsLuts::preprocess(&a, self.k);
+        let topo = BmvmSystem::topology_for(&self.topo, self.pes);
+        BmvmSystem::new(luts, self.pes, topo)
+    }
+}
+
+/// Configuration of one `fabricflow serve` process.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads, i.e. warm fabric replicas.
+    pub threads: usize,
+    /// Bounded queue capacity (admission control threshold).
+    pub queue_cap: usize,
+    pub admission: Admission,
+    /// Resident fabric scenario requests replay on.
+    pub topo: Topology,
+    pub noc: NocConfig,
+    pub bmvm: BmvmResident,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            threads: 2,
+            queue_cap: 64,
+            admission: Admission::Reject,
+            topo: Topology::Mesh { w: 4, h: 4 },
+            noc: NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() },
+            bmvm: BmvmResident::default(),
+        }
+    }
+}
+
+/// One worker's resident state: a warm fabric replica plus reusable
+/// scratch. After the first request of each shape has grown the scratch
+/// buffers, serving a scenario request performs **zero** heap
+/// allocations (`tests/alloc_free.rs`); the app requests run the batch
+/// flow-builder paths, which allocate exactly as batch does.
+pub struct Worker {
+    net: Network,
+    registry: Vec<Scenario>,
+    trace: Trace,
+    ejects: Vec<EjectRecord>,
+    bmvm: BmvmSystem,
+}
+
+impl Worker {
+    pub fn new(cfg: &ServeConfig, fabric: &SharedFabric) -> Worker {
+        Worker {
+            net: fabric.network(cfg.noc),
+            registry: scenario::registry(),
+            trace: Trace::default(),
+            ejects: Vec::new(),
+            bmvm: cfg.bmvm.build(),
+        }
+    }
+
+    /// A worker with its own private fabric (tests, single-shot tools).
+    pub fn standalone(cfg: &ServeConfig) -> Worker {
+        Worker::new(cfg, &SharedFabric::new(&cfg.topo))
+    }
+}
+
+fn err(code: ServeErrorCode) -> Response {
+    Response::Error { code }
+}
+
+/// Serve one typed request on a warm worker. Pure (given the worker's
+/// resident config): the response is a function of the request alone,
+/// which is what makes pool output thread-count invariant.
+pub fn serve_request(w: &mut Worker, req: &Request) -> Response {
+    match req {
+        Request::Scenario(q) => serve_scenario(w, q),
+        Request::Ldpc(q) => serve_ldpc(q),
+        Request::Pfilter(q) => serve_pfilter(q),
+        Request::Bmvm(q) => serve_bmvm(w, q),
+    }
+}
+
+fn serve_scenario(w: &mut Worker, q: &ScenarioRequest) -> Response {
+    let Some(&scn) = w.registry.get(q.scenario as usize) else {
+        return err(ServeErrorCode::UnknownScenario);
+    };
+    if !(q.load.is_finite() && q.load >= 0.0) || q.cycles == 0 || q.cycles > 10_000_000 {
+        return err(ServeErrorCode::BadParams);
+    }
+    // Exactly the batch `run_scenario` recipe, on a reset replica
+    // instead of a fresh network (bit-identical by PR 5's reset proof):
+    // same trace, same drain budget, same counters.
+    w.net.reset();
+    scn.trace_into(w.net.n_endpoints(), q.load, q.cycles, q.seed, &mut w.trace);
+    let budget = q.cycles.saturating_mul(50) + 100_000;
+    let cycles = match scenario::replay(&mut w.net, &w.trace, budget) {
+        Ok(c) => c,
+        Err(_) => return err(ServeErrorCode::Stalled),
+    };
+    scenario::drain_all_into(&mut w.net, &mut w.ejects);
+    let st = w.net.stats();
+    Response::Scenario(ScenarioResponse {
+        cycles,
+        injected: st.injected,
+        delivered: st.delivered,
+        p50: st.p50(),
+        p95: st.p95(),
+        p99: st.p99(),
+        eject_digest: scenario::eject_digest(&w.ejects),
+    })
+}
+
+fn serve_ldpc(q: &LdpcRequest) -> Response {
+    if q.niter < 1 || q.niter > 1_000 {
+        return err(ServeErrorCode::BadParams);
+    }
+    let dec = LdpcNocDecoder::fano_on_mesh(q.variant, q.niter);
+    if q.llr.len() != dec.code.n {
+        return err(ServeErrorCode::BadLlrLength);
+    }
+    let run = dec.decode(&q.llr, None);
+    Response::Ldpc(LdpcResponse {
+        cycles: run.report.cycles,
+        valid_codeword: run.result.valid_codeword,
+        bits: run.result.bits,
+        sums: run.result.sums,
+    })
+}
+
+fn serve_pfilter(q: &PfilterRequest) -> Response {
+    let bounded = (16..=1024).contains(&q.width)
+        && (16..=1024).contains(&q.height)
+        && (2..=256).contains(&q.frames)
+        && (1..=64).contains(&q.obj_r)
+        && (1..=16_384).contains(&q.n_particles)
+        && (1..=64).contains(&q.roi_r)
+        && (1..=256).contains(&q.workers)
+        && q.sigma.is_finite()
+        && q.sigma > 0.0;
+    if !bounded {
+        return err(ServeErrorCode::BadParams);
+    }
+    let video = synthetic_video(
+        q.width as usize,
+        q.height as usize,
+        q.frames as usize,
+        q.obj_r as i32,
+        q.vseed,
+    );
+    let params = TrackerParams {
+        n_particles: q.n_particles as usize,
+        sigma: q.sigma,
+        roi_r: q.roi_r,
+        seed: q.seed,
+    };
+    let run = PfilterNocTracker::on_mesh(q.workers as usize, params).track(
+        &video,
+        video.truth[0],
+        None,
+    );
+    Response::Pfilter(PfilterResponse { cycles: run.report.cycles, centers: run.centers })
+}
+
+fn serve_bmvm(w: &Worker, q: &BmvmRequest) -> Response {
+    if q.r < 1 || q.r > 4_096 {
+        return err(ServeErrorCode::BadParams);
+    }
+    if q.v.len() != w.bmvm.luts.n {
+        return err(ServeErrorCode::BadVectorLength);
+    }
+    let run = w.bmvm.run(&q.v, q.r, None);
+    Response::Bmvm(BmvmResponse {
+        cycles: run.report.cycles,
+        time_ms: run.time_ms,
+        result: run.result,
+    })
+}
+
+/// End-of-run service report.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    /// Well-formed request frames that arrived.
+    pub arrived: u64,
+    /// Requests answered with a typed result.
+    pub served: u64,
+    /// Requests turned away by admission control.
+    pub rejected: u64,
+    /// Requests answered with an `Error` frame.
+    pub errors: u64,
+    /// Codec-level corrupt frames skipped by resynchronization.
+    pub corrupt: u64,
+    /// Deepest the bounded queue ever got.
+    pub queue_high_water: usize,
+    /// Wall-clock duration of the whole stream, seconds.
+    pub wall_s: f64,
+    /// Service latency (enqueue → response encoded) in **microseconds**,
+    /// in the NoC's power-of-two histogram; `latency_us.p99()` etc.
+    pub latency_us: NetStats,
+}
+
+impl ServeSummary {
+    /// Served responses per wall-clock second.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.served as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of arrived requests rejected (0 when none arrived).
+    pub fn rejection_rate(&self) -> f64 {
+        if self.arrived > 0 {
+            self.rejected as f64 / self.arrived as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Human-readable report (the `fabricflow serve` stderr printout —
+    /// stdout carries response frames).
+    pub fn render(&self) -> String {
+        format!(
+            "serve: {} arrived | {} served ({:.0} req/s) | {} rejected ({:.1}%) | {} errors | {} corrupt\n\
+             serve: latency us p50 {} p95 {} p99 {} max {} | queue high-water {} | {:.3} s",
+            self.arrived,
+            self.served,
+            self.achieved_rps(),
+            self.rejected,
+            self.rejection_rate() * 100.0,
+            self.errors,
+            self.corrupt,
+            self.latency_us.p50(),
+            self.latency_us.p95(),
+            self.latency_us.p99(),
+            self.latency_us.max_latency,
+            self.queue_high_water,
+            self.wall_s,
+        )
+    }
+}
+
+struct Job {
+    seq: u64,
+    id: u32,
+    req: Request,
+    t0: Instant,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    done: bool,
+    high_water: usize,
+}
+
+struct Gate {
+    queue: Mutex<QueueState>,
+    can_pop: Condvar,
+    can_push: Condvar,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Class {
+    Served,
+    ErrorResp,
+    Rejected,
+}
+
+struct EmitState<W: Write> {
+    next: u64,
+    pending: BTreeMap<u64, Vec<u8>>,
+    out: W,
+    io_err: Option<io::Error>,
+    served: u64,
+    errors: u64,
+    rejected: u64,
+    latency_us: NetStats,
+}
+
+/// Writes response frames strictly in arrival-sequence order, whatever
+/// order workers finish in — the mechanism behind the byte-identical-
+/// for-any-thread-count guarantee.
+struct Emitter<W: Write> {
+    state: Mutex<EmitState<W>>,
+}
+
+impl<W: Write> Emitter<W> {
+    fn new(out: W) -> Self {
+        Emitter {
+            state: Mutex::new(EmitState {
+                next: 0,
+                pending: BTreeMap::new(),
+                out,
+                io_err: None,
+                served: 0,
+                errors: 0,
+                rejected: 0,
+                latency_us: NetStats::default(),
+            }),
+        }
+    }
+
+    fn emit(&self, seq: u64, buf: &[u8], class: Class, latency_us: u64) {
+        let mut st = self.state.lock().expect("emitter poisoned");
+        match class {
+            Class::Served => {
+                st.served += 1;
+                st.latency_us.record_delivery(latency_us);
+            }
+            Class::ErrorResp => st.errors += 1,
+            Class::Rejected => st.rejected += 1,
+        }
+        if st.io_err.is_some() {
+            // Output is dead; keep the sequence advancing so the run
+            // still drains and reports.
+            if seq == st.next {
+                st.next += 1;
+                while st.pending.remove(&st.next).is_some() {
+                    st.next += 1;
+                }
+            } else {
+                st.pending.insert(seq, Vec::new());
+            }
+            return;
+        }
+        if seq == st.next {
+            if let Err(e) = st.out.write_all(buf) {
+                st.io_err = Some(e);
+            }
+            st.next += 1;
+            while let Some(b) = st.pending.remove(&st.next) {
+                if st.io_err.is_none() {
+                    if let Err(e) = st.out.write_all(&b) {
+                        st.io_err = Some(e);
+                    }
+                }
+                st.next += 1;
+            }
+        } else {
+            st.pending.insert(seq, buf.to_vec());
+        }
+    }
+}
+
+/// Push a job under admission control. Returns the job back when it was
+/// rejected (so the reader can answer with a backpressure frame).
+fn admit(gate: &Gate, cap: usize, admission: Admission, job: Job) -> Result<(), (Job, u32)> {
+    let mut q = gate.queue.lock().expect("queue poisoned");
+    loop {
+        if q.jobs.len() < cap {
+            q.jobs.push_back(job);
+            let depth = q.jobs.len();
+            q.high_water = q.high_water.max(depth);
+            gate.can_pop.notify_one();
+            return Ok(());
+        }
+        match admission {
+            Admission::Reject => {
+                let depth = q.jobs.len() as u32;
+                return Err((job, depth));
+            }
+            Admission::Block => {
+                q = gate.can_push.wait(q).expect("queue poisoned");
+            }
+        }
+    }
+}
+
+fn next_job(gate: &Gate) -> Option<Job> {
+    let mut q = gate.queue.lock().expect("queue poisoned");
+    loop {
+        if let Some(j) = q.jobs.pop_front() {
+            gate.can_push.notify_one();
+            return Some(j);
+        }
+        if q.done {
+            return None;
+        }
+        q = gate.can_pop.wait(q).expect("queue poisoned");
+    }
+}
+
+/// Scan forward for the next plausible frame start (the magic bytes)
+/// after a corrupt frame. Returns the new cursor.
+fn resync(buf: &[u8], from: usize) -> usize {
+    let m = MAGIC.to_le_bytes();
+    let mut i = from;
+    while i + 1 < buf.len() {
+        if buf[i] == m[0] && buf[i + 1] == m[1] {
+            return i;
+        }
+        i += 1;
+    }
+    buf.len().saturating_sub(1).max(from)
+}
+
+/// Serve a framed request stream: decode frames off `input`, dispatch
+/// onto `threads` warm workers under bounded-queue admission, write
+/// response frames to `output` in arrival order. Returns when `input`
+/// reaches EOF and every admitted job has been answered.
+pub fn serve_stream<R: Read, W: Write + Send>(
+    cfg: &ServeConfig,
+    mut input: R,
+    output: W,
+) -> io::Result<ServeSummary> {
+    let started = Instant::now();
+    let fabric = SharedFabric::new(&cfg.topo);
+    let gate = Gate {
+        queue: Mutex::new(QueueState {
+            jobs: VecDeque::with_capacity(cfg.queue_cap.max(1)),
+            done: false,
+            high_water: 0,
+        }),
+        can_pop: Condvar::new(),
+        can_push: Condvar::new(),
+    };
+    let emitter = Emitter::new(output);
+    let threads = cfg.threads.max(1);
+    let cap = cfg.queue_cap.max(1);
+
+    let mut arrived = 0u64;
+    let mut corrupt = 0u64;
+    let mut read_err: Option<io::Error> = None;
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut w = Worker::new(cfg, &fabric);
+                let mut out_buf: Vec<u8> = Vec::with_capacity(1024);
+                while let Some(job) = next_job(&gate) {
+                    let resp = serve_request(&mut w, &job.req);
+                    out_buf.clear();
+                    resp.encode(job.id, &mut out_buf);
+                    let us = job.t0.elapsed().as_micros() as u64;
+                    let class = match resp {
+                        Response::Error { .. } => Class::ErrorResp,
+                        _ => Class::Served,
+                    };
+                    emitter.emit(job.seq, &out_buf, class, us);
+                }
+            });
+        }
+
+        // Reader runs on the scope's own thread.
+        let mut buf: Vec<u8> = Vec::with_capacity(64 * 1024);
+        let mut start = 0usize;
+        let mut eof = false;
+        let mut seq = 0u64;
+        let mut scratch = Vec::new();
+        loop {
+            match decode_frame(&buf[start..]) {
+                Ok((frame, used)) => {
+                    let t0 = Instant::now();
+                    if frame.kind.is_request() {
+                        match Request::decode(&frame) {
+                            Ok(req) => {
+                                arrived += 1;
+                                let job = Job { seq, id: frame.id, req, t0 };
+                                if let Err((job, depth)) = admit(&gate, cap, cfg.admission, job) {
+                                    scratch.clear();
+                                    Response::Rejected { queue_depth: depth }
+                                        .encode(job.id, &mut scratch);
+                                    emitter.emit(job.seq, &scratch, Class::Rejected, 0);
+                                }
+                            }
+                            Err(_) => {
+                                scratch.clear();
+                                err(ServeErrorCode::Malformed).encode(frame.id, &mut scratch);
+                                emitter.emit(seq, &scratch, Class::ErrorResp, 0);
+                            }
+                        }
+                    } else {
+                        scratch.clear();
+                        err(ServeErrorCode::UnexpectedKind).encode(frame.id, &mut scratch);
+                        emitter.emit(seq, &scratch, Class::ErrorResp, 0);
+                    }
+                    seq += 1;
+                    start += used;
+                }
+                Err(CodecError::Truncated { .. }) => {
+                    if eof {
+                        if start < buf.len() {
+                            corrupt += 1; // trailing partial frame
+                        }
+                        break;
+                    }
+                    if start > 0 {
+                        buf.drain(..start);
+                        start = 0;
+                    }
+                    let mut chunk = [0u8; 16 * 1024];
+                    match input.read(&mut chunk) {
+                        Ok(0) => eof = true,
+                        Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                        Err(e) => {
+                            read_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                Err(_) => {
+                    corrupt += 1;
+                    let next = resync(&buf, start + 1);
+                    if next <= start {
+                        break; // nothing decodable remains
+                    }
+                    start = next;
+                }
+            }
+        }
+        let mut q = gate.queue.lock().expect("queue poisoned");
+        q.done = true;
+        gate.can_pop.notify_all();
+    });
+
+    if let Some(e) = read_err {
+        return Err(e);
+    }
+    let mut st = emitter.state.into_inner().expect("emitter poisoned");
+    if let Some(e) = st.io_err.take() {
+        return Err(e);
+    }
+    st.out.flush()?;
+    let q = gate.queue.into_inner().expect("queue poisoned");
+    Ok(ServeSummary {
+        arrived,
+        served: st.served,
+        rejected: st.rejected,
+        errors: st.errors,
+        corrupt,
+        queue_high_water: q.high_water,
+        wall_s: started.elapsed().as_secs_f64(),
+        latency_us: st.latency_us,
+    })
+}
+
+/// [`serve_stream`] over in-memory buffers — the harness tests and the
+/// `"serve"` bench section use.
+pub fn serve_bytes(cfg: &ServeConfig, input: &[u8]) -> io::Result<(Vec<u8>, ServeSummary)> {
+    let mut out = Vec::new();
+    let summary = serve_stream(cfg, input, &mut out)?;
+    Ok((out, summary))
+}
+
+/// Split a response byte stream back into typed responses (client-side
+/// decode; loadgen's verification path and the tests use it).
+pub fn parse_responses(mut bytes: &[u8]) -> Result<Vec<(u32, Response)>, CodecError> {
+    let mut out = Vec::new();
+    while !bytes.is_empty() {
+        let (frame, used) = decode_frame(bytes)?;
+        out.push((frame.id, Response::decode(&frame)?));
+        bytes = &bytes[used..];
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::ldpc::minsum::MinsumVariant;
+    use crate::util::bits::BitVec;
+
+    fn block_cfg(threads: usize) -> ServeConfig {
+        ServeConfig { threads, admission: Admission::Block, ..ServeConfig::default() }
+    }
+
+    #[test]
+    fn scenario_request_matches_batch_run_scenario() {
+        let cfg = ServeConfig::default();
+        let mut w = Worker::standalone(&cfg);
+        let q = ScenarioRequest { scenario: 0, load: 0.1, cycles: 300, seed: 42 };
+        // Twice on the same worker: reset-reuse must not leak state.
+        for _ in 0..2 {
+            let resp = serve_request(&mut w, &Request::Scenario(q));
+            let scn = scenario::registry()[0];
+            let out =
+                scenario::run_scenario(&scn, &cfg.topo, cfg.noc, 0.1, 300, 42).unwrap();
+            match resp {
+                Response::Scenario(r) => {
+                    assert_eq!(r.cycles, out.report.cycles);
+                    assert_eq!(r.injected, out.report.net.injected);
+                    assert_eq!(r.delivered, out.report.net.delivered);
+                    assert_eq!(r.p50, out.report.net.p50());
+                    assert_eq!(r.p95, out.report.net.p95());
+                    assert_eq!(r.p99, out.report.net.p99());
+                    assert_eq!(r.eject_digest, scenario::eject_digest(&out.ejects));
+                }
+                other => panic!("expected scenario response, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ldpc_request_matches_batch_decoder() {
+        let cfg = ServeConfig::default();
+        let mut w = Worker::standalone(&cfg);
+        let llr = vec![100, -80, 60, -40, 20, -10, 5];
+        let req = Request::Ldpc(LdpcRequest {
+            niter: 4,
+            variant: MinsumVariant::PaperListing,
+            llr: llr.clone(),
+        });
+        let batch =
+            LdpcNocDecoder::fano_on_mesh(MinsumVariant::PaperListing, 4).decode(&llr, None);
+        match serve_request(&mut w, &req) {
+            Response::Ldpc(r) => {
+                assert_eq!(r.bits, batch.result.bits);
+                assert_eq!(r.sums, batch.result.sums);
+                assert_eq!(r.valid_codeword, batch.result.valid_codeword);
+                assert_eq!(r.cycles, batch.report.cycles);
+            }
+            other => panic!("expected ldpc response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bmvm_request_matches_resident_batch_system() {
+        let cfg = ServeConfig::default();
+        let mut w = Worker::standalone(&cfg);
+        let v = BitVec::random(cfg.bmvm.n, &mut Rng::new(5));
+        let batch = cfg.bmvm.build().run(&v, 3, None);
+        match serve_request(&mut w, &Request::Bmvm(BmvmRequest { r: 3, v })) {
+            Response::Bmvm(r) => {
+                assert_eq!(r.result, batch.result);
+                assert_eq!(r.cycles, batch.report.cycles);
+                assert_eq!(r.time_ms.to_bits(), batch.time_ms.to_bits());
+            }
+            other => panic!("expected bmvm response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_requests_get_typed_errors_not_panics() {
+        let cfg = ServeConfig::default();
+        let mut w = Worker::standalone(&cfg);
+        let cases = [
+            (
+                Request::Scenario(ScenarioRequest {
+                    scenario: 200,
+                    load: 0.1,
+                    cycles: 100,
+                    seed: 1,
+                }),
+                ServeErrorCode::UnknownScenario,
+            ),
+            (
+                Request::Ldpc(LdpcRequest {
+                    niter: 2,
+                    variant: MinsumVariant::SignMagnitude,
+                    llr: vec![1, 2, 3], // Fano wants 7
+                }),
+                ServeErrorCode::BadLlrLength,
+            ),
+            (
+                Request::Bmvm(BmvmRequest { r: 1, v: BitVec::zeros(5) }),
+                ServeErrorCode::BadVectorLength,
+            ),
+            (
+                Request::Bmvm(BmvmRequest { r: 0, v: BitVec::zeros(32) }),
+                ServeErrorCode::BadParams,
+            ),
+            (
+                Request::Pfilter(PfilterRequest {
+                    width: 0,
+                    height: 24,
+                    frames: 2,
+                    obj_r: 3,
+                    vseed: 1,
+                    n_particles: 8,
+                    sigma: 2.0,
+                    roi_r: 3,
+                    seed: 1,
+                    workers: 2,
+                }),
+                ServeErrorCode::BadParams,
+            ),
+        ];
+        for (req, want) in cases {
+            match serve_request(&mut w, &req) {
+                Response::Error { code } => assert_eq!(code, want, "{req:?}"),
+                other => panic!("{req:?}: expected error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stream_serves_mixed_requests_in_arrival_order() {
+        let cfg = block_cfg(2);
+        let reqs = vec![
+            Request::Scenario(ScenarioRequest { scenario: 0, load: 0.1, cycles: 200, seed: 1 }),
+            Request::Ldpc(LdpcRequest {
+                niter: 3,
+                variant: MinsumVariant::SignMagnitude,
+                llr: vec![90, -90, 70, -50, 30, -20, 10],
+            }),
+            Request::Bmvm(BmvmRequest {
+                r: 2,
+                v: BitVec::random(cfg.bmvm.n, &mut Rng::new(9)),
+            }),
+            Request::Scenario(ScenarioRequest { scenario: 5, load: 0.05, cycles: 150, seed: 7 }),
+        ];
+        let mut input = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            r.encode(100 + i as u32, &mut input);
+        }
+        let (out, summary) = serve_bytes(&cfg, &input).unwrap();
+        assert_eq!(summary.arrived, 4);
+        assert_eq!(summary.served, 4);
+        assert_eq!(summary.rejected, 0);
+        assert_eq!(summary.errors, 0);
+        assert_eq!(summary.corrupt, 0);
+        assert_eq!(summary.latency_us.delivered, 4);
+        let resps = parse_responses(&out).unwrap();
+        assert_eq!(resps.len(), 4);
+        // Arrival order and ids preserved; kinds match the requests.
+        for (i, (id, resp)) in resps.iter().enumerate() {
+            assert_eq!(*id, 100 + i as u32);
+            assert_eq!(resp.kind() as u8, reqs[i].kind() as u8 | 0x80);
+        }
+    }
+
+    #[test]
+    fn corrupt_and_unknown_frames_are_survived() {
+        let cfg = block_cfg(1);
+        let good = Request::Scenario(ScenarioRequest {
+            scenario: 0,
+            load: 0.05,
+            cycles: 100,
+            seed: 3,
+        });
+        let mut input = Vec::new();
+        good.encode(1, &mut input);
+        // Garbage between frames.
+        input.extend_from_slice(&[0x00, 0x11, 0x22, 0x33]);
+        good.encode(2, &mut input);
+        // A response frame sent to the server.
+        Response::Rejected { queue_depth: 9 }.encode(3, &mut input);
+        let (out, summary) = serve_bytes(&cfg, &input).unwrap();
+        assert_eq!(summary.served, 2);
+        assert_eq!(summary.errors, 1, "response-kind frame answered with an error");
+        assert!(summary.corrupt >= 1, "garbage must be counted");
+        let resps = parse_responses(&out).unwrap();
+        assert_eq!(resps.len(), 3);
+        assert!(matches!(resps[0].1, Response::Scenario(_)));
+        assert!(matches!(resps[1].1, Response::Scenario(_)));
+        assert!(
+            matches!(resps[2].1, Response::Error { code: ServeErrorCode::UnexpectedKind }),
+            "{:?}",
+            resps[2]
+        );
+    }
+
+    #[test]
+    fn admission_parse() {
+        assert_eq!(Admission::parse("block"), Some(Admission::Block));
+        assert_eq!(Admission::parse("reject"), Some(Admission::Reject));
+        assert_eq!(Admission::parse("drop"), None);
+    }
+
+    #[test]
+    fn bmvm_resident_validates() {
+        assert!(BmvmResident::default().validate().is_ok());
+        assert!(BmvmResident { n: 0, ..Default::default() }.validate().is_err());
+        assert!(BmvmResident { k: 17, ..Default::default() }.validate().is_err());
+        assert!(BmvmResident { pes: 3, ..Default::default() }.validate().is_err());
+    }
+}

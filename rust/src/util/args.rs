@@ -1,0 +1,245 @@
+//! Strict command-line flag parsing shared by every `fabricflow`
+//! subcommand.
+//!
+//! The binary used to parse flags ad hoc per subcommand, so a typo'd
+//! flag was silently ignored and a malformed value panicked deep inside
+//! `str::parse`. This helper makes both into typed usage errors the
+//! caller prints to stderr with a nonzero exit: each subcommand
+//! declares its accepted flags up front, [`parse`] walks the raw args
+//! once, and [`Parsed::get`] surfaces bad values as [`ArgError`]
+//! instead of a panic. Supports `--name value` and `--name=value`
+//! spellings plus bare switches.
+
+use std::fmt;
+
+/// One accepted flag.
+#[derive(Clone, Copy, Debug)]
+pub struct ArgSpec {
+    /// Flag name without the leading dashes (`"threads"`).
+    pub name: &'static str,
+    /// `true` for a bare switch (`--quick`), `false` for `--name value`.
+    pub switch: bool,
+}
+
+/// Declare a value-taking flag.
+pub const fn flag(name: &'static str) -> ArgSpec {
+    ArgSpec { name, switch: false }
+}
+
+/// Declare a bare switch.
+pub const fn switch(name: &'static str) -> ArgSpec {
+    ArgSpec { name, switch: true }
+}
+
+/// What went wrong, rendered verbatim under the usage banner.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ArgError {
+    UnknownFlag(String),
+    /// A positional argument where none is accepted.
+    Unexpected(String),
+    /// Value-taking flag at the end of the line.
+    MissingValue(String),
+    /// Value present but unparsable as the requested type.
+    BadValue { flag: String, value: String, want: &'static str },
+}
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArgError::UnknownFlag(s) => write!(f, "unknown flag '{s}'"),
+            ArgError::Unexpected(s) => write!(f, "unexpected argument '{s}'"),
+            ArgError::MissingValue(s) => write!(f, "flag '--{s}' needs a value"),
+            ArgError::BadValue { flag, value, want } => {
+                write!(f, "flag '--{flag}': cannot parse '{value}' as {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Parsed flag assignments, in command-line order (last wins on
+/// repeats).
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    vals: Vec<(&'static str, String)>,
+    switches: Vec<&'static str>,
+}
+
+/// Parse `args` (everything after the subcommand) against `spec`.
+pub fn parse(spec: &[ArgSpec], args: &[String]) -> Result<Parsed, ArgError> {
+    let mut out = Parsed::default();
+    let mut i = 0;
+    while i < args.len() {
+        let arg = &args[i];
+        let Some(name) = arg.strip_prefix("--") else {
+            return Err(ArgError::Unexpected(arg.clone()));
+        };
+        let (name, inline) = match name.split_once('=') {
+            Some((n, v)) => (n, Some(v)),
+            None => (name, None),
+        };
+        let Some(s) = spec.iter().find(|s| s.name == name) else {
+            return Err(ArgError::UnknownFlag(arg.clone()));
+        };
+        if s.switch {
+            if let Some(v) = inline {
+                return Err(ArgError::BadValue {
+                    flag: s.name.into(),
+                    value: v.into(),
+                    want: "no value (bare switch)",
+                });
+            }
+            out.switches.push(s.name);
+        } else {
+            let value = match inline {
+                Some(v) => v.to_string(),
+                None => {
+                    i += 1;
+                    match args.get(i) {
+                        Some(v) => v.clone(),
+                        None => return Err(ArgError::MissingValue(s.name.into())),
+                    }
+                }
+            };
+            out.vals.push((s.name, value));
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+impl Parsed {
+    /// Was the switch given?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|&s| s == name)
+    }
+
+    /// Raw value of the last `--name …` occurrence.
+    pub fn raw(&self, name: &str) -> Option<&str> {
+        self.vals.iter().rev().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Typed value: `Ok(None)` when absent, `Err` when present but
+    /// unparsable.
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, ArgError> {
+        match self.raw(name) {
+            None => Ok(None),
+            Some(v) => v.parse::<T>().map(Some).map_err(|_| ArgError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                want: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Typed value with a default when the flag is absent.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, ArgError> {
+        Ok(self.get(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list (`--mix scenario,ldpc`); `Ok(None)` when
+    /// absent, `Err` naming the first bad element.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, ArgError> {
+        let Some(raw) = self.raw(name) else { return Ok(None) };
+        let mut out = Vec::new();
+        for part in raw.split(',').filter(|p| !p.is_empty()) {
+            out.push(part.parse::<T>().map_err(|_| ArgError::BadValue {
+                flag: name.into(),
+                value: part.into(),
+                want: std::any::type_name::<T>(),
+            })?);
+        }
+        Ok(Some(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPEC: &[ArgSpec] = &[flag("threads"), flag("rate"), flag("mix"), switch("quick")];
+
+    #[test]
+    fn both_flag_spellings_parse() {
+        let p = parse(SPEC, &strs(&["--threads", "4", "--rate=250.5", "--quick"])).unwrap();
+        assert_eq!(p.get::<usize>("threads").unwrap(), Some(4));
+        assert_eq!(p.get::<f64>("rate").unwrap(), Some(250.5));
+        assert!(p.has("quick"));
+        assert!(!p.has("threads"));
+        assert_eq!(p.get::<usize>("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let p = parse(SPEC, &strs(&["--threads", "4", "--threads", "8"])).unwrap();
+        assert_eq!(p.get_or::<usize>("threads", 1).unwrap(), 8);
+    }
+
+    #[test]
+    fn defaults_apply_only_when_absent() {
+        let p = parse(SPEC, &strs(&[])).unwrap();
+        assert_eq!(p.get_or::<usize>("threads", 2).unwrap(), 2);
+        assert_eq!(p.get_or::<f64>("rate", 0.0).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error_not_ignored() {
+        match parse(SPEC, &strs(&["--treads", "4"])) {
+            Err(ArgError::UnknownFlag(s)) => assert_eq!(s, "--treads"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn positional_arguments_are_rejected() {
+        match parse(SPEC, &strs(&["surprise"])) {
+            Err(ArgError::Unexpected(s)) => assert_eq!(s, "surprise"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_and_bad_values_are_typed() {
+        match parse(SPEC, &strs(&["--threads"])) {
+            Err(ArgError::MissingValue(s)) => assert_eq!(s, "threads"),
+            other => panic!("{other:?}"),
+        }
+        let p = parse(SPEC, &strs(&["--threads", "many"])).unwrap();
+        match p.get::<usize>("threads") {
+            Err(ArgError::BadValue { flag, value, .. }) => {
+                assert_eq!(flag, "threads");
+                assert_eq!(value, "many");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn switch_with_inline_value_is_rejected() {
+        assert!(parse(SPEC, &strs(&["--quick=yes"])).is_err());
+    }
+
+    #[test]
+    fn lists_split_on_commas() {
+        let p = parse(SPEC, &strs(&["--mix", "1,2,3"])).unwrap();
+        assert_eq!(p.get_list::<u32>("mix").unwrap(), Some(vec![1, 2, 3]));
+        let p = parse(SPEC, &strs(&["--mix", "1,x"])).unwrap();
+        assert!(p.get_list::<u32>("mix").is_err());
+        let p = parse(SPEC, &strs(&[])).unwrap();
+        assert_eq!(p.get_list::<u32>("mix").unwrap(), None);
+    }
+
+    #[test]
+    fn errors_render_for_stderr() {
+        assert_eq!(ArgError::UnknownFlag("--x".into()).to_string(), "unknown flag '--x'");
+        assert_eq!(ArgError::MissingValue("rate".into()).to_string(), "flag '--rate' needs a value");
+        assert!(ArgError::BadValue { flag: "t".into(), value: "q".into(), want: "usize" }
+            .to_string()
+            .contains("cannot parse 'q' as usize"));
+    }
+}

@@ -16,11 +16,14 @@
 //!   replayed.
 //! * [`bits`] — packed bit-vector/bit-matrix helpers shared by the GF(2)
 //!   code and the SERDES pin model.
+//! * [`args`] — strict `--flag value` parsing shared by the `fabricflow`
+//!   subcommands (unknown flags and bad values are typed usage errors).
 
 pub mod rng;
 pub mod bench;
 pub mod prop;
 pub mod bits;
+pub mod args;
 
 pub use rng::Rng;
 

@@ -1,8 +1,9 @@
 //! Steady-state allocation audit: after warm-up, `Network::step` (both
-//! engines) and the hot PE `process` bodies must perform **zero** heap
-//! allocations — the acceptance criterion of the flat-arena /
-//! pooled-buffer work. A counting global allocator wraps `System`; each
-//! measured region snapshots the counter and asserts the delta is 0.
+//! engines), the hot PE `process` bodies, and the serve subsystem's
+//! decode→serve→encode loop must perform **zero** heap allocations —
+//! the acceptance criterion of the flat-arena / pooled-buffer work. A
+//! counting global allocator wraps `System`; each measured region
+//! snapshots the counter and asserts the delta is 0.
 //!
 //! This file deliberately contains a single `#[test]` so no concurrent
 //! test thread can pollute the global counter mid-measurement.
@@ -26,6 +27,8 @@ use fabricflow::partition::Partition;
 use fabricflow::pe::collector::ArgMessage;
 use fabricflow::pe::{MsgSink, OutMessage, Processor};
 use fabricflow::serdes::SerdesConfig;
+use fabricflow::serve::hostlink::{decode_frame, Request, Response, ScenarioRequest};
+use fabricflow::serve::{serve_request, ServeConfig, Worker};
 use fabricflow::util::bits::BitVec;
 use fabricflow::util::Rng;
 
@@ -399,6 +402,44 @@ fn pfilter_root_frame_loop_is_alloc_free() {
     assert_eq!(delta, 0, "PfRootPe frame loop allocated {delta} times");
 }
 
+fn serve_scenario_loop_is_alloc_free() {
+    // The resident-pool serving loop for the scenario request type:
+    // decode the wire frame, serve it on a warm replica (reset +
+    // trace_into + replay + drain, all into retained buffers), encode
+    // the response into a reused output buffer. After two warm-up
+    // rounds with the exact measured request, the whole
+    // request→response cycle must touch the heap zero times — the
+    // property that lets `fabricflow serve` hold tail latency flat.
+    let cfg = ServeConfig::default();
+    let mut w = Worker::standalone(&cfg);
+    let q = ScenarioRequest { scenario: 0, load: 0.05, cycles: 300, seed: 9 };
+    let mut frame = Vec::new();
+    Request::Scenario(q).encode(7, &mut frame);
+    let mut out: Vec<u8> = Vec::new();
+
+    let round = |w: &mut Worker, out: &mut Vec<u8>| {
+        let (raw, used) = decode_frame(&frame).expect("well-formed frame");
+        assert_eq!(used, frame.len());
+        let req = Request::decode(&raw).expect("scenario request");
+        let resp = serve_request(w, &req);
+        assert!(matches!(resp, Response::Scenario(_)));
+        out.clear();
+        resp.encode(raw.id, out);
+    };
+    for _ in 0..2 {
+        round(&mut w, &mut out);
+    }
+    let delta = count(|| {
+        for _ in 0..20 {
+            round(&mut w, &mut out);
+        }
+    });
+    assert_eq!(
+        delta, 0,
+        "serve loop (decode → serve → encode) allocated {delta} times after warm-up"
+    );
+}
+
 #[test]
 fn steady_state_simulation_does_not_allocate() {
     network_steady_state_is_alloc_free(SimEngine::Reference);
@@ -410,4 +451,5 @@ fn steady_state_simulation_does_not_allocate() {
     bmvm_epochs_are_alloc_free();
     pfilter_particle_path_is_alloc_free();
     pfilter_root_frame_loop_is_alloc_free();
+    serve_scenario_loop_is_alloc_free();
 }
