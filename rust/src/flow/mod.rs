@@ -43,13 +43,13 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::noc::flit::{depacketize, Flit, NodeId};
-use crate::noc::multichip::{LinkStat, MultiChipSim};
+use crate::noc::multichip::{LinkStat, MultiChipError, MultiChipSim};
 use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
 use crate::partition::Partition;
 use crate::pe::collector::split_tag;
 use crate::pe::{MultiChipPeSystem, PeSystem, Processor, WrappedPe};
 use crate::resources::{Device, Resources};
-use crate::serdes::{wire_bits, SerdesConfig};
+use crate::serdes::{wire_bits, FaultPlan, SerdesConfig};
 
 /// Errors surfaced by [`FlowBuilder::build`] and [`MappedFlow::run`]
 /// (instead of the low-level layer's panics).
@@ -63,6 +63,11 @@ pub enum FlowError {
     /// The system did not reach quiescence within the cycle budget
     /// (protocol deadlock / livelock guard).
     Timeout { cycles: u64, pending: usize },
+    /// An **unprotected** wire link delivered an unreconstructable frame
+    /// under fault injection ([`FlowBuilder::fault_plan`] with
+    /// [`FaultPlan::unprotected`]): the header was corrupted and there is
+    /// no CRC to trigger a retransmission.
+    Link { link: usize, cycle: u64 },
 }
 
 impl fmt::Display for FlowError {
@@ -73,6 +78,11 @@ impl fmt::Display for FlowError {
             FlowError::Timeout { cycles, pending } => write!(
                 f,
                 "flow not quiescent after {cycles} cycles ({pending} flits pending)"
+            ),
+            FlowError::Link { link, cycle } => write!(
+                f,
+                "unreconstructable frame on unprotected wire link {link} at cycle \
+                 {cycle} (enable CRC protection to retransmit instead)"
             ),
         }
     }
@@ -253,6 +263,7 @@ pub struct FlowBuilder {
     serdes: SerdesConfig,
     partition: PartitionSpec,
     multichip: bool,
+    fault: Option<FaultPlan>,
     pinned: Vec<(String, String)>,
     pes: Vec<PeSlot>,
     taps: Vec<TapSlot>,
@@ -273,6 +284,7 @@ impl FlowBuilder {
             serdes: SerdesConfig::default(),
             partition: PartitionSpec::Whole,
             multichip: false,
+            fault: None,
             pinned: Vec::new(),
             pes: Vec::new(),
             taps: Vec::new(),
@@ -370,6 +382,19 @@ impl FlowBuilder {
     pub fn multichip(&mut self, serdes: SerdesConfig) -> &mut Self {
         self.serdes = serdes;
         self.multichip = true;
+        self
+    }
+
+    /// Inject seeded faults on the sharded co-simulation's wire channels
+    /// (bit flips, flit drops, link/chip outage windows — see
+    /// [`FaultPlan`]). Protected plans (the default) add a CRC to the
+    /// wire format and recover every fault by retransmission, so the
+    /// flow's results are unchanged and only its timing degrades; an
+    /// [`FaultPlan::unprotected`] plan lets header corruption surface as
+    /// [`FlowError::Link`]. Requires [`FlowBuilder::multichip`] — the
+    /// monolithic backend has no inter-FPGA wires to be faulty.
+    pub fn fault_plan(&mut self, plan: FaultPlan) -> &mut Self {
+        self.fault = Some(plan);
         self
     }
 
@@ -603,6 +628,11 @@ impl FlowBuilder {
                 "multichip() needs a partition (partition()/auto_partition())".into(),
             ));
         }
+        if self.fault.is_some() && !self.multichip {
+            return Err(FlowError::Layout(
+                "fault_plan() needs the sharded co-simulation (multichip())".into(),
+            ));
+        }
         // Resolve channels to unit indices.
         let mut edges = Vec::with_capacity(self.channels.len());
         for (a, b, w) in &self.channels {
@@ -628,12 +658,11 @@ impl FlowBuilder {
         let cut_links = partition.as_ref().map_or(0, |p| p.cut_links(&graph).len());
         let mut sim = if self.multichip {
             let p = partition.as_ref().expect("checked above");
-            FlowSim::Sharded(MultiChipPeSystem::new(MultiChipSim::from_graph(
-                graph,
-                self.cfg,
-                p,
-                self.serdes,
-            )))
+            let mut mcs = MultiChipSim::from_graph(graph, self.cfg, p, self.serdes);
+            if let Some(plan) = &self.fault {
+                mcs.set_fault_plan(plan);
+            }
+            FlowSim::Sharded(MultiChipPeSystem::new(mcs))
         } else {
             let mut net = Network::new(&topo, self.cfg);
             if let Some(p) = &partition {
@@ -729,6 +758,15 @@ impl FlowSim {
         }
     }
 
+    /// Latched wire-link fault of a sharded backend (monolithic networks
+    /// have no lossy wires and always report `None`).
+    fn wire_error(&self) -> Option<MultiChipError> {
+        match self {
+            FlowSim::Mono(_) => None,
+            FlowSim::Sharded(sys) => sys.sim.wire_error(),
+        }
+    }
+
     fn eject(&mut self, node: NodeId) -> Option<Flit> {
         match self {
             FlowSim::Mono(sys) => sys.net.eject(node),
@@ -806,6 +844,11 @@ impl MappedFlow {
         let start = self.sim.cycle();
         while !self.sim.quiescent() {
             self.sim.step();
+            // A latched wire fault keeps the lost frame pending forever;
+            // surface it as a typed error instead of timing out.
+            if let Some(MultiChipError::Corrupt { link, cycle }) = self.sim.wire_error() {
+                return Err(FlowError::Link { link, cycle });
+            }
             if self.sim.cycle() - start > self.max_cycles {
                 return Err(FlowError::Timeout {
                     cycles: self.sim.cycle() - start,
@@ -1224,6 +1267,71 @@ mod tests {
         let add = sharded_report.pes.iter().find(|p| p.name == "add").unwrap();
         assert_eq!(add.invocations, 10);
         assert_eq!(add.fpga, 1);
+    }
+
+    #[test]
+    fn protected_faulty_wires_recover_the_clean_messages() {
+        // A seeded lossy fabric under CRC/retransmit protection must
+        // produce exactly the clean flow's reassembled messages, paying
+        // only in cycles.
+        let build = |fault: Option<FaultPlan>| -> MappedFlow {
+            let mut fb = FlowBuilder::new("lossy");
+            fb.topology(Topology::Mesh { w: 2, h: 2 })
+                .pe_at("src", 0, Box::new(Source { msgs: source_msgs(10, 3) }))
+                .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 2 }))
+                .tap_at("out", 2)
+                .partition(Partition::new(2, vec![0, 0, 1, 1]))
+                .multichip(SerdesConfig::default());
+            if let Some(p) = fault {
+                fb.fault_plan(p);
+            }
+            fb.build().unwrap()
+        };
+        let mut clean = build(None);
+        let clean_report = clean.run().unwrap();
+        let clean_msgs = clean.drain_messages("out", 16);
+
+        let plan = FaultPlan::new(0xD1CE).flips(0.01).drops(0.1);
+        let mut lossy = build(Some(plan));
+        let lossy_report = lossy.run().unwrap();
+        let lossy_msgs = lossy.drain_messages("out", 16);
+
+        assert_eq!(clean_msgs, lossy_msgs, "retransmission must hide the faults");
+        assert!(lossy_report.cycles > clean_report.cycles, "recovery costs cycles");
+        assert!(
+            lossy_report.links.iter().any(|l| l.retransmitted > 0),
+            "these rates must trigger replays: {:?}",
+            lossy_report.links
+        );
+    }
+
+    #[test]
+    fn unprotected_faults_surface_as_a_typed_link_error() {
+        let mut fb = FlowBuilder::new("unprot");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("src", 0, Box::new(Source { msgs: source_msgs(20, 3) }))
+            .pe_at("add", 3, Box::new(Adder { sink: 2, latency: 2 }))
+            .tap_at("out", 2)
+            .partition(Partition::new(2, vec![0, 0, 1, 1]))
+            .multichip(SerdesConfig::default())
+            .fault_plan(FaultPlan::new(99).flips(0.05).unprotected());
+        let mut flow = fb.build().unwrap();
+        match flow.run() {
+            Err(e @ FlowError::Link { .. }) => {
+                assert!(format!("{e}").contains("unprotected wire link"));
+            }
+            other => panic!("expected a link error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_plan_without_multichip_is_a_layout_error() {
+        let mut fb = FlowBuilder::new("nofault");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("src", 0, Box::new(Source { msgs: Vec::new() }))
+            .partition(Partition::new(2, vec![0, 0, 1, 1]))
+            .fault_plan(FaultPlan::new(1).flips(0.001));
+        assert!(matches!(fb.build(), Err(FlowError::Layout(_))));
     }
 
     #[test]

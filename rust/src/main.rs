@@ -11,6 +11,7 @@
 //! fabricflow scenarios --chips 2        # …sharded across FPGAs (multichip co-sim)
 //! fabricflow sweep --threads 8          # fleet: scenario × load × seed grid
 //! fabricflow sweep --chips 2 --pins 1,8 # …multichip grid across wire configs
+//! fabricflow sweep --chips 2 --fault-rates 0,0.01   # …degraded wires (CRC/retransmit)
 //! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
 //! fabricflow bench --only sweep         # …regenerate one section, keep the rest
 //! fabricflow serve --threads 2          # resident pool serving request frames
@@ -124,14 +125,15 @@ const COMMANDS: &[Command] = &[
             flag("chips"),
             flag("pins"),
             flag("clock-divs"),
+            flag("fault-rates"),
         ],
-        usage: "sweep [--topo NAME] [--engine reference|event] [--threads N] [--cycles N] [--loads a,b] [--seeds N] [--scenario NAME] [--chips N --pins p1,p2 --clock-divs d1,d2]",
+        usage: "sweep [--topo NAME] [--engine reference|event] [--threads N] [--cycles N] [--loads a,b] [--seeds N] [--scenario NAME] [--chips N --pins p1,p2 --clock-divs d1,d2 --fault-rates r1,r2]",
         run: cmd_sweep,
     },
     Command {
         name: "bench",
         spec: &[flag("out"), flag("only"), switch("quick")],
-        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve]",
+        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults]",
         run: cmd_bench,
     },
     Command {
@@ -394,12 +396,16 @@ fn cmd_scenarios(p: &Parsed) -> Result<(), String> {
             continue;
         }
         matched = true;
+        // Both arms surface failures as MultiChipError: the monolithic
+        // run can only stall, the sharded one can also hit an
+        // unreconstructable frame on an unprotected faulty wire.
         let outcome = match &partition {
             Some(part) => {
                 let sharding = scenario::Sharding { partition: part, serdes };
                 scenario::run_scenario_multichip(&scn, &topo, cfg, &sharding, load, cycles, seed)
             }
-            None => scenario::run_scenario(&scn, &topo, cfg, load, cycles, seed),
+            None => scenario::run_scenario(&scn, &topo, cfg, load, cycles, seed)
+                .map_err(fabricflow::noc::MultiChipError::from),
         };
         match outcome {
             Ok(out) => {
@@ -418,7 +424,7 @@ fn cmd_scenarios(p: &Parsed) -> Result<(), String> {
                     );
                 }
             }
-            Err(stall) => println!("  {:14} STALLED: {stall}", scn.name),
+            Err(e) => println!("  {:14} FAILED: {e}", scn.name),
         }
     }
     if !matched {
@@ -466,17 +472,28 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
                 serdes_points.push(SerdesConfig { pins: pin, clock_div: d, tx_buffer: 8 });
             }
         }
-        let cells = scenario::run_multichip_grid(&grid, &partition, &serdes_points, threads)
-            .map_err(|e| format!("multichip sweep stalled: {e}"))?;
+        // --fault-rates adds a degraded-wire axis: each nonzero rate
+        // seeds bit flips AND flit drops at that probability, recovered
+        // by CRC/retransmit (rate 0 = clean wires, no CRC overhead).
+        let rates: Vec<f64> =
+            p.get_list("fault-rates").map_err(bad)?.unwrap_or_else(|| vec![0.0]);
+        let cells = scenario::run_multichip_grid_faulty(
+            &grid,
+            &partition,
+            &serdes_points,
+            &rates,
+            threads,
+        )
+        .map_err(|e| format!("multichip sweep failed: {e}"))?;
         let mut agg = fabricflow::noc::NetStats::default();
         let rows: Vec<String> = cells
             .iter()
             .map(|c| {
                 agg.merge(&c.stats);
                 format!(
-                    "{:12} load {:<5} seed {:<3} {:>2} pins /{} div: {:>8} cyc {:>7} flits {:>6} wire | p50 {} p95 {} p99 {}",
-                    c.scenario, c.load, c.seed, c.pins, c.clock_div, c.cycles,
-                    c.stats.delivered, c.wire_flits,
+                    "{:12} load {:<5} seed {:<3} {:>2} pins /{} div fault {:<6} {:>8} cyc {:>7} flits {:>6} wire {:>5} retrans | p50 {} p95 {} p99 {}",
+                    c.scenario, c.load, c.seed, c.pins, c.clock_div, c.fault_rate, c.cycles,
+                    c.stats.delivered, c.wire_flits, c.retransmits,
                     c.stats.p50(), c.stats.p95(), c.stats.p99()
                 )
             })
@@ -527,7 +544,7 @@ fn cmd_bench(p: &Parsed) -> Result<(), String> {
     let out = p.raw("out").unwrap_or("BENCH_noc.json").to_string();
     let sel = match p.raw("only") {
         Some(s) => fabricflow::perf::BenchSelect::parse(s).ok_or_else(|| {
-            format!("bad --only '{s}' (comma-separated: points, multichip, sweep, serve)")
+            format!("bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults)")
         })?,
         None => fabricflow::perf::BenchSelect::ALL,
     };

@@ -35,7 +35,7 @@ pub mod traffic;
 
 pub use engine::Stalled;
 pub use flit::{Flit, NodeId};
-pub use multichip::{LinkStat, MultiChipSim};
+pub use multichip::{LinkStat, MultiChipError, MultiChipSim};
 pub use network::{Network, SharedFabric};
 pub use stats::NetStats;
 pub use topology::Topology;

@@ -25,7 +25,7 @@
 
 use super::engine::Stalled;
 use super::flit::Flit;
-use super::multichip::MultiChipSim;
+use super::multichip::{MultiChipError, MultiChipSim};
 use super::network::SharedFabric;
 use super::stats::NetStats;
 use super::traffic::Pattern;
@@ -33,7 +33,7 @@ use super::{Network, NocConfig, SimEngine, Topology};
 use crate::fleet;
 use crate::flow::RunReport;
 use crate::partition::Partition;
-use crate::serdes::SerdesConfig;
+use crate::serdes::{FaultPlan, SerdesConfig};
 use crate::util::Rng;
 
 /// One scheduled injection of a [`Trace`].
@@ -88,29 +88,82 @@ pub enum Workload {
     Bmvm,
 }
 
+/// Wire-fault regime of a degraded-mode [`Scenario`]. Rates are integer
+/// parts-per-million so `Scenario` stays `Copy + Eq`; convert to a
+/// concrete seeded [`FaultPlan`] with [`FaultSpec::plan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Per-wire-sample-bit flip probability, parts per million.
+    pub flip_ppm: u32,
+    /// Whole-flit drop probability per wire crossing, parts per million.
+    pub drop_ppm: u32,
+    /// Optional chip outage `(chip, from, until)`: every wire link
+    /// touching `chip` is down over cycles `[from, until)`.
+    pub chip_down: Option<(usize, u64, u64)>,
+}
+
+impl FaultSpec {
+    /// Concrete seeded plan. CRC protection is on: degraded scenarios
+    /// model the *protected* link, where corruption is detected and
+    /// replayed rather than delivered.
+    pub fn plan(&self, seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::new(seed ^ 0xFA17_0B5E_55ED_5EED)
+            .flips(self.flip_ppm as f64 * 1e-6)
+            .drops(self.drop_ppm as f64 * 1e-6);
+        if let Some((chip, from, until)) = self.chip_down {
+            plan = plan.chip_down(chip, from, until);
+        }
+        plan
+    }
+}
+
 /// A named workload in the registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Scenario {
     pub name: &'static str,
     pub workload: Workload,
+    /// Fault regime applied to the wire links when the scenario runs on
+    /// the sharded co-simulation (`None` = clean links). Monolithic runs
+    /// have no inter-FPGA wires and ignore it — which is exactly what
+    /// the differential suite exploits: a degraded sharded run must
+    /// still deliver the clean monolithic messages.
+    pub fault: Option<FaultSpec>,
 }
 
 /// Every named scenario. Adding an entry here automatically enrolls it
 /// in the differential engine matrix and the CLI.
 pub fn registry() -> Vec<Scenario> {
     vec![
-        Scenario { name: "uniform", workload: Workload::Synthetic(Pattern::Uniform) },
-        Scenario { name: "hotspot", workload: Workload::Synthetic(Pattern::Hotspot) },
-        Scenario { name: "tornado", workload: Workload::Synthetic(Pattern::Tornado) },
-        Scenario { name: "transpose", workload: Workload::Synthetic(Pattern::Transpose) },
+        Scenario { name: "uniform", workload: Workload::Synthetic(Pattern::Uniform), fault: None },
+        Scenario { name: "hotspot", workload: Workload::Synthetic(Pattern::Hotspot), fault: None },
+        Scenario { name: "tornado", workload: Workload::Synthetic(Pattern::Tornado), fault: None },
+        Scenario {
+            name: "transpose",
+            workload: Workload::Synthetic(Pattern::Transpose),
+            fault: None,
+        },
         Scenario {
             name: "bit-reverse",
             workload: Workload::Synthetic(Pattern::BitReverse),
+            fault: None,
         },
-        Scenario { name: "bursty", workload: Workload::Bursty { on: 32, off: 96 } },
-        Scenario { name: "ldpc-trace", workload: Workload::Ldpc },
-        Scenario { name: "pfilter-trace", workload: Workload::Pfilter },
-        Scenario { name: "bmvm-trace", workload: Workload::Bmvm },
+        Scenario { name: "bursty", workload: Workload::Bursty { on: 32, off: 96 }, fault: None },
+        Scenario { name: "ldpc-trace", workload: Workload::Ldpc, fault: None },
+        Scenario { name: "pfilter-trace", workload: Workload::Pfilter, fault: None },
+        Scenario { name: "bmvm-trace", workload: Workload::Bmvm, fault: None },
+        // Degraded-mode scenarios: same traffic families, lossy wires.
+        // New entries go at the END — serve and its tests index into the
+        // registry by position.
+        Scenario {
+            name: "degraded-uniform",
+            workload: Workload::Synthetic(Pattern::Uniform),
+            fault: Some(FaultSpec { flip_ppm: 200, drop_ppm: 5_000, chip_down: None }),
+        },
+        Scenario {
+            name: "degraded-chipdrop",
+            workload: Workload::Bursty { on: 32, off: 96 },
+            fault: Some(FaultSpec { flip_ppm: 0, drop_ppm: 0, chip_down: Some((1, 64, 448)) }),
+        },
     ]
 }
 
@@ -296,7 +349,7 @@ pub fn replay_multichip(
     sim: &mut MultiChipSim,
     trace: &Trace,
     drain_budget: u64,
-) -> Result<u64, Stalled> {
+) -> Result<u64, MultiChipError> {
     let start = sim.cycle();
     let jump = sim.cfg().engine == SimEngine::EventDriven;
     let mut i = 0;
@@ -424,8 +477,11 @@ pub fn run_scenario_multichip(
     load: f64,
     cycles: u64,
     seed: u64,
-) -> Result<ScenarioOutcome, Stalled> {
+) -> Result<ScenarioOutcome, MultiChipError> {
     let mut sim = MultiChipSim::new(topo, cfg, sharding.partition, sharding.serdes);
+    if let Some(spec) = scn.fault {
+        sim.set_fault_plan(&spec.plan(seed));
+    }
     let trace = scn.trace(sim.n_endpoints(), load, cycles, seed);
     // Serialization stretches drains well past the monolithic budget;
     // scale by the per-flit wire latency.
@@ -562,10 +618,15 @@ pub struct MultiGridCell {
     pub seed: u64,
     pub pins: u32,
     pub clock_div: u32,
+    /// Seeded wire-fault rate of this cell (both the per-sample-bit flip
+    /// probability and the whole-flit drop probability; 0 = clean links).
+    pub fault_rate: f64,
     pub cycles: u64,
     pub stats: NetStats,
     /// Flits carried over the cut-link wire channels.
     pub wire_flits: u64,
+    /// Wire-level replays (CRC NAKs + drop timeouts) summed over links.
+    pub retransmits: u64,
     pub eject_digest: u64,
 }
 
@@ -580,20 +641,41 @@ pub fn run_multichip_grid(
     partition: &Partition,
     serdes_points: &[SerdesConfig],
     threads: usize,
-) -> Result<Vec<MultiGridCell>, Stalled> {
+) -> Result<Vec<MultiGridCell>, MultiChipError> {
+    run_multichip_grid_faulty(grid, partition, serdes_points, &[0.0], threads)
+}
+
+/// [`run_multichip_grid`] additionally crossed with a wire-fault axis:
+/// each rate becomes a seeded [`FaultPlan`] that both flips sample bits
+/// and drops whole flits at that probability, with CRC/retransmit
+/// protection on — every cell still delivers everything, and the axis
+/// measures what the recovery costs (cycles, retransmits). Rate 0.0 is
+/// the clean fabric, bit-identical to [`run_multichip_grid`]; a clean
+/// cell whose *scenario* carries a [`FaultSpec`] (the `degraded-*`
+/// registry entries) uses that spec instead, matching the serial
+/// [`run_scenario_multichip`] path.
+pub fn run_multichip_grid_faulty(
+    grid: &SweepGrid,
+    partition: &Partition,
+    serdes_points: &[SerdesConfig],
+    fault_rates: &[f64],
+    threads: usize,
+) -> Result<Vec<MultiGridCell>, MultiChipError> {
     let global = grid.topo.build();
     let base = grid.jobs();
-    let mut jobs = Vec::with_capacity(serdes_points.len() * base.len());
+    let mut jobs = Vec::with_capacity(serdes_points.len() * fault_rates.len() * base.len());
     for &serdes in serdes_points {
-        for &job in &base {
-            jobs.push((job, serdes));
+        for &rate in fault_rates {
+            for &job in &base {
+                jobs.push((job, serdes, rate));
+            }
         }
     }
     let cells = fleet::run_jobs(
         &jobs,
         threads,
         |_| None::<((u32, u32, usize), MultiChipSim)>,
-        |slot, &(job, serdes), _| -> Result<MultiGridCell, Stalled> {
+        |slot, &(job, serdes, rate), _| -> Result<MultiGridCell, MultiChipError> {
             let key = (serdes.pins, serdes.clock_div, serdes.tx_buffer);
             match slot {
                 Some((k, sim)) if *k == key => sim.reset(),
@@ -604,6 +686,18 @@ pub fn run_multichip_grid(
                 }
             }
             let sim = &mut slot.as_mut().expect("worker sim installed above").1;
+            // Re-plan every cell: the plan is a pure function of the job
+            // (thread-count invariance), and a pooled sim may carry the
+            // previous cell's regime — a trivial plan restores the clean
+            // wire format, bit-identical to never having had one.
+            let plan = if rate > 0.0 {
+                FaultPlan::new(job.seed ^ rate.to_bits() ^ 0x0FA1_7AE5)
+                    .flips(rate)
+                    .drops(rate)
+            } else {
+                job.scenario.fault.map_or(FaultPlan::new(job.seed), |spec| spec.plan(job.seed))
+            };
+            sim.set_fault_plan(&plan);
             let trace = job.scenario.trace(sim.n_endpoints(), job.load, grid.cycles, job.seed);
             let budget = (grid.cycles.saturating_mul(50) + 100_000)
                 .saturating_mul(sim.serdes_cycles_per_flit().max(1));
@@ -615,9 +709,11 @@ pub fn run_multichip_grid(
                 seed: job.seed,
                 pins: serdes.pins,
                 clock_div: serdes.clock_div,
+                fault_rate: rate,
                 cycles,
                 stats: sim.stats(),
                 wire_flits: sim.wire_flits(),
+                retransmits: sim.link_stats().iter().map(|l| l.retransmitted).sum(),
                 eject_digest: eject_digest(&ejects),
             })
         },
@@ -829,6 +925,70 @@ mod tests {
             assert_eq!(cells[2 + s].stats.delivered, cells[s].stats.delivered, "seed {s}");
             assert!(cells[s].wire_flits > 0);
         }
+    }
+
+    #[test]
+    fn degraded_scenarios_join_the_registry_with_faults() {
+        assert!(find("degraded-uniform").unwrap().fault.is_some());
+        let chipdrop = find("degraded-chipdrop").unwrap().fault.unwrap();
+        assert_eq!(chipdrop.chip_down, Some((1, 64, 448)));
+        assert!(find("uniform").unwrap().fault.is_none());
+        // Serve and its tests index into the registry by position — the
+        // pre-fault prefix must stay where it was.
+        assert_eq!(registry()[0].name, "uniform");
+        assert_eq!(registry()[2].name, "tornado");
+    }
+
+    #[test]
+    fn degraded_scenarios_deliver_everything_despite_faults() {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+        for name in ["degraded-uniform", "degraded-chipdrop"] {
+            let scn = find(name).unwrap();
+            let sharding = Sharding { partition: &part, serdes: SerdesConfig::default() };
+            let out = run_scenario_multichip(
+                &scn,
+                &topo,
+                NocConfig::paper(),
+                &sharding,
+                0.1,
+                300,
+                3,
+            )
+            .unwrap();
+            assert_eq!(out.report.net.injected, out.report.net.delivered, "{name}");
+            assert!(out.report.net.injected > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn fault_rate_axis_delivers_everything_while_costing_cycles() {
+        let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
+        let grid = SweepGrid {
+            topo: Topology::Mesh { w: 4, h: 4 },
+            cfg: NocConfig::paper(),
+            scenarios: vec![find("uniform").unwrap()],
+            loads: vec![0.1],
+            seeds: vec![1],
+            cycles: 150,
+        };
+        let points = [SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 }];
+        let cells =
+            run_multichip_grid_faulty(&grid, &part, &points, &[0.0, 0.01], 1).unwrap();
+        assert_eq!(cells.len(), 2);
+        let (clean, faulty) = (&cells[0], &cells[1]);
+        assert_eq!((clean.fault_rate, faulty.fault_rate), (0.0, 0.01));
+        // Retransmission recovers every message on both lanes...
+        assert_eq!(clean.stats.delivered, clean.stats.injected);
+        assert_eq!(faulty.stats.delivered, faulty.stats.injected);
+        assert_eq!(faulty.stats.delivered, clean.stats.delivered);
+        // ...the faulty lane pays for it in cycles and replays.
+        assert!(faulty.cycles > clean.cycles);
+        assert!(faulty.retransmits > 0);
+        assert_eq!(clean.retransmits, 0);
+        // The clean lane IS the no-axis grid.
+        let base = run_multichip_grid(&grid, &part, &points, 1).unwrap();
+        assert_eq!(cells[..1], base[..]);
     }
 
     #[test]

@@ -12,7 +12,10 @@ use crate::util::Rng;
 pub enum Pattern {
     /// Uniform random destinations.
     Uniform,
-    /// dst = bit-reversed src (adversarial for meshes).
+    /// dst = bitwise complement of src over log2(n) bits (adversarial
+    /// for meshes). Falls back to the reversal permutation n-1-src when
+    /// n is not a power of two (the masked complement would collide and
+    /// self-send there).
     BitComplement,
     /// dst = (src + n/2) mod n (maximal average distance on rings).
     Tornado,
@@ -34,7 +37,13 @@ impl Pattern {
     pub fn dst(self, src: usize, n: usize, rng: &mut Rng) -> usize {
         let d = match self {
             Pattern::Uniform => (src + 1 + rng.index(n - 1)) % n,
-            Pattern::BitComplement => (!src) & (n - 1),
+            Pattern::BitComplement => {
+                if n.is_power_of_two() && n > 1 {
+                    (!src) & (n - 1)
+                } else {
+                    n - 1 - src
+                }
+            }
             Pattern::Tornado => (src + n / 2) % n,
             Pattern::Hotspot => 0,
             Pattern::Neighbor => (src + 1) % n,
@@ -195,7 +204,7 @@ mod tests {
     fn patterns_never_self_target() {
         let mut rng = Rng::new(1);
         for p in Pattern::ALL {
-            for n in [4usize, 16, 64] {
+            for n in [4usize, 6, 12, 16, 27, 64] {
                 for s in 0..n {
                     let d = p.dst(s, n, &mut rng);
                     assert_ne!(d, s, "{p:?} n={n}");
@@ -210,9 +219,9 @@ mod tests {
         // Off the fixed points (which the self-guard perturbs), applying
         // the permutation twice returns the source.
         let mut rng = Rng::new(2);
-        for n in [16usize, 64] {
+        for n in [6usize, 12, 16, 27, 64] {
             for s in 0..n {
-                for p in [Pattern::Transpose, Pattern::BitReverse] {
+                for p in [Pattern::Transpose, Pattern::BitReverse, Pattern::BitComplement] {
                     let d = p.dst(s, n, &mut rng);
                     if p.dst(d, n, &mut rng) != s {
                         // s must have been a fixed point bumped by the

@@ -22,7 +22,7 @@ use crate::noc::multichip::MultiChipSim;
 use crate::noc::scenario::{self, SweepGrid, Trace};
 use crate::noc::{NetStats, Network, NocConfig, SharedFabric, SimEngine, Topology};
 use crate::partition::Partition;
-use crate::serdes::SerdesConfig;
+use crate::serdes::{FaultPlan, SerdesConfig};
 use crate::serve::{self, loadgen};
 
 /// One benchmark point: a scenario-matrix cell with a fixed seed.
@@ -258,9 +258,41 @@ pub struct ServeBench {
     pub points: Vec<ServePoint>,
 }
 
+/// One fault-rate point of the `"faults"` benchmark section.
+#[derive(Clone, Debug)]
+pub struct FaultPoint {
+    /// Per-sample-bit flip AND per-flit drop probability of the seeded
+    /// plan (0 = clean links, no CRC).
+    pub rate: f64,
+    /// Completion cycle of the replay at this rate.
+    pub cycles: u64,
+    pub delivered: u64,
+    /// Wire-level replays (CRC NAKs + drop timeouts) summed over links.
+    pub retransmits: u64,
+    /// Frames the RX CRC rejected, summed over links.
+    pub corrupted: u64,
+    /// Delivered flits per simulated cycle.
+    pub goodput: f64,
+    /// `cycles / clean_cycles` (the rate-0 row is exactly 1.0).
+    pub overhead: f64,
+}
+
+/// The `"faults"` section of `BENCH_noc.json`: goodput and
+/// completion-cycle overhead vs wire fault rate on a bisected mesh under
+/// CRC/retransmit protection. Every row delivers the identical message
+/// set (asserted in the same run) — only the cost changes. Nonzero rows
+/// pay the CRC stretch of the wire format plus the replays themselves.
+#[derive(Clone, Debug)]
+pub struct FaultsBench {
+    pub scenario: &'static str,
+    pub pins: u32,
+    pub clock_div: u32,
+    pub points: Vec<FaultPoint>,
+}
+
 /// Which `BENCH_noc.json` sections a bench invocation regenerates
-/// (`fabricflow bench --only points|multichip|sweep|serve`); unselected
-/// sections are preserved from the existing file by
+/// (`fabricflow bench --only points|multichip|sweep|serve|faults`);
+/// unselected sections are preserved from the existing file by
 /// [`merge_sections`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BenchSelect {
@@ -268,23 +300,35 @@ pub struct BenchSelect {
     pub multichip: bool,
     pub sweep: bool,
     pub serve: bool,
+    pub faults: bool,
 }
 
 impl BenchSelect {
     /// Every section (the default `fabricflow bench`).
-    pub const ALL: BenchSelect =
-        BenchSelect { points: true, multichip: true, sweep: true, serve: true };
+    pub const ALL: BenchSelect = BenchSelect {
+        points: true,
+        multichip: true,
+        sweep: true,
+        serve: true,
+        faults: true,
+    };
 
     /// Parse a comma-separated `--only` value.
     pub fn parse(s: &str) -> Option<BenchSelect> {
-        let mut sel =
-            BenchSelect { points: false, multichip: false, sweep: false, serve: false };
+        let mut sel = BenchSelect {
+            points: false,
+            multichip: false,
+            sweep: false,
+            serve: false,
+            faults: false,
+        };
         for part in s.split(',') {
             match part.trim() {
                 "points" => sel.points = true,
                 "multichip" => sel.multichip = true,
                 "sweep" => sel.sweep = true,
                 "serve" => sel.serve = true,
+                "faults" => sel.faults = true,
                 _ => return None,
             }
         }
@@ -309,6 +353,9 @@ pub struct BenchReport {
     /// Serving latency vs offered load (None when the section was not
     /// run).
     pub serve: Option<ServeBench>,
+    /// Goodput/overhead vs wire fault rate (None when the section was
+    /// not run).
+    pub faults: Option<FaultsBench>,
 }
 
 /// One replay; the timer starts AFTER `Network::new` so construction
@@ -551,6 +598,62 @@ pub fn run_serve_bench(quick: bool) -> ServeBench {
     ServeBench { threads: cfg.threads, queue_cap: cfg.queue_cap, points }
 }
 
+/// Run the wire-fault benchmark (the `"faults"` section): the same
+/// uniform trace replayed on a 2-way bisected mesh at increasing seeded
+/// fault rates with CRC/retransmit protection on. Every rate must
+/// deliver exactly the clean flit count (asserted here — survival, not
+/// best-effort); what the section tracks is the *cost*: completion-cycle
+/// overhead vs the clean run and goodput in delivered flits per cycle.
+/// Nonzero rates also pay the CRC field's serialization stretch, so
+/// overhead is protection + recovery, which is what a deployment pays.
+pub fn run_faults_bench(quick: bool) -> FaultsBench {
+    const RATES: [f64; 4] = [0.0, 1e-4, 1e-3, 1e-2];
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let graph = topo.build();
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let window = if quick { 500 } else { 2_000 };
+    let trace = scn.trace(graph.n_endpoints, 0.1, window, 1);
+    let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+    let partition = Partition::balanced(&graph, 2, 1);
+    let serdes = SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 };
+
+    let mut points: Vec<FaultPoint> = Vec::new();
+    for &rate in &RATES {
+        let mut sim = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+        let plan = if rate > 0.0 {
+            FaultPlan::new(0xFA17_BE4C ^ rate.to_bits()).flips(rate).drops(rate)
+        } else {
+            FaultPlan::new(0)
+        };
+        sim.set_fault_plan(&plan);
+        let cycles = scenario::replay_multichip(&mut sim, &trace, 1_000_000_000)
+            .unwrap_or_else(|e| panic!("faults bench @{rate}: {e}"));
+        let stats = sim.stats();
+        assert_eq!(stats.injected, stats.delivered, "faults bench lost flits @{rate}");
+        let (mut retransmits, mut corrupted) = (0u64, 0u64);
+        for l in sim.link_stats() {
+            retransmits += l.retransmitted;
+            corrupted += l.corrupted;
+        }
+        let clean_cycles = points.first().map_or(cycles, |p: &FaultPoint| p.cycles);
+        assert_eq!(
+            points.first().map_or(stats.delivered, |p| p.delivered),
+            stats.delivered,
+            "fault rate {rate} changed the delivered flit count — exactly-once broken"
+        );
+        points.push(FaultPoint {
+            rate,
+            cycles,
+            delivered: stats.delivered,
+            retransmits,
+            corrupted,
+            goodput: stats.delivered as f64 / cycles as f64,
+            overhead: cycles as f64 / clean_cycles as f64,
+        });
+    }
+    FaultsBench { scenario: "uniform", pins: serdes.pins, clock_div: serdes.clock_div, points }
+}
+
 /// Run the whole tracked matrix. `quick` shrinks windows 4x and uses one
 /// rep — the CI perf-smoke profile.
 pub fn run(quick: bool) -> BenchReport {
@@ -578,7 +681,8 @@ pub fn run_selected(quick: bool, sel: BenchSelect) -> BenchReport {
     };
     let sweep = sel.sweep.then(|| run_sweep_bench(quick));
     let serve = sel.serve.then(|| run_serve_bench(quick));
-    BenchReport { quick, points, multichip, sweep, serve }
+    let faults = sel.faults.then(|| run_faults_bench(quick));
+    BenchReport { quick, points, multichip, sweep, serve, faults }
 }
 
 impl BenchReport {
@@ -680,10 +784,36 @@ impl BenchReport {
                     let _ = writeln!(j, "      }}{comma}");
                 }
                 let _ = writeln!(j, "    ]");
+                let _ = writeln!(j, "  }},");
+            }
+            None => {
+                let _ = writeln!(j, "  \"serve\": null,");
+            }
+        }
+        match &self.faults {
+            Some(fb) => {
+                let _ = writeln!(j, "  \"faults\": {{");
+                let _ = writeln!(j, "    \"scenario\": \"{}\",", fb.scenario);
+                let _ = writeln!(j, "    \"pins\": {},", fb.pins);
+                let _ = writeln!(j, "    \"clock_div\": {},", fb.clock_div);
+                let _ = writeln!(j, "    \"points\": [");
+                for (i, p) in fb.points.iter().enumerate() {
+                    let comma = if i + 1 == fb.points.len() { "" } else { "," };
+                    let _ = writeln!(j, "      {{");
+                    let _ = writeln!(j, "        \"rate\": {},", p.rate);
+                    let _ = writeln!(j, "        \"cycles\": {},", p.cycles);
+                    let _ = writeln!(j, "        \"delivered\": {},", p.delivered);
+                    let _ = writeln!(j, "        \"retransmits\": {},", p.retransmits);
+                    let _ = writeln!(j, "        \"corrupted\": {},", p.corrupted);
+                    let _ = writeln!(j, "        \"goodput\": {:.4},", p.goodput);
+                    let _ = writeln!(j, "        \"overhead\": {:.3}", p.overhead);
+                    let _ = writeln!(j, "      }}{comma}");
+                }
+                let _ = writeln!(j, "    ]");
                 let _ = writeln!(j, "  }}");
             }
             None => {
-                let _ = writeln!(j, "  \"serve\": null");
+                let _ = writeln!(j, "  \"faults\": null");
             }
         }
         let _ = writeln!(j, "}}");
@@ -764,6 +894,20 @@ impl BenchReport {
                 );
             }
         }
+        if let Some(fb) = &self.faults {
+            let _ = writeln!(
+                s,
+                "Wire-fault recovery cost ({} on bisected mesh4x4, {} pins; every rate delivers everything)",
+                fb.scenario, fb.pins
+            );
+            for p in &fb.points {
+                let _ = writeln!(
+                    s,
+                    "  rate {:<10} {:>9} cyc ({:.3}x clean) | {:>6} retrans {:>6} corrupt | goodput {:.4} flit/cyc",
+                    p.rate, p.cycles, p.overhead, p.retransmits, p.corrupted, p.goodput
+                );
+            }
+        }
         s
     }
 }
@@ -834,6 +978,7 @@ pub fn merge_sections(old_json: &str, fresh: &BenchReport, sel: BenchSelect) -> 
         ("multichip", sel.multichip),
         ("sweep", sel.sweep),
         ("serve", sel.serve),
+        ("faults", sel.faults),
     ] {
         if selected {
             continue;
@@ -886,6 +1031,7 @@ mod tests {
             multichip: Vec::new(),
             sweep: None,
             serve: None,
+            faults: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
@@ -893,7 +1039,8 @@ mod tests {
         assert!(json.contains("\"profile\": \"quick\""));
         assert!(json.contains("\"multichip\": ["));
         assert!(json.contains("\"sweep\": null,"));
-        assert!(json.contains("\"serve\": null"));
+        assert!(json.contains("\"serve\": null,"));
+        assert!(json.contains("\"faults\": null"));
         assert!(report.render_table().contains("saturated-mesh8x8"));
     }
 
@@ -934,6 +1081,7 @@ mod tests {
             multichip: vec![res],
             sweep: None,
             serve: None,
+            faults: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"bmvm-ring8/2fpga-8pin\""));
@@ -990,6 +1138,34 @@ mod tests {
         }
     }
 
+    fn faults_stub() -> FaultsBench {
+        FaultsBench {
+            scenario: "uniform",
+            pins: 8,
+            clock_div: 1,
+            points: vec![
+                FaultPoint {
+                    rate: 0.0,
+                    cycles: 1000,
+                    delivered: 800,
+                    retransmits: 0,
+                    corrupted: 0,
+                    goodput: 0.8,
+                    overhead: 1.0,
+                },
+                FaultPoint {
+                    rate: 0.01,
+                    cycles: 1500,
+                    delivered: 800,
+                    retransmits: 40,
+                    corrupted: 25,
+                    goodput: 0.5333,
+                    overhead: 1.5,
+                },
+            ],
+        }
+    }
+
     #[test]
     fn sweep_section_serializes_and_renders() {
         let report = BenchReport {
@@ -998,6 +1174,7 @@ mod tests {
             multichip: Vec::new(),
             sweep: Some(sweep_stub()),
             serve: None,
+            faults: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"sweep\": {"));
@@ -1014,6 +1191,7 @@ mod tests {
             multichip: Vec::new(),
             sweep: None,
             serve: Some(serve_stub()),
+            faults: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"serve\": {"));
@@ -1026,21 +1204,48 @@ mod tests {
     }
 
     #[test]
+    fn faults_section_serializes_and_renders() {
+        let report = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: Some(faults_stub()),
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"faults\": {"));
+        assert!(json.contains("\"rate\": 0.01,"));
+        assert!(json.contains("\"retransmits\": 40,"));
+        assert!(json.contains("\"overhead\": 1.500"));
+        // The serve section before it must now carry a trailing comma.
+        assert!(json.contains("\"serve\": null,"));
+        let table = report.render_table();
+        assert!(table.contains("Wire-fault recovery cost"));
+        assert!(table.contains("retrans"));
+    }
+
+    #[test]
     fn bench_select_parses_only_flags() {
-        assert_eq!(
-            BenchSelect::parse("sweep"),
-            Some(BenchSelect { points: false, multichip: false, sweep: true, serve: false })
-        );
-        assert_eq!(
-            BenchSelect::parse("serve"),
-            Some(BenchSelect { points: false, multichip: false, sweep: false, serve: true })
-        );
+        let none = BenchSelect {
+            points: false,
+            multichip: false,
+            sweep: false,
+            serve: false,
+            faults: false,
+        };
+        assert_eq!(BenchSelect::parse("sweep"), Some(BenchSelect { sweep: true, ..none }));
+        assert_eq!(BenchSelect::parse("serve"), Some(BenchSelect { serve: true, ..none }));
+        assert_eq!(BenchSelect::parse("faults"), Some(BenchSelect { faults: true, ..none }));
         assert_eq!(
             BenchSelect::parse("points,multichip"),
-            Some(BenchSelect { points: true, multichip: true, sweep: false, serve: false })
+            Some(BenchSelect { points: true, multichip: true, ..none })
         );
-        assert_eq!(BenchSelect::parse("points,multichip,sweep,serve"), Some(BenchSelect::ALL));
-        assert_ne!(BenchSelect::parse("points,multichip,sweep"), Some(BenchSelect::ALL));
+        assert_eq!(
+            BenchSelect::parse("points,multichip,sweep,serve,faults"),
+            Some(BenchSelect::ALL)
+        );
+        assert_ne!(BenchSelect::parse("points,multichip,sweep,serve"), Some(BenchSelect::ALL));
         assert!(BenchSelect::ALL.is_all());
         assert_eq!(BenchSelect::parse("everything"), None);
     }
@@ -1068,6 +1273,7 @@ mod tests {
             multichip: Vec::new(),
             sweep: Some(sweep_stub()),
             serve: Some(serve_stub()),
+            faults: Some(faults_stub()),
         }
         .to_json();
         // A fresh sweep-only run: points/multichip empty, new sweep.
@@ -1079,8 +1285,15 @@ mod tests {
             multichip: Vec::new(),
             sweep: Some(new_sweep),
             serve: None,
+            faults: None,
         };
-        let sel = BenchSelect { points: false, multichip: false, sweep: true, serve: false };
+        let sel = BenchSelect {
+            points: false,
+            multichip: false,
+            sweep: true,
+            serve: false,
+            faults: false,
+        };
         let merged = merge_sections(&old, &fresh, sel);
         // Old points preserved verbatim, new sweep spliced in.
         let (os, oe) = section_span(&old, "points").unwrap();
@@ -1093,21 +1306,30 @@ mod tests {
         let (os, oe) = section_span(&old, "serve").unwrap();
         let (ms, me) = section_span(&merged, "serve").unwrap();
         assert_eq!(&old[os..oe], &merged[ms..me], "serve section changed");
-        // And the other way: regenerating points keeps the old sweep
-        // and serve sections.
-        let sel = BenchSelect { points: true, multichip: false, sweep: false, serve: false };
+        // And the other way: regenerating points keeps the old sweep,
+        // serve, and faults sections.
+        let sel = BenchSelect {
+            points: true,
+            multichip: false,
+            sweep: false,
+            serve: false,
+            faults: false,
+        };
         let fresh_points = BenchReport {
             quick: true,
             points: Vec::new(),
             multichip: Vec::new(),
             sweep: None,
             serve: None,
+            faults: None,
         };
         let merged = merge_sections(&old, &fresh_points, sel);
         assert!(merged.contains("\"parallel_speedup\": 3.10"));
         assert!(!merged.contains("\"sweep\": null"));
         assert!(merged.contains("\"label\": \"poisson-500rps\""));
         assert!(!merged.contains("\"serve\": null"));
+        assert!(merged.contains("\"retransmits\": 40,"));
+        assert!(!merged.contains("\"faults\": null"));
     }
 
     #[test]
@@ -1134,11 +1356,36 @@ mod tests {
         for p in &sv.points {
             assert_eq!(p.served + p.rejected, p.requests, "{}", p.label);
             assert!(p.achieved_rps > 0.0, "{}", p.label);
-            // Percentiles are bucket upper edges, so p50 can exceed the
-            // exact max; only the quantile ordering is guaranteed.
+            // Percentile edges are clamped to the observed max, so the
+            // whole quantile chain is ordered.
             assert!(p.p99_us >= p.p50_us, "{}", p.label);
+            assert!(p.max_us >= p.p99_us, "{}", p.label);
             assert!(p.max_us > 0, "{}", p.label);
         }
+    }
+
+    #[test]
+    fn faults_bench_runs_tiny() {
+        // A real quick faults bench: the whole point of the section is
+        // that delivery never degrades — only cycles do.
+        let fb = run_faults_bench(true);
+        assert_eq!(fb.points.len(), 4);
+        assert_eq!(fb.points[0].rate, 0.0);
+        assert_eq!(fb.points[0].overhead, 1.0);
+        assert_eq!(fb.points[0].retransmits, 0, "clean row must not replay");
+        let clean = &fb.points[0];
+        for p in &fb.points {
+            assert_eq!(p.delivered, clean.delivered, "rate {} lost flits", p.rate);
+            assert!(p.overhead >= 1.0, "rate {}", p.rate);
+            assert!(p.goodput <= clean.goodput + 1e-12, "rate {}", p.rate);
+        }
+        // CRC stretches the wire format even before any fault fires, so
+        // every protected row costs strictly more than the clean one.
+        for p in &fb.points[1..] {
+            assert!(p.cycles > clean.cycles, "rate {} paid no protection cost", p.rate);
+        }
+        let top = fb.points.last().unwrap();
+        assert!(top.retransmits > 0, "1% faults must force wire replays");
     }
 
     #[test]

@@ -74,6 +74,17 @@ pub fn wire_bits(flit_data_width: u32, n_endpoints: usize) -> u32 {
     1 + 1 + 2 + 2 * id + 16 + 8 + flit_data_width
 }
 
+/// Link-layer CRC field width. When a [`FaultPlan`] with `crc` enabled is
+/// attached to the multi-chip fabric, each wire frame carries a
+/// CRC-16-CCITT over the base frame, transmitted ahead of the valid bit,
+/// and the RX gateway rejects (NAKs) frames whose check fails.
+pub const CRC_BITS: u32 = 16;
+
+/// [`wire_bits`] plus the optional link-layer CRC field.
+pub fn wire_bits_ext(flit_data_width: u32, n_endpoints: usize, crc: bool) -> u32 {
+    wire_bits(flit_data_width, n_endpoints) + if crc { CRC_BITS } else { 0 }
+}
+
 /// Words of the fixed stack bit-buffer the (de)serializers shift through
 /// — 256 bits, comfortably above any supported wire format (≤ 64 payload
 /// bits + header). The sharded co-simulation serializes every flit that
@@ -140,20 +151,30 @@ fn pack_wire(f: &Flit, flit_data_width: u32, n_endpoints: usize) -> ([u64; WIRE_
     (words, total)
 }
 
-/// Serialize a flit MSB-first into per-cycle pin samples (`pins` bits per
-/// sample, last sample zero-padded), appended to a cleared `out` — the
-/// zero-allocation form used by the multi-chip wire channels (pass a
-/// pooled buffer whose capacity survives across flits). Bit-exact model
-/// of the Fig 6 shifter.
-pub fn serialize_flit_into(
-    f: &Flit,
-    flit_data_width: u32,
-    n_endpoints: usize,
-    pins: u32,
-    out: &mut Vec<u64>,
-) {
-    assert!((1..=64).contains(&pins), "pins must be 1..=64, got {pins}");
-    let (words, total) = pack_wire(f, flit_data_width, n_endpoints);
+/// CRC-16-CCITT (poly `0x1021`, init `0xFFFF`) over the low `n_bits` of
+/// an LSB-first packed word buffer, consumed in wire (MSB-first) order.
+/// The polynomial's `(x+1)` factor catches every odd-weight error and its
+/// degree-15 primitive factor every 2-bit error up to 32767-bit frames —
+/// far beyond the ≤256-bit wire format — which is the detection guarantee
+/// the retransmit protocol leans on.
+fn crc16_ccitt(words: &[u64; WIRE_WORDS], n_bits: usize) -> u16 {
+    let mut crc: u16 = 0xFFFF;
+    let mut pos = n_bits;
+    while pos > 0 {
+        pos -= 1;
+        let bit = ((words[pos / 64] >> (pos % 64)) & 1) as u16;
+        let top = (crc >> 15) ^ bit;
+        crc <<= 1;
+        if top & 1 == 1 {
+            crc ^= 0x1021;
+        }
+    }
+    crc
+}
+
+/// Emit the low `total` bits of `words` MSB-first as `pins`-bit samples
+/// (last sample zero-padded) into a cleared `out`.
+fn emit_samples(words: &[u64; WIRE_WORDS], total: usize, pins: u32, out: &mut Vec<u64>) {
     out.clear();
     out.reserve(total.div_ceil(pins as usize));
     let p = pins as usize;
@@ -174,6 +195,43 @@ pub fn serialize_flit_into(
     }
 }
 
+/// Serialize a flit MSB-first into per-cycle pin samples (`pins` bits per
+/// sample, last sample zero-padded), appended to a cleared `out` — the
+/// zero-allocation form used by the multi-chip wire channels (pass a
+/// pooled buffer whose capacity survives across flits). Bit-exact model
+/// of the Fig 6 shifter.
+pub fn serialize_flit_into(
+    f: &Flit,
+    flit_data_width: u32,
+    n_endpoints: usize,
+    pins: u32,
+    out: &mut Vec<u64>,
+) {
+    serialize_flit_protected_into(f, flit_data_width, n_endpoints, pins, false, out)
+}
+
+/// [`serialize_flit_into`] with the optional link-layer CRC appended
+/// (transmitted first, ahead of the valid bit). `crc = false` is
+/// bit-identical to the unprotected format.
+pub fn serialize_flit_protected_into(
+    f: &Flit,
+    flit_data_width: u32,
+    n_endpoints: usize,
+    pins: u32,
+    crc: bool,
+    out: &mut Vec<u64>,
+) {
+    assert!((1..=64).contains(&pins), "pins must be 1..=64, got {pins}");
+    let (mut words, mut total) = pack_wire(f, flit_data_width, n_endpoints);
+    if crc {
+        assert!(total + CRC_BITS as usize <= 64 * WIRE_WORDS);
+        let c = crc16_ccitt(&words, total);
+        put_bits(&mut words, total, CRC_BITS as usize, c as u64);
+        total += CRC_BITS as usize;
+    }
+    emit_samples(&words, total, pins, out);
+}
+
 /// Allocating convenience wrapper around [`serialize_flit_into`].
 pub fn serialize_flit(f: &Flit, flit_data_width: u32, n_endpoints: usize, pins: u32) -> Vec<u64> {
     let mut samples = Vec::new();
@@ -181,19 +239,31 @@ pub fn serialize_flit(f: &Flit, flit_data_width: u32, n_endpoints: usize, pins: 
     samples
 }
 
-/// Reassemble a flit from pin samples produced by [`serialize_flit`] /
-/// [`serialize_flit_into`]. Returns `None` if the valid bit is clear.
-/// Allocation-free (`injected_at` is a simulator artifact, not wire data;
-/// it comes back 0).
-pub fn deserialize_flit_from(
+/// Outcome of decoding a wire frame at the RX gateway.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireDecode {
+    /// A frame that passed every check.
+    Flit(Flit),
+    /// The valid bit is clear: no reconstructable frame is present.
+    Invalid,
+    /// The link-layer CRC check failed: corrupted in flight.
+    Corrupt,
+}
+
+/// Reassemble a flit from pin samples, checking the link-layer CRC when
+/// `crc` is set. Allocation-free (`injected_at` is a simulator artifact,
+/// not wire data; it comes back 0).
+pub fn decode_flit_protected(
     samples: &[u64],
     flit_data_width: u32,
     n_endpoints: usize,
     pins: u32,
-) -> Option<Flit> {
+    crc: bool,
+) -> WireDecode {
     assert!((1..=64).contains(&pins), "pins must be 1..=64, got {pins}");
     let id = clog2(n_endpoints.max(2)) as usize;
-    let total = wire_bits(flit_data_width, n_endpoints) as usize;
+    let base = wire_bits(flit_data_width, n_endpoints) as usize;
+    let total = base + if crc { CRC_BITS as usize } else { 0 };
     assert!(total <= 64 * WIRE_WORDS, "wire format exceeds {} bits", 64 * WIRE_WORDS);
     let mut words = [0u64; WIRE_WORDS];
     // Undo MSB-first: sample 0 carries bits total-1 .. total-pins.
@@ -207,6 +277,12 @@ pub fn deserialize_flit_from(
             if (s >> (pins as usize - 1 - i)) & 1 == 1 {
                 words[pos / 64] |= 1 << (pos % 64);
             }
+        }
+    }
+    if crc {
+        let stored = get_bits(&words, base, CRC_BITS as usize) as u16;
+        if stored != crc16_ccitt(&words, base) {
+            return WireDecode::Corrupt;
         }
     }
     let mut at = 0;
@@ -226,9 +302,23 @@ pub fn deserialize_flit_from(
     at += 1;
     let valid = get_bits(&words, at, 1) == 1;
     if !valid {
-        return None;
+        return WireDecode::Invalid;
     }
-    Some(Flit { src, dst, vc, tag, seq, last, data, injected_at: 0 })
+    WireDecode::Flit(Flit { src, dst, vc, tag, seq, last, data, injected_at: 0 })
+}
+
+/// Reassemble a flit from pin samples produced by [`serialize_flit`] /
+/// [`serialize_flit_into`]. Returns `None` if the valid bit is clear.
+pub fn deserialize_flit_from(
+    samples: &[u64],
+    flit_data_width: u32,
+    n_endpoints: usize,
+    pins: u32,
+) -> Option<Flit> {
+    match decode_flit_protected(samples, flit_data_width, n_endpoints, pins, false) {
+        WireDecode::Flit(f) => Some(f),
+        _ => None,
+    }
 }
 
 /// Alias of [`deserialize_flit_from`] (kept for the original name).
@@ -311,6 +401,100 @@ impl SerdesChannel {
     /// the clock here when the whole network is otherwise frozen.
     pub fn next_ready(&self) -> Option<u64> {
         self.queue.front().map(|&(_, done)| done)
+    }
+}
+
+/// One scheduled outage window, in absolute simulation cycles, half-open
+/// `[from, until)`. A transfer whose last sample would land inside the
+/// window is deferred until the window closes and then replayed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DownWindow {
+    /// One directed cut link goes down (index into the fabric's link
+    /// list, i.e. the order of `MultiChipSim::link_stats`).
+    Link { link: usize, from: u64, until: u64 },
+    /// A whole chip drops: every directed link into *or* out of the chip
+    /// is down for the window.
+    Chip { chip: usize, from: u64, until: u64 },
+}
+
+/// Seeded fault-injection plan for the inter-FPGA wire channels — the
+/// "what happens when a link misbehaves?" knob the perfect-wire fabric
+/// lacked. Attached via `MultiChipSim::set_fault_plan` or
+/// `FlowBuilder::fault_plan`; each directed link derives an independent
+/// RNG stream from `seed`, so runs are reproducible and identical across
+/// schedulers and thread counts.
+///
+/// With `crc` enabled (the default once any corruption is configured)
+/// the wire format grows a [`CRC_BITS`]-bit CRC and corrupt or dropped
+/// frames are replayed from the TX buffer — delivery stays exactly-once
+/// and in per-link FIFO order, only slower. With `crc` disabled
+/// ([`FaultPlan::unprotected`]) corruption reaches the RX gateway
+/// undetected: frames whose valid bit or routing fields are mangled
+/// surface as a typed `Corrupt` run error instead of a panic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Master seed; per-link streams are derived from it.
+    pub seed: u64,
+    /// Per-transmitted-bit flip probability (applied to every pin sample
+    /// of a frame, padding included).
+    pub flip_rate: f64,
+    /// Per-transfer whole-frame drop probability (the frame never
+    /// arrives; the TX side times out and replays).
+    pub drop_rate: f64,
+    /// Protect frames with the link-layer CRC + retransmit protocol.
+    pub crc: bool,
+    /// Scheduled link/chip outage windows.
+    pub down: Vec<DownWindow>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing — attaching it is bit-identical to
+    /// attaching no plan at all.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, flip_rate: 0.0, drop_rate: 0.0, crc: false, down: Vec::new() }
+    }
+
+    /// Flip each transmitted bit with probability `rate`; enables the
+    /// CRC so corruption is detected and repaired by retransmission.
+    pub fn flips(mut self, rate: f64) -> Self {
+        self.flip_rate = rate;
+        self.crc = true;
+        self
+    }
+
+    /// Drop whole frames with probability `rate` per transfer (repaired
+    /// by TX timeout + replay; no CRC needed to detect a missing frame).
+    pub fn drops(mut self, rate: f64) -> Self {
+        self.drop_rate = rate;
+        self
+    }
+
+    /// Take one directed link down for `[from, until)`.
+    pub fn link_down(mut self, link: usize, from: u64, until: u64) -> Self {
+        self.down.push(DownWindow::Link { link, from, until });
+        self
+    }
+
+    /// Take a whole chip down for `[from, until)` (all of its links).
+    pub fn chip_down(mut self, chip: usize, from: u64, until: u64) -> Self {
+        self.down.push(DownWindow::Chip { chip, from, until });
+        self
+    }
+
+    /// Strip the CRC protection: corruption travels undetected and
+    /// surfaces as a typed run error when it mangles a frame beyond
+    /// reconstruction. For demonstrating *why* the link layer carries a
+    /// CRC.
+    pub fn unprotected(mut self) -> Self {
+        self.crc = false;
+        self
+    }
+
+    /// Does this plan inject anything at all? Trivial plans are dropped
+    /// at attach time so the rate-0 axis of fault sweeps stays
+    /// bit-identical to the clean fabric (no CRC bits, no RNG draws).
+    pub fn is_trivial(&self) -> bool {
+        self.flip_rate <= 0.0 && self.drop_rate <= 0.0 && self.down.is_empty()
     }
 }
 
@@ -510,5 +694,134 @@ mod tests {
         let big = SerdesConfig { pins: 16, clock_div: 1, tx_buffer: 16 }.endpoint_resources(80);
         assert!(small.regs > 0 && small.luts > 0);
         assert!(big.regs > small.regs);
+    }
+
+    /// The meaningful (transmitted) bit positions of a protected frame:
+    /// `(sample index, sample bit)` pairs, excluding the zero padding of
+    /// the last sample which the receiver never reads.
+    fn meaningful_bits(total: usize, pins: u32) -> Vec<(usize, u32)> {
+        let p = pins as usize;
+        let mut out = Vec::new();
+        for j in 0..total.div_ceil(p) {
+            for b in 0..p {
+                if j * p + (p - 1 - b) < total {
+                    out.push((j, b as u32));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn crc_detects_all_1_and_2_bit_corruptions() {
+        let (width, n_eps) = (16u32, 16usize);
+        let total = wire_bits_ext(width, n_eps, true) as usize;
+        assert_eq!(total, 52 + CRC_BITS as usize);
+        for pins in [1u32, 7, 8, 32] {
+            let f = Flit {
+                vc: 1,
+                tag: 0xBEE,
+                seq: 3,
+                last: false,
+                ..Flit::single(5, 10, 0, 0xA5C3)
+            };
+            let mut clean = Vec::new();
+            serialize_flit_protected_into(&f, width, n_eps, pins, true, &mut clean);
+            assert_eq!(clean.len(), total.div_ceil(pins as usize));
+            assert_eq!(
+                decode_flit_protected(&clean, width, n_eps, pins, true),
+                WireDecode::Flit(f),
+                "clean protected frame must decode (pins={pins})"
+            );
+            let bits = meaningful_bits(total, pins);
+            assert_eq!(bits.len(), total);
+            // Every single-bit corruption is caught.
+            for &(j, b) in &bits {
+                let mut s = clean.clone();
+                s[j] ^= 1 << b;
+                let d = decode_flit_protected(&s, width, n_eps, pins, true);
+                assert!(
+                    !matches!(d, WireDecode::Flit(_)),
+                    "1-bit flip slipped through (pins={pins} sample={j} bit={b})"
+                );
+            }
+            // Every double-bit corruption is caught (CRC-16-CCITT
+            // guarantee for frames below 32767 bits).
+            for (i, &(j1, b1)) in bits.iter().enumerate() {
+                for &(j2, b2) in &bits[i + 1..] {
+                    let mut s = clean.clone();
+                    s[j1] ^= 1 << b1;
+                    s[j2] ^= 1 << b2;
+                    let d = decode_flit_protected(&s, width, n_eps, pins, true);
+                    assert!(
+                        !matches!(d, WireDecode::Flit(_)),
+                        "2-bit flip slipped through (pins={pins} \
+                         ({j1},{b1})+({j2},{b2}))"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn protected_format_without_crc_is_bit_identical_to_base() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n_eps = 2 + rng.index(100);
+            let width = 1 + rng.index(60) as u32;
+            let pins = 1 + rng.index(32) as u32;
+            let f = random_flit(&mut rng, n_eps, width);
+            let base = serialize_flit(&f, width, n_eps, pins);
+            let mut prot = Vec::new();
+            serialize_flit_protected_into(&f, width, n_eps, pins, false, &mut prot);
+            assert_eq!(base, prot);
+            // And the CRC frame is exactly CRC_BITS longer on the wire.
+            assert_eq!(
+                wire_bits_ext(width, n_eps, true),
+                wire_bits(width, n_eps) + CRC_BITS
+            );
+        }
+    }
+
+    #[test]
+    fn unprotected_corruption_travels_undetected() {
+        // Without the CRC, a payload flip silently delivers wrong data
+        // and a valid-bit flip makes the frame unreconstructable — the
+        // two failure modes the typed Corrupt run error reports.
+        let (width, n_eps, pins) = (16u32, 16usize, 8u32);
+        let f = Flit::single(2, 7, 9, 0x1234);
+        let clean = serialize_flit(&f, width, n_eps, pins);
+        // Valid bit is the first transmitted bit: sample 0, highest pin.
+        let mut s = clean.clone();
+        s[0] ^= 1 << (pins - 1);
+        assert_eq!(decode_flit_protected(&s, width, n_eps, pins, false), WireDecode::Invalid);
+        // Payload bit 0 is the last transmitted bit of the frame.
+        let total = wire_bits(width, n_eps) as usize;
+        let last = (total - 1) / pins as usize;
+        let bit = pins as usize - 1 - ((total - 1) % pins as usize);
+        let mut s = clean.clone();
+        s[last] ^= 1 << bit;
+        match decode_flit_protected(&s, width, n_eps, pins, false) {
+            WireDecode::Flit(g) => assert_eq!(g.data, f.data ^ 1, "silent corruption"),
+            d => panic!("expected silently corrupted flit, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_plan_builders() {
+        let p = FaultPlan::new(7);
+        assert!(p.is_trivial());
+        assert!(!p.crc);
+        let p = FaultPlan::new(7).flips(1e-3);
+        assert!(!p.is_trivial());
+        assert!(p.crc, "flips enable the CRC by default");
+        assert!(FaultPlan::new(7).flips(0.0).is_trivial(), "rate 0 injects nothing");
+        let p = FaultPlan::new(7).flips(1e-3).unprotected();
+        assert!(!p.crc && !p.is_trivial());
+        let p = FaultPlan::new(7).drops(0.01);
+        assert!(!p.is_trivial());
+        let p = FaultPlan::new(7).chip_down(1, 100, 300);
+        assert_eq!(p.down, vec![DownWindow::Chip { chip: 1, from: 100, until: 300 }]);
+        assert!(!p.is_trivial());
     }
 }

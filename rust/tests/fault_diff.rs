@@ -1,0 +1,224 @@
+//! Differential survival tests for seeded wire faults: a
+//! [`MultiChipSim`] whose cut links flip bits, drop frames, or go down
+//! entirely must still deliver **exactly** the clean run's messages —
+//! same payloads, same per-(destination, source) order — just later.
+//! And a fault plan that injects nothing must be **bit-identical** to
+//! attaching no plan at all, on both schedulers, so the zero-fault axis
+//! of every sweep stays comparable with pre-fault baselines.
+//!
+//! The heavy rate × pins × scheduler matrix is `#[ignore]`d and runs
+//! under `--release` in the CI conformance job:
+//!
+//! ```text
+//! cargo test --release --test fault_diff -- --include-ignored
+//! ```
+
+use std::collections::BTreeMap;
+
+use fabricflow::noc::multichip::MultiChipSim;
+use fabricflow::noc::scenario::{self, EjectRecord};
+use fabricflow::noc::{Flit, NetStats, NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::{FaultPlan, SerdesConfig};
+
+/// Per-(destination, source) eject sequences (same invariant as
+/// `multichip_diff`): deterministic memoryless routing sends one (src,
+/// dst) pair down one FIFO path, and the wire retransmit protocol
+/// preserves per-link FIFO order, so these sequences must survive any
+/// protected fault pattern untouched.
+fn per_pair_sequences(
+    ejects: &[(usize, usize, u32, u64)],
+) -> BTreeMap<(usize, usize), Vec<(u32, u64)>> {
+    let mut seq: BTreeMap<(usize, usize), Vec<(u32, u64)>> = BTreeMap::new();
+    for &(endpoint, src, tag, data) in ejects {
+        seq.entry((endpoint, src)).or_default().push((tag, data));
+    }
+    seq
+}
+
+/// Deterministic cross-chip traffic, replayed to idle; returns the full
+/// observable digest. `plan: None` attaches nothing at all — the
+/// baseline the trivial-plan run must match bit for bit.
+fn run_digest(
+    topo: &Topology,
+    n_fpgas: usize,
+    serdes: SerdesConfig,
+    engine: SimEngine,
+    flits: u32,
+    plan: Option<&FaultPlan>,
+) -> (u64, NetStats, Vec<(usize, usize, u32, u64)>, u64, u64, u64) {
+    let graph = topo.build();
+    let partition = Partition::balanced(&graph, n_fpgas, 42);
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let mut sim = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+    if let Some(plan) = plan {
+        sim.set_fault_plan(plan);
+    }
+    let n = graph.n_endpoints;
+    for k in 0..flits {
+        let s = (k as usize * 7) % n;
+        let d = (s + 1 + (k as usize * 3) % (n - 1)) % n;
+        sim.inject(s, Flit::single(s, d, k, (k as u64 * 11) & 0xFFFF));
+    }
+    let cycles = sim.run_until_idle(50_000_000).unwrap();
+    let mut ejects = Vec::new();
+    for e in 0..n {
+        while let Some(f) = sim.eject(e) {
+            ejects.push((e, f.src, f.tag, f.data));
+        }
+    }
+    let (mut retrans, mut corrupt, mut down) = (0u64, 0u64, 0u64);
+    for l in sim.link_stats() {
+        retrans += l.retransmitted;
+        corrupt += l.corrupted;
+        down += l.downtime;
+    }
+    (cycles, sim.stats(), ejects, retrans, corrupt, down)
+}
+
+const MESH: Topology = Topology::Mesh { w: 4, h: 4 };
+
+fn pins8() -> SerdesConfig {
+    SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 }
+}
+
+/// A fault plan that injects nothing is indistinguishable from no plan:
+/// same cycle count, same stats (histogram included), same ejects, zero
+/// fault counters — on both schedulers. This is the invariant that lets
+/// `run_multichip_grid` delegate to the faulty grid with rate 0.
+#[test]
+fn trivial_fault_plan_is_bit_identical_to_no_plan() {
+    for engine in SimEngine::ALL {
+        let clean = run_digest(&MESH, 2, pins8(), engine, 300, None);
+        let trivial = FaultPlan::new(0xDEAD_BEEF);
+        let planned = run_digest(&MESH, 2, pins8(), engine, 300, Some(&trivial));
+        assert_eq!(clean, planned, "{engine:?}: trivial plan changed the simulation");
+        assert_eq!(planned.3, 0, "trivial plan retransmitted");
+        assert_eq!(planned.5, 0, "trivial plan recorded downtime");
+    }
+}
+
+/// Seeded bit flips + frame drops under CRC/retransmit: every message
+/// arrives exactly once with clean payloads and per-pair order, the run
+/// just takes longer. Both schedulers agree on the faulty run exactly.
+#[test]
+fn seeded_faults_deliver_exactly_once_in_clean_order() {
+    let plan = FaultPlan::new(0x5EED).flips(0.002).drops(0.05);
+    let clean = run_digest(&MESH, 2, pins8(), SimEngine::EventDriven, 400, None);
+    let faulty: Vec<_> = SimEngine::ALL
+        .iter()
+        .map(|&eng| run_digest(&MESH, 2, pins8(), eng, 400, Some(&plan)))
+        .collect();
+    assert_eq!(faulty[0], faulty[1], "schedulers disagree under faults");
+    let f = &faulty[0];
+    assert_eq!(f.1.injected, clean.1.injected, "fault plan changed injection");
+    assert_eq!(f.1.delivered, clean.1.delivered, "faulty fabric lost or duplicated flits");
+    assert_eq!(f.1.link_hops, clean.1.link_hops, "wire replays leaked into router hops");
+    assert_eq!(
+        per_pair_sequences(&f.2),
+        per_pair_sequences(&clean.2),
+        "faults reordered or corrupted delivered messages"
+    );
+    assert!(f.3 > 0, "this rate must force retransmissions");
+    assert!(
+        f.0 > clean.0,
+        "recovery must cost cycles (faulty {} vs clean {})",
+        f.0,
+        clean.0
+    );
+}
+
+/// A whole chip dropping off the fabric mid-run (every link down for a
+/// window) is survived: traffic queues at the gateways, replays when the
+/// chip returns, and the message set is untouched.
+#[test]
+fn chip_outage_is_survived_with_exact_delivery() {
+    let plan = FaultPlan::new(3).chip_down(1, 40, 400);
+    let clean = run_digest(&MESH, 2, pins8(), SimEngine::EventDriven, 300, None);
+    let out = run_digest(&MESH, 2, pins8(), SimEngine::EventDriven, 300, Some(&plan));
+    assert_eq!(out.1.delivered, clean.1.delivered, "outage lost flits");
+    assert_eq!(per_pair_sequences(&out.2), per_pair_sequences(&clean.2));
+    assert!(out.5 > 0, "downtime counter never ticked during the outage");
+    assert!(out.0 >= clean.0 + 100, "a 360-cycle outage must delay completion");
+}
+
+/// The degraded registry scenarios conform to the monolithic fabric the
+/// same way clean ones do in `multichip_diff`: faults on the wires must
+/// be invisible in WHAT is delivered, monolithic vs sharded.
+#[test]
+fn degraded_scenarios_match_monolithic_delivery() {
+    fn pairs(ejects: &[EjectRecord]) -> BTreeMap<(usize, usize), Vec<(u32, u64)>> {
+        let mut seq: BTreeMap<(usize, usize), Vec<(u32, u64)>> = BTreeMap::new();
+        for e in ejects {
+            seq.entry((e.endpoint, e.src)).or_default().push((e.tag, e.data));
+        }
+        seq
+    }
+    let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+    let partition = Partition::balanced(&MESH.build(), 2, 42);
+    for name in ["degraded-uniform", "degraded-chipdrop"] {
+        let scn = scenario::find(name).unwrap_or_else(|| panic!("{name} not registered"));
+        assert!(scn.fault.is_some(), "{name} lost its fault spec");
+        let mono = scenario::run_scenario(&scn, &MESH, cfg, 0.1, 300, 1)
+            .unwrap_or_else(|e| panic!("{name} (mono): {e}"));
+        let sharding = scenario::Sharding { partition: &partition, serdes: pins8() };
+        let sh = scenario::run_scenario_multichip(&scn, &MESH, cfg, &sharding, 0.1, 300, 1)
+            .unwrap_or_else(|e| panic!("{name} (sharded): {e}"));
+        assert_eq!(sh.report.net.delivered, mono.report.net.delivered, "{name}");
+        assert_eq!(pairs(&sh.ejects), pairs(&mono.ejects), "{name}");
+        assert!(sh.report.cycles >= mono.report.cycles, "{name}");
+    }
+}
+
+/// Heavy matrix: fault rates × serdes pin widths × schedulers, each cell
+/// checked for exact-once delivery in clean per-pair order against the
+/// same-pins clean baseline.
+#[test]
+#[ignore = "heavy matrix: run with --release in the CI conformance job"]
+fn fault_matrix_survives_across_rates_pins_and_schedulers() {
+    for pins in [1u32, 7, 8, 32] {
+        let serdes = SerdesConfig { pins, clock_div: 1, tx_buffer: 8 };
+        let clean = run_digest(&MESH, 2, serdes, SimEngine::EventDriven, 400, None);
+        for rate in [1e-4, 1e-3, 1e-2] {
+            let plan = FaultPlan::new(0xABCD ^ rate.to_bits()).flips(rate).drops(rate);
+            let runs: Vec<_> = SimEngine::ALL
+                .iter()
+                .map(|&eng| run_digest(&MESH, 2, serdes, eng, 400, Some(&plan)))
+                .collect();
+            let ctx = format!("pins={pins} rate={rate}");
+            assert_eq!(runs[0], runs[1], "schedulers disagree: {ctx}");
+            let f = &runs[0];
+            assert_eq!(f.1.delivered, clean.1.delivered, "{ctx}");
+            assert_eq!(
+                per_pair_sequences(&f.2),
+                per_pair_sequences(&clean.2),
+                "{ctx}"
+            );
+            assert!(f.0 > clean.0, "{ctx}: CRC stretch alone must cost cycles");
+        }
+    }
+}
+
+/// 4-way partitions with a mid-run single-link outage on every fourth
+/// link, on top of background corruption.
+#[test]
+#[ignore = "heavy matrix: run with --release in the CI conformance job"]
+fn four_way_partition_survives_link_outages_under_corruption() {
+    let serdes = pins8();
+    let clean = run_digest(&MESH, 4, serdes, SimEngine::EventDriven, 400, None);
+    let n_links = {
+        let graph = MESH.build();
+        let partition = Partition::balanced(&graph, 4, 42);
+        let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+        MultiChipSim::from_graph(graph, cfg, &partition, serdes).link_stats().len()
+    };
+    assert!(n_links >= 4, "4-way mesh partition must cut at least 4 directed links");
+    let mut plan = FaultPlan::new(0xF00D).flips(0.001).drops(0.02);
+    for link in (0..n_links).step_by(4) {
+        plan = plan.link_down(link, 60 + 10 * link as u64, 260 + 10 * link as u64);
+    }
+    let out = run_digest(&MESH, 4, serdes, SimEngine::EventDriven, 400, Some(&plan));
+    assert_eq!(out.1.delivered, clean.1.delivered, "outages lost flits");
+    assert_eq!(per_pair_sequences(&out.2), per_pair_sequences(&clean.2));
+    assert!(out.5 > 0, "no downtime recorded across the outage windows");
+}
