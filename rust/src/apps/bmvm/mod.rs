@@ -11,6 +11,11 @@
 //! * [`BmvmSystem`] — the NoC mapping: PE-per-folded-block-column over
 //!   ring / mesh / torus / fat tree, timed in fabric cycles at 100 MHz
 //!   plus the RIFFA host-link model ([`hostlink::HostLink`]).
+//!
+//! Every path also has a batched lane: [`WilliamsLuts::matvec_batch`],
+//! [`software::run_software_batch`] and [`BmvmSystem::run_batch`] carry
+//! up to 64 independent vectors per pass/traversal, each lane
+//! bit-identical to its scalar counterpart.
 
 pub mod williams;
 pub mod software;
@@ -35,6 +40,17 @@ pub struct BmvmRunReport {
     /// (the quantity Tables IV–V report for the hardware).
     pub time_ms: f64,
     /// Unified flow report (fabric cycles, NoC stats, per-PE stats).
+    pub report: RunReport,
+}
+
+/// Result + metrics of a batched (bitsliced) hardware run.
+#[derive(Clone, Debug)]
+pub struct BmvmBatchRunReport {
+    /// One result vector per input lane, `results[l] == A^r · vs[l]`.
+    pub results: Vec<BitVec>,
+    /// End-to-end time including the host-link roundtrip for the whole
+    /// batch (I/O scales with lanes, fabric cycles are shared).
+    pub time_ms: f64,
     pub report: RunReport,
 }
 
@@ -132,6 +148,69 @@ impl BmvmSystem {
         BmvmRunReport { result, time_ms, report }
     }
 
+    /// Batched run: `A^r · vs[l]` for up to 64 lanes in one fabric
+    /// traversal, using [`pe::SlicedBmvmPe`] so every inter-PE message
+    /// carries all lanes. Lane `l` of the result is bit-identical to
+    /// `run(&vs[l], r, partition).result`.
+    pub fn run_batch(
+        &self,
+        vs: &[BitVec],
+        r: u32,
+        partition: Option<(&Partition, SerdesConfig)>,
+    ) -> BmvmBatchRunReport {
+        assert!(r >= 1);
+        let lanes = vs.len();
+        assert!((1..=64).contains(&lanes), "1..=64 lanes");
+        let lane_parts: Vec<Vec<u64>> =
+            vs.iter().map(|v| self.luts.split_vector(v)).collect();
+        let peers: Vec<NodeId> = (0..self.n_pes).collect();
+        let mut fb = FlowBuilder::new("bmvm_batch");
+        fb.noc(NocConfig::paper())
+            .topology(self.topo.clone())
+            .max_cycles(2_000_000_000);
+        for p in 0..self.n_pes {
+            fb.pe_at(
+                &format!("pe{p}"),
+                p,
+                Box::new(pe::SlicedBmvmPe::new(
+                    &self.luts,
+                    &lane_parts,
+                    p,
+                    self.n_pes,
+                    r,
+                    peers.clone(),
+                )),
+            );
+            fb.channel(&format!("pe{p}"), &format!("pe{}", (p + 1) % self.n_pes));
+        }
+        if let Some((p, serdes)) = partition {
+            fb.partition(p.clone()).serdes(serdes);
+        }
+        let mut flow = fb.build().expect("BMVM batch flow layout is valid");
+        let report = flow.run().expect("BMVM batch reaches quiescence");
+        // Readback is lane-major per PE: rows[l*f..(l+1)*f] of PE p are
+        // lane l's owned result sub-vectors.
+        let f = self.fold();
+        let per_pe: Vec<Vec<u64>> = (0..self.n_pes)
+            .map(|p| {
+                flow.readback(&format!("pe{p}"))
+                    .expect("BMVM PE has result memory")
+            })
+            .collect();
+        let results: Vec<BitVec> = (0..lanes)
+            .map(|l| {
+                let mut all = Vec::with_capacity(self.luts.blocks);
+                for rows in &per_pe {
+                    all.extend_from_slice(&rows[l * f..(l + 1) * f]);
+                }
+                self.luts.join_vector(&all)
+            })
+            .collect();
+        let io_bits = (lanes * self.luts.n) as u64;
+        let time_ms = self.host.total_ms(report.cycles, 100e6, io_bits, io_bits);
+        BmvmBatchRunReport { results, time_ms, report }
+    }
+
     /// Total BRAM bits the folded LUTs occupy across the PE array.
     pub fn bram_bits(&self) -> u64 {
         self.luts.storage_bits()
@@ -221,6 +300,58 @@ mod tests {
         assert!(split.report.cycles > mono.report.cycles);
         assert_eq!(split.report.n_fpgas, 2);
         assert!(split.report.cut_links > 0);
+    }
+
+    #[test]
+    fn batched_noc_lanes_match_scalar_runs_bit_identically() {
+        let mut rng = Rng::new(53);
+        let (a, sys) = table4_system(&mut rng);
+        for lanes in [1usize, 3] {
+            let vs: Vec<BitVec> =
+                (0..lanes).map(|_| BitVec::random(64, &mut rng)).collect();
+            let batch = sys.run_batch(&vs, 5, None);
+            assert_eq!(batch.results.len(), lanes);
+            for (l, v) in vs.iter().enumerate() {
+                assert_eq!(
+                    batch.results[l],
+                    sys.run(v, 5, None).result,
+                    "lanes={lanes} lane={l}"
+                );
+                assert_eq!(batch.results[l], dense_power_matvec(&a, v, 5));
+            }
+        }
+    }
+
+    #[test]
+    fn batched_noc_survives_the_two_chip_partition() {
+        let mut rng = Rng::new(59);
+        let (a, sys) = table4_system(&mut rng);
+        let vs: Vec<BitVec> = (0..2).map(|_| BitVec::random(64, &mut rng)).collect();
+        let mono = sys.run_batch(&vs, 4, None);
+        let part = Partition::new(2, vec![0, 0, 1, 1]);
+        let split = sys.run_batch(&vs, 4, Some((&part, SerdesConfig::default())));
+        for (l, v) in vs.iter().enumerate() {
+            assert_eq!(split.results[l], dense_power_matvec(&a, v, 4), "lane={l}");
+            assert_eq!(split.results[l], mono.results[l]);
+        }
+        assert!(split.report.cycles > mono.report.cycles);
+        assert_eq!(split.report.n_fpgas, 2);
+    }
+
+    #[test]
+    fn batch_shares_fabric_cycles_across_lanes() {
+        let mut rng = Rng::new(61);
+        let (_, sys) = table4_system(&mut rng);
+        let vs: Vec<BitVec> = (0..8).map(|_| BitVec::random(64, &mut rng)).collect();
+        let batch = sys.run_batch(&vs, 6, None);
+        let scalar_total: u64 =
+            vs.iter().map(|v| sys.run(v, 6, None).report.cycles).sum();
+        // 8 lanes ride one traversal: far fewer cycles than 8 scalar runs.
+        assert!(
+            batch.report.cycles < scalar_total,
+            "batch {} vs scalar total {scalar_total}",
+            batch.report.cycles
+        );
     }
 
     #[test]

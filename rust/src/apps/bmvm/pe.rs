@@ -249,6 +249,238 @@ impl Processor for BmvmPe {
     }
 }
 
+/// Set a `width`-bit field at bit offset `lo` of a multi-word payload
+/// (fields may straddle a word boundary; `width` ≤ 64, target bits must
+/// be zero — payload buffers come zeroed from the [`MsgSink`] pool).
+#[inline]
+fn field_set(p: &mut [u64], lo: usize, width: usize, val: u64) {
+    let v = val & (u64::MAX >> (64 - width));
+    let (w, off) = (lo / 64, lo % 64);
+    p[w] |= v << off;
+    if off + width > 64 {
+        p[w + 1] |= v >> (64 - off);
+    }
+}
+
+/// Read a `width`-bit field at bit offset `lo` of a multi-word payload.
+#[inline]
+fn field_get(p: &[u64], lo: usize, width: usize) -> u64 {
+    let mask = u64::MAX >> (64 - width);
+    let (w, off) = (lo / 64, lo % 64);
+    let mut v = p[w] >> off;
+    if off + width > 64 {
+        v |= p[w + 1] << (64 - off);
+    }
+    v & mask
+}
+
+/// Bitsliced BMVM processing element: the same folded-column dataflow as
+/// [`BmvmPe`], but carrying up to 64 independent vector lanes per epoch.
+/// Every inter-PE batch packs all lanes' `f` k-bit sub-words into one
+/// `lanes · f · k`-bit message (lane-major fields), so one fabric
+/// traversal advances every lane by an iteration. Lane `l` of the result
+/// is bit-identical to a scalar [`BmvmPe`] run over `vs[l]` — XOR
+/// accumulation is order-insensitive and each lane's masks, LUT reads and
+/// row folds are untouched by its neighbours.
+pub struct SlicedBmvmPe {
+    pub pe: usize,
+    n_pes: usize,
+    k: usize,
+    f: usize,
+    blocks: usize,
+    lanes: usize,
+    r: u32,
+    /// Owned columns' LUTs: `lut[c][mask * blocks + j]` (shared by lanes).
+    lut: Vec<Vec<u64>>,
+    /// Lane-major owned sub-vector masks: `v[l*f + c]`.
+    v: Vec<u64>,
+    peers: Vec<NodeId>,
+    /// epoch → (remote batches received, lane-major accumulated rows).
+    acc: HashMap<u32, (usize, Vec<u64>)>,
+    epoch: u32,
+    /// Scratch: lane-major per-epoch contributions (`lanes · blocks`).
+    contrib: Vec<u64>,
+    slot_pool: Vec<Vec<u64>>,
+    pub lut_reads: u64,
+}
+
+impl SlicedBmvmPe {
+    /// Carve PE `pe` out of the LUTs for a batch of lanes. `lane_parts[l]`
+    /// is lane `l`'s full initial vector split into block masks.
+    pub fn new(
+        luts: &WilliamsLuts,
+        lane_parts: &[Vec<u64>],
+        pe: usize,
+        n_pes: usize,
+        r: u32,
+        peers: Vec<NodeId>,
+    ) -> Self {
+        assert_eq!(peers.len(), n_pes);
+        assert_eq!(luts.blocks % n_pes, 0, "blocks must fold evenly over PEs");
+        let lanes = lane_parts.len();
+        assert!((1..=64).contains(&lanes), "1..=64 lanes");
+        let f = luts.blocks / n_pes;
+        let lut: Vec<Vec<u64>> = (0..f)
+            .map(|c| {
+                let col = pe * f + c;
+                (0..(1usize << luts.k) * luts.blocks)
+                    .map(|idx| {
+                        let mask = idx / luts.blocks;
+                        let j = idx % luts.blocks;
+                        luts.partition(col, mask as u64)[j]
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut v = Vec::with_capacity(lanes * f);
+        for parts in lane_parts {
+            assert_eq!(parts.len(), luts.blocks);
+            v.extend_from_slice(&parts[pe * f..(pe + 1) * f]);
+        }
+        SlicedBmvmPe {
+            pe,
+            n_pes,
+            k: luts.k,
+            f,
+            blocks: luts.blocks,
+            lanes,
+            r,
+            lut,
+            v,
+            peers,
+            acc: HashMap::new(),
+            epoch: 0,
+            contrib: Vec::new(),
+            slot_pool: Vec::new(),
+            lut_reads: 0,
+        }
+    }
+
+    /// Per-lane contributions for the current `self.v`, pre-XOR'd per
+    /// destination block row, lane-major into the `contrib` scratch.
+    fn compute_contributions(&mut self) {
+        self.contrib.clear();
+        self.contrib.resize(self.lanes * self.blocks, 0);
+        for l in 0..self.lanes {
+            let lane = &mut self.contrib[l * self.blocks..(l + 1) * self.blocks];
+            for c in 0..self.f {
+                let mask = self.v[l * self.f + c] as usize;
+                let words = &self.lut[c][mask * self.blocks..(mask + 1) * self.blocks];
+                self.lut_reads += self.blocks as u64;
+                for (j, &w) in words.iter().enumerate() {
+                    lane[j] ^= w;
+                }
+            }
+        }
+    }
+
+    fn acc_slot(&mut self, epoch: u32) -> &mut (usize, Vec<u64>) {
+        let SlicedBmvmPe { acc, slot_pool, f, lanes, .. } = self;
+        let words = *f * *lanes;
+        acc.entry(epoch)
+            .or_insert_with(|| (0, crate::util::pooled_words(slot_pool, words)))
+    }
+
+    /// Emit the scatter for epoch `e` and fold in the self-contribution.
+    fn send_epoch(&mut self, e: u32, out: &mut MsgSink) {
+        self.compute_contributions();
+        let (pe, f, k, lanes, blocks) = (self.pe, self.f, self.k, self.lanes, self.blocks);
+        let contrib = std::mem::take(&mut self.contrib);
+        {
+            let slot = self.acc_slot(e);
+            for l in 0..lanes {
+                for row in 0..f {
+                    slot.1[l * f + row] ^= contrib[l * blocks + pe * f + row];
+                }
+            }
+        }
+        for dst in 0..self.n_pes {
+            if dst == pe {
+                continue;
+            }
+            let payload = out.message(self.peers[dst], 0, e, lanes * f * k);
+            for l in 0..lanes {
+                for i in 0..f {
+                    field_set(
+                        payload,
+                        (l * f + i) * k,
+                        k,
+                        contrib[l * blocks + dst * f + i],
+                    );
+                }
+            }
+        }
+        self.contrib = contrib;
+    }
+
+    /// Complete every epoch whose gather is full.
+    fn maybe_finalize(&mut self, out: &mut MsgSink) {
+        loop {
+            let complete = self
+                .acc
+                .get(&self.epoch)
+                .map_or(false, |(got, _)| *got == self.n_pes - 1);
+            if !complete {
+                break;
+            }
+            let (_, rows) = self.acc.remove(&self.epoch).unwrap();
+            let spent = std::mem::replace(&mut self.v, rows);
+            self.slot_pool.push(spent);
+            self.epoch += 1;
+            if self.epoch < self.r {
+                let e = self.epoch;
+                self.send_epoch(e, out);
+            }
+        }
+    }
+}
+
+impl Processor for SlicedBmvmPe {
+    fn spec(&self) -> WrapperSpec {
+        let bits = self.lanes * self.f * self.k;
+        WrapperSpec::new(vec![bits], vec![bits])
+    }
+
+    fn latency_hint(&self, args: &[ArgMessage]) -> u64 {
+        let completes = args
+            .first()
+            .map(|a| {
+                a.epoch == self.epoch
+                    && self
+                        .acc
+                        .get(&self.epoch)
+                        .map_or(self.n_pes == 2, |(got, _)| got + 2 == self.n_pes)
+            })
+            .unwrap_or(false);
+        if completes && self.epoch + 1 < self.r {
+            2 + (self.lanes * self.f * self.blocks) as u64 / 2
+        } else {
+            2
+        }
+    }
+
+    fn boot(&mut self, out: &mut MsgSink) {
+        self.send_epoch(0, out);
+        self.maybe_finalize(out);
+    }
+
+    fn process(&mut self, args: &[ArgMessage], _epoch: u32, out: &mut MsgSink) {
+        let (f, k, lanes) = (self.f, self.k, self.lanes);
+        let slot = self.acc_slot(args[0].epoch);
+        slot.0 += 1;
+        for l in 0..lanes {
+            for i in 0..f {
+                slot.1[l * f + i] ^= field_get(&args[0].payload, (l * f + i) * k, k);
+            }
+        }
+        self.maybe_finalize(out);
+    }
+
+    fn readback(&self) -> Option<Vec<u64>> {
+        Some(self.v.clone())
+    }
+}
+
 /// Per-PE FPGA cost: the coalesced LUT in BRAM, lookup address logic, the
 /// XOR accumulators and epoch bookkeeping (Fig 14's PE block).
 pub fn bmvm_pe_resources(k: usize, f: usize, blocks: usize) -> Resources {
@@ -293,6 +525,56 @@ mod tests {
             let words: Vec<u64> = (0..pe.f).map(|_| rng.below(16)).collect();
             assert_eq!(pe.unpack(pe.pack(&words)), words);
         }
+    }
+
+    #[test]
+    fn field_helpers_roundtrip_across_word_boundaries() {
+        let mut rng = Rng::new(31);
+        // 5-bit fields over 3 words: offsets 60..65 straddle word 0/1.
+        for width in [3usize, 5, 13, 16] {
+            let n_fields = 192 / width;
+            let vals: Vec<u64> = (0..n_fields).map(|_| rng.below(1 << width)).collect();
+            let mut p = vec![0u64; 3];
+            for (i, &v) in vals.iter().enumerate() {
+                field_set(&mut p, i * width, width, v);
+            }
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(field_get(&p, i * width, width), v, "width={width} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_sliced_pe_runs_all_lanes_in_boot() {
+        let mut rng = Rng::new(37);
+        let a = Gf2Matrix::random(16, 16, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let vs: Vec<BitVec> = (0..5).map(|_| BitVec::random(16, &mut rng)).collect();
+        let lane_parts: Vec<Vec<u64>> = vs.iter().map(|v| luts.split_vector(v)).collect();
+        let mut pe = SlicedBmvmPe::new(&luts, &lane_parts, 0, 1, 6, vec![0]);
+        let mut sink = MsgSink::new();
+        pe.boot(&mut sink);
+        assert!(sink.is_empty(), "single PE sends nothing");
+        let rows = pe.readback().unwrap();
+        let f = luts.blocks;
+        for (l, v) in vs.iter().enumerate() {
+            let got = luts.join_vector(&rows[l * f..(l + 1) * f]);
+            let want = super::super::williams::dense_power_matvec(&a, v, 6);
+            assert_eq!(got, want, "lane={l}");
+        }
+    }
+
+    #[test]
+    fn sliced_pe_spec_scales_message_width_with_lanes() {
+        let mut rng = Rng::new(41);
+        let a = Gf2Matrix::random(32, 32, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 4);
+        let parts = luts.split_vector(&BitVec::zeros(32));
+        let scalar = BmvmPe::new(&luts, &parts, 0, 4, 1, vec![0, 1, 2, 3]);
+        let lane_parts = vec![parts.clone(); 8];
+        let sliced = SlicedBmvmPe::new(&luts, &lane_parts, 0, 4, 1, vec![0, 1, 2, 3]);
+        assert_eq!(scalar.spec().arg_bits, vec![scalar.f * scalar.k]);
+        assert_eq!(sliced.spec().arg_bits, vec![8 * scalar.f * scalar.k]);
     }
 
     #[test]

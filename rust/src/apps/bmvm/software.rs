@@ -113,6 +113,127 @@ pub fn run_software(luts: &WilliamsLuts, v: &BitVec, r: u32, n_pes: usize) -> So
     SoftwareRun { result, elapsed: start.elapsed() }
 }
 
+/// Result of a batched software run.
+pub struct SoftwareBatchRun {
+    /// One result vector per input lane, `results[l] == A^r · vs[l]`.
+    pub results: Vec<BitVec>,
+    /// Wall clock including thread create/join.
+    pub elapsed: Duration,
+}
+
+/// Batched `A^r · vs[l]` for up to 64 lanes with `n_pes` threads: the
+/// same epoch-tagged dataflow as [`run_software`], but every message
+/// carries the concatenated per-lane sub-batches (`lanes · f` words,
+/// lane-major), so the thread create/join and per-epoch send/recv costs
+/// are amortized over the whole batch. Lane `l` of the result is
+/// bit-identical to `run_software(luts, &vs[l], r, n_pes).result`.
+pub fn run_software_batch(
+    luts: &WilliamsLuts,
+    vs: &[BitVec],
+    r: u32,
+    n_pes: usize,
+) -> SoftwareBatchRun {
+    assert!(n_pes >= 1 && luts.blocks % n_pes == 0, "blocks must fold evenly");
+    let lanes = vs.len();
+    assert!((1..=64).contains(&lanes), "1..=64 lanes");
+    let f = luts.blocks / n_pes;
+    let parts: Vec<Vec<u64>> = vs.iter().map(|v| luts.split_vector(v)).collect();
+    let start = Instant::now();
+    let mut final_parts: Vec<(usize, Vec<u64>)> = Vec::with_capacity(n_pes);
+
+    std::thread::scope(|scope| {
+        let mut senders: Vec<mpsc::Sender<(u32, usize, Vec<u64>)>> = Vec::new();
+        let mut receivers: Vec<mpsc::Receiver<(u32, usize, Vec<u64>)>> = Vec::new();
+        for _ in 0..n_pes {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let (done_tx, done_rx) = mpsc::channel::<(usize, Vec<u64>)>();
+
+        for (pe, rx) in receivers.into_iter().enumerate() {
+            let senders = senders.clone();
+            let done = done_tx.clone();
+            // Lane-major local state: v_local[l*f + c] = lane l, column c.
+            let mut my_v: Vec<u64> = Vec::with_capacity(lanes * f);
+            for lane_parts in &parts {
+                my_v.extend_from_slice(&lane_parts[pe * f..(pe + 1) * f]);
+            }
+            let luts = &luts;
+            scope.spawn(move || {
+                let mut v_local = my_v;
+                let mut pending: HashMap<u32, (usize, Vec<u64>)> = HashMap::new();
+                for epoch in 0..r {
+                    // Per-lane contributions, lane-major over block rows.
+                    let mut contrib = vec![0u64; lanes * luts.blocks];
+                    for l in 0..lanes {
+                        let lane = &mut contrib[l * luts.blocks..(l + 1) * luts.blocks];
+                        for c in 0..f {
+                            let col = pe * f + c;
+                            for (j, &w) in
+                                luts.partition(col, v_local[l * f + c]).iter().enumerate()
+                            {
+                                lane[j] ^= w;
+                            }
+                        }
+                    }
+                    // One lanes·f-word batch per destination PE.
+                    for (dst, tx) in senders.iter().enumerate() {
+                        if dst == pe {
+                            continue;
+                        }
+                        let mut batch = Vec::with_capacity(lanes * f);
+                        for l in 0..lanes {
+                            let lane = &contrib[l * luts.blocks..(l + 1) * luts.blocks];
+                            batch.extend_from_slice(&lane[dst * f..(dst + 1) * f]);
+                        }
+                        tx.send((epoch, pe, batch)).expect("peer alive");
+                    }
+                    let entry = pending
+                        .entry(epoch)
+                        .or_insert_with(|| (0, vec![0u64; lanes * f]));
+                    for l in 0..lanes {
+                        let lane = &contrib[l * luts.blocks..(l + 1) * luts.blocks];
+                        for row in 0..f {
+                            entry.1[l * f + row] ^= lane[pe * f + row];
+                        }
+                    }
+                    while pending.get(&epoch).unwrap().0 < n_pes - 1 {
+                        let (e, _src, batch) = rx.recv().expect("channel open");
+                        let slot = pending
+                            .entry(e)
+                            .or_insert_with(|| (0, vec![0u64; lanes * f]));
+                        slot.0 += 1;
+                        for (acc, w) in slot.1.iter_mut().zip(&batch) {
+                            *acc ^= *w;
+                        }
+                    }
+                    let (_, acc) = pending.remove(&epoch).unwrap();
+                    v_local = acc;
+                }
+                done.send((pe, v_local)).expect("main alive");
+            });
+        }
+        drop(done_tx);
+        drop(senders);
+        for _ in 0..n_pes {
+            final_parts.push(done_rx.recv().expect("all threads complete"));
+        }
+    });
+
+    final_parts.sort_by_key(|&(pe, _)| pe);
+    let results = (0..lanes)
+        .map(|l| {
+            let mut all = Vec::with_capacity(luts.blocks);
+            for (_, p) in &final_parts {
+                all.extend_from_slice(&p[l * f..(l + 1) * f]);
+            }
+            luts.join_vector(&all)
+        })
+        .collect();
+    SoftwareBatchRun { results, elapsed: start.elapsed() }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +267,27 @@ mod tests {
         let run = run_software(&luts, &v, 10, 16);
         assert_eq!(run.result, dense_power_matvec(&a, &v, 10));
         assert!(run.elapsed.as_nanos() > 0);
+    }
+
+    #[test]
+    fn batched_software_lanes_match_scalar_runs() {
+        let mut rng = Rng::new(23);
+        let a = Gf2Matrix::random(64, 64, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 8);
+        for lanes in [1usize, 3, 8] {
+            let vs: Vec<BitVec> =
+                (0..lanes).map(|_| BitVec::random(64, &mut rng)).collect();
+            let run = run_software_batch(&luts, &vs, 6, 4);
+            assert_eq!(run.results.len(), lanes);
+            for (l, v) in vs.iter().enumerate() {
+                assert_eq!(
+                    run.results[l],
+                    run_software(&luts, v, 6, 4).result,
+                    "lanes={lanes} lane={l}"
+                );
+                assert_eq!(run.results[l], dense_power_matvec(&a, v, 6));
+            }
+        }
     }
 
     #[test]

@@ -114,6 +114,35 @@ impl WilliamsLuts {
         }
         x
     }
+
+    /// Batched multiply: `vs.len() ≤ 64` vectors against the same A in
+    /// one pass. Block-major: the outer loop walks LUT columns so each
+    /// column's partitions stay cache-hot across every lane (the batch
+    /// analogue of the coalesced-LUT folding). XOR accumulation is
+    /// order-insensitive, so lane `l` is **bit-identical** to
+    /// `matvec(&vs[l])`.
+    pub fn matvec_batch(&self, vs: &[BitVec]) -> Vec<BitVec> {
+        assert!(!vs.is_empty() && vs.len() <= 64, "1..=64 lanes");
+        let parts: Vec<Vec<u64>> = vs.iter().map(|v| self.split_vector(v)).collect();
+        let mut outs = vec![vec![0u64; self.blocks]; vs.len()];
+        for i in 0..self.blocks {
+            for (part, out) in parts.iter().zip(outs.iter_mut()) {
+                for (j, &w) in self.partition(i, part[i]).iter().enumerate() {
+                    out[j] ^= w;
+                }
+            }
+        }
+        outs.iter().map(|o| self.join_vector(o)).collect()
+    }
+
+    /// Batched `A^r · v` (lane `l` == `matvec_iter(&vs[l], r)`).
+    pub fn matvec_iter_batch(&self, vs: &[BitVec], r: u32) -> Vec<BitVec> {
+        let mut xs: Vec<BitVec> = vs.to_vec();
+        for _ in 0..r {
+            xs = self.matvec_batch(&xs);
+        }
+        xs
+    }
 }
 
 /// Dense oracle for `A^r · v` (schoolbook, used only for verification).
@@ -203,6 +232,27 @@ mod tests {
         }
         assert_eq!(x, luts.matvec_iter(&v, 7));
         assert_eq!(x, dense_power_matvec(&a, &v, 7));
+    }
+
+    #[test]
+    fn batch_lanes_match_scalar_matvec_bit_identically() {
+        let mut rng = Rng::new(13);
+        let a = Gf2Matrix::random(64, 64, &mut rng);
+        let luts = WilliamsLuts::preprocess(&a, 8);
+        for lanes in [1usize, 8, 64] {
+            let vs: Vec<BitVec> =
+                (0..lanes).map(|_| BitVec::random(64, &mut rng)).collect();
+            let batch = luts.matvec_batch(&vs);
+            assert_eq!(batch.len(), lanes);
+            for (l, v) in vs.iter().enumerate() {
+                assert_eq!(batch[l], luts.matvec(v), "lanes={lanes} lane={l}");
+            }
+            let iter = luts.matvec_iter_batch(&vs, 5);
+            for (l, v) in vs.iter().enumerate() {
+                assert_eq!(iter[l], luts.matvec_iter(v, 5), "iter lane={l}");
+                assert_eq!(iter[l], dense_power_matvec(&a, v, 5));
+            }
+        }
     }
 
     #[test]

@@ -3,14 +3,24 @@
 //! (a decoder that corrects errors). Used by the `apps_bench` harness and
 //! the `fabricflow ldpc` workflows to show the PG-LDPC code actually
 //! earns its silicon.
+//!
+//! Two execution lanes compute the same statistics:
+//!
+//! * scalar — [`ber_point`] / [`ber_sweep_fleet`]: one
+//!   [`ReferenceDecoder`] frame at a time;
+//! * bitsliced — [`ber_point_sliced`] / [`ber_sweep_fleet_sliced`]: up to
+//!   64 seeds per fabric traversal through a [`SlicedDecoder`], each lane
+//!   **bit-identical** (decisions *and* the resulting f64 rates) to the
+//!   scalar point run with that lane's seed.
 
+use crate::gf2::bitslice::LANES;
 use crate::gf2::pg::PgLdpcCode;
-use crate::util::Rng;
+use crate::util::{Rng, SeedStream};
 
-use super::minsum::{MinsumVariant, ReferenceDecoder};
+use super::minsum::{MinsumVariant, ReferenceDecoder, SlicedDecoder};
 
 /// Result of a BSC sweep point.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BerPoint {
     /// Channel crossover probability.
     pub p: f64,
@@ -22,10 +32,53 @@ pub struct BerPoint {
     pub raw_ber: f64,
 }
 
-/// Monte-Carlo BER over a binary symmetric channel with crossover `p`,
-/// all-zeros codeword (the code is linear), `frames` trials, `niter`
-/// min-sum iterations. Deterministic in `seed`. Serial; equal to
-/// [`ber_sweep_fleet`] at one thread by definition.
+/// One Monte-Carlo BER point over a binary symmetric channel with
+/// crossover `p`, all-zeros codeword (the code is linear), `frames`
+/// trials, `niter` min-sum iterations. Deterministic in `seed`. This is
+/// the shared scalar inner loop of [`ber_sweep_fleet`] and the oracle the
+/// bitsliced lane is proven against.
+pub fn ber_point(
+    dec: &ReferenceDecoder,
+    p: f64,
+    frames: usize,
+    niter: u32,
+    amp: i32,
+    seed: u64,
+) -> BerPoint {
+    let n = dec.code.n;
+    let mut rng = Rng::new(seed);
+    let mut bit_errs = 0u64;
+    let mut frame_errs = 0u64;
+    let mut raw_errs = 0u64;
+    for _ in 0..frames {
+        let llr: Vec<i32> = (0..n)
+            .map(|_| {
+                if rng.chance(p) {
+                    raw_errs += 1;
+                    -amp
+                } else {
+                    amp
+                }
+            })
+            .collect();
+        let r = dec.decode(&llr, niter);
+        let errs = r.bits.iter().filter(|&&b| b != 0).count() as u64;
+        bit_errs += errs;
+        if errs > 0 {
+            frame_errs += 1;
+        }
+    }
+    BerPoint {
+        p,
+        ber: bit_errs as f64 / (frames * n) as f64,
+        fer: frame_errs as f64 / frames as f64,
+        raw_ber: raw_errs as f64 / (frames * n) as f64,
+    }
+}
+
+/// Monte-Carlo BER curve: one [`ber_point`] per crossover probability.
+/// Deterministic in `seed`. Serial; equal to [`ber_sweep_fleet`] at one
+/// thread by definition.
 pub fn ber_sweep(
     code: &PgLdpcCode,
     variant: MinsumVariant,
@@ -41,8 +94,10 @@ pub fn ber_sweep(
 /// [`ber_sweep`] on the fleet: the SNR (crossover) × seed grid fans out
 /// across `threads` pooled workers, one [`ReferenceDecoder`] per worker
 /// reused for every point it pulls. Each point's Monte-Carlo stream is
-/// seeded independently (`seed ^ hash(p)`), so the curve is
-/// **bit-identical for any thread count** and to the serial
+/// seeded from a SplitMix64 [`SeedStream`] rooted at `seed` (one
+/// statistically independent draw per point — not `seed ^ hash(p)`
+/// arithmetic, whose nearby outputs correlate the points), so the curve
+/// is **bit-identical for any thread count** and to the serial
 /// [`ber_sweep`] — the fleet only changes wall-clock, never statistics.
 #[allow(clippy::too_many_arguments)]
 pub fn ber_sweep_fleet(
@@ -55,39 +110,126 @@ pub fn ber_sweep_fleet(
     seed: u64,
     threads: usize,
 ) -> Vec<BerPoint> {
-    let n = code.n;
+    let jobs: Vec<(f64, u64)> = ps
+        .iter()
+        .copied()
+        .zip(SeedStream::take_seeds(seed, ps.len()))
+        .collect();
     crate::fleet::run_jobs(
-        ps,
+        &jobs,
         threads,
         |_| ReferenceDecoder::new(code.clone(), variant),
-        |dec, &p, _| {
-            let mut rng = Rng::new(seed ^ (p * 1e9) as u64);
-            let mut bit_errs = 0u64;
-            let mut frame_errs = 0u64;
-            let mut raw_errs = 0u64;
-            for _ in 0..frames {
-                let llr: Vec<i32> = (0..n)
-                    .map(|_| {
-                        if rng.chance(p) {
-                            raw_errs += 1;
-                            -amp
-                        } else {
-                            amp
-                        }
-                    })
-                    .collect();
-                let r = dec.decode(&llr, niter);
-                let errs = r.bits.iter().filter(|&&b| b != 0).count() as u64;
-                bit_errs += errs;
-                if errs > 0 {
-                    frame_errs += 1;
-                }
+        |dec, &(p, point_seed), _| ber_point(dec, p, frames, niter, amp, point_seed),
+    )
+}
+
+/// Per-lane seeds for a bitsliced point: lane 0 keeps `point_seed`
+/// itself (so a 1-lane sliced run is bit-identical to the scalar
+/// [`ber_point`] at that seed), lanes 1.. draw from the SplitMix64
+/// stream rooted at it.
+pub fn lane_seeds(point_seed: u64, lanes: usize) -> Vec<u64> {
+    assert!((1..=LANES).contains(&lanes));
+    let mut seeds = Vec::with_capacity(lanes);
+    seeds.push(point_seed);
+    seeds.extend(SeedStream::new(point_seed).take(lanes - 1));
+    seeds
+}
+
+/// Bitsliced Monte-Carlo BER point: `seeds.len() ≤ 64` independent
+/// seeds advance in lockstep through one [`SlicedDecoder`], one fabric
+/// traversal carrying every lane per frame. Returns one [`BerPoint`]
+/// per lane, each bit-identical (same decisions, same f64 divisions) to
+/// `ber_point(dec, p, frames, niter, amp, seeds[l])`.
+pub fn ber_point_sliced(
+    dec: &mut SlicedDecoder,
+    p: f64,
+    frames: usize,
+    niter: u32,
+    amp: i32,
+    seeds: &[u64],
+) -> Vec<BerPoint> {
+    let lanes = seeds.len();
+    assert!((1..=LANES).contains(&lanes));
+    let n = dec.code.n;
+    let mut rngs: Vec<Rng> = seeds.iter().map(|&s| Rng::new(s)).collect();
+    let mut bit_errs = vec![0u64; lanes];
+    let mut frame_errs = vec![0u64; lanes];
+    let mut raw_errs = vec![0u64; lanes];
+    let mut llr = vec![0i32; n];
+    let mut counts = [0u32; LANES];
+    for _ in 0..frames {
+        for (l, rng) in rngs.iter_mut().enumerate() {
+            for x in llr.iter_mut() {
+                *x = if rng.chance(p) {
+                    raw_errs[l] += 1;
+                    -amp
+                } else {
+                    amp
+                };
             }
+            dec.pack_lane(l, &llr);
+        }
+        dec.decode_packed(lanes, niter);
+        // All-zeros codeword: decided ones are exactly the bit errors,
+        // counted for all lanes at once from the decision planes.
+        dec.ones_per_lane(&mut counts);
+        for l in 0..lanes {
+            bit_errs[l] += counts[l] as u64;
+            if counts[l] > 0 {
+                frame_errs[l] += 1;
+            }
+        }
+    }
+    (0..lanes)
+        .map(|l| BerPoint {
+            p,
+            ber: bit_errs[l] as f64 / (frames * n) as f64,
+            fer: frame_errs[l] as f64 / frames as f64,
+            raw_ber: raw_errs[l] as f64 / (frames * n) as f64,
+        })
+        .collect()
+}
+
+/// [`ber_sweep_fleet`] with `lanes` bitsliced Monte-Carlo lanes per
+/// point: each point runs `frames` frames in each of `lanes` seeded
+/// lanes through one traversal, and the per-lane statistics aggregate
+/// into one [`BerPoint`] per crossover (`frames × lanes` effective
+/// frames). Point seeds come from the same [`SeedStream`] as the scalar
+/// fleet; lane seeds from [`lane_seeds`], so at `lanes == 1` the curve
+/// is bit-identical to [`ber_sweep_fleet`].
+#[allow(clippy::too_many_arguments)]
+pub fn ber_sweep_fleet_sliced(
+    code: &PgLdpcCode,
+    variant: MinsumVariant,
+    ps: &[f64],
+    frames: usize,
+    niter: u32,
+    amp: i32,
+    seed: u64,
+    threads: usize,
+    lanes: usize,
+) -> Vec<BerPoint> {
+    assert!((1..=LANES).contains(&lanes));
+    let jobs: Vec<(f64, u64)> = ps
+        .iter()
+        .copied()
+        .zip(SeedStream::take_seeds(seed, ps.len()))
+        .collect();
+    crate::fleet::run_jobs(
+        &jobs,
+        threads,
+        |_| SlicedDecoder::new(code.clone(), variant),
+        |dec, &(p, point_seed), _| {
+            let seeds = lane_seeds(point_seed, lanes);
+            let per_lane = ber_point_sliced(dec, p, frames, niter, amp, &seeds);
+            let bit_errs: f64 = per_lane.iter().map(|pt| pt.ber).sum::<f64>();
+            let fers: f64 = per_lane.iter().map(|pt| pt.fer).sum::<f64>();
+            let raws: f64 = per_lane.iter().map(|pt| pt.raw_ber).sum::<f64>();
             BerPoint {
                 p,
-                ber: bit_errs as f64 / (frames * n) as f64,
-                fer: frame_errs as f64 / frames as f64,
-                raw_ber: raw_errs as f64 / (frames * n) as f64,
+                ber: bit_errs / lanes as f64,
+                fer: fers / lanes as f64,
+                raw_ber: raws / lanes as f64,
             }
         },
     )
@@ -190,5 +332,59 @@ mod tests {
             pg2[0].ber,
             fano[0].ber
         );
+    }
+
+    #[test]
+    fn point_seeds_are_decorrelated_per_point() {
+        // Two points at the SAME p must draw different noise (the
+        // correlated failure mode of deriving the seed from p alone).
+        let code = PgLdpcCode::fano();
+        let pts = ber_sweep(&code, MinsumVariant::SignMagnitude, &[0.3, 0.3], 50, 4, 100, 11);
+        assert_ne!(
+            pts[0].raw_ber, pts[1].raw_ber,
+            "identical p must still get independent Monte-Carlo streams"
+        );
+    }
+
+    #[test]
+    fn sliced_point_lanes_match_scalar_points_bit_identically() {
+        let code = PgLdpcCode::fano();
+        let scalar = ReferenceDecoder::new(code.clone(), MinsumVariant::SignMagnitude);
+        let mut sliced = SlicedDecoder::new(code, MinsumVariant::SignMagnitude);
+        let seeds = lane_seeds(77, 8);
+        let got = ber_point_sliced(&mut sliced, 0.06, 60, 8, 100, &seeds);
+        for (l, &s) in seeds.iter().enumerate() {
+            let want = ber_point(&scalar, 0.06, 60, 8, 100, s);
+            assert_eq!(got[l].ber, want.ber, "lane {l}");
+            assert_eq!(got[l].fer, want.fer, "lane {l}");
+            assert_eq!(got[l].raw_ber, want.raw_ber, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn sliced_sweep_at_one_lane_equals_scalar_sweep() {
+        let code = PgLdpcCode::fano();
+        let ps = [0.02, 0.07, 0.15];
+        let scalar = ber_sweep_fleet(&code, MinsumVariant::SignMagnitude, &ps, 80, 8, 100, 5, 2);
+        let sliced =
+            ber_sweep_fleet_sliced(&code, MinsumVariant::SignMagnitude, &ps, 80, 8, 100, 5, 2, 1);
+        for (s, f) in scalar.iter().zip(&sliced) {
+            assert_eq!(s.ber, f.ber, "p={}", s.p);
+            assert_eq!(s.fer, f.fer, "p={}", s.p);
+            assert_eq!(s.raw_ber, f.raw_ber, "p={}", s.p);
+        }
+    }
+
+    #[test]
+    fn sliced_sweep_is_thread_invariant_and_lane_deterministic() {
+        let code = PgLdpcCode::fano();
+        let ps = [0.03, 0.1];
+        let a = ber_sweep_fleet_sliced(&code, MinsumVariant::SignMagnitude, &ps, 40, 8, 100, 13, 1, 8);
+        let b = ber_sweep_fleet_sliced(&code, MinsumVariant::SignMagnitude, &ps, 40, 8, 100, 13, 4, 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ber, y.ber);
+            assert_eq!(x.fer, y.fer);
+            assert_eq!(x.raw_ber, y.raw_ber);
+        }
     }
 }

@@ -15,7 +15,7 @@
 
 use crate::flow::{FlowBuilder, RunReport};
 use crate::gf2::pg::PgLdpcCode;
-use crate::noc::flit::NodeId;
+use crate::noc::flit::{depacketize, Flit, NodeId};
 use crate::noc::{NocConfig, Topology};
 use crate::partition::Partition;
 use crate::resources::{Device, Resources};
@@ -23,8 +23,9 @@ use crate::serdes::SerdesConfig;
 
 use super::minsum::{DecodeResult, MinsumVariant};
 use super::nodes::{
-    bit_node_resources, check_node_resources, wrapped_bit_node_resources,
-    wrapped_check_node_resources, BitNodePe, CheckNodePe, LdpcSourcePe,
+    bit_node_resources, check_node_resources, lane_get, wrapped_bit_node_resources,
+    wrapped_check_node_resources, BitNodePe, CheckNodePe, LdpcSourcePe, SlicedBitNodePe,
+    SlicedCheckNodePe, SlicedLdpcSourcePe,
 };
 use super::dec_llr;
 
@@ -33,6 +34,14 @@ use super::dec_llr;
 pub struct LdpcRunReport {
     pub result: DecodeResult,
     /// Unified flow report: cycles, NoC stats, per-PE stats, resources.
+    pub report: RunReport,
+}
+
+/// Outcome of one bitsliced decode over the NoC: one [`DecodeResult`]
+/// per lane, all carried by a single fabric traversal.
+#[derive(Clone, Debug)]
+pub struct SlicedLdpcRunReport {
+    pub results: Vec<DecodeResult>,
     pub report: RunReport,
 }
 
@@ -183,6 +192,120 @@ impl LdpcNocDecoder {
         }
     }
 
+    /// Assemble the bitsliced decode flow for `llrs` (one LLR vector per
+    /// lane): the same Fig 9 placement and Tanner-graph channels as
+    /// [`Self::flow`], but with sliced PEs whose messages carry all
+    /// lanes at once (`lanes × 16`-bit SoA flit payloads).
+    fn flow_sliced(&self, llrs: &[Vec<i32>]) -> FlowBuilder {
+        let lanes = llrs.len();
+        assert!((1..=64).contains(&lanes), "1..=64 lanes");
+        for llr in llrs {
+            assert_eq!(llr.len(), self.code.n);
+        }
+        let mut fb = FlowBuilder::new("ldpc_sliced");
+        fb.noc(NocConfig::paper())
+            .topology(self.topo.clone())
+            .max_cycles(10_000_000);
+        let check_nb = self.code.check_neighbors();
+        let bit_nb = self.code.bit_neighbors();
+        for (c, nb) in check_nb.iter().enumerate() {
+            let targets: Vec<(NodeId, u8)> = nb
+                .iter()
+                .map(|&b| {
+                    let pos = bit_nb[b].iter().position(|&x| x == c).unwrap();
+                    (self.bit_ep[b], (1 + pos) as u8)
+                })
+                .collect();
+            fb.pe_at(
+                &format!("check{c}"),
+                self.check_ep[c],
+                Box::new(SlicedCheckNodePe::new(self.variant, lanes, targets)),
+            );
+        }
+        for (b, nb) in bit_nb.iter().enumerate() {
+            let targets: Vec<(NodeId, u8)> = nb
+                .iter()
+                .map(|&c| {
+                    let pos = check_nb[c].iter().position(|&x| x == b).unwrap();
+                    (self.check_ep[c], pos as u8)
+                })
+                .collect();
+            fb.pe_at(
+                &format!("bit{b}"),
+                self.bit_ep[b],
+                Box::new(SlicedBitNodePe::new(self.niter, lanes, targets, self.sink_ep)),
+            );
+        }
+        fb.pe_at(
+            "source",
+            self.source_ep,
+            Box::new(SlicedLdpcSourcePe {
+                llr: llrs.to_vec(),
+                niter: self.niter,
+                bit_ep: self.bit_ep.clone(),
+                check_ep: self.check_ep.clone(),
+                check_args: check_nb,
+            }),
+        );
+        fb.tap_at("decisions", self.sink_ep);
+        for (b, nb) in bit_nb.iter().enumerate() {
+            for &c in nb {
+                fb.channel(&format!("bit{b}"), &format!("check{c}"));
+            }
+            fb.channel(&format!("bit{b}"), "decisions");
+        }
+        fb
+    }
+
+    /// Decode up to 64 codewords over the NoC in one traversal,
+    /// optionally partitioned across FPGAs. Per lane, the result is
+    /// bit-identical to [`Self::decode`] on that lane's LLRs (same node
+    /// arithmetic, same flooding schedule; only the flit payloads are
+    /// wider — cycle counts differ, results cannot).
+    pub fn decode_sliced(
+        &self,
+        llrs: &[Vec<i32>],
+        partition: Option<(&Partition, SerdesConfig)>,
+    ) -> SlicedLdpcRunReport {
+        let lanes = llrs.len();
+        let mut fb = self.flow_sliced(llrs);
+        if let Some((p, serdes)) = partition {
+            fb.partition(p.clone()).serdes(serdes);
+        }
+        let mut flow = fb.build().expect("sliced LDPC flow layout is valid");
+        let report = flow.run().expect("decode reaches quiescence");
+        // Each bit's decision is one lanes×16-bit message = several
+        // flits; depacketize per source bit endpoint (seq-addressed, so
+        // arrival order is irrelevant).
+        let width = NocConfig::paper().flit_data_width;
+        let mut per_bit: Vec<Vec<Flit>> = vec![Vec::new(); self.code.n];
+        for f in flow.drain("decisions") {
+            let b = self
+                .bit_ep
+                .iter()
+                .position(|&ep| ep == f.src)
+                .expect("sink message from non-bit endpoint");
+            per_bit[b].push(f);
+        }
+        let mut sums = vec![vec![0i32; self.code.n]; lanes];
+        for (b, flits) in per_bit.iter().enumerate() {
+            assert!(!flits.is_empty(), "missing decision for bit {b}");
+            let payload = depacketize(flits, 16 * lanes, width);
+            for (l, lane_sums) in sums.iter_mut().enumerate() {
+                lane_sums[b] = lane_get(&payload, l);
+            }
+        }
+        let results = sums
+            .into_iter()
+            .map(|s| {
+                let bits: Vec<u8> = s.iter().map(|&x| u8::from(x < 0)).collect();
+                let valid_codeword = self.code.is_codeword(&bits);
+                DecodeResult { bits, sums: s, valid_codeword }
+            })
+            .collect();
+        SlicedLdpcRunReport { results, report }
+    }
+
     /// The Fig 9 dotted arc: left two mesh columns vs right two.
     pub fn fig9_partition(&self) -> Partition {
         let Topology::Mesh { w, h } = self.topo else {
@@ -276,6 +399,42 @@ mod tests {
         assert_eq!(split.report.n_fpgas, 2);
         assert_eq!(split.report.cut_links, 4, "4 mesh rows cross the arc");
         assert!(split.report.serdes_flits > 0);
+    }
+
+    #[test]
+    fn sliced_noc_decode_lanes_match_scalar_noc_decode() {
+        for variant in [MinsumVariant::SignMagnitude, MinsumVariant::PaperListing] {
+            let dec = LdpcNocDecoder::fano_on_mesh(variant, 4);
+            let mut rng = Rng::new(0x500C);
+            let llrs: Vec<Vec<i32>> = (0..3)
+                .map(|_| (0..7).map(|_| rng.range_i64(-200, 200) as i32).collect())
+                .collect();
+            let sliced = dec.decode_sliced(&llrs, None);
+            assert_eq!(sliced.results.len(), 3);
+            for (l, llr) in llrs.iter().enumerate() {
+                let scalar = dec.decode(llr, None);
+                assert_eq!(
+                    sliced.results[l], scalar.result,
+                    "{variant:?} lane {l} diverged from the scalar NoC decode"
+                );
+            }
+            assert!(sliced.report.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn sliced_noc_decode_survives_the_fig9_partition() {
+        let dec = LdpcNocDecoder::fano_on_mesh(MinsumVariant::SignMagnitude, 5);
+        let mut rng = Rng::new(77);
+        let llrs: Vec<Vec<i32>> = (0..2)
+            .map(|_| (0..7).map(|_| rng.range_i64(-90, 90) as i32).collect())
+            .collect();
+        let mono = dec.decode_sliced(&llrs, None);
+        let p = dec.fig9_partition();
+        let split = dec.decode_sliced(&llrs, Some((&p, SerdesConfig::default())));
+        assert_eq!(split.results, mono.results, "partitioning changed sliced results");
+        assert!(split.report.cycles > mono.report.cycles);
+        assert_eq!(split.report.n_fpgas, 2);
     }
 
     #[test]

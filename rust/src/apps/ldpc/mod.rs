@@ -10,7 +10,9 @@
 //!
 //! Modules:
 //! * [`minsum`] — the monolithic reference decoder (flooding schedule,
-//!   saturating 16-bit LLR fixed point), the oracle for the NoC version.
+//!   saturating 16-bit LLR fixed point), the oracle for the NoC version,
+//!   plus the bitsliced [`SlicedDecoder`] that runs up to 64 lanes per
+//!   traversal, each bit-identical to the reference.
 //! * [`nodes`] — check/bit node datapaths + their PE wrappers + the
 //!   Table I resource models.
 //! * [`mapper`] — Fig 9: place 7 + 7 node PEs, a source and a sink on the
@@ -22,8 +24,8 @@ pub mod nodes;
 pub mod mapper;
 pub mod ber;
 
-pub use minsum::{MinsumVariant, ReferenceDecoder};
-pub use mapper::{LdpcNocDecoder, LdpcRunReport};
+pub use minsum::{MinsumVariant, ReferenceDecoder, SlicedDecoder};
+pub use mapper::{LdpcNocDecoder, LdpcRunReport, SlicedLdpcRunReport};
 
 /// Saturating 16-bit LLR fixed point used by every datapath (the FPGA
 /// nodes carry 8-bit inputs; sums of degree-4 values need 2 guard bits,

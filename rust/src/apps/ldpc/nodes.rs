@@ -152,6 +152,196 @@ impl Processor for LdpcSourcePe {
 }
 
 // ---------------------------------------------------------------------------
+// Bitsliced node PEs: one NoC message carries `lanes` codewords
+// ---------------------------------------------------------------------------
+
+/// Read lane `lane`'s 16-bit LLR field from a packed multi-lane payload
+/// (lane `l` occupies bits `l*16 .. l*16+16`, i.e. word `l/4`, shift
+/// `(l%4)*16` — the structure-of-arrays flit layout of the sliced PEs).
+#[inline]
+pub(crate) fn lane_get(payload: &[u64], lane: usize) -> i32 {
+    dec_llr(payload[lane / 4] >> ((lane % 4) * 16))
+}
+
+/// Write lane `lane`'s 16-bit LLR field (payload must start zeroed, as
+/// [`MsgSink::message`] buffers do).
+#[inline]
+pub(crate) fn lane_set(payload: &mut [u64], lane: usize, x: i32) {
+    payload[lane / 4] |= enc_llr(x) << ((lane % 4) * 16);
+}
+
+/// Bitsliced check node PE: the Fig 7 datapath replicated across
+/// `lanes` codewords, consuming/emitting `lanes × 16`-bit messages. Each
+/// lane computes exactly [`check_update`] — the NoC schedule is shared,
+/// the arithmetic per-lane.
+pub struct SlicedCheckNodePe {
+    pub variant: MinsumVariant,
+    pub lanes: usize,
+    /// Per edge position j: (bit endpoint, argument index there).
+    pub bit_targets: Vec<(NodeId, u8)>,
+    scratch_u: Vec<i32>,
+    scratch_o: Vec<i32>,
+    /// Per-edge × per-lane outputs, `d * lanes`.
+    out_lanes: Vec<i32>,
+}
+
+impl SlicedCheckNodePe {
+    pub fn new(variant: MinsumVariant, lanes: usize, bit_targets: Vec<(NodeId, u8)>) -> Self {
+        assert!((1..=64).contains(&lanes));
+        SlicedCheckNodePe {
+            variant,
+            lanes,
+            bit_targets,
+            scratch_u: Vec::new(),
+            scratch_o: Vec::new(),
+            out_lanes: Vec::new(),
+        }
+    }
+}
+
+impl Processor for SlicedCheckNodePe {
+    fn spec(&self) -> WrapperSpec {
+        let d = self.bit_targets.len();
+        WrapperSpec::new(vec![16 * self.lanes; d], vec![16 * self.lanes; d])
+    }
+
+    fn latency(&self) -> u64 {
+        // Replicated comparator trees run in parallel: same depth.
+        clog2(self.bit_targets.len()) as u64 + 1
+    }
+
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
+        let d = self.bit_targets.len();
+        self.out_lanes.clear();
+        self.out_lanes.resize(d * self.lanes, 0);
+        for l in 0..self.lanes {
+            self.scratch_u.clear();
+            self.scratch_u
+                .extend(args.iter().map(|a| lane_get(&a.payload, l)));
+            check_update(self.variant, &self.scratch_u, &mut self.scratch_o);
+            for (j, &v) in self.scratch_o.iter().enumerate() {
+                self.out_lanes[j * self.lanes + l] = v;
+            }
+        }
+        for (j, &(dst, arg)) in self.bit_targets.iter().enumerate() {
+            let p = out.message(dst, arg, epoch, 16 * self.lanes);
+            for l in 0..self.lanes {
+                lane_set(p, l, self.out_lanes[j * self.lanes + l]);
+            }
+        }
+    }
+}
+
+/// Bitsliced bit node PE: Fig 8 replicated across `lanes` codewords;
+/// per-lane [`bit_update`], shared schedule, `lanes × 16`-bit messages.
+pub struct SlicedBitNodePe {
+    pub niter: u32,
+    pub lanes: usize,
+    pub check_targets: Vec<(NodeId, u8)>,
+    pub sink: NodeId,
+    scratch_v: Vec<i32>,
+    scratch_o: Vec<i32>,
+    out_lanes: Vec<i32>,
+    sums: Vec<i32>,
+}
+
+impl SlicedBitNodePe {
+    pub fn new(niter: u32, lanes: usize, check_targets: Vec<(NodeId, u8)>, sink: NodeId) -> Self {
+        assert!((1..=64).contains(&lanes));
+        SlicedBitNodePe {
+            niter,
+            lanes,
+            check_targets,
+            sink,
+            scratch_v: Vec::new(),
+            scratch_o: Vec::new(),
+            out_lanes: Vec::new(),
+            sums: Vec::new(),
+        }
+    }
+}
+
+impl Processor for SlicedBitNodePe {
+    fn spec(&self) -> WrapperSpec {
+        let d = self.check_targets.len();
+        WrapperSpec::new(vec![16 * self.lanes; d + 1], vec![16 * self.lanes; d + 1])
+    }
+
+    fn latency(&self) -> u64 {
+        clog2(self.check_targets.len() + 1) as u64 + 2
+    }
+
+    fn process(&mut self, args: &[ArgMessage], epoch: u32, out: &mut MsgSink) {
+        let d = self.check_targets.len();
+        self.out_lanes.clear();
+        self.out_lanes.resize(d * self.lanes, 0);
+        self.sums.clear();
+        self.sums.resize(self.lanes, 0);
+        for l in 0..self.lanes {
+            let u0 = lane_get(&args[0].payload, l);
+            self.scratch_v.clear();
+            self.scratch_v
+                .extend(args[1..].iter().map(|a| lane_get(&a.payload, l)));
+            self.sums[l] = bit_update(u0, &self.scratch_v, &mut self.scratch_o);
+            for (j, &u) in self.scratch_o.iter().enumerate() {
+                self.out_lanes[j * self.lanes + l] = u;
+            }
+        }
+        if epoch + 1 < self.niter {
+            for (j, &(dst, arg)) in self.check_targets.iter().enumerate() {
+                let p = out.message(dst, arg, epoch + 1, 16 * self.lanes);
+                for l in 0..self.lanes {
+                    lane_set(p, l, self.out_lanes[j * self.lanes + l]);
+                }
+            }
+        } else {
+            let p = out.message(self.sink, 0, epoch, 16 * self.lanes);
+            for l in 0..self.lanes {
+                lane_set(p, l, self.sums[l]);
+            }
+        }
+    }
+}
+
+/// Bitsliced source PE: boots `lanes` decodes at once; message layout as
+/// the other sliced nodes. `llr[l]` is lane `l`'s channel LLR vector.
+pub struct SlicedLdpcSourcePe {
+    pub llr: Vec<Vec<i32>>,
+    pub niter: u32,
+    pub bit_ep: Vec<NodeId>,
+    pub check_ep: Vec<NodeId>,
+    pub check_args: Vec<Vec<usize>>,
+}
+
+impl Processor for SlicedLdpcSourcePe {
+    fn spec(&self) -> WrapperSpec {
+        WrapperSpec::new(vec![16 * self.llr.len()], vec![16 * self.llr.len()])
+    }
+
+    fn boot(&mut self, out: &mut MsgSink) {
+        let lanes = self.llr.len();
+        for (c, args) in self.check_args.iter().enumerate() {
+            for (pos, &bit) in args.iter().enumerate() {
+                let p = out.message(self.check_ep[c], pos as u8, 0, 16 * lanes);
+                for (l, llr) in self.llr.iter().enumerate() {
+                    lane_set(p, l, sat(llr[bit]));
+                }
+            }
+        }
+        for e in 0..self.niter {
+            for (b, &ep) in self.bit_ep.iter().enumerate() {
+                let p = out.message(ep, 0, e, 16 * lanes);
+                for (l, llr) in self.llr.iter().enumerate() {
+                    lane_set(p, l, sat(llr[b]));
+                }
+            }
+        }
+    }
+
+    fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
+}
+
+// ---------------------------------------------------------------------------
 // Table I resource models
 // ---------------------------------------------------------------------------
 
@@ -272,6 +462,107 @@ mod tests {
         sink.take();
         src.process(&[], 0, &mut sink);
         assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn sliced_check_pe_lanes_match_scalar_pe() {
+        let lanes = 5;
+        let inputs: [[i32; 3]; 5] =
+            [[5, -3, 7], [0, 0, 0], [-1, -1, 2], [32767, -32767, 4], [9, 9, 9]];
+        let mut sliced = SlicedCheckNodePe::new(
+            MinsumVariant::SignMagnitude,
+            lanes,
+            vec![(10, 1), (11, 2), (12, 3)],
+        );
+        // Build the 3 packed argument messages (one per edge position).
+        let args: Vec<ArgMessage> = (0..3)
+            .map(|j| {
+                let mut payload = vec![0u64; (lanes * 16).div_ceil(64)];
+                for (l, row) in inputs.iter().enumerate() {
+                    lane_set(&mut payload, l, row[j]);
+                }
+                ArgMessage { epoch: 2, src: j, payload }
+            })
+            .collect();
+        let mut sink = MsgSink::new();
+        sliced.process(&args, 2, &mut sink);
+        let out = sink.take();
+        assert_eq!(out.len(), 3);
+        let mut scalar_out = Vec::new();
+        for (l, row) in inputs.iter().enumerate() {
+            check_update(MinsumVariant::SignMagnitude, row, &mut scalar_out);
+            for (j, m) in out.iter().enumerate() {
+                assert_eq!((m.dst, m.arg, m.epoch), (10 + j, (1 + j) as u8, 2));
+                assert_eq!(lane_get(&m.payload, l), scalar_out[j], "lane {l} edge {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_bit_pe_lanes_match_scalar_and_decide_at_last_epoch() {
+        let lanes = 3;
+        let u0s = [10, -10, 0];
+        let vs: [[i32; 3]; 3] = [[1, -2, 3], [4, 4, -4], [-7, 0, 7]];
+        let mk_args = |e: u32| -> Vec<ArgMessage> {
+            let mut args = Vec::new();
+            let mut p0 = vec![0u64; 1];
+            for (l, &u0) in u0s.iter().enumerate() {
+                lane_set(&mut p0, l, u0);
+            }
+            args.push(ArgMessage { epoch: e, src: 0, payload: p0 });
+            for j in 0..3 {
+                let mut p = vec![0u64; 1];
+                for (l, row) in vs.iter().enumerate() {
+                    lane_set(&mut p, l, row[j]);
+                }
+                args.push(ArgMessage { epoch: e, src: 1, payload: p });
+            }
+            args
+        };
+        let mut pe = SlicedBitNodePe::new(3, lanes, vec![(20, 0), (21, 1), (22, 2)], 30);
+        let mut sink = MsgSink::new();
+        // Mid-iteration: per-lane updates with epoch+1.
+        pe.process(&mk_args(0), 0, &mut sink);
+        let out = sink.take();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|m| m.epoch == 1));
+        let mut scratch = Vec::new();
+        for (l, row) in vs.iter().enumerate() {
+            let sum = bit_update(u0s[l], row, &mut scratch);
+            for (j, m) in out.iter().enumerate() {
+                assert_eq!(lane_get(&m.payload, l), scratch[j], "lane {l} edge {j}");
+            }
+            let _ = sum;
+        }
+        // Final iteration: one packed decision message to the sink.
+        pe.process(&mk_args(2), 2, &mut sink);
+        let out = sink.take();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dst, 30);
+        for (l, row) in vs.iter().enumerate() {
+            let sum = bit_update(u0s[l], row, &mut scratch);
+            assert_eq!(lane_get(&out[0].payload, l), sum, "lane {l} sum");
+        }
+    }
+
+    #[test]
+    fn sliced_source_boot_packs_all_lanes() {
+        let mut src = SlicedLdpcSourcePe {
+            llr: vec![vec![50, -50, 50], vec![-1, 2, -3]],
+            niter: 2,
+            bit_ep: vec![1, 2, 3],
+            check_ep: vec![5, 6],
+            check_args: vec![vec![0, 1], vec![1, 2]],
+        };
+        let mut sink = MsgSink::new();
+        src.boot(&mut sink);
+        let out = sink.take();
+        // 4 check-arg messages + 3 bits × 2 epochs.
+        assert_eq!(out.len(), 4 + 6);
+        // First check message: check 0 pos 0 carries bit 0 for both lanes.
+        assert_eq!(lane_get(&out[0].payload, 0), 50);
+        assert_eq!(lane_get(&out[0].payload, 1), -1);
+        assert!(out.iter().all(|m| m.bits == 32));
     }
 
     #[test]

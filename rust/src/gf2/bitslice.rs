@@ -1,0 +1,226 @@
+//! Bitsliced GF(2) lanes: 64 independent values per machine word.
+//!
+//! Monte-Carlo workloads (BER curves, BMVM accuracy sweeps) run many
+//! independent instances whose control flow is identical and whose data
+//! is GF(2) or small fixed point. This module provides the
+//! structure-of-arrays plumbing that lets one traversal carry up to
+//! [`LANES`] instances: **plane** `i` is a `u64` whose bit `l` holds
+//! lane `l`'s bit `i`. Packing `L ≤ 64` lane bit-vectors into planes is
+//! a 64×64 bit-matrix transpose per 64-bit chunk ([`transpose64`]),
+//! word-level parity over planes folds all lanes at once
+//! ([`lane_parity`]), and a partial lane set (a *ragged tail*, `L < 64`)
+//! always leaves the unused high lanes zero — packing never reads them
+//! and unpacking them yields zeros ([`lane_mask`] tells consumers which
+//! lanes are live).
+//!
+//! The consumers are the bitsliced LDPC decoder
+//! ([`crate::apps::ldpc::minsum::SlicedDecoder`]: sign planes XOR-folded
+//! per check, decisions and syndromes as planes) and the batched BMVM
+//! paths ([`crate::apps::bmvm`]).
+
+/// Number of lanes one `u64` plane carries.
+pub const LANES: usize = 64;
+
+/// Mask with bit `l` set for every live lane `l < n_lanes`.
+#[inline]
+pub fn lane_mask(n_lanes: usize) -> u64 {
+    debug_assert!(n_lanes <= LANES);
+    if n_lanes >= LANES {
+        u64::MAX
+    } else {
+        (1u64 << n_lanes) - 1
+    }
+}
+
+/// In-place 64×64 bit-matrix transpose, LSB-first convention: bit `c`
+/// of `a[r]` is matrix element `(r, c)`; afterwards bit `r` of `a[c]`
+/// holds that element. An involution: applying it twice restores `a`
+/// (property-tested in `tests/props.rs`).
+///
+/// This is the Hacker's Delight recursive block swap adapted to the
+/// LSB-first convention (the textbook form is MSB-first; using it here
+/// would transpose about the anti-diagonal).
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m = 0x0000_0000_FFFF_FFFFu64;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k | j]) & m;
+            a[k] ^= t << j;
+            a[k | j] ^= t;
+            k = ((k | j) + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Pack `lanes.len() ≤ 64` lane bit-vectors (each `words` `u64`s long,
+/// LSB-first within each word, lane bit `i` at `words[i / 64]` bit
+/// `i % 64`) into `planes`: plane `i` bit `l` = lane `l` bit `i`.
+/// `planes` must hold `64 * words` entries (one plane per bit position
+/// of the padded 64-bit chunks). Lanes beyond `lanes.len()` come out
+/// zero in every plane — the ragged tail is never read, only written.
+pub fn pack(lanes: &[&[u64]], words: usize, planes: &mut [u64]) {
+    assert!(lanes.len() <= LANES, "at most {LANES} lanes");
+    assert_eq!(planes.len(), 64 * words, "planes must hold 64 bits per chunk");
+    let mut chunk = [0u64; 64];
+    for w in 0..words {
+        for c in chunk.iter_mut() {
+            *c = 0;
+        }
+        for (l, lane) in lanes.iter().enumerate() {
+            assert_eq!(lane.len(), words, "lane {l} word count");
+            chunk[l] = lane[w];
+        }
+        transpose64(&mut chunk);
+        planes[64 * w..64 * (w + 1)].copy_from_slice(&chunk);
+    }
+}
+
+/// Inverse of [`pack`] for one lane: gather bit `lane` of every plane
+/// back into `out` (`words` `u64`s). Lanes that were absent at pack
+/// time yield all-zero words.
+pub fn unpack_lane(planes: &[u64], lane: usize, out: &mut [u64]) {
+    assert!(lane < LANES);
+    assert_eq!(planes.len(), 64 * out.len());
+    for (w, o) in out.iter_mut().enumerate() {
+        let mut word = 0u64;
+        for bit in 0..64 {
+            word |= ((planes[64 * w + bit] >> lane) & 1) << bit;
+        }
+        *o = word;
+    }
+}
+
+/// XOR-fold planes: the returned word's bit `l` is the parity of lane
+/// `l` across all planes — 64 parity computations in `planes.len()`
+/// word ops. This is the check-node sign product and the syndrome
+/// computation of the bitsliced LDPC decoder.
+#[inline]
+pub fn lane_parity(planes: &[u64]) -> u64 {
+    planes.iter().fold(0u64, |acc, &p| acc ^ p)
+}
+
+/// Per-lane popcount across planes: `counts[l]` = number of planes in
+/// which lane `l`'s bit is set (e.g. per-lane bit-error counts from a
+/// plane of decision-vs-truth XORs).
+pub fn lane_popcounts(planes: &[u64], counts: &mut [u32; LANES]) {
+    for c in counts.iter_mut() {
+        *c = 0;
+    }
+    for &p in planes {
+        let mut rest = p;
+        while rest != 0 {
+            let l = rest.trailing_zeros() as usize;
+            counts[l] += 1;
+            rest &= rest - 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn lane_mask_edges() {
+        assert_eq!(lane_mask(0), 0);
+        assert_eq!(lane_mask(1), 1);
+        assert_eq!(lane_mask(8), 0xFF);
+        assert_eq!(lane_mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn transpose_of_identity_is_identity() {
+        let mut a = [0u64; 64];
+        for (i, w) in a.iter_mut().enumerate() {
+            *w = 1u64 << i;
+        }
+        let before = a;
+        transpose64(&mut a);
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn transpose_moves_single_bits_correctly() {
+        // Element (r, c) = bit c of row r must land at bit r of row c.
+        for (r, c) in [(0usize, 0usize), (0, 63), (63, 0), (5, 40), (31, 32), (63, 63)] {
+            let mut a = [0u64; 64];
+            a[r] = 1u64 << c;
+            transpose64(&mut a);
+            for (row, &w) in a.iter().enumerate() {
+                let want = if row == c { 1u64 << r } else { 0 };
+                assert_eq!(w, want, "({r},{c}) row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_then_unpack_roundtrips_full_width() {
+        let mut rng = Rng::new(0xB175);
+        let words = 3;
+        let lanes_data: Vec<Vec<u64>> =
+            (0..64).map(|_| (0..words).map(|_| rng.next_u64()).collect()).collect();
+        let refs: Vec<&[u64]> = lanes_data.iter().map(|v| v.as_slice()).collect();
+        let mut planes = vec![0u64; 64 * words];
+        pack(&refs, words, &mut planes);
+        let mut out = vec![0u64; words];
+        for (l, lane) in lanes_data.iter().enumerate() {
+            unpack_lane(&planes, l, &mut out);
+            assert_eq!(&out, lane, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_lanes_are_zero_even_over_dirty_planes() {
+        let mut rng = Rng::new(7);
+        let words = 2;
+        let live = 5usize;
+        let lanes_data: Vec<Vec<u64>> =
+            (0..live).map(|_| (0..words).map(|_| rng.next_u64()).collect()).collect();
+        let refs: Vec<&[u64]> = lanes_data.iter().map(|v| v.as_slice()).collect();
+        // Pre-fill the plane buffer with garbage: pack must overwrite
+        // everything, never blend with stale state.
+        let mut planes = vec![0xDEAD_BEEF_DEAD_BEEFu64; 64 * words];
+        pack(&refs, words, &mut planes);
+        let mut out = vec![0u64; words];
+        for l in 0..64 {
+            unpack_lane(&planes, l, &mut out);
+            if l < live {
+                assert_eq!(&out, &lanes_data[l], "live lane {l}");
+            } else {
+                assert!(out.iter().all(|&w| w == 0), "dead lane {l} leaked");
+            }
+        }
+        let mask = lane_mask(live);
+        for &p in &planes {
+            assert_eq!(p & !mask, 0, "plane carries bits above the lane mask");
+        }
+    }
+
+    #[test]
+    fn lane_parity_equals_per_lane_xor() {
+        let mut rng = Rng::new(21);
+        let planes: Vec<u64> = (0..9).map(|_| rng.next_u64()).collect();
+        let folded = lane_parity(&planes);
+        for l in 0..64 {
+            let scalar: u64 = planes.iter().map(|&p| (p >> l) & 1).fold(0, |a, b| a ^ b);
+            assert_eq!((folded >> l) & 1, scalar, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn lane_popcounts_match_scalar_counts() {
+        let mut rng = Rng::new(5);
+        let planes: Vec<u64> = (0..17).map(|_| rng.next_u64()).collect();
+        let mut counts = [0u32; LANES];
+        lane_popcounts(&planes, &mut counts);
+        for (l, &n) in counts.iter().enumerate() {
+            let want = planes.iter().filter(|&&p| (p >> l) & 1 == 1).count() as u32;
+            assert_eq!(n, want, "lane {l}");
+        }
+    }
+}

@@ -11,7 +11,12 @@
 //!   linear algebra: [`Gf2Matrix`] packs rows as [`BitVec`]s with
 //!   AND+parity mat-vec, the correctness oracle for Williams'
 //!   sub-quadratic algorithm in [`crate::apps::bmvm`].
+//! * Both case studies' Monte-Carlo sweeps vectorize over [`bitslice`]:
+//!   64-lane structure-of-arrays planes over `u64` (pack/unpack/
+//!   transpose, word-level parity/popcount) so one traversal carries 64
+//!   independent instances.
 
+pub mod bitslice;
 pub mod field;
 pub mod pg;
 

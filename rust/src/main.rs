@@ -12,6 +12,7 @@
 //! fabricflow sweep --threads 8          # fleet: scenario × load × seed grid
 //! fabricflow sweep --chips 2 --pins 1,8 # …multichip grid across wire configs
 //! fabricflow sweep --chips 2 --fault-rates 0,0.01   # …degraded wires (CRC/retransmit)
+//! fabricflow sweep --lanes 8            # …8 Monte-Carlo lanes per listed seed
 //! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
 //! fabricflow bench --only sweep         # …regenerate one section, keep the rest
 //! fabricflow serve --threads 2          # resident pool serving request frames
@@ -120,6 +121,7 @@ const COMMANDS: &[Command] = &[
             flag("cycles"),
             flag("loads"),
             flag("seeds"),
+            flag("lanes"),
             flag("seed"),
             flag("scenario"),
             flag("chips"),
@@ -127,13 +129,13 @@ const COMMANDS: &[Command] = &[
             flag("clock-divs"),
             flag("fault-rates"),
         ],
-        usage: "sweep [--topo NAME] [--engine reference|event] [--threads N] [--cycles N] [--loads a,b] [--seeds N] [--scenario NAME] [--chips N --pins p1,p2 --clock-divs d1,d2 --fault-rates r1,r2]",
+        usage: "sweep [--topo NAME] [--engine reference|event] [--threads N] [--cycles N] [--loads a,b] [--seeds N] [--lanes N] [--scenario NAME] [--chips N --pins p1,p2 --clock-divs d1,d2 --fault-rates r1,r2]",
         run: cmd_sweep,
     },
     Command {
         name: "bench",
         spec: &[flag("out"), flag("only"), switch("quick")],
-        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults]",
+        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults,bitsliced]",
         run: cmd_bench,
     },
     Command {
@@ -445,8 +447,10 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
     let cycles = p.get_or("cycles", 800u64).map_err(bad)?;
     let loads: Vec<f64> =
         p.get_list("loads").map_err(bad)?.unwrap_or_else(|| vec![0.02, 0.1]);
-    // --seeds N sweeps seeds 1..=N.
+    // --seeds N sweeps seeds 1..=N; --lanes L expands each into L
+    // Monte-Carlo lanes (seed + L-1 splitmix64 follow-ons).
     let seeds: Vec<u64> = (1..=p.get_or("seeds", 4u64).map_err(bad)?).collect();
+    let lanes = p.get_or("lanes", 1usize).map_err(bad)?;
     let which = p.raw("scenario").unwrap_or("all").to_string();
     let scenarios: Vec<scenario::Scenario> = scenario::registry()
         .into_iter()
@@ -456,7 +460,8 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
         return Err(format!("unknown scenario '{which}'"));
     }
     let cfg = NocConfig { engine, ..NocConfig::paper() };
-    let grid = scenario::SweepGrid { topo: topo.clone(), cfg, scenarios, loads, seeds, cycles };
+    let grid =
+        scenario::SweepGrid { topo: topo.clone(), cfg, scenarios, loads, seeds, cycles, lanes };
     let chips = p.get_or("chips", 0usize).map_err(bad)?;
     let t = Instant::now();
     // (cells for the per-cell printout, merged stats for the aggregate)
@@ -544,7 +549,9 @@ fn cmd_bench(p: &Parsed) -> Result<(), String> {
     let out = p.raw("out").unwrap_or("BENCH_noc.json").to_string();
     let sel = match p.raw("only") {
         Some(s) => fabricflow::perf::BenchSelect::parse(s).ok_or_else(|| {
-            format!("bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults)")
+            format!(
+                "bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults, bitsliced)"
+            )
         })?,
         None => fabricflow::perf::BenchSelect::ALL,
     };

@@ -34,7 +34,7 @@ use crate::fleet;
 use crate::flow::RunReport;
 use crate::partition::Partition;
 use crate::serdes::{FaultPlan, SerdesConfig};
-use crate::util::Rng;
+use crate::util::{Rng, SeedStream};
 
 /// One scheduled injection of a [`Trace`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -535,17 +535,27 @@ pub struct SweepGrid {
     pub seeds: Vec<u64>,
     /// Injection-window length per cell, in cycles.
     pub cycles: u64,
+    /// Monte-Carlo lanes per seed: each listed seed expands into `lanes`
+    /// jobs — the seed itself plus `lanes − 1` [`SeedStream`]-derived
+    /// follow-ons (decorrelated, unlike `seed + i`). `lanes ≤ 1` keeps
+    /// the historical one-job-per-seed grid.
+    pub lanes: usize,
 }
 
 impl SweepGrid {
-    /// The grid's job list in canonical order.
+    /// The grid's job list in canonical order (scenario-major, then
+    /// load, then seed, then lane — lane 0 is always the listed seed).
     pub fn jobs(&self) -> Vec<SweepJob> {
-        let n = self.scenarios.len() * self.loads.len() * self.seeds.len();
+        let lanes = self.lanes.max(1);
+        let n = self.scenarios.len() * self.loads.len() * self.seeds.len() * lanes;
         let mut jobs = Vec::with_capacity(n);
         for &scenario in &self.scenarios {
             for &load in &self.loads {
                 for &seed in &self.seeds {
                     jobs.push(SweepJob { scenario, load, seed });
+                    for lane_seed in SeedStream::take_seeds(seed, lanes - 1) {
+                        jobs.push(SweepJob { scenario, load, seed: lane_seed });
+                    }
                 }
             }
         }
@@ -865,6 +875,7 @@ mod tests {
             loads: vec![0.02, 0.1],
             seeds: vec![1, 2, 3],
             cycles: 100,
+            lanes: 1,
         };
         let jobs = grid.jobs();
         assert_eq!(jobs.len(), 2 * 2 * 3);
@@ -878,6 +889,38 @@ mod tests {
     }
 
     #[test]
+    fn lanes_expand_each_seed_into_decorrelated_jobs() {
+        let base = SweepGrid {
+            topo: Topology::Mesh { w: 4, h: 4 },
+            cfg: NocConfig::paper(),
+            scenarios: vec![find("uniform").unwrap()],
+            loads: vec![0.1],
+            seeds: vec![1, 2],
+            cycles: 100,
+            lanes: 1,
+        };
+        let wide = SweepGrid { lanes: 4, ..base.clone() };
+        let jobs = wide.jobs();
+        assert_eq!(jobs.len(), 2 * 4);
+        // Lane 0 of each group is the listed seed, so lanes: 1 is a
+        // strict prefix semantics: the scalar grid's jobs appear at the
+        // group heads.
+        assert_eq!(jobs[0].seed, 1);
+        assert_eq!(jobs[4].seed, 2);
+        assert_eq!(base.jobs()[0], jobs[0]);
+        assert_eq!(base.jobs()[1], jobs[4]);
+        // Derived lane seeds are decorrelated (SplitMix64, not seed+i)
+        // and unique.
+        let mut seeds: Vec<u64> = jobs.iter().map(|j| j.seed).collect();
+        for w in seeds[..4].windows(2) {
+            assert!((w[0] ^ w[1]).count_ones() >= 16, "{:x} vs {:x}", w[0], w[1]);
+        }
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 8, "lane seeds must not collide");
+    }
+
+    #[test]
     fn run_grid_smoke_and_digest_sensitivity() {
         let grid = SweepGrid {
             topo: Topology::Mesh { w: 4, h: 4 },
@@ -886,6 +929,7 @@ mod tests {
             loads: vec![0.1],
             seeds: vec![1, 2],
             cycles: 150,
+            lanes: 1,
         };
         let cells = run_grid(&grid, 1).unwrap();
         assert_eq!(cells.len(), 2);
@@ -909,6 +953,7 @@ mod tests {
             loads: vec![0.1],
             seeds: vec![1, 2],
             cycles: 120,
+            lanes: 1,
         };
         let points = [
             SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 },
@@ -971,6 +1016,7 @@ mod tests {
             loads: vec![0.1],
             seeds: vec![1],
             cycles: 150,
+            lanes: 1,
         };
         let points = [SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 }];
         let cells =

@@ -102,10 +102,13 @@ pub enum FrameKind {
     PfilterReq = 0x02,
     BmvmReq = 0x03,
     ScenarioReq = 0x04,
+    /// Up to 64 LDPC codewords in one frame (the bitsliced lane width).
+    LdpcBatchReq = 0x05,
     LdpcResp = 0x81,
     PfilterResp = 0x82,
     BmvmResp = 0x83,
     ScenarioResp = 0x84,
+    LdpcBatchResp = 0x85,
     /// Admission control turned the request away (backpressure frame).
     Rejected = 0xEE,
     /// The server could not serve the request (code in payload).
@@ -119,10 +122,12 @@ impl FrameKind {
             0x02 => FrameKind::PfilterReq,
             0x03 => FrameKind::BmvmReq,
             0x04 => FrameKind::ScenarioReq,
+            0x05 => FrameKind::LdpcBatchReq,
             0x81 => FrameKind::LdpcResp,
             0x82 => FrameKind::PfilterResp,
             0x83 => FrameKind::BmvmResp,
             0x84 => FrameKind::ScenarioResp,
+            0x85 => FrameKind::LdpcBatchResp,
             0xEE => FrameKind::Rejected,
             0xEF => FrameKind::Error,
             _ => return None,
@@ -430,6 +435,95 @@ impl WireForm for LdpcResponse {
     }
 }
 
+/// "Decode these LDPC codewords": 1..=64 codewords amortizing one frame
+/// header + checksum (the bitsliced lane width caps the batch). The
+/// server answers with an [`LdpcBatchResponse`] carrying one
+/// [`LdpcResponse`] per codeword, in order, each bit-identical to the
+/// answer the codeword would get as a lone [`LdpcRequest`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LdpcBatchRequest {
+    pub niter: u32,
+    pub variant: MinsumVariant,
+    /// One LLR vector per codeword (1..=64 of them).
+    pub words: Vec<Vec<i32>>,
+}
+
+/// Largest batch one [`LdpcBatchRequest`] may carry.
+pub const MAX_LDPC_BATCH: usize = 64;
+
+impl WireForm for LdpcBatchRequest {
+    const KIND: FrameKind = FrameKind::LdpcBatchReq;
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.niter);
+        put_u8(out, match self.variant {
+            MinsumVariant::SignMagnitude => 0,
+            MinsumVariant::PaperListing => 1,
+        });
+        put_u8(out, self.words.len() as u8);
+        for w in &self.words {
+            put_u16(out, w.len() as u16);
+            for &v in w {
+                put_i32(out, v);
+            }
+        }
+    }
+
+    fn decode_payload(r: &mut WireReader<'_>) -> Result<Self, CodecError> {
+        let niter = r.u32()?;
+        let variant = match r.u8()? {
+            0 => MinsumVariant::SignMagnitude,
+            1 => MinsumVariant::PaperListing,
+            _ => return Err(CodecError::BadPayload("unknown minsum variant")),
+        };
+        let count = r.u8()? as usize;
+        if count == 0 || count > MAX_LDPC_BATCH {
+            return Err(CodecError::BadPayload("batch size must be 1..=64"));
+        }
+        let mut words = Vec::with_capacity(count);
+        for _ in 0..count {
+            let n = r.u16()? as usize;
+            let mut llr = Vec::with_capacity(n);
+            for _ in 0..n {
+                llr.push(r.i32()?);
+            }
+            words.push(llr);
+        }
+        Ok(LdpcBatchRequest { niter, variant, words })
+    }
+}
+
+/// One [`LdpcResponse`] per batched codeword, in request order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LdpcBatchResponse {
+    pub results: Vec<LdpcResponse>,
+}
+
+impl WireForm for LdpcBatchResponse {
+    const KIND: FrameKind = FrameKind::LdpcBatchResp;
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        put_u8(out, self.results.len() as u8);
+        // LdpcResponse payloads are self-delimiting (length-prefixed bit
+        // and sum arrays), so they concatenate without extra framing.
+        for p in &self.results {
+            p.encode_payload(out);
+        }
+    }
+
+    fn decode_payload(r: &mut WireReader<'_>) -> Result<Self, CodecError> {
+        let count = r.u8()? as usize;
+        if count == 0 || count > MAX_LDPC_BATCH {
+            return Err(CodecError::BadPayload("batch size must be 1..=64"));
+        }
+        let mut results = Vec::with_capacity(count);
+        for _ in 0..count {
+            results.push(LdpcResponse::decode_payload(r)?);
+        }
+        Ok(LdpcBatchResponse { results })
+    }
+}
+
 /// "Advance this particle-filter track": a self-contained tracking job —
 /// seeded synthetic video + tracker parameters — served exactly as the
 /// batch [`crate::apps::pfilter::PfilterNocTracker::track`] path runs it.
@@ -699,6 +793,7 @@ impl ServeErrorCode {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Ldpc(LdpcRequest),
+    LdpcBatch(LdpcBatchRequest),
     Pfilter(PfilterRequest),
     Bmvm(BmvmRequest),
     Scenario(ScenarioRequest),
@@ -708,6 +803,7 @@ impl Request {
     pub fn kind(&self) -> FrameKind {
         match self {
             Request::Ldpc(_) => FrameKind::LdpcReq,
+            Request::LdpcBatch(_) => FrameKind::LdpcBatchReq,
             Request::Pfilter(_) => FrameKind::PfilterReq,
             Request::Bmvm(_) => FrameKind::BmvmReq,
             Request::Scenario(_) => FrameKind::ScenarioReq,
@@ -719,6 +815,9 @@ impl Request {
         let mut r = WireReader::new(f.payload);
         let req = match f.kind {
             FrameKind::LdpcReq => Request::Ldpc(LdpcRequest::decode_payload(&mut r)?),
+            FrameKind::LdpcBatchReq => {
+                Request::LdpcBatch(LdpcBatchRequest::decode_payload(&mut r)?)
+            }
             FrameKind::PfilterReq => Request::Pfilter(PfilterRequest::decode_payload(&mut r)?),
             FrameKind::BmvmReq => Request::Bmvm(BmvmRequest::decode_payload(&mut r)?),
             FrameKind::ScenarioReq => {
@@ -734,6 +833,9 @@ impl Request {
     pub fn encode(&self, id: u32, out: &mut Vec<u8>) {
         match self {
             Request::Ldpc(q) => encode_frame(LdpcRequest::KIND, id, out, |o| q.encode_payload(o)),
+            Request::LdpcBatch(q) => {
+                encode_frame(LdpcBatchRequest::KIND, id, out, |o| q.encode_payload(o))
+            }
             Request::Pfilter(q) => {
                 encode_frame(PfilterRequest::KIND, id, out, |o| q.encode_payload(o))
             }
@@ -749,6 +851,7 @@ impl Request {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Ldpc(LdpcResponse),
+    LdpcBatch(LdpcBatchResponse),
     Pfilter(PfilterResponse),
     Bmvm(BmvmResponse),
     Scenario(ScenarioResponse),
@@ -762,6 +865,7 @@ impl Response {
     pub fn kind(&self) -> FrameKind {
         match self {
             Response::Ldpc(_) => FrameKind::LdpcResp,
+            Response::LdpcBatch(_) => FrameKind::LdpcBatchResp,
             Response::Pfilter(_) => FrameKind::PfilterResp,
             Response::Bmvm(_) => FrameKind::BmvmResp,
             Response::Scenario(_) => FrameKind::ScenarioResp,
@@ -775,6 +879,9 @@ impl Response {
         let mut r = WireReader::new(f.payload);
         let resp = match f.kind {
             FrameKind::LdpcResp => Response::Ldpc(LdpcResponse::decode_payload(&mut r)?),
+            FrameKind::LdpcBatchResp => {
+                Response::LdpcBatch(LdpcBatchResponse::decode_payload(&mut r)?)
+            }
             FrameKind::PfilterResp => {
                 Response::Pfilter(PfilterResponse::decode_payload(&mut r)?)
             }
@@ -798,6 +905,9 @@ impl Response {
     pub fn encode(&self, id: u32, out: &mut Vec<u8>) {
         match self {
             Response::Ldpc(p) => encode_frame(LdpcResponse::KIND, id, out, |o| p.encode_payload(o)),
+            Response::LdpcBatch(p) => {
+                encode_frame(LdpcBatchResponse::KIND, id, out, |o| p.encode_payload(o))
+            }
             Response::Pfilter(p) => {
                 encode_frame(PfilterResponse::KIND, id, out, |o| p.encode_payload(o))
             }
@@ -866,6 +976,11 @@ mod tests {
                 cycles: 400,
                 seed: 9,
             }),
+            Request::LdpcBatch(LdpcBatchRequest {
+                niter: 5,
+                variant: MinsumVariant::PaperListing,
+                words: vec![vec![100, -100, 42, 0, -1, 77, -32768], vec![1, 2, 3, 4, 5, 6, 7]],
+            }),
         ]
     }
 
@@ -908,6 +1023,22 @@ mod tests {
                 p95: 63,
                 p99: 127,
                 eject_digest: 0xFEED_F00D,
+            }),
+            Response::LdpcBatch(LdpcBatchResponse {
+                results: vec![
+                    LdpcResponse {
+                        cycles: 900,
+                        valid_codeword: true,
+                        bits: vec![0, 1, 0, 0, 1, 1, 0],
+                        sums: vec![100, -5, 8, 0, -100, -1, 7],
+                    },
+                    LdpcResponse {
+                        cycles: 901,
+                        valid_codeword: false,
+                        bits: vec![1, 1, 0, 0, 1, 1, 0],
+                        sums: vec![-2, -5, 8, 0, -100, -1, 7],
+                    },
+                ],
             }),
             Response::Rejected { queue_depth: 64 },
             Response::Error { code: ServeErrorCode::Stalled },
@@ -1007,6 +1138,45 @@ mod tests {
                 theirs.total_ms(cyc, 100e6, up, down).to_bits()
             );
         }
+    }
+
+    #[test]
+    fn ldpc_batch_sizes_outside_1_to_64_are_rejected() {
+        let one_word = || vec![vec![1, 2, 3, 4, 5, 6, 7]];
+        // 0 codewords: structurally encodable, semantically invalid.
+        let mut buf = Vec::new();
+        let empty =
+            LdpcBatchRequest { niter: 3, variant: MinsumVariant::SignMagnitude, words: vec![] };
+        encode_frame(LdpcBatchRequest::KIND, 1, &mut buf, |o| empty.encode_payload(o));
+        let (frame, _) = decode_frame(&buf).unwrap();
+        assert_eq!(
+            Request::decode(&frame),
+            Err(CodecError::BadPayload("batch size must be 1..=64"))
+        );
+        // 65 codewords: one over the bitsliced lane width.
+        let mut buf = Vec::new();
+        let over = LdpcBatchRequest {
+            niter: 3,
+            variant: MinsumVariant::SignMagnitude,
+            words: (0..65).flat_map(|_| one_word()).collect(),
+        };
+        encode_frame(LdpcBatchRequest::KIND, 2, &mut buf, |o| over.encode_payload(o));
+        let (frame, _) = decode_frame(&buf).unwrap();
+        assert_eq!(
+            Request::decode(&frame),
+            Err(CodecError::BadPayload("batch size must be 1..=64"))
+        );
+        // The full 64 roundtrips.
+        let mut buf = Vec::new();
+        let full = Request::LdpcBatch(LdpcBatchRequest {
+            niter: 3,
+            variant: MinsumVariant::SignMagnitude,
+            words: (0..64).flat_map(|_| one_word()).collect(),
+        });
+        full.encode(3, &mut buf);
+        let (frame, used) = decode_frame(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(Request::decode(&frame).unwrap(), full);
     }
 
     #[test]

@@ -57,9 +57,9 @@ use crate::noc::{NetStats, Network, NocConfig, SharedFabric, SimEngine, Topology
 use crate::util::Rng;
 
 use hostlink::{
-    decode_frame, BmvmRequest, BmvmResponse, CodecError, LdpcRequest, LdpcResponse,
-    PfilterRequest, PfilterResponse, Request, Response, ScenarioRequest, ScenarioResponse,
-    ServeErrorCode, MAGIC,
+    decode_frame, BmvmRequest, BmvmResponse, CodecError, LdpcBatchRequest, LdpcBatchResponse,
+    LdpcRequest, LdpcResponse, PfilterRequest, PfilterResponse, Request, Response,
+    ScenarioRequest, ScenarioResponse, ServeErrorCode, MAGIC,
 };
 
 /// What happens to a request that finds the bounded queue full.
@@ -205,6 +205,7 @@ pub fn serve_request(w: &mut Worker, req: &Request) -> Response {
     match req {
         Request::Scenario(q) => serve_scenario(w, q),
         Request::Ldpc(q) => serve_ldpc(q),
+        Request::LdpcBatch(q) => serve_ldpc_batch(q),
         Request::Pfilter(q) => serve_pfilter(q),
         Request::Bmvm(q) => serve_bmvm(w, q),
     }
@@ -255,6 +256,28 @@ fn serve_ldpc(q: &LdpcRequest) -> Response {
         bits: run.result.bits,
         sums: run.result.sums,
     })
+}
+
+fn serve_ldpc_batch(q: &LdpcBatchRequest) -> Response {
+    // Each codeword goes through the single-request path, so every
+    // per-codeword result (bits, sums, cycles) is bit-identical to the
+    // answer a lone LdpcRequest would get; the batch only amortizes the
+    // frame header and checksum. The codec already bounds the batch to
+    // 1..=64, so an empty list here means a hand-built request.
+    if q.words.is_empty() || q.words.len() > hostlink::MAX_LDPC_BATCH {
+        return err(ServeErrorCode::BadParams);
+    }
+    let mut results = Vec::with_capacity(q.words.len());
+    for llr in &q.words {
+        let single = LdpcRequest { niter: q.niter, variant: q.variant, llr: llr.clone() };
+        match serve_ldpc(&single) {
+            Response::Ldpc(r) => results.push(r),
+            // First bad codeword fails the whole frame: a partial batch
+            // response would misalign request order for the client.
+            other => return other,
+        }
+    }
+    Response::LdpcBatch(LdpcBatchResponse { results })
 }
 
 fn serve_pfilter(q: &PfilterRequest) -> Response {
@@ -741,6 +764,49 @@ mod tests {
                 assert_eq!(r.cycles, batch.report.cycles);
             }
             other => panic!("expected ldpc response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ldpc_batch_request_equals_n_single_requests() {
+        let cfg = ServeConfig::default();
+        let mut w = Worker::standalone(&cfg);
+        let words: Vec<Vec<i32>> = (0..5)
+            .map(|i| {
+                let mut llr = vec![90, -90, 70, -50, 30, -20, 10];
+                llr[i % 7] = -llr[i % 7];
+                llr
+            })
+            .collect();
+        let batch = Request::LdpcBatch(LdpcBatchRequest {
+            niter: 4,
+            variant: MinsumVariant::SignMagnitude,
+            words: words.clone(),
+        });
+        let Response::LdpcBatch(got) = serve_request(&mut w, &batch) else {
+            panic!("expected batch response");
+        };
+        assert_eq!(got.results.len(), words.len());
+        for (llr, got) in words.iter().zip(&got.results) {
+            let single = Request::Ldpc(LdpcRequest {
+                niter: 4,
+                variant: MinsumVariant::SignMagnitude,
+                llr: llr.clone(),
+            });
+            match serve_request(&mut w, &single) {
+                Response::Ldpc(want) => assert_eq!(*got, want),
+                other => panic!("expected ldpc response, got {other:?}"),
+            }
+        }
+        // A bad codeword anywhere fails the whole frame.
+        let bad = Request::LdpcBatch(LdpcBatchRequest {
+            niter: 4,
+            variant: MinsumVariant::SignMagnitude,
+            words: vec![words[0].clone(), vec![1, 2, 3]],
+        });
+        match serve_request(&mut w, &bad) {
+            Response::Error { code } => assert_eq!(code, ServeErrorCode::BadLlrLength),
+            other => panic!("expected error, got {other:?}"),
         }
     }
 

@@ -25,7 +25,7 @@ pub mod prop;
 pub mod bits;
 pub mod args;
 
-pub use rng::Rng;
+pub use rng::{Rng, SeedStream};
 
 /// Format a cycle count at a given clock as engineering-notation time.
 ///

@@ -1,5 +1,6 @@
 //! Steady-state allocation audit: after warm-up, `Network::step` (both
-//! engines), the hot PE `process` bodies, and the serve subsystem's
+//! engines), the hot PE `process` bodies, the bitsliced decoder's
+//! pack→decode→unpack loop, and the serve subsystem's
 //! decode→serve→encode loop must perform **zero** heap allocations —
 //! the acceptance criterion of the flat-arena / pooled-buffer work. A
 //! counting global allocator wraps `System`; each measured region
@@ -13,13 +14,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use fabricflow::apps::bmvm::pe::BmvmPe;
 use fabricflow::apps::bmvm::WilliamsLuts;
-use fabricflow::apps::ldpc::minsum::MinsumVariant;
+use fabricflow::apps::ldpc::minsum::{MinsumVariant, SlicedDecoder};
 use fabricflow::apps::ldpc::nodes::{BitNodePe, CheckNodePe};
 use fabricflow::apps::pfilter::pe::{
     msg_config, msg_frame_chunk, msg_particle, msg_ref_hist, PfRootPe, PfWorkerPe,
     CHUNK_PIXELS,
 };
 use fabricflow::apps::pfilter::{histo, video::synthetic_video, TrackerParams};
+use fabricflow::gf2::bitslice::LANES;
+use fabricflow::gf2::pg::PgLdpcCode;
 use fabricflow::gf2::Gf2Matrix;
 use fabricflow::noc::multichip::MultiChipSim;
 use fabricflow::noc::{Flit, Network, NocConfig, SimEngine, Topology};
@@ -285,6 +288,48 @@ fn bit_node_process_is_alloc_free() {
     assert_eq!(delta, 0, "BitNodePe::process allocated {delta} times");
 }
 
+fn bitsliced_decode_loop_is_alloc_free() {
+    // The bitsliced Monte-Carlo hot loop: stage 64 lanes of channel
+    // LLRs, run the flooding iterations over the planes, read every
+    // lane back into retained buffers. All decoder state (message
+    // planes, decision planes, sign scratch) is sized at construction,
+    // so after warm-up the pack → decode → unpack cycle must touch the
+    // heap zero times — the property that lets one resident decoder
+    // stream millions of Monte-Carlo seeds.
+    let code = PgLdpcCode::new(2); // PG(2,4): N = 21
+    let n = code.n;
+    let mut dec = SlicedDecoder::new(code, MinsumVariant::SignMagnitude);
+    let mut rng = Rng::new(0xA110C);
+    let llrs: Vec<Vec<i32>> = (0..LANES)
+        .map(|_| (0..n).map(|_| rng.range_i64(-90, 90) as i32).collect())
+        .collect();
+    let mut bits: Vec<u8> = Vec::new();
+    let mut sums: Vec<i32> = Vec::new();
+    let mut counts = [0u32; LANES];
+    let round = |dec: &mut SlicedDecoder,
+                 bits: &mut Vec<u8>,
+                 sums: &mut Vec<i32>,
+                 counts: &mut [u32; LANES]| {
+        for (l, llr) in llrs.iter().enumerate() {
+            dec.pack_lane(l, llr);
+        }
+        dec.decode_packed(LANES, 8);
+        dec.ones_per_lane(counts);
+        for l in 0..LANES {
+            dec.lane_result_into(l, bits, sums);
+        }
+    };
+    for _ in 0..2 {
+        round(&mut dec, &mut bits, &mut sums, &mut counts);
+    }
+    let delta = count(|| {
+        for _ in 0..20 {
+            round(&mut dec, &mut bits, &mut sums, &mut counts);
+        }
+    });
+    assert_eq!(delta, 0, "bitsliced decode loop allocated {delta} times after warm-up");
+}
+
 fn bmvm_epochs_are_alloc_free() {
     let mut rng = Rng::new(42);
     let a = Gf2Matrix::random(16, 16, &mut rng);
@@ -448,6 +493,7 @@ fn steady_state_simulation_does_not_allocate() {
     multichip_steady_state_is_alloc_free(SimEngine::EventDriven);
     check_node_process_is_alloc_free();
     bit_node_process_is_alloc_free();
+    bitsliced_decode_loop_is_alloc_free();
     bmvm_epochs_are_alloc_free();
     pfilter_particle_path_is_alloc_free();
     pfilter_root_frame_loop_is_alloc_free();

@@ -31,6 +31,7 @@ fn grid(topo: Topology, engine: SimEngine) -> SweepGrid {
         loads: vec![0.02, 0.1],
         seeds: vec![1, 7],
         cycles: 300,
+        lanes: 1,
     }
 }
 
@@ -72,6 +73,23 @@ fn run_grid_matches_the_serial_scenario_path() {
 }
 
 #[test]
+fn lane_expanded_grid_is_thread_count_invariant_and_prefixes_scalar() {
+    // `lanes` only multiplies the job list — every expanded cell is
+    // still a pure job, so the fleet contracts carry over unchanged.
+    let g = SweepGrid { lanes: 4, ..grid(Topology::Mesh { w: 4, h: 4 }, SimEngine::EventDriven) };
+    let one = scenario::run_grid(&g, 1).unwrap();
+    assert_eq!(one.len(), 4 * 2 * 2 * 4);
+    let many = scenario::run_grid(&g, 8).unwrap();
+    assert_eq!(one, many, "lane-expanded grid diverged across thread counts");
+    // Lane 0 of every seed group is the scalar grid's cell, bit for bit.
+    let scalar = scenario::run_grid(&grid(Topology::Mesh { w: 4, h: 4 }, SimEngine::EventDriven), 1)
+        .unwrap();
+    for (i, cell) in scalar.iter().enumerate() {
+        assert_eq!(&one[i * 4], cell, "scalar cell {i} not at its lane-0 slot");
+    }
+}
+
+#[test]
 fn multichip_grid_is_thread_count_invariant() {
     let g = SweepGrid {
         topo: Topology::Mesh { w: 4, h: 4 },
@@ -80,6 +98,7 @@ fn multichip_grid_is_thread_count_invariant() {
         loads: vec![0.1],
         seeds: vec![1, 2, 3],
         cycles: 200,
+        lanes: 1,
     };
     let part = Partition::new(2, (0..16).map(|r| usize::from(r % 4 >= 2)).collect());
     let points = [

@@ -457,6 +457,96 @@ fn prop_collector_inverts_packetize_under_interleaving() {
     });
 }
 
+/// `transpose64` is an involution on arbitrary bit matrices: applying
+/// it twice restores every one of the 4096 bits.
+#[test]
+fn prop_bitslice_transpose_is_an_involution() {
+    use fabricflow::gf2::bitslice::transpose64;
+    prop::check("transpose64 involution", 60, |rng| {
+        let mut a = [0u64; 64];
+        for w in a.iter_mut() {
+            *w = rng.next_u64();
+        }
+        let before = a;
+        transpose64(&mut a);
+        transpose64(&mut a);
+        prop::assert_prop(a == before, "double transpose changed the matrix")?;
+        // And one transpose really moves (r, c) to (c, r) for a random
+        // probe bit — involution alone would also hold for the identity.
+        let (r, c) = (rng.index(64), rng.index(64));
+        let mut probe = [0u64; 64];
+        probe[r] = 1u64 << c;
+        transpose64(&mut probe);
+        prop::assert_prop(
+            probe[c] == 1u64 << r && probe.iter().map(|w| w.count_ones()).sum::<u32>() == 1,
+            format!("bit ({r},{c}) did not land at ({c},{r})"),
+        )
+    });
+}
+
+/// `unpack_lane ∘ pack` is the identity on every live lane for every
+/// lane count 1..=64 and random word counts, and a ragged tail (fewer
+/// than 64 lanes) leaves every dead lane all-zero — even when the plane
+/// buffer starts dirty.
+#[test]
+fn prop_bitslice_pack_unpack_identity_and_ragged_tail() {
+    use fabricflow::gf2::bitslice::{lane_mask, pack, unpack_lane};
+    prop::check("pack/unpack identity", 40, |rng| {
+        let words = 1 + rng.index(5);
+        let live = 1 + rng.index(64);
+        let lanes_data: Vec<Vec<u64>> = (0..live)
+            .map(|_| (0..words).map(|_| rng.next_u64()).collect())
+            .collect();
+        let refs: Vec<&[u64]> = lanes_data.iter().map(|v| v.as_slice()).collect();
+        // Dirty plane buffer: pack must fully overwrite, never blend.
+        let mut planes: Vec<u64> = (0..64 * words).map(|_| rng.next_u64()).collect();
+        pack(&refs, words, &mut planes);
+        let mask = lane_mask(live);
+        for &p in &planes {
+            prop::assert_prop(
+                p & !mask == 0,
+                format!("plane bits above the {live}-lane mask"),
+            )?;
+        }
+        let mut out = vec![0u64; words];
+        for l in 0..64 {
+            unpack_lane(&planes, l, &mut out);
+            if l < live {
+                prop::assert_prop(
+                    out == lanes_data[l],
+                    format!("live lane {l}/{live} (words={words}) changed"),
+                )?;
+            } else {
+                prop::assert_prop(
+                    out.iter().all(|&w| w == 0),
+                    format!("dead lane {l}/{live} leaked"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Plane folds equal per-lane scalar recomputation: `lane_parity` is
+/// lane-wise XOR, `lane_popcounts` is lane-wise popcount, for random
+/// plane sets.
+#[test]
+fn prop_bitslice_folds_match_scalar_per_lane() {
+    use fabricflow::gf2::bitslice::{lane_parity, lane_popcounts, LANES};
+    prop::check("plane folds vs scalar", 40, |rng| {
+        let planes: Vec<u64> = (0..rng.index(40)).map(|_| rng.next_u64()).collect();
+        let folded = lane_parity(&planes);
+        let mut counts = [0u32; LANES];
+        lane_popcounts(&planes, &mut counts);
+        for l in 0..LANES {
+            let ones = planes.iter().filter(|&&p| (p >> l) & 1 == 1).count() as u32;
+            prop::assert_prop((folded >> l) & 1 == (ones & 1) as u64, format!("parity lane {l}"))?;
+            prop::assert_prop(counts[l] == ones, format!("popcount lane {l}"))?;
+        }
+        Ok(())
+    });
+}
+
 /// GF(2) pipeline: Williams LUT method == dense == software threads for
 /// random (n, k, PEs) that tile.
 #[test]

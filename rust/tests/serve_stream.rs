@@ -15,7 +15,7 @@
 use fabricflow::apps::ldpc::{LdpcNocDecoder, MinsumVariant};
 use fabricflow::noc::scenario;
 use fabricflow::serve::hostlink::{
-    decode_frame, CodecError, LdpcRequest, Request, Response, ScenarioRequest,
+    decode_frame, CodecError, LdpcBatchRequest, LdpcRequest, Request, Response, ScenarioRequest,
 };
 use fabricflow::serve::loadgen::{generate, LoadgenConfig, ReqKind};
 use fabricflow::serve::{
@@ -27,7 +27,21 @@ use fabricflow::util::{prop, Rng};
 /// A random well-formed request (any kind, random parameters — not
 /// necessarily *servable*, the codec doesn't care).
 fn arbitrary_request(rng: &mut Rng) -> Request {
-    match rng.index(4) {
+    match rng.index(5) {
+        4 => Request::LdpcBatch(LdpcBatchRequest {
+            niter: rng.below(100) as u32,
+            variant: if rng.bool() {
+                MinsumVariant::SignMagnitude
+            } else {
+                MinsumVariant::PaperListing
+            },
+            // The codec only admits 1..=64 codewords per frame.
+            words: (0..1 + rng.index(64))
+                .map(|_| {
+                    (0..rng.index(12)).map(|_| rng.range_i64(-1000, 1000) as i32).collect()
+                })
+                .collect(),
+        }),
         0 => Request::Scenario(ScenarioRequest {
             scenario: rng.next_u64() as u8,
             load: rng.f64(),
@@ -316,6 +330,51 @@ fn served_ldpc_matches_batch_decode_through_the_full_stream() {
         }
         other => panic!("{other:?}"),
     }
+}
+
+#[test]
+fn batched_ldpc_stream_equals_n_single_request_frames() {
+    // One LdpcBatchReq frame vs the same codewords as N LdpcReq frames:
+    // the per-codeword results must be bit-identical — batching only
+    // amortizes framing, never changes an answer.
+    let cfg = ServeConfig { threads: 2, admission: Admission::Block, ..ServeConfig::default() };
+    let mut rng = Rng::new(0xBA7C);
+    let words: Vec<Vec<i32>> =
+        (0..8).map(|_| (0..7).map(|_| rng.range_i64(-100, 100) as i32).collect()).collect();
+    let mut batch_in = Vec::new();
+    Request::LdpcBatch(LdpcBatchRequest {
+        niter: 4,
+        variant: MinsumVariant::SignMagnitude,
+        words: words.clone(),
+    })
+    .encode(500, &mut batch_in);
+    let mut singles_in = Vec::new();
+    for (i, llr) in words.iter().enumerate() {
+        Request::Ldpc(LdpcRequest {
+            niter: 4,
+            variant: MinsumVariant::SignMagnitude,
+            llr: llr.clone(),
+        })
+        .encode(i as u32, &mut singles_in);
+    }
+    let (batch_out, bsum) = serve_bytes(&cfg, &batch_in).unwrap();
+    let (singles_out, ssum) = serve_bytes(&cfg, &singles_in).unwrap();
+    assert_eq!(bsum.served, 1);
+    assert_eq!(ssum.served, words.len() as u64);
+    let batch_resps = parse_responses(&batch_out).unwrap();
+    let single_resps = parse_responses(&singles_out).unwrap();
+    let (500, Response::LdpcBatch(batch)) = &batch_resps[0] else {
+        panic!("expected batch response with id 500, got {batch_resps:?}");
+    };
+    assert_eq!(batch.results.len(), words.len());
+    for (i, got) in batch.results.iter().enumerate() {
+        match &single_resps[i].1 {
+            Response::Ldpc(want) => assert_eq!(got, want, "codeword {i} diverged"),
+            other => panic!("codeword {i}: expected ldpc response, got {other:?}"),
+        }
+    }
+    // The batch frame is materially smaller than N single frames.
+    assert!(batch_in.len() < singles_in.len(), "batching must amortize framing");
 }
 
 #[test]
