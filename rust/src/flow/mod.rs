@@ -44,7 +44,7 @@ use std::fmt;
 
 use crate::noc::flit::{depacketize, Flit, NodeId};
 use crate::noc::multichip::{LinkStat, MultiChipError, MultiChipSim};
-use crate::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
+use crate::noc::{ChannelProfile, NetStats, Network, NocConfig, SimEngine, Topology};
 use crate::partition::Partition;
 use crate::pe::collector::split_tag;
 use crate::pe::{MultiChipPeSystem, PeSystem, Processor, WrappedPe};
@@ -268,6 +268,7 @@ pub struct FlowBuilder {
     pes: Vec<PeSlot>,
     taps: Vec<TapSlot>,
     channels: Vec<(String, String, u64)>,
+    measured: Option<ChannelProfile>,
     extra_resources: Vec<(String, Resources)>,
     max_cycles: u64,
     seed: u64,
@@ -289,6 +290,7 @@ impl FlowBuilder {
             pes: Vec::new(),
             taps: Vec::new(),
             channels: Vec::new(),
+            measured: None,
             extra_resources: Vec::new(),
             max_cycles: 2_000_000_000,
             seed: 0,
@@ -478,6 +480,24 @@ impl FlowBuilder {
         self
     }
 
+    /// Close the measure → re-place loop: drive the bisection-aware
+    /// placer with **measured** channel loads instead of the declared
+    /// weights. `profile` is the flit-hop profile of a previous run of
+    /// the *same* flow, keyed by unit index (PEs in registration order,
+    /// then taps) — exactly what [`MappedFlow::unit_channel_profile`]
+    /// returns after a traced run ([`MappedFlow::enable_trace`]).
+    ///
+    /// At [`FlowBuilder::build`], every declared channel whose unit pair
+    /// carried measured traffic has its weight replaced by the measured
+    /// flit-hops, and measured pairs with no declared channel are added
+    /// as new placement edges — so a hotspot the application graph
+    /// under-declared still binds tight. Declared channels with no
+    /// measured traffic keep their declared weight.
+    pub fn profile_guided(&mut self, profile: ChannelProfile) -> &mut Self {
+        self.measured = Some(profile);
+        self
+    }
+
     fn unit_index(&self, name: &str) -> Option<usize> {
         self.pes
             .iter()
@@ -643,6 +663,31 @@ impl FlowBuilder {
                 FlowError::Layout(format!("channel endpoint '{b}' is not a PE or tap"))
             })?;
             edges.push((ia, ib, *w));
+        }
+        // Profile-guided mode: measured flit-hops displace the declared
+        // weights (the placer treats channel direction as symmetric, so
+        // a pair's two directions sum).
+        if let Some(measured) = &self.measured {
+            let mut loads: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+            for ((s, d), n) in measured.iter() {
+                let (s, d) = (s as usize, d as usize);
+                if s < n_units && d < n_units && s != d {
+                    *loads.entry((s.min(d), s.max(d))).or_insert(0) += n;
+                }
+            }
+            let mut covered: Vec<(usize, usize)> = Vec::with_capacity(edges.len());
+            for (ia, ib, w) in &mut edges {
+                let key = ((*ia).min(*ib), (*ia).max(*ib));
+                if let Some(&n) = loads.get(&key) {
+                    *w = n;
+                }
+                covered.push(key);
+            }
+            for (&(a, b), &n) in &loads {
+                if n > 0 && !covered.contains(&(a, b)) {
+                    edges.push((a, b, n));
+                }
+            }
         }
         // Place the unpinned units (bisection-aware when partitioned).
         let cut_penalty = if partition.is_some() {
@@ -835,6 +880,50 @@ impl MappedFlow {
     /// The resolved partition (None when monolithic).
     pub fn partition(&self) -> Option<&Partition> {
         self.partition.as_ref()
+    }
+
+    /// Turn on flit-event tracing in the underlying simulator (both
+    /// backends) with a ring buffer of `capacity` events per network.
+    /// The run itself is bit-identical either way; the trace only
+    /// observes. See [`crate::noc::TraceBuffer`].
+    pub fn enable_trace(&mut self, capacity: usize) {
+        match &mut self.sim {
+            FlowSim::Mono(sys) => sys.net.enable_trace(capacity),
+            FlowSim::Sharded(sys) => sys.sim.enable_trace(capacity),
+        }
+    }
+
+    /// Measured flit-hops per `(src, dst)` **endpoint** pair of a traced
+    /// run (exact regardless of ring capacity; empty when tracing is
+    /// off).
+    pub fn channel_profile(&self) -> ChannelProfile {
+        match &self.sim {
+            FlowSim::Mono(sys) => sys.net.channel_profile(),
+            FlowSim::Sharded(sys) => sys.sim.channel_profile(),
+        }
+    }
+
+    /// [`MappedFlow::channel_profile`] re-keyed by **unit index** (PEs in
+    /// registration order, then taps) — the currency
+    /// [`FlowBuilder::profile_guided`] accepts, stable across rebuilds of
+    /// the same flow even when auto-placement moves the endpoints.
+    /// Traffic to endpoints hosting no named unit is dropped.
+    pub fn unit_channel_profile(&self) -> ChannelProfile {
+        let mut unit_of: BTreeMap<NodeId, u32> = BTreeMap::new();
+        for (i, (_, node)) in
+            self.pe_names.iter().chain(self.tap_names.iter()).enumerate()
+        {
+            unit_of.insert(*node, i as u32);
+        }
+        let mut out = ChannelProfile::new();
+        for ((s, d), n) in self.channel_profile().iter() {
+            if let (Some(&us), Some(&ud)) =
+                (unit_of.get(&(s as usize)), unit_of.get(&(d as usize)))
+            {
+                out.add(us, ud, n);
+            }
+        }
+        out
     }
 
     /// Run until the network is idle and every PE is drained; returns the
@@ -1424,6 +1513,84 @@ mod tests {
         assert_eq!(msgs[0].words[0], 12);
         assert_eq!(msgs[0].epoch, 1);
         assert_eq!(report.n_fpgas, 2);
+    }
+
+    #[test]
+    fn profile_guided_placement_beats_static_on_a_hotspot_flow() {
+        // A hotspot the declared graph hides: "src" (pinned, chip 0)
+        // sends 40 messages to tap "hot" and 1 to tap "cold", but both
+        // channels are declared weight 1 — the static placer cannot tell
+        // them apart, and its deterministic tie-break hands the one
+        // same-chip endpoint to "cold" (placed first), exiling the hot
+        // stream across the serializing wire. A traced run measures the
+        // real loads; re-building with profile_guided() must pull "hot"
+        // back on-chip and strictly cut completion cycles.
+        let hot_msgs: u32 = 40;
+        let build = |measured: Option<ChannelProfile>,
+                     targets: Option<(NodeId, NodeId)>|
+         -> MappedFlow {
+            let msgs = match targets {
+                None => Vec::new(),
+                Some((hot_ep, cold_ep)) => {
+                    let mut m = vec![OutMessage::word(cold_ep, 0, 0, 7, 16)];
+                    m.extend(
+                        (0..hot_msgs)
+                            .map(|e| OutMessage::word(hot_ep, 0, e, e as u64, 16)),
+                    );
+                    m
+                }
+            };
+            let mut fb = FlowBuilder::new("hotspot");
+            fb.topology(Topology::Mesh { w: 2, h: 2 })
+                .pe_at("src", 0, Box::new(Source { msgs }))
+                .tap("cold")
+                .tap("hot")
+                .channel("src", "cold")
+                .channel("src", "hot")
+                .partition(Partition::new(2, vec![0, 0, 1, 1]))
+                .multichip(SerdesConfig::default());
+            if let Some(p) = measured {
+                fb.profile_guided(p);
+            }
+            fb.build().unwrap()
+        };
+        // Placement is independent of the boot messages, so a probe
+        // build reveals where the taps land before wiring the sources.
+        let probe = build(None, None);
+        let static_eps =
+            (probe.node_of("hot").unwrap(), probe.node_of("cold").unwrap());
+        let mut static_flow = build(None, Some(static_eps));
+        static_flow.enable_trace(1 << 12);
+        let static_report = static_flow.run().unwrap();
+        let profile = static_flow.unit_channel_profile();
+        // Unit keys: pes first (src = 0), then taps (cold = 1, hot = 2).
+        assert!(
+            profile.get(0, 2) > profile.get(0, 1),
+            "hot channel must measure heavier: {profile:?}"
+        );
+
+        let guided_probe = build(Some(profile.clone()), None);
+        let guided_eps = (
+            guided_probe.node_of("hot").unwrap(),
+            guided_probe.node_of("cold").unwrap(),
+        );
+        assert_ne!(guided_eps.0, static_eps.0, "placement must actually move");
+        let mut guided_flow = build(Some(profile), Some(guided_eps));
+        let guided_report = guided_flow.run().unwrap();
+
+        // The hot tap crossed back onto src's chip...
+        let p = Partition::new(2, vec![0, 0, 1, 1]);
+        let g = (Topology::Mesh { w: 2, h: 2 }).build();
+        assert_eq!(p.assignment[g.endpoint_router(guided_eps.0)], 0);
+        // ...and the measured loads strictly beat the static placement.
+        assert!(
+            guided_report.cycles < static_report.cycles,
+            "guided {} !< static {}",
+            guided_report.cycles,
+            static_report.cycles
+        );
+        // Fewer flits serialized over the inter-chip wire, too.
+        assert!(guided_report.serdes_flits < static_report.serdes_flits);
     }
 
     #[test]

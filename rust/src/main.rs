@@ -9,6 +9,8 @@
 //! fabricflow noc --topo mesh8x8         # raw NoC traffic experiment
 //! fabricflow scenarios --topo mesh8x8   # scenario matrix (engine-selectable)
 //! fabricflow scenarios --chips 2        # …sharded across FPGAs (multichip co-sim)
+//! fabricflow trace --scenario hotspot   # flit-event recorder: links, channels, latency split
+//! fabricflow trace --chips 2 --json     # …sharded, machine-readable
 //! fabricflow sweep --threads 8          # fleet: scenario × load × seed grid
 //! fabricflow sweep --chips 2 --pins 1,8 # …multichip grid across wire configs
 //! fabricflow sweep --chips 2 --fault-rates 0,0.01   # …degraded wires (CRC/retransmit)
@@ -112,6 +114,26 @@ const COMMANDS: &[Command] = &[
         run: cmd_scenarios,
     },
     Command {
+        name: "trace",
+        spec: &[
+            flag("endpoints"),
+            flag("topo"),
+            flag("engine"),
+            flag("scenario"),
+            flag("load"),
+            flag("cycles"),
+            flag("seed"),
+            flag("chips"),
+            flag("pins"),
+            flag("clock-div"),
+            flag("capacity"),
+            flag("top"),
+            switch("json"),
+        ],
+        usage: "trace [--topo NAME] [--engine reference|event] [--scenario NAME] [--load F] [--cycles N] [--seed S] [--chips N --pins P --clock-div D] [--capacity N] [--top N] [--json]",
+        run: cmd_trace,
+    },
+    Command {
         name: "sweep",
         spec: &[
             flag("endpoints"),
@@ -135,7 +157,7 @@ const COMMANDS: &[Command] = &[
     Command {
         name: "bench",
         spec: &[flag("out"), flag("only"), switch("quick")],
-        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults,bitsliced]",
+        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults,bitsliced,trace]",
         run: cmd_bench,
     },
     Command {
@@ -438,6 +460,140 @@ fn cmd_scenarios(p: &Parsed) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_trace(p: &Parsed) -> Result<(), String> {
+    use fabricflow::noc::multichip::MultiChipSim;
+    use fabricflow::noc::trace::{attribute, link_loads};
+    let eps = p.get_or("endpoints", 64usize).map_err(bad)?;
+    let topo = topo_from_name(p.raw("topo").unwrap_or("mesh8x8"), eps)?;
+    let engine = engine_from_name(p.raw("engine").unwrap_or("event"))?;
+    let which = p.raw("scenario").unwrap_or("hotspot");
+    let scn = scenario::by_name(which).ok_or_else(|| {
+        format!(
+            "unknown scenario '{which}' (one of: {})",
+            scenario::registry().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+        )
+    })?;
+    let load = p.get_or("load", 0.1f64).map_err(bad)?;
+    let window = p.get_or("cycles", 2_000u64).map_err(bad)?;
+    let seed = p.get_or("seed", 1u64).map_err(bad)?;
+    let capacity = p.get_or("capacity", 1usize << 16).map_err(bad)?;
+    let top = p.get_or("top", 8usize).map_err(bad)?;
+    let chips = p.get_or("chips", 0usize).map_err(bad)?;
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let graph = topo.build();
+    let inj = scn.trace(graph.n_endpoints, load, window, seed);
+
+    // Run traced, then pull the event stream and the exact channel
+    // profile out of the recorder(s).
+    let (done, stats, events, (recorded, dropped), profile) = if chips >= 2 {
+        let partition = Partition::balanced(&graph, chips, seed);
+        let serdes = SerdesConfig {
+            pins: p.get_or("pins", 8u32).map_err(bad)?,
+            clock_div: p.get_or("clock-div", 1u32).map_err(bad)?,
+            tx_buffer: 8,
+        };
+        let mut sim = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+        sim.enable_trace(capacity);
+        let done = scenario::replay_multichip(&mut sim, &inj, 1_000_000_000)
+            .map_err(|e| format!("replay: {e}"))?;
+        (done, sim.stats(), sim.trace_events(), sim.trace_counts(), sim.channel_profile())
+    } else {
+        let mut net = Network::new(&topo, cfg);
+        net.enable_trace(capacity);
+        let done = scenario::replay(&mut net, &inj, 100_000_000)
+            .map_err(|e| format!("replay: {e}"))?;
+        let tb = net.trace().expect("recorder enabled");
+        let counts = (tb.recorded(), tb.dropped());
+        (done, net.stats().clone(), tb.events(), counts, net.channel_profile())
+    };
+    let attr = attribute(&events);
+    // Heaviest physical links and logical channels, by measured
+    // flit-hops, descending (ties broken by key for determinism).
+    let mut links: Vec<((u16, u32, u16), u64)> = link_loads(&events).into_iter().collect();
+    links.sort_by_key(|&(key, n)| (std::cmp::Reverse(n), key));
+    links.truncate(top);
+    let mut channels: Vec<((u32, u32), u64)> = profile.iter().collect();
+    channels.sort_by_key(|&(key, n)| (std::cmp::Reverse(n), key));
+    channels.truncate(top);
+
+    if p.has("json") {
+        use std::fmt::Write as _;
+        let mut j = String::new();
+        let _ = writeln!(j, "{{");
+        let _ = writeln!(j, "  \"schema\": \"fabricflow-trace/v1\",");
+        let _ = writeln!(j, "  \"scenario\": \"{}\",", scn.name);
+        let _ = writeln!(j, "  \"topo\": \"{topo:?}\",");
+        let _ = writeln!(j, "  \"engine\": \"{}\",", engine.name());
+        let _ = writeln!(j, "  \"load\": {load},");
+        let _ = writeln!(j, "  \"window\": {window},");
+        let _ = writeln!(j, "  \"seed\": {seed},");
+        let _ = writeln!(j, "  \"chips\": {chips},");
+        let _ = writeln!(j, "  \"cycles\": {done},");
+        let _ = writeln!(j, "  \"delivered\": {},", stats.delivered);
+        let _ = writeln!(j, "  \"capacity\": {capacity},");
+        let _ = writeln!(j, "  \"recorded\": {recorded},");
+        let _ = writeln!(j, "  \"dropped\": {dropped},");
+        let _ = writeln!(j, "  \"attribution\": {{");
+        let _ = writeln!(j, "    \"flits\": {},", attr.flits.len());
+        let _ = writeln!(j, "    \"avg_latency\": {:.2},", attr.avg_latency());
+        let _ = writeln!(j, "    \"total_latency\": {},", attr.total_latency);
+        let _ = writeln!(j, "    \"total_queueing\": {},", attr.total_queueing);
+        let _ = writeln!(j, "    \"total_hops\": {},", attr.total_hops);
+        let _ = writeln!(j, "    \"total_wire\": {}", attr.total_wire);
+        let _ = writeln!(j, "  }},");
+        let _ = writeln!(j, "  \"links\": [");
+        for (i, &((chip, router, port), n)) in links.iter().enumerate() {
+            let comma = if i + 1 == links.len() { "" } else { "," };
+            let _ = writeln!(
+                j,
+                "    {{\"chip\": {chip}, \"router\": {router}, \"port\": {port}, \"flit_hops\": {n}}}{comma}"
+            );
+        }
+        let _ = writeln!(j, "  ],");
+        let _ = writeln!(j, "  \"channels\": [");
+        for (i, &((src, dst), n)) in channels.iter().enumerate() {
+            let comma = if i + 1 == channels.len() { "" } else { "," };
+            let _ = writeln!(
+                j,
+                "    {{\"src\": {src}, \"dst\": {dst}, \"flit_hops\": {n}}}{comma}"
+            );
+        }
+        let _ = writeln!(j, "  ]");
+        let _ = writeln!(j, "}}");
+        print!("{j}");
+        return Ok(());
+    }
+
+    println!(
+        "flit trace: {} on {topo:?} — {} engine, load {load}, {window}-cycle window, seed {seed}{}",
+        scn.name,
+        engine.name(),
+        if chips >= 2 { format!(", sharded across {chips} FPGAs") } else { String::new() }
+    );
+    println!("  drained in {done} cycles — {stats}");
+    println!(
+        "  recorded {recorded} events ({dropped} overwritten by ring wrap, capacity {capacity})"
+    );
+    let n_attr = attr.flits.len().max(1) as u64;
+    println!(
+        "  latency split over {} attributed flits: avg {:.1} cyc = {:.1} queueing + {:.1} hops + {:.1} wire",
+        attr.flits.len(),
+        attr.avg_latency(),
+        attr.total_queueing as f64 / n_attr as f64,
+        attr.total_hops as f64 / n_attr as f64,
+        attr.total_wire as f64 / n_attr as f64
+    );
+    println!("  top links by flit-hops (surviving events):");
+    for &((chip, router, port), n) in &links {
+        println!("    chip{chip} R{router}.p{port:<3} {n:>8}");
+    }
+    println!("  top channels by measured flit-hops (exact):");
+    for &((src, dst), n) in &channels {
+        println!("    ep{src:<4} -> ep{dst:<4} {n:>8}");
+    }
+    Ok(())
+}
+
 fn cmd_sweep(p: &Parsed) -> Result<(), String> {
     use std::time::Instant;
     let eps = p.get_or("endpoints", 64usize).map_err(bad)?;
@@ -550,7 +706,7 @@ fn cmd_bench(p: &Parsed) -> Result<(), String> {
     let sel = match p.raw("only") {
         Some(s) => fabricflow::perf::BenchSelect::parse(s).ok_or_else(|| {
             format!(
-                "bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults, bitsliced)"
+                "bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults, bitsliced, trace)"
             )
         })?,
         None => fabricflow::perf::BenchSelect::ALL,

@@ -31,6 +31,7 @@ pub mod router;
 pub mod network;
 pub mod scenario;
 pub mod stats;
+pub mod trace;
 pub mod traffic;
 
 pub use engine::Stalled;
@@ -39,6 +40,7 @@ pub use multichip::{LinkStat, MultiChipError, MultiChipSim};
 pub use network::{Network, SharedFabric};
 pub use stats::NetStats;
 pub use topology::Topology;
+pub use trace::{ChannelProfile, FlitEvent, FlitEventKind, TraceBuffer};
 
 /// Which stepper advances the simulation (see [`engine`]).
 ///

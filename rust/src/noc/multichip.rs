@@ -44,6 +44,7 @@ use super::engine::Stalled;
 use super::flit::{Flit, NodeId};
 use super::stats::NetStats;
 use super::topology::{chip_graph, TopoGraph, Topology};
+use super::trace::{ChannelProfile, FlitEvent};
 use super::{Network, NocConfig, SimEngine};
 use crate::partition::Partition;
 use crate::serdes::{
@@ -796,6 +797,65 @@ impl MultiChipSim {
         total
     }
 
+    // -- tracing ------------------------------------------------------------
+
+    /// Enable flit tracing on every chip: each gets its own ring of
+    /// `capacity` events stamped with its chip index. Per-chip buffers
+    /// mean [`MultiChipSim::set_threaded`] stepping needs no sharing —
+    /// a chip only ever records into its own recorder (and the gateway
+    /// hooks run inside the single-threaded link barrier anyway).
+    pub fn enable_trace(&mut self, capacity: usize) {
+        for (i, chip) in self.chips.iter_mut().enumerate() {
+            chip.enable_trace(capacity);
+            chip.trace_mut().unwrap().chip = i as u16;
+        }
+    }
+
+    /// Drop every chip's recorder.
+    pub fn disable_trace(&mut self) {
+        for chip in &mut self.chips {
+            chip.disable_trace();
+        }
+    }
+
+    /// Is the fabric recording flit events?
+    pub fn trace_enabled(&self) -> bool {
+        self.chips.iter().any(|c| c.trace().is_some())
+    }
+
+    /// Every chip's surviving events merged into one stream, ordered by
+    /// (cycle, chip) with per-chip recording order preserved (the sort
+    /// is stable), so `trace::attribute` can pair wire crossings.
+    pub fn trace_events(&self) -> Vec<FlitEvent> {
+        let mut evs: Vec<FlitEvent> = self
+            .chips
+            .iter()
+            .filter_map(|c| c.trace())
+            .flat_map(|t| t.iter().copied())
+            .collect();
+        evs.sort_by_key(|e| (e.cycle, e.chip));
+        evs
+    }
+
+    /// (recorded, dropped) event totals across every chip's ring.
+    pub fn trace_counts(&self) -> (u64, u64) {
+        self.chips
+            .iter()
+            .filter_map(|c| c.trace())
+            .fold((0, 0), |(r, d), t| (r + t.recorded(), d + t.dropped()))
+    }
+
+    /// Measured flit-hops per (src, dst) endpoint pair, merged across
+    /// chips. A wire-crossing flit contributes its hops on both chips,
+    /// matching the monolithic hop count. Exact even when rings wrap.
+    pub fn channel_profile(&self) -> ChannelProfile {
+        let mut profile = ChannelProfile::new();
+        for chip in &self.chips {
+            profile.merge(&chip.channel_profile());
+        }
+        profile
+    }
+
     /// Restore the whole fabric to cycle 0, exactly as freshly
     /// constructed, without rebuilding anything: every chip's
     /// [`Network::reset`] plus the wire channels' in-flight queues and
@@ -1016,6 +1076,51 @@ mod tests {
         }
         got.sort_unstable();
         got
+    }
+
+    #[test]
+    fn sharded_tracing_records_wire_crossings_per_chip() {
+        use crate::noc::trace::FlitEventKind as K;
+        use crate::serdes::SerdesConfig;
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let part = bisection(16, 4);
+        let run = |traced: bool| {
+            let mut sim =
+                MultiChipSim::new(&topo, NocConfig::paper(), &part, SerdesConfig::default());
+            if traced {
+                sim.enable_trace(1 << 14);
+            }
+            for (s, d, t, x) in uniform_traffic(3, 16, 200) {
+                sim.inject(s, Flit::single(s, d, t, x));
+            }
+            sim.run_until_idle(1_000_000).unwrap();
+            sim
+        };
+        let base = run(false);
+        let sim = run(true);
+        assert_eq!(sim.stats(), base.stats(), "tracing perturbed the sharded run");
+        let evs = sim.trace_events();
+        let tx = evs.iter().filter(|e| e.kind == K::WireTx).count() as u64;
+        let rx = evs.iter().filter(|e| e.kind == K::WireRx).count() as u64;
+        assert!(tx > 0, "bisection traffic must cross the cut");
+        assert_eq!(tx, sim.wire_flits());
+        assert_eq!(rx, sim.wire_flits());
+        assert!(evs.iter().any(|e| e.chip == 0) && evs.iter().any(|e| e.chip == 1));
+        assert!(
+            evs.windows(2).all(|w| (w[0].cycle, w[0].chip) <= (w[1].cycle, w[1].chip)),
+            "merged stream must be (cycle, chip)-ordered"
+        );
+        let (recorded, dropped) = sim.trace_counts();
+        assert_eq!(recorded, evs.len() as u64 + dropped);
+        assert_eq!(dropped, 0, "capacity should hold the whole run");
+        // Wire time shows up in the latency attribution of every flit.
+        let attr = crate::noc::trace::attribute(&evs);
+        assert_eq!(attr.flits.len(), 200);
+        assert!(attr.total_wire >= sim.wire_flits() * sim.serdes_cycles_per_flit());
+        assert_eq!(
+            attr.total_latency,
+            attr.total_wire + attr.total_hops + attr.total_queueing
+        );
     }
 
     #[test]

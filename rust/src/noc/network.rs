@@ -32,6 +32,7 @@ use super::flit::{packetize_into, Flit, NodeId};
 use super::router::{OutputPort, Router};
 use super::stats::NetStats;
 use super::topology::{Hop, PortDest, RoutePlan, TopoGraph, Topology};
+use super::trace::{ChannelProfile, FlitEvent, FlitEventKind, TraceBuffer};
 use super::{Allocator, NocConfig, SimEngine};
 use crate::serdes::{wire_bits, SerdesChannel, SerdesConfig};
 
@@ -167,6 +168,12 @@ pub struct Network {
     /// multi-chip coordinator, which credits the paired TX port on the
     /// far chip. Always empty on monolithic networks.
     pub(super) gw_credit_returns: Vec<(u32, u8)>,
+    /// Opt-in flit event recorder ([`super::trace`]). `None` — the
+    /// default — means every trace hook in the phase bodies is a
+    /// skipped `if let` over an absent option: the untraced hot loop
+    /// allocates nothing and produces bit-identical stats and eject
+    /// order (enforced by `tests/trace_diff.rs` + `tests/alloc_free.rs`).
+    pub(super) trace: Option<Box<TraceBuffer>>,
 }
 
 impl Network {
@@ -187,6 +194,23 @@ impl Network {
     /// Build over a shared graph + route plan (see [`SharedFabric`]).
     fn from_shared(topo: Arc<TopoGraph>, routes: Arc<RoutePlan>, mut cfg: NocConfig) -> Self {
         cfg.num_vcs = cfg.num_vcs.max(topo.min_vcs);
+        // Hop::pack stores the VC in 2 bits and the port in 14: a wider
+        // config would tabulate an aliased RoutePlan and misroute
+        // silently. NocConfig::validate rejects num_vcs > 4 up front,
+        // but the min_vcs raise above and hand-built TopoGraphs bypass
+        // validate, so the packing bounds are enforced here too.
+        assert!(
+            cfg.num_vcs <= 4,
+            "num_vcs {} exceeds Hop::pack's 2-bit VC field (routes would alias)",
+            cfg.num_vcs
+        );
+        for (r, ports) in topo.ports.iter().enumerate() {
+            assert!(
+                ports.len() < (1 << 14),
+                "router {r} has {} ports, exceeding Hop::pack's 14-bit port field",
+                ports.len()
+            );
+        }
         assert!(
             cfg.buffer_depth <= u16::MAX as usize,
             "buffer_depth {} exceeds the arena ring index width",
@@ -257,6 +281,7 @@ impl Network {
             sweep: Vec::new(),
             moves: 0,
             gw_credit_returns: Vec::new(),
+            trace: None,
         }
     }
 
@@ -315,6 +340,9 @@ impl Network {
         self.ni_set.clear();
         self.moves = 0;
         self.gw_credit_returns.clear();
+        if let Some(tb) = self.trace.as_mut() {
+            tb.clear();
+        }
     }
 
     // -- flat flit arena ----------------------------------------------------
@@ -383,6 +411,19 @@ impl Network {
     pub(super) fn gateway_take(&mut self, r: usize, p: usize) -> Option<Flit> {
         debug_assert!(matches!(self.topo.ports[r][p], PortDest::Gateway { .. }));
         let flit = self.routers[r].outputs[p].latch.take()?;
+        if let Some(tb) = self.trace.as_mut() {
+            tb.record(FlitEvent {
+                cycle: self.cycle,
+                injected_at: flit.injected_at,
+                src: flit.src as u32,
+                dst: flit.dst as u32,
+                at: r as u32,
+                port: p as u16,
+                chip: 0,
+                vc: flit.vc,
+                kind: FlitEventKind::WireTx,
+            });
+        }
         self.in_network -= 1;
         self.moves += 1;
         Some(flit)
@@ -402,6 +443,19 @@ impl Network {
         self.stats.link_hops += 1;
         self.in_network += 1;
         self.moves += 1;
+        if let Some(tb) = self.trace.as_mut() {
+            tb.record(FlitEvent {
+                cycle: self.cycle,
+                injected_at: flit.injected_at,
+                src: flit.src as u32,
+                dst: flit.dst as u32,
+                at: r as u32,
+                port: p as u16,
+                chip: 0,
+                vc: flit.vc,
+                kind: FlitEventKind::WireRx,
+            });
+        }
         self.buffer_flit(r, p, flit);
     }
 
@@ -441,6 +495,37 @@ impl Network {
         &self.stats
     }
 
+    // -- tracing ------------------------------------------------------------
+
+    /// Enable flit tracing with a preallocated ring of `capacity`
+    /// events (replacing any previous buffer). Tracing is purely
+    /// observational: a traced run produces the same stats, cycle
+    /// counts and eject order as an untraced one — it only *records*.
+    pub fn enable_trace(&mut self, capacity: usize) {
+        self.trace = Some(Box::new(TraceBuffer::new(capacity)));
+    }
+
+    /// Drop the recorder, returning to the zero-overhead untraced mode.
+    pub fn disable_trace(&mut self) {
+        self.trace = None;
+    }
+
+    /// The event recorder, if tracing is enabled.
+    pub fn trace(&self) -> Option<&TraceBuffer> {
+        self.trace.as_deref()
+    }
+
+    /// Mutable access to the recorder (e.g. to `clear` between phases).
+    pub fn trace_mut(&mut self) -> Option<&mut TraceBuffer> {
+        self.trace.as_deref_mut()
+    }
+
+    /// Measured flit-hops per (src, dst) endpoint pair. Empty unless
+    /// tracing was enabled; exact even when the event ring wrapped.
+    pub fn channel_profile(&self) -> ChannelProfile {
+        self.trace.as_ref().map(|t| t.channel_profile()).unwrap_or_default()
+    }
+
     /// Hand a flit to endpoint `e`'s NI (unbounded queue; the NI injects
     /// one per cycle). Timestamps the flit for latency accounting.
     pub fn inject(&mut self, e: NodeId, mut flit: Flit) {
@@ -449,6 +534,19 @@ impl Network {
         flit.injected_at = self.cycle;
         flit.src = e;
         self.stats.injected += 1;
+        if let Some(tb) = self.trace.as_mut() {
+            tb.record(FlitEvent {
+                cycle: self.cycle,
+                injected_at: flit.injected_at,
+                src: flit.src as u32,
+                dst: flit.dst as u32,
+                at: e as u32,
+                port: 0,
+                chip: 0,
+                vc: 0,
+                kind: FlitEventKind::Inject,
+            });
+        }
         self.src_q[e].push_back(flit);
         self.queued_src += 1;
         self.ni_set.insert(e);
@@ -634,6 +732,19 @@ impl Network {
             match self.topo.ports[r][p] {
                 PortDest::Endpoint(e) => {
                     self.stats.record_delivery(self.cycle - flit.injected_at);
+                    if let Some(tb) = self.trace.as_mut() {
+                        tb.record(FlitEvent {
+                            cycle: self.cycle,
+                            injected_at: flit.injected_at,
+                            src: flit.src as u32,
+                            dst: flit.dst as u32,
+                            at: e as u32,
+                            port: 0,
+                            chip: 0,
+                            vc: 0,
+                            kind: FlitEventKind::Eject,
+                        });
+                    }
                     self.in_network -= 1;
                     self.eject_q[e].push_back(flit);
                 }
@@ -653,6 +764,19 @@ impl Network {
     #[inline]
     fn buffer_flit(&mut self, router: usize, port: usize, flit: Flit) {
         let hop = self.routes.hop(&self.topo, router, flit.src, flit.dst);
+        if let Some(tb) = self.trace.as_mut() {
+            tb.record(FlitEvent {
+                cycle: self.cycle,
+                injected_at: flit.injected_at,
+                src: flit.src as u32,
+                dst: flit.dst as u32,
+                at: router as u32,
+                port: hop.port as u16,
+                chip: 0,
+                vc: hop.vc,
+                kind: FlitEventKind::Hop,
+            });
+        }
         self.occupancy[router] += 1;
         self.alloc_set.insert(router);
         let slab = self.vc_slab(router, port, flit.vc as usize);
@@ -1180,6 +1304,76 @@ mod tests {
             let got = drain(&mut reused);
             assert_eq!(got, want, "{engine:?}: reset run diverged from fresh");
         }
+    }
+
+    #[test]
+    fn tracing_records_events_without_perturbing_the_run() {
+        use super::super::trace::FlitEventKind as K;
+        let run = |trace_cap: Option<usize>| {
+            let mut n = net(Topology::Mesh { w: 4, h: 4 });
+            if let Some(cap) = trace_cap {
+                n.enable_trace(cap);
+            }
+            let mut rng = crate::util::Rng::new(42);
+            for k in 0..200u32 {
+                let s = rng.index(16);
+                let d = (s + 1 + rng.index(15)) % 16;
+                n.inject(s, Flit::single(s, d, k, k as u64));
+            }
+            let cycles = n.run_until_idle(100_000).unwrap();
+            (cycles, n.stats().clone(), n)
+        };
+        let (base_cycles, base_stats, _) = run(None);
+        let (cycles, stats, traced) = run(Some(1 << 14));
+        assert_eq!(cycles, base_cycles, "tracing changed the cycle count");
+        assert_eq!(stats, base_stats, "tracing changed the stats");
+        let tb = traced.trace().unwrap();
+        assert_eq!(tb.dropped(), 0, "capacity should hold the whole run");
+        let evs = tb.events();
+        assert_eq!(evs.iter().filter(|e| e.kind == K::Inject).count(), 200);
+        assert_eq!(evs.iter().filter(|e| e.kind == K::Eject).count(), 200);
+        // One Hop per router stay: link_hops inter-router landings plus
+        // the initial buffering at each flit's source router.
+        let hops = evs.iter().filter(|e| e.kind == K::Hop).count() as u64;
+        assert_eq!(hops, stats.link_hops + 200);
+        assert_eq!(traced.channel_profile().total(), hops);
+        // Monolithic network: no wire crossings, chip stamp 0.
+        assert!(evs.iter().all(|e| e.chip == 0));
+        assert!(!evs.iter().any(|e| matches!(e.kind, K::WireTx | K::WireRx)));
+        // Attribution covers every delivered flit and adds up.
+        let attr = super::super::trace::attribute(&evs);
+        assert_eq!(attr.flits.len(), 200);
+        assert_eq!(
+            attr.total_latency,
+            attr.total_wire + attr.total_hops + attr.total_queueing
+        );
+    }
+
+    #[test]
+    fn trace_single_flit_route_is_fully_attributed() {
+        let mut n = net(Topology::Mesh { w: 4, h: 4 });
+        n.enable_trace(64);
+        n.inject(0, Flit::single(0, 15, 7, 0xABCD));
+        n.run_until_idle(1000).unwrap();
+        // XY route corner-to-corner on 4x4: source router + 6 landings.
+        assert_eq!(n.channel_profile().get(0, 15), 7);
+        let attr = super::super::trace::attribute(&n.trace().unwrap().events());
+        assert_eq!(attr.flits.len(), 1);
+        assert_eq!(attr.flits[0].hops, 7);
+        assert_eq!(attr.flits[0].wire, 0);
+        // reset() clears the recorder but keeps tracing enabled.
+        n.reset();
+        assert_eq!(n.trace().unwrap().recorded(), 0);
+        assert!(n.channel_profile().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "2-bit VC field")]
+    fn overwide_vc_config_cannot_reach_the_route_table() {
+        // Bypasses NocConfig::validate on purpose: construction itself
+        // must refuse a config Hop::pack would silently alias.
+        let cfg = NocConfig { num_vcs: 5, ..NocConfig::paper() };
+        let _ = Network::new(&Topology::Mesh { w: 2, h: 2 }, cfg);
     }
 
     #[test]

@@ -120,6 +120,11 @@ impl FaultSpec {
 /// A named workload in the registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Scenario {
+    /// Stable wire identifier (`hostlink::ScenarioRequest.scenario`).
+    /// Ids are assigned once and never renumbered, so serve clients and
+    /// golden request streams survive registry reordering — nothing may
+    /// index the registry by position.
+    pub id: u8,
     pub name: &'static str,
     pub workload: Workload,
     /// Fault regime applied to the wire links when the scenario runs on
@@ -131,45 +136,79 @@ pub struct Scenario {
 }
 
 /// Every named scenario. Adding an entry here automatically enrolls it
-/// in the differential engine matrix and the CLI.
+/// in the differential engine matrix and the CLI. New entries take the
+/// next unused `id`; existing ids are frozen (they are the serve wire
+/// protocol). Array order is presentation order only — look scenarios
+/// up with [`by_name`]/[`by_id`], never by position.
+static REGISTRY: [Scenario; 11] = [
+    Scenario {
+        id: 0,
+        name: "uniform",
+        workload: Workload::Synthetic(Pattern::Uniform),
+        fault: None,
+    },
+    Scenario {
+        id: 1,
+        name: "hotspot",
+        workload: Workload::Synthetic(Pattern::Hotspot),
+        fault: None,
+    },
+    Scenario {
+        id: 2,
+        name: "tornado",
+        workload: Workload::Synthetic(Pattern::Tornado),
+        fault: None,
+    },
+    Scenario {
+        id: 3,
+        name: "transpose",
+        workload: Workload::Synthetic(Pattern::Transpose),
+        fault: None,
+    },
+    Scenario {
+        id: 4,
+        name: "bit-reverse",
+        workload: Workload::Synthetic(Pattern::BitReverse),
+        fault: None,
+    },
+    Scenario { id: 5, name: "bursty", workload: Workload::Bursty { on: 32, off: 96 }, fault: None },
+    Scenario { id: 6, name: "ldpc-trace", workload: Workload::Ldpc, fault: None },
+    Scenario { id: 7, name: "pfilter-trace", workload: Workload::Pfilter, fault: None },
+    Scenario { id: 8, name: "bmvm-trace", workload: Workload::Bmvm, fault: None },
+    // Degraded-mode scenarios: same traffic families, lossy wires.
+    Scenario {
+        id: 9,
+        name: "degraded-uniform",
+        workload: Workload::Synthetic(Pattern::Uniform),
+        fault: Some(FaultSpec { flip_ppm: 200, drop_ppm: 5_000, chip_down: None }),
+    },
+    Scenario {
+        id: 10,
+        name: "degraded-chipdrop",
+        workload: Workload::Bursty { on: 32, off: 96 },
+        fault: Some(FaultSpec { flip_ppm: 0, drop_ppm: 0, chip_down: Some((1, 64, 448)) }),
+    },
+];
+
+/// Every named scenario, in presentation order.
 pub fn registry() -> Vec<Scenario> {
-    vec![
-        Scenario { name: "uniform", workload: Workload::Synthetic(Pattern::Uniform), fault: None },
-        Scenario { name: "hotspot", workload: Workload::Synthetic(Pattern::Hotspot), fault: None },
-        Scenario { name: "tornado", workload: Workload::Synthetic(Pattern::Tornado), fault: None },
-        Scenario {
-            name: "transpose",
-            workload: Workload::Synthetic(Pattern::Transpose),
-            fault: None,
-        },
-        Scenario {
-            name: "bit-reverse",
-            workload: Workload::Synthetic(Pattern::BitReverse),
-            fault: None,
-        },
-        Scenario { name: "bursty", workload: Workload::Bursty { on: 32, off: 96 }, fault: None },
-        Scenario { name: "ldpc-trace", workload: Workload::Ldpc, fault: None },
-        Scenario { name: "pfilter-trace", workload: Workload::Pfilter, fault: None },
-        Scenario { name: "bmvm-trace", workload: Workload::Bmvm, fault: None },
-        // Degraded-mode scenarios: same traffic families, lossy wires.
-        // New entries go at the END — serve and its tests index into the
-        // registry by position.
-        Scenario {
-            name: "degraded-uniform",
-            workload: Workload::Synthetic(Pattern::Uniform),
-            fault: Some(FaultSpec { flip_ppm: 200, drop_ppm: 5_000, chip_down: None }),
-        },
-        Scenario {
-            name: "degraded-chipdrop",
-            workload: Workload::Bursty { on: 32, off: 96 },
-            fault: Some(FaultSpec { flip_ppm: 0, drop_ppm: 0, chip_down: Some((1, 64, 448)) }),
-        },
-    ]
+    REGISTRY.to_vec()
 }
 
-/// Look up a scenario by name.
+/// Look up a scenario by name. Allocation-free (scans the static
+/// registry), so the serve hot loop may call it per request.
+pub fn by_name(name: &str) -> Option<&'static Scenario> {
+    REGISTRY.iter().find(|s| s.name == name)
+}
+
+/// Look up a scenario by its stable wire id. Allocation-free.
+pub fn by_id(id: u8) -> Option<&'static Scenario> {
+    REGISTRY.iter().find(|s| s.id == id)
+}
+
+/// Look up a scenario by name (by-value convenience over [`by_name`]).
 pub fn find(name: &str) -> Option<Scenario> {
-    registry().into_iter().find(|s| s.name == name)
+    by_name(name).copied()
 }
 
 impl Scenario {
@@ -799,15 +838,43 @@ mod tests {
     use super::*;
 
     #[test]
-    fn registry_names_are_unique_and_findable() {
+    fn registry_names_and_ids_are_unique_and_findable() {
         let reg = registry();
         for (i, a) in reg.iter().enumerate() {
             for b in &reg[i + 1..] {
                 assert_ne!(a.name, b.name);
+                assert_ne!(a.id, b.id, "{} and {} share id {}", a.name, b.name, a.id);
             }
             assert_eq!(find(a.name), Some(*a));
+            assert_eq!(by_name(a.name), Some(a));
+            assert_eq!(by_id(a.id).map(|s| s.name), Some(a.name));
         }
         assert_eq!(find("no-such-scenario"), None);
+        assert_eq!(by_id(200), None);
+    }
+
+    #[test]
+    fn wire_ids_are_frozen() {
+        // These pairs are the serve wire protocol (ScenarioRequest
+        // carries the id): renumbering would silently change what
+        // existing clients and golden request streams run. Position in
+        // the registry array is NOT load-bearing — these lookups are.
+        for (id, name) in [
+            (0, "uniform"),
+            (1, "hotspot"),
+            (2, "tornado"),
+            (3, "transpose"),
+            (4, "bit-reverse"),
+            (5, "bursty"),
+            (6, "ldpc-trace"),
+            (7, "pfilter-trace"),
+            (8, "bmvm-trace"),
+            (9, "degraded-uniform"),
+            (10, "degraded-chipdrop"),
+        ] {
+            assert_eq!(by_id(id).map(|s| s.name), Some(name), "id {id}");
+            assert_eq!(by_name(name).map(|s| s.id), Some(id), "{name}");
+        }
     }
 
     #[test]
@@ -978,10 +1045,6 @@ mod tests {
         let chipdrop = find("degraded-chipdrop").unwrap().fault.unwrap();
         assert_eq!(chipdrop.chip_down, Some((1, 64, 448)));
         assert!(find("uniform").unwrap().fault.is_none());
-        // Serve and its tests index into the registry by position — the
-        // pre-fault prefix must stay where it was.
-        assert_eq!(registry()[0].name, "uniform");
-        assert_eq!(registry()[2].name, "tornado");
     }
 
     #[test]

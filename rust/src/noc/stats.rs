@@ -20,8 +20,12 @@ pub struct NetStats {
     pub max_latency: u64,
     /// Per-flit latency histogram in power-of-two buckets: bucket `b`
     /// counts deliveries with latency in `[2^(b-1), 2^b)` (bucket 0 =
-    /// zero-latency; the last bucket absorbs the tail). Grown lazily, so
-    /// trailing zero buckets are simply absent.
+    /// zero-latency). [`latency_bucket`] clamps to index
+    /// `LAT_BUCKETS - 1`, so every latency up to `u64::MAX` lands in a
+    /// valid bucket — the *clamp* absorbs the tail, not the vector's
+    /// last element: the vector is grown lazily to the highest occupied
+    /// bucket, so trailing zero buckets (including the absorbing one)
+    /// are simply absent until something lands there.
     pub latency_hist: Vec<u64>,
     /// Total flit-hops over router→router links (for link utilization).
     pub link_hops: u64,
@@ -297,5 +301,47 @@ mod tests {
         assert_eq!(latency_bucket(3), 2);
         assert_eq!(latency_bucket(4), 3);
         assert_eq!(latency_bucket(u64::MAX), LAT_BUCKETS - 1);
+    }
+
+    #[test]
+    fn extreme_latencies_clamp_into_the_top_bucket_without_panic() {
+        // Every power of two up to the limit, plus u64::MAX itself, must
+        // land in a valid bucket (the clamp, not the vector length, is
+        // what absorbs the tail).
+        let mut s = NetStats::default();
+        for shift in 0..64 {
+            s.record_delivery(1u64 << shift);
+        }
+        s.record_delivery(u64::MAX);
+        assert_eq!(s.delivered, 65);
+        assert_eq!(s.latency_hist.len(), LAT_BUCKETS);
+        assert_eq!(s.latency_hist.iter().sum::<u64>(), 65);
+        // Shifts 22..64 and u64::MAX all clamp into the top bucket.
+        assert_eq!(s.latency_hist[LAT_BUCKETS - 1], 64 - 22 + 1);
+        assert_eq!(s.max_latency, u64::MAX);
+        assert!(s.p99() <= s.max_latency);
+        assert!(s.latency_percentile(1.0) <= s.max_latency);
+    }
+
+    #[test]
+    fn percentiles_never_exceed_max_on_tail_heavy_distributions() {
+        // Heavy tails beyond the clamp boundary: the bucket upper edge
+        // (2^23 - 1) would overshoot wildly without the max clamp; with
+        // it, p99 <= max_latency holds for every mix.
+        for &(bulk, tail_lat) in
+            &[(1000u64, (1u64 << 22) + 5), (10, u64::MAX / 2), (3, u64::MAX)]
+        {
+            let mut s = NetStats::default();
+            for k in 0..bulk {
+                s.record_delivery(k % 7);
+            }
+            for _ in 0..bulk / 50 + 1 {
+                s.record_delivery(tail_lat);
+            }
+            assert_eq!(s.max_latency, tail_lat);
+            assert!(s.p50() <= s.max_latency);
+            assert!(s.p99() <= s.max_latency, "p99 {} > max {}", s.p99(), s.max_latency);
+            assert!(s.latency_percentile(1.0) <= s.max_latency);
+        }
     }
 }

@@ -1153,4 +1153,32 @@ mod tests {
         assert!(big.luts > small.luts);
         assert!(big.regs > small.regs);
     }
+
+    #[test]
+    fn hop_pack_unpack_is_the_identity_over_the_full_valid_range() {
+        // Property: pack ∘ unpack == id for every (port, vc) the 16-bit
+        // encoding can legally carry — port in 0..2^14, vc in 0..4. A
+        // silent truncation anywhere in the packing would alias two
+        // distinct hops and fail the round trip at the aliased pair.
+        for port in 0..(1usize << 14) {
+            for vc in 0..4u8 {
+                let h = Hop { port, vc };
+                let back = Hop::unpack(h.pack());
+                assert_eq!(back, h, "pack/unpack aliased port={port} vc={vc}");
+            }
+        }
+        // Distinctness is the dual property: the packed images of the
+        // corners never collide.
+        let corners = [
+            Hop { port: 0, vc: 0 },
+            Hop { port: 0, vc: 3 },
+            Hop { port: (1 << 14) - 1, vc: 0 },
+            Hop { port: (1 << 14) - 1, vc: 3 },
+        ];
+        for (i, a) in corners.iter().enumerate() {
+            for b in &corners[i + 1..] {
+                assert_ne!(a.pack(), b.pack(), "{a:?} vs {b:?}");
+            }
+        }
+    }
 }

@@ -1,0 +1,516 @@
+//! Opt-in flit event tracing with congestion attribution.
+//!
+//! A [`TraceBuffer`] is a fixed-capacity ring of [`FlitEvent`] records,
+//! preallocated at `enable_trace` time. When tracing is disabled (the
+//! default) the recorder does not exist at all — every hook in the
+//! simulator is an `if let Some(..)` over an absent option, so the
+//! untraced hot loop allocates nothing and produces bit-identical
+//! `NetStats` and eject order (enforced by `tests/trace_diff.rs` and
+//! the counting allocator in `tests/alloc_free.rs`).
+//!
+//! When the ring wraps, the oldest events are overwritten (and counted
+//! in [`TraceBuffer::dropped`]) — but the per-channel flit-hop
+//! accumulator behind [`TraceBuffer::channel_profile`] is updated on
+//! *every* `Hop` record, so the measured [`ChannelProfile`] stays exact
+//! no matter how small the ring is. That profile is what
+//! `FlowBuilder::profile_guided` feeds back into the bisection placer.
+//!
+//! Event kinds and what their fields mean:
+//!
+//! | kind     | `at`          | `port`            | recorded when                 |
+//! |----------|---------------|-------------------|-------------------------------|
+//! | `Inject` | src endpoint  | 0                 | flit enters its local NI      |
+//! | `Hop`    | router        | chosen output port| flit is buffered at a router  |
+//! | `WireTx` | router        | gateway port      | flit leaves a chip via serdes |
+//! | `WireRx` | router        | gateway port      | flit lands on the far chip    |
+//! | `Eject`  | dst endpoint  | 0                 | flit is delivered             |
+//!
+//! Latency attribution pairs these per flit (identity = src, dst,
+//! injection cycle): `total = eject − inject`, `wire = Σ (WireRx −
+//! WireTx)`, `hops =` number of `Hop` records (one cycle of forward
+//! progress each), and `queueing = total − wire − hops` (time spent
+//! waiting in VC buffers, allocation, and serdes TX buffers).
+
+use std::collections::BTreeMap;
+
+/// What happened to a flit at [`FlitEvent::cycle`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FlitEventKind {
+    /// Flit entered the network at its source endpoint's NI.
+    Inject,
+    /// Flit was buffered at a router input (one hop of forward progress).
+    Hop,
+    /// Flit was pulled off a gateway output latch onto an inter-FPGA wire.
+    WireTx,
+    /// Flit arrived from an inter-FPGA wire and re-entered a router.
+    WireRx,
+    /// Flit was delivered to its destination endpoint.
+    Eject,
+}
+
+/// One record in the trace ring. 40 bytes, `Copy`, no indirection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlitEvent {
+    /// Local simulation cycle of the recording chip.
+    pub cycle: u64,
+    /// Cycle the flit was injected (its latency epoch; part of identity).
+    pub injected_at: u64,
+    /// Source endpoint (global id).
+    pub src: u32,
+    /// Destination endpoint (global id).
+    pub dst: u32,
+    /// Router (for `Hop`/`WireTx`/`WireRx`) or endpoint (`Inject`/`Eject`).
+    pub at: u32,
+    /// Output port (`Hop`) or gateway port (`WireTx`/`WireRx`); 0 otherwise.
+    pub port: u16,
+    /// Chip that recorded the event (0 on a monolithic [`super::Network`]).
+    pub chip: u16,
+    /// Virtual channel the flit was buffered into (`Hop` only; 0 otherwise).
+    pub vc: u8,
+    /// Event kind (see table in the module doc).
+    pub kind: FlitEventKind,
+}
+
+/// Measured flit-hops per (src, dst) endpoint pair — the traffic each
+/// logical channel actually pushed through the fabric, as opposed to
+/// the static weights declared at `FlowBuilder::channel` time.
+///
+/// Exact even when the event ring wraps: it is accumulated on every
+/// `Hop` record, not reconstructed from surviving events.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChannelProfile {
+    hops: BTreeMap<(u32, u32), u64>,
+}
+
+impl ChannelProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` measured flit-hops to the `src → dst` channel.
+    pub fn add(&mut self, src: u32, dst: u32, n: u64) {
+        if n > 0 {
+            *self.hops.entry((src, dst)).or_insert(0) += n;
+        }
+    }
+
+    /// Measured flit-hops on `src → dst` (0 if never observed).
+    pub fn get(&self, src: u32, dst: u32) -> u64 {
+        self.hops.get(&(src, dst)).copied().unwrap_or(0)
+    }
+
+    /// Fold another profile (e.g. from a second chip or a second run) in.
+    pub fn merge(&mut self, other: &ChannelProfile) {
+        for (&(s, d), &n) in &other.hops {
+            self.add(s, d, n);
+        }
+    }
+
+    /// Deterministic (key-ordered) iteration over observed channels.
+    pub fn iter(&self) -> impl Iterator<Item = ((u32, u32), u64)> + '_ {
+        self.hops.iter().map(|(&k, &v)| (k, v))
+    }
+
+    /// Total measured flit-hops across all channels.
+    pub fn total(&self) -> u64 {
+        self.hops.values().sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.hops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hops.is_empty()
+    }
+}
+
+/// Fixed-capacity ring of [`FlitEvent`]s plus the exact channel-hop
+/// accumulator. Created only by `Network::enable_trace` — a `Network`
+/// without one records nothing and allocates nothing.
+#[derive(Clone, Debug)]
+pub struct TraceBuffer {
+    /// Ring storage; grows by push until `capacity`, then overwrites.
+    buf: Vec<FlitEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Total events ever recorded (including overwritten ones).
+    recorded: u64,
+    /// Chip stamp applied to every recorded event.
+    pub chip: u16,
+    /// Exact flit-hops per (src, dst), independent of ring capacity.
+    hops_by_pair: BTreeMap<(u32, u32), u64>,
+}
+
+impl TraceBuffer {
+    /// Preallocate a ring for `capacity` events (min 1).
+    pub fn new(capacity: usize) -> Self {
+        TraceBuffer {
+            buf: Vec::with_capacity(capacity.max(1)),
+            head: 0,
+            recorded: 0,
+            chip: 0,
+            hops_by_pair: BTreeMap::new(),
+        }
+    }
+
+    /// Record one event, overwriting the oldest if the ring is full.
+    pub fn record(&mut self, mut ev: FlitEvent) {
+        ev.chip = self.chip;
+        if ev.kind == FlitEventKind::Hop {
+            *self.hops_by_pair.entry((ev.src, ev.dst)).or_insert(0) += 1;
+        }
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.buf.len();
+        }
+        self.recorded += 1;
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Ring capacity fixed at construction.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.recorded - self.buf.len() as u64
+    }
+
+    /// Surviving events, oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &FlitEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Surviving events as an owned, oldest-first vec.
+    pub fn events(&self) -> Vec<FlitEvent> {
+        self.iter().copied().collect()
+    }
+
+    /// The exact measured traffic profile (survives ring wrap).
+    pub fn channel_profile(&self) -> ChannelProfile {
+        ChannelProfile { hops: self.hops_by_pair.clone() }
+    }
+
+    /// Drop all events and counters but keep the allocation and chip stamp.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.recorded = 0;
+        self.hops_by_pair.clear();
+    }
+}
+
+/// Per-flit latency breakdown reconstructed from a delivered flit's
+/// event chain (only flits whose `Eject` survived in the ring appear).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlitLatency {
+    pub src: u32,
+    pub dst: u32,
+    pub injected_at: u64,
+    pub ejected_at: u64,
+    /// `ejected_at − injected_at`.
+    pub total: u64,
+    /// Cycles spent on inter-FPGA wires (Σ paired `WireRx − WireTx`).
+    pub wire: u64,
+    /// Router hops observed (one cycle of forward progress each).
+    pub hops: u64,
+    /// `total − wire − hops`, clamped at 0: VC-buffer, allocation and
+    /// serdes TX-buffer wait.
+    pub queueing: u64,
+}
+
+/// Aggregate congestion attribution over a batch of events.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Attribution {
+    /// One entry per flit whose `Eject` event was observed.
+    pub flits: Vec<FlitLatency>,
+    pub total_latency: u64,
+    pub total_wire: u64,
+    pub total_hops: u64,
+    pub total_queueing: u64,
+}
+
+impl Attribution {
+    /// Mean end-to-end latency over attributed flits.
+    pub fn avg_latency(&self) -> f64 {
+        if self.flits.is_empty() {
+            0.0
+        } else {
+            self.total_latency as f64 / self.flits.len() as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct InFlight {
+    hops: u64,
+    wire: u64,
+    pending_tx: Option<u64>,
+}
+
+/// Reconstruct per-flit latency breakdowns from an event stream.
+///
+/// Events must be in per-chip recording order (any interleave across
+/// chips is fine — wire crossings are matched per flit). Flits whose
+/// `Eject` fell outside the surviving window are silently skipped, so
+/// a wrapped ring yields a *sample*, not the full population.
+pub fn attribute(events: &[FlitEvent]) -> Attribution {
+    // Identity (src, dst, injected_at) can collide when an endpoint
+    // bursts several same-destination flits in one cycle; a FIFO of
+    // in-flight states per key keeps the aggregate totals exact.
+    let mut inflight: BTreeMap<(u32, u32, u64), Vec<InFlight>> = BTreeMap::new();
+    let mut out = Attribution::default();
+    for ev in events {
+        let key = (ev.src, ev.dst, ev.injected_at);
+        match ev.kind {
+            FlitEventKind::Inject => {
+                inflight.entry(key).or_default().push(InFlight::default());
+            }
+            FlitEventKind::Hop => {
+                if let Some(states) = inflight.get_mut(&key) {
+                    if let Some(st) = states.first_mut() {
+                        st.hops += 1;
+                    }
+                }
+            }
+            FlitEventKind::WireTx => {
+                if let Some(states) = inflight.get_mut(&key) {
+                    if let Some(st) = states.first_mut() {
+                        st.pending_tx = Some(ev.cycle);
+                    }
+                }
+            }
+            FlitEventKind::WireRx => {
+                if let Some(states) = inflight.get_mut(&key) {
+                    if let Some(st) = states.first_mut() {
+                        if let Some(tx) = st.pending_tx.take() {
+                            st.wire += ev.cycle.saturating_sub(tx);
+                        }
+                    }
+                }
+            }
+            FlitEventKind::Eject => {
+                let st = match inflight.get_mut(&key) {
+                    Some(states) if !states.is_empty() => states.remove(0),
+                    // Inject event was overwritten by ring wrap: the
+                    // breakdown would be bogus, skip this flit.
+                    _ => continue,
+                };
+                let total = ev.cycle.saturating_sub(ev.injected_at);
+                let wire = st.wire.min(total);
+                let hops = st.hops.min(total - wire);
+                let fl = FlitLatency {
+                    src: ev.src,
+                    dst: ev.dst,
+                    injected_at: ev.injected_at,
+                    ejected_at: ev.cycle,
+                    total,
+                    wire,
+                    hops,
+                    queueing: total - wire - hops,
+                };
+                out.total_latency += fl.total;
+                out.total_wire += fl.wire;
+                out.total_hops += fl.hops;
+                out.total_queueing += fl.queueing;
+                out.flits.push(fl);
+            }
+        }
+    }
+    out
+}
+
+/// Flit-hops per physical link `(router, output port)`, reconstructed
+/// from the *surviving* `Hop`/`WireTx` events (a wrapped ring samples).
+pub fn link_loads(events: &[FlitEvent]) -> BTreeMap<(u16, u32, u16), u64> {
+    let mut loads = BTreeMap::new();
+    for ev in events {
+        if matches!(ev.kind, FlitEventKind::Hop | FlitEventKind::WireTx) {
+            *loads.entry((ev.chip, ev.at, ev.port)).or_insert(0) += 1;
+        }
+    }
+    loads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, kind: FlitEventKind) -> FlitEvent {
+        FlitEvent {
+            cycle,
+            injected_at: 0,
+            src: 1,
+            dst: 2,
+            at: 0,
+            port: 0,
+            chip: 0,
+            vc: 0,
+            kind,
+        }
+    }
+
+    #[test]
+    fn ring_holds_everything_below_capacity() {
+        let mut tb = TraceBuffer::new(8);
+        for c in 0..5 {
+            tb.record(ev(c, FlitEventKind::Hop));
+        }
+        assert_eq!(tb.len(), 5);
+        assert_eq!(tb.recorded(), 5);
+        assert_eq!(tb.dropped(), 0);
+        let cycles: Vec<u64> = tb.iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_wrap_keeps_newest_in_order() {
+        // Property over a grid of (capacity, pushes): len == min, the
+        // survivors are exactly the last `len` events, oldest first.
+        for cap in [1usize, 2, 3, 7, 8] {
+            for n in [0u64, 1, 2, 5, 8, 9, 20, 100] {
+                let mut tb = TraceBuffer::new(cap);
+                for c in 0..n {
+                    tb.record(ev(c, FlitEventKind::Inject));
+                }
+                let want_len = (n as usize).min(cap);
+                assert_eq!(tb.len(), want_len, "cap {cap} n {n}");
+                assert_eq!(tb.recorded(), n, "cap {cap} n {n}");
+                assert_eq!(tb.dropped(), n - want_len as u64, "cap {cap} n {n}");
+                let got: Vec<u64> = tb.iter().map(|e| e.cycle).collect();
+                let want: Vec<u64> = (n - want_len as u64..n).collect();
+                assert_eq!(got, want, "cap {cap} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn channel_profile_is_exact_despite_wrap() {
+        let mut tight = TraceBuffer::new(2);
+        let mut roomy = TraceBuffer::new(1 << 12);
+        for c in 0..500u64 {
+            let mut e = ev(c, FlitEventKind::Hop);
+            e.src = (c % 3) as u32;
+            e.dst = 10 + (c % 2) as u32;
+            tight.record(e);
+            roomy.record(e);
+        }
+        assert!(tight.dropped() > 0);
+        assert_eq!(roomy.dropped(), 0);
+        assert_eq!(tight.channel_profile(), roomy.channel_profile());
+        assert_eq!(tight.channel_profile().total(), 500);
+    }
+
+    #[test]
+    fn clear_resets_but_keeps_capacity_and_chip() {
+        let mut tb = TraceBuffer::new(4);
+        tb.chip = 3;
+        for c in 0..9 {
+            tb.record(ev(c, FlitEventKind::Hop));
+        }
+        tb.clear();
+        assert_eq!(tb.len(), 0);
+        assert_eq!(tb.recorded(), 0);
+        assert_eq!(tb.dropped(), 0);
+        assert_eq!(tb.capacity(), 4);
+        assert_eq!(tb.chip, 3);
+        assert!(tb.channel_profile().is_empty());
+        tb.record(ev(0, FlitEventKind::Hop));
+        assert_eq!(tb.events()[0].chip, 3);
+    }
+
+    #[test]
+    fn profile_merge_and_total() {
+        let mut a = ChannelProfile::new();
+        a.add(0, 1, 5);
+        a.add(2, 3, 1);
+        let mut b = ChannelProfile::new();
+        b.add(0, 1, 2);
+        b.add(4, 5, 7);
+        a.merge(&b);
+        assert_eq!(a.get(0, 1), 7);
+        assert_eq!(a.get(2, 3), 1);
+        assert_eq!(a.get(4, 5), 7);
+        assert_eq!(a.get(9, 9), 0);
+        assert_eq!(a.total(), 15);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn attribution_splits_queueing_wire_and_hops() {
+        let mk = |cycle, kind, injected_at| FlitEvent {
+            cycle,
+            injected_at,
+            src: 4,
+            dst: 9,
+            at: 0,
+            port: 0,
+            chip: 0,
+            vc: 0,
+            kind,
+        };
+        // inject@0, hop@1, hop@2, wire 3→7, hop@8, eject@10:
+        // total 10 = wire 4 + hops 3 + queueing 3.
+        let events = vec![
+            mk(0, FlitEventKind::Inject, 0),
+            mk(1, FlitEventKind::Hop, 0),
+            mk(2, FlitEventKind::Hop, 0),
+            mk(3, FlitEventKind::WireTx, 0),
+            mk(7, FlitEventKind::WireRx, 0),
+            mk(8, FlitEventKind::Hop, 0),
+            mk(10, FlitEventKind::Eject, 0),
+        ];
+        let attr = attribute(&events);
+        assert_eq!(attr.flits.len(), 1);
+        let fl = attr.flits[0];
+        assert_eq!(fl.total, 10);
+        assert_eq!(fl.wire, 4);
+        assert_eq!(fl.hops, 3);
+        assert_eq!(fl.queueing, 3);
+        assert_eq!(attr.total_latency, 10);
+        assert!((attr.avg_latency() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attribution_skips_flits_with_lost_inject() {
+        let mut e = ev(50, FlitEventKind::Eject);
+        e.injected_at = 40;
+        // No Inject record survived for this flit: skip, don't guess.
+        let attr = attribute(&[e]);
+        assert!(attr.flits.is_empty());
+        assert_eq!(attr.total_latency, 0);
+    }
+
+    #[test]
+    fn link_loads_count_hops_per_port() {
+        let mut a = ev(1, FlitEventKind::Hop);
+        a.at = 7;
+        a.port = 2;
+        let mut b = a;
+        b.cycle = 3;
+        let mut c = ev(4, FlitEventKind::WireTx);
+        c.at = 7;
+        c.port = 5;
+        let loads = link_loads(&[a, b, c, ev(9, FlitEventKind::Eject)]);
+        assert_eq!(loads.get(&(0, 7, 2)), Some(&2));
+        assert_eq!(loads.get(&(0, 7, 5)), Some(&1));
+        assert_eq!(loads.len(), 2);
+    }
+}

@@ -319,8 +319,41 @@ pub struct BitslicedBench {
     pub points: Vec<BitslicedPoint>,
 }
 
+/// The `"trace"` section of `BENCH_noc.json`: what the opt-in flit
+/// recorder costs, and what its measurements buy. Two halves, both
+/// correctness-asserted in the same run: the hotspot scenario replayed
+/// with the recorder off and on (run digests must be bit-identical —
+/// tracing observes, never steers; only wall clock moves), and the
+/// closed measure → re-place loop: a 2-chip flow whose declared channel
+/// weights hide a hotspot, re-placed from the traced
+/// [`crate::noc::ChannelProfile`] via `FlowBuilder::profile_guided`,
+/// which must strictly cut the
+/// completion cycles of the static placement.
+#[derive(Clone, Debug)]
+pub struct TraceBench {
+    /// Scenario of the overhead point.
+    pub scenario: &'static str,
+    /// Completion cycles of the overhead replay (identical traced and
+    /// untraced — asserted in the same run).
+    pub cycles: u64,
+    /// Events the traced replay recorded (ring wraps don't subtract:
+    /// this is the monotone recorder count, not the survivor count).
+    pub events: u64,
+    pub untraced_wall_ms: f64,
+    pub traced_wall_ms: f64,
+    /// `traced_wall_ms / untraced_wall_ms` — the wall-clock price of
+    /// the recorder for the same simulated work.
+    pub trace_overhead: f64,
+    /// Completion cycles of the statically placed hotspot flow.
+    pub static_cycles: u64,
+    /// Completion cycles after one `profile_guided` re-placement.
+    pub guided_cycles: u64,
+    /// `static_cycles / guided_cycles` (> 1: the measured loads won).
+    pub guided_speedup: f64,
+}
+
 /// Which `BENCH_noc.json` sections a bench invocation regenerates
-/// (`fabricflow bench --only points|multichip|sweep|serve|faults|bitsliced`);
+/// (`fabricflow bench --only points|multichip|sweep|serve|faults|bitsliced|trace`);
 /// unselected sections are preserved from the existing file by
 /// [`merge_sections`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -331,6 +364,7 @@ pub struct BenchSelect {
     pub serve: bool,
     pub faults: bool,
     pub bitsliced: bool,
+    pub trace: bool,
 }
 
 impl BenchSelect {
@@ -342,6 +376,7 @@ impl BenchSelect {
         serve: true,
         faults: true,
         bitsliced: true,
+        trace: true,
     };
 
     /// Parse a comma-separated `--only` value.
@@ -353,6 +388,7 @@ impl BenchSelect {
             serve: false,
             faults: false,
             bitsliced: false,
+            trace: false,
         };
         for part in s.split(',') {
             match part.trim() {
@@ -362,6 +398,7 @@ impl BenchSelect {
                 "serve" => sel.serve = true,
                 "faults" => sel.faults = true,
                 "bitsliced" => sel.bitsliced = true,
+                "trace" => sel.trace = true,
                 _ => return None,
             }
         }
@@ -392,6 +429,9 @@ pub struct BenchReport {
     /// Scalar-vs-bitsliced Monte-Carlo throughput (None when the section
     /// was not run).
     pub bitsliced: Option<BitslicedBench>,
+    /// Trace-recorder overhead and the profile-guided placement win
+    /// (None when the section was not run).
+    pub trace: Option<TraceBench>,
 }
 
 /// One replay; the timer starts AFTER `Network::new` so construction
@@ -746,6 +786,139 @@ pub fn run_bitsliced_bench(quick: bool) -> BitslicedBench {
     BitslicedBench { code: "pg(2,4)", variant: "sign-magnitude", frames, niter, points }
 }
 
+/// Run the tracing benchmark (the `"trace"` section). Overhead half:
+/// the hotspot scenario replayed with the recorder off and on — the run
+/// digests must be bit-identical (tracing observes, never steers), so
+/// the only difference the section reports is wall clock. Placement
+/// half: the measure → re-place loop on a 2-chip flow whose declared
+/// channel weights hide a hotspot — the static placer's deterministic
+/// tie-break exiles the hot stream across the serializing wire, a traced
+/// run measures the real loads, and `profile_guided` must strictly cut
+/// completion cycles. Both assertions run here, in the same process that
+/// produces the numbers.
+pub fn run_trace_bench(quick: bool) -> TraceBench {
+    use crate::flow::{FlowBuilder, MappedFlow};
+    use crate::noc::ChannelProfile;
+    use crate::pe::collector::ArgMessage;
+    use crate::pe::{MsgSink, OutMessage, Processor, WrapperSpec};
+
+    // --- recorder overhead: hotspot replay, recorder off vs on -------
+    let topo = Topology::Mesh { w: 8, h: 8 };
+    let scn = scenario::find("hotspot").expect("scenario registered");
+    let n = topo.build().n_endpoints;
+    let window = if quick { 1_000 } else { 5_000 };
+    let trace = scn.trace(n, 0.1, window, 1);
+    let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+    let reps = if quick { 1 } else { 3 };
+
+    let mut untraced_best = f64::INFINITY;
+    let mut untraced_digest = (0u64, NetStats::default());
+    for _ in 0..reps {
+        let mut net = Network::new(&topo, cfg);
+        let t = Instant::now();
+        let cycles = scenario::replay(&mut net, &trace, 100_000_000)
+            .expect("trace bench (untraced) stalled");
+        untraced_best = untraced_best.min(t.elapsed().as_secs_f64());
+        untraced_digest = (cycles, net.stats().clone());
+    }
+    let mut traced_best = f64::INFINITY;
+    let mut traced_digest = (0u64, NetStats::default());
+    let mut events = 0u64;
+    for _ in 0..reps {
+        let mut net = Network::new(&topo, cfg);
+        net.enable_trace(1 << 15);
+        let t = Instant::now();
+        let cycles = scenario::replay(&mut net, &trace, 100_000_000)
+            .expect("trace bench (traced) stalled");
+        traced_best = traced_best.min(t.elapsed().as_secs_f64());
+        traced_digest = (cycles, net.stats().clone());
+        events = net.trace().expect("recorder enabled").recorded();
+    }
+    assert_eq!(
+        untraced_digest, traced_digest,
+        "tracing changed the simulation — it must observe, never steer"
+    );
+    assert!(events > 0, "traced hotspot replay recorded nothing");
+
+    // --- profile-guided placement win on a 2-chip hotspot flow -------
+    /// Boot-time source sending fixed messages, then idle.
+    struct BootSource {
+        msgs: Vec<OutMessage>,
+    }
+    impl Processor for BootSource {
+        fn spec(&self) -> WrapperSpec {
+            WrapperSpec::new(vec![8], vec![16])
+        }
+        fn boot(&mut self, out: &mut MsgSink) {
+            for m in std::mem::take(&mut self.msgs) {
+                out.push(m);
+            }
+        }
+        fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
+    }
+    let hot_msgs: u32 = if quick { 24 } else { 64 };
+    let build = |measured: Option<ChannelProfile>,
+                 targets: Option<(usize, usize)>|
+     -> MappedFlow {
+        let msgs = match targets {
+            None => Vec::new(),
+            Some((hot_ep, cold_ep)) => {
+                let mut m = vec![OutMessage::word(cold_ep, 0, 0, 7, 16)];
+                m.extend(
+                    (0..hot_msgs).map(|e| OutMessage::word(hot_ep, 0, e, e as u64, 16)),
+                );
+                m
+            }
+        };
+        let mut fb = FlowBuilder::new("trace-bench");
+        fb.topology(Topology::Mesh { w: 2, h: 2 })
+            .pe_at("src", 0, Box::new(BootSource { msgs }))
+            .tap("cold")
+            .tap("hot")
+            .channel("src", "cold")
+            .channel("src", "hot")
+            .partition(Partition::new(2, vec![0, 0, 1, 1]))
+            .multichip(SerdesConfig::default());
+        if let Some(p) = measured {
+            fb.profile_guided(p);
+        }
+        fb.build().expect("trace bench flow build")
+    };
+    // Placement is independent of the boot messages: probe builds reveal
+    // where the taps land before wiring the sources at those endpoints.
+    let probe = build(None, None);
+    let static_eps = (probe.node_of("hot").unwrap(), probe.node_of("cold").unwrap());
+    let mut static_flow = build(None, Some(static_eps));
+    static_flow.enable_trace(1 << 12);
+    let static_report = static_flow.run().expect("trace bench static flow");
+    let profile = static_flow.unit_channel_profile();
+    let guided_probe = build(Some(profile.clone()), None);
+    let guided_eps = (
+        guided_probe.node_of("hot").unwrap(),
+        guided_probe.node_of("cold").unwrap(),
+    );
+    let mut guided_flow = build(Some(profile), Some(guided_eps));
+    let guided_report = guided_flow.run().expect("trace bench guided flow");
+    assert!(
+        guided_report.cycles < static_report.cycles,
+        "profile-guided placement must strictly beat static: {} !< {}",
+        guided_report.cycles,
+        static_report.cycles
+    );
+
+    TraceBench {
+        scenario: "hotspot",
+        cycles: untraced_digest.0,
+        events,
+        untraced_wall_ms: untraced_best * 1e3,
+        traced_wall_ms: traced_best * 1e3,
+        trace_overhead: traced_best / untraced_best,
+        static_cycles: static_report.cycles,
+        guided_cycles: guided_report.cycles,
+        guided_speedup: static_report.cycles as f64 / guided_report.cycles as f64,
+    }
+}
+
 /// Run the whole tracked matrix. `quick` shrinks windows 4x and uses one
 /// rep — the CI perf-smoke profile.
 pub fn run(quick: bool) -> BenchReport {
@@ -775,7 +948,8 @@ pub fn run_selected(quick: bool, sel: BenchSelect) -> BenchReport {
     let serve = sel.serve.then(|| run_serve_bench(quick));
     let faults = sel.faults.then(|| run_faults_bench(quick));
     let bitsliced = sel.bitsliced.then(|| run_bitsliced_bench(quick));
-    BenchReport { quick, points, multichip, sweep, serve, faults, bitsliced }
+    let trace = sel.trace.then(|| run_trace_bench(quick));
+    BenchReport { quick, points, multichip, sweep, serve, faults, bitsliced, trace }
 }
 
 impl BenchReport {
@@ -935,10 +1109,28 @@ impl BenchReport {
                     let _ = writeln!(j, "      }}{comma}");
                 }
                 let _ = writeln!(j, "    ]");
+                let _ = writeln!(j, "  }},");
+            }
+            None => {
+                let _ = writeln!(j, "  \"bitsliced\": null,");
+            }
+        }
+        match &self.trace {
+            Some(tr) => {
+                let _ = writeln!(j, "  \"trace\": {{");
+                let _ = writeln!(j, "    \"scenario\": \"{}\",", tr.scenario);
+                let _ = writeln!(j, "    \"cycles\": {},", tr.cycles);
+                let _ = writeln!(j, "    \"events\": {},", tr.events);
+                let _ = writeln!(j, "    \"untraced_wall_ms\": {:.3},", tr.untraced_wall_ms);
+                let _ = writeln!(j, "    \"traced_wall_ms\": {:.3},", tr.traced_wall_ms);
+                let _ = writeln!(j, "    \"trace_overhead\": {:.2},", tr.trace_overhead);
+                let _ = writeln!(j, "    \"static_cycles\": {},", tr.static_cycles);
+                let _ = writeln!(j, "    \"guided_cycles\": {},", tr.guided_cycles);
+                let _ = writeln!(j, "    \"guided_speedup\": {:.2}", tr.guided_speedup);
                 let _ = writeln!(j, "  }}");
             }
             None => {
-                let _ = writeln!(j, "  \"bitsliced\": null");
+                let _ = writeln!(j, "  \"trace\": null");
             }
         }
         let _ = writeln!(j, "}}");
@@ -1047,6 +1239,23 @@ impl BenchReport {
                 );
             }
         }
+        if let Some(tr) = &self.trace {
+            let _ = writeln!(
+                s,
+                "Trace recorder ({}; run digest asserted identical traced and untraced)",
+                tr.scenario
+            );
+            let _ = writeln!(
+                s,
+                "  overhead  {:>9.1} ms untraced {:>9.1} ms traced  => {:.2}x ({} events)",
+                tr.untraced_wall_ms, tr.traced_wall_ms, tr.trace_overhead, tr.events
+            );
+            let _ = writeln!(
+                s,
+                "  profile-guided placement  {:>9} cyc static {:>9} cyc guided  => {:.2}x",
+                tr.static_cycles, tr.guided_cycles, tr.guided_speedup
+            );
+        }
         s
     }
 }
@@ -1119,6 +1328,7 @@ pub fn merge_sections(old_json: &str, fresh: &BenchReport, sel: BenchSelect) -> 
         ("serve", sel.serve),
         ("faults", sel.faults),
         ("bitsliced", sel.bitsliced),
+        ("trace", sel.trace),
     ] {
         if selected {
             continue;
@@ -1173,6 +1383,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: None,
+            trace: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
@@ -1182,7 +1393,8 @@ mod tests {
         assert!(json.contains("\"sweep\": null,"));
         assert!(json.contains("\"serve\": null,"));
         assert!(json.contains("\"faults\": null,"));
-        assert!(json.contains("\"bitsliced\": null"));
+        assert!(json.contains("\"bitsliced\": null,"));
+        assert!(json.contains("\"trace\": null"));
         assert!(report.render_table().contains("saturated-mesh8x8"));
     }
 
@@ -1225,6 +1437,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: None,
+            trace: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"bmvm-ring8/2fpga-8pin\""));
@@ -1319,6 +1532,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: None,
+            trace: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"sweep\": {"));
@@ -1337,6 +1551,7 @@ mod tests {
             serve: Some(serve_stub()),
             faults: None,
             bitsliced: None,
+            trace: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"serve\": {"));
@@ -1358,6 +1573,7 @@ mod tests {
             serve: None,
             faults: Some(faults_stub()),
             bitsliced: None,
+            trace: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"faults\": {"));
@@ -1380,6 +1596,7 @@ mod tests {
             serve: false,
             faults: false,
             bitsliced: false,
+            trace: false,
         };
         assert_eq!(BenchSelect::parse("sweep"), Some(BenchSelect { sweep: true, ..none }));
         assert_eq!(BenchSelect::parse("serve"), Some(BenchSelect { serve: true, ..none }));
@@ -1388,16 +1605,17 @@ mod tests {
             BenchSelect::parse("bitsliced"),
             Some(BenchSelect { bitsliced: true, ..none })
         );
+        assert_eq!(BenchSelect::parse("trace"), Some(BenchSelect { trace: true, ..none }));
         assert_eq!(
             BenchSelect::parse("points,multichip"),
             Some(BenchSelect { points: true, multichip: true, ..none })
         );
         assert_eq!(
-            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced"),
+            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced,trace"),
             Some(BenchSelect::ALL)
         );
         assert_ne!(
-            BenchSelect::parse("points,multichip,sweep,serve,faults"),
+            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced"),
             Some(BenchSelect::ALL)
         );
         assert!(BenchSelect::ALL.is_all());
@@ -1429,6 +1647,7 @@ mod tests {
             serve: Some(serve_stub()),
             faults: Some(faults_stub()),
             bitsliced: None,
+            trace: None,
         }
         .to_json();
         // A fresh sweep-only run: points/multichip empty, new sweep.
@@ -1442,6 +1661,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: None,
+            trace: None,
         };
         let sel = BenchSelect {
             points: false,
@@ -1450,6 +1670,7 @@ mod tests {
             serve: false,
             faults: false,
             bitsliced: false,
+            trace: false,
         };
         let merged = merge_sections(&old, &fresh, sel);
         // Old points preserved verbatim, new sweep spliced in.
@@ -1472,6 +1693,7 @@ mod tests {
             serve: false,
             faults: false,
             bitsliced: false,
+            trace: false,
         };
         let fresh_points = BenchReport {
             quick: true,
@@ -1481,6 +1703,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: None,
+            trace: None,
         };
         let merged = merge_sections(&old, &fresh_points, sel);
         assert!(merged.contains("\"parallel_speedup\": 3.10"));
@@ -1580,6 +1803,7 @@ mod tests {
             serve: None,
             faults: Some(faults_stub()),
             bitsliced: Some(bitsliced_stub()),
+            trace: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"bitsliced\": {"));
@@ -1625,6 +1849,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: Some(bitsliced_stub()),
+            trace: None,
         }
         .to_json();
         let mut newer = bitsliced_stub();
@@ -1637,6 +1862,7 @@ mod tests {
             serve: None,
             faults: None,
             bitsliced: Some(newer),
+            trace: None,
         };
         // bitsliced selected: the fresh section wins.
         let sel = BenchSelect::parse("bitsliced").unwrap();
@@ -1647,6 +1873,92 @@ mod tests {
         let merged = merge_sections(&old, &fresh, sel);
         assert!(merged.contains("\"speedup\": 4.00"));
         assert!(!merged.contains("\"speedup\": 7.77"));
+    }
+
+    fn trace_stub() -> TraceBench {
+        TraceBench {
+            scenario: "hotspot",
+            cycles: 5000,
+            events: 120_000,
+            untraced_wall_ms: 10.0,
+            traced_wall_ms: 12.0,
+            trace_overhead: 1.2,
+            static_cycles: 400,
+            guided_cycles: 250,
+            guided_speedup: 1.6,
+        }
+    }
+
+    #[test]
+    fn trace_section_serializes_and_renders() {
+        let report = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: None,
+            bitsliced: Some(bitsliced_stub()),
+            trace: Some(trace_stub()),
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"trace\": {"));
+        assert!(json.contains("\"trace_overhead\": 1.20"));
+        assert!(json.contains("\"guided_speedup\": 1.60"));
+        // The bitsliced section before it must now carry a trailing
+        // comma.
+        assert!(json.contains("  },\n  \"trace\""));
+        let table = report.render_table();
+        assert!(table.contains("Trace recorder"));
+        assert!(table.contains("profile-guided placement"));
+    }
+
+    #[test]
+    fn trace_bench_runs_tiny() {
+        // A real quick trace bench: the digest bit-identity and the
+        // guided < static contract are asserted inside the run; here we
+        // check the section's numbers reconcile.
+        let tr = run_trace_bench(true);
+        assert_eq!(tr.scenario, "hotspot");
+        assert!(tr.cycles > 0);
+        assert!(tr.events > 0, "traced replay must record events");
+        assert!(tr.untraced_wall_ms > 0.0 && tr.traced_wall_ms > 0.0);
+        assert!(
+            (tr.trace_overhead - tr.traced_wall_ms / tr.untraced_wall_ms).abs() < 1e-9
+        );
+        assert!(tr.guided_cycles < tr.static_cycles);
+        assert!(tr.guided_speedup > 1.0);
+    }
+
+    #[test]
+    fn merge_preserves_an_unselected_trace_section() {
+        let old = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: None,
+            bitsliced: None,
+            trace: Some(trace_stub()),
+        }
+        .to_json();
+        let fresh = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: None,
+            bitsliced: None,
+            trace: None,
+        };
+        let sel = BenchSelect::parse("points").unwrap();
+        let merged = merge_sections(&old, &fresh, sel);
+        let (os, oe) = section_span(&old, "trace").unwrap();
+        let (ms, me) = section_span(&merged, "trace").unwrap();
+        assert_eq!(&old[os..oe], &merged[ms..me], "trace section changed");
+        assert!(merged.contains("\"guided_speedup\": 1.60"));
     }
 
     #[test]

@@ -681,7 +681,9 @@ impl WireForm for BmvmResponse {
 /// serves with zero steady-state allocations.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ScenarioRequest {
-    /// Index into [`crate::noc::scenario::registry`].
+    /// Stable scenario wire id, resolved with
+    /// [`crate::noc::scenario::by_id`]. Ids are frozen — never a
+    /// position in the registry, which may be reordered freely.
     pub scenario: u8,
     pub load: f64,
     /// Injection-window length in cycles.
@@ -758,7 +760,7 @@ impl WireForm for ScenarioResponse {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum ServeErrorCode {
-    /// Scenario index outside the registry.
+    /// Scenario wire id with no registered scenario.
     UnknownScenario = 1,
     /// LDPC request with an LLR length the resident decoder cannot take.
     BadLlrLength = 2,

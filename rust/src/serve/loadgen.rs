@@ -26,6 +26,7 @@ use std::io::{self, Read, Write};
 use std::time::{Duration, Instant};
 
 use crate::apps::ldpc::MinsumVariant;
+use crate::noc::scenario;
 use crate::util::bits::BitVec;
 use crate::util::Rng;
 
@@ -100,7 +101,7 @@ pub fn gen_request(cfg: &LoadgenConfig, i: u64) -> Request {
     let mut rng = Rng::new(cfg.seed ^ 0x10AD_0000).fork(i);
     match kind {
         ReqKind::Scenario => Request::Scenario(ScenarioRequest {
-            scenario: 0, // uniform
+            scenario: scenario::by_name("uniform").expect("uniform is registered").id,
             load: 0.05,
             cycles: 200,
             seed: rng.next_u64(),

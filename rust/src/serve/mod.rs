@@ -52,7 +52,7 @@ use crate::apps::bmvm::{BmvmSystem, WilliamsLuts};
 use crate::apps::ldpc::LdpcNocDecoder;
 use crate::apps::pfilter::{synthetic_video, PfilterNocTracker, TrackerParams};
 use crate::gf2::Gf2Matrix;
-use crate::noc::scenario::{self, EjectRecord, Scenario, Trace};
+use crate::noc::scenario::{self, EjectRecord, Trace};
 use crate::noc::{NetStats, Network, NocConfig, SharedFabric, SimEngine, Topology};
 use crate::util::Rng;
 
@@ -171,7 +171,6 @@ impl Default for ServeConfig {
 /// flow-builder paths, which allocate exactly as batch does.
 pub struct Worker {
     net: Network,
-    registry: Vec<Scenario>,
     trace: Trace,
     ejects: Vec<EjectRecord>,
     bmvm: BmvmSystem,
@@ -181,7 +180,6 @@ impl Worker {
     pub fn new(cfg: &ServeConfig, fabric: &SharedFabric) -> Worker {
         Worker {
             net: fabric.network(cfg.noc),
-            registry: scenario::registry(),
             trace: Trace::default(),
             ejects: Vec::new(),
             bmvm: cfg.bmvm.build(),
@@ -212,7 +210,10 @@ pub fn serve_request(w: &mut Worker, req: &Request) -> Response {
 }
 
 fn serve_scenario(w: &mut Worker, q: &ScenarioRequest) -> Response {
-    let Some(&scn) = w.registry.get(q.scenario as usize) else {
+    // Keyed on the frozen wire id, never on registry position: clients
+    // bake `ScenarioRequest.scenario` into scripts, so a presentation
+    // reorder of the registry must not change what they get back.
+    let Some(scn) = scenario::by_id(q.scenario) else {
         return err(ServeErrorCode::UnknownScenario);
     };
     if !(q.load.is_finite() && q.load >= 0.0) || q.cycles == 0 || q.cycles > 10_000_000 {
@@ -726,9 +727,9 @@ mod tests {
         // Twice on the same worker: reset-reuse must not leak state.
         for _ in 0..2 {
             let resp = serve_request(&mut w, &Request::Scenario(q));
-            let scn = scenario::registry()[0];
+            let scn = scenario::by_name("uniform").expect("uniform is registered");
             let out =
-                scenario::run_scenario(&scn, &cfg.topo, cfg.noc, 0.1, 300, 42).unwrap();
+                scenario::run_scenario(scn, &cfg.topo, cfg.noc, 0.1, 300, 42).unwrap();
             match resp {
                 Response::Scenario(r) => {
                     assert_eq!(r.cycles, out.report.cycles);
@@ -740,6 +741,33 @@ mod tests {
                     assert_eq!(r.eject_digest, scenario::eject_digest(&out.ejects));
                 }
                 other => panic!("expected scenario response, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_requests_resolve_by_stable_id_not_registry_position() {
+        let cfg = ServeConfig::default();
+        let mut w = Worker::standalone(&cfg);
+        // Walk a *reversed* copy of the registry and match entries by
+        // their `id` field: the serve answer for wire id X must equal
+        // the batch run of whichever entry carries id X, wherever that
+        // entry sits. A presentation reorder of the registry therefore
+        // cannot change what serve answers.
+        let mut reg = scenario::registry();
+        reg.reverse();
+        for want_id in [0u8, 2, 5] {
+            let scn = reg.iter().find(|s| s.id == want_id).expect("id registered");
+            assert_eq!(scenario::by_id(want_id).map(|s| s.name), Some(scn.name));
+            let q = ScenarioRequest { scenario: want_id, load: 0.08, cycles: 200, seed: 11 };
+            let out = scenario::run_scenario(scn, &cfg.topo, cfg.noc, 0.08, 200, 11).unwrap();
+            match serve_request(&mut w, &Request::Scenario(q)) {
+                Response::Scenario(r) => {
+                    assert_eq!(r.cycles, out.report.cycles, "id {want_id} ({})", scn.name);
+                    assert_eq!(r.delivered, out.report.net.delivered);
+                    assert_eq!(r.eject_digest, scenario::eject_digest(&out.ejects));
+                }
+                other => panic!("id {want_id}: expected scenario response, got {other:?}"),
             }
         }
     }

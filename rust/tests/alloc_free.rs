@@ -235,6 +235,63 @@ fn multichip_steady_state_is_alloc_free(engine: SimEngine) {
     assert_eq!(stats.delivered, stats.injected);
 }
 
+/// The flit recorder must not change the heap story of the simulator:
+/// with tracing never enabled the hooks are `if let Some(..)` over an
+/// absent option (covered by `network_steady_state_is_alloc_free`);
+/// with tracing *enabled*, the ring is preallocated at `enable_trace`
+/// time and the per-channel accumulator reuses its nodes, so the traced
+/// steady state is 0-alloc too; and after `disable_trace` the network
+/// is back to the untraced steady state with no residue.
+fn trace_steady_state_is_alloc_free(engine: SimEngine) {
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let mut net = Network::new(&Topology::Mesh { w: 4, h: 4 }, cfg);
+
+    // Untraced warm-up to peak queue/histogram capacity.
+    for _ in 0..2 {
+        inject_uniform_wave(&mut net);
+        net.run_until_idle(10_000_000).expect("untraced warm-up stalled");
+        drain_all(&mut net);
+    }
+
+    // Enable the recorder (ring preallocation happens HERE, outside any
+    // measured region) and warm the traced path: the same wave twice
+    // fills the ring past wrap and seeds every (src, dst) pair the
+    // accumulator will ever see in this workload.
+    net.enable_trace(256);
+    for _ in 0..2 {
+        inject_uniform_wave(&mut net);
+        net.run_until_idle(10_000_000).expect("traced warm-up stalled");
+        drain_all(&mut net);
+    }
+    assert!(net.trace().unwrap().dropped() > 0, "ring must have wrapped in warm-up");
+
+    // Traced steady state: recording into the full ring overwrites in
+    // place and the channel accumulator only bumps existing entries.
+    let delta = count(|| {
+        inject_uniform_wave(&mut net);
+        net.run_until_idle(10_000_000).expect("traced measured drain stalled")
+    });
+    assert_eq!(
+        delta, 0,
+        "{engine:?}: traced steady state allocated {delta} times after warm-up"
+    );
+    drain_all(&mut net);
+
+    // Disable: the hooks are no-ops over None again, with no residue
+    // from the tracing episode.
+    net.disable_trace();
+    let delta = count(|| {
+        inject_uniform_wave(&mut net);
+        net.run_until_idle(10_000_000).expect("post-disable drain stalled")
+    });
+    assert_eq!(
+        delta, 0,
+        "{engine:?}: untraced steady state allocated {delta} times after a tracing episode"
+    );
+    assert_eq!(net.stats().delivered, net.stats().injected);
+    drain_all(&mut net);
+}
+
 fn check_node_process_is_alloc_free() {
     let mut pe = CheckNodePe::new(
         MinsumVariant::SignMagnitude,
@@ -491,6 +548,8 @@ fn steady_state_simulation_does_not_allocate() {
     network_steady_state_is_alloc_free(SimEngine::EventDriven);
     multichip_steady_state_is_alloc_free(SimEngine::Reference);
     multichip_steady_state_is_alloc_free(SimEngine::EventDriven);
+    trace_steady_state_is_alloc_free(SimEngine::Reference);
+    trace_steady_state_is_alloc_free(SimEngine::EventDriven);
     check_node_process_is_alloc_free();
     bit_node_process_is_alloc_free();
     bitsliced_decode_loop_is_alloc_free();

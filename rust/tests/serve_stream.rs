@@ -299,8 +299,8 @@ fn served_scenario_matches_run_scenario_through_the_full_stream() {
     Request::Scenario(q).encode(77, &mut input);
     let (out, _) = serve_bytes(&cfg, &input).unwrap();
     let resps = parse_responses(&out).unwrap();
-    let scn = scenario::registry()[2];
-    let batch = scenario::run_scenario(&scn, &cfg.topo, cfg.noc, q.load, q.cycles, q.seed)
+    let scn = scenario::by_id(q.scenario).expect("wire id 2 (tornado) is frozen");
+    let batch = scenario::run_scenario(scn, &cfg.topo, cfg.noc, q.load, q.cycles, q.seed)
         .expect("batch scenario");
     match &resps[0] {
         (77, Response::Scenario(r)) => {

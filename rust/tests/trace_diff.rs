@@ -1,0 +1,163 @@
+//! Differential conformance for the opt-in flit recorder: tracing is
+//! purely observational. A run with the recorder enabled — at ANY ring
+//! capacity, including rings far too small for the event volume, where
+//! the oldest records are overwritten every cycle — must be
+//! **bit-identical** to the untraced run on the same engine: same
+//! elapsed cycles, same final cycle, same `NetStats` (latency histogram
+//! included), same eject order. Checked on both monolithic engines and
+//! on the sharded [`MultiChipSim`].
+//!
+//! The default jobs run a thinned matrix; the full matrix is
+//! `#[ignore]`d and executed under `--release` by the CI conformance
+//! job:
+//!
+//! ```text
+//! cargo test --release --test trace_diff -- --include-ignored
+//! ```
+
+use fabricflow::noc::multichip::MultiChipSim;
+use fabricflow::noc::scenario::{self, EjectRecord, MatrixPoint};
+use fabricflow::noc::{NetStats, Network, NocConfig, SimEngine, Topology};
+use fabricflow::partition::Partition;
+use fabricflow::serdes::SerdesConfig;
+
+/// (elapsed cycles, absolute final cycle, stats, eject order).
+type RunDigest = (u64, u64, NetStats, Vec<EjectRecord>);
+
+/// Capacities the traced side is exercised at: an ample ring that never
+/// wraps, and one so small it wraps constantly.
+const CAPACITIES: [usize; 2] = [1 << 16, 16];
+
+fn run_mono(pt: &MatrixPoint, engine: SimEngine, capacity: Option<usize>) -> RunDigest {
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let mut net = Network::new(&pt.topo, cfg);
+    if let Some(cap) = capacity {
+        net.enable_trace(cap);
+    }
+    let trace = pt.scenario.trace(net.n_endpoints(), pt.load, pt.cycles, pt.seed);
+    let elapsed = scenario::replay(&mut net, &trace, 10_000_000)
+        .unwrap_or_else(|e| panic!("{} on {:?} ({engine:?}): {e}", pt.scenario.name, pt.topo));
+    if let Some(tb) = net.trace() {
+        assert!(
+            tb.recorded() > 0,
+            "traced run recorded nothing: {} on {:?}",
+            pt.scenario.name,
+            pt.topo
+        );
+    }
+    let ejects = scenario::drain_all(&mut net);
+    (elapsed, net.cycle(), net.stats().clone(), ejects)
+}
+
+fn assert_trace_invisible(pt: &MatrixPoint) {
+    let ctx = |engine: SimEngine, cap: usize| {
+        format!(
+            "{} on {:?} load={} seed={} ({engine:?}, capacity {cap})",
+            pt.scenario.name, pt.topo, pt.load, pt.seed
+        )
+    };
+    for engine in [SimEngine::Reference, SimEngine::EventDriven] {
+        let off = run_mono(pt, engine, None);
+        assert!(off.2.injected > 0, "empty scenario: {}", pt.scenario.name);
+        for cap in CAPACITIES {
+            let on = run_mono(pt, engine, Some(cap));
+            assert_eq!(off, on, "recorder perturbed the run: {}", ctx(engine, cap));
+        }
+    }
+}
+
+#[test]
+fn tracing_is_invisible_on_a_thinned_matrix() {
+    // Every 5th point of the default matrix keeps topology/scenario
+    // diversity while staying debug-profile fast; the full sweep is the
+    // #[ignore]d job below.
+    let pts: Vec<MatrixPoint> = scenario::default_matrix().into_iter().step_by(5).collect();
+    assert!(pts.len() >= 6, "thinned matrix suspiciously small: {}", pts.len());
+    for pt in &pts {
+        assert_trace_invisible(pt);
+    }
+}
+
+#[test]
+#[ignore = "full matrix: run with --release in the CI conformance job"]
+fn tracing_is_invisible_on_the_full_matrix() {
+    for pt in &scenario::default_matrix() {
+        assert_trace_invisible(pt);
+    }
+    for pt in &scenario::full_matrix() {
+        assert_trace_invisible(pt);
+    }
+}
+
+/// (completion cycle, stats, eject order) of a 2-chip sharded run.
+fn run_sharded(
+    scn_name: &str,
+    engine: SimEngine,
+    capacity: Option<usize>,
+) -> (u64, NetStats, Vec<EjectRecord>) {
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let graph = topo.build();
+    let partition = Partition::balanced(&graph, 2, 1);
+    let serdes = SerdesConfig { pins: 8, clock_div: 1, tx_buffer: 8 };
+    let cfg = NocConfig { engine, ..NocConfig::paper() };
+    let scn = scenario::find(scn_name).unwrap();
+    let trace = scn.trace(graph.n_endpoints, 0.08, 300, 5);
+    let mut sim = MultiChipSim::from_graph(graph, cfg, &partition, serdes);
+    if let Some(cap) = capacity {
+        sim.enable_trace(cap);
+    }
+    let cycles = scenario::replay_multichip(&mut sim, &trace, 1_000_000_000)
+        .unwrap_or_else(|e| panic!("{scn_name} sharded ({engine:?}): {e}"));
+    if capacity.is_some() {
+        let (recorded, _) = sim.trace_counts();
+        assert!(recorded > 0, "{scn_name}: sharded traced run recorded nothing");
+    }
+    let ejects = scenario::drain_all_multichip(&mut sim);
+    (cycles, sim.stats(), ejects)
+}
+
+#[test]
+fn tracing_is_invisible_to_the_sharded_fabric() {
+    for engine in [SimEngine::Reference, SimEngine::EventDriven] {
+        for scn_name in ["uniform", "hotspot", "bmvm-trace"] {
+            let off = run_sharded(scn_name, engine, None);
+            for cap in CAPACITIES {
+                let on = run_sharded(scn_name, engine, Some(cap));
+                assert_eq!(
+                    off, on,
+                    "recorder perturbed the sharded run: {scn_name} ({engine:?}, capacity {cap})"
+                );
+            }
+        }
+    }
+}
+
+/// The ring may wrap, but the per-channel flit-hop accumulator behind
+/// `channel_profile` is fed on every record — so the measured profile
+/// (what `profile_guided` re-placement consumes) must be identical no
+/// matter how small the ring was.
+#[test]
+fn a_wrapping_ring_still_yields_the_exact_channel_profile() {
+    let run = |cap: usize| {
+        let topo = Topology::Mesh { w: 4, h: 4 };
+        let cfg = NocConfig { engine: SimEngine::EventDriven, ..NocConfig::paper() };
+        let mut net = Network::new(&topo, cfg);
+        net.enable_trace(cap);
+        let scn = scenario::find("hotspot").unwrap();
+        let trace = scn.trace(net.n_endpoints(), 0.1, 300, 3);
+        scenario::replay(&mut net, &trace, 10_000_000).unwrap();
+        let tb = net.trace().unwrap();
+        (net.channel_profile(), tb.recorded(), tb.dropped(), tb.len())
+    };
+    let (ample_profile, ample_recorded, ample_dropped, _) = run(1 << 16);
+    assert_eq!(ample_dropped, 0, "ample ring must not wrap in this window");
+    assert!(ample_profile.total() > 0);
+    let (tiny_profile, tiny_recorded, tiny_dropped, tiny_len) = run(16);
+    assert!(tiny_dropped > 0, "tiny ring must wrap");
+    assert!(tiny_len <= 16, "ring exceeded its capacity");
+    assert_eq!(tiny_recorded, ample_recorded, "recorder count must not depend on capacity");
+    assert_eq!(
+        tiny_profile, ample_profile,
+        "channel profile must stay exact when the ring wraps"
+    );
+}
