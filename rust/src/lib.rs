@@ -78,6 +78,14 @@
 //!   ([`noc::SharedFabric`] shares one tabulated route table across
 //!   replicas) and [`noc::Network::reset`] between jobs; results are
 //!   bit-identical for any thread count.
+//! * **Design-space autopilot** ([`space`], [`optimize`]): typed search
+//!   axes (topology family/size × pins × clock-div × buffer depth ×
+//!   partition seed, with exact encode/decode to `FlowBuilder` configs)
+//!   and a closed-loop Pareto search over {completion cycles, per-FPGA
+//!   resources, wire pins} — successive-halving races over the capped
+//!   [`noc::Network::run_until_idle_capped`] prune path, memoized fabric
+//!   reuse, and annealed partition refinement warm-started from the
+//!   bisection placer (`fabricflow optimize`).
 //! * **Serving** ([`serve`]): the long-lived `fabricflow serve` process —
 //!   a pool of warm replicas answering typed request frames
 //!   ([`serve::hostlink`]) from stdin or a socket under bounded-queue
@@ -105,6 +113,8 @@ pub mod serdes;
 pub mod partition;
 pub mod pe;
 pub mod flow;
+pub mod space;
+pub mod optimize;
 pub mod fleet;
 pub mod serve;
 #[cfg(feature = "pjrt")]

@@ -15,6 +15,8 @@
 //! fabricflow sweep --chips 2 --pins 1,8 # …multichip grid across wire configs
 //! fabricflow sweep --chips 2 --fault-rates 0,0.01   # …degraded wires (CRC/retransmit)
 //! fabricflow sweep --lanes 8            # …8 Monte-Carlo lanes per listed seed
+//! fabricflow optimize --chips 2         # autopilot: Pareto search over topology × pins × partition
+//! fabricflow optimize --topos mesh2x2,mesh4x4 --depths 4,8 --json   # …machine-readable front
 //! fabricflow bench --out BENCH_noc.json # tracked NoC benchmark matrix
 //! fabricflow bench --only sweep         # …regenerate one section, keep the rest
 //! fabricflow serve --threads 2          # resident pool serving request frames
@@ -155,9 +157,34 @@ const COMMANDS: &[Command] = &[
         run: cmd_sweep,
     },
     Command {
+        name: "optimize",
+        spec: &[
+            flag("scenario"),
+            flag("topos"),
+            flag("pins"),
+            flag("clock-divs"),
+            flag("depths"),
+            flag("part-seeds"),
+            flag("chips"),
+            flag("load"),
+            flag("cycles"),
+            flag("seed"),
+            flag("threads"),
+            flag("probe"),
+            flag("budget"),
+            flag("sweeps"),
+            flag("sa-iters"),
+            flag("engine"),
+            switch("exhaustive"),
+            switch("json"),
+        ],
+        usage: "optimize [--scenario NAME] [--topos t1,t2] [--chips N] [--pins p1,p2] [--clock-divs d1,d2] [--depths b1,b2] [--part-seeds s1,s2] [--load F] [--cycles N] [--seed S] [--threads N] [--probe N] [--budget N] [--sweeps N] [--sa-iters N] [--engine reference|event] [--exhaustive] [--json]",
+        run: cmd_optimize,
+    },
+    Command {
         name: "bench",
         spec: &[flag("out"), flag("only"), switch("quick")],
-        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults,bitsliced,trace]",
+        usage: "bench [--quick] [--out FILE|-] [--only points,multichip,sweep,serve,faults,bitsliced,trace,optimize]",
         run: cmd_bench,
     },
     Command {
@@ -601,8 +628,11 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
     let engine = engine_from_name(p.raw("engine").unwrap_or("event"))?;
     let threads = p.get_or("threads", fabricflow::fleet::default_threads()).map_err(bad)?;
     let cycles = p.get_or("cycles", 800u64).map_err(bad)?;
+    // Axes go through the strict parser: empty elements and duplicate
+    // values are typed errors (duplicates would silently enqueue
+    // redundant jobs and inflate jobs/sec).
     let loads: Vec<f64> =
-        p.get_list("loads").map_err(bad)?.unwrap_or_else(|| vec![0.02, 0.1]);
+        p.get_axis("loads").map_err(bad)?.unwrap_or_else(|| vec![0.02, 0.1]);
     // --seeds N sweeps seeds 1..=N; --lanes L expands each into L
     // Monte-Carlo lanes (seed + L-1 splitmix64 follow-ons).
     let seeds: Vec<u64> = (1..=p.get_or("seeds", 4u64).map_err(bad)?).collect();
@@ -624,9 +654,9 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
     let (n_jobs, rows, mut agg) = if chips >= 2 {
         let partition =
             Partition::balanced(&topo.build(), chips, p.get_or("seed", 1u64).map_err(bad)?);
-        let pins: Vec<u32> = p.get_list("pins").map_err(bad)?.unwrap_or_else(|| vec![8]);
+        let pins: Vec<u32> = p.get_axis("pins").map_err(bad)?.unwrap_or_else(|| vec![8]);
         let divs: Vec<u32> =
-            p.get_list("clock-divs").map_err(bad)?.unwrap_or_else(|| vec![1]);
+            p.get_axis("clock-divs").map_err(bad)?.unwrap_or_else(|| vec![1]);
         let mut serdes_points = Vec::new();
         for &pin in &pins {
             for &d in &divs {
@@ -637,7 +667,7 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
         // seeds bit flips AND flit drops at that probability, recovered
         // by CRC/retransmit (rate 0 = clean wires, no CRC overhead).
         let rates: Vec<f64> =
-            p.get_list("fault-rates").map_err(bad)?.unwrap_or_else(|| vec![0.0]);
+            p.get_axis("fault-rates").map_err(bad)?.unwrap_or_else(|| vec![0.0]);
         let cells = scenario::run_multichip_grid_faulty(
             &grid,
             &partition,
@@ -700,13 +730,182 @@ fn cmd_sweep(p: &Parsed) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_optimize(p: &Parsed) -> Result<(), String> {
+    use fabricflow::optimize::{self, OptimizeSetup};
+    use fabricflow::space::{SearchSpace, TopoSpec};
+    use std::time::Instant;
+
+    let chips = p.get_or("chips", 1usize).map_err(bad)?;
+    // Every axis goes through the strict parser — empty and duplicate
+    // values are typed errors, not silent no-ops.
+    let topo_names: Vec<String> = p.get_axis("topos").map_err(bad)?.unwrap_or_else(|| {
+        vec!["mesh2x2".to_string(), "mesh3x3".to_string(), "mesh4x4".to_string()]
+    });
+    let topos = topo_names
+        .iter()
+        .map(|s| TopoSpec::decode(s))
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| e.to_string())?;
+    let pins: Vec<u32> = p
+        .get_axis("pins")
+        .map_err(bad)?
+        .unwrap_or_else(|| if chips >= 2 { vec![2, 8] } else { vec![8] });
+    let clock_divs: Vec<u32> =
+        p.get_axis("clock-divs").map_err(bad)?.unwrap_or_else(|| vec![1]);
+    let buffer_depths: Vec<usize> =
+        p.get_axis("depths").map_err(bad)?.unwrap_or_else(|| vec![4, 8]);
+    let part_seeds: Vec<u64> =
+        p.get_axis("part-seeds").map_err(bad)?.unwrap_or_else(|| vec![1]);
+    let engine = engine_from_name(p.raw("engine").unwrap_or("event"))?;
+    let scn_name = p.raw("scenario").unwrap_or("uniform");
+    let scn =
+        scenario::find(scn_name).ok_or_else(|| format!("unknown scenario '{scn_name}'"))?;
+    let load = p.get_or("load", 0.1f64).map_err(bad)?;
+    let window = p.get_or("cycles", 400u64).map_err(bad)?;
+
+    let space =
+        SearchSpace { topos, pins, clock_divs, buffer_depths, part_seeds, chips, pinned: vec![] };
+    let mut setup = OptimizeSetup::new(space, scn, load, window);
+    setup.seed = p.get_or("seed", 1u64).map_err(bad)?;
+    setup.base = NocConfig { engine, ..NocConfig::paper() };
+    setup.threads =
+        p.get_or("threads", fabricflow::fleet::default_threads()).map_err(bad)?;
+    setup.probe_budget = p.get_or("probe", setup.probe_budget).map_err(bad)?;
+    setup.full_budget = p.get_or("budget", setup.full_budget).map_err(bad)?;
+
+    let exhaustive = p.has("exhaustive");
+    let t = Instant::now();
+    let report = if exhaustive { optimize::exhaustive(&setup) } else { optimize::race(&setup) }
+        .map_err(|e| format!("optimize failed: {e}"))?;
+    let search_ms = t.elapsed().as_secs_f64() * 1e3;
+    let best = *report.best().expect("non-empty front");
+
+    // Anneal the winner's partition with the simulator in the loop,
+    // warm-started from the bisection placer.
+    let sweeps = p.get_or("sweeps", 1usize).map_err(bad)?;
+    let sa_iters = p.get_or("sa-iters", 16usize).map_err(bad)?;
+    let refined = if best.point.chips >= 2 && sweeps + sa_iters > 0 {
+        let graph = best.point.topo.build_topology().build();
+        let start = best
+            .point
+            .partition(&graph, &[])
+            .map_err(|e| e.to_string())?
+            .expect("multichip point has a partition");
+        let trace = scn.trace(graph.n_endpoints, load, window, setup.seed);
+        let mut eval = |part: &Partition| {
+            optimize::partition_cycles(
+                &graph,
+                &best.point,
+                &setup.base,
+                part,
+                &trace,
+                setup.full_budget,
+            )
+        };
+        Some(optimize::refine_partition(
+            &graph, &start, &[], sweeps, sa_iters, setup.seed, &mut eval,
+        ))
+    } else {
+        None
+    };
+    let wall_ms = t.elapsed().as_secs_f64() * 1e3;
+
+    if p.has("json") {
+        let front: Vec<String> = report
+            .front
+            .iter()
+            .map(|e| {
+                format!(
+                    "{{\"point\": {}, \"cycles\": {}, \"luts\": {}, \"regs\": {}, \"bram_bits\": {}, \"wire_pins\": {}}}",
+                    e.point.to_json(),
+                    e.cycles,
+                    e.est.per_fpga.luts,
+                    e.est.per_fpga.regs,
+                    e.est.per_fpga.bram_bits,
+                    e.est.wire_pins
+                )
+            })
+            .collect();
+        let refined_json = match &refined {
+            Some(r) => format!(
+                "{{\"assignment\": {:?}, \"cycles\": {}, \"start_cycles\": {}, \"evals\": {}}}",
+                r.partition.assignment, r.cycles, r.start_cycles, r.evals
+            ),
+            None => "null".to_string(),
+        };
+        println!(
+            "{{\n  \"scenario\": \"{}\",\n  \"mode\": \"{}\",\n  \"space_points\": {},\n  \"finished\": {},\n  \"infeasible\": {},\n  \"probe_runs\": {},\n  \"full_runs\": {},\n  \"pruned\": {},\n  \"front\": [{}],\n  \"winner\": {},\n  \"refined\": {},\n  \"wall_ms\": {:.1}\n}}",
+            scn.name,
+            if exhaustive { "exhaustive" } else { "racing" },
+            report.space_points,
+            report.finished,
+            report.infeasible,
+            report.probe_runs,
+            report.full_runs,
+            report.pruned,
+            front.join(", "),
+            best.point.to_json(),
+            refined_json,
+            wall_ms
+        );
+        return Ok(());
+    }
+
+    println!(
+        "design-space autopilot — scenario '{}', load {load}, window {window} cyc, {} points, {} search, {} thread(s)",
+        scn.name,
+        report.space_points,
+        if exhaustive { "exhaustive" } else { "racing" },
+    );
+    println!("  Pareto front ({} point(s)):", report.front.len());
+    for e in &report.front {
+        println!(
+            "    {:24} {:>8} cyc  {:>6} luts {:>6} regs {:>7} bram_bits  {:>4} wire pins",
+            e.point.encode(),
+            e.cycles,
+            e.est.per_fpga.luts,
+            e.est.per_fpga.regs,
+            e.est.per_fpga.bram_bits,
+            e.est.wire_pins
+        );
+    }
+    println!(
+        "  {} finished, {} infeasible | {} probe + {} full runs, {} pruned | search {:.1} ms",
+        report.finished,
+        report.infeasible,
+        report.probe_runs,
+        report.full_runs,
+        report.pruned,
+        search_ms
+    );
+    if let Some(r) = &refined {
+        if r.improved {
+            println!(
+                "  annealed partition: cycles {} -> {} over {} eval(s), assignment {:?}",
+                r.start_cycles, r.cycles, r.evals, r.partition.assignment
+            );
+        } else {
+            println!(
+                "  annealed partition: warm start already optimal ({} cyc, {} eval(s))",
+                r.start_cycles, r.evals
+            );
+        }
+    }
+    println!("  winner (JSON): {}", best.point.to_json());
+    println!("  winner (FlowBuilder):");
+    for line in best.point.builder_code(&setup.base).lines() {
+        println!("    {line}");
+    }
+    Ok(())
+}
+
 fn cmd_bench(p: &Parsed) -> Result<(), String> {
     let quick = p.has("quick");
     let out = p.raw("out").unwrap_or("BENCH_noc.json").to_string();
     let sel = match p.raw("only") {
         Some(s) => fabricflow::perf::BenchSelect::parse(s).ok_or_else(|| {
             format!(
-                "bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults, bitsliced, trace)"
+                "bad --only '{s}' (comma-separated: points, multichip, sweep, serve, faults, bitsliced, trace, optimize)"
             )
         })?,
         None => fabricflow::perf::BenchSelect::ALL,

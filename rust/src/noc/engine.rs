@@ -50,6 +50,68 @@ impl fmt::Display for Stalled {
 
 impl std::error::Error for Stalled {}
 
+/// Outcome of a budget-capped drain
+/// ([`Network::run_until_idle_capped`] and its `MultiChipSim`
+/// counterpart). Unlike [`Stalled`], running out of budget is a typed
+/// *outcome*, not an error: the optimizer's successive-halving races
+/// probe candidate configurations with small budgets and treat
+/// `BudgetExceeded` as "still running, promote or prune", while a
+/// provable deadlock (the simulator is frozen with no future event)
+/// is reported separately so it is never retried with a larger budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CappedRun {
+    /// The network drained; payload is the elapsed cycle count.
+    Idle(u64),
+    /// The budget ran out with work still in flight. The simulator
+    /// state is intact; callers may continue with a larger budget.
+    BudgetExceeded {
+        /// Cycles elapsed inside the capped call.
+        cycles: u64,
+        /// Flits still queued at NIs or inside the network.
+        pending: usize,
+    },
+    /// The simulator is provably frozen: no flit moved and no future
+    /// SERDES/wire event exists. A larger budget cannot help.
+    Deadlock {
+        /// Cycles elapsed inside the capped call.
+        cycles: u64,
+        /// Flits still queued at NIs or inside the network.
+        pending: usize,
+    },
+}
+
+impl CappedRun {
+    /// Elapsed cycles regardless of outcome.
+    pub fn cycles(&self) -> u64 {
+        match *self {
+            CappedRun::Idle(c)
+            | CappedRun::BudgetExceeded { cycles: c, .. }
+            | CappedRun::Deadlock { cycles: c, .. } => c,
+        }
+    }
+
+    /// `true` iff the network drained within budget.
+    pub fn is_idle(&self) -> bool {
+        matches!(self, CappedRun::Idle(_))
+    }
+}
+
+impl fmt::Display for CappedRun {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            CappedRun::Idle(cycles) => write!(f, "idle after {cycles} cycles"),
+            CappedRun::BudgetExceeded { cycles, pending } => write!(
+                f,
+                "budget exceeded after {cycles} cycles ({pending} flits pending)"
+            ),
+            CappedRun::Deadlock { cycles, pending } => write!(
+                f,
+                "deadlock after {cycles} cycles ({pending} flits pending)"
+            ),
+        }
+    }
+}
+
 /// A set of small indices with O(1) insert and sorted sweep, used as the
 /// per-phase worklist. Members persist across cycles until a sweep finds
 /// them inactive (lazy deletion: the sweep re-inserts survivors).

@@ -34,7 +34,7 @@ pub mod stats;
 pub mod trace;
 pub mod traffic;
 
-pub use engine::Stalled;
+pub use engine::{CappedRun, Stalled};
 pub use flit::{Flit, NodeId};
 pub use multichip::{LinkStat, MultiChipError, MultiChipSim};
 pub use network::{Network, SharedFabric};

@@ -40,7 +40,7 @@
 
 use std::collections::VecDeque;
 
-use super::engine::Stalled;
+use super::engine::{CappedRun, Stalled};
 use super::flit::{Flit, NodeId};
 use super::stats::NetStats;
 use super::topology::{chip_graph, TopoGraph, Topology};
@@ -1040,6 +1040,52 @@ impl MultiChipSim {
             }
         }
         Ok(self.cycle - start)
+    }
+
+    /// Budget-capped variant of [`MultiChipSim::run_until_idle`]:
+    /// identical stepping (bit-identical state evolution for the same
+    /// budget), but budget exhaustion is a typed
+    /// [`CappedRun::BudgetExceeded`] *outcome* and a provably frozen
+    /// fabric (no flit moved anywhere, no future wire event) is
+    /// [`CappedRun::Deadlock`]. Wire-integrity failures still surface as
+    /// `Err` — they are real errors, not prune signals.
+    pub fn run_until_idle_capped(&mut self, budget: u64) -> Result<CappedRun, MultiChipError> {
+        let start = self.cycle;
+        while !self.idle() {
+            if let Some(err) = self.wire_error {
+                return Err(err);
+            }
+            if self.cycle - start >= budget {
+                return Ok(CappedRun::BudgetExceeded {
+                    cycles: self.cycle - start,
+                    pending: self.pending(),
+                });
+            }
+            let before = self.total_moves();
+            self.step();
+            if self.total_moves() == before {
+                match self.next_wire_ready() {
+                    Some(t) if t > self.cycle => {
+                        let all_idle = self.chips.iter().all(|c| c.idle());
+                        if self.cfg.engine == SimEngine::EventDriven && all_idle {
+                            let target = (t - 1).min(start + budget);
+                            self.fast_forward_chips(target);
+                        }
+                    }
+                    Some(_) => {}
+                    None => {
+                        if let Some(err) = self.wire_error {
+                            return Err(err);
+                        }
+                        return Ok(CappedRun::Deadlock {
+                            cycles: self.cycle - start,
+                            pending: self.pending(),
+                        });
+                    }
+                }
+            }
+        }
+        Ok(CappedRun::Idle(self.cycle - start))
     }
 }
 

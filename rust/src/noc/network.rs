@@ -27,7 +27,7 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use super::engine::{ActiveSet, Stalled};
+use super::engine::{ActiveSet, CappedRun, Stalled};
 use super::flit::{packetize_into, Flit, NodeId};
 use super::router::{OutputPort, Router};
 use super::stats::NetStats;
@@ -670,6 +670,44 @@ impl Network {
             }
         }
         Ok(self.cycle - start)
+    }
+
+    /// Budget-capped variant of [`Network::run_until_idle`]: identical
+    /// stepping (bit-identical state evolution for the same budget), but
+    /// running out of budget is a typed [`CappedRun::BudgetExceeded`]
+    /// *outcome* rather than a [`Stalled`] error, and a provably frozen
+    /// event-engine network (no flit moved, no future serdes event) is
+    /// distinguished as [`CappedRun::Deadlock`]. This is the optimizer's
+    /// prune path: successive-halving probe runs use small budgets and
+    /// treat `BudgetExceeded` as "promote or prune", never as failure.
+    pub fn run_until_idle_capped(&mut self, budget: u64) -> CappedRun {
+        let start = self.cycle;
+        while !self.idle() {
+            if self.cycle - start >= budget {
+                return CappedRun::BudgetExceeded {
+                    cycles: self.cycle - start,
+                    pending: self.pending(),
+                };
+            }
+            let before = self.moves;
+            self.step();
+            if self.cfg.engine == SimEngine::EventDriven && self.moves == before {
+                match self.next_serdes_ready() {
+                    Some(t) if t > self.cycle => {
+                        let target = (t - 1).min(start + budget);
+                        self.cycle = target;
+                        self.stats.cycles = target;
+                    }
+                    _ => {
+                        return CappedRun::Deadlock {
+                            cycles: self.cycle - start,
+                            pending: self.pending(),
+                        };
+                    }
+                }
+            }
+        }
+        CappedRun::Idle(self.cycle - start)
     }
 
     // -- phase 1 ------------------------------------------------------------

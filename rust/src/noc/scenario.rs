@@ -23,7 +23,7 @@
 //! point per case study as a golden file (`tests/golden_traces.rs`).
 //! See EXPERIMENTS.md §Scenario matrix.
 
-use super::engine::Stalled;
+use super::engine::{CappedRun, Stalled};
 use super::flit::Flit;
 use super::multichip::{MultiChipError, MultiChipSim};
 use super::network::SharedFabric;
@@ -409,6 +409,104 @@ pub fn replay_multichip(
     }
     sim.run_until_idle(drain_budget)?;
     Ok(sim.cycle() - start)
+}
+
+/// Budget-capped [`replay`]: inject + drain under a single total cycle
+/// budget, returning a typed [`CappedRun`] outcome instead of erroring.
+/// With a budget the trace cannot exhaust, the stepping is bit-identical
+/// to [`replay`] (the cap checks never fire and the idle-gap jump is
+/// never clamped) — `tests/optimize_front.rs` enforces this on both
+/// engines. The optimizer's successive-halving probes use small budgets:
+/// `BudgetExceeded` proves the true completion time exceeds the budget
+/// (the prune precondition), `Deadlock` marks the point infeasible.
+///
+/// `pending` in a non-idle outcome counts flits still in the network
+/// *plus* trace events not yet injected.
+pub fn replay_capped(net: &mut Network, trace: &Trace, budget: u64) -> CappedRun {
+    let start = net.cycle();
+    let jump = net.cfg().engine == SimEngine::EventDriven;
+    let mut i = 0;
+    while i < trace.events.len() {
+        let at = start + trace.events[i].cycle;
+        while net.cycle() < at {
+            if net.cycle() - start >= budget {
+                return CappedRun::BudgetExceeded {
+                    cycles: net.cycle() - start,
+                    pending: net.pending() + (trace.events.len() - i),
+                };
+            }
+            if jump && net.idle() {
+                // Clamp the jump so the budget check above still fires
+                // when the next injection lies beyond the horizon.
+                net.fast_forward_to(at.min(start + budget));
+                continue;
+            }
+            net.step();
+        }
+        while i < trace.events.len() && start + trace.events[i].cycle == at {
+            let e = trace.events[i];
+            net.inject(e.src, Flit::single(e.src, e.dst, e.tag, e.data));
+            i += 1;
+        }
+    }
+    let spent = net.cycle() - start;
+    match net.run_until_idle_capped(budget.saturating_sub(spent)) {
+        CappedRun::Idle(_) => CappedRun::Idle(net.cycle() - start),
+        CappedRun::BudgetExceeded { pending, .. } => CappedRun::BudgetExceeded {
+            cycles: net.cycle() - start,
+            pending,
+        },
+        CappedRun::Deadlock { pending, .. } => CappedRun::Deadlock {
+            cycles: net.cycle() - start,
+            pending,
+        },
+    }
+}
+
+/// [`replay_capped`] against a sharded multi-FPGA fabric — the
+/// multi-chip analogue, same budget semantics. Wire-integrity failures
+/// still surface as `Err`.
+pub fn replay_multichip_capped(
+    sim: &mut MultiChipSim,
+    trace: &Trace,
+    budget: u64,
+) -> Result<CappedRun, MultiChipError> {
+    let start = sim.cycle();
+    let jump = sim.cfg().engine == SimEngine::EventDriven;
+    let mut i = 0;
+    while i < trace.events.len() {
+        let at = start + trace.events[i].cycle;
+        while sim.cycle() < at {
+            if sim.cycle() - start >= budget {
+                return Ok(CappedRun::BudgetExceeded {
+                    cycles: sim.cycle() - start,
+                    pending: sim.pending() + (trace.events.len() - i),
+                });
+            }
+            if jump && sim.idle() {
+                sim.fast_forward_to(at.min(start + budget));
+                continue;
+            }
+            sim.step();
+        }
+        while i < trace.events.len() && start + trace.events[i].cycle == at {
+            let e = trace.events[i];
+            sim.inject(e.src, Flit::single(e.src, e.dst, e.tag, e.data));
+            i += 1;
+        }
+    }
+    let spent = sim.cycle() - start;
+    Ok(match sim.run_until_idle_capped(budget.saturating_sub(spent))? {
+        CappedRun::Idle(_) => CappedRun::Idle(sim.cycle() - start),
+        CappedRun::BudgetExceeded { pending, .. } => CappedRun::BudgetExceeded {
+            cycles: sim.cycle() - start,
+            pending,
+        },
+        CappedRun::Deadlock { pending, .. } => CappedRun::Deadlock {
+            cycles: sim.cycle() - start,
+            pending,
+        },
+    })
 }
 
 /// One ejected flit, in eject order — the unit of golden-trace and

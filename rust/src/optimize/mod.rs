@@ -1,0 +1,727 @@
+//! The design-space autopilot: closed-loop Pareto search over
+//! [`crate::space::SearchSpace`] (`fabricflow optimize`).
+//!
+//! The paper's framework is *semi-automated* — a human iterates topology,
+//! link width, and partition until the case study fits and performs.
+//! This module closes the loop. Given a named scenario workload and a
+//! typed search space, it returns the **Pareto front** of
+//!
+//! * completion cycles (simulated, exact),
+//! * per-FPGA resource envelope ([`crate::resources`], static), and
+//! * wire cost in pins (static),
+//!
+//! and it does so *fast* without giving up exactness:
+//!
+//! * **Successive-halving races** ([`race`]): every point first runs
+//!   under a short probe budget via the capped prune path
+//!   ([`crate::noc::scenario::replay_capped`]); finishers record exact
+//!   cycle counts, survivors are promoted to 4× the budget, and a
+//!   survivor is **pruned** only when some already-finished point is
+//!   no worse on *both static axes* — in that case the finisher is also
+//!   strictly faster (its cycles fit a budget the survivor exceeded), so
+//!   the pruned point provably cannot sit on the front. The racing front
+//!   is therefore **byte-identical** to [`exhaustive`] evaluation while
+//!   performing strictly fewer full-budget runs whenever anything
+//!   finishes early (`tests/optimize_front.rs` counts and asserts both).
+//! * **Memoized fabrics**: evaluations are keyed on (topology, pins,
+//!   clock-div, depth, partition seed); each fleet worker keeps its last
+//!   simulator and [`Network::reset`]s it when the key repeats —
+//!   neighboring evaluations never re-tabulate route tables
+//!   ([`SharedFabric`] makes reset ≡ fresh-build bit-identical).
+//! * **Fleet fan-out**: all evaluations of a level run through
+//!   [`crate::fleet::run_jobs`], so the returned front is bit-identical
+//!   for any thread count.
+//! * **Annealed refinement** ([`refine_partition`]): the best point's
+//!   partition is polished by greedy group moves + seeded simulated
+//!   annealing, warm-started from the bisection placer — the greedy
+//!   phase alone guarantees the result never regresses the warm start.
+//!
+//! `perf::run_optimize_bench` measures evals/sec sequential-exhaustive
+//! vs racing+memoized and asserts front equality in-run.
+
+use std::fmt;
+
+use crate::fleet;
+use crate::noc::scenario::{self, Scenario, Trace};
+use crate::noc::topology::TopoGraph;
+use crate::noc::{CappedRun, MultiChipSim, Network, NocConfig, SharedFabric};
+use crate::partition::Partition;
+use crate::space::{ConfigEstimate, ConfigPoint, SearchSpace, SpaceError};
+use crate::util::Rng;
+
+/// Autopilot failure: a malformed space or a search with nothing to
+/// return.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OptError {
+    /// The search space failed [`SearchSpace::validate`].
+    Space(SpaceError),
+    /// Every point was infeasible (unpartitionable or deadlocked) or
+    /// exceeded the full budget.
+    NoFeasiblePoint,
+}
+
+impl fmt::Display for OptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OptError::Space(e) => write!(f, "{e}"),
+            OptError::NoFeasiblePoint => {
+                write!(f, "no feasible configuration in the search space")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OptError {}
+
+impl From<SpaceError> for OptError {
+    fn from(e: SpaceError) -> Self {
+        OptError::Space(e)
+    }
+}
+
+/// Everything the search needs besides the space itself.
+#[derive(Clone, Debug)]
+pub struct OptimizeSetup {
+    pub space: SearchSpace,
+    /// Workload replayed on every candidate fabric.
+    pub scenario: Scenario,
+    /// Offered load (flits/endpoint/cycle) of the injection schedule.
+    pub load: f64,
+    /// Injection window in cycles.
+    pub window: u64,
+    /// Trace seed (same seed → same schedule on every point).
+    pub seed: u64,
+    /// Flit width / allocator / engine shared by every point (buffer
+    /// depth comes from the point).
+    pub base: NocConfig,
+    /// Fleet workers; any value returns bit-identical results.
+    pub threads: usize,
+    /// First (shortest) racing budget in cycles.
+    pub probe_budget: u64,
+    /// Promotion cap: a point still unfinished at this budget is
+    /// infeasible. This is also [`exhaustive`]'s flat budget.
+    pub full_budget: u64,
+}
+
+impl OptimizeSetup {
+    /// A setup with the repo-wide default budgets for `window`-cycle
+    /// injection schedules.
+    pub fn new(space: SearchSpace, scenario: Scenario, load: f64, window: u64) -> Self {
+        OptimizeSetup {
+            space,
+            scenario,
+            load,
+            window,
+            seed: 1,
+            base: NocConfig::paper(),
+            threads: fleet::default_threads(),
+            probe_budget: window.saturating_mul(4).max(64),
+            full_budget: window.saturating_mul(50) + 100_000,
+        }
+    }
+}
+
+/// One fully evaluated configuration: the point, its exact completion
+/// cycles, and its static cost coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Evaluated {
+    pub point: ConfigPoint,
+    /// Exact cycles to drain the scenario (replay + drain).
+    pub cycles: u64,
+    pub est: ConfigEstimate,
+}
+
+/// `a` Pareto-dominates `b`: no worse on every axis (cycles, wire pins,
+/// per-FPGA resources componentwise) and strictly better on at least
+/// one.
+pub fn dominates(a: &Evaluated, b: &Evaluated) -> bool {
+    let no_worse = a.cycles <= b.cycles
+        && a.est.wire_pins <= b.est.wire_pins
+        && a.est.per_fpga.fits_within(&b.est.per_fpga);
+    let better = a.cycles < b.cycles
+        || a.est.wire_pins < b.est.wire_pins
+        || a.est.per_fpga != b.est.per_fpga;
+    no_worse && better
+}
+
+/// The non-dominated subset of `evaluated`, in canonical order (cycles,
+/// then wire pins, then resources, then point name).
+pub fn pareto_front(evaluated: &[Evaluated]) -> Vec<Evaluated> {
+    let mut front: Vec<Evaluated> = evaluated
+        .iter()
+        .enumerate()
+        .filter(|(i, p)| {
+            !evaluated.iter().enumerate().any(|(j, q)| j != *i && dominates(q, p))
+        })
+        .map(|(_, p)| *p)
+        .collect();
+    front.sort_by(|a, b| {
+        (a.cycles, a.est.wire_pins, a.est.per_fpga.luts, a.est.per_fpga.regs)
+            .cmp(&(b.cycles, b.est.wire_pins, b.est.per_fpga.luts, b.est.per_fpga.regs))
+            .then_with(|| a.point.encode().cmp(&b.point.encode()))
+    });
+    front
+}
+
+/// Outcome of a search ([`race`] or [`exhaustive`]) — identical `front`
+/// either way; the counters differ and are what `perf` benches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SearchReport {
+    /// The Pareto front, canonically ordered.
+    pub front: Vec<Evaluated>,
+    /// Points in the space.
+    pub space_points: usize,
+    /// Points that finished with exact cycle counts.
+    pub finished: usize,
+    /// Points with no valid partition, a deadlock, or cycles beyond the
+    /// full budget.
+    pub infeasible: usize,
+    /// Simulation launches below the full budget (racing probes).
+    pub probe_runs: usize,
+    /// Simulation launches at the full budget.
+    pub full_runs: usize,
+    /// Survivors eliminated by a finished point without ever running at
+    /// full budget.
+    pub pruned: usize,
+}
+
+impl SearchReport {
+    /// The front's minimum-cycles point (first in canonical order).
+    pub fn best(&self) -> Option<&Evaluated> {
+        self.front.first()
+    }
+}
+
+/// Per-space precomputation shared by every evaluation: one
+/// [`SharedFabric`] + trace per topology, one partition + static
+/// estimate per point.
+struct Prepared {
+    points: Vec<ConfigPoint>,
+    /// Per point: index into `fabrics`/`traces`.
+    topo_of: Vec<usize>,
+    fabrics: Vec<SharedFabric>,
+    traces: Vec<Trace>,
+    /// Per point: `None` for monolithic points; multi-chip points whose
+    /// pinned bisection failed are in `unpartitionable` instead.
+    parts: Vec<Option<Partition>>,
+    ests: Vec<ConfigEstimate>,
+    /// Per point: pinned constraints made the partition impossible.
+    unpartitionable: Vec<bool>,
+}
+
+fn prepare(setup: &OptimizeSetup) -> Result<Prepared, OptError> {
+    setup.space.validate()?;
+    let points = setup.space.points();
+    let fabrics: Vec<SharedFabric> = setup
+        .space
+        .topos
+        .iter()
+        .map(|t| SharedFabric::from_graph(t.build_topology().build()))
+        .collect();
+    let traces: Vec<Trace> = fabrics
+        .iter()
+        .map(|f| {
+            setup
+                .scenario
+                .trace(f.topo().n_endpoints, setup.load, setup.window, setup.seed)
+        })
+        .collect();
+    let topo_of: Vec<usize> = points
+        .iter()
+        .map(|p| {
+            setup
+                .space
+                .topos
+                .iter()
+                .position(|t| *t == p.topo)
+                .expect("point topology comes from the space")
+        })
+        .collect();
+    let mut parts = Vec::with_capacity(points.len());
+    let mut ests = Vec::with_capacity(points.len());
+    let mut unpartitionable = Vec::with_capacity(points.len());
+    for (i, p) in points.iter().enumerate() {
+        let graph = fabrics[topo_of[i]].topo();
+        match p.partition(graph, &setup.space.pinned) {
+            Ok(part) => {
+                ests.push(p.estimate(graph, part.as_ref(), &setup.base));
+                parts.push(part);
+                unpartitionable.push(false);
+            }
+            Err(_) => {
+                ests.push(ConfigEstimate::default());
+                parts.push(None);
+                unpartitionable.push(true);
+            }
+        }
+    }
+    Ok(Prepared { points, topo_of, fabrics, traces, parts, ests, unpartitionable })
+}
+
+/// A fleet worker's pooled simulator, rebuilt only when the fabric key
+/// changes and [`Network::reset`] otherwise (reset ≡ fresh build,
+/// bit-identically).
+enum Sim {
+    Mono(Network),
+    Multi(MultiChipSim),
+}
+
+/// (topo index, pins, clock div, buffer depth, partition seed).
+type SimKey = (usize, u32, u32, usize, u64);
+
+/// Run `jobs` (point index, budget) through the fleet pool with
+/// memoized fabric construction. Results are in job order and
+/// bit-identical for any `threads`.
+fn run_capped_jobs(setup: &OptimizeSetup, prep: &Prepared, jobs: &[(usize, u64)]) -> Vec<CappedRun> {
+    fleet::run_jobs(
+        jobs,
+        setup.threads,
+        |_| None::<(SimKey, Sim)>,
+        |slot, &(pi, budget), _| {
+            let point = prep.points[pi];
+            let ti = prep.topo_of[pi];
+            let key: SimKey =
+                (ti, point.pins, point.clock_div, point.buffer_depth, point.part_seed);
+            match slot {
+                Some((k, sim)) if *k == key => match sim {
+                    Sim::Mono(net) => net.reset(),
+                    Sim::Multi(sim) => sim.reset(),
+                },
+                _ => {
+                    let cfg = point.noc_config(&setup.base);
+                    let sim = match prep.parts[pi].as_ref() {
+                        None => Sim::Mono(prep.fabrics[ti].network(cfg)),
+                        Some(part) => Sim::Multi(MultiChipSim::from_graph(
+                            prep.fabrics[ti].topo().clone(),
+                            cfg,
+                            part,
+                            point.serdes(),
+                        )),
+                    };
+                    *slot = Some((key, sim));
+                }
+            }
+            let trace = &prep.traces[ti];
+            match &mut slot.as_mut().expect("worker sim installed above").1 {
+                Sim::Mono(net) => scenario::replay_capped(net, trace, budget),
+                Sim::Multi(sim) => scenario::replay_multichip_capped(sim, trace, budget)
+                    // Clean wires cannot corrupt; a wire error would be
+                    // deterministic, so mapping it to a deadlock keeps
+                    // the point out of the front identically everywhere.
+                    .unwrap_or(CappedRun::Deadlock { cycles: 0, pending: 0 }),
+            }
+        },
+    )
+}
+
+/// Evaluate **every** point at the full budget — the simple, obviously
+/// correct search. [`race`] must (and does) return this exact front.
+pub fn exhaustive(setup: &OptimizeSetup) -> Result<SearchReport, OptError> {
+    let prep = prepare(setup)?;
+    let jobs: Vec<(usize, u64)> = (0..prep.points.len())
+        .filter(|&i| !prep.unpartitionable[i])
+        .map(|i| (i, setup.full_budget))
+        .collect();
+    let outcomes = run_capped_jobs(setup, &prep, &jobs);
+    let mut finished = Vec::new();
+    let mut infeasible = prep.points.len() - jobs.len();
+    for (&(pi, _), outcome) in jobs.iter().zip(&outcomes) {
+        match outcome {
+            CappedRun::Idle(cycles) => finished.push(Evaluated {
+                point: prep.points[pi],
+                cycles: *cycles,
+                est: prep.ests[pi],
+            }),
+            _ => infeasible += 1,
+        }
+    }
+    if finished.is_empty() {
+        return Err(OptError::NoFeasiblePoint);
+    }
+    Ok(SearchReport {
+        front: pareto_front(&finished),
+        space_points: prep.points.len(),
+        finished: finished.len(),
+        infeasible,
+        probe_runs: 0,
+        full_runs: jobs.len(),
+        pruned: 0,
+    })
+}
+
+/// Successive-halving race: probe every point under
+/// [`OptimizeSetup::probe_budget`], promote survivors at 4× per level up
+/// to the full budget, and prune a survivor as soon as a finished point
+/// is no worse on both static axes (resources, wire pins) — the
+/// finisher is then also strictly faster, so the pruned point provably
+/// cannot be on the front. Returns the front [`exhaustive`] would,
+/// byte-identically, with strictly fewer full-budget launches whenever
+/// any point finishes below the cap.
+pub fn race(setup: &OptimizeSetup) -> Result<SearchReport, OptError> {
+    let prep = prepare(setup)?;
+    let mut open: Vec<usize> =
+        (0..prep.points.len()).filter(|&i| !prep.unpartitionable[i]).collect();
+    let mut infeasible = prep.points.len() - open.len();
+    let mut finished: Vec<Evaluated> = Vec::new();
+    let mut probe_runs = 0usize;
+    let mut full_runs = 0usize;
+    let mut pruned = 0usize;
+    let mut budget = setup.probe_budget.max(1).min(setup.full_budget);
+    while !open.is_empty() {
+        let jobs: Vec<(usize, u64)> = open.iter().map(|&i| (i, budget)).collect();
+        if budget >= setup.full_budget {
+            full_runs += jobs.len();
+        } else {
+            probe_runs += jobs.len();
+        }
+        let outcomes = run_capped_jobs(setup, &prep, &jobs);
+        let mut survivors = Vec::new();
+        for (&(pi, _), outcome) in jobs.iter().zip(&outcomes) {
+            match outcome {
+                CappedRun::Idle(cycles) => finished.push(Evaluated {
+                    point: prep.points[pi],
+                    cycles: *cycles,
+                    est: prep.ests[pi],
+                }),
+                CappedRun::Deadlock { .. } => infeasible += 1,
+                CappedRun::BudgetExceeded { .. } => {
+                    if budget >= setup.full_budget {
+                        // Same verdict exhaustive evaluation reaches.
+                        infeasible += 1;
+                    } else {
+                        survivors.push(pi);
+                    }
+                }
+            }
+        }
+        // Prune: a survivor's true cycle count exceeds `budget`, and
+        // every finished point's is within it. A finished point that is
+        // also no worse statically therefore strictly dominates the
+        // survivor — drop it without ever paying a full run.
+        open = survivors
+            .into_iter()
+            .filter(|&pi| {
+                let doomed = finished.iter().any(|q| {
+                    q.est.per_fpga.fits_within(&prep.ests[pi].per_fpga)
+                        && q.est.wire_pins <= prep.ests[pi].wire_pins
+                });
+                if doomed {
+                    pruned += 1;
+                }
+                !doomed
+            })
+            .collect();
+        budget = budget.saturating_mul(4).min(setup.full_budget);
+    }
+    if finished.is_empty() {
+        return Err(OptError::NoFeasiblePoint);
+    }
+    Ok(SearchReport {
+        front: pareto_front(&finished),
+        space_points: prep.points.len(),
+        finished: finished.len(),
+        infeasible,
+        probe_runs,
+        full_runs,
+        pruned,
+    })
+}
+
+/// Exact completion cycles of `part` on `point`'s fabric under `trace`,
+/// or `None` if the capped run does not drain — the evaluation closure
+/// [`refine_partition`] and the CLI share.
+pub fn partition_cycles(
+    graph: &TopoGraph,
+    point: &ConfigPoint,
+    base: &NocConfig,
+    part: &Partition,
+    trace: &Trace,
+    budget: u64,
+) -> Option<u64> {
+    let mut sim =
+        MultiChipSim::from_graph(graph.clone(), point.noc_config(base), part, point.serdes());
+    match scenario::replay_multichip_capped(&mut sim, trace, budget) {
+        Ok(CappedRun::Idle(cycles)) => Some(cycles),
+        _ => None,
+    }
+}
+
+/// Result of [`refine_partition`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RefineOutcome {
+    /// Best partition seen (== the warm start when nothing improved).
+    pub partition: Partition,
+    /// Its completion cycles.
+    pub cycles: u64,
+    /// The warm start's completion cycles (`u64::MAX` if the start
+    /// itself did not drain).
+    pub start_cycles: u64,
+    /// Simulations spent.
+    pub evals: usize,
+    /// `cycles < start_cycles`.
+    pub improved: bool,
+}
+
+/// Routers welded together by the pinned pairs, as deterministic groups
+/// (ordered by smallest member). Unpinned routers are singleton groups.
+fn pinned_groups(n_routers: usize, pinned: &[(usize, usize)]) -> Vec<Vec<usize>> {
+    let mut parent: Vec<usize> = (0..n_routers).collect();
+    fn find(parent: &mut [usize], x: usize) -> usize {
+        let mut r = x;
+        while parent[r] != r {
+            r = parent[r];
+        }
+        let mut c = x;
+        while parent[c] != r {
+            let next = parent[c];
+            parent[c] = r;
+            c = next;
+        }
+        r
+    }
+    for &(a, b) in pinned {
+        let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+        if ra != rb {
+            parent[ra.max(rb)] = ra.min(rb);
+        }
+    }
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_routers];
+    for r in 0..n_routers {
+        let root = find(&mut parent, r);
+        groups[root].push(r);
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
+}
+
+/// Polish a partition with the simulator in the loop, warm-started from
+/// the bisection placer: a best-improvement **greedy phase** (`sweeps`
+/// rounds over every pinned-group relocation and cross-chip swap,
+/// applying the best strictly-improving move) followed by a seeded
+/// **simulated-annealing walk** (`sa_iters` random moves, Metropolis
+/// acceptance, geometric cooling) that can hop out of the greedy basin.
+/// The best partition *seen anywhere* is returned, so the outcome never
+/// regresses the warm start. Pinned pairs are moved as welded groups and
+/// chips are never emptied. Fully deterministic in
+/// `(start, pinned, sweeps, sa_iters, seed)` and sequential — thread
+/// count cannot change the answer.
+pub fn refine_partition(
+    graph: &TopoGraph,
+    start: &Partition,
+    pinned: &[(usize, usize)],
+    sweeps: usize,
+    sa_iters: usize,
+    seed: u64,
+    eval: &mut dyn FnMut(&Partition) -> Option<u64>,
+) -> RefineOutcome {
+    let n_fpgas = start.n_fpgas;
+    let groups = pinned_groups(graph.n_routers, pinned);
+    let mut evals = 0usize;
+    let mut run = |assignment: &[usize]| -> Option<u64> {
+        let part = Partition::try_new(n_fpgas, assignment.to_vec()).ok()?;
+        evals += 1;
+        eval(&part)
+    };
+    let mut cur = start.assignment.clone();
+    let start_cycles = run(&cur).unwrap_or(u64::MAX);
+    let mut cur_cost = start_cycles;
+    let mut best = cur.clone();
+    let mut best_cost = cur_cost;
+
+    let moved = |assignment: &[usize], g: &[usize], chip: usize| -> Vec<usize> {
+        let mut cand = assignment.to_vec();
+        for &r in g {
+            cand[r] = chip;
+        }
+        cand
+    };
+
+    // Greedy best-improvement sweeps.
+    for _ in 0..sweeps {
+        let mut best_move: Option<(u64, Vec<usize>)> = None;
+        let mut consider = |cost: Option<u64>, cand: Vec<usize>| {
+            if let Some(c) = cost {
+                let beats_best = match &best_move {
+                    Some((bc, _)) => c < *bc,
+                    None => true,
+                };
+                if c < cur_cost && beats_best {
+                    best_move = Some((c, cand));
+                }
+            }
+        };
+        for g in &groups {
+            let from = cur[g[0]];
+            for chip in 0..n_fpgas {
+                if chip != from {
+                    let cand = moved(&cur, g, chip);
+                    consider(run(&cand), cand);
+                }
+            }
+        }
+        for (i, gi) in groups.iter().enumerate() {
+            for gj in groups.iter().skip(i + 1) {
+                let (ci, cj) = (cur[gi[0]], cur[gj[0]]);
+                if ci == cj {
+                    continue;
+                }
+                let cand = moved(&moved(&cur, gi, cj), gj, ci);
+                consider(run(&cand), cand);
+            }
+        }
+        match best_move {
+            Some((c, cand)) => {
+                cur = cand;
+                cur_cost = c;
+                if c < best_cost {
+                    best = cur.clone();
+                    best_cost = c;
+                }
+            }
+            None => break,
+        }
+    }
+
+    // Seeded annealing walk from the greedy optimum.
+    let mut rng = Rng::new(seed ^ 0x0A07_0917_5EED_0001);
+    let mut temp = (cur_cost.min(1 << 40) as f64) * 0.05 + 1.0;
+    for _ in 0..sa_iters {
+        let g = &groups[rng.index(groups.len())];
+        let from = cur[g[0]];
+        let cand = if n_fpgas > 2 || rng.bool() {
+            // Relocate the group to a different chip.
+            let mut chip = rng.index(n_fpgas - 1);
+            if chip >= from {
+                chip += 1;
+            }
+            moved(&cur, g, chip)
+        } else {
+            // Two chips: swap with a random group on the other chip.
+            let others: Vec<&Vec<usize>> =
+                groups.iter().filter(|o| cur[o[0]] != from).collect();
+            if others.is_empty() {
+                continue;
+            }
+            let other = others[rng.index(others.len())];
+            moved(&moved(&cur, g, cur[other[0]]), other, from)
+        };
+        if let Some(c) = run(&cand) {
+            let accept = c <= cur_cost || {
+                let delta = (c - cur_cost) as f64;
+                rng.f64() < (-delta / temp).exp()
+            };
+            if accept {
+                cur = cand;
+                cur_cost = c;
+                if c < best_cost {
+                    best = cur.clone();
+                    best_cost = c;
+                }
+            }
+        }
+        temp = (temp * 0.85).max(1e-6);
+    }
+
+    RefineOutcome {
+        partition: Partition::new(n_fpgas, best),
+        cycles: best_cost,
+        start_cycles,
+        evals,
+        improved: best_cost < start_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::TopoSpec;
+
+    fn tiny_setup() -> OptimizeSetup {
+        let space = SearchSpace {
+            topos: vec![TopoSpec::Mesh { w: 2, h: 2 }],
+            pins: vec![1, 8],
+            clock_divs: vec![1],
+            buffer_depths: vec![8],
+            part_seeds: vec![1],
+            chips: 2,
+            pinned: Vec::new(),
+        };
+        let scn = scenario::find("uniform").expect("registry has uniform");
+        let mut setup = OptimizeSetup::new(space, scn, 0.1, 400);
+        setup.threads = 1;
+        setup.probe_budget = 2_000;
+        setup.full_budget = 200_000;
+        setup
+    }
+
+    #[test]
+    fn exhaustive_and_race_agree_on_tiny_space() {
+        let setup = tiny_setup();
+        let ex = exhaustive(&setup).unwrap();
+        let ra = race(&setup).unwrap();
+        assert_eq!(ex.front, ra.front);
+        assert_eq!(ex.full_runs, 2);
+        assert!(ra.full_runs < ex.full_runs, "racing must save full-budget runs");
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        let p = ConfigPoint {
+            topo: TopoSpec::Mesh { w: 2, h: 2 },
+            pins: 8,
+            clock_div: 1,
+            buffer_depth: 8,
+            part_seed: 1,
+            chips: 1,
+        };
+        let mk = |cycles, wire| Evaluated {
+            point: p,
+            cycles,
+            est: ConfigEstimate { per_fpga: Default::default(), wire_pins: wire, cut_links: 0 },
+        };
+        assert!(dominates(&mk(10, 5), &mk(11, 5)));
+        assert!(dominates(&mk(10, 4), &mk(10, 5)));
+        assert!(!dominates(&mk(10, 5), &mk(10, 5)), "equal points do not dominate");
+        assert!(!dominates(&mk(9, 6), &mk(10, 5)), "trade-offs do not dominate");
+        let front = pareto_front(&[mk(10, 5), mk(11, 5), mk(9, 6)]);
+        assert_eq!(front.len(), 2);
+        assert!(front.iter().all(|e| e.cycles != 11));
+    }
+
+    #[test]
+    fn pinned_groups_weld_transitively() {
+        let groups = pinned_groups(6, &[(0, 1), (1, 4)]);
+        assert_eq!(groups, vec![vec![0, 1, 4], vec![2], vec![3], vec![5]]);
+        let singletons = pinned_groups(3, &[]);
+        assert_eq!(singletons.len(), 3);
+    }
+
+    #[test]
+    fn refinement_never_regresses_the_warm_start() {
+        let graph = (TopoSpec::Mesh { w: 2, h: 2 }).build_topology().build();
+        let start = Partition::new(2, vec![0, 0, 1, 1]);
+        // Synthetic cost: penalize router 1 and 2 sharing a chip, so the
+        // optimum is the {0,1}|{2,3} start itself.
+        let mut eval = |p: &Partition| -> Option<u64> {
+            Some(if p.assignment[1] == p.assignment[2] { 100 } else { 10 })
+        };
+        let out = refine_partition(&graph, &start, &[], 2, 8, 7, &mut eval);
+        assert_eq!(out.cycles, 10);
+        assert_eq!(out.start_cycles, 10);
+        assert!(!out.improved);
+        assert!(out.evals > 0);
+    }
+
+    #[test]
+    fn refinement_is_deterministic() {
+        let graph = (TopoSpec::Mesh { w: 2, h: 2 }).build_topology().build();
+        let start = Partition::new(2, vec![0, 1, 0, 1]);
+        let cost = |p: &Partition| -> Option<u64> {
+            // Arbitrary deterministic landscape.
+            Some(p.assignment.iter().enumerate().map(|(i, &c)| (i as u64 + 1) * c as u64).sum())
+        };
+        let a = refine_partition(&graph, &start, &[], 1, 16, 3, &mut { cost });
+        let b = refine_partition(&graph, &start, &[], 1, 16, 3, &mut { cost });
+        assert_eq!(a, b);
+    }
+}

@@ -352,8 +352,105 @@ pub struct TraceBench {
     pub guided_speedup: f64,
 }
 
+/// The `"optimize"` section of `BENCH_noc.json`: design-space autopilot
+/// throughput. The same small topology × pins × depth space is searched
+/// twice — sequential exhaustive evaluation at one worker, then the
+/// racing path (successive-halving prunes + memoized fabrics + fleet
+/// fan-out) at N workers — and the racing front is asserted
+/// **byte-identical** to the exhaustive one in the same run, with
+/// strictly fewer full-budget launches. The tracked quantity is
+/// points-resolved/sec on each path; the speedup column is what the
+/// capped prune path + memoization + threads buy without changing a
+/// single answer.
+#[derive(Clone, Debug)]
+pub struct OptimizeBench {
+    pub scenario: &'static str,
+    /// Configurations in the searched space.
+    pub space_points: usize,
+    /// Worker threads of the racing run (exhaustive times at 1).
+    pub threads: usize,
+    /// Pareto-front size (identical on both paths — asserted).
+    pub front_size: usize,
+    pub exhaustive_full_runs: usize,
+    pub racing_full_runs: usize,
+    pub racing_probe_runs: usize,
+    pub racing_pruned: usize,
+    /// Space points resolved per wall-second, exhaustive at 1 thread.
+    pub sequential_evals_per_sec: f64,
+    /// Space points resolved per wall-second, racing at `threads`.
+    pub racing_evals_per_sec: f64,
+    /// `racing_evals_per_sec / sequential_evals_per_sec`.
+    pub racing_speedup: f64,
+}
+
+/// Run the autopilot benchmark (the `"optimize"` section): one 2-chip
+/// search space evaluated exhaustively at a single worker, then raced
+/// through the capped prune path at N workers. Front equality and the
+/// saved full-budget runs are asserted here, in the run that produces
+/// the numbers — the speedup column never trades exactness.
+pub fn run_optimize_bench(quick: bool) -> OptimizeBench {
+    use crate::optimize::{self, OptimizeSetup};
+    use crate::space::{SearchSpace, TopoSpec};
+
+    let topos = if quick {
+        vec![TopoSpec::Mesh { w: 2, h: 2 }]
+    } else {
+        vec![TopoSpec::Mesh { w: 2, h: 2 }, TopoSpec::Mesh { w: 4, h: 4 }]
+    };
+    let space = SearchSpace {
+        topos,
+        pins: vec![1, 8],
+        clock_divs: vec![1],
+        buffer_depths: if quick { vec![8] } else { vec![4, 8] },
+        part_seeds: vec![1],
+        chips: 2,
+        pinned: Vec::new(),
+    };
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let window = if quick { 300 } else { 1_000 };
+    let setup = OptimizeSetup::new(space, scn, 0.1, window);
+
+    let mut seq_setup = setup.clone();
+    seq_setup.threads = 1;
+    let t = Instant::now();
+    let ex = optimize::exhaustive(&seq_setup).expect("optimize bench (exhaustive)");
+    let seq_s = t.elapsed().as_secs_f64();
+
+    let threads = fleet::default_threads().max(2);
+    let mut race_setup = setup;
+    race_setup.threads = threads;
+    let t = Instant::now();
+    let ra = optimize::race(&race_setup).expect("optimize bench (racing)");
+    let race_s = t.elapsed().as_secs_f64();
+
+    assert_eq!(
+        ex.front, ra.front,
+        "racing front diverged from exhaustive — the speedup would be meaningless"
+    );
+    assert!(
+        ra.full_runs < ex.full_runs,
+        "racing saved no full-budget runs ({} vs {})",
+        ra.full_runs,
+        ex.full_runs
+    );
+    let points = ex.space_points as f64;
+    OptimizeBench {
+        scenario: "uniform",
+        space_points: ex.space_points,
+        threads,
+        front_size: ex.front.len(),
+        exhaustive_full_runs: ex.full_runs,
+        racing_full_runs: ra.full_runs,
+        racing_probe_runs: ra.probe_runs,
+        racing_pruned: ra.pruned,
+        sequential_evals_per_sec: points / seq_s,
+        racing_evals_per_sec: points / race_s,
+        racing_speedup: seq_s / race_s,
+    }
+}
+
 /// Which `BENCH_noc.json` sections a bench invocation regenerates
-/// (`fabricflow bench --only points|multichip|sweep|serve|faults|bitsliced|trace`);
+/// (`fabricflow bench --only points|multichip|sweep|serve|faults|bitsliced|trace|optimize`);
 /// unselected sections are preserved from the existing file by
 /// [`merge_sections`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -365,6 +462,7 @@ pub struct BenchSelect {
     pub faults: bool,
     pub bitsliced: bool,
     pub trace: bool,
+    pub optimize: bool,
 }
 
 impl BenchSelect {
@@ -377,19 +475,24 @@ impl BenchSelect {
         faults: true,
         bitsliced: true,
         trace: true,
+        optimize: true,
+    };
+
+    /// No section — the base [`BenchSelect::parse`] builds on.
+    pub const NONE: BenchSelect = BenchSelect {
+        points: false,
+        multichip: false,
+        sweep: false,
+        serve: false,
+        faults: false,
+        bitsliced: false,
+        trace: false,
+        optimize: false,
     };
 
     /// Parse a comma-separated `--only` value.
     pub fn parse(s: &str) -> Option<BenchSelect> {
-        let mut sel = BenchSelect {
-            points: false,
-            multichip: false,
-            sweep: false,
-            serve: false,
-            faults: false,
-            bitsliced: false,
-            trace: false,
-        };
+        let mut sel = BenchSelect::NONE;
         for part in s.split(',') {
             match part.trim() {
                 "points" => sel.points = true,
@@ -399,6 +502,7 @@ impl BenchSelect {
                 "faults" => sel.faults = true,
                 "bitsliced" => sel.bitsliced = true,
                 "trace" => sel.trace = true,
+                "optimize" => sel.optimize = true,
                 _ => return None,
             }
         }
@@ -432,6 +536,9 @@ pub struct BenchReport {
     /// Trace-recorder overhead and the profile-guided placement win
     /// (None when the section was not run).
     pub trace: Option<TraceBench>,
+    /// Autopilot search throughput, exhaustive vs racing (None when the
+    /// section was not run).
+    pub optimize: Option<OptimizeBench>,
 }
 
 /// One replay; the timer starts AFTER `Network::new` so construction
@@ -949,7 +1056,8 @@ pub fn run_selected(quick: bool, sel: BenchSelect) -> BenchReport {
     let faults = sel.faults.then(|| run_faults_bench(quick));
     let bitsliced = sel.bitsliced.then(|| run_bitsliced_bench(quick));
     let trace = sel.trace.then(|| run_trace_bench(quick));
-    BenchReport { quick, points, multichip, sweep, serve, faults, bitsliced, trace }
+    let optimize = sel.optimize.then(|| run_optimize_bench(quick));
+    BenchReport { quick, points, multichip, sweep, serve, faults, bitsliced, trace, optimize }
 }
 
 impl BenchReport {
@@ -1127,10 +1235,42 @@ impl BenchReport {
                 let _ = writeln!(j, "    \"static_cycles\": {},", tr.static_cycles);
                 let _ = writeln!(j, "    \"guided_cycles\": {},", tr.guided_cycles);
                 let _ = writeln!(j, "    \"guided_speedup\": {:.2}", tr.guided_speedup);
+                let _ = writeln!(j, "  }},");
+            }
+            None => {
+                let _ = writeln!(j, "  \"trace\": null,");
+            }
+        }
+        match &self.optimize {
+            Some(op) => {
+                let _ = writeln!(j, "  \"optimize\": {{");
+                let _ = writeln!(j, "    \"scenario\": \"{}\",", op.scenario);
+                let _ = writeln!(j, "    \"space_points\": {},", op.space_points);
+                let _ = writeln!(j, "    \"threads\": {},", op.threads);
+                let _ = writeln!(j, "    \"front_size\": {},", op.front_size);
+                let _ = writeln!(
+                    j,
+                    "    \"exhaustive_full_runs\": {},",
+                    op.exhaustive_full_runs
+                );
+                let _ = writeln!(j, "    \"racing_full_runs\": {},", op.racing_full_runs);
+                let _ = writeln!(j, "    \"racing_probe_runs\": {},", op.racing_probe_runs);
+                let _ = writeln!(j, "    \"racing_pruned\": {},", op.racing_pruned);
+                let _ = writeln!(
+                    j,
+                    "    \"sequential_evals_per_sec\": {:.1},",
+                    op.sequential_evals_per_sec
+                );
+                let _ = writeln!(
+                    j,
+                    "    \"racing_evals_per_sec\": {:.1},",
+                    op.racing_evals_per_sec
+                );
+                let _ = writeln!(j, "    \"racing_speedup\": {:.2}", op.racing_speedup);
                 let _ = writeln!(j, "  }}");
             }
             None => {
-                let _ = writeln!(j, "  \"trace\": null");
+                let _ = writeln!(j, "  \"optimize\": null");
             }
         }
         let _ = writeln!(j, "}}");
@@ -1256,6 +1396,30 @@ impl BenchReport {
                 tr.static_cycles, tr.guided_cycles, tr.guided_speedup
             );
         }
+        if let Some(op) = &self.optimize {
+            let _ = writeln!(
+                s,
+                "Design-space autopilot ({}, {} points; racing front asserted identical to exhaustive)",
+                op.scenario, op.space_points
+            );
+            let _ = writeln!(
+                s,
+                "  {:>9.1} pts/s exhaustive@1T {:>9.1} pts/s racing@{}T  => {:.2}x",
+                op.sequential_evals_per_sec,
+                op.racing_evals_per_sec,
+                op.threads,
+                op.racing_speedup
+            );
+            let _ = writeln!(
+                s,
+                "  full runs {} -> {} ({} probes, {} pruned), front {}",
+                op.exhaustive_full_runs,
+                op.racing_full_runs,
+                op.racing_probe_runs,
+                op.racing_pruned,
+                op.front_size
+            );
+        }
         s
     }
 }
@@ -1329,6 +1493,7 @@ pub fn merge_sections(old_json: &str, fresh: &BenchReport, sel: BenchSelect) -> 
         ("faults", sel.faults),
         ("bitsliced", sel.bitsliced),
         ("trace", sel.trace),
+        ("optimize", sel.optimize),
     ] {
         if selected {
             continue;
@@ -1384,6 +1549,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"saturated-mesh8x8/uniform\""));
@@ -1394,7 +1560,8 @@ mod tests {
         assert!(json.contains("\"serve\": null,"));
         assert!(json.contains("\"faults\": null,"));
         assert!(json.contains("\"bitsliced\": null,"));
-        assert!(json.contains("\"trace\": null"));
+        assert!(json.contains("\"trace\": null,"));
+        assert!(json.contains("\"optimize\": null"));
         assert!(report.render_table().contains("saturated-mesh8x8"));
     }
 
@@ -1438,6 +1605,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"label\": \"bmvm-ring8/2fpga-8pin\""));
@@ -1533,6 +1701,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"sweep\": {"));
@@ -1552,6 +1721,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"serve\": {"));
@@ -1574,6 +1744,7 @@ mod tests {
             faults: Some(faults_stub()),
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"faults\": {"));
@@ -1589,15 +1760,7 @@ mod tests {
 
     #[test]
     fn bench_select_parses_only_flags() {
-        let none = BenchSelect {
-            points: false,
-            multichip: false,
-            sweep: false,
-            serve: false,
-            faults: false,
-            bitsliced: false,
-            trace: false,
-        };
+        let none = BenchSelect::NONE;
         assert_eq!(BenchSelect::parse("sweep"), Some(BenchSelect { sweep: true, ..none }));
         assert_eq!(BenchSelect::parse("serve"), Some(BenchSelect { serve: true, ..none }));
         assert_eq!(BenchSelect::parse("faults"), Some(BenchSelect { faults: true, ..none }));
@@ -1607,15 +1770,19 @@ mod tests {
         );
         assert_eq!(BenchSelect::parse("trace"), Some(BenchSelect { trace: true, ..none }));
         assert_eq!(
+            BenchSelect::parse("optimize"),
+            Some(BenchSelect { optimize: true, ..none })
+        );
+        assert_eq!(
             BenchSelect::parse("points,multichip"),
             Some(BenchSelect { points: true, multichip: true, ..none })
         );
         assert_eq!(
-            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced,trace"),
+            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced,trace,optimize"),
             Some(BenchSelect::ALL)
         );
         assert_ne!(
-            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced"),
+            BenchSelect::parse("points,multichip,sweep,serve,faults,bitsliced,trace"),
             Some(BenchSelect::ALL)
         );
         assert!(BenchSelect::ALL.is_all());
@@ -1648,6 +1815,7 @@ mod tests {
             faults: Some(faults_stub()),
             bitsliced: None,
             trace: None,
+            optimize: None,
         }
         .to_json();
         // A fresh sweep-only run: points/multichip empty, new sweep.
@@ -1662,16 +1830,9 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
-        let sel = BenchSelect {
-            points: false,
-            multichip: false,
-            sweep: true,
-            serve: false,
-            faults: false,
-            bitsliced: false,
-            trace: false,
-        };
+        let sel = BenchSelect { sweep: true, ..BenchSelect::NONE };
         let merged = merge_sections(&old, &fresh, sel);
         // Old points preserved verbatim, new sweep spliced in.
         let (os, oe) = section_span(&old, "points").unwrap();
@@ -1686,15 +1847,7 @@ mod tests {
         assert_eq!(&old[os..oe], &merged[ms..me], "serve section changed");
         // And the other way: regenerating points keeps the old sweep,
         // serve, and faults sections.
-        let sel = BenchSelect {
-            points: true,
-            multichip: false,
-            sweep: false,
-            serve: false,
-            faults: false,
-            bitsliced: false,
-            trace: false,
-        };
+        let sel = BenchSelect { points: true, ..BenchSelect::NONE };
         let fresh_points = BenchReport {
             quick: true,
             points: Vec::new(),
@@ -1704,6 +1857,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let merged = merge_sections(&old, &fresh_points, sel);
         assert!(merged.contains("\"parallel_speedup\": 3.10"));
@@ -1804,6 +1958,7 @@ mod tests {
             faults: Some(faults_stub()),
             bitsliced: Some(bitsliced_stub()),
             trace: None,
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"bitsliced\": {"));
@@ -1850,6 +2005,7 @@ mod tests {
             faults: None,
             bitsliced: Some(bitsliced_stub()),
             trace: None,
+            optimize: None,
         }
         .to_json();
         let mut newer = bitsliced_stub();
@@ -1863,6 +2019,7 @@ mod tests {
             faults: None,
             bitsliced: Some(newer),
             trace: None,
+            optimize: None,
         };
         // bitsliced selected: the fresh section wins.
         let sel = BenchSelect::parse("bitsliced").unwrap();
@@ -1900,6 +2057,7 @@ mod tests {
             faults: None,
             bitsliced: Some(bitsliced_stub()),
             trace: Some(trace_stub()),
+            optimize: None,
         };
         let json = report.to_json();
         assert!(json.contains("\"trace\": {"));
@@ -1941,6 +2099,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: Some(trace_stub()),
+            optimize: None,
         }
         .to_json();
         let fresh = BenchReport {
@@ -1952,6 +2111,7 @@ mod tests {
             faults: None,
             bitsliced: None,
             trace: None,
+            optimize: None,
         };
         let sel = BenchSelect::parse("points").unwrap();
         let merged = merge_sections(&old, &fresh, sel);
@@ -1959,6 +2119,94 @@ mod tests {
         let (ms, me) = section_span(&merged, "trace").unwrap();
         assert_eq!(&old[os..oe], &merged[ms..me], "trace section changed");
         assert!(merged.contains("\"guided_speedup\": 1.60"));
+    }
+
+    fn optimize_stub() -> OptimizeBench {
+        OptimizeBench {
+            scenario: "uniform",
+            space_points: 8,
+            threads: 4,
+            front_size: 2,
+            exhaustive_full_runs: 8,
+            racing_full_runs: 0,
+            racing_probe_runs: 12,
+            racing_pruned: 2,
+            sequential_evals_per_sec: 20.0,
+            racing_evals_per_sec: 90.0,
+            racing_speedup: 4.5,
+        }
+    }
+
+    #[test]
+    fn optimize_section_serializes_and_renders() {
+        let report = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: None,
+            bitsliced: None,
+            trace: Some(trace_stub()),
+            optimize: Some(optimize_stub()),
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"optimize\": {"));
+        assert!(json.contains("\"racing_speedup\": 4.50"));
+        assert!(json.contains("\"exhaustive_full_runs\": 8,"));
+        // The trace section before it must now carry a trailing comma.
+        assert!(json.contains("  },\n  \"optimize\""));
+        let table = report.render_table();
+        assert!(table.contains("Design-space autopilot"));
+        assert!(table.contains("pruned"));
+    }
+
+    #[test]
+    fn optimize_bench_runs_tiny() {
+        // A real quick optimize bench: front equality and the saved
+        // full-budget runs are asserted inside the run; here we check
+        // the section's shape. Quick space: mesh2x2 × pins {1,8}.
+        let op = run_optimize_bench(true);
+        assert_eq!(op.scenario, "uniform");
+        assert_eq!(op.space_points, 2);
+        assert!(op.front_size >= 1);
+        assert_eq!(op.exhaustive_full_runs, 2);
+        assert!(op.racing_full_runs < op.exhaustive_full_runs);
+        assert!(op.sequential_evals_per_sec > 0.0);
+        assert!(op.racing_evals_per_sec > 0.0);
+    }
+
+    #[test]
+    fn merge_preserves_an_unselected_optimize_section() {
+        let old = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: None,
+            bitsliced: None,
+            trace: None,
+            optimize: Some(optimize_stub()),
+        }
+        .to_json();
+        let fresh = BenchReport {
+            quick: true,
+            points: Vec::new(),
+            multichip: Vec::new(),
+            sweep: None,
+            serve: None,
+            faults: None,
+            bitsliced: None,
+            trace: None,
+            optimize: None,
+        };
+        let sel = BenchSelect { points: true, ..BenchSelect::NONE };
+        let merged = merge_sections(&old, &fresh, sel);
+        let (os, oe) = section_span(&old, "optimize").unwrap();
+        let (ms, me) = section_span(&merged, "optimize").unwrap();
+        assert_eq!(&old[os..oe], &merged[ms..me], "optimize section changed");
+        assert!(merged.contains("\"racing_speedup\": 4.50"));
     }
 
     #[test]

@@ -53,6 +53,29 @@ impl Resources {
     pub fn bram36(&self) -> u64 {
         div_ceil(self.bram_bits as usize, 36 * 1024) as u64
     }
+
+    /// Componentwise `<=`: this estimate fits inside `other`'s envelope
+    /// in every resource class. This is the partial order the optimizer's
+    /// Pareto front uses for its resource axis — `a.fits_within(&b) &&
+    /// a != b` means `a` is strictly cheaper in at least one class and
+    /// more expensive in none.
+    pub fn fits_within(&self, other: &Resources) -> bool {
+        self.regs <= other.regs
+            && self.luts <= other.luts
+            && self.dsp <= other.dsp
+            && self.bram_bits <= other.bram_bits
+    }
+
+    /// Componentwise maximum — the per-FPGA envelope of a multi-chip
+    /// partition is the max over chips, not the sum.
+    pub fn max_with(&self, other: &Resources) -> Resources {
+        Resources {
+            regs: self.regs.max(other.regs),
+            luts: self.luts.max(other.luts),
+            dsp: self.dsp.max(other.dsp),
+            bram_bits: self.bram_bits.max(other.bram_bits),
+        }
+    }
 }
 
 impl Add for Resources {
@@ -317,6 +340,27 @@ mod tests {
         assert!(d.fits(Resources::new(1000, 1000)));
         assert!(!d.fits(Resources::new(1000, 1000).with_dsp(200)));
         assert!(!d.fits(Resources::new(23_000, 0)));
+    }
+
+    #[test]
+    fn fits_within_is_componentwise() {
+        let small = Resources::new(10, 20).with_dsp(1).with_bram_bits(100);
+        let big = Resources::new(10, 25).with_dsp(1).with_bram_bits(100);
+        assert!(small.fits_within(&big));
+        assert!(small.fits_within(&small));
+        assert!(!big.fits_within(&small));
+        // One axis over is enough to fail.
+        assert!(!small.with_dsp(2).fits_within(&big));
+    }
+
+    #[test]
+    fn max_with_is_envelope() {
+        let a = Resources::new(10, 5).with_bram_bits(64);
+        let b = Resources::new(3, 9).with_dsp(2);
+        let m = a.max_with(&b);
+        assert_eq!(m, Resources::new(10, 9).with_dsp(2).with_bram_bits(64));
+        assert!(a.fits_within(&m));
+        assert!(b.fits_within(&m));
     }
 
     #[test]

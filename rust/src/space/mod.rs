@@ -1,0 +1,787 @@
+//! Typed design-space axes for the autopilot (`fabricflow optimize`).
+//!
+//! The paper frames the framework as *semi-automated*: a human picks a
+//! CONNECT topology, link pins, clock divider, buffer depth, and a
+//! partition, then re-runs until the case study fits and performs. The
+//! fleet sweep (PR 5) brute-forces grids, but the grid itself is still
+//! an ad-hoc tuple baked into `perf.rs` / `scenario.rs::SweepGrid`. This
+//! module generalizes those into shared, typed axes:
+//!
+//! * [`TopoSpec`] — an exactly re-encodable topology point (`mesh4x4`),
+//!   unlike [`Topology`] which carries derived tables for `Custom`.
+//! * [`Axis`] — one named dimension of the search, used for uniform
+//!   validation (non-empty, duplicate-free, in-range).
+//! * [`SearchSpace`] — the cross product, enumerated in a canonical
+//!   deterministic order ([`SearchSpace::points`]).
+//! * [`ConfigPoint`] — one coordinate, with **exact encode/decode**
+//!   (`mesh4x4/p8/d1/b8/s1/c2` round-trips) and lossless lowering to a
+//!   [`FlowBuilder`] configuration ([`ConfigPoint::apply_to`],
+//!   [`ConfigPoint::builder_code`]).
+//! * [`ConfigEstimate`] — the static (no-simulation) cost coordinates of
+//!   a point: per-FPGA resource envelope from [`crate::resources`] and
+//!   wire cost in pins. Monotone in routers, pins, and buffer depth —
+//!   asserted by the tests below — so Pareto pruning on these axes is
+//!   trustworthy.
+//!
+//! `rust/src/optimize/` races points of a [`SearchSpace`] against each
+//! other; this module owns everything that is true of a point *before*
+//! any simulation runs.
+
+use std::fmt;
+
+use crate::noc::topology::TopoGraph;
+use crate::noc::{NocConfig, Topology};
+use crate::partition::{Partition, PartitionError};
+use crate::resources::Resources;
+use crate::serdes::SerdesConfig;
+
+/// A topology point that re-encodes exactly: unlike [`Topology`], every
+/// variant is a pure value (no derived tables), so
+/// `TopoSpec::decode(&spec.encode())` is the identity. The optimizer
+/// searches over these and lowers to [`Topology`] only at build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TopoSpec {
+    /// `n` routers in a cycle (`ring8`).
+    Ring(usize),
+    /// `w × h` mesh (`mesh4x4`).
+    Mesh { w: usize, h: usize },
+    /// `w × h` torus (`torus4x4`).
+    Torus { w: usize, h: usize },
+}
+
+impl TopoSpec {
+    /// Lower to the simulator's [`Topology`].
+    pub fn build_topology(&self) -> Topology {
+        match *self {
+            TopoSpec::Ring(n) => Topology::Ring(n),
+            TopoSpec::Mesh { w, h } => Topology::Mesh { w, h },
+            TopoSpec::Torus { w, h } => Topology::Torus { w, h },
+        }
+    }
+
+    /// Endpoints (= routers for these families: one endpoint per router).
+    pub fn n_endpoints(&self) -> usize {
+        match *self {
+            TopoSpec::Ring(n) => n,
+            TopoSpec::Mesh { w, h } | TopoSpec::Torus { w, h } => w * h,
+        }
+    }
+
+    /// Routers (identical to endpoints for these families; named
+    /// separately because partitions assign *routers*).
+    pub fn n_routers(&self) -> usize {
+        self.n_endpoints()
+    }
+
+    /// Stable wire name: `ring8`, `mesh4x4`, `torus2x8`.
+    pub fn encode(&self) -> String {
+        match *self {
+            TopoSpec::Ring(n) => format!("ring{n}"),
+            TopoSpec::Mesh { w, h } => format!("mesh{w}x{h}"),
+            TopoSpec::Torus { w, h } => format!("torus{w}x{h}"),
+        }
+    }
+
+    /// Inverse of [`TopoSpec::encode`].
+    pub fn decode(s: &str) -> Result<TopoSpec, SpaceError> {
+        let bad = || SpaceError::BadTopo(s.to_string());
+        if let Some(rest) = s.strip_prefix("ring") {
+            let n: usize = rest.parse().map_err(|_| bad())?;
+            if n < 2 {
+                return Err(bad());
+            }
+            return Ok(TopoSpec::Ring(n));
+        }
+        let (family, rest) = if let Some(rest) = s.strip_prefix("mesh") {
+            ("mesh", rest)
+        } else if let Some(rest) = s.strip_prefix("torus") {
+            ("torus", rest)
+        } else {
+            return Err(bad());
+        };
+        let (w, h) = rest.split_once('x').ok_or_else(bad)?;
+        let w: usize = w.parse().map_err(|_| bad())?;
+        let h: usize = h.parse().map_err(|_| bad())?;
+        if w * h < 2 {
+            return Err(bad());
+        }
+        Ok(match family {
+            "mesh" => TopoSpec::Mesh { w, h },
+            _ => TopoSpec::Torus { w, h },
+        })
+    }
+
+    /// The Rust expression building this topology, for emitted
+    /// `FlowBuilder` code.
+    pub fn code(&self) -> String {
+        match *self {
+            TopoSpec::Ring(n) => format!("Topology::Ring({n})"),
+            TopoSpec::Mesh { w, h } => format!("Topology::Mesh {{ w: {w}, h: {h} }}"),
+            TopoSpec::Torus { w, h } => format!("Topology::Torus {{ w: {w}, h: {h} }}"),
+        }
+    }
+}
+
+impl fmt::Display for TopoSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.encode())
+    }
+}
+
+/// One named dimension of a [`SearchSpace`], in a uniform shape so
+/// validation (non-empty, duplicate-free, value ranges) is written once.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// Topology family × size.
+    Topo(Vec<TopoSpec>),
+    /// Inter-FPGA link width in pins ([`SerdesConfig::pins`]).
+    Pins(Vec<u32>),
+    /// Off-chip clock divider ([`SerdesConfig::clock_div`]).
+    ClockDiv(Vec<u32>),
+    /// Router input-VC buffer depth ([`NocConfig::buffer_depth`]).
+    BufferDepth(Vec<usize>),
+    /// Seed of the bisection placer ([`Partition::balanced`]) — distinct
+    /// seeds are distinct (deterministic) partitions of the same cut.
+    PartSeed(Vec<u64>),
+}
+
+impl Axis {
+    /// Axis name used in errors and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Axis::Topo(_) => "topos",
+            Axis::Pins(_) => "pins",
+            Axis::ClockDiv(_) => "clock-divs",
+            Axis::BufferDepth(_) => "depths",
+            Axis::PartSeed(_) => "part-seeds",
+        }
+    }
+
+    /// Number of points along the axis.
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Topo(v) => v.len(),
+            Axis::Pins(v) => v.len(),
+            Axis::ClockDiv(v) => v.len(),
+            Axis::BufferDepth(v) => v.len(),
+            Axis::PartSeed(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Display strings of the axis values, for duplicate detection and
+    /// error messages.
+    fn values(&self) -> Vec<String> {
+        match self {
+            Axis::Topo(v) => v.iter().map(|t| t.encode()).collect(),
+            Axis::Pins(v) => v.iter().map(|x| x.to_string()).collect(),
+            Axis::ClockDiv(v) => v.iter().map(|x| x.to_string()).collect(),
+            Axis::BufferDepth(v) => v.iter().map(|x| x.to_string()).collect(),
+            Axis::PartSeed(v) => v.iter().map(|x| x.to_string()).collect(),
+        }
+    }
+}
+
+/// A malformed [`SearchSpace`] or [`ConfigPoint`] encoding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpaceError {
+    /// Unparseable topology name.
+    BadTopo(String),
+    /// An axis has no values.
+    EmptyAxis(&'static str),
+    /// An axis lists the same value twice (would silently duplicate
+    /// evaluations).
+    DuplicateValue { axis: &'static str, value: String },
+    /// A hardware axis value that must be ≥ 1 is 0.
+    ZeroValue(&'static str),
+    /// Buffer depth exceeds the flit arena's 16-bit ring index.
+    DepthTooLarge(usize),
+    /// A topology too small to host a scenario (scenarios need ≥ 2
+    /// endpoints) or to split across `chips` FPGAs.
+    TopoTooSmall { topo: String, chips: usize },
+    /// A wire axis (pins / clock-divs / part-seeds) has multiple values
+    /// but the search is monolithic — the axis would be a no-op.
+    WireAxisOnMono(&'static str),
+    /// A pinned-pair router index outside some topology of the space.
+    PinOutOfRange { router: usize, topo: String },
+    /// Unparseable [`ConfigPoint::encode`] string.
+    BadPoint(String),
+}
+
+impl fmt::Display for SpaceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpaceError::BadTopo(s) => {
+                write!(f, "bad topology '{s}' (expected ringN, meshWxH, or torusWxH)")
+            }
+            SpaceError::EmptyAxis(a) => write!(f, "axis --{a} has no values"),
+            SpaceError::DuplicateValue { axis, value } => {
+                write!(f, "axis --{axis} lists '{value}' twice")
+            }
+            SpaceError::ZeroValue(a) => write!(f, "axis --{a} values must be >= 1"),
+            SpaceError::DepthTooLarge(d) => {
+                write!(f, "buffer depth {d} exceeds the 16-bit ring index")
+            }
+            SpaceError::TopoTooSmall { topo, chips } => {
+                write!(f, "topology '{topo}' is too small (needs >= 2 endpoints and >= {chips} routers)")
+            }
+            SpaceError::WireAxisOnMono(a) => {
+                write!(f, "axis --{a} has multiple values but --chips is 1 (wire axes need --chips >= 2)")
+            }
+            SpaceError::PinOutOfRange { router, topo } => {
+                write!(f, "pinned router {router} out of range for topology '{topo}'")
+            }
+            SpaceError::BadPoint(s) => write!(f, "bad config point '{s}'"),
+        }
+    }
+}
+
+impl std::error::Error for SpaceError {}
+
+/// The cross product of the autopilot's axes. [`SearchSpace::points`]
+/// enumerates it in a canonical order (topology-major, then pins, clock
+/// div, buffer depth, partition seed) so every consumer — exhaustive
+/// evaluation, racing, any thread count — sees the identical indexing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SearchSpace {
+    pub topos: Vec<TopoSpec>,
+    pub pins: Vec<u32>,
+    pub clock_divs: Vec<u32>,
+    pub buffer_depths: Vec<usize>,
+    pub part_seeds: Vec<u64>,
+    /// FPGAs to split across; 1 = monolithic (wire axes collapse).
+    pub chips: usize,
+    /// Router pairs that must share a chip
+    /// ([`Partition::balanced_pinned`] constraints), applied to every
+    /// point with `chips >= 2`.
+    pub pinned: Vec<(usize, usize)>,
+}
+
+impl Default for SearchSpace {
+    /// The paper's §VI-B defaults as a 1-point space: mesh4x4, 8 pins,
+    /// same-clock links, depth-8 buffers, monolithic.
+    fn default() -> Self {
+        SearchSpace {
+            topos: vec![TopoSpec::Mesh { w: 4, h: 4 }],
+            pins: vec![8],
+            clock_divs: vec![1],
+            buffer_depths: vec![8],
+            part_seeds: vec![1],
+            chips: 1,
+            pinned: Vec::new(),
+        }
+    }
+}
+
+impl SearchSpace {
+    /// The axes in canonical (enumeration) order.
+    pub fn axes(&self) -> [Axis; 5] {
+        [
+            Axis::Topo(self.topos.clone()),
+            Axis::Pins(self.pins.clone()),
+            Axis::ClockDiv(self.clock_divs.clone()),
+            Axis::BufferDepth(self.buffer_depths.clone()),
+            Axis::PartSeed(self.part_seeds.clone()),
+        ]
+    }
+
+    /// Validate every axis: non-empty, duplicate-free, hardware values
+    /// ≥ 1, topologies big enough for scenarios and for `chips`-way
+    /// splits, pinned routers in range everywhere, and wire axes
+    /// collapsed to singletons when monolithic.
+    pub fn validate(&self) -> Result<(), SpaceError> {
+        for axis in self.axes() {
+            if axis.is_empty() {
+                return Err(SpaceError::EmptyAxis(axis.name()));
+            }
+            let values = axis.values();
+            for (i, v) in values.iter().enumerate() {
+                if values[..i].contains(v) {
+                    return Err(SpaceError::DuplicateValue {
+                        axis: axis.name(),
+                        value: v.clone(),
+                    });
+                }
+            }
+        }
+        if self.pins.contains(&0) {
+            return Err(SpaceError::ZeroValue("pins"));
+        }
+        if self.clock_divs.contains(&0) {
+            return Err(SpaceError::ZeroValue("clock-divs"));
+        }
+        if self.buffer_depths.contains(&0) {
+            return Err(SpaceError::ZeroValue("depths"));
+        }
+        if let Some(&d) = self.buffer_depths.iter().find(|&&d| d > u16::MAX as usize) {
+            return Err(SpaceError::DepthTooLarge(d));
+        }
+        for t in &self.topos {
+            if t.n_endpoints() < 2 || t.n_routers() < self.chips.max(1) {
+                return Err(SpaceError::TopoTooSmall {
+                    topo: t.encode(),
+                    chips: self.chips.max(1),
+                });
+            }
+            for &(a, b) in &self.pinned {
+                for r in [a, b] {
+                    if r >= t.n_routers() {
+                        return Err(SpaceError::PinOutOfRange { router: r, topo: t.encode() });
+                    }
+                }
+            }
+        }
+        if self.chips < 2 {
+            for (name, len) in [
+                ("pins", self.pins.len()),
+                ("clock-divs", self.clock_divs.len()),
+                ("part-seeds", self.part_seeds.len()),
+            ] {
+                if len > 1 {
+                    return Err(SpaceError::WireAxisOnMono(name));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Size of the cross product.
+    pub fn len(&self) -> usize {
+        self.topos.len()
+            * self.pins.len()
+            * self.clock_divs.len()
+            * self.buffer_depths.len()
+            * self.part_seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enumerate every [`ConfigPoint`] in canonical order.
+    pub fn points(&self) -> Vec<ConfigPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for &topo in &self.topos {
+            for &pins in &self.pins {
+                for &clock_div in &self.clock_divs {
+                    for &buffer_depth in &self.buffer_depths {
+                        for &part_seed in &self.part_seeds {
+                            out.push(ConfigPoint {
+                                topo,
+                                pins,
+                                clock_div,
+                                buffer_depth,
+                                part_seed,
+                                chips: self.chips.max(1),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One coordinate of a [`SearchSpace`]: everything needed to build the
+/// fabric (and partition, when multi-chip) exactly — encode/decode and
+/// the lowering to [`crate::flow::FlowBuilder`] are lossless.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConfigPoint {
+    pub topo: TopoSpec,
+    pub pins: u32,
+    pub clock_div: u32,
+    pub buffer_depth: usize,
+    pub part_seed: u64,
+    /// FPGAs; 1 = monolithic (pins/clock_div/part_seed are inert).
+    pub chips: usize,
+}
+
+impl ConfigPoint {
+    /// The point's [`NocConfig`]: `base` with this point's buffer depth.
+    pub fn noc_config(&self, base: &NocConfig) -> NocConfig {
+        NocConfig { buffer_depth: self.buffer_depth, ..*base }
+    }
+
+    /// The point's wire config. The TX buffer mirrors the router flit
+    /// buffer depth (the repo-wide default convention).
+    pub fn serdes(&self) -> SerdesConfig {
+        SerdesConfig {
+            pins: self.pins,
+            clock_div: self.clock_div,
+            tx_buffer: self.buffer_depth,
+        }
+    }
+
+    /// The point's partition: `None` when monolithic, otherwise the
+    /// seeded bisection placer (pinned-constrained when `pinned` is
+    /// non-empty). Deterministic in `(topo, chips, part_seed, pinned)`.
+    pub fn partition(
+        &self,
+        graph: &TopoGraph,
+        pinned: &[(usize, usize)],
+    ) -> Result<Option<Partition>, PartitionError> {
+        if self.chips < 2 {
+            return Ok(None);
+        }
+        if pinned.is_empty() {
+            Ok(Some(Partition::balanced(graph, self.chips, self.part_seed)))
+        } else {
+            Partition::balanced_pinned(graph, self.chips, self.part_seed, pinned).map(Some)
+        }
+    }
+
+    /// Stable wire name: `mesh4x4/p8/d1/b8/s1/c2`.
+    pub fn encode(&self) -> String {
+        format!(
+            "{}/p{}/d{}/b{}/s{}/c{}",
+            self.topo.encode(),
+            self.pins,
+            self.clock_div,
+            self.buffer_depth,
+            self.part_seed,
+            self.chips
+        )
+    }
+
+    /// Inverse of [`ConfigPoint::encode`].
+    pub fn decode(s: &str) -> Result<ConfigPoint, SpaceError> {
+        let bad = || SpaceError::BadPoint(s.to_string());
+        let mut parts = s.split('/');
+        let topo = TopoSpec::decode(parts.next().ok_or_else(bad)?)?;
+        let mut num = |prefix: &str| -> Result<u64, SpaceError> {
+            let p = parts.next().ok_or_else(bad)?;
+            p.strip_prefix(prefix).ok_or_else(bad)?.parse().map_err(|_| bad())
+        };
+        let pins = num("p")? as u32;
+        let clock_div = num("d")? as u32;
+        let buffer_depth = num("b")? as usize;
+        let part_seed = num("s")?;
+        let chips = num("c")? as usize;
+        if parts.next().is_some() {
+            return Err(bad());
+        }
+        Ok(ConfigPoint { topo, pins, clock_div, buffer_depth, part_seed, chips })
+    }
+
+    /// Lower the point onto a [`crate::flow::FlowBuilder`]: topology,
+    /// NoC config, and — when multi-chip — the seeded partition plus
+    /// serializing wire channels. The builder's PEs/taps/channels are
+    /// untouched; this is exactly the knob set the autopilot searches.
+    pub fn apply_to(
+        &self,
+        fb: &mut crate::flow::FlowBuilder,
+        base: &NocConfig,
+        pinned: &[(usize, usize)],
+    ) -> Result<(), PartitionError> {
+        fb.topology(self.topo.build_topology());
+        fb.noc(self.noc_config(base));
+        if self.chips >= 2 {
+            let graph = self.topo.build_topology().build();
+            let part = self
+                .partition(&graph, pinned)?
+                .expect("chips >= 2 yields a partition");
+            fb.partition(part);
+            fb.multichip(self.serdes());
+        }
+        Ok(())
+    }
+
+    /// Emit the `FlowBuilder` call chain reproducing this point, for
+    /// `fabricflow optimize`'s "winning config as code" output.
+    pub fn builder_code(&self, base: &NocConfig) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("fb.topology({});\n", self.topo.code()));
+        out.push_str(&format!(
+            "fb.noc(NocConfig {{ buffer_depth: {}, ..NocConfig::paper() }});\n",
+            self.noc_config(base).buffer_depth
+        ));
+        if self.chips >= 2 {
+            out.push_str(&format!("fb.seed({});\n", self.part_seed));
+            out.push_str(&format!("fb.auto_partition({});\n", self.chips));
+            out.push_str(&format!(
+                "fb.multichip(SerdesConfig {{ pins: {}, clock_div: {}, tx_buffer: {} }});\n",
+                self.pins, self.clock_div, self.buffer_depth
+            ));
+        }
+        out
+    }
+
+    /// JSON object of the point, for `fabricflow optimize --json` and
+    /// the BENCH section.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"topo\": \"{}\", \"pins\": {}, \"clock_div\": {}, \"buffer_depth\": {}, \"part_seed\": {}, \"chips\": {}}}",
+            self.topo.encode(),
+            self.pins,
+            self.clock_div,
+            self.buffer_depth,
+            self.part_seed,
+            self.chips
+        )
+    }
+
+    /// Static cost coordinates: the per-FPGA resource **envelope**
+    /// (componentwise max over chips — each FPGA must individually fit)
+    /// and the wire cost in total pins across all chips. Monotone: more
+    /// routers, wider pins, or deeper buffers never estimate fewer
+    /// LUTs/regs/BRAM bits (asserted by this module's tests), which is
+    /// what makes Pareto pruning on these axes sound.
+    pub fn estimate(
+        &self,
+        graph: &TopoGraph,
+        partition: Option<&Partition>,
+        base: &NocConfig,
+    ) -> ConfigEstimate {
+        let cfg = self.noc_config(base);
+        match partition {
+            None => ConfigEstimate {
+                per_fpga: graph.router_resources(&cfg),
+                wire_pins: 0,
+                cut_links: 0,
+            },
+            Some(part) => {
+                let serdes = self.serdes();
+                let per_chip = part.noc_resources_per_fpga(graph, &cfg, &serdes);
+                let per_fpga = per_chip
+                    .iter()
+                    .fold(Resources::ZERO, |acc, r| acc.max_with(r));
+                let wire_pins =
+                    part.pins_per_fpga(graph, &serdes).iter().map(|&p| p as u64).sum();
+                ConfigEstimate {
+                    per_fpga,
+                    wire_pins,
+                    cut_links: part.cut_links(graph).len(),
+                }
+            }
+        }
+    }
+}
+
+impl fmt::Display for ConfigPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.encode())
+    }
+}
+
+/// Static cost coordinates of a [`ConfigPoint`] (everything except
+/// completion cycles, which need a simulation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ConfigEstimate {
+    /// Componentwise max over chips of the NoC+SERDES cost — the
+    /// envelope every FPGA of the design must fit.
+    pub per_fpga: Resources,
+    /// Total FPGA pins committed to inter-chip wires (0 when
+    /// monolithic).
+    pub wire_pins: u64,
+    /// Inter-chip links cut by the partition.
+    pub cut_links: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_chip_space() -> SearchSpace {
+        SearchSpace {
+            topos: vec![TopoSpec::Mesh { w: 2, h: 2 }, TopoSpec::Mesh { w: 4, h: 4 }],
+            pins: vec![1, 8],
+            clock_divs: vec![1],
+            buffer_depths: vec![4, 8],
+            part_seeds: vec![1],
+            chips: 2,
+            pinned: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn topo_spec_round_trips() {
+        for spec in [
+            TopoSpec::Ring(8),
+            TopoSpec::Mesh { w: 2, h: 2 },
+            TopoSpec::Mesh { w: 5, h: 3 },
+            TopoSpec::Torus { w: 4, h: 4 },
+        ] {
+            assert_eq!(TopoSpec::decode(&spec.encode()), Ok(spec));
+        }
+        assert!(TopoSpec::decode("mesh4").is_err());
+        assert!(TopoSpec::decode("ring1").is_err());
+        assert!(TopoSpec::decode("hypercube8").is_err());
+    }
+
+    #[test]
+    fn config_point_round_trips() {
+        for p in two_chip_space().points() {
+            assert_eq!(ConfigPoint::decode(&p.encode()), Ok(p));
+        }
+        assert!(ConfigPoint::decode("mesh4x4/p8/d1").is_err());
+        assert!(ConfigPoint::decode("mesh4x4/p8/d1/b8/s1/c2/x9").is_err());
+    }
+
+    #[test]
+    fn points_enumerate_the_full_product_in_canonical_order() {
+        let space = two_chip_space();
+        let points = space.points();
+        assert_eq!(points.len(), space.len());
+        assert_eq!(points.len(), 2 * 2 * 1 * 2 * 1);
+        // Topology-major: first half all mesh2x2, second half mesh4x4.
+        assert!(points[..4].iter().all(|p| p.topo == TopoSpec::Mesh { w: 2, h: 2 }));
+        assert!(points[4..].iter().all(|p| p.topo == TopoSpec::Mesh { w: 4, h: 4 }));
+        // Deterministic: the same space enumerates identically.
+        assert_eq!(points, two_chip_space().points());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_spaces() {
+        let ok = two_chip_space();
+        assert_eq!(ok.validate(), Ok(()));
+
+        let mut empty = ok.clone();
+        empty.pins.clear();
+        assert_eq!(empty.validate(), Err(SpaceError::EmptyAxis("pins")));
+
+        let mut dup = ok.clone();
+        dup.pins = vec![8, 8];
+        assert_eq!(
+            dup.validate(),
+            Err(SpaceError::DuplicateValue { axis: "pins", value: "8".into() })
+        );
+
+        let mut zero = ok.clone();
+        zero.clock_divs = vec![0];
+        assert_eq!(zero.validate(), Err(SpaceError::ZeroValue("clock-divs")));
+
+        let mut mono = ok.clone();
+        mono.chips = 1;
+        assert_eq!(mono.validate(), Err(SpaceError::WireAxisOnMono("pins")));
+
+        let mut pin = ok.clone();
+        pin.pinned = vec![(0, 99)];
+        assert!(matches!(pin.validate(), Err(SpaceError::PinOutOfRange { router: 99, .. })));
+
+        let mut small = ok;
+        small.topos = vec![TopoSpec::Ring(2)];
+        small.chips = 3;
+        assert!(matches!(small.validate(), Err(SpaceError::TopoTooSmall { .. })));
+    }
+
+    #[test]
+    fn estimate_is_monotone_in_routers() {
+        let base = NocConfig::paper();
+        let mk = |spec: TopoSpec| {
+            let point = ConfigPoint {
+                topo: spec,
+                pins: 8,
+                clock_div: 1,
+                buffer_depth: 8,
+                part_seed: 1,
+                chips: 1,
+            };
+            point.estimate(&spec.build_topology().build(), None, &base)
+        };
+        let small = mk(TopoSpec::Mesh { w: 2, h: 2 });
+        let mid = mk(TopoSpec::Mesh { w: 3, h: 3 });
+        let big = mk(TopoSpec::Mesh { w: 4, h: 4 });
+        assert!(small.per_fpga.luts < mid.per_fpga.luts);
+        assert!(mid.per_fpga.luts < big.per_fpga.luts);
+        assert!(small.per_fpga.regs < mid.per_fpga.regs);
+        assert!(mid.per_fpga.bram_bits <= big.per_fpga.bram_bits);
+    }
+
+    #[test]
+    fn estimate_is_monotone_in_pins_and_depth() {
+        let base = NocConfig::paper();
+        let spec = TopoSpec::Mesh { w: 2, h: 2 };
+        let graph = spec.build_topology().build();
+        let mk = |pins: u32, depth: usize| {
+            let point = ConfigPoint {
+                topo: spec,
+                pins,
+                clock_div: 1,
+                buffer_depth: depth,
+                part_seed: 1,
+                chips: 2,
+            };
+            let part = point.partition(&graph, &[]).unwrap().unwrap();
+            point.estimate(&graph, Some(&part), &base)
+        };
+        // Wider pins: never fewer LUTs, strictly more wire pins.
+        let mut prev = mk(1, 8);
+        for pins in [2, 4, 8, 16] {
+            let cur = mk(pins, 8);
+            assert!(prev.per_fpga.fits_within(&cur.per_fpga), "pins {pins} shrank the estimate");
+            assert!(cur.wire_pins > prev.wire_pins);
+            prev = cur;
+        }
+        // Deeper buffers: never fewer LUTs/BRAM bits, same wire pins.
+        let shallow = mk(8, 4);
+        let deep = mk(8, 16);
+        assert!(shallow.per_fpga.fits_within(&deep.per_fpga));
+        assert_eq!(shallow.wire_pins, deep.wire_pins);
+    }
+
+    #[test]
+    fn pinned_partition_respects_constraints() {
+        let spec = TopoSpec::Mesh { w: 2, h: 2 };
+        let graph = spec.build_topology().build();
+        let point = ConfigPoint {
+            topo: spec,
+            pins: 8,
+            clock_div: 1,
+            buffer_depth: 8,
+            part_seed: 1,
+            chips: 2,
+        };
+        let part = point.partition(&graph, &[(0, 3)]).unwrap().unwrap();
+        assert_eq!(part.assignment[0], part.assignment[3]);
+        // Monolithic points have no partition.
+        let mono = ConfigPoint { chips: 1, ..point };
+        assert_eq!(mono.partition(&graph, &[]).unwrap(), None);
+    }
+
+    /// A do-nothing processor so the lowering test can `build()` a flow.
+    struct Quiet;
+    impl crate::pe::Processor for Quiet {
+        fn spec(&self) -> crate::pe::WrapperSpec {
+            crate::pe::WrapperSpec::new(vec![8], vec![16])
+        }
+        fn process(
+            &mut self,
+            _args: &[crate::pe::collector::ArgMessage],
+            _epoch: u32,
+            _out: &mut crate::pe::MsgSink,
+        ) {
+        }
+    }
+
+    #[test]
+    fn builder_lowering_is_exact() {
+        use crate::flow::FlowBuilder;
+        let point = ConfigPoint {
+            topo: TopoSpec::Mesh { w: 2, h: 2 },
+            pins: 4,
+            clock_div: 2,
+            buffer_depth: 16,
+            part_seed: 1,
+            chips: 2,
+        };
+        let base = NocConfig::paper();
+        let mut fb = FlowBuilder::new("space-lowering");
+        point.apply_to(&mut fb, &base, &[]).unwrap();
+        fb.pe("src", Box::new(Quiet));
+        fb.tap("sink");
+        fb.channel("src", "sink");
+        let flow = fb.build().unwrap();
+        let part = flow.partition().expect("multichip point must partition");
+        let graph = point.topo.build_topology().build();
+        let expect = point.partition(&graph, &[]).unwrap().unwrap();
+        assert_eq!(part.assignment, expect.assignment);
+        let code = point.builder_code(&base);
+        assert!(code.contains("Topology::Mesh { w: 2, h: 2 }"));
+        assert!(code.contains("pins: 4"));
+        assert!(code.contains("buffer_depth: 16"));
+    }
+}

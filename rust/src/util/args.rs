@@ -41,6 +41,13 @@ pub enum ArgError {
     MissingValue(String),
     /// Value present but unparsable as the requested type.
     BadValue { flag: String, value: String, want: &'static str },
+    /// A comma-separated axis contains an empty element (`--pins 8,,16`
+    /// or a trailing comma) — almost always a typo that would silently
+    /// shrink the axis.
+    EmptyItem { flag: String },
+    /// A comma-separated axis lists the same value twice — duplicate
+    /// sweep/optimize jobs would silently inflate throughput numbers.
+    DuplicateItem { flag: String, value: String },
 }
 
 impl fmt::Display for ArgError {
@@ -51,6 +58,12 @@ impl fmt::Display for ArgError {
             ArgError::MissingValue(s) => write!(f, "flag '--{s}' needs a value"),
             ArgError::BadValue { flag, value, want } => {
                 write!(f, "flag '--{flag}': cannot parse '{value}' as {want}")
+            }
+            ArgError::EmptyItem { flag } => {
+                write!(f, "flag '--{flag}': empty element in comma-separated list")
+            }
+            ArgError::DuplicateItem { flag, value } => {
+                write!(f, "flag '--{flag}': duplicate value '{value}'")
             }
         }
     }
@@ -152,6 +165,34 @@ impl Parsed {
         }
         Ok(Some(out))
     }
+
+    /// Strict sweep/optimize **axis**: comma-separated like
+    /// [`Parsed::get_list`], but empty elements ([`ArgError::EmptyItem`])
+    /// and duplicate values ([`ArgError::DuplicateItem`]) are typed
+    /// errors instead of being silently dropped or silently enqueueing
+    /// redundant jobs. Duplicates are detected on the textual element
+    /// (after trimming), before parsing.
+    pub fn get_axis<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, ArgError> {
+        let Some(raw) = self.raw(name) else { return Ok(None) };
+        let mut seen: Vec<&str> = Vec::new();
+        let mut out = Vec::new();
+        for part in raw.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(ArgError::EmptyItem { flag: name.into() });
+            }
+            if seen.contains(&part) {
+                return Err(ArgError::DuplicateItem { flag: name.into(), value: part.into() });
+            }
+            seen.push(part);
+            out.push(part.parse::<T>().map_err(|_| ArgError::BadValue {
+                flag: name.into(),
+                value: part.into(),
+                want: std::any::type_name::<T>(),
+            })?);
+        }
+        Ok(Some(out))
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +273,34 @@ mod tests {
         assert!(p.get_list::<u32>("mix").is_err());
         let p = parse(SPEC, &strs(&[])).unwrap();
         assert_eq!(p.get_list::<u32>("mix").unwrap(), None);
+    }
+
+    #[test]
+    fn axes_reject_empty_and_duplicate_elements() {
+        let p = parse(SPEC, &strs(&["--mix", "1,2,3"])).unwrap();
+        assert_eq!(p.get_axis::<u32>("mix").unwrap(), Some(vec![1, 2, 3]));
+        assert_eq!(p.get_axis::<u32>("absent").unwrap(), None);
+
+        for bad in ["1,,3", "1,2,", ",1"] {
+            let p = parse(SPEC, &strs(&["--mix", bad])).unwrap();
+            match p.get_axis::<u32>("mix") {
+                Err(ArgError::EmptyItem { flag }) => assert_eq!(flag, "mix"),
+                other => panic!("{bad}: {other:?}"),
+            }
+        }
+
+        let p = parse(SPEC, &strs(&["--mix", "1,2,1"])).unwrap();
+        match p.get_axis::<u32>("mix") {
+            Err(ArgError::DuplicateItem { flag, value }) => {
+                assert_eq!(flag, "mix");
+                assert_eq!(value, "1");
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Unparsable elements still surface as BadValue.
+        let p = parse(SPEC, &strs(&["--mix", "1,x"])).unwrap();
+        assert!(matches!(p.get_axis::<u32>("mix"), Err(ArgError::BadValue { .. })));
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Design-space autopilot contracts (`fabricflow optimize`):
+//!
+//! * the capped prune path ([`scenario::replay_capped`] /
+//!   [`scenario::replay_multichip_capped`]) is **bit-identical** to the
+//!   uncapped replay under a budget it never hits, on both engines and
+//!   on the sharded co-simulation — so racing with it cannot change any
+//!   answer;
+//! * the racing search returns the **same Pareto front** as exhaustive
+//!   full-budget evaluation while provably paying fewer full-budget
+//!   runs (counted and asserted);
+//! * the front is deterministic and thread-count invariant, and no
+//!   front point dominates another;
+//! * annealed partition refinement warm-started from the bisection cut
+//!   beats a cold start, and on the mesh hotspot case study the refined
+//!   partition **strictly** beats the static bisection in completion
+//!   cycles at equal-or-lower wire cost.
+
+use fabricflow::flow::FlowBuilder;
+use fabricflow::noc::multichip::MultiChipSim;
+use fabricflow::noc::scenario;
+use fabricflow::noc::{CappedRun, Network, NocConfig, SimEngine, Topology};
+use fabricflow::optimize::{self, OptimizeSetup};
+use fabricflow::partition::Partition;
+use fabricflow::pe::collector::ArgMessage;
+use fabricflow::pe::{MsgSink, OutMessage, Processor, WrapperSpec};
+use fabricflow::serdes::SerdesConfig;
+use fabricflow::space::{ConfigPoint, SearchSpace, TopoSpec};
+
+#[test]
+fn capped_replay_is_identical_to_uncapped_under_a_large_budget() {
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let trace = scn.trace(16, 0.1, 2_000, 7);
+    for engine in SimEngine::ALL {
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let mut plain = Network::new(&topo, cfg);
+        let cycles = scenario::replay(&mut plain, &trace, 100_000_000)
+            .unwrap_or_else(|e| panic!("{engine:?}: {e}"));
+        let mut capped = Network::new(&topo, cfg);
+        let outcome = scenario::replay_capped(&mut capped, &trace, 100_000_000);
+        assert_eq!(outcome, CappedRun::Idle(cycles), "{engine:?}");
+        assert_eq!(plain.stats(), capped.stats(), "{engine:?}: digests diverged");
+    }
+}
+
+#[test]
+fn a_small_budget_reports_budget_exceeded_with_pending_work() {
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let trace = scn.trace(16, 0.2, 2_000, 7);
+    for engine in SimEngine::ALL {
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let mut net = Network::new(&topo, cfg);
+        match scenario::replay_capped(&mut net, &trace, 50) {
+            CappedRun::BudgetExceeded { cycles, pending } => {
+                assert!(cycles >= 50, "{engine:?}: stopped before the budget");
+                assert!(pending > 0, "{engine:?}: nothing pending at the cap");
+            }
+            other => panic!("{engine:?}: expected BudgetExceeded, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn capped_multichip_replay_matches_uncapped_on_both_engines() {
+    let topo = Topology::Mesh { w: 4, h: 4 };
+    let graph = topo.build();
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let trace = scn.trace(graph.n_endpoints, 0.1, 1_000, 3);
+    let partition = Partition::balanced(&graph, 2, 1);
+    let serdes = SerdesConfig::default();
+    for engine in SimEngine::ALL {
+        let cfg = NocConfig { engine, ..NocConfig::paper() };
+        let mut plain = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+        let cycles = scenario::replay_multichip(&mut plain, &trace, 1_000_000_000)
+            .unwrap_or_else(|e| panic!("{engine:?}: {e}"));
+        let mut capped = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+        let outcome = scenario::replay_multichip_capped(&mut capped, &trace, 1_000_000_000)
+            .unwrap_or_else(|e| panic!("{engine:?}: {e}"));
+        assert_eq!(outcome, CappedRun::Idle(cycles), "{engine:?}");
+        assert_eq!(plain.stats(), capped.stats(), "{engine:?}: digests diverged");
+
+        let mut tight = MultiChipSim::from_graph(graph.clone(), cfg, &partition, serdes);
+        match scenario::replay_multichip_capped(&mut tight, &trace, 50).unwrap() {
+            CappedRun::BudgetExceeded { pending, .. } => {
+                assert!(pending > 0, "{engine:?}: nothing pending at the cap")
+            }
+            other => panic!("{engine:?}: expected BudgetExceeded, got {other:?}"),
+        }
+    }
+}
+
+/// Two mesh sizes × two pin widths, 2-way partitioned — small enough to
+/// evaluate exhaustively, wide enough that pins trade wire cost against
+/// cycles (so the front holds more than one point).
+fn small_space_setup() -> OptimizeSetup {
+    let space = SearchSpace {
+        topos: vec![TopoSpec::Mesh { w: 2, h: 2 }, TopoSpec::Mesh { w: 3, h: 3 }],
+        pins: vec![1, 8],
+        clock_divs: vec![1],
+        buffer_depths: vec![8],
+        part_seeds: vec![1],
+        chips: 2,
+        pinned: Vec::new(),
+    };
+    let scn = scenario::find("uniform").expect("scenario registered");
+    let mut setup = OptimizeSetup::new(space, scn, 0.1, 400);
+    setup.probe_budget = 2_000;
+    setup.full_budget = 200_000;
+    setup
+}
+
+#[test]
+fn racing_front_is_byte_identical_to_exhaustive_with_fewer_full_runs() {
+    let setup = small_space_setup();
+    let ex = optimize::exhaustive(&setup).expect("exhaustive search");
+    let ra = optimize::race(&setup).expect("racing search");
+    assert_eq!(ex.front, ra.front, "racing changed the front");
+    assert_eq!(ex.full_runs, 4, "exhaustive pays one full-budget run per point");
+    assert!(
+        ra.full_runs < ex.full_runs,
+        "racing saved no full-budget runs ({} vs {})",
+        ra.full_runs,
+        ex.full_runs
+    );
+    assert!(ra.probe_runs > 0, "racing never probed");
+    assert_eq!(ex.finished, ra.finished);
+    assert_eq!(ex.infeasible, ra.infeasible);
+}
+
+#[test]
+fn the_front_is_deterministic_and_thread_count_invariant() {
+    let mut setup = small_space_setup();
+    setup.threads = 1;
+    let a = optimize::race(&setup).expect("racing search");
+    let b = optimize::race(&setup).expect("racing search");
+    assert_eq!(a, b, "same setup in the same process must be identical");
+    setup.threads = 4;
+    let c = optimize::race(&setup).expect("racing search");
+    assert_eq!(a, c, "thread count changed the search report");
+}
+
+#[test]
+fn no_front_point_dominates_another() {
+    let report = optimize::exhaustive(&small_space_setup()).expect("exhaustive search");
+    assert!(!report.front.is_empty());
+    for (i, a) in report.front.iter().enumerate() {
+        for (j, b) in report.front.iter().enumerate() {
+            assert!(
+                i == j || !optimize::dominates(a, b),
+                "front point {} dominates {}",
+                a.point.encode(),
+                b.point.encode()
+            );
+        }
+    }
+}
+
+#[test]
+fn bisection_warm_start_beats_a_cold_start() {
+    let point = ConfigPoint {
+        topo: TopoSpec::Mesh { w: 2, h: 2 },
+        pins: 8,
+        clock_div: 1,
+        buffer_depth: 8,
+        part_seed: 1,
+        chips: 2,
+    };
+    let graph = point.topo.build_topology().build();
+    let base = NocConfig::paper();
+    let scn = scenario::find("hotspot").expect("scenario registered");
+    let trace = scn.trace(graph.n_endpoints, 0.1, 400, 1);
+    let mut eval = |part: &Partition| {
+        optimize::partition_cycles(&graph, &point, &base, part, &trace, 1_000_000)
+    };
+    // The bisection cut severs 2 of the 4 mesh links; the cold start
+    // pairs opposite corners and severs all 4, serializing every hop.
+    let warm = Partition::new(2, vec![0, 0, 1, 1]);
+    let cold = Partition::new(2, vec![0, 1, 1, 0]);
+    let warm_out = optimize::refine_partition(&graph, &warm, &[], 1, 4, 9, &mut eval);
+    let cold_out = optimize::refine_partition(&graph, &cold, &[], 1, 4, 9, &mut eval);
+    assert!(
+        warm_out.start_cycles < cold_out.start_cycles,
+        "the all-cut cold start must serialize more: {} !< {}",
+        warm_out.start_cycles,
+        cold_out.start_cycles
+    );
+    assert!(
+        warm_out.cycles <= cold_out.cycles,
+        "refinement from the warm start finished worse: {} > {}",
+        warm_out.cycles,
+        cold_out.cycles
+    );
+    assert!(warm_out.cycles <= warm_out.start_cycles, "refinement regressed the warm start");
+}
+
+/// Boot-time source sending fixed messages, then idle.
+struct BootSource {
+    msgs: Vec<OutMessage>,
+}
+
+impl Processor for BootSource {
+    fn spec(&self) -> WrapperSpec {
+        WrapperSpec::new(vec![8], vec![16])
+    }
+    fn boot(&mut self, out: &mut MsgSink) {
+        for m in std::mem::take(&mut self.msgs) {
+            out.push(m);
+        }
+    }
+    fn process(&mut self, _: &[ArgMessage], _: u32, _: &mut MsgSink) {}
+}
+
+/// The mesh hotspot case study: one source at endpoint 0 sends a single
+/// cold message to endpoint 1 and a hot stream to endpoint 2, on a
+/// 2-chip mesh2x2 under the given partition. Returns completion cycles,
+/// or `None` when the partition is not buildable.
+fn hotspot_flow_cycles(part: &Partition) -> Option<u64> {
+    let mut msgs = vec![OutMessage::word(1, 0, 0, 7, 16)];
+    msgs.extend((0..40u32).map(|e| OutMessage::word(2, 0, e, e as u64, 16)));
+    let mut fb = FlowBuilder::new("autopilot-acceptance");
+    fb.topology(Topology::Mesh { w: 2, h: 2 })
+        .pe_at("src", 0, Box::new(BootSource { msgs }))
+        .tap_at("cold", 1)
+        .tap_at("hot", 2)
+        .channel("src", "cold")
+        .channel("src", "hot")
+        .partition(part.clone())
+        .multichip(SerdesConfig::default());
+    let mut flow = fb.build().ok()?;
+    flow.run().ok().map(|r| r.cycles)
+}
+
+#[test]
+fn refined_partition_strictly_beats_the_static_bisection_on_the_hotspot_flow() {
+    let graph = Topology::Mesh { w: 2, h: 2 }.build();
+    // The static bisection puts the source (endpoint 0) and the hot tap
+    // (endpoint 2) on different chips, exiling the hot stream across the
+    // serializing wire.
+    let static_part = Partition::new(2, vec![0, 0, 1, 1]);
+    let static_cycles = hotspot_flow_cycles(&static_part).expect("static flow runs");
+    let mut eval = hotspot_flow_cycles;
+    let out = optimize::refine_partition(&graph, &static_part, &[], 2, 8, 1, &mut eval);
+    assert!(
+        out.cycles < static_cycles,
+        "autopilot refinement must strictly beat the static bisection: {} !< {}",
+        out.cycles,
+        static_cycles
+    );
+    assert!(
+        out.partition.cut_links(&graph).len() <= static_part.cut_links(&graph).len(),
+        "the cycle win must come at equal-or-lower wire cost"
+    );
+}
